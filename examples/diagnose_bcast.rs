@@ -1,0 +1,68 @@
+//! The Sec. IV-B diagnosis story, end to end: two broadcast algorithms that
+//! are indistinguishable under an α-β cost model diverge 2× on a hierarchical
+//! topology — and the tracer explains *why* before the simulator confirms it.
+//!
+//! Run: `cargo run --release --example diagnose_bcast`
+
+use pico::collectives::{bcast, Coll, GenParams};
+use pico::config::{EnvSpec, TestSpec};
+use pico::orchestrator::run_campaign;
+use pico::results::Granularity;
+use pico::topology::{leonardo, AllocPolicy, Allocation, Placement, RankOrder};
+use pico::tracer;
+use pico::util::{fmt_size, fmt_time};
+
+fn measure(algo: &str, bytes: usize) -> f64 {
+    let mut spec = TestSpec::new("diag", "libpico", Coll::Bcast);
+    spec.sizes = vec![bytes];
+    spec.nodes = vec![128];
+    spec.ppn = 4;
+    spec.algorithms = vec![algo.into()];
+    spec.iterations = 1;
+    spec.warmup = 0;
+    spec.granularity = Granularity::None;
+    let env = EnvSpec::for_system("leonardo");
+    run_campaign(&spec, &env, None).expect("campaign")[0].median_s
+}
+
+fn main() {
+    println!("step 1 — cost-model view: both binomials send (p-1)*n bytes in ceil(log2 p) rounds");
+    let params = GenParams::new(128, 1024);
+    let d = bcast::binomial_doubling(&params).unwrap();
+    let h = bcast::binomial_halving(&params).unwrap();
+    assert_eq!(d.total_wire_bytes(), h.total_wire_bytes());
+    println!(
+        "  identical totals: {} bytes each — a classic alpha-beta model cannot tell them apart\n",
+        d.total_wire_bytes()
+    );
+
+    println!("step 2 — tracer: where do those bytes go on a real allocation?");
+    let prof = leonardo();
+    let alloc = Allocation::new(&prof, 128, AllocPolicy::Scattered, 11);
+    let placement = Placement::new(&prof, &alloc, 1, RankOrder::Block);
+    let td = tracer::trace(&d, &placement);
+    let th = tracer::trace(&h, &placement);
+    print!("{}", tracer::render("binomial_doubling", &td, 4096));
+    print!("{}", tracer::render("binomial_halving", &th, 4096));
+    println!(
+        "  doubling loads its busiest group uplink with {} vs halving's {}\n",
+        fmt_size(td.max_uplink_bytes()),
+        fmt_size(th.max_uplink_bytes())
+    );
+
+    println!("step 3 — measurement confirms the diagnosis (128 nodes x 4 ppn):");
+    println!("{:>10} {:>14} {:>14} {:>8}", "size", "halving", "doubling", "ratio");
+    for bytes in [16 * 1024, 1 << 20, 64 << 20, 512 << 20] {
+        let th = measure("binomial_halving", bytes);
+        let td = measure("binomial_doubling", bytes);
+        println!(
+            "{:>10} {:>14} {:>14} {:>8.2}",
+            fmt_size(bytes),
+            fmt_time(th),
+            fmt_time(td),
+            td / th
+        );
+    }
+    println!("\nsmall sizes agree; large sizes diverge exactly where the tracer predicted.");
+    println!("diagnose_bcast OK");
+}

@@ -1,0 +1,61 @@
+//! Fig. 5 + Fig. 11 in one example: instrument a libpico Rabenseifner
+//! Allreduce with nested tag regions, run it, and attribute time to
+//! phases, steps and hardware components — including the live Recorder
+//! API on the execute-mode data plane.
+//!
+//! Run: `cargo run --release --example instrumented_breakdown`
+
+use pico::collectives::{self, Coll, GenParams};
+use pico::config::{EnvSpec, TestSpec};
+use pico::execute::{execute, make_inputs, ScalarReducer};
+use pico::instrument::Recorder;
+use pico::orchestrator::run_campaign;
+use pico::pico_tag;
+use pico::results::Granularity;
+use pico::util::{fmt_size, fmt_time};
+
+fn main() {
+    // --- schedule-level attribution (simulate mode) -------------------------
+    println!("instrumented Rabenseifner Allreduce, 8 nodes, leonardo:");
+    for bytes in [2048usize, 1 << 20, 64 << 20] {
+        let mut spec = TestSpec::new("breakdown", "libpico", Coll::Allreduce);
+        spec.sizes = vec![bytes];
+        spec.nodes = vec![8];
+        spec.algorithms = vec!["rabenseifner".into()];
+        spec.instrument = true;
+        spec.iterations = 3;
+        spec.warmup = 1;
+        spec.granularity = Granularity::Summary;
+        let env = EnvSpec::for_system("leonardo");
+        let o = &run_campaign(&spec, &env, None).expect("campaign")[0];
+        let c = o.measurement.components;
+        let t = c.total();
+        println!(
+            "\n  {:>8}: total {}  | comm {:.0}% reduction {:.0}% datamove {:.0}%",
+            fmt_size(bytes),
+            fmt_time(o.median_s),
+            100.0 * c.comm / t,
+            100.0 * c.reduction / t,
+            100.0 * c.datamove / t
+        );
+        for (name, s) in o.measurement.tag_times.iter().filter(|(n, _)| !n.contains(':') || n.starts_with("phase") || n.starts_with("init")) {
+            println!("    {name:<20} {}", fmt_time(*s));
+        }
+    }
+
+    // --- live Recorder on the execute-mode hot path -------------------------
+    println!("\nlive tag recorder around the execute-mode data plane:");
+    let (p, count) = (8, 262_144);
+    let goal = collectives::generate(Coll::Allreduce, "rabenseifner", &GenParams::new(p, count))
+        .unwrap();
+    let mut rec = Recorder::new(true);
+    let bufs = pico_tag!(rec, "exec:allreduce", {
+        let inputs = pico_tag!(rec, "exec:make-inputs", { make_inputs(p, count, 7) });
+        execute(&goal, inputs, &ScalarReducer)
+    });
+    assert_eq!(bufs.len(), p);
+    for r in rec.records() {
+        println!("  {:indent$}{:<22} {}", "", r.name, fmt_time(r.seconds), indent = 2 * r.depth as usize);
+    }
+    println!("instrumented_breakdown OK");
+}

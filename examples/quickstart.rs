@@ -1,0 +1,69 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! 1. describe an experiment (test.json equivalent) and a platform
+//!    (env.json equivalent);
+//! 2. run the campaign on the simulated cluster;
+//! 3. read results; 4. verify the same schedule computes correct values in
+//!    execute mode through the real (Pallas/PJRT) data plane when
+//!    artifacts are present, falling back to the scalar plane otherwise.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use pico::collectives::{self, Coll, GenParams};
+use pico::config::{EnvSpec, TestSpec};
+use pico::execute::{execute, make_inputs, oracle, Reducer, ScalarReducer};
+use pico::goal::ReduceOp;
+use pico::orchestrator::run_campaign;
+use pico::runtime::XlaReducer;
+use pico::util::{fmt_size, fmt_time};
+
+fn main() {
+    // --- 1. describe ------------------------------------------------------
+    let mut spec = TestSpec::new("quickstart", "openmpi", Coll::Allreduce);
+    spec.sizes = vec![2048, 1 << 20, 64 << 20];
+    spec.nodes = vec![8];
+    spec.algorithms = vec!["ring".into(), "rabenseifner".into(), "recursive_doubling".into()];
+    spec.iterations = 5;
+    let env = EnvSpec::for_system("leonardo");
+    println!("test.json:\n{}", spec.to_json().to_string_pretty());
+
+    // --- 2. run -----------------------------------------------------------
+    let outcomes = run_campaign(&spec, &env, None).expect("campaign");
+
+    // --- 3. read ----------------------------------------------------------
+    println!("{:>10} {:>20} {:>12}", "size", "algorithm", "median");
+    for o in &outcomes {
+        println!(
+            "{:>10} {:>20} {:>12}",
+            fmt_size(o.point.bytes),
+            o.effective_algorithm,
+            fmt_time(o.median_s)
+        );
+    }
+
+    // --- 4. verify numerics through the real data plane --------------------
+    let (p, count) = (8, 4096);
+    let goal = collectives::generate(Coll::Allreduce, "rabenseifner", &GenParams::new(p, count))
+        .expect("schedule");
+    let inputs = make_inputs(p, count, 42);
+    let want = oracle::allreduce(&inputs, ReduceOp::Sum);
+    let reducer: Box<dyn Reducer> = match XlaReducer::from_default_dir() {
+        Ok(x) => {
+            println!("\nexecute mode: reductions via the AOT Pallas kernel (PJRT)");
+            Box::new(x)
+        }
+        Err(_) => {
+            println!("\nexecute mode: artifacts missing, scalar fallback (run `make artifacts`)");
+            Box::new(ScalarReducer)
+        }
+    };
+    let bufs = execute(&goal, inputs, reducer.as_ref());
+    let max_err = bufs
+        .iter()
+        .flat_map(|b| b.output.iter().zip(&want))
+        .map(|(a, b)| (a - b).abs() as f64)
+        .fold(0.0f64, f64::max);
+    println!("allreduce(p={p}, count={count}): max |err| vs oracle = {max_err:.2e}");
+    assert!(max_err < 1e-3);
+    println!("quickstart OK");
+}

@@ -1,0 +1,58 @@
+//! Tuning campaign (the Sec. IV-A workflow): sweep every exposed Allreduce
+//! algorithm on a platform, find where the default is suboptimal, fit
+//! size-threshold rules, and emit both an Open MPI `coll_tuned` dynamic
+//! decision file and a JSON collective profile.
+//!
+//! Run: `cargo run --release --example tuning_campaign [-- <out_dir>]`
+
+use pico::analysis::{best_to_default, render_ratio_heatmap};
+use pico::collectives::Coll;
+use pico::config::{EnvSpec, TestSpec};
+use pico::orchestrator::run_campaign;
+use pico::results::Granularity;
+use pico::tuning::{best_choices, fit_rules, ompi_decision_file};
+use pico::util::{fmt_size, fmt_time};
+
+fn main() {
+    let out_dir = std::env::args().nth(1);
+    let mut spec = TestSpec::new("tuning-allreduce", "openmpi", Coll::Allreduce);
+    spec.sizes = vec![32, 1024, 32 * 1024, 512 * 1024, 4 << 20, 64 << 20];
+    spec.nodes = vec![32];
+    spec.algorithms = vec!["*".into()];
+    spec.iterations = 3;
+    spec.warmup = 1;
+    spec.granularity = Granularity::Summary;
+    let env = EnvSpec::for_system("leonardo");
+
+    let outcomes =
+        run_campaign(&spec, &env, out_dir.as_deref().map(std::path::Path::new)).expect("campaign");
+
+    // where does the default lose?
+    let cells = best_to_default(&outcomes);
+    println!("{}", render_ratio_heatmap("openmpi Allreduce on leonardo, 32 nodes", &cells));
+
+    // fit rules from the winners and emit tuning artifacts
+    let winners = best_choices(&outcomes);
+    println!("per-size winners:");
+    for w in &winners {
+        println!(
+            "  {:>10}  {:<20} {:<7} {}",
+            fmt_size(w.bytes),
+            w.algorithm,
+            w.proto.label(),
+            fmt_time(w.median_s)
+        );
+    }
+    let profile = fit_rules(Coll::Allreduce, &winners);
+    println!("\nfitted profile (first-match rules):\n{}", profile.to_json().to_string_pretty());
+
+    let ids = [("linear", 1usize), ("recursive_doubling", 3), ("ring", 4), ("rabenseifner", 6), ("tree", 2)];
+    let decision = ompi_decision_file(Coll::Allreduce, &winners, &ids);
+    println!("coll_tuned dynamic decision file:\n{decision}");
+    if let Some(d) = out_dir {
+        let path = std::path::Path::new(&d).join("allreduce.decision");
+        std::fs::write(&path, &decision).expect("write decision file");
+        println!("wrote {}", path.display());
+    }
+    println!("tuning_campaign OK");
+}

@@ -1,0 +1,73 @@
+"""AOT-lower every L2 graph variant to HLO *text* + a manifest.
+
+HLO text (NOT serialized HloModuleProto) is the interchange format: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (behind
+the published `xla` 0.1.6 crate) rejects; the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "tile_elems": None, "entries": []}
+    from .kernels import reduce as kern
+
+    manifest["tile_elems"] = kern.BLOCK_ELEMS
+    manifest["buckets"] = list(model.BUCKETS)
+    # stringified: inf/-inf are not valid JSON numbers
+    manifest["pad_identity"] = {k: repr(v) for k, v in model.PAD_IDENTITY.items()}
+    manifest["segsum_k"] = model.SEGSUM_K
+
+    for name, fn, example_args in model.variants():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        arg0 = example_args[0]
+        manifest["entries"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "shape": list(arg0.shape),
+                "dtype": str(arg0.dtype),
+                "n_args": len(example_args),
+                "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            }
+        )
+        print(f"  aot: {name} -> {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  aot: wrote manifest with {len(manifest['entries'])} entries")
+
+
+if __name__ == "__main__":
+    main()

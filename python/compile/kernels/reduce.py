@@ -1,0 +1,115 @@
+"""L1: Pallas reduction kernels — the compute hot-spot of collective ops.
+
+The paper's collectives spend their "Reduction (compute)" component (Fig. 11)
+in MPI_Reduce_local / NCCL reduction kernels.  Here that hot-spot is a Pallas
+kernel tiled for VMEM: the operand pair is blocked into lane-aligned tiles via
+BlockSpec, each grid step streams two tiles HBM->VMEM, combines them on the
+VPU, and writes one tile back.  This is the TPU re-think of the CUDA
+grid-stride reduction loop (threadblocks -> Pallas grid, shared memory ->
+VMEM tiles, warp lanes -> the (8,128) vector registers).
+
+All kernels are lowered with interpret=True: the CPU PJRT client cannot run
+Mosaic custom-calls, so interpret mode is the correctness path and real-TPU
+performance is estimated analytically in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One VMEM tile: 8 sublanes x 128 lanes x 32 rows = 32 KiB of f32 per operand
+# tile.  Three tiles live simultaneously (two operands + accumulator view),
+# comfortably inside the ~16 MiB VMEM budget while staying MXU/VPU aligned.
+BLOCK_ROWS = 256
+BLOCK_COLS = 128
+BLOCK_ELEMS = BLOCK_ROWS * BLOCK_COLS
+
+OPS = ("sum", "prod", "max", "min")
+
+
+def _combine(op: str, a, b):
+    if op == "sum":
+        return a + b
+    if op == "prod":
+        return a * b
+    if op == "max":
+        return jnp.maximum(a, b)
+    if op == "min":
+        return jnp.minimum(a, b)
+    raise ValueError(f"unknown reduction op {op!r}")
+
+
+def _reduce_kernel(x_ref, y_ref, o_ref, *, op: str):
+    """One grid step: combine a VMEM tile of x with a tile of y."""
+    o_ref[...] = _combine(op, x_ref[...], y_ref[...])
+
+
+def _reduce_copy_kernel(x_ref, y_ref, o_ref, c_ref, *, op: str):
+    """Fused reduce + staging copy (Rabenseifner's local step combines the
+    received segment into the work buffer *and* keeps a send-side copy)."""
+    r = _combine(op, x_ref[...], y_ref[...])
+    o_ref[...] = r
+    c_ref[...] = r
+
+
+def _grid_spec(n_elems: int):
+    """Block a flat buffer of n_elems (multiple of BLOCK_ELEMS) as a
+    (rows, BLOCK_COLS) matrix swept by a 1-D grid over row-tiles."""
+    assert n_elems % BLOCK_ELEMS == 0, n_elems
+    rows = n_elems // BLOCK_COLS
+    grid = (rows // BLOCK_ROWS,)
+    spec = pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0))
+    return rows, grid, spec
+
+
+@functools.partial(jax.jit, static_argnames=("op",))
+def reduce_blocked(x, y, *, op: str = "sum"):
+    """Elementwise reduction of two flat buffers through the Pallas kernel.
+
+    x, y: rank-1 arrays whose length is a multiple of BLOCK_ELEMS.  The
+    caller (aot.py / the Rust runtime) pads to bucket sizes.
+    """
+    n = x.shape[0]
+    rows, grid, spec = _grid_spec(n)
+    xm = x.reshape(rows, BLOCK_COLS)
+    ym = y.reshape(rows, BLOCK_COLS)
+    out = pl.pallas_call(
+        functools.partial(_reduce_kernel, op=op),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, BLOCK_COLS), x.dtype),
+        interpret=True,
+    )(xm, ym)
+    return out.reshape(n)
+
+
+@functools.partial(jax.jit, static_argnames=("op",))
+def reduce_copy_blocked(x, y, *, op: str = "sum"):
+    """Fused reduce + copy: returns (combined, staged_copy)."""
+    n = x.shape[0]
+    rows, grid, spec = _grid_spec(n)
+    xm = x.reshape(rows, BLOCK_COLS)
+    ym = y.reshape(rows, BLOCK_COLS)
+    out_shape = jax.ShapeDtypeStruct((rows, BLOCK_COLS), x.dtype)
+    o, c = pl.pallas_call(
+        functools.partial(_reduce_copy_kernel, op=op),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[out_shape, out_shape],
+        interpret=True,
+    )(xm, ym)
+    return o.reshape(n), c.reshape(n)
+
+
+def vmem_bytes_per_step(dtype=jnp.float32, fused_copy: bool = False) -> int:
+    """Analytic VMEM footprint of one grid step (DESIGN.md §Perf): operand
+    tiles + output tile(s) resident simultaneously."""
+    itemsize = jnp.dtype(dtype).itemsize
+    tiles = 4 if fused_copy else 3
+    return tiles * BLOCK_ELEMS * itemsize

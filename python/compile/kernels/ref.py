@@ -1,0 +1,35 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the L2 graphs.
+
+Everything here is deliberately the dumbest possible jnp expression; pytest
+asserts the Pallas kernels (and, transitively, the AOT artifacts executed
+from Rust) match these within dtype tolerance.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def reduce_ref(x, y, op: str = "sum"):
+    if op == "sum":
+        return x + y
+    if op == "prod":
+        return x * y
+    if op == "max":
+        return jnp.maximum(x, y)
+    if op == "min":
+        return jnp.minimum(x, y)
+    raise ValueError(f"unknown reduction op {op!r}")
+
+
+def reduce_copy_ref(x, y, op: str = "sum"):
+    r = reduce_ref(x, y, op)
+    return r, r
+
+
+def allreduce_ref(bufs, op: str = "sum"):
+    """Oracle for a whole allreduce: fold `op` across the rank dimension."""
+    acc = bufs[0]
+    for b in bufs[1:]:
+        acc = reduce_ref(acc, b, op)
+    return acc

@@ -1,0 +1,88 @@
+"""L2: JAX compute graphs for the collective data plane, calling kernels.*.
+
+PICO's execute-mode collectives need a real reduction data path (the
+"Reduction" component of Fig. 11).  This module defines the jit-able graphs
+that aot.py lowers to HLO text once per (op, dtype, bucket) variant; the Rust
+runtime loads the artifacts and calls them from the hot path — Python never
+runs at request time.
+
+Graphs:
+  reduce_bucket      — combine two padded buckets through the Pallas kernel.
+  reduce_copy_bucket — fused combine + staged copy (Rabenseifner local step).
+  segsum_bucket      — fold K already-received segments into one (tree roots
+                       and leader collectives combine >2 operands per round).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import reduce as kern
+
+# Bucket sizes (elements).  Messages are padded up to the smallest bucket by
+# the Rust runtime; each bucket must be a multiple of the kernel tile.
+BUCKETS = (
+    kern.BLOCK_ELEMS,  # 32 Ki elems = 128 KiB f32
+    kern.BLOCK_ELEMS * 8,  # 1 MiB f32
+    kern.BLOCK_ELEMS * 64,  # 8 MiB f32
+)
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+# Identity elements used by the Rust side when padding buffers to a bucket.
+PAD_IDENTITY = {
+    "sum": 0.0,
+    "prod": 1.0,
+    "max": float("-inf"),
+    "min": float("inf"),
+}
+
+SEGSUM_K = 4  # fan-in of the multi-operand fold graph
+
+
+def reduce_bucket(op: str):
+    def fn(x, y):
+        return (kern.reduce_blocked(x, y, op=op),)
+
+    return fn
+
+
+def reduce_copy_bucket(op: str):
+    def fn(x, y):
+        o, c = kern.reduce_copy_blocked(x, y, op=op)
+        return (o, c)
+
+    return fn
+
+
+def segsum_bucket(op: str, k: int = SEGSUM_K):
+    """Fold k stacked segments into one via repeated kernel application.
+    XLA fuses the chain; the Pallas tiles keep each step VMEM-resident."""
+
+    def fn(stacked):  # stacked: (k, n)
+        acc = stacked[0]
+        for i in range(1, k):
+            acc = kern.reduce_blocked(acc, stacked[i], op=op)
+        return (acc,)
+
+    return fn
+
+
+def variants():
+    """Yield (name, fn, example_args) for every artifact to AOT-compile."""
+    for op in kern.OPS:
+        for dname, dtype in DTYPES.items():
+            if op == "prod" and dname == "i32":
+                continue  # overflow-prone; not used by the runtime
+            for n in BUCKETS:
+                spec = jax.ShapeDtypeStruct((n,), dtype)
+                yield f"reduce_{op}_{dname}_{n}", reduce_bucket(op), (spec, spec)
+        # fused + segsum only for the f32 hot path
+        spec = jax.ShapeDtypeStruct((BUCKETS[0],), jnp.float32)
+        yield f"reduce_copy_{op}_f32_{BUCKETS[0]}", reduce_copy_bucket(op), (
+            spec,
+            spec,
+        )
+        stacked = jax.ShapeDtypeStruct((SEGSUM_K, BUCKETS[0]), jnp.float32)
+        yield f"segsum_{op}_f32_{BUCKETS[0]}", segsum_bucket(op), (stacked,)

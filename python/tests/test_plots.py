@@ -1,0 +1,79 @@
+"""pytest: the post-processing toolkit consumes the Rust run-dir schema."""
+
+import json
+import os
+
+import pytest
+
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from tools import plots  # noqa: E402
+
+
+@pytest.fixture()
+def run_dir(tmp_path):
+    rec = {
+        "id": "p00000",
+        "collective": "allreduce",
+        "backend": "openmpi-sim",
+        "bytes": 1024,
+        "nodes": 8,
+        "ppn": 1,
+        "requested_algorithm": "default",
+        "effective_algorithm": "ring",
+        "median_s": 1.5e-4,
+        "components": {"comm": 1e-4, "reduction": 3e-5, "datamove": 2e-5, "other": 0.0},
+    }
+    alt = dict(rec, id="p00001", requested_algorithm="rabenseifner",
+               effective_algorithm="rabenseifner", median_s=1.0e-4)
+    big = dict(rec, id="p00002", bytes=1 << 20, median_s=2.3e-3)
+    (tmp_path / "records").mkdir()
+    index = []
+    for r in [rec, alt, big]:
+        fname = f"records/{r['id']}.json"
+        (tmp_path / fname).write_text(json.dumps(r))
+        index.append({"id": r["id"], "file": fname})
+    (tmp_path / "index.json").write_text(json.dumps(index))
+    return tmp_path
+
+
+def test_load_run(run_dir):
+    records = plots.load_run(str(run_dir))
+    assert len(records) == 3
+    assert records[0]["effective_algorithm"] == "ring"
+
+
+def test_csv_schema(run_dir):
+    csv = plots.to_csv(plots.load_run(str(run_dir)))
+    lines = csv.strip().split("\n")
+    assert lines[0].startswith("collective,backend,bytes")
+    assert len(lines) == 4
+    assert "rabenseifner" in csv
+
+
+def test_heatmap_ratio(run_dir):
+    hm = plots.ascii_heatmap(plots.load_run(str(run_dir)))
+    # best non-default 1.0e-4 / default 1.5e-4 = 0.67
+    assert "0.67" in hm
+
+
+def test_ascii_lines_renders(run_dir):
+    art = plots.ascii_lines(plots.load_run(str(run_dir)))
+    assert "latency vs size" in art
+    assert "o=" in art or "x=" in art
+
+
+def test_cli_end_to_end(run_dir, tmp_path, capsys):
+    out = tmp_path / "plots"
+    rc = plots.main([str(run_dir), "--out", str(out)])
+    assert rc == 0
+    assert (out / "records.csv").exists()
+    assert (out / "latency.gp").exists()
+    captured = capsys.readouterr().out
+    assert "3 records" in captured
+
+
+def test_fmt_size():
+    assert plots.fmt_size(32) == "32B"
+    assert plots.fmt_size(1 << 20) == "1MiB"
+    assert plots.fmt_size(512 << 20) == "512MiB"

@@ -1,0 +1,165 @@
+"""Post-processing and visualization toolkit (paper Sec. III-F).
+
+Consumes the standardized run-directory schema the Rust orchestrator writes
+(index.json + records/*.json) and produces:
+
+- tidy CSV exports for external plotting pipelines,
+- ASCII line plots (latency vs size, log-log) and heatmaps directly in the
+  terminal — the `pico` equivalent of the paper's bundled plot scripts,
+- gnuplot scripts referencing the CSVs, so real figures are one
+  `gnuplot` invocation away on machines that have it.
+
+Usage:
+    python -m tools.plots <run_dir> [--out DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+
+def load_run(run_dir: str) -> list[dict]:
+    """Load every record of a campaign run directory."""
+    with open(os.path.join(run_dir, "index.json")) as f:
+        index = json.load(f)
+    records = []
+    for entry in index:
+        with open(os.path.join(run_dir, entry["file"])) as f:
+            records.append(json.load(f))
+    return records
+
+
+def to_csv(records: list[dict]) -> str:
+    """Tidy CSV: one row per record, the stable cross-run schema."""
+    cols = [
+        "collective", "backend", "bytes", "nodes", "ppn",
+        "requested_algorithm", "effective_algorithm", "median_s",
+        "comm_s", "reduction_s", "datamove_s", "other_s",
+    ]
+    lines = [",".join(cols)]
+    for r in records:
+        comp = r.get("components", {})
+        row = [
+            str(r.get("collective", "")), str(r.get("backend", "")),
+            str(r.get("bytes", "")), str(r.get("nodes", "")), str(r.get("ppn", "")),
+            str(r.get("requested_algorithm", "")), str(r.get("effective_algorithm", "")),
+            repr(r.get("median_s", "")),
+            repr(comp.get("comm", "")), repr(comp.get("reduction", "")),
+            repr(comp.get("datamove", "")), repr(comp.get("other", "")),
+        ]
+        lines.append(",".join(row))
+    return "\n".join(lines) + "\n"
+
+
+def fmt_size(b: int) -> str:
+    for m, u in [(1 << 30, "GiB"), (1 << 20, "MiB"), (1 << 10, "KiB")]:
+        if b >= m:
+            v = b / m
+            return f"{v:.0f}{u}" if v == int(v) else f"{v:.1f}{u}"
+    return f"{b}B"
+
+
+def ascii_lines(records: list[dict], width: int = 60, height: int = 16) -> str:
+    """Log-log latency-vs-size plot, one glyph per algorithm series."""
+    series: dict[str, list[tuple[int, float]]] = {}
+    for r in records:
+        if not r.get("median_s"):
+            continue
+        series.setdefault(r["effective_algorithm"], []).append((r["bytes"], r["median_s"]))
+    if not series:
+        return "(no data)\n"
+    glyphs = "ox+*#@%&"
+    pts = [(b, t) for pl in series.values() for (b, t) in pl if t > 0]
+    if not pts:
+        return "(no positive samples)\n"
+    bx = [math.log(b) for b, _ in pts]
+    by = [math.log(t) for _, t in pts]
+    x0, x1 = min(bx), max(bx) or 1.0
+    y0, y1 = min(by), max(by)
+    x1 = x1 if x1 > x0 else x0 + 1
+    y1 = y1 if y1 > y0 else y0 + 1
+    grid = [[" "] * width for _ in range(height)]
+    for gi, (name, pl) in enumerate(sorted(series.items())):
+        g = glyphs[gi % len(glyphs)]
+        for b, t in pl:
+            if t <= 0:
+                continue
+            x = int((math.log(b) - x0) / (x1 - x0) * (width - 1))
+            y = int((math.log(t) - y0) / (y1 - y0) * (height - 1))
+            grid[height - 1 - y][x] = g
+    out = ["latency vs size (log-log)"]
+    out += ["  |" + "".join(row) for row in grid]
+    out.append("  +" + "-" * width)
+    legend = "  ".join(
+        f"{glyphs[i % len(glyphs)]}={name}" for i, name in enumerate(sorted(series))
+    )
+    out.append("   " + legend)
+    return "\n".join(out) + "\n"
+
+
+def ascii_heatmap(records: list[dict]) -> str:
+    """Best-to-default ratio heatmap (Fig. 6 style) from raw records."""
+    cells: dict[tuple[int, int], dict[str, float]] = {}
+    defaults: dict[tuple[int, int], tuple[str, float]] = {}
+    for r in records:
+        key = (r["nodes"], r["bytes"])
+        cells.setdefault(key, {})[r["effective_algorithm"]] = r["median_s"]
+        if r.get("requested_algorithm") == "default":
+            defaults[key] = (r["effective_algorithm"], r["median_s"])
+    if not defaults:
+        return "(no default runs in campaign; sweep with algorithms=[\"*\"])\n"
+    nodes = sorted({k[0] for k in defaults})
+    sizes = sorted({k[1] for k in defaults})
+    out = ["r = t_best / t_default (r < 1: default suboptimal)"]
+    out.append("  size \\ nodes | " + " ".join(f"{n:>6}" for n in nodes))
+    for s in sizes:
+        row = [f"  {fmt_size(s):>11} |"]
+        for n in nodes:
+            key = (n, s)
+            if key not in defaults:
+                row.append("     -")
+                continue
+            dalgo, dt = defaults[key]
+            alts = [t for a, t in cells[key].items() if a != dalgo]
+            row.append(f"{min(alts) / dt:6.2f}" if alts else "     -")
+        out.append(" ".join(row))
+    return "\n".join(out) + "\n"
+
+
+def gnuplot_script(csv_name: str) -> str:
+    return f"""# generated by pico-rs tools.plots
+set logscale xy
+set xlabel 'message size (B)'
+set ylabel 'latency (s)'
+set datafile separator ','
+set key autotitle columnheader outside
+plot '{csv_name}' using 3:8 with linespoints
+"""
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("run_dir")
+    ap.add_argument("--out", default=None, help="write CSV + gnuplot here")
+    args = ap.parse_args(argv)
+    records = load_run(args.run_dir)
+    print(f"{len(records)} records from {args.run_dir}\n")
+    print(ascii_heatmap(records))
+    print(ascii_lines(records))
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        csv_path = os.path.join(args.out, "records.csv")
+        with open(csv_path, "w") as f:
+            f.write(to_csv(records))
+        with open(os.path.join(args.out, "latency.gp"), "w") as f:
+            f.write(gnuplot_script("records.csv"))
+        print(f"wrote {csv_path} and latency.gp")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

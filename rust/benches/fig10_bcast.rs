@@ -1,0 +1,73 @@
+//! Fig. 10 — Distance-doubling vs distance-halving MPI_Bcast on Leonardo,
+//! 128 nodes × 4 ppn, latency vs message size (log-log), plus Open MPI's
+//! internal (staged) binomial.  Paper: nearly identical ≤16 KiB, diverge at
+//! large sizes; at 512 MiB libpico doubling is ~2.5× slower than halving
+//! (757 ms vs 304 ms) and the Open MPI internal binomial is ~an order of
+//! magnitude slower still (1.9 s).
+
+use pico::benchkit;
+use pico::collectives::Coll;
+use pico::config::{EnvSpec, TestSpec};
+use pico::orchestrator::run_campaign;
+use pico::results::Granularity;
+use pico::util::{fmt_size, fmt_time, pow2_sizes};
+
+fn series(backend: &str, algo: &str, sizes: &[usize]) -> Vec<f64> {
+    let mut spec = TestSpec::new("fig10", backend, Coll::Bcast);
+    spec.sizes = sizes.to_vec();
+    spec.nodes = vec![128];
+    spec.ppn = 4;
+    spec.algorithms = vec![algo.into()];
+    spec.iterations = 1;
+    spec.warmup = 0;
+    spec.granularity = Granularity::Summary;
+    let env = EnvSpec::for_system("leonardo");
+    run_campaign(&spec, &env, None).expect("fig10").iter().map(|o| o.median_s).collect()
+}
+
+fn main() {
+    benchkit::section("Fig. 10 — Bcast latency vs size (leonardo, 128 nodes x 4 ppn, log-log)");
+    let sizes = pow2_sizes(1024, 512 << 20);
+    let halving = series("libpico", "binomial_halving", &sizes);
+    let doubling = series("libpico", "binomial_doubling", &sizes);
+    let internal = series("openmpi", "binomial", &sizes);
+    println!(
+        "{:>10} {:>16} {:>16} {:>16} {:>8}",
+        "size", "halving(libpico)", "doubling(libpico)", "OMPI internal", "dbl/hlv"
+    );
+    for (i, s) in sizes.iter().enumerate() {
+        println!(
+            "{:>10} {:>16} {:>16} {:>16} {:>8.2}",
+            fmt_size(*s),
+            fmt_time(halving[i]),
+            fmt_time(doubling[i]),
+            fmt_time(internal[i]),
+            doubling[i] / halving[i]
+        );
+    }
+    let last = sizes.len() - 1;
+    println!(
+        "\n512MiB: halving {} vs doubling {} ({:.2}x; paper 304ms vs 757ms = 2.5x)",
+        fmt_time(halving[last]),
+        fmt_time(doubling[last]),
+        doubling[last] / halving[last]
+    );
+    println!(
+        "OMPI internal at 512MiB: {} ({:.1}x halving; paper 1.9s = 6.3x)",
+        fmt_time(internal[last]),
+        internal[last] / halving[last]
+    );
+    // shape assertions
+    let small = sizes.iter().position(|&s| s == 16 * 1024).unwrap();
+    assert!(
+        (doubling[small] / halving[small] - 1.0).abs() < 0.25,
+        "small messages should be nearly identical"
+    );
+    assert!(doubling[last] / halving[last] > 1.5, "doubling must diverge at large sizes");
+    assert!(internal[last] > 2.0 * halving[last], "internal binomial must be far slower");
+
+    benchkit::section("engine throughput (512-rank bcast simulation)");
+    benchkit::bench("fig10: simulate one 512-rank 16MiB bcast", 1, 5, || {
+        series("libpico", "binomial_halving", &[16 << 20])
+    });
+}

@@ -1,0 +1,65 @@
+//! Fig. 11 — Instrumented Rabenseifner Allreduce on 8 nodes (leonardo,
+//! libpico): (a) absolute runtime breakdown into Communication / Reduction
+//! / Data-Movement / Other, (b) percentage shares.  Paper shape: comm share
+//! ~95% for small messages (latency regime, flat ~10 µs to 2 KiB), dipping
+//! sharply after 128 KiB (to ~35%) as data movement and reduction take
+//! over, then partially recovering (~56%) at 64–512 MiB.
+
+use pico::analysis::render_breakdown;
+use pico::benchkit;
+use pico::collectives::Coll;
+use pico::config::{EnvSpec, TestSpec};
+use pico::orchestrator::run_campaign;
+use pico::results::Granularity;
+use pico::sim::Components;
+use pico::util::pow2_sizes;
+
+fn breakdown(bytes: usize) -> (Components, Vec<(String, f64)>) {
+    let mut spec = TestSpec::new("fig11", "libpico", Coll::Allreduce);
+    spec.sizes = vec![bytes];
+    spec.nodes = vec![8];
+    spec.algorithms = vec!["rabenseifner".into()];
+    spec.instrument = true;
+    spec.iterations = 3;
+    spec.warmup = 1;
+    spec.granularity = Granularity::Summary;
+    let env = EnvSpec::for_system("leonardo");
+    let out = run_campaign(&spec, &env, None).expect("fig11");
+    (out[0].measurement.components, out[0].measurement.tag_times.clone())
+}
+
+fn main() {
+    benchkit::section("Fig. 11 — instrumented Rabenseifner Allreduce (8 nodes, leonardo)");
+    let sizes = pow2_sizes(32, 512 << 20);
+    let mut rows = Vec::new();
+    for &s in &sizes {
+        rows.push((s, breakdown(s).0));
+    }
+    println!("{}", render_breakdown("(a)+(b) tagged component breakdown", &rows));
+
+    // shape assertions on the comm share trajectory
+    let share = |c: &Components| c.comm / c.total();
+    let at = |bytes: usize| &rows.iter().find(|(s, _)| *s == bytes).unwrap().1;
+    let small = share(at(2048));
+    let mid = share(at(4 << 20));
+    let large = share(at(512 << 20));
+    println!(
+        "comm share: 2KiB {:.0}%  ->  4MiB {:.0}%  ->  512MiB {:.0}%   (paper: ~95% -> ~35% -> ~56%)",
+        100.0 * small,
+        100.0 * mid,
+        100.0 * large
+    );
+    assert!(small > 0.75, "small messages must be communication-dominated");
+    assert!(mid < small - 0.25, "mid sizes must dip (memory roof)");
+    assert!(large > mid, "large sizes must partially recover (non-monotonic)");
+
+    // per-tag region view at one size (the Fig. 5 instrumentation payoff)
+    benchkit::section("tag regions at 8MiB (phase/step attribution)");
+    let (_, tags) = breakdown(8 << 20);
+    for (name, s) in tags.iter().filter(|(n, _)| n.starts_with("phase:") || n == "init:mem-move") {
+        println!("  {name:<24} {}", pico::util::fmt_time(*s));
+    }
+
+    benchkit::section("engine throughput");
+    benchkit::bench("fig11: one instrumented 8-node point", 1, 10, || breakdown(1 << 20));
+}

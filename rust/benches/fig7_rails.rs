@@ -1,0 +1,58 @@
+//! Fig. 7 — Ring MPI_Allreduce on Leonardo (32 nodes), varying only
+//! `UCX_MAX_RNDV_RAILS`.  Latency normalized to the default (=2); the paper
+//! shows rails=4 up to ~10% faster for large (rendezvous) messages and no
+//! effect in the eager regime.
+
+use pico::benchkit;
+use pico::collectives::Coll;
+use pico::config::{EnvSpec, TestSpec};
+use pico::orchestrator::run_campaign;
+use pico::results::Granularity;
+use pico::util::{fmt_size, pow2_sizes};
+
+fn run(rails: usize, sizes: &[usize]) -> Vec<f64> {
+    let mut spec = TestSpec::new("fig7", "openmpi", Coll::Allreduce);
+    spec.sizes = sizes.to_vec();
+    spec.nodes = vec![32];
+    spec.algorithms = vec!["ring".into()];
+    spec.knobs = vec![("max_rndv_rails".into(), rails.to_string())];
+    spec.iterations = 3;
+    spec.warmup = 1;
+    spec.granularity = Granularity::Summary;
+    let env = EnvSpec::for_system("leonardo");
+    run_campaign(&spec, &env, None).expect("fig7").iter().map(|o| o.median_s).collect()
+}
+
+fn main() {
+    benchkit::section(
+        "Fig. 7 — UCX_MAX_RNDV_RAILS sensitivity (Ring Allreduce, 32 nodes, leonardo)",
+    );
+    let sizes = pow2_sizes(1024, 256 << 20);
+    let base = run(2, &sizes);
+    let r1 = run(1, &sizes);
+    let r4 = run(4, &sizes);
+    println!(
+        "{:>10} {:>12} {:>12} {:>12}  (normalized to rails=2)",
+        "size", "rails=1", "rails=2", "rails=4"
+    );
+    let mut max_gain = 0.0f64;
+    let mut eager_max_dev = 0.0f64;
+    for (i, s) in sizes.iter().enumerate() {
+        let n1 = r1[i] / base[i];
+        let n4 = r4[i] / base[i];
+        println!("{:>10} {:>12.3} {:>12.3} {:>12.3}", fmt_size(*s), n1, 1.0, n4);
+        if *s > 16 * 1024 {
+            max_gain = max_gain.max(1.0 - n4);
+        } else {
+            eager_max_dev = eager_max_dev.max((1.0 - n4).abs());
+        }
+    }
+    println!(
+        "rendezvous regime: rails=4 up to {:.1}% faster (paper: ~10%);  eager regime deviation <= {:.2}%",
+        100.0 * max_gain,
+        100.0 * eager_max_dev
+    );
+
+    benchkit::section("engine throughput");
+    benchkit::bench("fig7: one rails sweep", 0, 3, || run(4, &sizes));
+}

@@ -1,0 +1,45 @@
+//! Fig. 8 — Binomial-tree broadcast schedules with different partner
+//! ordering: (a) distance-halving vs (b) distance-doubling.  Both complete
+//! in log₂(p) rounds with identical volume; they differ in how distance
+//! evolves across rounds (halving maximizes locality in the late,
+//! high-volume rounds).
+
+use pico::benchkit;
+use pico::collectives::bcast::{doubling_edges, halving_edges, ScheduleEdge};
+
+fn render(title: &str, edges: &[ScheduleEdge], p: usize) {
+    println!("\n{title} (p = {p})");
+    let rounds = edges.iter().map(|e| e.round).max().unwrap_or(0) + 1;
+    for k in 0..rounds {
+        let in_round: Vec<&ScheduleEdge> = edges.iter().filter(|e| e.round == k).collect();
+        let dist = in_round.first().map(|e| e.distance).unwrap_or(0);
+        let pairs: Vec<String> =
+            in_round.iter().take(8).map(|e| format!("{}->{}", e.from_v, e.to_v)).collect();
+        let ell = if in_round.len() > 8 { ", ..." } else { "" };
+        println!(
+            "  round {k}: {:>3} transmissions at distance {:>4}   [{}{}]",
+            in_round.len(),
+            dist,
+            pairs.join(", "),
+            ell
+        );
+    }
+}
+
+fn main() {
+    benchkit::section("Fig. 8 — binomial broadcast partner orderings");
+    let p = 16;
+    render("(a) distance-halving (MPICH binomial)", &halving_edges(p), p);
+    render("(b) distance-doubling (Open MPI binomial)", &doubling_edges(p), p);
+    println!(
+        "\nboth: {} transmissions over {} rounds — identical under an alpha-beta model;",
+        p - 1,
+        (p as f64).log2() as usize
+    );
+    println!("halving's late (high-fan-out) rounds are local, doubling's are far (crux of Fig. 9/10).");
+
+    benchkit::section("schedule-generation throughput");
+    benchkit::bench("fig8: edges for p=4096 (both orderings)", 2, 50, || {
+        (halving_edges(4096), doubling_edges(4096))
+    });
+}

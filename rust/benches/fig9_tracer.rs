@@ -1,0 +1,45 @@
+//! Fig. 9 — Network volume estimates of distance-halving vs
+//! distance-doubling broadcast on a 128-node Leonardo allocation:
+//! the tracer splits each schedule's bytes into internal (intra-node +
+//! intra-group) and external (inter-group) traffic, in units of the
+//! payload size n.  Paper: doubling pushes ~96% of its 127·n total across
+//! groups; halving only ~29%.
+
+use pico::benchkit;
+use pico::collectives::{bcast, GenParams};
+use pico::topology::{leonardo, AllocPolicy, Allocation, Placement, RankOrder};
+use pico::tracer::{render, trace};
+
+fn main() {
+    benchkit::section(
+        "Fig. 9 — tracer volume estimates (bcast, 128 nodes, leonardo, scattered allocation)",
+    );
+    let prof = leonardo();
+    let alloc = Allocation::new(&prof, 128, AllocPolicy::Scattered, 11);
+    let placement = Placement::new(&prof, &alloc, 1, RankOrder::Block);
+    let n_bytes = 1 << 20; // volumes are reported per payload byte: any n works
+    let params = GenParams::new(128, n_bytes / 4);
+
+    let d = trace(&bcast::binomial_doubling(&params).unwrap(), &placement);
+    let h = trace(&bcast::binomial_halving(&params).unwrap(), &placement);
+    print!("{}", render("binomial_doubling", &d, n_bytes));
+    print!("{}", render("binomial_halving", &h, n_bytes));
+
+    let (di, de, dt) = d.in_units_of(n_bytes);
+    let (hi, he, ht) = h.in_units_of(n_bytes);
+    println!(
+        "external share: doubling {:.0}%  halving {:.0}%   (paper: 96% vs 29%)",
+        100.0 * de / dt,
+        100.0 * he / ht
+    );
+    println!("internal share: doubling {:.0}%  halving {:.0}%", 100.0 * di / dt, 100.0 * hi / ht);
+    assert_eq!(dt as usize, 127, "total must be 127 n (paper Fig. 9)");
+    assert_eq!(ht as usize, 127);
+    assert!(he < de, "halving must externalize less traffic");
+
+    benchkit::section("tracer throughput");
+    let goal = bcast::binomial_halving(&params).unwrap();
+    benchkit::bench("fig9: trace one 128-rank bcast schedule", 2, 100, || {
+        trace(&goal, &placement)
+    });
+}

@@ -1,0 +1,143 @@
+//! §Perf — hot-path microbenchmarks for the performance pass
+//! (EXPERIMENTS.md §Perf records before/after for each).
+//!
+//! L3 targets: DES event throughput, schedule generation, message matching,
+//! tag-instrumentation overhead (<100 ns/region enabled, ~free disabled),
+//! replay memoization, JSON encode/parse.
+//! L1 target: PJRT-compiled Pallas reduction throughput vs the scalar
+//! reference data plane (requires `make artifacts`).
+
+use pico::benchkit::{bench, report_rate, section};
+use pico::collectives::{self, Coll, GenParams};
+use pico::execute::{execute, make_inputs, Reducer, ScalarReducer};
+use pico::goal::ReduceOp;
+use pico::instrument::Recorder;
+use pico::netmodel::NetConfig;
+use pico::sim::{simulate, SimContext};
+use pico::topology::{leonardo, AllocPolicy, Allocation, Placement, RankOrder};
+
+fn main() {
+    section("L3: DES engine");
+    let prof = leonardo();
+    let alloc = Allocation::new(&prof, 128, AllocPolicy::Scattered, 7);
+    let pl = Placement::new(&prof, &alloc, 4, RankOrder::Block);
+    let goal = collectives::generate(Coll::Allreduce, "ring", &GenParams::new(512, 512 * 64))
+        .unwrap();
+    let events = simulate(&goal, &SimContext::new(&prof, &pl)).events_processed;
+    let t = bench("sim: 512-rank ring allreduce", 1, 10, || {
+        simulate(&goal, &SimContext::new(&prof, &pl)).total_time
+    });
+    report_rate("sim: event throughput", events, t);
+
+    let rab = collectives::generate(Coll::Allreduce, "rabenseifner", &GenParams::new(512, 512 * 64))
+        .unwrap();
+    bench("sim: 512-rank rabenseifner", 1, 10, || {
+        simulate(&rab, &SimContext::new(&prof, &pl)).total_time
+    });
+
+    section("L3: schedule generation");
+    bench("gen: ring allreduce p=512", 2, 20, || {
+        collectives::generate(Coll::Allreduce, "ring", &GenParams::new(512, 512 * 64)).unwrap()
+    });
+    bench("gen: rabenseifner p=512 instrumented", 2, 20, || {
+        collectives::generate(
+            Coll::Allreduce,
+            "rabenseifner",
+            &GenParams::new(512, 512 * 64).instrumented(),
+        )
+        .unwrap()
+    });
+    bench("gen: bruck alltoall p=256", 2, 20, || {
+        collectives::generate(Coll::Alltoall, "bruck", &GenParams::new(256, 256 * 16)).unwrap()
+    });
+
+    section("L3: tag instrumentation overhead (paper: <100ns/region enabled)");
+    let mut rec_on = Recorder::new(true);
+    let t_on = bench("tags: 100k begin/end pairs (enabled)", 1, 20, || {
+        for _ in 0..100_000 {
+            rec_on.begin("region");
+            rec_on.end("region");
+        }
+        rec_on.clear();
+    });
+    println!("  -> {:.1} ns per tagged region (enabled)", t_on / 100_000.0 * 1e9);
+    assert!(t_on / 100_000.0 < 300e-9, "enabled tags must stay cheap");
+    let mut rec_off = Recorder::new(false);
+    let t_off = bench("tags: 100k begin/end pairs (disabled)", 1, 20, || {
+        for _ in 0..100_000 {
+            rec_off.begin("region");
+            rec_off.end("region");
+        }
+    });
+    println!("  -> {:.2} ns per tagged region (disabled)", t_off / 100_000.0 * 1e9);
+
+    section("L3: execute-mode data plane");
+    let goal8 = collectives::generate(Coll::Allreduce, "ring", &GenParams::new(8, 65536)).unwrap();
+    bench("exec: 8-rank 256KiB ring allreduce (scalar)", 1, 10, || {
+        execute(&goal8, make_inputs(8, 65536, 3), &ScalarReducer)
+    });
+
+    section("L1: PJRT Pallas reduction vs scalar (requires make artifacts)");
+    match pico::runtime::XlaReducer::from_default_dir() {
+        Ok(xla) => {
+            let n = 2_097_152; // largest bucket
+            let a = make_inputs(2, n, 1);
+            // warm the executable cache before timing
+            let mut w = a[0].clone();
+            xla.reduce_f32(ReduceOp::Sum, &mut w, &a[1]).unwrap();
+            let t_xla = bench("xla: reduce_sum 8MiB bucket", 1, 10, || {
+                let mut dst = a[0].clone();
+                xla.reduce_f32(ReduceOp::Sum, &mut dst, &a[1]).unwrap();
+                dst[0]
+            });
+            report_rate("xla: bytes reduced", n * 4, t_xla);
+            let t_scalar = bench("scalar: reduce_sum 8MiB", 1, 10, || {
+                let mut dst = a[0].clone();
+                ScalarReducer.reduce(ReduceOp::Sum, &mut dst, &a[1]);
+                dst[0]
+            });
+            println!(
+                "  -> xla/scalar ratio: {:.2}x (interpret-mode artifact on CPU PJRT; real-TPU perf is estimated analytically, DESIGN.md §Perf)",
+                t_xla / t_scalar
+            );
+        }
+        Err(e) => println!("  skipped: {e:#} (run `make artifacts`)"),
+    }
+
+    section("L3: replay memoization");
+    let trace = pico::replay::llama7b(128, 1);
+    let sys = leonardo();
+    let t = bench("replay: L128 iteration", 1, 5, || {
+        pico::replay::replay(&trace, &sys, None, 5).iteration_s
+    });
+    let inv = trace
+        .ops
+        .iter()
+        .filter(|o| matches!(o, pico::replay::TraceOp::Coll { .. }))
+        .count();
+    report_rate("replay: invocations", inv, t);
+
+    section("L3: JSON substrate");
+    let big = pico::json::Json::Arr(
+        (0..1000)
+            .map(|i| {
+                pico::json::Json::obj()
+                    .set("id", i as usize)
+                    .set("median_s", 1.5e-3)
+                    .set("algorithm", "rabenseifner")
+            })
+            .collect(),
+    );
+    let text = big.to_string_pretty();
+    bench("json: encode 1000-record index", 2, 50, || big.to_string_pretty().len());
+    bench("json: parse 1000-record index", 2, 50, || {
+        pico::json::Json::parse(&text).unwrap()
+    });
+
+    // keep the NetConfig import meaningful: one contended-config sim
+    section("L3: congested-path simulation");
+    let cfg = NetConfig { max_rndv_rails: Some(4), ..Default::default() };
+    bench("sim: 512-rank ring, 4-rail contention", 1, 10, || {
+        simulate(&goal, &SimContext::new(&prof, &pl).with_cfg(cfg)).total_time
+    });
+}

@@ -1,0 +1,83 @@
+//! Table II — Result data granularity modes: Full / Statistics / Minimal /
+//! Summary / None.  One campaign is stored under every mode; the bench
+//! prints the per-test-point record sizes (the storage/diagnosability
+//! trade the table describes) and checks the derivability invariants.
+
+use pico::benchkit;
+use pico::collectives::Coll;
+use pico::config::{EnvSpec, TestSpec};
+use pico::orchestrator::run_campaign;
+use pico::results::{Granularity, RunDir};
+
+fn main() {
+    benchkit::section("Table II — result granularity modes");
+    let tmp = std::env::temp_dir().join(format!("pico_table2_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    println!(
+        "{:<12} {:>14} {:>10}  {}",
+        "mode", "record bytes", "records", "description"
+    );
+    let desc = [
+        ("full", "all measurements for each rank and iteration"),
+        ("statistics", "per-iteration aggregated statistics across ranks"),
+        ("minimal", "only the maximum value per iteration"),
+        ("summary", "single set of aggregates over iterations"),
+        ("none", "stdout only, nothing stored"),
+    ];
+    let mut sizes = Vec::new();
+    for g in Granularity::ALL {
+        let mut spec = TestSpec::new(format!("t2-{}", g.label()).as_str(), "openmpi", Coll::Allreduce);
+        spec.sizes = vec![1 << 20];
+        spec.nodes = vec![8];
+        spec.ppn = 2;
+        spec.iterations = 10;
+        spec.warmup = 1;
+        spec.granularity = g;
+        let env = EnvSpec::for_system("leonardo");
+        run_campaign(&spec, &env, Some(&tmp)).expect("table2 campaign");
+        let rec_dir = tmp.join(format!("t2-{}", g.label())).join("records");
+        let (count, bytes): (usize, u64) = std::fs::read_dir(&rec_dir)
+            .map(|rd| {
+                rd.flatten().fold((0, 0), |(c, b), e| {
+                    (c + 1, b + e.metadata().map(|m| m.len()).unwrap_or(0))
+                })
+            })
+            .unwrap_or((0, 0));
+        let d = desc.iter().find(|(l, _)| *l == g.label()).unwrap().1;
+        println!("{:<12} {:>14} {:>10}  {}", g.label(), bytes, count, d);
+        sizes.push((g, bytes));
+    }
+    // storage must shrink monotonically Full -> Statistics -> Minimal ->
+    // Summary -> None
+    for w in sizes.windows(2) {
+        assert!(
+            w[0].1 >= w[1].1,
+            "{:?} ({}) should not be smaller than {:?} ({})",
+            w[0].0,
+            w[0].1,
+            w[1].0,
+            w[1].1
+        );
+    }
+    assert_eq!(sizes.last().unwrap().1, 0, "None must store nothing");
+    // Full mode index must load back
+    let idx = RunDir::load_index(tmp.join("t2-full")).expect("index");
+    assert_eq!(idx.len(), 1);
+    let _ = std::fs::remove_dir_all(&tmp);
+    println!("\ninvariants: monotone shrinkage OK; None stores nothing OK; index round-trips OK");
+
+    benchkit::section("record-encoding throughput");
+    use pico::results::Measurement;
+    use pico::sim::Components;
+    let m = Measurement {
+        times: (0..50).map(|i| (0..512).map(|r| (i * r) as f64 * 1e-9).collect()).collect(),
+        components: Components::default(),
+        tag_times: vec![],
+    };
+    benchkit::bench("table2: encode 50x512 Full record", 2, 100, || {
+        m.encode(Granularity::Full).to_string_compact().len()
+    });
+    benchkit::bench("table2: encode Summary record", 2, 1000, || {
+        m.encode(Granularity::Summary).to_string_compact().len()
+    });
+}

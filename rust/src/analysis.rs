@@ -1,0 +1,226 @@
+//! Post-processing and visualization toolkit (paper Sec. III-F): ratio
+//! computation for Fig. 6, ASCII heatmaps / line tables / breakdown tables
+//! rendered straight from campaign outcomes, CSV emission for external
+//! plotting.  Everything derives from the same indexed schema the
+//! orchestrator writes, so visuals stay consistent across runs (R4).
+
+use std::collections::BTreeMap;
+
+use crate::orchestrator::PointOutcome;
+use crate::util::{fmt_size, fmt_time};
+
+/// Best-to-default latency ratio r = t_best / t_def per (nodes, bytes),
+/// where t_best is the best *non-default* algorithm (paper Fig. 6).
+/// r < 1 ⇒ the default choice is suboptimal.
+#[derive(Debug, Clone)]
+pub struct RatioCell {
+    pub nodes: usize,
+    pub bytes: usize,
+    pub default_algo: String,
+    pub default_s: f64,
+    pub best_algo: String,
+    pub best_s: f64,
+    pub r: f64,
+}
+
+/// Group a "*"-sweep's outcomes into Fig. 6 ratio cells.  Outcomes with
+/// `algorithm == None` are the backend-default runs; named outcomes are the
+/// exposed alternatives.
+pub fn best_to_default(outcomes: &[PointOutcome]) -> Vec<RatioCell> {
+    let mut by_point: BTreeMap<(usize, usize), (Option<&PointOutcome>, Vec<&PointOutcome>)> =
+        BTreeMap::new();
+    for o in outcomes {
+        let key = (o.point.nodes, o.point.bytes);
+        let slot = by_point.entry(key).or_default();
+        if o.point.algorithm.is_none() {
+            slot.0 = Some(o);
+        } else {
+            slot.1.push(o);
+        }
+    }
+    let mut cells = Vec::new();
+    for ((nodes, bytes), (default, alts)) in by_point {
+        let Some(def) = default else { continue };
+        // non-default = exposed algorithms other than what the default picked
+        let best = alts
+            .iter()
+            .filter(|o| o.effective_algorithm != def.effective_algorithm)
+            .min_by(|a, b| a.median_s.total_cmp(&b.median_s));
+        let Some(best) = best else { continue };
+        cells.push(RatioCell {
+            nodes,
+            bytes,
+            default_algo: def.effective_algorithm.clone(),
+            default_s: def.median_s,
+            best_algo: best.effective_algorithm.clone(),
+            best_s: best.median_s,
+            r: best.median_s / def.median_s,
+        });
+    }
+    cells
+}
+
+/// Render ratio cells as the Fig. 6 heatmap (rows = bytes, cols = nodes).
+pub fn render_ratio_heatmap(title: &str, cells: &[RatioCell]) -> String {
+    let mut nodes: Vec<usize> = cells.iter().map(|c| c.nodes).collect();
+    nodes.sort_unstable();
+    nodes.dedup();
+    let mut sizes: Vec<usize> = cells.iter().map(|c| c.bytes).collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    let mut out = format!("{title}\n  r = t_best / t_default (r < 1: default suboptimal)\n");
+    out.push_str(&format!("  {:>10} |", "msg \\ nodes"));
+    for n in &nodes {
+        out.push_str(&format!(" {n:>6}"));
+    }
+    out.push('\n');
+    out.push_str(&format!("  {:-^10}-+{}\n", "", "-".repeat(7 * nodes.len())));
+    for s in &sizes {
+        out.push_str(&format!("  {:>10} |", fmt_size(*s)));
+        for n in &nodes {
+            match cells.iter().find(|c| c.nodes == *n && c.bytes == *s) {
+                Some(c) => out.push_str(&format!(" {:>6.2}", c.r)),
+                None => out.push_str(&format!(" {:>6}", "-")),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// A latency-vs-size line table (Fig. 7/10 style): one column per series.
+pub fn render_latency_table(
+    title: &str,
+    sizes: &[usize],
+    series: &[(&str, Vec<f64>)],
+) -> String {
+    let mut out = format!("{title}\n  {:>10}", "size");
+    for (name, _) in series {
+        out.push_str(&format!(" {name:>22}"));
+    }
+    out.push('\n');
+    for (i, s) in sizes.iter().enumerate() {
+        out.push_str(&format!("  {:>10}", fmt_size(*s)));
+        for (_, vals) in series {
+            out.push_str(&format!(" {:>22}", fmt_time(vals[i])));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// CSV emission for external plotting pipelines.
+pub fn to_csv(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = header.join(",");
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// Fig. 11-style breakdown table: absolute + percentage shares.
+pub fn render_breakdown(
+    title: &str,
+    rows: &[(usize, crate::sim::Components)],
+) -> String {
+    let mut out = format!(
+        "{title}\n  {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} | {:>6} {:>6} {:>6} {:>6}\n",
+        "size", "total", "comm", "reduce", "datamove", "other", "comm%", "red%", "dm%", "oth%"
+    );
+    for (bytes, c) in rows {
+        let t = c.total().max(1e-30);
+        out.push_str(&format!(
+            "  {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} | {:>5.1}% {:>5.1}% {:>5.1}% {:>5.1}%\n",
+            fmt_size(*bytes),
+            fmt_time(t),
+            fmt_time(c.comm),
+            fmt_time(c.reduction),
+            fmt_time(c.datamove),
+            fmt_time(c.other),
+            100.0 * c.comm / t,
+            100.0 * c.reduction / t,
+            100.0 * c.datamove / t,
+            100.0 * c.other / t,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::Coll;
+    use crate::config::TestPoint;
+    use crate::netmodel::{NetConfig, Proto};
+    use crate::results::Measurement;
+    use crate::sim::Components;
+
+    fn outcome(nodes: usize, bytes: usize, algo: Option<&str>, eff: &str, s: f64) -> PointOutcome {
+        PointOutcome {
+            point: TestPoint {
+                collective: Coll::Allreduce,
+                bytes,
+                nodes,
+                ppn: 1,
+                algorithm: algo.map(String::from),
+                net_cfg: NetConfig::default(),
+                degraded_knobs: vec![],
+            },
+            effective_algorithm: eff.to_string(),
+            effective_proto: Proto::Simple,
+            measurement: Measurement {
+                times: vec![vec![s]],
+                components: Components::default(),
+                tag_times: vec![],
+            },
+            median_s: s,
+        }
+    }
+
+    #[test]
+    fn ratio_identifies_suboptimal_default() {
+        let outs = vec![
+            outcome(8, 1024, None, "ring", 10.0),
+            outcome(8, 1024, Some("ring"), "ring", 10.0),
+            outcome(8, 1024, Some("rabenseifner"), "rabenseifner", 7.0),
+        ];
+        let cells = best_to_default(&outs);
+        assert_eq!(cells.len(), 1);
+        assert!((cells[0].r - 0.7).abs() < 1e-12);
+        assert_eq!(cells[0].best_algo, "rabenseifner");
+        // the default's own algorithm is excluded from "non-default best"
+        assert_eq!(cells[0].default_algo, "ring");
+    }
+
+    #[test]
+    fn ratio_above_one_when_default_wins() {
+        let outs = vec![
+            outcome(8, 1024, None, "ring", 5.0),
+            outcome(8, 1024, Some("linear"), "linear", 50.0),
+        ];
+        let cells = best_to_default(&outs);
+        assert!(cells[0].r > 1.0);
+    }
+
+    #[test]
+    fn heatmap_renders_grid() {
+        let outs = vec![
+            outcome(2, 1024, None, "ring", 10.0),
+            outcome(2, 1024, Some("tree"), "tree", 9.0),
+            outcome(8, 1024, None, "ring", 10.0),
+            outcome(8, 1024, Some("tree"), "tree", 12.0),
+        ];
+        let hm = render_ratio_heatmap("test", &best_to_default(&outs));
+        assert!(hm.contains("1KiB"));
+        assert!(hm.contains("0.90"));
+        assert!(hm.contains("1.20"));
+    }
+
+    #[test]
+    fn csv_shape() {
+        let csv = to_csv(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert_eq!(csv, "a,b\n1,2\n");
+    }
+}

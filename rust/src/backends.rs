@@ -1,0 +1,732 @@
+//! Backend adapters (paper Sec. III-B, R6): the uniform interface over
+//! heterogeneous communication stacks.
+//!
+//! Each adapter models a real stack's *behavioural surface*: which
+//! collectives it implements, which algorithm choices it exposes, its
+//! built-in default-selection heuristic (the thing Fig. 6 measures against
+//! the best exposed choice), which transport knobs it honours, and how it
+//! degrades when asked for something it does not support.
+//!
+//! Three adapters ship, mirroring the paper's testbeds:
+//! - `openmpi-sim` — Open MPI 4.1-flavoured `coll_tuned` fixed decision
+//!   rules, algorithm forcing, UCX rail knob;
+//! - `craympich-sim` — Cray MPICH 8.1-flavoured MPICH selection thresholds,
+//!   a smaller exposed-algorithm set, no rail knob (graceful degradation);
+//! - `simccl` — NCCL-flavoured: Ring/Tree (+PAT from "2.23"), LL/Simple
+//!   protocol selection, bytes-based defaults.
+
+use crate::collectives::{self, Coll, GenParams, GenResult};
+use crate::goal::Goal;
+use crate::netmodel::{NetConfig, Proto};
+
+/// What a backend supports — the machine-readable Table I row for PICO's
+/// own stack (printed by `benches/table1_capabilities.rs`).
+#[derive(Debug, Clone)]
+pub struct Caps {
+    /// Can the experiment force a specific algorithm?
+    pub algorithm_selection: bool,
+    /// Does the stack expose an LL/Simple-style protocol knob?
+    pub proto_selection: bool,
+    /// Does the stack honour the rendezvous-rails knob?
+    pub rails_knob: bool,
+    /// Are its algorithms instrumentable at phase/step level (libpico)?
+    pub instrumentation: bool,
+    pub collectives: Vec<Coll>,
+}
+
+/// Outcome of applying a requested knob (R5: requested vs *effective*).
+#[derive(Debug, Clone, PartialEq)]
+pub enum KnobOutcome {
+    Applied,
+    /// Backend does not support it; execution continues with defaults
+    /// (R6 graceful degradation) and the record notes the downgrade.
+    Unsupported(String),
+    Invalid(String),
+}
+
+/// A communication-stack adapter.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+    fn version(&self) -> &'static str;
+    fn caps(&self) -> Caps;
+
+    /// Algorithm choices this stack exposes for `coll`.
+    fn algorithms(&self, coll: Coll) -> Vec<&'static str>;
+
+    /// The stack's built-in selection heuristic for a test point.
+    fn default_algorithm(&self, coll: Coll, p: usize, bytes: usize, ppn: usize) -> &'static str;
+
+    /// The stack's default protocol for a test point.
+    fn default_proto(&self, _coll: Coll, _bytes: usize) -> Proto {
+        Proto::Simple
+    }
+
+    /// Apply a (key, value) knob from test.json onto the net config.
+    fn apply_knob(&self, key: &str, value: &str, cfg: &mut NetConfig) -> KnobOutcome;
+
+    /// Generate the schedule for an exposed algorithm name.
+    fn schedule(&self, coll: Coll, algo: &str, params: &GenParams) -> GenResult;
+
+    /// Data-plane memory engine override: NCCL-style stacks stage and
+    /// reduce on the GPU (HBM-speed fused kernels); plain-MPI stacks use
+    /// the host engine from the system profile.
+    fn mem_params(&self) -> Option<crate::netmodel::MemParams> {
+        None
+    }
+
+    /// Rails the stack drives by default (NCCL opens a channel per NIC;
+    /// UCX-based MPI defaults to the profile's `default_max_rndv_rails`).
+    fn default_rails(&self) -> Option<usize> {
+        None
+    }
+
+    /// Per-message endpoint overhead of this stack (None = profile value).
+    fn msg_overhead(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// Generate with fallback: unknown/unsupported algorithm names degrade to
+/// the backend default (R6), reporting what actually ran.
+pub fn schedule_effective(
+    backend: &dyn Backend,
+    coll: Coll,
+    algo: Option<&str>,
+    params: &GenParams,
+    ppn: usize,
+) -> Result<(Goal, String), String> {
+    let name = match algo {
+        Some(a) if backend.algorithms(coll).contains(&a) => a.to_string(),
+        Some(_) | None => {
+            backend.default_algorithm(coll, params.p, params.bytes(), ppn).to_string()
+        }
+    };
+    let goal = backend.schedule(coll, &name, params)?;
+    Ok((goal, name))
+}
+
+pub fn all_backends() -> Vec<Box<dyn Backend>> {
+    vec![
+        Box::new(LibPico),
+        Box::new(OpenMpiSim),
+        Box::new(CrayMpichSim),
+        Box::new(SimCcl { version_minor: 22 }),
+        Box::new(SimCcl { version_minor: 23 }),
+    ]
+}
+
+pub fn by_name(name: &str) -> Option<Box<dyn Backend>> {
+    match name {
+        "libpico" => Some(Box::new(LibPico)),
+        "openmpi" | "openmpi-sim" => Some(Box::new(OpenMpiSim)),
+        "craympich" | "craympich-sim" => Some(Box::new(CrayMpichSim)),
+        "simccl" | "simccl-2.22" | "nccl" => Some(Box::new(SimCcl { version_minor: 22 })),
+        "simccl-2.23" => Some(Box::new(SimCcl { version_minor: 23 })),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// libpico as a backend: the backend-neutral reference library itself (R2)
+// ---------------------------------------------------------------------------
+
+/// Runs libpico reference algorithms directly over plain point-to-point —
+/// every registry algorithm is exposed, everything is instrumentable, and
+/// defaults follow simple MPICH-flavoured thresholds (the reference
+/// library makes no platform-specific claims).
+pub struct LibPico;
+
+impl Backend for LibPico {
+    fn name(&self) -> &'static str {
+        "libpico"
+    }
+
+    fn version(&self) -> &'static str {
+        env!("CARGO_PKG_VERSION")
+    }
+
+    fn caps(&self) -> Caps {
+        Caps {
+            algorithm_selection: true,
+            proto_selection: false,
+            rails_knob: true, // rides the same UCX-style transport
+            instrumentation: true,
+            collectives: Coll::ALL.to_vec(),
+        }
+    }
+
+    fn algorithms(&self, coll: Coll) -> Vec<&'static str> {
+        collectives::algorithms(coll).iter().map(|a| a.name).collect()
+    }
+
+    fn default_algorithm(&self, coll: Coll, p: usize, bytes: usize, _ppn: usize) -> &'static str {
+        match coll {
+            Coll::Allreduce => {
+                if bytes <= 4 * 1024 {
+                    "recursive_doubling"
+                } else {
+                    "rabenseifner"
+                }
+            }
+            Coll::Bcast => {
+                if bytes <= 16 * 1024 {
+                    "binomial_halving"
+                } else {
+                    "scatter_allgather"
+                }
+            }
+            Coll::Reduce => "binomial",
+            Coll::Allgather => {
+                if bytes <= 32 * 1024 {
+                    "bruck"
+                } else {
+                    "ring"
+                }
+            }
+            Coll::ReduceScatter => {
+                if p.is_power_of_two() && bytes <= 256 * 1024 {
+                    "recursive_halving"
+                } else {
+                    "ring"
+                }
+            }
+            Coll::Alltoall => {
+                if bytes <= 2 * 1024 {
+                    "bruck"
+                } else {
+                    "pairwise"
+                }
+            }
+            Coll::Gather | Coll::Scatter => "binomial",
+            Coll::Barrier => "dissemination",
+        }
+    }
+
+    fn apply_knob(&self, key: &str, value: &str, cfg: &mut NetConfig) -> KnobOutcome {
+        // same transport surface as the Open MPI adapter
+        OpenMpiSim.apply_knob(key, value, cfg)
+    }
+
+    fn schedule(&self, coll: Coll, algo: &str, params: &GenParams) -> GenResult {
+        // degrade pow2-only choices on odd rank counts like MPICH does
+        if !params.p.is_power_of_two() {
+            let fallback = match (coll, algo) {
+                (Coll::Allgather, "recursive_doubling" | "pat") => Some("ring"),
+                (Coll::ReduceScatter, "recursive_halving" | "pat") => Some("ring"),
+                _ => None,
+            };
+            if let Some(f) = fallback {
+                return libpico(coll, f, params);
+            }
+        }
+        libpico(coll, algo, params)
+    }
+}
+
+fn libpico(coll: Coll, name: &str, params: &GenParams) -> GenResult {
+    collectives::generate(coll, name, params)
+}
+
+// ---------------------------------------------------------------------------
+// Open MPI 4.1-flavoured adapter
+// ---------------------------------------------------------------------------
+
+pub struct OpenMpiSim;
+
+impl Backend for OpenMpiSim {
+    fn name(&self) -> &'static str {
+        "openmpi-sim"
+    }
+
+    fn version(&self) -> &'static str {
+        "4.1.6-sim"
+    }
+
+    fn caps(&self) -> Caps {
+        Caps {
+            algorithm_selection: true, // coll_tuned_*_algorithm
+            proto_selection: false,
+            rails_knob: true, // UCX_MAX_RNDV_RAILS
+            instrumentation: false,
+            collectives: Coll::ALL.to_vec(),
+        }
+    }
+
+    fn algorithms(&self, coll: Coll) -> Vec<&'static str> {
+        match coll {
+            Coll::Allreduce => {
+                vec!["linear", "recursive_doubling", "ring", "segmented_ring", "rabenseifner", "tree"]
+            }
+            // "binomial" is Open MPI's *internal* binomial (distance-doubling
+            // with staging, the slow one of Fig. 10)
+            Coll::Bcast => {
+                vec!["linear", "binomial", "knomial", "scatter_allgather", "pipeline"]
+            }
+            Coll::Reduce => vec!["linear", "binomial"],
+            Coll::Allgather => vec!["linear", "ring", "recursive_doubling", "bruck"],
+            Coll::ReduceScatter => vec!["ring", "recursive_halving", "pairwise"],
+            Coll::Alltoall => vec!["linear", "pairwise", "bruck"],
+            Coll::Gather | Coll::Scatter => vec!["linear", "binomial"],
+            Coll::Barrier => vec!["linear", "dissemination", "tree"],
+        }
+    }
+
+    /// Approximation of `ompi_coll_tuned_*_intra_dec_fixed`: thresholds on
+    /// message size and communicator size, blind to topology — which is
+    /// precisely why structured suboptimal regions appear (Fig. 6).
+    fn default_algorithm(&self, coll: Coll, p: usize, bytes: usize, _ppn: usize) -> &'static str {
+        match coll {
+            Coll::Allreduce => {
+                if bytes <= 10 * 1024 || p < 4 {
+                    "recursive_doubling"
+                } else {
+                    "ring"
+                }
+            }
+            Coll::Bcast => {
+                if bytes <= 2 * 1024 {
+                    "binomial"
+                } else if bytes <= 128 * 1024 {
+                    "scatter_allgather"
+                } else {
+                    "pipeline"
+                }
+            }
+            Coll::Reduce => "binomial",
+            Coll::Allgather => {
+                if bytes <= 64 * 1024 {
+                    "bruck"
+                } else if p.is_power_of_two() && bytes <= 512 * 1024 {
+                    "recursive_doubling"
+                } else {
+                    "ring"
+                }
+            }
+            Coll::ReduceScatter => {
+                if bytes <= 64 * 1024 && p.is_power_of_two() {
+                    "recursive_halving"
+                } else {
+                    "ring"
+                }
+            }
+            Coll::Alltoall => {
+                if bytes <= 4 * 1024 {
+                    "bruck"
+                } else {
+                    "pairwise"
+                }
+            }
+            Coll::Gather | Coll::Scatter => {
+                if bytes <= 32 * 1024 {
+                    "binomial"
+                } else {
+                    "linear"
+                }
+            }
+            Coll::Barrier => "tree",
+        }
+    }
+
+    fn apply_knob(&self, key: &str, value: &str, cfg: &mut NetConfig) -> KnobOutcome {
+        match key {
+            "max_rndv_rails" | "UCX_MAX_RNDV_RAILS" => match value.parse::<usize>() {
+                Ok(v) if v >= 1 => {
+                    cfg.max_rndv_rails = Some(v);
+                    KnobOutcome::Applied
+                }
+                _ => KnobOutcome::Invalid(format!("bad rail count {value:?}")),
+            },
+            "eager_max" | "UCX_RNDV_THRESH" => match crate::util::parse_size(value) {
+                Some(v) => {
+                    cfg.eager_max = Some(v);
+                    KnobOutcome::Applied
+                }
+                None => KnobOutcome::Invalid(format!("bad size {value:?}")),
+            },
+            "proto" | "NCCL_PROTO" => {
+                KnobOutcome::Unsupported("Open MPI has no LL/Simple protocol knob".into())
+            }
+            other => KnobOutcome::Unsupported(format!("unknown knob {other:?}")),
+        }
+    }
+
+    fn schedule(&self, coll: Coll, algo: &str, params: &GenParams) -> GenResult {
+        match (coll, algo) {
+            // the internal binomial: distance-doubling with staging copies
+            (Coll::Bcast, "binomial") => collectives::bcast::binomial_doubling_staged(params),
+            (c, a) => libpico(c, a, params),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cray MPICH 8.1-flavoured adapter
+// ---------------------------------------------------------------------------
+
+pub struct CrayMpichSim;
+
+impl Backend for CrayMpichSim {
+    fn name(&self) -> &'static str {
+        "craympich-sim"
+    }
+
+    fn version(&self) -> &'static str {
+        "8.1.29-sim"
+    }
+
+    fn caps(&self) -> Caps {
+        Caps {
+            algorithm_selection: true, // MPICH_*_INTRA_ALGORITHM
+            proto_selection: false,
+            rails_knob: false, // OFI path: rail knob not honoured
+            instrumentation: false,
+            collectives: Coll::ALL.to_vec(),
+        }
+    }
+
+    fn algorithms(&self, coll: Coll) -> Vec<&'static str> {
+        match coll {
+            Coll::Allreduce => vec!["recursive_doubling", "rabenseifner", "ring", "tree"],
+            Coll::Bcast => vec!["binomial_halving", "scatter_allgather", "pipeline"],
+            Coll::Reduce => vec!["linear", "binomial", "rabenseifner"],
+            Coll::Allgather => vec!["ring", "recursive_doubling", "bruck", "neighbor_exchange"],
+            Coll::ReduceScatter => vec!["ring", "recursive_halving", "pairwise"],
+            Coll::Alltoall => vec!["pairwise", "bruck"],
+            Coll::Gather | Coll::Scatter => vec!["linear", "binomial"],
+            Coll::Barrier => vec!["dissemination", "tree"],
+        }
+    }
+
+    /// MPICH selection: recursive doubling for short or non-power-of-two,
+    /// Rabenseifner for long power-of-two (allreduce); binomial (halving)
+    /// for short bcast, scatter+allgather beyond.
+    fn default_algorithm(&self, coll: Coll, p: usize, bytes: usize, _ppn: usize) -> &'static str {
+        match coll {
+            Coll::Allreduce => {
+                if bytes <= 2 * 1024 || !p.is_power_of_two() {
+                    "recursive_doubling"
+                } else {
+                    "rabenseifner"
+                }
+            }
+            Coll::Bcast => {
+                if bytes <= 12 * 1024 || p < 8 {
+                    "binomial_halving"
+                } else {
+                    "scatter_allgather"
+                }
+            }
+            Coll::Reduce => "binomial",
+            Coll::Allgather => {
+                if bytes <= 80 * 1024 && p.is_power_of_two() {
+                    "recursive_doubling"
+                } else if bytes <= 80 * 1024 {
+                    "bruck"
+                } else {
+                    "ring"
+                }
+            }
+            Coll::ReduceScatter => {
+                if bytes <= 512 * 1024 && p.is_power_of_two() {
+                    "recursive_halving"
+                } else {
+                    "ring"
+                }
+            }
+            Coll::Alltoall => {
+                if bytes <= 1024 {
+                    "bruck"
+                } else {
+                    "pairwise"
+                }
+            }
+            Coll::Gather | Coll::Scatter => "binomial",
+            Coll::Barrier => "dissemination",
+        }
+    }
+
+    fn apply_knob(&self, key: &str, value: &str, cfg: &mut NetConfig) -> KnobOutcome {
+        match key {
+            "eager_max" | "MPICH_OFI_EAGER_MAX" => match crate::util::parse_size(value) {
+                Some(v) => {
+                    cfg.eager_max = Some(v);
+                    KnobOutcome::Applied
+                }
+                None => KnobOutcome::Invalid(format!("bad size {value:?}")),
+            },
+            "max_rndv_rails" | "UCX_MAX_RNDV_RAILS" => {
+                KnobOutcome::Unsupported("Cray MPICH rides OFI: UCX rail knob ignored".into())
+            }
+            other => KnobOutcome::Unsupported(format!("unknown knob {other:?}")),
+        }
+    }
+
+    fn schedule(&self, coll: Coll, algo: &str, params: &GenParams) -> GenResult {
+        // constraint guards: degrade like MPICH does
+        if !params.p.is_power_of_two()
+            && matches!(algo, "recursive_halving" | "recursive_doubling")
+            && matches!(coll, Coll::ReduceScatter | Coll::Allgather)
+        {
+            return libpico(coll, "ring", params);
+        }
+        if coll == Coll::Allgather && algo == "neighbor_exchange" && params.p % 2 != 0 {
+            return libpico(coll, "ring", params);
+        }
+        if coll == Coll::Reduce
+            && algo == "rabenseifner"
+            && (!params.p.is_power_of_two() || params.root != 0 || params.count % params.p != 0)
+        {
+            return libpico(coll, "binomial", params);
+        }
+        libpico(coll, algo, params)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NCCL-flavoured adapter
+// ---------------------------------------------------------------------------
+
+/// `version_minor`: 22 = the paper's traced version (Ring/Tree only;
+/// ReduceScatter/Allgather are Ring-only); 23+ adds PAT.
+pub struct SimCcl {
+    pub version_minor: u32,
+}
+
+impl SimCcl {
+    fn has_pat(&self) -> bool {
+        self.version_minor >= 23
+    }
+}
+
+impl Backend for SimCcl {
+    fn name(&self) -> &'static str {
+        if self.has_pat() {
+            "simccl-2.23"
+        } else {
+            "simccl-2.22"
+        }
+    }
+
+    fn version(&self) -> &'static str {
+        if self.has_pat() {
+            "2.23-sim"
+        } else {
+            "2.22-sim"
+        }
+    }
+
+    fn caps(&self) -> Caps {
+        Caps {
+            algorithm_selection: true, // NCCL_ALGO
+            proto_selection: true,     // NCCL_PROTO
+            rails_knob: false,
+            instrumentation: false,
+            collectives: vec![
+                Coll::Allreduce,
+                Coll::Bcast,
+                Coll::Allgather,
+                Coll::ReduceScatter,
+                Coll::Alltoall,
+                Coll::Reduce,
+            ],
+        }
+    }
+
+    fn algorithms(&self, coll: Coll) -> Vec<&'static str> {
+        match coll {
+            Coll::Allreduce => vec!["ring", "tree"],
+            Coll::Bcast => vec!["ring", "tree"],
+            Coll::Allgather | Coll::ReduceScatter => {
+                if self.has_pat() {
+                    vec!["ring", "pat"]
+                } else {
+                    vec!["ring"]
+                }
+            }
+            Coll::Alltoall => vec!["pairwise"],
+            Coll::Reduce => vec!["tree"],
+            _ => vec![],
+        }
+    }
+
+    fn default_algorithm(&self, coll: Coll, p: usize, bytes: usize, _ppn: usize) -> &'static str {
+        match coll {
+            Coll::Allreduce | Coll::Bcast => {
+                // tree for latency-bound (small × many ranks), ring for bw
+                if bytes <= 256 * 1024 && p >= 8 {
+                    "tree"
+                } else {
+                    "ring"
+                }
+            }
+            Coll::Allgather | Coll::ReduceScatter => "ring",
+            Coll::Alltoall => "pairwise",
+            Coll::Reduce => "tree",
+            _ => "ring",
+        }
+    }
+
+    fn default_proto(&self, _coll: Coll, bytes: usize) -> Proto {
+        if bytes <= 16 * 1024 {
+            Proto::LL
+        } else {
+            Proto::Simple
+        }
+    }
+
+    fn mem_params(&self) -> Option<crate::netmodel::MemParams> {
+        Some(crate::netmodel::MemParams::gpu_hbm())
+    }
+
+    fn default_rails(&self) -> Option<usize> {
+        Some(usize::MAX) // one channel per NIC: use every rail
+    }
+
+    fn msg_overhead(&self) -> Option<f64> {
+        // proxy-thread hop + per-step chunk/flag machinery per transfer
+        Some(3.2e-6)
+    }
+
+    fn apply_knob(&self, key: &str, value: &str, cfg: &mut NetConfig) -> KnobOutcome {
+        match key {
+            "proto" | "NCCL_PROTO" => match value {
+                "LL" | "ll" => {
+                    cfg.proto = Proto::LL;
+                    KnobOutcome::Applied
+                }
+                "Simple" | "simple" => {
+                    cfg.proto = Proto::Simple;
+                    KnobOutcome::Applied
+                }
+                other => KnobOutcome::Invalid(format!("bad proto {other:?}")),
+            },
+            "max_rndv_rails" | "UCX_MAX_RNDV_RAILS" => {
+                KnobOutcome::Unsupported("NCCL transport ignores the UCX rail knob".into())
+            }
+            other => KnobOutcome::Unsupported(format!("unknown knob {other:?}")),
+        }
+    }
+
+    fn schedule(&self, coll: Coll, algo: &str, params: &GenParams) -> GenResult {
+        match (coll, algo) {
+            (Coll::Allreduce, "ring") => libpico(coll, "ring", params),
+            (Coll::Allreduce, "tree") => libpico(coll, "tree_pipelined", params),
+            (Coll::Bcast, "ring") => libpico(coll, "pipeline", params),
+            (Coll::Bcast, "tree") => libpico(coll, "binomial_halving", params),
+            (Coll::Allgather, "pat") if self.has_pat() => libpico(coll, "pat", params),
+            (Coll::ReduceScatter, "pat") if self.has_pat() => libpico(coll, "pat", params),
+            (Coll::Allgather, "ring") | (Coll::ReduceScatter, "ring") => {
+                libpico(coll, "ring", params)
+            }
+            (Coll::Alltoall, "pairwise") => libpico(coll, "pairwise", params),
+            (Coll::Reduce, "tree") => libpico(coll, "binomial", params),
+            (c, a) => Err(format!("{} does not implement {}:{a}", self.name(), c.label())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        for n in ["openmpi", "craympich", "simccl", "simccl-2.23"] {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert!(by_name("mvapich").is_none());
+    }
+
+    #[test]
+    fn defaults_are_exposed_choices() {
+        for b in all_backends() {
+            for coll in Coll::ALL {
+                let algos = b.algorithms(coll);
+                if algos.is_empty() {
+                    continue;
+                }
+                for p in [2usize, 8, 64] {
+                    for bytes in [64usize, 1 << 20, 512 << 20] {
+                        let d = b.default_algorithm(coll, p, bytes, 4);
+                        assert!(
+                            algos.contains(&d),
+                            "{}: default {d} for {coll:?} not exposed",
+                            b.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn defaults_generate_valid_schedules() {
+        for b in all_backends() {
+            for coll in Coll::ALL {
+                if b.algorithms(coll).is_empty() {
+                    continue;
+                }
+                let p = 8;
+                let count = 64;
+                let d = b.default_algorithm(coll, p, count * 4, 1);
+                let g = b.schedule(coll, d, &GenParams::new(p, count)).unwrap();
+                assert_eq!(g.validate(), Ok(()), "{} {coll:?} {d}", b.name());
+            }
+        }
+    }
+
+    #[test]
+    fn pat_gated_by_version() {
+        let old = SimCcl { version_minor: 22 };
+        let new = SimCcl { version_minor: 23 };
+        assert!(!old.algorithms(Coll::Allgather).contains(&"pat"));
+        assert!(new.algorithms(Coll::Allgather).contains(&"pat"));
+    }
+
+    #[test]
+    fn knob_degradation_is_graceful() {
+        let mut cfg = NetConfig::default();
+        let o = OpenMpiSim.apply_knob("max_rndv_rails", "4", &mut cfg);
+        assert_eq!(o, KnobOutcome::Applied);
+        assert_eq!(cfg.max_rndv_rails, Some(4));
+        let c = CrayMpichSim.apply_knob("max_rndv_rails", "4", &mut cfg);
+        assert!(matches!(c, KnobOutcome::Unsupported(_)));
+        let bad = OpenMpiSim.apply_knob("max_rndv_rails", "zero", &mut cfg);
+        assert!(matches!(bad, KnobOutcome::Invalid(_)));
+    }
+
+    #[test]
+    fn nccl_proto_knob() {
+        let b = SimCcl { version_minor: 22 };
+        let mut cfg = NetConfig::default();
+        assert_eq!(b.apply_knob("NCCL_PROTO", "LL", &mut cfg), KnobOutcome::Applied);
+        assert_eq!(cfg.proto, Proto::LL);
+        assert_eq!(b.default_proto(Coll::Allreduce, 512), Proto::LL);
+        assert_eq!(b.default_proto(Coll::Allreduce, 1 << 20), Proto::Simple);
+    }
+
+    #[test]
+    fn schedule_effective_falls_back() {
+        let b = OpenMpiSim;
+        let params = GenParams::new(8, 64);
+        let (_, used) =
+            schedule_effective(&b, Coll::Allreduce, Some("nope"), &params, 1).unwrap();
+        assert_eq!(used, b.default_algorithm(Coll::Allreduce, 8, 256, 1));
+    }
+
+    #[test]
+    fn ompi_internal_binomial_is_staged() {
+        // the Fig. 10 inefficiency: extra copies per hop vs the clean port
+        let p = GenParams::new(8, 1024);
+        let internal = OpenMpiSim.schedule(Coll::Bcast, "binomial", &p).unwrap();
+        let clean = collectives::generate(Coll::Bcast, "binomial_doubling", &p).unwrap();
+        let copies = |g: &Goal| {
+            g.ranks
+                .iter()
+                .flat_map(|r| r.ops.iter())
+                .filter(|o| matches!(o.kind, crate::goal::OpKind::Copy { .. }))
+                .count()
+        };
+        assert!(copies(&internal) > copies(&clean));
+    }
+}

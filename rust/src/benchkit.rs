@@ -1,0 +1,71 @@
+//! Shared harness for the figure/table benches and examples.
+//!
+//! The offline environment vendors no criterion, so the crate carries its
+//! own small measurement kit: warmup + timed repetitions with robust
+//! statistics, and a consistent report format (`name  median ± spread`)
+//! that `cargo bench` emits for every paper figure/table target.
+
+use std::time::Instant;
+
+use crate::util::Stats;
+
+/// Measure a closure: `warmup` unmeasured runs, then `reps` timed ones.
+pub fn measure<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(&samples)
+}
+
+/// criterion-style one-liner.
+pub fn report(name: &str, s: &Stats) {
+    println!(
+        "bench: {name:<44} median {:>12} (p25 {:>12}, p75 {:>12}, n={})",
+        crate::util::fmt_time(s.median),
+        crate::util::fmt_time(s.p25),
+        crate::util::fmt_time(s.p75),
+        s.n
+    );
+}
+
+/// Measure + report + return median seconds.
+pub fn bench<T>(name: &str, warmup: usize, reps: usize, f: impl FnMut() -> T) -> f64 {
+    let s = measure(warmup, reps, f);
+    report(name, &s);
+    s.median
+}
+
+/// Throughput report helper (events/sec style).
+pub fn report_rate(name: &str, items: usize, seconds: f64) {
+    println!(
+        "bench: {name:<44} {:>12.0} /s ({} items in {})",
+        items as f64 / seconds,
+        items,
+        crate::util::fmt_time(seconds)
+    );
+}
+
+/// Section header so bench output reads like the paper's figures.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_reps() {
+        let mut n = 0;
+        let s = measure(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(s.n, 5);
+        assert!(s.median >= 0.0);
+    }
+}

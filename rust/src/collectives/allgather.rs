@@ -1,0 +1,386 @@
+//! Allgather reference algorithms.
+//!
+//! Convention: `count` is the *total* output size; rank r contributes
+//! `Input[0..c_r]` with `(off_r, c_r) = chunk(count, p, r)` and every rank
+//! ends with `Output[off_k..]` = rank k's chunk for all k.
+//!
+//! `bruck`, `recursive_doubling` and `pat` require uniform blocks
+//! (`count % p == 0`); `ring` and `linear` accept any shape.
+
+use crate::goal::Seg;
+
+use super::builder::{chunk, GoalBuilder};
+use super::{GenParams, GenResult};
+
+fn own_init(b: &mut GoalBuilder, p: usize, n: usize, instrument: bool) {
+    for rank in 0..p {
+        let (off, len) = chunk(n, p, rank);
+        if instrument {
+            b.tag_begin(rank, "init:mem-move");
+        }
+        b.copy(rank, Seg::output(off, len), Seg::input(0, len));
+        if instrument {
+            b.tag_end(rank, "init:mem-move");
+        }
+    }
+}
+
+/// Naive direct exchange: every rank sends its chunk to every other rank.
+pub fn linear(params: &GenParams) -> GenResult {
+    let (p, n) = (params.p, params.count);
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(params.instrument);
+    own_init(&mut b, p, n, params.instrument);
+    for rank in 0..p {
+        for s in 1..p {
+            let to = (rank + s) % p;
+            let from = (rank + p - s) % p;
+            let (own_off, own_len) = chunk(n, p, rank);
+            let (f_off, f_len) = chunk(n, p, from);
+            let _ = own_off;
+            b.sendrecv_tagged(
+                rank,
+                to,
+                Seg::input(0, own_len),
+                from,
+                Seg::output(f_off, f_len),
+                s as u32,
+                s as u32,
+            );
+        }
+    }
+    Ok(b.finish())
+}
+
+/// Ring allgather: p−1 neighbor steps, bandwidth-optimal.
+pub fn ring(params: &GenParams) -> GenResult {
+    let (p, n) = (params.p, params.count);
+    let inst = params.instrument;
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
+    own_init(&mut b, p, n, inst);
+    if p == 1 {
+        return Ok(b.finish());
+    }
+    for rank in 0..p {
+        if inst {
+            b.tag_begin(rank, "phase:ring");
+        }
+        let next = (rank + 1) % p;
+        let prev = (rank + p - 1) % p;
+        for s in 0..p - 1 {
+            let send_c = (rank + p - s) % p;
+            let recv_c = (rank + p - s - 1) % p;
+            let (soff, slen) = chunk(n, p, send_c);
+            let (roff, rlen) = chunk(n, p, recv_c);
+            if inst {
+                b.tag_begin(rank, &format!("ring:comm:{s}"));
+            }
+            b.sendrecv_tagged(
+                rank,
+                next,
+                Seg::output(soff, slen),
+                prev,
+                Seg::output(roff, rlen),
+                s as u32,
+                s as u32,
+            );
+            if inst {
+                b.tag_end(rank, &format!("ring:comm:{s}"));
+            }
+        }
+        if inst {
+            b.tag_end(rank, "phase:ring");
+        }
+    }
+    Ok(b.finish())
+}
+
+/// Recursive doubling (power-of-two ranks, uniform blocks): log₂ p
+/// exchange steps, doubling the gathered range each time.
+pub fn recursive_doubling(params: &GenParams) -> GenResult {
+    let (p, n) = (params.p, params.count);
+    if n % p != 0 {
+        return Err(format!("recursive_doubling allgather needs count % p == 0 (count={n}, p={p})"));
+    }
+    let c = n / p;
+    let inst = params.instrument;
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
+    own_init(&mut b, p, n, inst);
+    for rank in 0..p {
+        if inst {
+            b.tag_begin(rank, "phase:doubling");
+        }
+        let mut mask = 1usize;
+        let mut step = 0u32;
+        while mask < p {
+            let partner = rank ^ mask;
+            // after k steps each rank owns the 2^k chunks whose indices
+            // share its high bits: [rank & !(mask−1), +mask)
+            let my_start = rank & !(mask - 1);
+            let pt_start = partner & !(mask - 1);
+            b.sendrecv_tagged(
+                rank,
+                partner,
+                Seg::output(my_start * c, mask * c),
+                partner,
+                Seg::output(pt_start * c, mask * c),
+                step,
+                step,
+            );
+            mask <<= 1;
+            step += 1;
+        }
+        if inst {
+            b.tag_end(rank, "phase:doubling");
+        }
+    }
+    Ok(b.finish())
+}
+
+/// Bruck allgather: ⌈log₂ p⌉ steps for any p, at the cost of a final
+/// local rotation (extra data movement — the classic Bruck trade-off,
+/// visible in instrumented runs as a large `final:mem-move` region).
+pub fn bruck(params: &GenParams) -> GenResult {
+    let (p, n) = (params.p, params.count);
+    if n % p != 0 {
+        return Err(format!("bruck allgather needs count % p == 0 (count={n}, p={p})"));
+    }
+    let c = n / p;
+    let inst = params.instrument;
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
+    // Tmp[0..n): accumulation in *relative* order — Tmp[i·c] holds the
+    // chunk of rank (rank + i) mod p.
+    for rank in 0..p {
+        if inst {
+            b.tag_begin(rank, "init:mem-move");
+        }
+        b.copy(rank, Seg::tmp(0, c), Seg::input(0, c));
+        if inst {
+            b.tag_end(rank, "init:mem-move");
+            b.tag_begin(rank, "phase:bruck");
+        }
+        let mut have = 1usize; // blocks accumulated
+        let mut step = 0u32;
+        while have < p {
+            let send_cnt = have.min(p - have);
+            let to = (rank + p - have) % p; // send to rank - have
+            let from = (rank + have) % p;
+            b.sendrecv_tagged(
+                rank,
+                to,
+                Seg::tmp(0, send_cnt * c),
+                from,
+                Seg::tmp(have * c, send_cnt * c),
+                step,
+                step,
+            );
+            have += send_cnt;
+            step += 1;
+        }
+        if inst {
+            b.tag_end(rank, "phase:bruck");
+            b.tag_begin(rank, "final:mem-move");
+        }
+        // un-rotate: Output[((rank + i) mod p)·c] = Tmp[i·c]
+        for i in 0..p {
+            let dst = ((rank + i) % p) * c;
+            b.copy(rank, Seg::output(dst, c), Seg::tmp(i * c, c));
+        }
+        if inst {
+            b.tag_end(rank, "final:mem-move");
+        }
+    }
+    Ok(b.finish())
+}
+
+/// NCCL PAT-style binomial butterfly allgather with *locality-aware
+/// partner ordering* (power-of-two ranks, uniform blocks).
+///
+/// Standard recursive doubling exchanges its largest accumulated ranges
+/// with its most *distant* partners (mask ascending), flooding inter-node
+/// links in the late rounds.  PAT flips the order (mask descending,
+/// distance halving): the first, smallest exchange goes far; the final,
+/// largest exchange is with the rank-distance-1 partner — intra-node under
+/// block placement.  Same ⌈log₂ p⌉ steps and total volume, radically less
+/// inter-node traffic; this is what makes Fig. 12's optimized profiles win
+/// at L16/L128 message sizes.
+///
+/// Accumulated blocks are kept *compacted* in Tmp (Bruck-style) so every
+/// send is one contiguous region; a final unpack copies blocks into place.
+pub fn pat(params: &GenParams) -> GenResult {
+    let (p, n) = (params.p, params.count);
+    if !p.is_power_of_two() {
+        return Err(format!("pat allgather needs power-of-two p, got {p}"));
+    }
+    if n % p != 0 {
+        return Err(format!("pat allgather needs count % p == 0 (count={n}, p={p})"));
+    }
+    let c = n / p;
+    let inst = params.instrument;
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
+    for rank in 0..p {
+        if inst {
+            b.tag_begin(rank, "init:mem-move");
+        }
+        b.copy(rank, Seg::tmp(0, c), Seg::input(0, c));
+        if inst {
+            b.tag_end(rank, "init:mem-move");
+            b.tag_begin(rank, "phase:pat");
+        }
+        // owned block ids, in Tmp compaction order
+        let mut owned: Vec<usize> = vec![rank];
+        let mut mask = p / 2;
+        let mut step = 0u32;
+        while mask >= 1 {
+            let partner = rank ^ mask;
+            let have = owned.len();
+            b.sendrecv_tagged(
+                rank,
+                partner,
+                Seg::tmp(0, have * c),
+                partner,
+                Seg::tmp(have * c, have * c),
+                step,
+                step,
+            );
+            let mirrored: Vec<usize> = owned.iter().map(|&blk| blk ^ mask).collect();
+            owned.extend(mirrored);
+            mask /= 2;
+            step += 1;
+        }
+        if inst {
+            b.tag_end(rank, "phase:pat");
+            b.tag_begin(rank, "final:mem-move");
+        }
+        for (i, &blk) in owned.iter().enumerate() {
+            b.copy(rank, Seg::output(blk * c, c), Seg::tmp(i * c, c));
+        }
+        if inst {
+            b.tag_end(rank, "final:mem-move");
+        }
+    }
+    Ok(b.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_validate() {
+        for p in [1usize, 2, 3, 4, 5, 8, 12] {
+            let n = p * 8;
+            for (name, gen) in [
+                ("linear", linear as super::super::Generator),
+                ("ring", ring),
+                ("bruck", bruck),
+            ] {
+                let g = gen(&GenParams::new(p, n)).unwrap();
+                assert_eq!(g.validate(), Ok(()), "{name} p={p}");
+            }
+        }
+        for p in [1usize, 2, 4, 8, 16] {
+            let g = recursive_doubling(&GenParams::new(p, p * 8)).unwrap();
+            assert_eq!(g.validate(), Ok(()));
+        }
+    }
+
+    #[test]
+    fn bruck_rejects_uneven() {
+        assert!(bruck(&GenParams::new(3, 10)).is_err());
+        assert!(recursive_doubling(&GenParams::new(4, 10)).is_err());
+    }
+
+    #[test]
+    fn ring_volume() {
+        let p = 6;
+        let n = 60;
+        let g = ring(&GenParams::new(p, n)).unwrap();
+        // (p−1)·n/p per rank → (p−1)·n total elements
+        assert_eq!(g.total_wire_bytes(), (p - 1) * n * 4);
+    }
+
+    #[test]
+    fn bruck_log_steps() {
+        let g = bruck(&GenParams::new(12, 24)).unwrap();
+        let sends = g.ranks[0]
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, crate::goal::OpKind::Send { .. }))
+            .count();
+        assert_eq!(sends, 4); // ceil(log2 12)
+    }
+}
+
+/// MPICH neighbor-exchange allgather (even rank counts): p/2 steps with an
+/// alternating left/right partner, forwarding the two blocks acquired in
+/// the previous step.  Half the steps of ring at double the per-step
+/// volume, with strictly nearest-neighbor traffic.
+pub fn neighbor_exchange(params: &GenParams) -> GenResult {
+    let (p, n) = (params.p, params.count);
+    if p % 2 != 0 {
+        return Err(format!("neighbor_exchange needs an even rank count, got {p}"));
+    }
+    if n % p != 0 {
+        return Err(format!("neighbor_exchange needs count % p == 0 (count={n}, p={p})"));
+    }
+    let c = n / p;
+    let inst = params.instrument;
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
+    // generator-side global state: blocks each rank acquired last step
+    let mut last: Vec<Vec<usize>> = (0..p).map(|r| vec![r]).collect();
+    for rank in 0..p {
+        b.copy(rank, Seg::output(rank * c, c), Seg::input(0, c));
+        if inst {
+            b.tag_begin(rank, "phase:neighbor");
+        }
+    }
+    for s in 0..p / 2 {
+        // partner: even ranks go right on even steps, left on odd; odd
+        // ranks mirror — so pairs are disjoint every step
+        let partner = |r: usize| -> usize {
+            let right = (r + 1) % p;
+            let left = (r + p - 1) % p;
+            if r % 2 == 0 {
+                if s % 2 == 0 {
+                    right
+                } else {
+                    left
+                }
+            } else if s % 2 == 0 {
+                left
+            } else {
+                right
+            }
+        };
+        let mut next: Vec<Vec<usize>> = vec![Vec::new(); p];
+        for rank in 0..p {
+            let q = partner(rank);
+            debug_assert_eq!(partner(q), rank, "pairing must be symmetric");
+            // exchange block lists block-by-block (blocks may wrap, so one
+            // message per block keeps segments contiguous)
+            let mine = last[rank].clone();
+            let theirs = last[q].clone();
+            for (bi, (&sb, &rb)) in mine.iter().zip(theirs.iter()).enumerate() {
+                b.sendrecv_tagged(
+                    rank,
+                    q,
+                    Seg::output(sb * c, c),
+                    q,
+                    Seg::output(rb * c, c),
+                    (s * 2 + bi) as u32,
+                    (s * 2 + bi) as u32,
+                );
+            }
+            // MPICH rule: step 1 forwards {own, block received in step 0};
+            // later steps forward exactly the two blocks just received.
+            next[rank] = if s == 0 { vec![rank, theirs[0]] } else { theirs };
+        }
+        last = next;
+    }
+    for rank in 0..p {
+        if inst {
+            b.tag_end(rank, "phase:neighbor");
+        }
+    }
+    Ok(b.finish())
+}

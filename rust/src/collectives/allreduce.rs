@@ -1,0 +1,579 @@
+//! Allreduce reference algorithms (libpico ports).
+//!
+//! All operators are commutative (Sum/Prod/Max/Min), so the generators use
+//! the commutative variants of the classic schedules.  Non-power-of-two
+//! rank counts use the MPICH fold/unfold adjustment: the first `2r` ranks
+//! (r = p − 2^⌊log₂p⌋) pair up, even ranks fold their contribution into odd
+//! ranks, the surviving 2^⌊log₂p⌋ "participants" run the power-of-two
+//! schedule, and results are unfolded at the end.
+
+use crate::goal::{ReduceOp, Seg};
+
+use super::builder::{chunk, GoalBuilder};
+use super::{GenParams, GenResult};
+
+/// Largest power of two ≤ p and the fold remainder r.
+fn pow2_split(p: usize) -> (usize, usize) {
+    let l = if p.is_power_of_two() { p } else { p.next_power_of_two() / 2 };
+    (l, p - l)
+}
+
+/// vrank of a participant, or None for folded-away even ranks.
+fn vrank(rank: usize, r: usize) -> Option<usize> {
+    if rank < 2 * r {
+        if rank % 2 == 0 {
+            None
+        } else {
+            Some(rank / 2)
+        }
+    } else {
+        Some(rank - r)
+    }
+}
+
+/// Inverse of [`vrank`].
+fn unvrank(v: usize, r: usize) -> usize {
+    if v < r {
+        2 * v + 1
+    } else {
+        v + r
+    }
+}
+
+/// Emit the fold pre-phase; returns each rank's vrank.
+fn emit_fold(b: &mut GoalBuilder, _p: usize, r: usize, n: usize, op: ReduceOp) {
+    for rank in 0..2 * r {
+        if rank % 2 == 0 {
+            b.send(rank, rank + 1, Seg::output(0, n));
+        } else {
+            b.recv(rank, rank - 1, Seg::tmp(0, n));
+            b.reduce_local(rank, Seg::output(0, n), Seg::tmp(0, n), op);
+        }
+    }
+}
+
+/// Emit the unfold post-phase (participants return the final result).
+fn emit_unfold(b: &mut GoalBuilder, r: usize, n: usize) {
+    for rank in 0..2 * r {
+        if rank % 2 == 0 {
+            b.recv(rank, rank + 1, Seg::output(0, n));
+        } else {
+            b.send(rank, rank - 1, Seg::output(0, n));
+        }
+    }
+}
+
+/// Every rank starts by staging its contribution into the work buffer
+/// (Fig. 5's `init:mem-move` region).
+fn emit_init(b: &mut GoalBuilder, p: usize, n: usize, instrument: bool) {
+    for rank in 0..p {
+        if instrument {
+            b.tag_begin(rank, "init:mem-move");
+        }
+        b.copy(rank, Seg::output(0, n), Seg::input(0, n));
+        if instrument {
+            b.tag_end(rank, "init:mem-move");
+        }
+    }
+}
+
+/// Basic linear allreduce: everyone sends to rank 0, which reduces and
+/// broadcasts back linearly (Open MPI "basic" module behaviour).
+pub fn linear(params: &GenParams) -> GenResult {
+    let (p, n, op) = (params.p, params.count, params.op);
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(params.instrument);
+    emit_init(&mut b, p, n, params.instrument);
+    for rank in 1..p {
+        b.send(rank, 0, Seg::output(0, n));
+        b.recv(rank, 0, Seg::output(0, n));
+    }
+    for src in 1..p {
+        b.recv(0, src, Seg::tmp(0, n));
+        b.reduce_local(0, Seg::output(0, n), Seg::tmp(0, n), op);
+    }
+    for dst in 1..p {
+        b.send(0, dst, Seg::output(0, n));
+    }
+    Ok(b.finish())
+}
+
+/// Recursive doubling: log₂(p′) full-buffer exchange+reduce steps.
+pub fn recursive_doubling(params: &GenParams) -> GenResult {
+    let (p, n, op) = (params.p, params.count, params.op);
+    let (l, r) = pow2_split(p);
+    let inst = params.instrument;
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
+    emit_init(&mut b, p, n, inst);
+    emit_fold(&mut b, p, r, n, op);
+    for rank in 0..p {
+        let Some(v) = vrank(rank, r) else { continue };
+        if inst {
+            b.tag_begin(rank, "phase:exchange");
+        }
+        let mut mask = 1usize;
+        let mut step = 0;
+        while mask < l {
+            let partner = unvrank(v ^ mask, r);
+            if inst {
+                b.tag_begin(rank, &format!("exchange:comm:{step}"));
+            }
+            b.sendrecv_tagged(
+                rank,
+                partner,
+                Seg::output(0, n),
+                partner,
+                Seg::tmp(0, n),
+                step as u32,
+                step as u32,
+            );
+            if inst {
+                b.tag_end(rank, &format!("exchange:comm:{step}"));
+                b.tag_begin(rank, &format!("exchange:reduction:{step}"));
+            }
+            b.reduce_local(rank, Seg::output(0, n), Seg::tmp(0, n), op);
+            if inst {
+                b.tag_end(rank, &format!("exchange:reduction:{step}"));
+            }
+            mask <<= 1;
+            step += 1;
+        }
+        if inst {
+            b.tag_end(rank, "phase:exchange");
+        }
+    }
+    emit_unfold(&mut b, r, n);
+    Ok(b.finish())
+}
+
+/// Ring allreduce: reduce-scatter ring + allgather ring; bandwidth-optimal
+/// 2·(p−1)/p·n volume per rank, works for any p with uneven chunks.
+pub fn ring(params: &GenParams) -> GenResult {
+    let (p, n, op) = (params.p, params.count, params.op);
+    let inst = params.instrument;
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
+    emit_init(&mut b, p, n, inst);
+    if p == 1 {
+        return Ok(b.finish());
+    }
+    let next = |r: usize| (r + 1) % p;
+    let prev = |r: usize| (r + p - 1) % p;
+    for rank in 0..p {
+        if inst {
+            b.tag_begin(rank, "phase:redscat");
+        }
+        for s in 0..p - 1 {
+            let send_c = (rank + p - s) % p;
+            let recv_c = (rank + p - s - 1) % p;
+            let (soff, slen) = chunk(n, p, send_c);
+            let (roff, rlen) = chunk(n, p, recv_c);
+            if inst {
+                b.tag_begin(rank, &format!("redscat:comm:{s}"));
+            }
+            b.sendrecv_tagged(
+                rank,
+                next(rank),
+                Seg::output(soff, slen),
+                prev(rank),
+                Seg::tmp(roff, rlen),
+                s as u32,
+                s as u32,
+            );
+            if inst {
+                b.tag_end(rank, &format!("redscat:comm:{s}"));
+                b.tag_begin(rank, &format!("redscat:reduction:{s}"));
+            }
+            b.reduce_local(rank, Seg::output(roff, rlen), Seg::tmp(roff, rlen), op);
+            if inst {
+                b.tag_end(rank, &format!("redscat:reduction:{s}"));
+            }
+        }
+        if inst {
+            b.tag_end(rank, "phase:redscat");
+            b.tag_begin(rank, "phase:allgather");
+        }
+        for s in 0..p - 1 {
+            let send_c = (rank + 1 + p - s) % p;
+            let recv_c = (rank + p - s) % p;
+            let (soff, slen) = chunk(n, p, send_c);
+            let (roff, rlen) = chunk(n, p, recv_c);
+            if inst {
+                b.tag_begin(rank, &format!("allgather:comm:{s}"));
+            }
+            b.sendrecv_tagged(
+                rank,
+                next(rank),
+                Seg::output(soff, slen),
+                prev(rank),
+                Seg::output(roff, rlen),
+                (p + s) as u32,
+                (p + s) as u32,
+            );
+            if inst {
+                b.tag_end(rank, &format!("allgather:comm:{s}"));
+            }
+        }
+        if inst {
+            b.tag_end(rank, "phase:allgather");
+        }
+    }
+    Ok(b.finish())
+}
+
+/// Byte range owned by participant v after `k` halving steps.
+fn rs_range(v: usize, k: usize, l: usize, n: usize) -> (usize, usize) {
+    let (mut lo, mut hi) = (0usize, n);
+    for j in 0..k {
+        let mask = l >> (j + 1);
+        let mid = lo + (hi - lo) / 2;
+        if v & mask == 0 {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    (lo, hi)
+}
+
+/// Rabenseifner allreduce: recursive-halving reduce-scatter followed by
+/// recursive-doubling allgather — the instrumented exemplar of Fig. 5/11.
+pub fn rabenseifner(params: &GenParams) -> GenResult {
+    let (p, n, op) = (params.p, params.count, params.op);
+    let (l, r) = pow2_split(p);
+    let inst = params.instrument;
+    let steps = l.trailing_zeros() as usize;
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
+    emit_init(&mut b, p, n, inst);
+    emit_fold(&mut b, p, r, n, op);
+    for rank in 0..p {
+        let Some(v) = vrank(rank, r) else { continue };
+        // --- reduce-scatter by recursive halving ---
+        if inst {
+            b.tag_begin(rank, "phase:redscat");
+        }
+        for j in 0..steps {
+            let mask = l >> (j + 1);
+            let pv = v ^ mask;
+            let partner = unvrank(pv, r);
+            let (mlo, mhi) = rs_range(v, j + 1, l, n);
+            let (plo, phi) = rs_range(pv, j + 1, l, n);
+            if inst {
+                b.tag_begin(rank, &format!("redscat:comm:{j}"));
+            }
+            b.sendrecv_tagged(
+                rank,
+                partner,
+                Seg::output(plo, phi - plo),
+                partner,
+                Seg::tmp(mlo, mhi - mlo),
+                j as u32,
+                j as u32,
+            );
+            if inst {
+                b.tag_end(rank, &format!("redscat:comm:{j}"));
+                b.tag_begin(rank, &format!("redscat:reduction:{j}"));
+            }
+            b.reduce_local(rank, Seg::output(mlo, mhi - mlo), Seg::tmp(mlo, mhi - mlo), op);
+            if inst {
+                b.tag_end(rank, &format!("redscat:reduction:{j}"));
+            }
+        }
+        if inst {
+            b.tag_end(rank, "phase:redscat");
+            b.tag_begin(rank, "phase:allgather");
+        }
+        // --- allgather by recursive doubling (reverse the halving) ---
+        for j in (0..steps).rev() {
+            let mask = l >> (j + 1);
+            let pv = v ^ mask;
+            let partner = unvrank(pv, r);
+            let (mlo, mhi) = rs_range(v, j + 1, l, n);
+            let (plo, phi) = rs_range(pv, j + 1, l, n);
+            if inst {
+                b.tag_begin(rank, &format!("allgather:comm:{}", steps - 1 - j));
+            }
+            b.sendrecv_tagged(
+                rank,
+                partner,
+                Seg::output(mlo, mhi - mlo),
+                partner,
+                Seg::output(plo, phi - plo),
+                (steps + j) as u32,
+                (steps + j) as u32,
+            );
+            if inst {
+                b.tag_end(rank, &format!("allgather:comm:{}", steps - 1 - j));
+            }
+        }
+        if inst {
+            b.tag_end(rank, "phase:allgather");
+        }
+    }
+    emit_unfold(&mut b, r, n);
+    Ok(b.finish())
+}
+
+/// Binomial-tree allreduce: reduce to rank 0, then distance-doubling bcast.
+pub fn tree(params: &GenParams) -> GenResult {
+    tree_segmented(params, params.count.max(1))
+}
+
+/// NCCL-style segmented tree: the message is cut into segments that flow
+/// up and down the binomial tree in a pipeline, recovering bandwidth at
+/// large sizes while keeping the log-depth latency at small ones.
+pub fn tree_pipelined(params: &GenParams) -> GenResult {
+    let seg = params.segsize.unwrap_or_else(|| (params.count / 8).clamp(1024, 262_144));
+    tree_segmented(params, seg.max(1))
+}
+
+fn tree_segmented(params: &GenParams, segsize: usize) -> GenResult {
+    let (p, n, op) = (params.p, params.count, params.op);
+    let inst = params.instrument;
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
+    emit_init(&mut b, p, n, inst);
+    if p == 1 {
+        return Ok(b.finish());
+    }
+    let nseg = n.div_ceil(segsize).max(1);
+    let seg_bounds: Vec<(usize, usize)> = (0..nseg).map(|s| chunk(n, nseg, s)).collect();
+    let levels = usize::BITS as usize - (p - 1).leading_zeros() as usize; // ceil(log2 p)
+    for rank in 0..p {
+        // Per segment: reduce up the binomial tree, then broadcast down.
+        // Segments flow independently, so different tree levels work on
+        // different segments concurrently (the NCCL pipelining effect).
+        for (s, &(off, len)) in seg_bounds.iter().enumerate() {
+            let up_tag = s as u32;
+            let down_tag = (nseg + s) as u32;
+            if inst {
+                b.tag_begin(rank, &format!("seg:{s}:reduce"));
+            }
+            // receive from children in increasing distance order
+            for k in 0..levels {
+                let d = 1usize << k;
+                if rank % (2 * d) == 0 && rank + d < p {
+                    b.recv_tagged(rank, rank + d, Seg::tmp(off, len), up_tag);
+                    b.reduce_local(rank, Seg::output(off, len), Seg::tmp(off, len), op);
+                }
+            }
+            if rank != 0 {
+                b.send_tagged(rank, rank - (1 << rank.trailing_zeros()), Seg::output(off, len), up_tag);
+            }
+            if inst {
+                b.tag_end(rank, &format!("seg:{s}:reduce"));
+                b.tag_begin(rank, &format!("seg:{s}:bcast"));
+            }
+            // distance-doubling binomial broadcast from rank 0
+            if rank != 0 {
+                let kv = usize::BITS as usize - 1 - rank.leading_zeros() as usize;
+                b.recv_tagged(rank, rank - (1 << kv), Seg::output(off, len), down_tag);
+                for k in kv + 1..levels {
+                    if rank + (1 << k) < p {
+                        b.send_tagged(rank, rank + (1 << k), Seg::output(off, len), down_tag);
+                    }
+                }
+            } else {
+                for k in 0..levels {
+                    if (1usize << k) < p {
+                        b.send_tagged(rank, 1 << k, Seg::output(off, len), down_tag);
+                    }
+                }
+            }
+            if inst {
+                b.tag_end(rank, &format!("seg:{s}:bcast"));
+            }
+        }
+    }
+    Ok(b.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_split_math() {
+        assert_eq!(pow2_split(8), (8, 0));
+        assert_eq!(pow2_split(6), (4, 2));
+        assert_eq!(pow2_split(1), (1, 0));
+        assert_eq!(pow2_split(129), (128, 1));
+    }
+
+    #[test]
+    fn vrank_round_trips() {
+        for p in [3usize, 5, 6, 7, 12, 100] {
+            let (_, r) = pow2_split(p);
+            for rank in 0..p {
+                if let Some(v) = vrank(rank, r) {
+                    assert_eq!(unvrank(v, r), rank, "p={p} rank={rank}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rs_ranges_partition() {
+        let (l, n) = (8usize, 100usize);
+        let steps = 3;
+        let mut seen = vec![false; n];
+        for v in 0..l {
+            let (lo, hi) = rs_range(v, steps, l, n);
+            for x in lo..hi {
+                assert!(!seen[x], "overlap at {x}");
+                seen[x] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "ranges must cover [0,n)");
+    }
+
+    #[test]
+    fn generators_validate_structurally() {
+        for p in [1usize, 2, 3, 4, 5, 8, 13, 16] {
+            for gen in [linear, recursive_doubling, ring, rabenseifner, tree, tree_pipelined] {
+                let g = gen(&GenParams::new(p, 64)).unwrap();
+                assert_eq!(g.validate(), Ok(()), "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_wire_volume_is_bandwidth_optimal() {
+        let p = 8;
+        let n = 800;
+        let g = ring(&GenParams::new(p, n)).unwrap();
+        // 2·(p−1)·n/p per rank → total 2·(p−1)·n elements · 4 B
+        assert_eq!(g.total_wire_bytes(), 2 * (p - 1) * n * 4);
+    }
+
+    #[test]
+    fn instrumentation_emits_fig5_regions() {
+        let g = rabenseifner(&GenParams::new(8, 64).instrumented()).unwrap();
+        let names: Vec<_> = g.ranks[0].tags.iter().map(|t| t.name.as_str()).collect();
+        assert!(names.contains(&"init:mem-move"));
+        assert!(names.contains(&"phase:redscat"));
+        assert!(names.contains(&"phase:allgather"));
+        assert!(names.iter().any(|n| n.starts_with("redscat:comm")));
+        assert!(names.iter().any(|n| n.starts_with("redscat:reduction")));
+    }
+
+    #[test]
+    fn uninstrumented_goal_has_no_tags() {
+        let g = rabenseifner(&GenParams::new(8, 64)).unwrap();
+        assert!(g.ranks.iter().all(|r| r.tags.is_empty()));
+    }
+}
+
+/// Segmented ring allreduce (Open MPI `coll_tuned` large-message default):
+/// each ring chunk is split into segments so the per-segment reduction of
+/// segment g overlaps the transfer of segment g+1.  Expressed with
+/// explicit dataflow dependencies rather than the sequential builder
+/// chain: sends depend on the previous step's reduction of the same
+/// segment, receives are posted eagerly, reductions chain per rank (one
+/// compute engine).
+pub fn segmented_ring(params: &GenParams) -> GenResult {
+    let (p, n, op) = (params.p, params.count, params.op);
+    if p == 1 {
+        return ring(params);
+    }
+    let seg_elems = params.segsize.unwrap_or_else(|| (n / p / 4).clamp(256, 65_536));
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(false);
+    let next = |r: usize| (r + 1) % p;
+    let prev = |r: usize| (r + p - 1) % p;
+    // rank-independent segment count per chunk (sender and receiver must
+    // agree on segmentation and tags)
+    let nseg = n.div_ceil(p).div_ceil(seg_elems).max(1);
+    for rank in 0..p {
+        use crate::goal::OpKind;
+        let init = b.copy(rank, Seg::output(0, n), Seg::input(0, n));
+        let base = vec![init];
+        // (chunk index, seg index) -> reduce op id of the *latest* step
+        let mut reduced: std::collections::HashMap<(usize, usize), usize> = Default::default();
+        let mut last_reduce: Option<usize> = None;
+        // --- reduce-scatter phase ---
+        for s in 0..p - 1 {
+            let send_c = (rank + p - s) % p;
+            let recv_c = (rank + p - s - 1) % p;
+            let (soff, slen) = chunk(n, p, send_c);
+            let (roff, rlen) = chunk(n, p, recv_c);
+            for g in 0..nseg {
+                let tag = (s * nseg + g) as u32;
+                let (sg_off, sg_len) = chunk(slen, nseg, g);
+                let (rg_off, rg_len) = chunk(rlen, nseg, g);
+                // send segment g of send_c: needs last step's reduction of it
+                let mut sdeps = base.clone();
+                if let Some(&rid) = reduced.get(&(send_c, g)) {
+                    sdeps.push(rid);
+                }
+                if sg_len > 0 {
+                    b.post_with_deps(
+                        rank,
+                        OpKind::Send { peer: next(rank), seg: Seg::output(soff + sg_off, sg_len), tag },
+                        &sdeps,
+                    );
+                }
+                if rg_len > 0 {
+                    let rid = b.post_with_deps(
+                        rank,
+                        OpKind::Recv { peer: prev(rank), seg: Seg::tmp(roff + rg_off, rg_len), tag },
+                        &base,
+                    );
+                    // reduction: needs the receive + the rank's previous reduce
+                    let mut rdeps = vec![rid];
+                    if let Some(lr) = last_reduce {
+                        rdeps.push(lr);
+                    }
+                    let red = b.post_with_deps(
+                        rank,
+                        OpKind::Reduce {
+                            dst: Seg::output(roff + rg_off, rg_len),
+                            src: Seg::tmp(roff + rg_off, rg_len),
+                            op,
+                        },
+                        &rdeps,
+                    );
+                    reduced.insert((recv_c, g), red);
+                    last_reduce = Some(red);
+                }
+            }
+        }
+        // --- allgather phase ---
+        // (chunk, seg) -> recv op id from the previous AG step
+        let mut arrived: std::collections::HashMap<(usize, usize), usize> = Default::default();
+        for s in 0..p - 1 {
+            let send_c = (rank + 1 + p - s) % p;
+            let recv_c = (rank + p - s) % p;
+            let (soff, slen) = chunk(n, p, send_c);
+            let (roff, rlen) = chunk(n, p, recv_c);
+            for g in 0..nseg {
+                let tag = ((p - 1 + s) * nseg + g) as u32;
+                let (sg_off, sg_len) = chunk(slen, nseg, g);
+                let (rg_off, rg_len) = chunk(rlen, nseg, g);
+                let mut sdeps = base.clone();
+                if s == 0 {
+                    if let Some(&rid) = reduced.get(&(send_c, g)) {
+                        sdeps.push(rid);
+                    }
+                } else if let Some(&aid) = arrived.get(&(send_c, g)) {
+                    sdeps.push(aid);
+                }
+                if sg_len > 0 {
+                    b.post_with_deps(
+                        rank,
+                        OpKind::Send { peer: next(rank), seg: Seg::output(soff + sg_off, sg_len), tag },
+                        &sdeps,
+                    );
+                }
+                if rg_len > 0 {
+                    let aid = b.post_with_deps(
+                        rank,
+                        OpKind::Recv { peer: prev(rank), seg: Seg::output(roff + rg_off, rg_len), tag },
+                        &base,
+                    );
+                    arrived.insert((recv_c, g), aid);
+                }
+            }
+        }
+        // final barrier-op so the frontier covers all posted work
+        let all: Vec<usize> = (0..b.ops_len(rank)).collect();
+        b.group_wait(rank, all);
+    }
+    Ok(b.finish())
+}

@@ -1,0 +1,198 @@
+//! All-to-all reference algorithms.
+//!
+//! Convention: `count = p·c` total elements; rank r's `Input[off_d..]` is
+//! the chunk destined for rank d, and `Output[off_s..]` receives the chunk
+//! rank s sent to r.  (`(off_k, c_k) = chunk(count, p, k)`.)
+
+use crate::goal::{OpKind, Seg};
+
+use super::builder::{chunk, GoalBuilder};
+use super::{GenParams, GenResult};
+
+/// Open MPI "basic" linear alltoall: post all receives, then all sends
+/// (nonblocking + waitall), maximum injection concurrency.
+pub fn linear(params: &GenParams) -> GenResult {
+    let (p, n) = (params.p, params.count);
+    if n % p != 0 {
+        return Err(format!("alltoall needs count % p == 0 (count={n}, p={p})"));
+    }
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(params.instrument);
+    for rank in 0..p {
+        let (own_off, own_len) = chunk(n, p, rank);
+        b.copy(rank, Seg::output(own_off, own_len), Seg::input(own_off, own_len));
+        let base = b.group_base(rank);
+        let mut ids = Vec::with_capacity(2 * (p - 1));
+        for s in 1..p {
+            let from = (rank + p - s) % p;
+            let (foff, flen) = chunk(n, p, from);
+            ids.push(b.post_with_deps(
+                rank,
+                OpKind::Recv { peer: from, seg: Seg::output(foff, flen), tag: 0 },
+                &base,
+            ));
+        }
+        for s in 1..p {
+            let to = (rank + s) % p;
+            let (toff, tlen) = chunk(n, p, to);
+            ids.push(b.post_with_deps(
+                rank,
+                OpKind::Send { peer: to, seg: Seg::input(toff, tlen), tag: 0 },
+                &base,
+            ));
+        }
+        b.group_wait(rank, ids);
+    }
+    Ok(b.finish())
+}
+
+/// MPICH pairwise exchange: p−1 strided sendrecv steps, any p.
+pub fn pairwise(params: &GenParams) -> GenResult {
+    let (p, n) = (params.p, params.count);
+    if n % p != 0 {
+        return Err(format!("alltoall needs count % p == 0 (count={n}, p={p})"));
+    }
+    let inst = params.instrument;
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
+    for rank in 0..p {
+        let (own_off, own_len) = chunk(n, p, rank);
+        b.copy(rank, Seg::output(own_off, own_len), Seg::input(own_off, own_len));
+        if inst {
+            b.tag_begin(rank, "phase:pairwise");
+        }
+        for s in 1..p {
+            let to = (rank + s) % p;
+            let from = (rank + p - s) % p;
+            let (toff, tlen) = chunk(n, p, to);
+            let (foff, flen) = chunk(n, p, from);
+            b.sendrecv_tagged(
+                rank,
+                to,
+                Seg::input(toff, tlen),
+                from,
+                Seg::output(foff, flen),
+                s as u32,
+                s as u32,
+            );
+        }
+        if inst {
+            b.tag_end(rank, "phase:pairwise");
+        }
+    }
+    Ok(b.finish())
+}
+
+/// Bruck alltoall: ⌈log₂ p⌉ rounds with pack/unpack staging — latency-
+/// optimal for small messages at the cost of extra data movement (count
+/// must be divisible by p).
+///
+/// Tmp layout: work = `[0, n)` in *relative* block order (block i is the
+/// chunk destined for rank (rank+i) mod p), pack = `[n, 2n)`,
+/// recv-pack = `[2n, 3n)`.
+pub fn bruck(params: &GenParams) -> GenResult {
+    let (p, n) = (params.p, params.count);
+    if n % p != 0 {
+        return Err(format!("bruck alltoall needs count % p == 0 (count={n}, p={p})"));
+    }
+    let c = n / p;
+    let inst = params.instrument;
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
+    for rank in 0..p {
+        if inst {
+            b.tag_begin(rank, "init:mem-move");
+        }
+        // upward rotation: work[i] = Input[(rank + i) mod p]
+        for i in 0..p {
+            let src = ((rank + i) % p) * c;
+            b.copy(rank, Seg::tmp(i * c, c), Seg::input(src, c));
+        }
+        if inst {
+            b.tag_end(rank, "init:mem-move");
+            b.tag_begin(rank, "phase:bruck");
+        }
+        let mut k = 0u32;
+        let mut d = 1usize;
+        while d < p {
+            // pack blocks with bit k set in their relative index
+            let idxs: Vec<usize> = (0..p).filter(|i| i & d != 0).collect();
+            for (j, &i) in idxs.iter().enumerate() {
+                b.copy(rank, Seg::tmp(n + j * c, c), Seg::tmp(i * c, c));
+            }
+            let to = (rank + d) % p;
+            let from = (rank + p - d) % p;
+            b.sendrecv_tagged(
+                rank,
+                to,
+                Seg::tmp(n, idxs.len() * c),
+                from,
+                Seg::tmp(2 * n, idxs.len() * c),
+                k,
+                k,
+            );
+            for (j, &i) in idxs.iter().enumerate() {
+                b.copy(rank, Seg::tmp(i * c, c), Seg::tmp(2 * n + j * c, c));
+            }
+            d <<= 1;
+            k += 1;
+        }
+        if inst {
+            b.tag_end(rank, "phase:bruck");
+            b.tag_begin(rank, "final:mem-move");
+        }
+        // downward rotation + reversal: Output[src·c] with
+        // src = (rank − i + p) mod p holds work[i]
+        for i in 0..p {
+            let src = ((rank + p - i) % p) * c;
+            b.copy(rank, Seg::output(src, c), Seg::tmp(i * c, c));
+        }
+        if inst {
+            b.tag_end(rank, "final:mem-move");
+        }
+    }
+    Ok(b.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_validate() {
+        for p in [1usize, 2, 3, 4, 5, 8, 11] {
+            let n = p * 4;
+            for gen in [linear, pairwise, bruck] {
+                let g = gen(&GenParams::new(p, n)).unwrap();
+                assert_eq!(g.validate(), Ok(()), "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn bruck_rejects_uneven() {
+        assert!(bruck(&GenParams::new(3, 10)).is_err());
+    }
+
+    #[test]
+    fn bruck_fewer_messages_than_pairwise() {
+        let p = 16;
+        let count_sends = |g: &crate::goal::Goal| {
+            g.ranks[0]
+                .ops
+                .iter()
+                .filter(|o| matches!(o.kind, OpKind::Send { .. }))
+                .count()
+        };
+        let gb = bruck(&GenParams::new(p, p * 4)).unwrap();
+        let gp = pairwise(&GenParams::new(p, p * 4)).unwrap();
+        assert_eq!(count_sends(&gb), 4);
+        assert_eq!(count_sends(&gp), 15);
+    }
+
+    #[test]
+    fn linear_posts_receives_concurrently() {
+        let g = linear(&GenParams::new(4, 16)).unwrap();
+        // all comm ops of rank 0 depend only on the initial copy (op 0)
+        for op in &g.ranks[0].ops[1..] {
+            assert_eq!(op.deps, vec![0]);
+        }
+    }
+}

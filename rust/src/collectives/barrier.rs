@@ -1,0 +1,136 @@
+//! Barrier algorithms (zero-payload schedules).
+//!
+//! The paper's challenge C3 notes that barrier choice biases measurement:
+//! linear (ring) barriers skew process exit times badly, dissemination
+//! barriers much less.  `sync::skew_profile` quantifies this by simulating
+//! these schedules and reading per-rank completion spread.
+
+use crate::goal::Seg;
+
+use super::builder::GoalBuilder;
+use super::{GenParams, GenResult};
+
+#[inline]
+fn token() -> Seg {
+    Seg::input(0, 0) // zero-byte message: pure α cost
+}
+
+/// Ring token barrier: two passes of a token around the ring — simple and
+/// maximally skewed (rank p−1 exits ~p·α after rank 0 enters).
+pub fn linear(params: &GenParams) -> GenResult {
+    let p = params.p;
+    let mut b = GoalBuilder::new(p, params.count, params.elem_bytes)
+        .with_instrumentation(params.instrument);
+    if p == 1 {
+        return Ok(b.finish());
+    }
+    // Two full circulations of a token 0→1→…→p−1→0: after the second pass
+    // every rank has proof that every other rank entered the barrier.
+    for rank in 0..p {
+        for pass in 0..2u32 {
+            if rank == 0 {
+                b.send_tagged(0, 1, token(), pass);
+                b.recv_tagged(0, p - 1, token(), pass);
+            } else {
+                b.recv_tagged(rank, rank - 1, token(), pass);
+                b.send_tagged(rank, (rank + 1) % p, token(), pass);
+            }
+        }
+    }
+    Ok(b.finish())
+}
+
+/// Dissemination barrier: ⌈log₂ p⌉ rounds of strided sendrecv; near-flat
+/// exit skew (Hensgen/Finkel/Manber).
+pub fn dissemination(params: &GenParams) -> GenResult {
+    let p = params.p;
+    let mut b = GoalBuilder::new(p, params.count, params.elem_bytes)
+        .with_instrumentation(params.instrument);
+    if p == 1 {
+        return Ok(b.finish());
+    }
+    let rounds = usize::BITS as usize - (p - 1).leading_zeros() as usize;
+    for rank in 0..p {
+        for k in 0..rounds {
+            let d = 1usize << k;
+            let to = (rank + d) % p;
+            let from = (rank + p - d) % p;
+            b.sendrecv_tagged(rank, to, token(), from, token(), k as u32, k as u32);
+        }
+    }
+    Ok(b.finish())
+}
+
+/// Binomial tree barrier: fan-in to rank 0 then fan-out; log-depth with
+/// moderate skew (leaves exit last).
+pub fn tree(params: &GenParams) -> GenResult {
+    let p = params.p;
+    let mut b = GoalBuilder::new(p, params.count, params.elem_bytes)
+        .with_instrumentation(params.instrument);
+    if p == 1 {
+        return Ok(b.finish());
+    }
+    let levels = usize::BITS as usize - (p - 1).leading_zeros() as usize;
+    for rank in 0..p {
+        // fan-in
+        for k in 0..levels {
+            let d = 1usize << k;
+            if rank % (2 * d) == 0 && rank + d < p {
+                b.recv_tagged(rank, rank + d, token(), k as u32);
+            }
+        }
+        if rank != 0 {
+            let k = rank.trailing_zeros();
+            b.send_tagged(rank, rank - (1 << k), token(), k);
+        }
+        // fan-out (distance doubling)
+        if rank != 0 {
+            let kv = usize::BITS as usize - 1 - rank.leading_zeros() as usize;
+            b.recv_tagged(rank, rank - (1 << kv), token(), (100 + kv) as u32);
+        }
+        let start = if rank == 0 {
+            0
+        } else {
+            usize::BITS as usize - rank.leading_zeros() as usize
+        };
+        for k in start..levels {
+            if rank + (1 << k) < p {
+                b.send_tagged(rank, rank + (1 << k), token(), (100 + k) as u32);
+            }
+        }
+    }
+    Ok(b.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_validate() {
+        for p in [1usize, 2, 3, 5, 8, 13, 16] {
+            for gen in [linear, dissemination, tree] {
+                let g = gen(&GenParams::new(p, 0)).unwrap();
+                assert_eq!(g.validate(), Ok(()), "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn dissemination_rounds() {
+        let g = dissemination(&GenParams::new(16, 0)).unwrap();
+        let sends = g.ranks[0]
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, crate::goal::OpKind::Send { .. }))
+            .count();
+        assert_eq!(sends, 4);
+    }
+
+    #[test]
+    fn barrier_moves_zero_bytes() {
+        for gen in [linear, dissemination, tree] {
+            assert_eq!(gen(&GenParams::new(8, 0)).unwrap().total_wire_bytes(), 0);
+        }
+    }
+}

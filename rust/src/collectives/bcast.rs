@@ -1,0 +1,421 @@
+//! Broadcast reference algorithms, including the two binomial-tree partner
+//! orderings contrasted in Sec. IV-B (Fig. 8–10):
+//!
+//! - **distance-doubling** (Open MPI's binomial): the root starts with its
+//!   nearest partner; late rounds — when most ranks are transmitting — use
+//!   the *longest* distances, flooding inter-group links;
+//! - **distance-halving** (MPICH's binomial): the root starts with the
+//!   farthest partner; late (high-fan-out) rounds are *local*, keeping most
+//!   traffic inside nodes/groups.
+//!
+//! Both complete in ⌈log₂ p⌉ rounds and carry identical total volume — they
+//! are indistinguishable under an α-β model, which is exactly the paper's
+//! point: only topology-aware measurement (or the tracer) separates them.
+
+use crate::goal::Seg;
+
+use super::builder::{chunk, GoalBuilder};
+use super::{GenParams, GenResult};
+
+/// vrank translation so any root works: vrank 0 = root.
+#[inline]
+fn vr(rank: usize, root: usize, p: usize) -> usize {
+    (rank + p - root) % p
+}
+
+#[inline]
+fn unvr(v: usize, root: usize, p: usize) -> usize {
+    (v + root) % p
+}
+
+fn emit_root_init(b: &mut GoalBuilder, params: &GenParams) {
+    if params.instrument {
+        b.tag_begin(params.root, "init:mem-move");
+    }
+    b.copy(params.root, Seg::output(0, params.count), Seg::input(0, params.count));
+    if params.instrument {
+        b.tag_end(params.root, "init:mem-move");
+    }
+}
+
+/// Root sends the full payload to every rank in turn.
+pub fn linear(params: &GenParams) -> GenResult {
+    let (p, n, root) = (params.p, params.count, params.root);
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(params.instrument);
+    emit_root_init(&mut b, params);
+    for v in 1..p {
+        let dst = unvr(v, root, p);
+        b.send(root, dst, Seg::output(0, n));
+        b.recv(dst, root, Seg::output(0, n));
+    }
+    Ok(b.finish())
+}
+
+/// One (round, sender, receiver, distance) edge of a binomial schedule —
+/// exposed so Fig. 8 can print the two orderings and the tracer can audit
+/// them without running a simulation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScheduleEdge {
+    pub round: usize,
+    pub from_v: usize,
+    pub to_v: usize,
+    pub distance: usize,
+}
+
+/// Edges of the distance-doubling binomial tree over vranks 0..p.
+/// Round k: every vrank v < 2^k sends to v + 2^k (doubling distances).
+pub fn doubling_edges(p: usize) -> Vec<ScheduleEdge> {
+    let mut edges = Vec::new();
+    let levels = usize::BITS as usize - (p.max(2) - 1).leading_zeros() as usize;
+    for k in 0..levels {
+        let d = 1usize << k;
+        for v in 0..d.min(p) {
+            if v + d < p {
+                edges.push(ScheduleEdge { round: k, from_v: v, to_v: v + d, distance: d });
+            }
+        }
+    }
+    edges
+}
+
+/// Edges of the distance-halving binomial tree over vranks 0..p.
+/// Round k: vranks v ≡ 0 (mod 2d) send to v + d, d = 2^(L−1−k) (halving).
+pub fn halving_edges(p: usize) -> Vec<ScheduleEdge> {
+    let mut edges = Vec::new();
+    if p < 2 {
+        return edges;
+    }
+    let levels = usize::BITS as usize - (p - 1).leading_zeros() as usize;
+    for k in 0..levels {
+        let d = 1usize << (levels - 1 - k);
+        let mut v = 0;
+        while v + d < p {
+            if v % (2 * d) == 0 {
+                edges.push(ScheduleEdge { round: k, from_v: v, to_v: v + d, distance: d });
+            }
+            v += 2 * d;
+        }
+    }
+    edges
+}
+
+/// Build a bcast Goal from a binomial edge list (shared by both orderings).
+fn binomial_from_edges(params: &GenParams, edges: &[ScheduleEdge], label: &str) -> GenResult {
+    let (p, n, root) = (params.p, params.count, params.root);
+    let inst = params.instrument;
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
+    emit_root_init(&mut b, params);
+    // Per-rank emission: the recv (if any) must precede that rank's sends;
+    // edge lists are round-ordered, and a vrank's sends always come in
+    // later rounds than its recv, so emitting per rank in round order works.
+    for rank in 0..p {
+        let v = vr(rank, root, p);
+        if inst {
+            b.tag_begin(rank, &format!("phase:{label}"));
+        }
+        for e in edges {
+            if e.to_v == v {
+                if inst {
+                    b.tag_begin(rank, &format!("round:{}:recv", e.round));
+                }
+                b.recv_tagged(rank, unvr(e.from_v, root, p), Seg::output(0, n), e.round as u32);
+                if inst {
+                    b.tag_end(rank, &format!("round:{}:recv", e.round));
+                }
+            } else if e.from_v == v {
+                if inst {
+                    b.tag_begin(rank, &format!("round:{}:send", e.round));
+                }
+                b.send_tagged(rank, unvr(e.to_v, root, p), Seg::output(0, n), e.round as u32);
+                if inst {
+                    b.tag_end(rank, &format!("round:{}:send", e.round));
+                }
+            }
+        }
+        if inst {
+            b.tag_end(rank, &format!("phase:{label}"));
+        }
+    }
+    Ok(b.finish())
+}
+
+/// Open MPI-style binomial broadcast: distance-doubling partner order.
+pub fn binomial_doubling(params: &GenParams) -> GenResult {
+    binomial_from_edges(params, &doubling_edges(params.p), "binomial_doubling")
+}
+
+/// MPICH-style binomial broadcast: distance-halving partner order.
+pub fn binomial_halving(params: &GenParams) -> GenResult {
+    binomial_from_edges(params, &halving_edges(params.p), "binomial_halving")
+}
+
+/// Van de Geijn large-message broadcast: binomial scatter of chunks, then a
+/// ring allgather.
+pub fn scatter_allgather(params: &GenParams) -> GenResult {
+    let (p, n, root) = (params.p, params.count, params.root);
+    let inst = params.instrument;
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
+    emit_root_init(&mut b, params);
+    if p == 1 {
+        return Ok(b.finish());
+    }
+    // --- binomial (halving) scatter over vranks: vrank v receives its
+    // subtree's chunk range [v, v+lsb(v)) from v − lsb(v), then forwards
+    // upper halves [v+d, v+2d) to v+d for d = lsb(v)/2 … 1 ---
+    let levels = usize::BITS as usize - (p - 1).leading_zeros() as usize;
+    // contiguous chunk range [lo_chunk, hi_chunk) → (elem offset, elem len)
+    let range_of = |lo_c: usize, hi_c: usize| -> (usize, usize) {
+        let hi_c = hi_c.min(p);
+        let (off_lo, _) = chunk(n, p, lo_c);
+        let (off_hi, len_hi) = chunk(n, p, hi_c - 1);
+        (off_lo, off_hi + len_hi - off_lo)
+    };
+    for rank in 0..p {
+        let v = vr(rank, root, p);
+        if inst {
+            b.tag_begin(rank, "phase:scatter");
+        }
+        let span = if v == 0 { 1usize << levels } else { 1usize << v.trailing_zeros() };
+        if v != 0 {
+            let parent = unvr(v - span, root, p);
+            let (off, len) = range_of(v, v + span);
+            b.recv_tagged(rank, parent, Seg::output(off, len), 100 + span.trailing_zeros());
+        }
+        let mut d = span / 2;
+        while d >= 1 {
+            if v + d < p {
+                let (off, len) = range_of(v + d, v + 2 * d);
+                b.send_tagged(rank, unvr(v + d, root, p), Seg::output(off, len), 100 + d.trailing_zeros());
+            }
+            d /= 2;
+        }
+        if inst {
+            b.tag_end(rank, "phase:scatter");
+            b.tag_begin(rank, "phase:allgather");
+        }
+        // --- ring allgather over vranks ---
+        let next = unvr((v + 1) % p, root, p);
+        let prev = unvr((v + p - 1) % p, root, p);
+        for s in 0..p - 1 {
+            let send_c = (v + p - s) % p;
+            let recv_c = (v + p - s - 1) % p;
+            let (soff, slen) = chunk(n, p, send_c);
+            let (roff, rlen) = chunk(n, p, recv_c);
+            b.sendrecv_tagged(
+                rank,
+                next,
+                Seg::output(soff, slen),
+                prev,
+                Seg::output(roff, rlen),
+                s as u32,
+                s as u32,
+            );
+        }
+        if inst {
+            b.tag_end(rank, "phase:allgather");
+        }
+    }
+    Ok(b.finish())
+}
+
+/// Chained/pipelined broadcast: the payload flows down a rank chain in
+/// segments, so all links are busy once the pipeline fills.
+pub fn pipeline(params: &GenParams) -> GenResult {
+    let (p, n, root) = (params.p, params.count, params.root);
+    let inst = params.instrument;
+    let segsize = params.segsize.unwrap_or_else(|| (n / (4 * p.max(2))).clamp(1024, 262_144));
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
+    emit_root_init(&mut b, params);
+    if p == 1 {
+        return Ok(b.finish());
+    }
+    let nseg = n.div_ceil(segsize).max(1);
+    for rank in 0..p {
+        let v = vr(rank, root, p);
+        if inst {
+            b.tag_begin(rank, "phase:pipeline");
+        }
+        for s in 0..nseg {
+            let (off, len) = chunk(n, nseg, s);
+            if v > 0 {
+                b.recv_tagged(rank, unvr(v - 1, root, p), Seg::output(off, len), s as u32);
+            }
+            if v + 1 < p {
+                b.send_tagged(rank, unvr(v + 1, root, p), Seg::output(off, len), s as u32);
+            }
+        }
+        if inst {
+            b.tag_end(rank, "phase:pipeline");
+        }
+    }
+    Ok(b.finish())
+}
+
+/// The "backend-internal" binomial of Fig. 10: same distance-doubling
+/// schedule, but store-and-forward through a staging buffer with an extra
+/// copy on each side of every hop (the implementation inefficiency PICO
+/// exposed in Open MPI's internal binomial, which made it ~10× slower than
+/// the libpico port at 512 MiB).
+pub fn binomial_doubling_staged(params: &GenParams) -> GenResult {
+    let (p, n, root) = (params.p, params.count, params.root);
+    let inst = params.instrument;
+    let edges = doubling_edges(p);
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
+    emit_root_init(&mut b, params);
+    for rank in 0..p {
+        let v = vr(rank, root, p);
+        for e in &edges {
+            if e.to_v == v {
+                // staged receive: land in an internal buffer, copy to a
+                // bounce buffer, then into place (no zero-copy anywhere)
+                b.recv_tagged(rank, unvr(e.from_v, root, p), Seg::tmp(0, n), e.round as u32);
+                b.copy(rank, Seg::tmp(n, n), Seg::tmp(0, n));
+                b.copy(rank, Seg::output(0, n), Seg::tmp(n, n));
+            } else if e.from_v == v {
+                // staged send: copy-in to the internal buffer, pack, inject
+                b.copy(rank, Seg::tmp(n, n), Seg::output(0, n));
+                b.copy(rank, Seg::tmp(0, n), Seg::tmp(n, n));
+                b.send_tagged(rank, unvr(e.to_v, root, p), Seg::tmp(0, n), e.round as u32);
+            }
+        }
+    }
+    Ok(b.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_lists_deliver_to_everyone() {
+        for p in [2usize, 3, 5, 8, 16, 100, 128] {
+            for edges in [doubling_edges(p), halving_edges(p)] {
+                let mut has = vec![false; p];
+                has[0] = true;
+                // edges must be usable in round order
+                let mut edges = edges.clone();
+                edges.sort_by_key(|e| e.round);
+                for e in &edges {
+                    assert!(has[e.from_v], "p={p}: sender {} before receiving", e.from_v);
+                    assert!(!has[e.to_v], "p={p}: {} received twice", e.to_v);
+                    has[e.to_v] = true;
+                }
+                assert!(has.iter().all(|&x| x), "p={p}: not all ranks reached");
+                assert_eq!(edges.len(), p - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn doubling_distances_grow_halving_shrink() {
+        let p = 16;
+        let d: Vec<_> = doubling_edges(p).iter().map(|e| e.distance).collect();
+        assert!(d.windows(2).all(|w| w[1] >= w[0]));
+        let h: Vec<_> = halving_edges(p).iter().map(|e| e.distance).collect();
+        assert!(h.windows(2).all(|w| w[1] <= w[0]));
+        // same rounds, same total edges
+        assert_eq!(doubling_edges(p).last().unwrap().round, 3);
+        assert_eq!(halving_edges(p).last().unwrap().round, 3);
+    }
+
+    #[test]
+    fn late_rounds_have_most_edges_in_both() {
+        let p = 128;
+        let count_round = |edges: &[ScheduleEdge], k: usize| {
+            edges.iter().filter(|e| e.round == k).count()
+        };
+        let d = doubling_edges(p);
+        let h = halving_edges(p);
+        assert_eq!(count_round(&d, 6), 64);
+        assert_eq!(count_round(&h, 6), 64);
+        // ...but doubling's big round is far (distance 64) while halving's
+        // is near (distance 1) — the crux of Fig. 8.
+        assert!(d.iter().filter(|e| e.round == 6).all(|e| e.distance == 64));
+        assert!(h.iter().filter(|e| e.round == 6).all(|e| e.distance == 1));
+    }
+
+    #[test]
+    fn generators_validate() {
+        for p in [1usize, 2, 3, 6, 8, 17] {
+            for root in [0, p - 1] {
+                for gen in
+                    [linear, binomial_doubling, binomial_halving, scatter_allgather, pipeline,
+                     binomial_doubling_staged]
+                {
+                    let g = gen(&GenParams::new(p, 64).with_root(root)).unwrap();
+                    assert_eq!(g.validate(), Ok(()), "p={p} root={root}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn total_volume_identical_for_both_binomials() {
+        let params = GenParams::new(128, 1024);
+        let d = binomial_doubling(&params).unwrap();
+        let h = binomial_halving(&params).unwrap();
+        // 127·n bytes each (Fig. 9's "Total bytes: 127 n")
+        assert_eq!(d.total_wire_bytes(), 127 * 1024 * 4);
+        assert_eq!(d.total_wire_bytes(), h.total_wire_bytes());
+    }
+}
+
+/// K-nomial (radix-k) broadcast, distance-doubling order: round j sends to
+/// k−1 children at distance i·k^j.  k=2 degenerates to the binomial;
+/// higher radix trades per-round fan-out (more sends from hot ranks) for
+/// fewer rounds — the knob several stacks expose for latency-bound sizes.
+pub fn knomial(params: &GenParams) -> GenResult {
+    let (p, n, root) = (params.p, params.count, params.root);
+    let k = params.segsize.unwrap_or(4).clamp(2, 8); // radix rides the segsize slot
+    let inst = params.instrument;
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
+    emit_root_init(&mut b, params);
+    if p == 1 {
+        return Ok(b.finish());
+    }
+    // doubling order: round j's senders are the v < k^j (all digits at
+    // positions ≥ j zero), each sending to v + i·k^j for i = 1..k−1.
+    // Receiver v's parent strips the HIGHEST non-zero base-k digit.
+    for rank in 0..p {
+        let v = vr(rank, root, p);
+        if inst {
+            b.tag_begin(rank, "phase:knomial");
+        }
+        let mut recv_round = 0usize;
+        if v != 0 {
+            // highest non-zero digit (value i at position j)
+            let (mut d, mut j) = (1usize, 0usize);
+            let (mut hj, mut hi, mut hd) = (0usize, 0usize, 1usize);
+            while d <= v {
+                let digit = (v / d) % k;
+                if digit != 0 {
+                    hj = j;
+                    hi = digit;
+                    hd = d;
+                }
+                d *= k;
+                j += 1;
+            }
+            b.recv_tagged(rank, unvr(v - hi * hd, root, p), Seg::output(0, n), hj as u32);
+            recv_round = hj + 1;
+        }
+        let mut d = k.pow(recv_round as u32);
+        let mut j = recv_round;
+        while d < p {
+            if v < d {
+                for i in 1..k {
+                    let child = v + i * d;
+                    if child < p {
+                        b.send_tagged(rank, unvr(child, root, p), Seg::output(0, n), j as u32);
+                    }
+                }
+            }
+            d *= k;
+            j += 1;
+        }
+        if inst {
+            b.tag_end(rank, "phase:knomial");
+        }
+    }
+    Ok(b.finish())
+}

@@ -1,0 +1,300 @@
+//! Schedule builder: the "plain-MPI" authoring surface of libpico.
+//!
+//! Algorithm generators write per-rank programs in blocking MPI style
+//! (`send` / `recv` / `sendrecv` / `reduce_local` / `copy`) and delimit
+//! instrumentation regions with `tag_begin` / `tag_end` — the Rust analogue
+//! of the `PICO_TAG_BEGIN/END` macros of Fig. 5.  The builder chains
+//! rank-local dependencies automatically (sequential semantics, with
+//! `sendrecv` expressing the one intended concurrency) and tracks scratch
+//! usage so the executor can size buffers.
+
+use crate::goal::{Buf, Goal, Op, OpId, OpKind, ReduceOp, Seg, TagSpan};
+
+pub struct GoalBuilder {
+    goal: Goal,
+    /// Dependency frontier per rank: the op(s) the next op must wait for.
+    frontier: Vec<Vec<OpId>>,
+    /// Open tag regions per rank: (name, first op index, depth).
+    open: Vec<Vec<(String, usize, u8)>>,
+    /// Whether tag regions are recorded (R1: instrumentation is optional).
+    instrument: bool,
+    tmp_high: usize,
+}
+
+impl GoalBuilder {
+    pub fn new(p: usize, count: usize, elem_bytes: usize) -> Self {
+        Self {
+            goal: Goal::new(p, count, elem_bytes),
+            frontier: vec![Vec::new(); p],
+            open: vec![Vec::new(); p],
+            instrument: false,
+            tmp_high: 0,
+        }
+    }
+
+    /// Enable tag recording (disabled by default; when disabled the tag
+    /// calls compile down to nothing, like the paper's compiled-out macros).
+    pub fn with_instrumentation(mut self, on: bool) -> Self {
+        self.instrument = on;
+        self
+    }
+
+    pub fn p(&self) -> usize {
+        self.goal.p()
+    }
+
+    pub fn count(&self) -> usize {
+        self.goal.count
+    }
+
+    /// Number of ops emitted so far for `rank`.
+    pub fn ops_len(&self, rank: usize) -> usize {
+        self.goal.ranks[rank].ops.len()
+    }
+
+    fn push(&mut self, rank: usize, kind: OpKind) -> OpId {
+        self.track_tmp(&kind);
+        let deps = std::mem::take(&mut self.frontier[rank]);
+        let id = self.goal.ranks[rank].ops.len();
+        self.goal.ranks[rank].ops.push(Op { kind, deps });
+        self.frontier[rank] = vec![id];
+        id
+    }
+
+    fn track_tmp(&mut self, kind: &OpKind) {
+        let mut see = |seg: &Seg| {
+            if seg.buf == Buf::Tmp {
+                self.tmp_high = self.tmp_high.max(seg.off + seg.len);
+            }
+        };
+        match kind {
+            OpKind::Send { seg, .. } | OpKind::Recv { seg, .. } => see(seg),
+            OpKind::Reduce { dst, src, .. } | OpKind::Copy { dst, src } => {
+                see(dst);
+                see(src);
+            }
+            OpKind::Calc { .. } => {}
+        }
+    }
+
+    pub fn send(&mut self, rank: usize, peer: usize, seg: Seg) -> OpId {
+        self.send_tagged(rank, peer, seg, 0)
+    }
+
+    pub fn recv(&mut self, rank: usize, peer: usize, seg: Seg) -> OpId {
+        self.recv_tagged(rank, peer, seg, 0)
+    }
+
+    pub fn send_tagged(&mut self, rank: usize, peer: usize, seg: Seg, tag: u32) -> OpId {
+        self.push(rank, OpKind::Send { peer, seg, tag })
+    }
+
+    pub fn recv_tagged(&mut self, rank: usize, peer: usize, seg: Seg, tag: u32) -> OpId {
+        self.push(rank, OpKind::Recv { peer, seg, tag })
+    }
+
+    /// MPI_Sendrecv: both halves depend on the frontier and may overlap;
+    /// the next op waits for both.
+    pub fn sendrecv(
+        &mut self,
+        rank: usize,
+        to: usize,
+        sseg: Seg,
+        from: usize,
+        rseg: Seg,
+    ) -> (OpId, OpId) {
+        self.sendrecv_tagged(rank, to, sseg, from, rseg, 0, 0)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn sendrecv_tagged(
+        &mut self,
+        rank: usize,
+        to: usize,
+        sseg: Seg,
+        from: usize,
+        rseg: Seg,
+        stag: u32,
+        rtag: u32,
+    ) -> (OpId, OpId) {
+        self.track_tmp(&OpKind::Send { peer: to, seg: sseg, tag: stag });
+        self.track_tmp(&OpKind::Recv { peer: from, seg: rseg, tag: rtag });
+        let deps = std::mem::take(&mut self.frontier[rank]);
+        let s = self.goal.ranks[rank].ops.len();
+        self.goal.ranks[rank]
+            .ops
+            .push(Op { kind: OpKind::Send { peer: to, seg: sseg, tag: stag }, deps: deps.clone() });
+        let r = s + 1;
+        self.goal.ranks[rank]
+            .ops
+            .push(Op { kind: OpKind::Recv { peer: from, seg: rseg, tag: rtag }, deps });
+        self.frontier[rank] = vec![s, r];
+        (s, r)
+    }
+
+    /// Snapshot the current frontier — the dependency base for a group of
+    /// nonblocking operations (MPI_Isend/Irecv … Waitall style).
+    pub fn group_base(&self, rank: usize) -> Vec<OpId> {
+        self.frontier[rank].clone()
+    }
+
+    /// Post an op depending only on `base` (not on the running frontier);
+    /// returns its id.  Pair with [`GoalBuilder::group_wait`].
+    pub fn post_with_deps(&mut self, rank: usize, kind: OpKind, base: &[OpId]) -> OpId {
+        self.track_tmp(&kind);
+        let id = self.goal.ranks[rank].ops.len();
+        self.goal.ranks[rank].ops.push(Op { kind, deps: base.to_vec() });
+        id
+    }
+
+    /// MPI_Waitall: the next sequential op depends on all `ids`.
+    pub fn group_wait(&mut self, rank: usize, ids: Vec<OpId>) {
+        self.frontier[rank] = ids;
+    }
+
+    /// dst = op(dst, src) — MPI_Reduce_local; the Pallas hot path.
+    pub fn reduce_local(&mut self, rank: usize, dst: Seg, src: Seg, op: ReduceOp) -> OpId {
+        debug_assert_eq!(dst.len, src.len);
+        self.push(rank, OpKind::Reduce { dst, src, op })
+    }
+
+    pub fn copy(&mut self, rank: usize, dst: Seg, src: Seg) -> OpId {
+        debug_assert_eq!(dst.len, src.len);
+        self.push(rank, OpKind::Copy { dst, src })
+    }
+
+    pub fn calc(&mut self, rank: usize, seconds: f64) -> OpId {
+        self.push(rank, OpKind::Calc { seconds })
+    }
+
+    /// PICO_TAG_BEGIN analogue.  No-op unless instrumentation is enabled.
+    pub fn tag_begin(&mut self, rank: usize, name: &str) {
+        if self.instrument {
+            let depth = self.open[rank].len() as u8;
+            let first = self.goal.ranks[rank].ops.len();
+            self.open[rank].push((name.to_string(), first, depth));
+        }
+    }
+
+    /// PICO_TAG_END analogue; must pair with the innermost open begin.
+    pub fn tag_end(&mut self, rank: usize, name: &str) {
+        if self.instrument {
+            let (open_name, first, depth) =
+                self.open[rank].pop().unwrap_or_else(|| panic!("tag_end({name}) with no open tag"));
+            assert_eq!(open_name, name, "mismatched tag_end: open {open_name}, got {name}");
+            let last = self.goal.ranks[rank].ops.len();
+            if last > first {
+                self.goal.ranks[rank].tags.push(TagSpan {
+                    name: open_name,
+                    first,
+                    last: last - 1,
+                    depth,
+                });
+            }
+        }
+    }
+
+    /// Seal the schedule.  Panics on unbalanced tags; validates structure
+    /// in debug builds.
+    pub fn finish(mut self) -> Goal {
+        for (r, open) in self.open.iter().enumerate() {
+            assert!(open.is_empty(), "rank {r}: unclosed tags {open:?}");
+        }
+        self.goal.tmp_count = self.tmp_high;
+        debug_assert_eq!(self.goal.validate(), Ok(()));
+        self.goal
+    }
+}
+
+/// Evenly split `count` elements into `p` chunks (first `count % p` chunks
+/// get one extra): returns (offset, len) of chunk `i`.  This is the chunk
+/// map used by ring/pairwise algorithms so any (p, count) works.
+pub fn chunk(count: usize, p: usize, i: usize) -> (usize, usize) {
+    let base = count / p;
+    let extra = count % p;
+    let off = i * base + i.min(extra);
+    let len = base + usize::from(i < extra);
+    (off, len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_chaining() {
+        let mut b = GoalBuilder::new(2, 8, 4);
+        b.copy(0, Seg::output(0, 8), Seg::input(0, 8));
+        b.send(0, 1, Seg::output(0, 8));
+        b.recv(1, 0, Seg::output(0, 8));
+        let g = b.finish();
+        assert_eq!(g.ranks[0].ops[1].deps, vec![0]);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn sendrecv_forks_and_joins() {
+        let mut b = GoalBuilder::new(2, 4, 4);
+        b.sendrecv(0, 1, Seg::input(0, 4), 1, Seg::tmp(0, 4));
+        b.reduce_local(0, Seg::output(0, 4), Seg::tmp(0, 4), ReduceOp::Sum);
+        b.sendrecv(1, 0, Seg::input(0, 4), 0, Seg::tmp(0, 4));
+        b.reduce_local(1, Seg::output(0, 4), Seg::tmp(0, 4), ReduceOp::Sum);
+        let g = b.finish();
+        // reduce waits on both halves of the sendrecv
+        assert_eq!(g.ranks[0].ops[2].deps, vec![0, 1]);
+        assert_eq!(g.tmp_count, 4);
+    }
+
+    #[test]
+    fn tags_recorded_only_when_instrumented() {
+        let mk = |on: bool| {
+            let mut b = GoalBuilder::new(1, 4, 4).with_instrumentation(on);
+            b.tag_begin(0, "phase:x");
+            b.copy(0, Seg::output(0, 4), Seg::input(0, 4));
+            b.tag_end(0, "phase:x");
+            b.finish()
+        };
+        assert_eq!(mk(false).ranks[0].tags.len(), 0);
+        let g = mk(true);
+        assert_eq!(g.ranks[0].tags.len(), 1);
+        assert_eq!(g.ranks[0].tags[0].name, "phase:x");
+    }
+
+    #[test]
+    fn nested_tags_track_depth() {
+        let mut b = GoalBuilder::new(1, 4, 4).with_instrumentation(true);
+        b.tag_begin(0, "phase:p");
+        b.tag_begin(0, "step:0");
+        b.copy(0, Seg::output(0, 4), Seg::input(0, 4));
+        b.tag_end(0, "step:0");
+        b.tag_end(0, "phase:p");
+        let g = b.finish();
+        let step = g.ranks[0].tags.iter().find(|t| t.name == "step:0").unwrap();
+        let phase = g.ranks[0].tags.iter().find(|t| t.name == "phase:p").unwrap();
+        assert_eq!(step.depth, 1);
+        assert_eq!(phase.depth, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched tag_end")]
+    fn tag_mismatch_panics() {
+        let mut b = GoalBuilder::new(1, 4, 4).with_instrumentation(true);
+        b.tag_begin(0, "a");
+        b.tag_end(0, "b");
+    }
+
+    #[test]
+    fn chunk_covers_everything() {
+        for (count, p) in [(10, 3), (7, 7), (5, 8), (0, 4), (100, 1)] {
+            let mut total = 0;
+            let mut expect_off = 0;
+            for i in 0..p {
+                let (off, len) = chunk(count, p, i);
+                assert_eq!(off, expect_off);
+                expect_off += len;
+                total += len;
+            }
+            assert_eq!(total, count);
+        }
+    }
+}

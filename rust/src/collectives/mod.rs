@@ -1,0 +1,277 @@
+//! libpico — backend-neutral reference collective algorithms (paper R2).
+//!
+//! Each algorithm is a pure *schedule generator*: given (p, count, op, …)
+//! it emits a [`Goal`] with full data semantics, so the same schedule can be
+//! timed on the simulated cluster (`sim`), executed with real buffers and
+//! Pallas-kernel reductions (`execute`), traced by topology tier (`tracer`),
+//! or replayed inside an application timeline (`replay`).
+//!
+//! ## Buffer conventions (execute-mode semantics)
+//!
+//! With `count` elements and `c = count/p` chunks (uneven chunks follow
+//! [`builder::chunk`]):
+//!
+//! | Collective    | Input (per rank)            | Output (per rank)                  |
+//! |---------------|-----------------------------|------------------------------------|
+//! | Allreduce     | `[0..count]` contribution   | `[0..count]` = op over all ranks   |
+//! | Reduce        | `[0..count]` contribution   | root only: op over all ranks       |
+//! | Bcast         | root: `[0..count]` payload  | everyone: root's payload           |
+//! | Allgather     | `[0..c_r]` contribution     | `[off_k..]` = rank k's chunk, ∀k   |
+//! | ReduceScatter | `[0..count]` contribution   | `[0..c_r]` = reduced chunk r       |
+//! | Alltoall      | `[off_d..]` chunk for rank d| `[off_s..]` = chunk from rank s    |
+//! | Gather        | `[0..c_r]` contribution     | root: all chunks in rank order     |
+//! | Scatter       | root: all chunks            | `[0..c_r]` = own chunk             |
+//! | Barrier       | –                           | –                                  |
+//!
+//! Generators delimit algorithm phases and per-step regions with tag spans
+//! (Fig. 5) when instrumentation is requested (R1).
+
+pub mod allgather;
+pub mod allreduce;
+pub mod alltoall;
+pub mod barrier;
+pub mod bcast;
+pub mod builder;
+pub mod reduce;
+pub mod reduce_scatter;
+
+
+use crate::goal::{Goal, ReduceOp};
+
+pub use builder::{chunk, GoalBuilder};
+
+/// Collective operation type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Coll {
+    Allreduce,
+    Bcast,
+    Reduce,
+    Allgather,
+    ReduceScatter,
+    Alltoall,
+    Gather,
+    Scatter,
+    Barrier,
+}
+
+impl Coll {
+    pub const ALL: [Coll; 9] = [
+        Coll::Allreduce,
+        Coll::Bcast,
+        Coll::Reduce,
+        Coll::Allgather,
+        Coll::ReduceScatter,
+        Coll::Alltoall,
+        Coll::Gather,
+        Coll::Scatter,
+        Coll::Barrier,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Coll::Allreduce => "allreduce",
+            Coll::Bcast => "bcast",
+            Coll::Reduce => "reduce",
+            Coll::Allgather => "allgather",
+            Coll::ReduceScatter => "reduce_scatter",
+            Coll::Alltoall => "alltoall",
+            Coll::Gather => "gather",
+            Coll::Scatter => "scatter",
+            Coll::Barrier => "barrier",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Coll> {
+        Coll::ALL.into_iter().find(|c| c.label() == s)
+    }
+}
+
+/// Parameters a generator receives (the resolved test point).
+#[derive(Debug, Clone)]
+pub struct GenParams {
+    pub p: usize,
+    /// Total element count (see the table above for per-collective meaning).
+    pub count: usize,
+    pub elem_bytes: usize,
+    pub op: ReduceOp,
+    pub root: usize,
+    /// Segment size in elements for pipelined algorithms (None = heuristic).
+    pub segsize: Option<usize>,
+    /// Emit tag spans (R1; optional, zero-cost when off).
+    pub instrument: bool,
+}
+
+impl GenParams {
+    pub fn new(p: usize, count: usize) -> Self {
+        Self {
+            p,
+            count,
+            elem_bytes: 4,
+            op: ReduceOp::Sum,
+            root: 0,
+            segsize: None,
+            instrument: false,
+        }
+    }
+
+    pub fn instrumented(mut self) -> Self {
+        self.instrument = true;
+        self
+    }
+
+    pub fn with_op(mut self, op: ReduceOp) -> Self {
+        self.op = op;
+        self
+    }
+
+    pub fn with_root(mut self, root: usize) -> Self {
+        self.root = root;
+        self
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.count * self.elem_bytes
+    }
+}
+
+pub type GenResult = Result<Goal, String>;
+pub type Generator = fn(&GenParams) -> GenResult;
+
+/// A registered reference algorithm.
+#[derive(Clone, Copy)]
+pub struct AlgoInfo {
+    pub coll: Coll,
+    pub name: &'static str,
+    /// Supports non-power-of-two rank counts.
+    pub any_p: bool,
+    /// Provenance note (which library the reference was ported from).
+    pub origin: &'static str,
+    pub gen: Generator,
+}
+
+impl std::fmt::Debug for AlgoInfo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AlgoInfo")
+            .field("coll", &self.coll)
+            .field("name", &self.name)
+            .field("any_p", &self.any_p)
+            .finish()
+    }
+}
+
+/// The full libpico algorithm registry.
+pub fn registry() -> &'static [AlgoInfo] {
+    &[
+        // ---- Allreduce ----
+        AlgoInfo { coll: Coll::Allreduce, name: "linear", any_p: true, origin: "Open MPI basic", gen: allreduce::linear },
+        AlgoInfo { coll: Coll::Allreduce, name: "recursive_doubling", any_p: true, origin: "MPICH", gen: allreduce::recursive_doubling },
+        AlgoInfo { coll: Coll::Allreduce, name: "ring", any_p: true, origin: "Open MPI tuned", gen: allreduce::ring },
+        AlgoInfo { coll: Coll::Allreduce, name: "rabenseifner", any_p: true, origin: "MPICH / Rabenseifner", gen: allreduce::rabenseifner },
+        AlgoInfo { coll: Coll::Allreduce, name: "tree", any_p: true, origin: "binomial reduce+bcast", gen: allreduce::tree },
+        AlgoInfo { coll: Coll::Allreduce, name: "tree_pipelined", any_p: true, origin: "NCCL-style segmented tree", gen: allreduce::tree_pipelined },
+        AlgoInfo { coll: Coll::Allreduce, name: "segmented_ring", any_p: true, origin: "Open MPI tuned (pipelined)", gen: allreduce::segmented_ring },
+        // ---- Bcast ----
+        AlgoInfo { coll: Coll::Bcast, name: "linear", any_p: true, origin: "Open MPI basic", gen: bcast::linear },
+        AlgoInfo { coll: Coll::Bcast, name: "binomial_doubling", any_p: true, origin: "Open MPI coll_base_bcast", gen: bcast::binomial_doubling },
+        AlgoInfo { coll: Coll::Bcast, name: "binomial_halving", any_p: true, origin: "MPICH binomial", gen: bcast::binomial_halving },
+        AlgoInfo { coll: Coll::Bcast, name: "scatter_allgather", any_p: true, origin: "van de Geijn / MPICH", gen: bcast::scatter_allgather },
+        AlgoInfo { coll: Coll::Bcast, name: "pipeline", any_p: true, origin: "Open MPI chain", gen: bcast::pipeline },
+        AlgoInfo { coll: Coll::Bcast, name: "knomial", any_p: true, origin: "radix-k binomial", gen: bcast::knomial },
+        // ---- Reduce ----
+        AlgoInfo { coll: Coll::Reduce, name: "linear", any_p: true, origin: "Open MPI basic", gen: reduce::linear },
+        AlgoInfo { coll: Coll::Reduce, name: "binomial", any_p: true, origin: "MPICH", gen: reduce::binomial },
+        AlgoInfo { coll: Coll::Reduce, name: "rabenseifner", any_p: false, origin: "MPICH reduce_scatter_gather", gen: reduce::rabenseifner },
+        // ---- Allgather ----
+        AlgoInfo { coll: Coll::Allgather, name: "linear", any_p: true, origin: "gather+bcast", gen: allgather::linear },
+        AlgoInfo { coll: Coll::Allgather, name: "ring", any_p: true, origin: "Open MPI tuned", gen: allgather::ring },
+        AlgoInfo { coll: Coll::Allgather, name: "recursive_doubling", any_p: false, origin: "MPICH", gen: allgather::recursive_doubling },
+        AlgoInfo { coll: Coll::Allgather, name: "bruck", any_p: true, origin: "Bruck et al.", gen: allgather::bruck },
+        AlgoInfo { coll: Coll::Allgather, name: "pat", any_p: false, origin: "NCCL PAT (binomial butterfly)", gen: allgather::pat },
+        AlgoInfo { coll: Coll::Allgather, name: "neighbor_exchange", any_p: false, origin: "MPICH (even ranks)", gen: allgather::neighbor_exchange },
+        // ---- ReduceScatter ----
+        AlgoInfo { coll: Coll::ReduceScatter, name: "ring", any_p: true, origin: "NCCL ring", gen: reduce_scatter::ring },
+        AlgoInfo { coll: Coll::ReduceScatter, name: "pairwise", any_p: true, origin: "MPICH", gen: reduce_scatter::pairwise },
+        AlgoInfo { coll: Coll::ReduceScatter, name: "recursive_halving", any_p: false, origin: "MPICH", gen: reduce_scatter::recursive_halving },
+        AlgoInfo { coll: Coll::ReduceScatter, name: "pat", any_p: false, origin: "NCCL PAT (binomial butterfly)", gen: reduce_scatter::pat },
+        // ---- Alltoall ----
+        AlgoInfo { coll: Coll::Alltoall, name: "linear", any_p: true, origin: "Open MPI basic", gen: alltoall::linear },
+        AlgoInfo { coll: Coll::Alltoall, name: "pairwise", any_p: true, origin: "MPICH", gen: alltoall::pairwise },
+        AlgoInfo { coll: Coll::Alltoall, name: "bruck", any_p: true, origin: "Bruck et al.", gen: alltoall::bruck },
+        // ---- Gather / Scatter ----
+        AlgoInfo { coll: Coll::Gather, name: "linear", any_p: true, origin: "Open MPI basic", gen: reduce::gather_linear },
+        AlgoInfo { coll: Coll::Gather, name: "binomial", any_p: true, origin: "MPICH", gen: reduce::gather_binomial },
+        AlgoInfo { coll: Coll::Scatter, name: "linear", any_p: true, origin: "Open MPI basic", gen: reduce::scatter_linear },
+        AlgoInfo { coll: Coll::Scatter, name: "binomial", any_p: true, origin: "MPICH", gen: reduce::scatter_binomial },
+        // ---- Barrier ----
+        AlgoInfo { coll: Coll::Barrier, name: "linear", any_p: true, origin: "ring token", gen: barrier::linear },
+        AlgoInfo { coll: Coll::Barrier, name: "dissemination", any_p: true, origin: "Hensgen et al.", gen: barrier::dissemination },
+        AlgoInfo { coll: Coll::Barrier, name: "tree", any_p: true, origin: "binomial up/down", gen: barrier::tree },
+    ]
+}
+
+/// All algorithm names registered for a collective.
+pub fn algorithms(coll: Coll) -> Vec<&'static AlgoInfo> {
+    registry().iter().filter(|a| a.coll == coll).collect()
+}
+
+pub fn find(coll: Coll, name: &str) -> Option<&'static AlgoInfo> {
+    registry().iter().find(|a| a.coll == coll && a.name == name)
+}
+
+/// Generate the schedule for (collective, algorithm) at a test point.
+pub fn generate(coll: Coll, algo: &str, params: &GenParams) -> GenResult {
+    let info = find(coll, algo)
+        .ok_or_else(|| format!("unknown algorithm {algo:?} for {}", coll.label()))?;
+    if !info.any_p && !params.p.is_power_of_two() {
+        return Err(format!("{}:{} requires power-of-two ranks, got {}", coll.label(), algo, params.p));
+    }
+    if params.p == 0 {
+        return Err("p must be >= 1".into());
+    }
+    if params.root >= params.p {
+        return Err(format!("root {} out of range for p={}", params.root, params.p));
+    }
+    (info.gen)(params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_unique_per_collective() {
+        for coll in Coll::ALL {
+            let names: Vec<_> = algorithms(coll).iter().map(|a| a.name).collect();
+            let mut dedup = names.clone();
+            dedup.sort();
+            dedup.dedup();
+            assert_eq!(names.len(), dedup.len(), "{coll:?}");
+        }
+    }
+
+    #[test]
+    fn every_collective_has_algorithms() {
+        for coll in Coll::ALL {
+            assert!(!algorithms(coll).is_empty(), "{coll:?} has no algorithms");
+        }
+    }
+
+    #[test]
+    fn unknown_algorithm_rejected() {
+        assert!(generate(Coll::Allreduce, "nope", &GenParams::new(4, 64)).is_err());
+    }
+
+    #[test]
+    fn pow2_constraint_enforced() {
+        let r = generate(Coll::Allgather, "pat", &GenParams::new(6, 60));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn coll_parse_round_trip() {
+        for c in Coll::ALL {
+            assert_eq!(Coll::parse(c.label()), Some(c));
+        }
+        assert_eq!(Coll::parse("nope"), None);
+    }
+}

@@ -1,0 +1,328 @@
+//! Rooted collectives: Reduce, Gather, Scatter.
+//!
+//! Conventions (see mod.rs table): Reduce leaves the full reduction in the
+//! root's Output; Gather assembles rank-ordered chunks at the root;
+//! Scatter distributes the root's rank-ordered chunks.
+//!
+//! The binomial gather/scatter variants operate in vrank space and are
+//! registered for root 0 (backends degrade to linear for other roots —
+//! exercising R6's graceful-degradation path).
+
+use crate::goal::Seg;
+
+use super::builder::{chunk, GoalBuilder};
+use super::{GenParams, GenResult};
+
+/// Linear reduce: all ranks send to the root, which folds sequentially.
+pub fn linear(params: &GenParams) -> GenResult {
+    let (p, n, op, root) = (params.p, params.count, params.op, params.root);
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(params.instrument);
+    b.copy(root, Seg::output(0, n), Seg::input(0, n));
+    for s in 0..p {
+        if s == root {
+            continue;
+        }
+        b.send(s, root, Seg::input(0, n));
+        b.recv(root, s, Seg::tmp(0, n));
+        b.reduce_local(root, Seg::output(0, n), Seg::tmp(0, n), op);
+    }
+    Ok(b.finish())
+}
+
+/// Binomial reduce: leaves fold up a distance-doubling tree in
+/// ⌈log₂ p⌉ rounds (MPICH's default for short messages).
+pub fn binomial(params: &GenParams) -> GenResult {
+    let (p, n, op, root) = (params.p, params.count, params.op, params.root);
+    let inst = params.instrument;
+    let vr = |rank: usize| (rank + p - root) % p;
+    let unvr = |v: usize| (v + root) % p;
+    let levels = usize::BITS as usize - (p.max(2) - 1).leading_zeros() as usize;
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
+    for rank in 0..p {
+        let v = vr(rank);
+        if inst {
+            b.tag_begin(rank, "phase:binomial_reduce");
+        }
+        b.copy(rank, Seg::output(0, n), Seg::input(0, n));
+        if p == 1 {
+            if inst {
+                b.tag_end(rank, "phase:binomial_reduce");
+            }
+            continue;
+        }
+        for k in 0..levels {
+            let d = 1usize << k;
+            if v % (2 * d) == 0 && v + d < p {
+                b.recv_tagged(rank, unvr(v + d), Seg::tmp(0, n), k as u32);
+                b.reduce_local(rank, Seg::output(0, n), Seg::tmp(0, n), op);
+            }
+        }
+        if v != 0 {
+            let k = v.trailing_zeros();
+            b.send_tagged(rank, unvr(v - (1 << k)), Seg::output(0, n), k);
+        }
+        if inst {
+            b.tag_end(rank, "phase:binomial_reduce");
+        }
+    }
+    Ok(b.finish())
+}
+
+/// Linear gather: every rank ships its chunk straight to the root.
+pub fn gather_linear(params: &GenParams) -> GenResult {
+    let (p, n, root) = (params.p, params.count, params.root);
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(params.instrument);
+    let (r_off, r_len) = chunk(n, p, root);
+    b.copy(root, Seg::output(r_off, r_len), Seg::input(0, r_len));
+    for s in 0..p {
+        if s == root {
+            continue;
+        }
+        let (off, len) = chunk(n, p, s);
+        b.send(s, root, Seg::input(0, len));
+        b.recv(root, s, Seg::output(off, len));
+    }
+    Ok(b.finish())
+}
+
+/// Binomial gather (root 0): subtree ranges fold up the tree; interior
+/// ranks stage their subtree in Tmp.
+pub fn gather_binomial(params: &GenParams) -> GenResult {
+    let (p, n, root) = (params.p, params.count, params.root);
+    if root != 0 {
+        return Err("binomial gather is registered for root 0 (use linear)".into());
+    }
+    let levels = usize::BITS as usize - (p.max(2) - 1).leading_zeros() as usize;
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(params.instrument);
+    // contiguous chunk range [lo, hi) → (elem offset, len)
+    let range_of = |lo: usize, hi: usize| -> (usize, usize) {
+        let hi = hi.min(p);
+        let (off_lo, _) = chunk(n, p, lo);
+        let (off_hi, len_hi) = chunk(n, p, hi - 1);
+        (off_lo, off_hi + len_hi - off_lo)
+    };
+    for rank in 0..p {
+        // root accumulates straight into Output; interior ranks into Tmp at
+        // absolute offsets.
+        let dst = |off: usize, len: usize| {
+            if rank == 0 {
+                Seg::output(off, len)
+            } else {
+                Seg::tmp(off, len)
+            }
+        };
+        let (own_off, own_len) = chunk(n, p, rank);
+        b.copy(rank, dst(own_off, own_len), Seg::input(0, own_len));
+        for k in 0..levels {
+            let d = 1usize << k;
+            if rank % (2 * d) == 0 && rank + d < p {
+                let (off, len) = range_of(rank + d, rank + 2 * d);
+                b.recv_tagged(rank, rank + d, dst(off, len), k as u32);
+            }
+        }
+        if rank != 0 {
+            let k = rank.trailing_zeros() as usize;
+            let span = 1usize << k;
+            let (off, len) = range_of(rank, rank + span);
+            b.send_tagged(rank, rank - span, Seg::tmp(off, len), k as u32);
+        }
+    }
+    Ok(b.finish())
+}
+
+/// Linear scatter: the root ships each rank its chunk.
+pub fn scatter_linear(params: &GenParams) -> GenResult {
+    let (p, n, root) = (params.p, params.count, params.root);
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(params.instrument);
+    let (r_off, r_len) = chunk(n, p, root);
+    b.copy(root, Seg::output(0, r_len), Seg::input(r_off, r_len));
+    for s in 0..p {
+        if s == root {
+            continue;
+        }
+        let (off, len) = chunk(n, p, s);
+        b.send(root, s, Seg::input(off, len));
+        b.recv(s, root, Seg::output(0, len));
+    }
+    Ok(b.finish())
+}
+
+/// Binomial scatter (root 0): the mirror of binomial gather — subtree
+/// ranges flow down in halving order.
+pub fn scatter_binomial(params: &GenParams) -> GenResult {
+    let (p, n, root) = (params.p, params.count, params.root);
+    if root != 0 {
+        return Err("binomial scatter is registered for root 0 (use linear)".into());
+    }
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(params.instrument);
+    let levels = usize::BITS as usize - (p.max(2) - 1).leading_zeros() as usize;
+    let range_of = |lo: usize, hi: usize| -> (usize, usize) {
+        let hi = hi.min(p);
+        let (off_lo, _) = chunk(n, p, lo);
+        let (off_hi, len_hi) = chunk(n, p, hi - 1);
+        (off_lo, off_hi + len_hi - off_lo)
+    };
+    for rank in 0..p {
+        let (own_off, own_len) = chunk(n, p, rank);
+        let span =
+            if rank == 0 { 1usize << levels } else { 1usize << rank.trailing_zeros() };
+        if rank == 0 {
+            // root stages the full payload in Tmp at absolute offsets
+            b.copy(rank, Seg::tmp(0, n), Seg::input(0, n));
+        } else {
+            let parent = rank - span;
+            let (off, len) = range_of(rank, rank + span);
+            b.recv_tagged(rank, parent, Seg::tmp(off, len), span.trailing_zeros());
+        }
+        let mut d = span / 2;
+        while d >= 1 {
+            if rank + d < p {
+                let (off, len) = range_of(rank + d, rank + 2 * d);
+                b.send_tagged(rank, rank + d, Seg::tmp(off, len), d.trailing_zeros());
+            }
+            d /= 2;
+        }
+        b.copy(rank, Seg::output(0, own_len), Seg::tmp(own_off, own_len));
+    }
+    Ok(b.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_validate() {
+        for p in [1usize, 2, 3, 5, 8, 13] {
+            let n = p * 4;
+            for gen in [linear, binomial, gather_linear, scatter_linear] {
+                for root in [0, p / 2] {
+                    let g = gen(&GenParams::new(p, n).with_root(root)).unwrap();
+                    assert_eq!(g.validate(), Ok(()), "p={p} root={root}");
+                }
+            }
+            for gen in [gather_binomial, scatter_binomial] {
+                let g = gen(&GenParams::new(p, n)).unwrap();
+                assert_eq!(g.validate(), Ok(()), "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn binomial_root_restriction() {
+        assert!(gather_binomial(&GenParams::new(4, 16).with_root(1)).is_err());
+        assert!(scatter_binomial(&GenParams::new(4, 16).with_root(2)).is_err());
+    }
+
+    #[test]
+    fn binomial_reduce_send_count() {
+        let g = binomial(&GenParams::new(8, 16)).unwrap();
+        // every non-root sends exactly once
+        for r in 1..8 {
+            let sends = g.ranks[r]
+                .ops
+                .iter()
+                .filter(|o| matches!(o.kind, crate::goal::OpKind::Send { .. }))
+                .count();
+            assert_eq!(sends, 1, "rank {r}");
+        }
+    }
+}
+
+/// Rabenseifner (reduce-scatter + gather) reduce: the MPICH large-message
+/// algorithm.  Recursive-halving reduce-scatter leaves chunk r at rank r;
+/// a binomial gather then funnels chunks to the root.  Registered for
+/// root 0, power-of-two ranks, uniform blocks (MPICH falls back to
+/// binomial otherwise — and so do the backends here).
+pub fn rabenseifner(params: &GenParams) -> GenResult {
+    let (p, n, op, root) = (params.p, params.count, params.op, params.root);
+    if root != 0 {
+        return Err("rabenseifner reduce is registered for root 0".into());
+    }
+    if !p.is_power_of_two() {
+        return Err(format!("rabenseifner reduce needs power-of-two p, got {p}"));
+    }
+    if n % p != 0 {
+        return Err(format!("rabenseifner reduce needs count % p == 0 (count={n}, p={p})"));
+    }
+    let c = n / p;
+    let inst = params.instrument;
+    let steps = p.trailing_zeros() as usize;
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
+    let levels = usize::BITS as usize - (p.max(2) - 1).leading_zeros() as usize;
+    let range_of = |lo: usize, hi: usize| -> (usize, usize) {
+        let hi = hi.min(p);
+        (lo * c, (hi - lo) * c)
+    };
+    for rank in 0..p {
+        if inst {
+            b.tag_begin(rank, "init:mem-move");
+        }
+        b.copy(rank, Seg::tmp(0, n), Seg::input(0, n));
+        if inst {
+            b.tag_end(rank, "init:mem-move");
+            b.tag_begin(rank, "phase:redscat");
+        }
+        // --- recursive-halving reduce-scatter on Tmp (work [0,n), recv [n,2n)) ---
+        let (mut lo, mut hi) = (0usize, p);
+        for j in 0..steps {
+            let mask = p >> (j + 1);
+            let partner = rank ^ mask;
+            let mid = lo + (hi - lo) / 2;
+            let (my_lo, my_hi, send_lo, send_hi) =
+                if rank & mask == 0 { (lo, mid, mid, hi) } else { (mid, hi, lo, mid) };
+            b.sendrecv_tagged(
+                rank,
+                partner,
+                Seg::tmp(send_lo * c, (send_hi - send_lo) * c),
+                partner,
+                Seg::tmp(n + my_lo * c, (my_hi - my_lo) * c),
+                j as u32,
+                j as u32,
+            );
+            b.reduce_local(
+                rank,
+                Seg::tmp(my_lo * c, (my_hi - my_lo) * c),
+                Seg::tmp(n + my_lo * c, (my_hi - my_lo) * c),
+                op,
+            );
+            lo = my_lo;
+            hi = my_hi;
+        }
+        debug_assert_eq!((lo, hi), (rank, rank + 1));
+        if inst {
+            b.tag_end(rank, "phase:redscat");
+            b.tag_begin(rank, "phase:gather");
+        }
+        // --- binomial gather of chunk ranges to rank 0 ---
+        // rank 0 assembles into Output; interior ranks accumulate their
+        // subtree's range in Tmp at absolute offsets.
+        let into = |rank: usize, off: usize, len: usize| {
+            if rank == 0 {
+                Seg::output(off, len)
+            } else {
+                Seg::tmp(off, len)
+            }
+        };
+        if rank == 0 {
+            b.copy(rank, Seg::output(0, c), Seg::tmp(0, c));
+        }
+        for k in 0..levels {
+            let d = 1usize << k;
+            if rank % (2 * d) == 0 && rank + d < p {
+                let (off, len) = range_of(rank + d, rank + 2 * d);
+                b.recv_tagged(rank, rank + d, into(rank, off, len), (100 + k) as u32);
+            }
+        }
+        if rank != 0 {
+            let k = rank.trailing_zeros() as usize;
+            let span = 1usize << k;
+            let (off, len) = range_of(rank, rank + span);
+            b.send_tagged(rank, rank - span, Seg::tmp(off, len), (100 + k) as u32);
+        }
+        if inst {
+            b.tag_end(rank, "phase:gather");
+        }
+    }
+    Ok(b.finish())
+}

@@ -1,0 +1,304 @@
+//! Reduce-scatter reference algorithms.
+//!
+//! Convention: `count` total elements in `Input[0..count]`; rank r ends
+//! with `Output[0..c_r]` = the op-reduction of chunk r over all ranks,
+//! `(off_r, c_r) = chunk(count, p, r)`.
+
+use crate::goal::Seg;
+
+use super::builder::{chunk, GoalBuilder};
+use super::{GenParams, GenResult};
+
+/// Ring reduce-scatter (NCCL's workhorse): p−1 neighbor steps over a work
+/// buffer; bandwidth-optimal (p−1)/p·n per rank.
+pub fn ring(params: &GenParams) -> GenResult {
+    let (p, n, op) = (params.p, params.count, params.op);
+    let inst = params.instrument;
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
+    // Tmp[0..n) is the work buffer; Tmp[n..) the per-step receive scratch.
+    for rank in 0..p {
+        let (own_off, own_len) = chunk(n, p, rank);
+        if inst {
+            b.tag_begin(rank, "init:mem-move");
+        }
+        b.copy(rank, Seg::tmp(0, n), Seg::input(0, n));
+        if inst {
+            b.tag_end(rank, "init:mem-move");
+        }
+        if p == 1 {
+            b.copy(rank, Seg::output(0, own_len), Seg::tmp(own_off, own_len));
+            continue;
+        }
+        if inst {
+            b.tag_begin(rank, "phase:ring");
+        }
+        let next = (rank + 1) % p;
+        let prev = (rank + p - 1) % p;
+        // schedule shifted so rank r ends owning chunk r
+        for s in 0..p - 1 {
+            let send_c = (rank + p - 1 - s) % p;
+            let recv_c = (rank + p - 2 - s) % p;
+            let (soff, slen) = chunk(n, p, send_c);
+            let (roff, rlen) = chunk(n, p, recv_c);
+            if inst {
+                b.tag_begin(rank, &format!("ring:comm:{s}"));
+            }
+            b.sendrecv_tagged(
+                rank,
+                next,
+                Seg::tmp(soff, slen),
+                prev,
+                Seg::tmp(n + roff, rlen),
+                s as u32,
+                s as u32,
+            );
+            if inst {
+                b.tag_end(rank, &format!("ring:comm:{s}"));
+                b.tag_begin(rank, &format!("ring:reduction:{s}"));
+            }
+            b.reduce_local(rank, Seg::tmp(roff, rlen), Seg::tmp(n + roff, rlen), op);
+            if inst {
+                b.tag_end(rank, &format!("ring:reduction:{s}"));
+            }
+        }
+        if inst {
+            b.tag_end(rank, "phase:ring");
+            b.tag_begin(rank, "final:mem-move");
+        }
+        b.copy(rank, Seg::output(0, own_len), Seg::tmp(own_off, own_len));
+        if inst {
+            b.tag_end(rank, "final:mem-move");
+        }
+    }
+    Ok(b.finish())
+}
+
+/// MPICH pairwise exchange: p−1 strided sendrecvs straight out of Input —
+/// no staging, latency O(p), any rank count.
+pub fn pairwise(params: &GenParams) -> GenResult {
+    let (p, n, op) = (params.p, params.count, params.op);
+    let inst = params.instrument;
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
+    for rank in 0..p {
+        let (own_off, own_len) = chunk(n, p, rank);
+        if inst {
+            b.tag_begin(rank, "init:mem-move");
+        }
+        b.copy(rank, Seg::output(0, own_len), Seg::input(own_off, own_len));
+        if inst {
+            b.tag_end(rank, "init:mem-move");
+            b.tag_begin(rank, "phase:pairwise");
+        }
+        for s in 1..p {
+            let to = (rank + s) % p;
+            let from = (rank + p - s) % p;
+            let (toff, tlen) = chunk(n, p, to);
+            b.sendrecv_tagged(
+                rank,
+                to,
+                Seg::input(toff, tlen),
+                from,
+                Seg::tmp(0, own_len),
+                s as u32,
+                s as u32,
+            );
+            b.reduce_local(rank, Seg::output(0, own_len), Seg::tmp(0, own_len), op);
+        }
+        if inst {
+            b.tag_end(rank, "phase:pairwise");
+        }
+    }
+    Ok(b.finish())
+}
+
+/// Recursive halving (power-of-two ranks, uniform blocks): the
+/// reduce-scatter half of Rabenseifner, log₂ p steps.
+pub fn recursive_halving(params: &GenParams) -> GenResult {
+    let (p, n, op) = (params.p, params.count, params.op);
+    if !p.is_power_of_two() {
+        return Err(format!("recursive_halving needs power-of-two p, got {p}"));
+    }
+    if n % p != 0 {
+        return Err(format!("recursive_halving needs count % p == 0 (count={n}, p={p})"));
+    }
+    let c = n / p;
+    let inst = params.instrument;
+    let steps = p.trailing_zeros() as usize;
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
+    for rank in 0..p {
+        if inst {
+            b.tag_begin(rank, "init:mem-move");
+        }
+        b.copy(rank, Seg::tmp(0, n), Seg::input(0, n));
+        if inst {
+            b.tag_end(rank, "init:mem-move");
+            b.tag_begin(rank, "phase:halving");
+        }
+        // owned chunk range [lo, hi) in chunk units
+        let (mut lo, mut hi) = (0usize, p);
+        for j in 0..steps {
+            let mask = p >> (j + 1);
+            let partner = rank ^ mask;
+            let mid = lo + (hi - lo) / 2;
+            let (my_lo, my_hi, send_lo, send_hi) =
+                if rank & mask == 0 { (lo, mid, mid, hi) } else { (mid, hi, lo, mid) };
+            if inst {
+                b.tag_begin(rank, &format!("halving:comm:{j}"));
+            }
+            b.sendrecv_tagged(
+                rank,
+                partner,
+                Seg::tmp(send_lo * c, (send_hi - send_lo) * c),
+                partner,
+                Seg::tmp(n + my_lo * c, (my_hi - my_lo) * c),
+                j as u32,
+                j as u32,
+            );
+            if inst {
+                b.tag_end(rank, &format!("halving:comm:{j}"));
+                b.tag_begin(rank, &format!("halving:reduction:{j}"));
+            }
+            b.reduce_local(
+                rank,
+                Seg::tmp(my_lo * c, (my_hi - my_lo) * c),
+                Seg::tmp(n + my_lo * c, (my_hi - my_lo) * c),
+                op,
+            );
+            if inst {
+                b.tag_end(rank, &format!("halving:reduction:{j}"));
+            }
+            lo = my_lo;
+            hi = my_hi;
+        }
+        debug_assert_eq!((lo, hi), (rank, rank + 1));
+        if inst {
+            b.tag_end(rank, "phase:halving");
+            b.tag_begin(rank, "final:mem-move");
+        }
+        b.copy(rank, Seg::output(0, c), Seg::tmp(lo * c, c));
+        if inst {
+            b.tag_end(rank, "final:mem-move");
+        }
+    }
+    Ok(b.finish())
+}
+
+/// NCCL PAT-style binomial butterfly reduce-scatter with *locality-aware
+/// partner ordering* (power-of-two ranks, uniform blocks).
+///
+/// The mirror of [`crate::collectives::allgather::pat`]: standard recursive
+/// halving sends its biggest half-buffer to the most distant partner first;
+/// PAT flips the mask order (ascending, distance doubling) so the n/2-sized
+/// exchange happens with the rank-distance-1 (intra-node) partner and only
+/// the smallest residual travels far.  Kept blocks become strided, so each
+/// step packs its send set into a contiguous staging region (extra data
+/// movement — the trade PAT makes for locality).
+///
+/// Tmp layout: work `[0, n)`, send-pack `[n, 1.5n)`, recv `[1.5n, 2n)`.
+pub fn pat(params: &GenParams) -> GenResult {
+    let (p, n, op) = (params.p, params.count, params.op);
+    if !p.is_power_of_two() {
+        return Err(format!("pat reduce_scatter needs power-of-two p, got {p}"));
+    }
+    if n % p != 0 {
+        return Err(format!("pat reduce_scatter needs count % p == 0 (count={n}, p={p})"));
+    }
+    let c = n / p;
+    let inst = params.instrument;
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
+    for rank in 0..p {
+        if inst {
+            b.tag_begin(rank, "init:mem-move");
+        }
+        b.copy(rank, Seg::tmp(0, n), Seg::input(0, n));
+        if inst {
+            b.tag_end(rank, "init:mem-move");
+            b.tag_begin(rank, "phase:pat");
+        }
+        // blocks still being accumulated at this rank
+        let mut kept: Vec<usize> = (0..p).collect();
+        let mut mask = 1usize;
+        let mut step = 0u32;
+        while mask < p {
+            let partner = rank ^ mask;
+            let send_set: Vec<usize> =
+                kept.iter().copied().filter(|blk| blk & mask != rank & mask).collect();
+            kept.retain(|blk| blk & mask == rank & mask);
+            // pack the send half into contiguous staging
+            for (i, &blk) in send_set.iter().enumerate() {
+                b.copy(rank, Seg::tmp(n + i * c, c), Seg::tmp(blk * c, c));
+            }
+            let len = send_set.len() * c;
+            b.sendrecv_tagged(
+                rank,
+                partner,
+                Seg::tmp(n, len),
+                partner,
+                Seg::tmp(n + n / 2, len),
+                step,
+                step,
+            );
+            // partner packed in ITS kept order == my kept order (same
+            // low-bit filter applied to an identically ordered list)
+            for (i, &blk) in kept.iter().enumerate() {
+                b.reduce_local(
+                    rank,
+                    Seg::tmp(blk * c, c),
+                    Seg::tmp(n + n / 2 + i * c, c),
+                    op,
+                );
+            }
+            mask <<= 1;
+            step += 1;
+        }
+        debug_assert_eq!(kept, vec![rank]);
+        if inst {
+            b.tag_end(rank, "phase:pat");
+            b.tag_begin(rank, "final:mem-move");
+        }
+        b.copy(rank, Seg::output(0, c), Seg::tmp(rank * c, c));
+        if inst {
+            b.tag_end(rank, "final:mem-move");
+        }
+    }
+    Ok(b.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_validate() {
+        for p in [1usize, 2, 3, 5, 8] {
+            let n = p * 6;
+            for gen in [ring, pairwise] {
+                let g = gen(&GenParams::new(p, n)).unwrap();
+                assert_eq!(g.validate(), Ok(()), "p={p}");
+            }
+        }
+        for p in [1usize, 2, 4, 8, 16] {
+            let g = recursive_halving(&GenParams::new(p, p * 4)).unwrap();
+            assert_eq!(g.validate(), Ok(()));
+        }
+    }
+
+    #[test]
+    fn halving_owned_range_is_own_chunk() {
+        // the debug_assert inside the generator checks lo==rank
+        let _ = recursive_halving(&GenParams::new(16, 64)).unwrap();
+    }
+
+    #[test]
+    fn constraints_enforced() {
+        assert!(recursive_halving(&GenParams::new(6, 12)).is_err());
+        assert!(recursive_halving(&GenParams::new(4, 10)).is_err());
+    }
+
+    #[test]
+    fn ring_volume_optimal() {
+        let (p, n) = (8, 64);
+        let g = ring(&GenParams::new(p, n)).unwrap();
+        assert_eq!(g.total_wire_bytes(), (p - 1) * n * 4);
+    }
+}

@@ -1,0 +1,421 @@
+//! Experiment specification and control plane (paper Sec. III-A, R3/R4).
+//!
+//! Two descriptors decouple *what to run* from *how to run it*:
+//!
+//! - **test.json** ([`TestSpec`]) — portable experiment intent: collective,
+//!   message sizes, scale sweep, requested algorithms and knobs.  No
+//!   platform details; control is expressed abstractly ("use algorithm X",
+//!   "set max_rndv_rails=4") and resolved per platform.
+//! - **env.json** ([`EnvSpec`]) — the platform descriptor: which system
+//!   profile, allocation policy, rank order, available backends and
+//!   metadata verbosity.  Created once per machine, reused by campaigns.
+//!
+//! [`resolve`] turns (test, env) into concrete [`TestPoint`]s recording
+//! both the *requested* and the *effective* configuration (R5) — knobs a
+//! backend does not support degrade gracefully and the downgrade is kept
+//! in the record (R6).
+
+use crate::backends::{self, Backend, KnobOutcome};
+use crate::collectives::Coll;
+use crate::json::Json;
+use crate::netmodel::NetConfig;
+use crate::results::Granularity;
+use crate::sync::SyncMethod;
+use crate::topology::{profile_by_name, AllocPolicy, RankOrder, SystemProfile};
+use crate::util::parse_size;
+
+/// Portable experiment intent (test.json).
+#[derive(Debug, Clone)]
+pub struct TestSpec {
+    pub name: String,
+    pub backend: String,
+    pub collective: Coll,
+    /// Message sizes in bytes (per-collective meaning follows libpico
+    /// conventions: total payload).
+    pub sizes: Vec<usize>,
+    /// Node counts to sweep.
+    pub nodes: Vec<usize>,
+    pub ppn: usize,
+    /// Requested algorithms; empty = backend default only; `["*"]` = the
+    /// default plus every exposed choice (tuning sweep).
+    pub algorithms: Vec<String>,
+    /// Abstract knob requests, resolved per backend.
+    pub knobs: Vec<(String, String)>,
+    pub iterations: usize,
+    pub warmup: usize,
+    pub granularity: Granularity,
+    pub instrument: bool,
+    pub sync: SyncMethod,
+    pub seed: u64,
+}
+
+impl TestSpec {
+    pub fn new(name: &str, backend: &str, coll: Coll) -> Self {
+        Self {
+            name: name.to_string(),
+            backend: backend.to_string(),
+            collective: coll,
+            sizes: vec![1024],
+            nodes: vec![2],
+            ppn: 1,
+            algorithms: vec![],
+            knobs: vec![],
+            iterations: 10,
+            warmup: 2,
+            granularity: Granularity::Summary,
+            instrument: false,
+            sync: SyncMethod::default(),
+            seed: 42,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("backend", self.backend.as_str())
+            .set("collective", self.collective.label())
+            .set("sizes", Json::Arr(self.sizes.iter().map(|&s| s.into()).collect()))
+            .set("nodes", Json::Arr(self.nodes.iter().map(|&n| n.into()).collect()))
+            .set("ppn", self.ppn)
+            .set(
+                "algorithms",
+                Json::Arr(self.algorithms.iter().map(|a| a.as_str().into()).collect()),
+            )
+            .set(
+                "knobs",
+                Json::Obj(self.knobs.iter().map(|(k, v)| (k.clone(), v.as_str().into())).collect()),
+            )
+            .set("iterations", self.iterations)
+            .set("warmup", self.warmup)
+            .set("granularity", self.granularity.label())
+            .set("instrument", self.instrument)
+            .set("sync", self.sync.label())
+            .set("seed", self.seed)
+    }
+
+    pub fn from_json(j: &Json) -> Result<TestSpec, String> {
+        let req_str = |k: &str| -> Result<String, String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(String::from)
+                .ok_or_else(|| format!("test.json: missing string field {k:?}"))
+        };
+        let coll_s = req_str("collective")?;
+        let collective =
+            Coll::parse(&coll_s).ok_or_else(|| format!("unknown collective {coll_s:?}"))?;
+        let sizes = match j.get("sizes") {
+            Some(Json::Arr(a)) => a
+                .iter()
+                .map(|v| match v {
+                    Json::Num(_) => v.as_usize().ok_or_else(|| "bad size".to_string()),
+                    Json::Str(s) => parse_size(s).ok_or_else(|| format!("bad size {s:?}")),
+                    _ => Err("bad size entry".into()),
+                })
+                .collect::<Result<Vec<_>, String>>()?,
+            _ => return Err("test.json: sizes must be an array".into()),
+        };
+        let nodes = j
+            .get("nodes")
+            .and_then(Json::as_arr)
+            .ok_or("test.json: nodes must be an array")?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| "bad node count".to_string()))
+            .collect::<Result<Vec<_>, String>>()?;
+        let algorithms = match j.get("algorithms") {
+            Some(Json::Arr(a)) => {
+                a.iter().filter_map(Json::as_str).map(String::from).collect()
+            }
+            _ => vec![],
+        };
+        let knobs = match j.get("knobs") {
+            Some(Json::Obj(o)) => o
+                .iter()
+                .map(|(k, v)| {
+                    let vs = match v {
+                        Json::Str(s) => s.clone(),
+                        Json::Num(n) => format!("{n}"),
+                        other => other.to_string_compact(),
+                    };
+                    (k.clone(), vs)
+                })
+                .collect(),
+            _ => vec![],
+        };
+        let gran_s = j.get("granularity").and_then(Json::as_str).unwrap_or("summary");
+        let sync_s = j.get("sync").and_then(Json::as_str).unwrap_or("barrier:dissemination");
+        Ok(TestSpec {
+            name: req_str("name")?,
+            backend: req_str("backend")?,
+            collective,
+            sizes,
+            nodes,
+            ppn: j.get("ppn").and_then(Json::as_usize).unwrap_or(1),
+            algorithms,
+            knobs,
+            iterations: j.get("iterations").and_then(Json::as_usize).unwrap_or(10),
+            warmup: j.get("warmup").and_then(Json::as_usize).unwrap_or(2),
+            granularity: Granularity::parse(gran_s)
+                .ok_or_else(|| format!("unknown granularity {gran_s:?}"))?,
+            instrument: j.get("instrument").and_then(Json::as_bool).unwrap_or(false),
+            sync: SyncMethod::ALL
+                .into_iter()
+                .find(|m| m.label() == sync_s)
+                .ok_or_else(|| format!("unknown sync method {sync_s:?}"))?,
+            seed: j.get("seed").and_then(Json::as_u64).unwrap_or(42),
+        })
+    }
+}
+
+/// Platform descriptor (env.json).
+#[derive(Debug, Clone)]
+pub struct EnvSpec {
+    pub system: String,
+    pub alloc_policy: AllocPolicy,
+    pub rank_order: RankOrder,
+    pub backends_available: Vec<String>,
+    /// Metadata verbosity: 0 minimal, 1 standard, 2 rich.
+    pub metadata_verbosity: u8,
+}
+
+impl EnvSpec {
+    pub fn for_system(system: &str) -> Self {
+        Self {
+            system: system.to_string(),
+            alloc_policy: AllocPolicy::Scattered,
+            rank_order: RankOrder::Block,
+            backends_available: vec![
+                "libpico".into(),
+                "openmpi-sim".into(),
+                "craympich-sim".into(),
+                "simccl-2.22".into(),
+                "simccl-2.23".into(),
+            ],
+            metadata_verbosity: 1,
+        }
+    }
+
+    pub fn profile(&self) -> Result<SystemProfile, String> {
+        profile_by_name(&self.system).ok_or_else(|| format!("unknown system {:?}", self.system))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let policy = match self.alloc_policy {
+            AllocPolicy::Contiguous => Json::Str("contiguous".into()),
+            AllocPolicy::Scattered => Json::Str("scattered".into()),
+            AllocPolicy::BlockScattered { block } => {
+                Json::obj().set("block_scattered", block)
+            }
+        };
+        Json::obj()
+            .set("system", self.system.as_str())
+            .set("alloc_policy", policy)
+            .set(
+                "rank_order",
+                match self.rank_order {
+                    RankOrder::Block => "block",
+                    RankOrder::Cyclic => "cyclic",
+                },
+            )
+            .set(
+                "backends",
+                Json::Arr(self.backends_available.iter().map(|b| b.as_str().into()).collect()),
+            )
+            .set("metadata_verbosity", self.metadata_verbosity as usize)
+    }
+
+    pub fn from_json(j: &Json) -> Result<EnvSpec, String> {
+        let system = j
+            .get("system")
+            .and_then(Json::as_str)
+            .ok_or("env.json: missing system")?
+            .to_string();
+        let alloc_policy = match j.get("alloc_policy") {
+            Some(Json::Str(s)) if s == "contiguous" => AllocPolicy::Contiguous,
+            Some(Json::Str(s)) if s == "scattered" => AllocPolicy::Scattered,
+            Some(o) => match o.get("block_scattered").and_then(Json::as_usize) {
+                Some(block) => AllocPolicy::BlockScattered { block },
+                None => return Err("env.json: bad alloc_policy".into()),
+            },
+            None => AllocPolicy::Scattered,
+        };
+        let rank_order = match j.get("rank_order").and_then(Json::as_str) {
+            Some("cyclic") => RankOrder::Cyclic,
+            _ => RankOrder::Block,
+        };
+        let backends_available = match j.get("backends") {
+            Some(Json::Arr(a)) => a.iter().filter_map(Json::as_str).map(String::from).collect(),
+            _ => EnvSpec::for_system(&system).backends_available,
+        };
+        Ok(EnvSpec {
+            system,
+            alloc_policy,
+            rank_order,
+            backends_available,
+            metadata_verbosity: j
+                .get("metadata_verbosity")
+                .and_then(Json::as_usize)
+                .unwrap_or(1) as u8,
+        })
+    }
+}
+
+/// One concrete measurement configuration after resolution.
+#[derive(Debug, Clone)]
+pub struct TestPoint {
+    pub collective: Coll,
+    pub bytes: usize,
+    pub nodes: usize,
+    pub ppn: usize,
+    /// None = backend default selection.
+    pub algorithm: Option<String>,
+    pub net_cfg: NetConfig,
+    /// Knobs that the backend rejected/ignored, for the record (R6).
+    pub degraded_knobs: Vec<(String, String)>,
+}
+
+/// Resolve a (test, env) pair into concrete test points.
+pub fn resolve(test: &TestSpec, env: &EnvSpec) -> Result<(Vec<TestPoint>, Box<dyn Backend>), String> {
+    if !env.backends_available.iter().any(|b| b == &test.backend || backends_alias(b, &test.backend))
+    {
+        return Err(format!(
+            "backend {:?} not available on {:?} (env.json lists {:?})",
+            test.backend, env.system, env.backends_available
+        ));
+    }
+    let backend =
+        backends::by_name(&test.backend).ok_or_else(|| format!("unknown backend {:?}", test.backend))?;
+    if backend.algorithms(test.collective).is_empty() {
+        return Err(format!(
+            "backend {} does not implement {}",
+            backend.name(),
+            test.collective.label()
+        ));
+    }
+
+    // knobs → NetConfig (+ degradations)
+    let mut net_cfg = NetConfig::default();
+    let mut degraded = Vec::new();
+    for (k, v) in &test.knobs {
+        match backend.apply_knob(k, v, &mut net_cfg) {
+            KnobOutcome::Applied => {}
+            KnobOutcome::Unsupported(why) => degraded.push((k.clone(), why)),
+            KnobOutcome::Invalid(why) => return Err(format!("knob {k}={v}: {why}")),
+        }
+    }
+
+    // algorithm list expansion
+    let algo_reqs: Vec<Option<String>> = if test.algorithms.is_empty() {
+        vec![None]
+    } else if test.algorithms.iter().any(|a| a == "*") {
+        let mut v: Vec<Option<String>> = vec![None];
+        v.extend(
+            backend.algorithms(test.collective).into_iter().map(|a| Some(a.to_string())),
+        );
+        v
+    } else {
+        test.algorithms.iter().cloned().map(Some).collect()
+    };
+
+    let mut points = Vec::new();
+    for &nodes in &test.nodes {
+        for &bytes in &test.sizes {
+            for algo in &algo_reqs {
+                points.push(TestPoint {
+                    collective: test.collective,
+                    bytes,
+                    nodes,
+                    ppn: test.ppn,
+                    algorithm: algo.clone(),
+                    net_cfg,
+                    degraded_knobs: degraded.clone(),
+                });
+            }
+        }
+    }
+    Ok((points, backend))
+}
+
+fn backends_alias(available: &str, requested: &str) -> bool {
+    matches!(
+        (available, requested),
+        ("openmpi-sim", "openmpi") | ("craympich-sim", "craympich") | ("simccl-2.22", "simccl")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_spec_json_round_trip() {
+        let mut t = TestSpec::new("sweep", "openmpi", Coll::Allreduce);
+        t.sizes = vec![32, 1 << 20];
+        t.nodes = vec![2, 8];
+        t.algorithms = vec!["ring".into(), "rabenseifner".into()];
+        t.knobs = vec![("max_rndv_rails".into(), "4".into())];
+        let j = t.to_json();
+        let back = TestSpec::from_json(&j).unwrap();
+        assert_eq!(back.name, t.name);
+        assert_eq!(back.sizes, t.sizes);
+        assert_eq!(back.algorithms, t.algorithms);
+        assert_eq!(back.knobs, t.knobs);
+        assert_eq!(back.collective, Coll::Allreduce);
+    }
+
+    #[test]
+    fn sizes_accept_human_strings() {
+        let j = Json::parse(
+            r#"{"name":"t","backend":"openmpi","collective":"bcast",
+                "sizes":["32B","512MiB"],"nodes":[4]}"#,
+        )
+        .unwrap();
+        let t = TestSpec::from_json(&j).unwrap();
+        assert_eq!(t.sizes, vec![32, 512 << 20]);
+    }
+
+    #[test]
+    fn env_spec_round_trip() {
+        let e = EnvSpec::for_system("leonardo");
+        let back = EnvSpec::from_json(&e.to_json()).unwrap();
+        assert_eq!(back.system, "leonardo");
+        assert_eq!(back.backends_available, e.backends_available);
+        assert!(back.profile().is_ok());
+    }
+
+    #[test]
+    fn resolve_expands_star() {
+        let mut t = TestSpec::new("sweep", "openmpi", Coll::Allreduce);
+        t.algorithms = vec!["*".into()];
+        t.sizes = vec![64, 128];
+        t.nodes = vec![2];
+        let env = EnvSpec::for_system("leonardo");
+        let (points, backend) = resolve(&t, &env).unwrap();
+        // default + 5 exposed algorithms, × 2 sizes
+        assert_eq!(points.len(), 2 * (1 + backend.algorithms(Coll::Allreduce).len()));
+    }
+
+    #[test]
+    fn resolve_records_degraded_knobs() {
+        let mut t = TestSpec::new("k", "craympich", Coll::Allreduce);
+        t.knobs = vec![("max_rndv_rails".into(), "4".into())];
+        let env = EnvSpec::for_system("lumi");
+        let (points, _) = resolve(&t, &env).unwrap();
+        assert_eq!(points[0].degraded_knobs.len(), 1);
+        assert_eq!(points[0].net_cfg.max_rndv_rails, None);
+    }
+
+    #[test]
+    fn resolve_rejects_unknown_backend() {
+        let t = TestSpec::new("x", "mvapich", Coll::Allreduce);
+        let env = EnvSpec::for_system("leonardo");
+        assert!(resolve(&t, &env).is_err());
+    }
+
+    #[test]
+    fn resolve_rejects_invalid_knob() {
+        let mut t = TestSpec::new("k", "openmpi", Coll::Allreduce);
+        t.knobs = vec![("max_rndv_rails".into(), "banana".into())];
+        let env = EnvSpec::for_system("leonardo");
+        assert!(resolve(&t, &env).is_err());
+    }
+}

@@ -1,0 +1,306 @@
+//! GOAL-like schedule IR — the common language of the whole system.
+//!
+//! The paper's ATLAHS toolchain replays collectives as GOAL traces
+//! (Group Operation Assembly Language [64]): per-rank DAGs of send / recv /
+//! calc operations.  We adopt the same IR as the *internal* representation:
+//!
+//! - `collectives::*` generate a [`Goal`] for each (algorithm, p, bytes);
+//! - `sim::Engine` executes a Goal on the discrete-event cluster model;
+//! - `execute::LocalExecutor` interprets the same Goal with real buffers
+//!   and real reductions through the PJRT/Pallas artifact;
+//! - `tracer` classifies a Goal's transfers by topology tier;
+//! - `replay` stitches per-invocation Goals into application timelines.
+//!
+//! Ops carry *data semantics* ([`Seg`] references into per-rank buffers) so
+//! execute-mode can verify numerics, and *tag spans* (instrumentation
+//! regions, Fig. 5) so the simulator can attribute time to algorithm phases.
+
+
+/// Index of an op within one rank's program.
+pub type OpId = usize;
+
+/// Which per-rank buffer a segment lives in.  Execute mode materializes
+/// these as f32 vectors; simulate mode only uses lengths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Buf {
+    /// Collective input (sendbuf).
+    Input,
+    /// Collective output (recvbuf).
+    Output,
+    /// Scratch buffer (staging, packing).
+    Tmp,
+}
+
+/// A contiguous segment of a rank-local buffer, in *elements*.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Seg {
+    pub buf: Buf,
+    pub off: usize,
+    pub len: usize,
+}
+
+impl Seg {
+    pub fn new(buf: Buf, off: usize, len: usize) -> Self {
+        Self { buf, off, len }
+    }
+
+    pub fn input(off: usize, len: usize) -> Self {
+        Self::new(Buf::Input, off, len)
+    }
+
+    pub fn output(off: usize, len: usize) -> Self {
+        Self::new(Buf::Output, off, len)
+    }
+
+    pub fn tmp(off: usize, len: usize) -> Self {
+        Self::new(Buf::Tmp, off, len)
+    }
+
+    pub fn bytes(&self, elem_bytes: usize) -> usize {
+        self.len * elem_bytes
+    }
+}
+
+/// Reduction operator (mirrors the L1/L2 artifact variants).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ReduceOp {
+    #[default]
+    Sum,
+    Prod,
+    Max,
+    Min,
+}
+
+impl ReduceOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReduceOp::Sum => "sum",
+            ReduceOp::Prod => "prod",
+            ReduceOp::Max => "max",
+            ReduceOp::Min => "min",
+        }
+    }
+
+    /// Scalar semantics (oracle + fallback data plane).
+    #[inline]
+    pub fn apply(&self, a: f32, b: f32) -> f32 {
+        match self {
+            ReduceOp::Sum => a + b,
+            ReduceOp::Prod => a * b,
+            ReduceOp::Max => a.max(b),
+            ReduceOp::Min => a.min(b),
+        }
+    }
+
+    pub fn identity(&self) -> f32 {
+        match self {
+            ReduceOp::Sum => 0.0,
+            ReduceOp::Prod => 1.0,
+            ReduceOp::Max => f32::NEG_INFINITY,
+            ReduceOp::Min => f32::INFINITY,
+        }
+    }
+}
+
+/// One schedule operation.  `Send`/`Recv` match by (peer, tag) in FIFO
+/// order, like MPI point-to-point with communicator-unique tags.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OpKind {
+    Send { peer: usize, seg: Seg, tag: u32 },
+    Recv { peer: usize, seg: Seg, tag: u32 },
+    /// dst = op(dst, src): the Pallas-kernel hot path in execute mode.
+    Reduce { dst: Seg, src: Seg, op: ReduceOp },
+    /// dst = src (staging / packing data movement).
+    Copy { dst: Seg, src: Seg },
+    /// Fixed-duration local computation (trace replay compute gaps).
+    Calc { seconds: f64 },
+}
+
+impl OpKind {
+    /// Bytes this op moves over the network (sends only, so volume is not
+    /// double counted), for the tracer.
+    pub fn wire_bytes(&self, elem_bytes: usize) -> usize {
+        match self {
+            OpKind::Send { seg, .. } => seg.bytes(elem_bytes),
+            _ => 0,
+        }
+    }
+}
+
+/// A schedule op plus its intra-rank dependencies.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Op {
+    pub kind: OpKind,
+    /// Rank-local deps: op indices that must complete first.
+    pub deps: Vec<OpId>,
+}
+
+/// An instrumentation region over a contiguous range of one rank's ops
+/// (Fig. 5: `PICO_TAG_BEGIN/END`).  `first..=last` inclusive.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TagSpan {
+    pub name: String,
+    pub first: OpId,
+    pub last: OpId,
+    /// Nesting depth (0 = phase, 1 = per-step region, ...).
+    pub depth: u8,
+}
+
+/// One rank's program: ops + tag spans.
+#[derive(Debug, Clone, Default)]
+pub struct RankProgram {
+    pub ops: Vec<Op>,
+    pub tags: Vec<TagSpan>,
+}
+
+/// A complete schedule for `p` ranks moving elements of `elem_bytes`.
+#[derive(Debug, Clone)]
+pub struct Goal {
+    pub ranks: Vec<RankProgram>,
+    pub elem_bytes: usize,
+    /// Elements per rank buffer (Input/Output size; Tmp may be larger).
+    pub count: usize,
+    /// Scratch elements needed per rank.
+    pub tmp_count: usize,
+}
+
+impl Goal {
+    pub fn new(p: usize, count: usize, elem_bytes: usize) -> Self {
+        Self {
+            ranks: (0..p).map(|_| RankProgram::default()).collect(),
+            elem_bytes,
+            count,
+            tmp_count: 0,
+        }
+    }
+
+    pub fn p(&self) -> usize {
+        self.ranks.len()
+    }
+
+    pub fn total_ops(&self) -> usize {
+        self.ranks.iter().map(|r| r.ops.len()).sum()
+    }
+
+    /// Total bytes crossing the wire (sum over Send ops).
+    pub fn total_wire_bytes(&self) -> usize {
+        self.ranks
+            .iter()
+            .flat_map(|r| r.ops.iter())
+            .map(|o| o.kind.wire_bytes(self.elem_bytes))
+            .sum()
+    }
+
+    /// Structural sanity: every Send has exactly one matching Recv with the
+    /// same (peer, tag, len) and vice versa; deps are in range and acyclic
+    /// (guaranteed by construction: deps only point backwards).
+    pub fn validate(&self) -> Result<(), String> {
+        use std::collections::HashMap;
+        let mut sends: HashMap<(usize, usize, u32), Vec<usize>> = HashMap::new();
+        let mut recvs: HashMap<(usize, usize, u32), Vec<usize>> = HashMap::new();
+        for (r, prog) in self.ranks.iter().enumerate() {
+            for (i, op) in prog.ops.iter().enumerate() {
+                for &d in &op.deps {
+                    if d >= i {
+                        return Err(format!("rank {r} op {i}: forward dep {d}"));
+                    }
+                }
+                match &op.kind {
+                    OpKind::Send { peer, seg, tag } => {
+                        if *peer >= self.p() {
+                            return Err(format!("rank {r} op {i}: bad peer {peer}"));
+                        }
+                        sends.entry((r, *peer, *tag)).or_default().push(seg.len);
+                    }
+                    OpKind::Recv { peer, seg, tag } => {
+                        if *peer >= self.p() {
+                            return Err(format!("rank {r} op {i}: bad peer {peer}"));
+                        }
+                        recvs.entry((*peer, r, *tag)).or_default().push(seg.len);
+                    }
+                    _ => {}
+                }
+            }
+            for t in &prog.tags {
+                if t.first > t.last || t.last >= prog.ops.len().max(1) {
+                    return Err(format!("rank {r}: bad tag span {t:?}"));
+                }
+            }
+        }
+        if sends.len() != recvs.len() {
+            return Err(format!("unmatched channels: {} send vs {} recv", sends.len(), recvs.len()));
+        }
+        for (k, s_lens) in &sends {
+            match recvs.get(k) {
+                None => return Err(format!("send {k:?} has no recv")),
+                Some(r_lens) => {
+                    if s_lens != r_lens {
+                        return Err(format!("channel {k:?}: len mismatch {s_lens:?} vs {r_lens:?}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_goal() -> Goal {
+        // rank0 sends 4 elems to rank1
+        let mut g = Goal::new(2, 4, 4);
+        g.ranks[0].ops.push(Op {
+            kind: OpKind::Send { peer: 1, seg: Seg::input(0, 4), tag: 0 },
+            deps: vec![],
+        });
+        g.ranks[1].ops.push(Op {
+            kind: OpKind::Recv { peer: 0, seg: Seg::output(0, 4), tag: 0 },
+            deps: vec![],
+        });
+        g
+    }
+
+    #[test]
+    fn validate_ok() {
+        assert!(tiny_goal().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_detects_missing_recv() {
+        let mut g = tiny_goal();
+        g.ranks[1].ops.clear();
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_detects_len_mismatch() {
+        let mut g = tiny_goal();
+        if let OpKind::Recv { seg, .. } = &mut g.ranks[1].ops[0].kind {
+            seg.len = 2;
+        }
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_detects_forward_dep() {
+        let mut g = tiny_goal();
+        g.ranks[0].ops[0].deps.push(5);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn wire_bytes_counts_sends_once() {
+        let g = tiny_goal();
+        assert_eq!(g.total_wire_bytes(), 16);
+    }
+
+    #[test]
+    fn reduce_op_scalar_semantics() {
+        assert_eq!(ReduceOp::Sum.apply(2.0, 3.0), 5.0);
+        assert_eq!(ReduceOp::Max.apply(2.0, 3.0), 3.0);
+        assert_eq!(ReduceOp::Min.identity(), f32::INFINITY);
+        assert_eq!(ReduceOp::Prod.apply(2.0, 3.0), 6.0);
+    }
+}

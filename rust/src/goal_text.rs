@@ -1,0 +1,306 @@
+//! GOAL text interchange (Hoefler et al. [64], the format ATLAHS replays).
+//!
+//! Serializes a [`Goal`] to a GOAL-like textual schedule and parses it
+//! back, so schedules can be exchanged with external toolchains (LogGOPSim
+//! / ATLAHS-style simulators) and inspected by humans.  The dialect
+//! extends classic GOAL (`send`/`recv`/`calc` with `requires`
+//! dependencies) with the data-plane ops this crate carries (`reduce`,
+//! `copy`) and segment annotations, so a round trip is lossless apart
+//! from instrumentation tag spans (GOAL has no region concept; tags are
+//! emitted as comments).
+//!
+//! ```text
+//! num_ranks 4
+//! elem_bytes 4
+//! count 1024
+//! rank 0 {
+//!   l0: send 512b to 1 tag 0 buf out off 0 len 128
+//!   l1: recv 512b from 1 tag 0 buf tmp off 0 len 128 requires l0
+//!   l2: reduce sum dst out 0 128 src tmp 0 128 requires l0 l1
+//! }
+//! ```
+
+use std::fmt::Write as _;
+
+use crate::goal::{Buf, Goal, Op, OpKind, ReduceOp, Seg};
+
+/// Serialize a Goal to GOAL text.
+pub fn to_text(goal: &Goal) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "num_ranks {}", goal.p());
+    let _ = writeln!(out, "elem_bytes {}", goal.elem_bytes);
+    let _ = writeln!(out, "count {}", goal.count);
+    let _ = writeln!(out, "tmp_count {}", goal.tmp_count);
+    for (r, prog) in goal.ranks.iter().enumerate() {
+        let _ = writeln!(out, "rank {r} {{");
+        for t in &prog.tags {
+            let _ = writeln!(out, "  # tag {} ops {}..={} depth {}", t.name, t.first, t.last, t.depth);
+        }
+        for (i, op) in prog.ops.iter().enumerate() {
+            let _ = write!(out, "  l{i}: ");
+            match &op.kind {
+                OpKind::Send { peer, seg, tag } => {
+                    let _ = write!(
+                        out,
+                        "send {}b to {peer} tag {tag} {}",
+                        seg.bytes(goal.elem_bytes),
+                        seg_text(seg)
+                    );
+                }
+                OpKind::Recv { peer, seg, tag } => {
+                    let _ = write!(
+                        out,
+                        "recv {}b from {peer} tag {tag} {}",
+                        seg.bytes(goal.elem_bytes),
+                        seg_text(seg)
+                    );
+                }
+                OpKind::Reduce { dst, src, op } => {
+                    let _ = write!(
+                        out,
+                        "reduce {} dst {} src {}",
+                        op.name(),
+                        seg_short(dst),
+                        seg_short(src)
+                    );
+                }
+                OpKind::Copy { dst, src } => {
+                    let _ = write!(out, "copy dst {} src {}", seg_short(dst), seg_short(src));
+                }
+                OpKind::Calc { seconds } => {
+                    let _ = write!(out, "calc {seconds:e}");
+                }
+            }
+            if !op.deps.is_empty() {
+                let _ = write!(out, " requires");
+                for d in &op.deps {
+                    let _ = write!(out, " l{d}");
+                }
+            }
+            let _ = writeln!(out);
+        }
+        let _ = writeln!(out, "}}");
+    }
+    out
+}
+
+fn buf_name(b: Buf) -> &'static str {
+    match b {
+        Buf::Input => "in",
+        Buf::Output => "out",
+        Buf::Tmp => "tmp",
+    }
+}
+
+fn seg_text(s: &Seg) -> String {
+    format!("buf {} off {} len {}", buf_name(s.buf), s.off, s.len)
+}
+
+fn seg_short(s: &Seg) -> String {
+    format!("{} {} {}", buf_name(s.buf), s.off, s.len)
+}
+
+/// Parse GOAL text back into a Goal.
+pub fn from_text(text: &str) -> Result<Goal, String> {
+    let mut lines = text.lines().map(str::trim).peekable();
+    let mut header = std::collections::HashMap::new();
+    while let Some(&line) = lines.peek() {
+        if line.starts_with("rank ") {
+            break;
+        }
+        let line = lines.next().unwrap();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let k = it.next().ok_or("bad header line")?;
+        let v: usize =
+            it.next().ok_or("bad header line")?.parse().map_err(|e| format!("{k}: {e}"))?;
+        header.insert(k.to_string(), v);
+    }
+    let p = *header.get("num_ranks").ok_or("missing num_ranks")?;
+    let mut goal = Goal::new(
+        p,
+        *header.get("count").unwrap_or(&0),
+        *header.get("elem_bytes").unwrap_or(&4),
+    );
+    goal.tmp_count = *header.get("tmp_count").unwrap_or(&0);
+
+    while let Some(line) = lines.next() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let rank: usize = line
+            .strip_prefix("rank ")
+            .and_then(|s| s.strip_suffix('{'))
+            .ok_or_else(|| format!("expected 'rank N {{', got {line:?}"))?
+            .trim()
+            .parse()
+            .map_err(|e| format!("rank header: {e}"))?;
+        if rank >= p {
+            return Err(format!("rank {rank} out of range"));
+        }
+        for line in lines.by_ref() {
+            let line = line.trim();
+            if line == "}" {
+                break;
+            }
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            goal.ranks[rank].ops.push(parse_op(line)?);
+        }
+    }
+    goal.validate()?;
+    Ok(goal)
+}
+
+fn parse_buf(s: &str) -> Result<Buf, String> {
+    match s {
+        "in" => Ok(Buf::Input),
+        "out" => Ok(Buf::Output),
+        "tmp" => Ok(Buf::Tmp),
+        other => Err(format!("bad buf {other:?}")),
+    }
+}
+
+fn parse_op(line: &str) -> Result<Op, String> {
+    let (_, rest) = line.split_once(':').ok_or_else(|| format!("missing label in {line:?}"))?;
+    let toks: Vec<&str> = rest.split_whitespace().collect();
+    let req = toks.iter().position(|t| *t == "requires");
+    let (body, deps_toks) = match req {
+        Some(i) => (&toks[..i], &toks[i + 1..]),
+        None => (&toks[..], &[][..]),
+    };
+    let deps = deps_toks
+        .iter()
+        .map(|t| {
+            t.strip_prefix('l')
+                .ok_or_else(|| format!("bad dep {t:?}"))?
+                .parse::<usize>()
+                .map_err(|e| e.to_string())
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    let num = |t: &str| -> Result<usize, String> { t.parse().map_err(|e| format!("{t:?}: {e}")) };
+    let kind = match body.first().copied() {
+        Some("send") | Some("recv") => {
+            // send <N>b to <peer> tag <t> buf <b> off <o> len <l>
+            if body.len() < 11 {
+                return Err(format!("short send/recv: {line:?}"));
+            }
+            // layout: [send|recv, <N>b, to|from, peer, tag, t, buf, b, off, o, len, l]
+            let peer = num(body[3])?;
+            let tag = num(body[5])? as u32;
+            let seg = Seg::new(parse_buf(body[7])?, num(body[9])?, num(body[11])?);
+            if body[0] == "send" {
+                OpKind::Send { peer, seg, tag }
+            } else {
+                OpKind::Recv { peer, seg, tag }
+            }
+        }
+        Some("reduce") => {
+            // reduce <op> dst <b> <o> <l> src <b> <o> <l>
+            if body.len() < 10 {
+                return Err(format!("short reduce: {line:?}"));
+            }
+            let op = match body[1] {
+                "sum" => ReduceOp::Sum,
+                "prod" => ReduceOp::Prod,
+                "max" => ReduceOp::Max,
+                "min" => ReduceOp::Min,
+                other => return Err(format!("bad reduce op {other:?}")),
+            };
+            OpKind::Reduce {
+                op,
+                dst: Seg::new(parse_buf(body[3])?, num(body[4])?, num(body[5])?),
+                src: Seg::new(parse_buf(body[7])?, num(body[8])?, num(body[9])?),
+            }
+        }
+        Some("copy") => {
+            if body.len() < 9 {
+                return Err(format!("short copy: {line:?}"));
+            }
+            OpKind::Copy {
+                dst: Seg::new(parse_buf(body[2])?, num(body[3])?, num(body[4])?),
+                src: Seg::new(parse_buf(body[6])?, num(body[7])?, num(body[8])?),
+            }
+        }
+        Some("calc") => OpKind::Calc {
+            seconds: body
+                .get(1)
+                .ok_or("calc missing seconds")?
+                .parse()
+                .map_err(|e| format!("calc: {e}"))?,
+        },
+        other => return Err(format!("unknown op {other:?} in {line:?}")),
+    };
+    Ok(Op { kind, deps })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{self, Coll, GenParams};
+
+    #[test]
+    fn round_trip_every_op_kind() {
+        let goal =
+            collectives::generate(Coll::Allreduce, "rabenseifner", &GenParams::new(8, 96)).unwrap();
+        let text = to_text(&goal);
+        let back = from_text(&text).unwrap();
+        assert_eq!(back.p(), goal.p());
+        assert_eq!(back.count, goal.count);
+        assert_eq!(back.tmp_count, goal.tmp_count);
+        for r in 0..goal.p() {
+            assert_eq!(back.ranks[r].ops, goal.ranks[r].ops, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn round_trip_calc_and_barrier() {
+        let mut goal = collectives::generate(Coll::Barrier, "dissemination", &GenParams::new(5, 0))
+            .unwrap();
+        goal.ranks[0].ops.push(Op { kind: OpKind::Calc { seconds: 1.5e-3 }, deps: vec![0] });
+        // re-validate manually: calc has no channel
+        let back = from_text(&to_text(&goal)).unwrap();
+        assert_eq!(back.ranks[0].ops, goal.ranks[0].ops);
+    }
+
+    #[test]
+    fn tags_survive_as_comments() {
+        let goal = collectives::generate(
+            Coll::Allreduce,
+            "ring",
+            &GenParams::new(4, 16).instrumented(),
+        )
+        .unwrap();
+        let text = to_text(&goal);
+        assert!(text.contains("# tag phase:redscat"));
+        // parse ignores them
+        assert!(from_text(&text).is_ok());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(from_text("nonsense").is_err());
+        assert!(from_text("num_ranks 2\nrank 0 {\n  l0: frobnicate\n}\n").is_err());
+        // unmatched send fails validation
+        let bad = "num_ranks 2\nelem_bytes 4\ncount 4\ntmp_count 0\nrank 0 {\n  l0: send 16b to 1 tag 0 buf in off 0 len 4\n}\nrank 1 {\n}\n";
+        assert!(from_text(bad).is_err());
+    }
+
+    #[test]
+    fn parsed_goal_simulates_identically() {
+        use crate::sim::{simulate, SimContext};
+        use crate::topology::{leonardo, AllocPolicy, Allocation, Placement, RankOrder};
+        let goal = collectives::generate(Coll::Bcast, "binomial_halving", &GenParams::new(16, 64))
+            .unwrap();
+        let back = from_text(&to_text(&goal)).unwrap();
+        let prof = leonardo();
+        let alloc = Allocation::new(&prof, 4, AllocPolicy::Contiguous, 1);
+        let pl = Placement::new(&prof, &alloc, 4, RankOrder::Block);
+        let a = simulate(&goal, &SimContext::new(&prof, &pl));
+        let b = simulate(&back, &SimContext::new(&prof, &pl));
+        assert_eq!(a.total_time, b.total_time);
+    }
+}

@@ -1,0 +1,184 @@
+//! Runtime tag instrumentation (paper R1, Fig. 5) for *execute-mode* code
+//! paths: nested `PICO_TAG_BEGIN/END`-style regions with wall-clock timing.
+//!
+//! Schedule-level attribution (simulate mode) happens through
+//! [`crate::goal::TagSpan`]s; this module is the live counterpart used on
+//! the Rust hot path (e.g. timing the PJRT reduction calls).  Design goals
+//! straight from the paper: optional, nestable, and **negligible overhead**
+//! — the disabled path is a single branch (< 100 ns per region is asserted
+//! by `benches/perf_hotpaths.rs`; disabled cost is ~1 ns).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// One closed region measurement.  The name is a `&'static str` so the
+/// enabled hot path allocates nothing (paper: < 100 ns per region).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TagRecord {
+    pub name: &'static str,
+    pub depth: u8,
+    pub seconds: f64,
+}
+
+/// A recorder of nested tag regions.  Not thread-safe by design: each
+/// executing rank owns one (mirroring libpico's per-process probes).
+#[derive(Debug)]
+pub struct Recorder {
+    enabled: bool,
+    epoch: Instant,
+    stack: Vec<(&'static str, f64)>,
+    records: Vec<TagRecord>,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::new(false)
+    }
+}
+
+impl Recorder {
+    pub fn new(enabled: bool) -> Self {
+        Self { enabled, epoch: Instant::now(), stack: Vec::new(), records: Vec::new() }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// PICO_TAG_BEGIN.  One branch + one clock read when enabled; one
+    /// branch when disabled.
+    #[inline]
+    pub fn begin(&mut self, name: &'static str) {
+        if self.enabled {
+            let t = self.epoch.elapsed().as_secs_f64();
+            self.stack.push((name, t));
+        }
+    }
+
+    /// PICO_TAG_END.  Panics on mismatched nesting (a probe bug).
+    #[inline]
+    pub fn end(&mut self, name: &'static str) {
+        if self.enabled {
+            let t = self.epoch.elapsed().as_secs_f64();
+            let (open, t0) = self.stack.pop().expect("tag_end with empty stack");
+            assert_eq!(open, name, "mismatched tag_end");
+            self.records.push(TagRecord {
+                name,
+                depth: self.stack.len() as u8,
+                seconds: t - t0,
+            });
+        }
+    }
+
+    /// Time a closure under a tag.
+    #[inline]
+    pub fn scope<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        self.begin(name);
+        let out = f();
+        self.end(name);
+        out
+    }
+
+    pub fn records(&self) -> &[TagRecord] {
+        &self.records
+    }
+
+    /// Total seconds per tag name.
+    pub fn totals(&self) -> HashMap<&'static str, f64> {
+        let mut m = HashMap::new();
+        for r in &self.records {
+            *m.entry(r.name).or_insert(0.0) += r.seconds;
+        }
+        m
+    }
+
+    pub fn clear(&mut self) {
+        self.stack.clear();
+        self.records.clear();
+    }
+}
+
+/// Region timing macro, mirroring the paper's C macros:
+/// `pico_tag!(rec, "phase:redscat", { ...body... })`.
+#[macro_export]
+macro_rules! pico_tag {
+    ($rec:expr, $name:literal, $body:block) => {{
+        $rec.begin($name);
+        let __out = $body;
+        $rec.end($name);
+        __out
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing() {
+        let mut r = Recorder::new(false);
+        r.begin("x");
+        r.end("x");
+        assert!(r.records().is_empty());
+    }
+
+    #[test]
+    fn nesting_depth_tracked() {
+        let mut r = Recorder::new(true);
+        r.begin("outer");
+        r.begin("inner");
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        r.end("inner");
+        r.end("outer");
+        let recs = r.records();
+        assert_eq!(recs.len(), 2);
+        let inner = recs.iter().find(|t| t.name == "inner").unwrap();
+        let outer = recs.iter().find(|t| t.name == "outer").unwrap();
+        assert_eq!(inner.depth, 1);
+        assert_eq!(outer.depth, 0);
+        assert!(outer.seconds >= inner.seconds);
+        assert!(inner.seconds >= 0.001);
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let mut r = Recorder::new(true);
+        for _ in 0..3 {
+            r.begin("a");
+            r.end("a");
+        }
+        assert_eq!(r.totals().len(), 1);
+        assert!(r.totals()["a"] >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched tag_end")]
+    fn mismatch_panics() {
+        let mut r = Recorder::new(true);
+        r.begin("a");
+        r.end("b");
+    }
+
+    #[test]
+    fn macro_returns_value() {
+        let mut r = Recorder::new(true);
+        let v = pico_tag!(r, "calc", { 21 * 2 });
+        assert_eq!(v, 42);
+        assert_eq!(r.records().len(), 1);
+    }
+
+    #[test]
+    fn disabled_overhead_is_tiny() {
+        // smoke-level guard; the precise <100 ns claim is measured in
+        // benches/perf_hotpaths.rs
+        let mut r = Recorder::new(false);
+        let t0 = Instant::now();
+        for _ in 0..100_000 {
+            r.begin("x");
+            r.end("x");
+        }
+        let per_pair = t0.elapsed().as_secs_f64() / 100_000.0;
+        assert!(per_pair < 1e-6, "disabled tag pair took {per_pair}s");
+    }
+}

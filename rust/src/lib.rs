@@ -1,0 +1,42 @@
+//! # pico-rs
+//!
+//! Reproduction of **PICO: Performance Insights for Collective Operations**
+//! as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate provides everything the paper calls PICO — the orchestrator,
+//! `pico_core`, `libpico` reference collectives, tag instrumentation,
+//! metadata/results capture, the network tracer and the ATLAHS-style trace
+//! replayer — plus the substrate the paper ran on (three supercomputers),
+//! substituted by a deterministic discrete-event cluster simulator
+//! (see `DESIGN.md` for the substitution argument).
+//!
+//! Layer map:
+//! - L3 (this crate): coordination, scheduling, simulation, analysis.
+//! - L2/L1 (build-time Python): JAX reduction graphs calling a Pallas kernel,
+//!   AOT-lowered to `artifacts/*.hlo.txt`, executed from [`runtime`].
+
+pub mod analysis;
+pub mod backends;
+pub mod benchkit;
+pub mod collectives;
+pub mod config;
+pub mod execute;
+pub mod goal;
+pub mod goal_text;
+pub mod instrument;
+pub mod json;
+pub mod metadata;
+pub mod netmodel;
+pub mod orchestrator;
+pub mod replay;
+pub mod results;
+pub mod runtime;
+pub mod sim;
+pub mod sync;
+pub mod topology;
+pub mod tracer;
+pub mod tuning;
+pub mod util;
+
+pub use goal::{Goal, Op, OpKind, Seg};
+pub use topology::{Allocation, Placement, SystemProfile, Tier};

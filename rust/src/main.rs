@@ -1,0 +1,365 @@
+//! pico — CLI front-end (the paper's Fig. 3 ① orchestrator entry).
+//!
+//! Subcommands:
+//!   list                         inventory: systems, backends, algorithms
+//!   spec                         emit skeleton test.json / env.json
+//!   run    --test F --env F      run a campaign from descriptors
+//!   sweep  ...                   ad-hoc tuning sweep (Fig. 6 style)
+//!   probe  ...                   one test point, with phase breakdown
+//!   trace  ...                   topology traffic estimate (Fig. 9 style)
+//!   replay ...                   LLM trace replay (Fig. 12 style)
+//!
+//! The environment vendors no clap; arguments are parsed by a small
+//! in-tree key-value parser (`--key value` pairs after the subcommand).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use pico::analysis;
+use pico::backends;
+use pico::collectives::{self, Coll, GenParams};
+use pico::config::{EnvSpec, TestSpec};
+use pico::json::Json;
+use pico::orchestrator::{self, run_campaign};
+use pico::replay::{self, profiles};
+use pico::results::Granularity;
+use pico::topology::{builtin_profiles, profile_by_name, AllocPolicy, Allocation, Placement, RankOrder};
+use pico::tracer;
+use pico::util::{fmt_size, fmt_time, parse_size};
+
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut flags = HashMap::new();
+        let mut it = argv.iter();
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                return Err(format!("unexpected argument {a:?} (expected --key value)"));
+            };
+            let val = it.next().cloned().unwrap_or_else(|| "true".to_string());
+            flags.insert(key.to_string(), val);
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad integer {v:?}")),
+        }
+    }
+
+    fn size_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => parse_size(v).ok_or_else(|| format!("--{key}: bad size {v:?}")),
+        }
+    }
+
+    fn sizes_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| parse_size(s.trim()).ok_or_else(|| format!("--{key}: bad size {s:?}")))
+                .collect(),
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(String::as_str) else {
+        eprintln!("{USAGE}");
+        return ExitCode::FAILURE;
+    };
+    let args = match Args::parse(&argv[1..]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cmd {
+        "list" => cmd_list(),
+        "spec" => cmd_spec(&args),
+        "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
+        "probe" => cmd_probe(&args),
+        "trace" => cmd_trace(&args),
+        "replay" => cmd_replay(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand {other:?}")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const USAGE: &str = "pico — Performance Insights for Collective Operations (reproduction)
+
+usage: pico <command> [--key value ...]
+
+  list                              systems, backends, exposed algorithms
+  spec   [--out DIR]                write skeleton test.json + env.json
+  run    --test F --env F [--out D] run a campaign from descriptors
+  sweep  [--backend openmpi] [--system leonardo] [--coll allreduce]
+         [--sizes 32B,2KiB,...] [--nodes 2,8,32] [--ppn 1] [--iters 3]
+         tuning sweep over all exposed algorithms; prints the ratio heatmap
+  probe  [--system leonardo] [--backend openmpi] [--coll allreduce]
+         [--algo ring] [--bytes 1MiB] [--nodes 8] [--ppn 1] [--rails N]
+         [--proto Simple|LL] [--instrument true]
+         one point; prints latency, component and tag breakdown
+  trace  [--system leonardo] [--coll bcast] [--algo binomial_halving]
+         [--nodes 128] [--ppn 1] [--bytes 1MiB] [--seed 11]
+         topology traffic estimate (internal/external volumes)
+  replay [--workload llama16|llama128|moe] [--system leonardo]
+         [--profile native|pico|suboptimal]
+         LLM trace replay with substituted collective profiles";
+
+fn cmd_list() -> Result<(), String> {
+    println!("systems:");
+    for p in builtin_profiles() {
+        println!(
+            "  {:<10} {:?}, {} nodes, {} per group, ppn<={}, {} rails",
+            p.name, p.topology, p.nodes_total, p.nodes_per_group, p.ppn_max, p.rails
+        );
+    }
+    println!("\nbackends:");
+    for b in backends::all_backends() {
+        let caps = b.caps();
+        println!(
+            "  {:<14} v{:<10} algo-select={} proto={} rails-knob={}",
+            b.name(),
+            b.version(),
+            caps.algorithm_selection,
+            caps.proto_selection,
+            caps.rails_knob
+        );
+        for coll in Coll::ALL {
+            let algos = b.algorithms(coll);
+            if !algos.is_empty() {
+                println!("      {:<15} {}", coll.label(), algos.join(", "));
+            }
+        }
+    }
+    println!("\nlibpico reference algorithms:");
+    for info in collectives::registry() {
+        println!(
+            "  {:<15} {:<20} any_p={:<5} (from {})",
+            info.coll.label(),
+            info.name,
+            info.any_p,
+            info.origin
+        );
+    }
+    Ok(())
+}
+
+fn cmd_spec(args: &Args) -> Result<(), String> {
+    let dir = PathBuf::from(args.get_or("out", "."));
+    std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+    let mut test = TestSpec::new("allreduce-sweep", "openmpi", Coll::Allreduce);
+    test.sizes = vec![32, 2048, 128 * 1024, 8 << 20, 512 << 20];
+    test.nodes = vec![2, 8, 32];
+    test.algorithms = vec!["*".into()];
+    let env = EnvSpec::for_system("leonardo");
+    std::fs::write(dir.join("test.json"), test.to_json().to_string_pretty())
+        .map_err(|e| e.to_string())?;
+    std::fs::write(dir.join("env.json"), env.to_json().to_string_pretty())
+        .map_err(|e| e.to_string())?;
+    println!("wrote {}/test.json and {}/env.json", dir.display(), dir.display());
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let test_path = args.get("test").ok_or("run: --test test.json required")?;
+    let env_path = args.get("env").ok_or("run: --env env.json required")?;
+    let test = TestSpec::from_json(
+        &Json::parse(&std::fs::read_to_string(test_path).map_err(|e| e.to_string())?)?,
+    )?;
+    let env = EnvSpec::from_json(
+        &Json::parse(&std::fs::read_to_string(env_path).map_err(|e| e.to_string())?)?,
+    )?;
+    let out = args.get("out").map(PathBuf::from);
+    let outcomes = run_campaign(&test, &env, out.as_deref())?;
+    println!(
+        "{:<12} {:>10} {:>6} {:>20} {:>7} {:>12}",
+        "collective", "size", "nodes", "algorithm", "proto", "median"
+    );
+    for o in &outcomes {
+        println!(
+            "{:<12} {:>10} {:>6} {:>20} {:>7} {:>12}",
+            o.point.collective.label(),
+            fmt_size(o.point.bytes),
+            o.point.nodes,
+            o.effective_algorithm,
+            o.effective_proto.label(),
+            fmt_time(o.median_s)
+        );
+    }
+    let cells = analysis::best_to_default(&outcomes);
+    if !cells.is_empty() {
+        println!("\n{}", analysis::render_ratio_heatmap(&test.name, &cells));
+    }
+    if let Some(d) = out {
+        println!("results under {}", d.join(&test.name).display());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<(), String> {
+    let coll = Coll::parse(&args.get_or("coll", "allreduce")).ok_or("bad --coll")?;
+    let mut spec = TestSpec::new("sweep", &args.get_or("backend", "openmpi"), coll);
+    spec.sizes = args.sizes_or("sizes", &[32, 2048, 128 * 1024, 8 << 20, 128 << 20])?;
+    spec.nodes = args
+        .get_or("nodes", "2,8,32")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>().map_err(|_| format!("bad node count {s:?}")))
+        .collect::<Result<Vec<_>, _>>()?;
+    spec.ppn = args.usize_or("ppn", 1)?;
+    spec.iterations = args.usize_or("iters", 3)?;
+    spec.warmup = 1;
+    spec.algorithms = vec!["*".into()];
+    spec.granularity = Granularity::Summary;
+    let env = EnvSpec::for_system(&args.get_or("system", "leonardo"));
+    let outcomes = run_campaign(&spec, &env, None)?;
+    let cells = analysis::best_to_default(&outcomes);
+    println!(
+        "{}",
+        analysis::render_ratio_heatmap(
+            &format!("{} {} on {}", spec.backend, coll.label(), env.system),
+            &cells
+        )
+    );
+    for c in &cells {
+        println!(
+            "  nodes={:<4} size={:<8} default={:<20} ({}) best={:<20} ({})  r={:.2}",
+            c.nodes,
+            fmt_size(c.bytes),
+            c.default_algo,
+            fmt_time(c.default_s),
+            c.best_algo,
+            fmt_time(c.best_s),
+            c.r
+        );
+    }
+    Ok(())
+}
+
+fn cmd_probe(args: &Args) -> Result<(), String> {
+    let coll = Coll::parse(&args.get_or("coll", "allreduce")).ok_or("bad --coll")?;
+    let mut spec = TestSpec::new("probe", &args.get_or("backend", "openmpi"), coll);
+    spec.sizes = vec![args.size_or("bytes", 1 << 20)?];
+    spec.nodes = vec![args.usize_or("nodes", 8)?];
+    spec.ppn = args.usize_or("ppn", 1)?;
+    spec.iterations = args.usize_or("iters", 3)?;
+    spec.warmup = 1;
+    spec.instrument = args.get("instrument").is_some();
+    if let Some(a) = args.get("algo") {
+        spec.algorithms = vec![a.to_string()];
+    }
+    if let Some(r) = args.get("rails") {
+        spec.knobs.push(("max_rndv_rails".into(), r.to_string()));
+    }
+    if let Some(p) = args.get("proto") {
+        spec.knobs.push(("proto".into(), p.to_string()));
+    }
+    let env = EnvSpec::for_system(&args.get_or("system", "leonardo"));
+    let outcomes = run_campaign(&spec, &env, None)?;
+    let o = &outcomes[0];
+    println!(
+        "{} {} on {} nodes={} ppn={} algo={} proto={}",
+        spec.backend,
+        coll.label(),
+        env.system,
+        o.point.nodes,
+        o.point.ppn,
+        o.effective_algorithm,
+        o.effective_proto.label()
+    );
+    println!("  median latency: {}", fmt_time(o.median_s));
+    let c = o.measurement.components;
+    let t = c.total().max(1e-30);
+    println!(
+        "  components: comm {} ({:.1}%), reduction {} ({:.1}%), datamove {} ({:.1}%), other {} ({:.1}%)",
+        fmt_time(c.comm),
+        100.0 * c.comm / t,
+        fmt_time(c.reduction),
+        100.0 * c.reduction / t,
+        fmt_time(c.datamove),
+        100.0 * c.datamove / t,
+        fmt_time(c.other),
+        100.0 * c.other / t
+    );
+    if !o.measurement.tag_times.is_empty() {
+        println!("  tag regions:");
+        for (name, s) in &o.measurement.tag_times {
+            println!("    {name:<28} {}", fmt_time(*s));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<(), String> {
+    let system = profile_by_name(&args.get_or("system", "leonardo")).ok_or("bad --system")?;
+    let coll = Coll::parse(&args.get_or("coll", "bcast")).ok_or("bad --coll")?;
+    let algo = args.get_or("algo", "binomial_halving");
+    let nodes = args.usize_or("nodes", 128)?;
+    let ppn = args.usize_or("ppn", 1)?;
+    let bytes = args.size_or("bytes", 1 << 20)?;
+    let seed = args.usize_or("seed", 11)? as u64;
+    let alloc = Allocation::new(&system, nodes, AllocPolicy::Scattered, seed);
+    let placement = Placement::new(&system, &alloc, ppn, RankOrder::Block);
+    let p = placement.n_ranks();
+    let count = orchestrator::effective_count(coll, bytes, p);
+    let goal = collectives::generate(coll, &algo, &GenParams::new(p, count))?;
+    let rep = tracer::trace(&goal, &placement);
+    print!("{}", tracer::render(&algo, &rep, bytes));
+    println!("  max single-group uplink load: {}", fmt_size(rep.max_uplink_bytes()));
+    Ok(())
+}
+
+fn cmd_replay(args: &Args) -> Result<(), String> {
+    let system = profile_by_name(&args.get_or("system", "leonardo")).ok_or("bad --system")?;
+    let seed = args.usize_or("seed", 1)? as u64;
+    let trace = match args.get_or("workload", "llama16").as_str() {
+        "llama16" => replay::llama7b(16, seed),
+        "llama128" => replay::llama7b(128, seed),
+        "moe" => replay::mistral_moe(64, seed),
+        other => return Err(format!("unknown workload {other:?}")),
+    };
+    let profile = match args.get_or("profile", "native").as_str() {
+        "native" => None,
+        "pico" => Some(profiles::pico_optimized()),
+        "suboptimal" => Some(profiles::suboptimal_ll()),
+        other => return Err(format!("unknown profile {other:?}")),
+    };
+    let r = replay::replay(&trace, &system, profile.as_ref(), seed);
+    println!("workload {} on {} ({} GPUs):", trace.name, system.name, trace.gpus);
+    println!("  profile:        {}", r.profile);
+    println!("  iteration time: {}", fmt_time(r.iteration_s));
+    println!("  communication:  {}", fmt_time(r.comm_s));
+    println!("  compute:        {}", fmt_time(r.compute_s));
+    println!("  invocations:    {} (sim cache hits {})", r.invocations, r.sim_cache_hits);
+    Ok(())
+}

@@ -1,0 +1,144 @@
+//! Run-context capture (paper Sec. III-E, R5): enough metadata to
+//! reproduce, audit and diagnose a run, at configurable verbosity.
+//!
+//! On the paper's clusters this comes from SLURM/`scontrol`, module lists
+//! and `/proc`; here the allocation/placement half comes from the simulated
+//! scheduler while the host half is captured for real (the simulation runs
+//! somewhere, and regressions in *this* code are diagnosed the same way).
+
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::config::EnvSpec;
+use crate::json::Json;
+use crate::topology::{Allocation, Placement};
+
+/// Verbosity: 0 = minimal (ids + versions), 1 = standard (+host, alloc),
+/// 2 = rich (+env vars, full placement).
+pub fn capture(
+    verbosity: u8,
+    env: &EnvSpec,
+    alloc: Option<&Allocation>,
+    placement: Option<&Placement>,
+    seed: u64,
+) -> Json {
+    let mut j = Json::obj()
+        .set("pico_version", env!("CARGO_PKG_VERSION"))
+        .set("timestamp_unix", unix_now())
+        .set("system", env.system.as_str())
+        .set("seed", seed)
+        .set("verbosity", verbosity as usize);
+
+    if verbosity >= 1 {
+        j = j
+            .set("hostname", read_first_line("/proc/sys/kernel/hostname").unwrap_or_default())
+            .set("kernel", read_first_line("/proc/sys/kernel/osrelease").unwrap_or_default())
+            .set("cpu_model", cpu_model().unwrap_or_default())
+            .set(
+                "n_cpus",
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0),
+            );
+        if let Some(a) = alloc {
+            j = j
+                .set("alloc_policy", format!("{:?}", a.policy))
+                .set("alloc_seed", a.seed)
+                .set("n_nodes", a.nodes.len())
+                .set("node_list_digest", digest(&a.nodes));
+        }
+        if let Some(p) = placement {
+            j = j.set("ppn", p.ppn).set("n_ranks", p.n_ranks());
+        }
+    }
+    if verbosity >= 2 {
+        if let Some(a) = alloc {
+            j = j.set("node_list", Json::Arr(a.nodes.iter().map(|&n| n.into()).collect()));
+        }
+        if let Some(p) = placement {
+            j = j.set(
+                "rank_placement",
+                Json::Arr(p.rank_node.iter().map(|&n| n.into()).collect()),
+            );
+        }
+        // relevant environment variables (whitelist, like the paper's
+        // UCX_*/NCCL_*/OMPI_* capture)
+        let mut envs: Vec<(String, Json)> = std::env::vars()
+            .filter(|(k, _)| {
+                k.starts_with("UCX_")
+                    || k.starts_with("NCCL_")
+                    || k.starts_with("OMPI_")
+                    || k.starts_with("MPICH_")
+                    || k.starts_with("PICO_")
+                    || k == "XLA_EXTENSION_DIR"
+            })
+            .map(|(k, v)| (k, Json::Str(v)))
+            .collect();
+        envs.sort_by(|a, b| a.0.cmp(&b.0));
+        j = j.set("env_vars", Json::Obj(envs));
+    }
+    j
+}
+
+fn unix_now() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0)
+}
+
+fn read_first_line(path: &str) -> Option<String> {
+    std::fs::read_to_string(path).ok().map(|s| s.lines().next().unwrap_or("").to_string())
+}
+
+fn cpu_model() -> Option<String> {
+    let text = std::fs::read_to_string("/proc/cpuinfo").ok()?;
+    text.lines()
+        .find(|l| l.starts_with("model name"))
+        .and_then(|l| l.split(':').nth(1))
+        .map(|s| s.trim().to_string())
+}
+
+/// Order-sensitive digest of the node list: detects placement changes
+/// across runs without storing every node id at low verbosity.
+fn digest(nodes: &[usize]) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &n in nodes {
+        h ^= n as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{leonardo, AllocPolicy, RankOrder};
+
+    #[test]
+    fn verbosity_gates_fields() {
+        let env = EnvSpec::for_system("leonardo");
+        let prof = leonardo();
+        let alloc = Allocation::new(&prof, 4, AllocPolicy::Scattered, 7);
+        let pl = Placement::new(&prof, &alloc, 2, RankOrder::Block);
+        let v0 = capture(0, &env, Some(&alloc), Some(&pl), 1);
+        let v1 = capture(1, &env, Some(&alloc), Some(&pl), 1);
+        let v2 = capture(2, &env, Some(&alloc), Some(&pl), 1);
+        assert!(v0.get("node_list_digest").is_none());
+        assert!(v1.get("node_list_digest").is_some());
+        assert!(v1.get("node_list").is_none());
+        assert!(v2.get("node_list").is_some());
+        assert!(v2.get("rank_placement").is_some());
+        assert!(v2.get("env_vars").is_some());
+    }
+
+    #[test]
+    fn digest_detects_changes() {
+        assert_ne!(digest(&[1, 2, 3]), digest(&[1, 2, 4]));
+        assert_ne!(digest(&[1, 2, 3]), digest(&[3, 2, 1]));
+        assert_eq!(digest(&[1, 2, 3]), digest(&[1, 2, 3]));
+    }
+
+    #[test]
+    fn capture_is_valid_json() {
+        let env = EnvSpec::for_system("lumi");
+        let j = capture(2, &env, None, None, 9);
+        let text = j.to_string_pretty();
+        assert!(Json::parse(&text).is_ok());
+        assert_eq!(j.get("system").unwrap().as_str(), Some("lumi"));
+    }
+}

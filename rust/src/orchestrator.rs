@@ -1,0 +1,282 @@
+//! Campaign orchestrator (paper Fig. 3 ③/④, R4): expands descriptors into
+//! test points, runs them on the simulated cluster, and writes the
+//! standardized run directory.
+//!
+//! This is pico_core + the orchestrator script fused into one in-process
+//! engine: the platform-setup complexity the paper front-loads into
+//! env.json creation maps to [`EnvSpec`]; job submission maps to the
+//! point loop below.
+
+use std::path::Path;
+
+use crate::backends::{schedule_effective, Backend};
+use crate::collectives::{Coll, GenParams};
+use crate::config::{resolve, EnvSpec, TestPoint, TestSpec};
+use crate::metadata;
+use crate::netmodel::Proto;
+use crate::results::{Granularity, Measurement, Record, RunDir};
+use crate::sim::{simulate, SimContext};
+use crate::sync::skew_profile;
+use crate::topology::{Allocation, Placement, SystemProfile};
+
+/// The outcome of one test point.
+#[derive(Debug, Clone)]
+pub struct PointOutcome {
+    pub point: TestPoint,
+    pub effective_algorithm: String,
+    pub effective_proto: Proto,
+    pub measurement: Measurement,
+    /// Median across iterations of the per-iteration maximum (the headline
+    /// latency every figure plots).
+    pub median_s: f64,
+}
+
+/// Round the element count up to whatever the collective requires so every
+/// exposed algorithm can run (uniform blocks for the butterfly family).
+pub fn effective_count(coll: Coll, bytes: usize, p: usize) -> usize {
+    let count = (bytes / 4).max(1);
+    match coll {
+        Coll::Allgather | Coll::ReduceScatter | Coll::Alltoall => count.div_ceil(p) * p,
+        _ => count,
+    }
+}
+
+/// Run one resolved test point.
+pub fn run_point(
+    backend: &dyn Backend,
+    profile: &SystemProfile,
+    env: &EnvSpec,
+    spec: &TestSpec,
+    point: &TestPoint,
+) -> Result<PointOutcome, String> {
+    let alloc_seed = spec.seed ^ (point.nodes as u64).wrapping_mul(0x9E37_79B9);
+    let alloc = Allocation::new(profile, point.nodes, env.alloc_policy, alloc_seed);
+    let placement = Placement::new(profile, &alloc, point.ppn, env.rank_order);
+    let p = placement.n_ranks();
+
+    let count = effective_count(point.collective, point.bytes, p);
+    let params = GenParams {
+        instrument: spec.instrument,
+        ..GenParams::new(p, count)
+    };
+    let (goal, effective_algorithm) =
+        schedule_effective(backend, point.collective, point.algorithm.as_deref(), &params, point.ppn)?;
+
+    // protocol: explicit knob wins; otherwise the backend's own default
+    let mut cfg = point.net_cfg;
+    let proto_forced = spec.knobs.iter().any(|(k, _)| k == "proto" || k == "NCCL_PROTO");
+    if backend.caps().proto_selection && !proto_forced {
+        cfg.proto = backend.default_proto(point.collective, point.bytes);
+    }
+    if cfg.max_rndv_rails.is_none() {
+        cfg.max_rndv_rails = backend.default_rails();
+    }
+    if cfg.msg_overhead.is_none() {
+        cfg.msg_overhead = backend.msg_overhead();
+    }
+    let mem_override = backend.mem_params();
+
+    let mut times: Vec<Vec<f64>> = Vec::with_capacity(spec.iterations);
+    let mut components = Default::default();
+    let mut tag_times: Vec<(String, f64)> = Vec::new();
+    for it in 0..spec.warmup + spec.iterations {
+        let skew = skew_profile(spec.sync, profile, &placement, spec.seed + it as u64);
+        let mut ctx = SimContext::new(profile, &placement).with_cfg(cfg);
+        ctx.start_times = Some(&skew.offsets);
+        if let Some(m) = mem_override.as_ref() {
+            ctx.mem = Some(m);
+        }
+        let rep = simulate(&goal, &ctx);
+        if it < spec.warmup {
+            continue;
+        }
+        // measured latency per rank = completion − that rank's entry time
+        let per_rank: Vec<f64> = rep
+            .per_rank_time
+            .iter()
+            .zip(&skew.offsets)
+            .map(|(t, o)| (t - o).max(0.0))
+            .collect();
+        times.push(per_rank);
+        components = rep.components;
+        if spec.instrument {
+            let mut tt: Vec<(String, f64)> = rep.tag_times.into_iter().collect();
+            tt.sort_by(|a, b| a.0.cmp(&b.0));
+            tag_times = tt;
+        }
+    }
+    let measurement = Measurement { times, components, tag_times };
+    let median_s = crate::util::median(&measurement.iter_maxima());
+    Ok(PointOutcome {
+        point: point.clone(),
+        effective_algorithm,
+        effective_proto: cfg.proto,
+        measurement,
+        median_s,
+    })
+}
+
+/// Run a whole campaign; optionally persist the standardized run directory.
+pub fn run_campaign(
+    spec: &TestSpec,
+    env: &EnvSpec,
+    out_dir: Option<&Path>,
+) -> Result<Vec<PointOutcome>, String> {
+    let (points, backend) = resolve(spec, env)?;
+    let profile = env.profile()?;
+    let mut run_dir = match out_dir {
+        Some(d) => {
+            let rd = RunDir::create(d.join(&spec.name)).map_err(|e| e.to_string())?;
+            rd.write_descriptor("test.json", &spec.to_json()).map_err(|e| e.to_string())?;
+            rd.write_descriptor("env.json", &env.to_json()).map_err(|e| e.to_string())?;
+            Some(rd)
+        }
+        None => None,
+    };
+
+    let mut outcomes = Vec::with_capacity(points.len());
+    for (i, point) in points.iter().enumerate() {
+        let outcome = run_point(backend.as_ref(), &profile, env, spec, point)?;
+        if let Some(rd) = run_dir.as_mut() {
+            let alloc_seed = spec.seed ^ (point.nodes as u64).wrapping_mul(0x9E37_79B9);
+            let alloc = Allocation::new(&profile, point.nodes, env.alloc_policy, alloc_seed);
+            let placement = Placement::new(&profile, &alloc, point.ppn, env.rank_order);
+            if i == 0 {
+                let meta = metadata::capture(
+                    env.metadata_verbosity,
+                    env,
+                    Some(&alloc),
+                    Some(&placement),
+                    spec.seed,
+                );
+                rd.write_descriptor("metadata.json", &meta).map_err(|e| e.to_string())?;
+            }
+            let rec = Record {
+                id: format!("p{i:05}"),
+                collective: point.collective.label().to_string(),
+                backend: backend.name().to_string(),
+                bytes: point.bytes,
+                nodes: point.nodes,
+                ppn: point.ppn,
+                requested_algorithm: point.algorithm.clone(),
+                effective_algorithm: outcome.effective_algorithm.clone(),
+                knobs_effective: spec
+                    .knobs
+                    .iter()
+                    .filter(|(k, _)| !point.degraded_knobs.iter().any(|(dk, _)| dk == k))
+                    .cloned()
+                    .collect(),
+                knobs_degraded: point.degraded_knobs.clone(),
+                measurement: outcome.measurement.clone(),
+                granularity: spec.granularity,
+            };
+            rd.add_record(&rec).map_err(|e| e.to_string())?;
+        }
+        outcomes.push(outcome);
+    }
+    if let Some(rd) = run_dir.as_ref() {
+        rd.finalize().map_err(|e| e.to_string())?;
+    }
+    Ok(outcomes)
+}
+
+/// Convenience: single-point latency query used by examples/benches —
+/// (backend, system, collective, algorithm, bytes, nodes, ppn) → seconds.
+#[allow(clippy::too_many_arguments)]
+pub fn quick_latency(
+    backend_name: &str,
+    system: &str,
+    coll: Coll,
+    algo: Option<&str>,
+    bytes: usize,
+    nodes: usize,
+    ppn: usize,
+    seed: u64,
+) -> Result<f64, String> {
+    let mut spec = TestSpec::new("quick", backend_name, coll);
+    spec.sizes = vec![bytes];
+    spec.nodes = vec![nodes];
+    spec.ppn = ppn;
+    spec.iterations = 1;
+    spec.warmup = 0;
+    spec.seed = seed;
+    spec.granularity = Granularity::None;
+    if let Some(a) = algo {
+        spec.algorithms = vec![a.to_string()];
+    }
+    let env = EnvSpec::for_system(system);
+    let outcomes = run_campaign(&spec, &env, None)?;
+    Ok(outcomes[0].median_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn campaign_runs_and_orders_algorithms() {
+        let mut spec = TestSpec::new("t", "openmpi", Coll::Allreduce);
+        spec.sizes = vec![64 * 1024];
+        spec.nodes = vec![4];
+        spec.algorithms = vec!["ring".into(), "rabenseifner".into()];
+        spec.iterations = 2;
+        spec.warmup = 1;
+        let env = EnvSpec::for_system("leonardo");
+        let out = run_campaign(&spec, &env, None).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].effective_algorithm, "ring");
+        assert_eq!(out[1].effective_algorithm, "rabenseifner");
+        for o in &out {
+            assert!(o.median_s > 0.0);
+            assert_eq!(o.measurement.times.len(), 2);
+        }
+    }
+
+    #[test]
+    fn run_dir_written() {
+        let dir = std::env::temp_dir().join(format!("pico_campaign_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spec = TestSpec::new("writeme", "simccl", Coll::Allreduce);
+        spec.sizes = vec![4096];
+        spec.nodes = vec![2];
+        spec.iterations = 1;
+        spec.warmup = 0;
+        let env = EnvSpec::for_system("leonardo");
+        run_campaign(&spec, &env, Some(&dir)).unwrap();
+        let root = dir.join("writeme");
+        for f in ["test.json", "env.json", "metadata.json", "index.json"] {
+            assert!(root.join(f).exists(), "{f}");
+        }
+        let idx = RunDir::load_index(&root).unwrap();
+        assert_eq!(idx.len(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn effective_count_rounds_for_uniform_block_collectives() {
+        assert_eq!(effective_count(Coll::Allgather, 1000, 8), 256);
+        assert_eq!(effective_count(Coll::Allreduce, 1000, 8), 250);
+        assert_eq!(effective_count(Coll::Alltoall, 4, 8), 8);
+    }
+
+    #[test]
+    fn nccl_default_proto_applied() {
+        let mut spec = TestSpec::new("t", "simccl", Coll::Allreduce);
+        spec.sizes = vec![512]; // small → LL by default
+        spec.nodes = vec![8];
+        spec.iterations = 1;
+        spec.warmup = 0;
+        let env = EnvSpec::for_system("leonardo");
+        let out = run_campaign(&spec, &env, None).unwrap();
+        assert_eq!(out[0].effective_proto, Proto::LL);
+    }
+
+    #[test]
+    fn quick_latency_monotone_in_size() {
+        let small = quick_latency("openmpi", "leonardo", Coll::Allreduce, Some("ring"), 1 << 10, 4, 1, 1)
+            .unwrap();
+        let big = quick_latency("openmpi", "leonardo", Coll::Allreduce, Some("ring"), 64 << 20, 4, 1, 1)
+            .unwrap();
+        assert!(big > small);
+    }
+}

@@ -1,0 +1,353 @@
+//! Standardized results: record schema, granularity modes (Table II) and
+//! the run-directory layout with its index (paper Sec. III-E, R4/R5).
+//!
+//! Layout of a campaign directory:
+//!
+//! ```text
+//! <out>/<campaign>/
+//!   test.json        # resolved experiment spec (requested intent)
+//!   env.json         # platform descriptor used
+//!   metadata.json    # run context capture (see metadata.rs)
+//!   index.json       # one line per record: file + test-point summary
+//!   records/<id>.json
+//! ```
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::json::Json;
+use crate::sim::Components;
+use crate::util::Stats;
+
+/// Result data granularity (Table II).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    /// All measurements for each rank and each iteration.
+    Full,
+    /// Per-iteration aggregated statistics across ranks.
+    Statistics,
+    /// Only the maximum value per iteration.
+    Minimal,
+    /// A single set of aggregates over all iterations.
+    Summary,
+    /// stdout only; nothing stored.
+    None,
+}
+
+impl Granularity {
+    pub const ALL: [Granularity; 5] = [
+        Granularity::Full,
+        Granularity::Statistics,
+        Granularity::Minimal,
+        Granularity::Summary,
+        Granularity::None,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Granularity::Full => "full",
+            Granularity::Statistics => "statistics",
+            Granularity::Minimal => "minimal",
+            Granularity::Summary => "summary",
+            Granularity::None => "none",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Granularity> {
+        Granularity::ALL.into_iter().find(|g| g.label() == s)
+    }
+}
+
+/// One test point's measurements: per-iteration, per-rank times (seconds).
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// `times[iter][rank]`.
+    pub times: Vec<Vec<f64>>,
+    pub components: Components,
+    /// (tag name, mean seconds) when instrumentation was on.
+    pub tag_times: Vec<(String, f64)>,
+}
+
+impl Measurement {
+    /// Per-iteration collective latency: the max across ranks (the
+    /// convention end-to-end benchmarks report).
+    pub fn iter_maxima(&self) -> Vec<f64> {
+        self.times
+            .iter()
+            .map(|ranks| ranks.iter().copied().fold(0.0f64, f64::max))
+            .collect()
+    }
+
+    /// Encode under a granularity mode (Table II).
+    pub fn encode(&self, g: Granularity) -> Json {
+        match g {
+            Granularity::None => Json::Null,
+            Granularity::Full => Json::Arr(
+                self.times
+                    .iter()
+                    .map(|ranks| Json::Arr(ranks.iter().map(|&t| t.into()).collect()))
+                    .collect(),
+            ),
+            Granularity::Statistics => Json::Arr(
+                self.times.iter().map(|ranks| stats_json(&Stats::from_samples(ranks))).collect(),
+            ),
+            Granularity::Minimal => {
+                Json::Arr(self.iter_maxima().into_iter().map(Json::from).collect())
+            }
+            Granularity::Summary => stats_json(&Stats::from_samples(&self.iter_maxima())),
+        }
+    }
+}
+
+pub fn stats_json(s: &Stats) -> Json {
+    Json::obj()
+        .set("n", s.n)
+        .set("min", s.min)
+        .set("max", s.max)
+        .set("mean", s.mean)
+        .set("median", s.median)
+        .set("p25", s.p25)
+        .set("p75", s.p75)
+        .set("std", s.std)
+}
+
+/// A complete record for one test point (backend-agnostic schema; both the
+/// requested and effective configuration are kept — R5).
+#[derive(Debug, Clone)]
+pub struct Record {
+    pub id: String,
+    pub collective: String,
+    pub backend: String,
+    pub bytes: usize,
+    pub nodes: usize,
+    pub ppn: usize,
+    pub requested_algorithm: Option<String>,
+    pub effective_algorithm: String,
+    pub knobs_effective: Vec<(String, String)>,
+    pub knobs_degraded: Vec<(String, String)>,
+    pub measurement: Measurement,
+    pub granularity: Granularity,
+}
+
+impl Record {
+    pub fn to_json(&self) -> Json {
+        let m = &self.measurement;
+        Json::obj()
+            .set("id", self.id.as_str())
+            .set("collective", self.collective.as_str())
+            .set("backend", self.backend.as_str())
+            .set("bytes", self.bytes)
+            .set("nodes", self.nodes)
+            .set("ppn", self.ppn)
+            .set(
+                "requested_algorithm",
+                self.requested_algorithm
+                    .as_deref()
+                    .map(Json::from)
+                    .unwrap_or(Json::Str("default".into())),
+            )
+            .set("effective_algorithm", self.effective_algorithm.as_str())
+            .set(
+                "knobs_effective",
+                Json::Obj(
+                    self.knobs_effective
+                        .iter()
+                        .map(|(k, v)| (k.clone(), v.as_str().into()))
+                        .collect(),
+                ),
+            )
+            .set(
+                "knobs_degraded",
+                Json::Obj(
+                    self.knobs_degraded
+                        .iter()
+                        .map(|(k, v)| (k.clone(), v.as_str().into()))
+                        .collect(),
+                ),
+            )
+            .set("granularity", self.granularity.label())
+            .set("median_s", crate::util::median(&m.iter_maxima()))
+            .set(
+                "components",
+                Json::obj()
+                    .set("comm", m.components.comm)
+                    .set("reduction", m.components.reduction)
+                    .set("datamove", m.components.datamove)
+                    .set("other", m.components.other),
+            )
+            .set(
+                "tags",
+                Json::Obj(m.tag_times.iter().map(|(k, v)| (k.clone(), (*v).into())).collect()),
+            )
+            .set("data", m.encode(self.granularity))
+    }
+}
+
+/// A campaign's on-disk run directory.
+pub struct RunDir {
+    pub root: PathBuf,
+    index: Vec<Json>,
+}
+
+impl RunDir {
+    pub fn create(root: impl AsRef<Path>) -> std::io::Result<RunDir> {
+        let root = root.as_ref().to_path_buf();
+        fs::create_dir_all(root.join("records"))?;
+        Ok(RunDir { root, index: Vec::new() })
+    }
+
+    pub fn write_descriptor(&self, name: &str, j: &Json) -> std::io::Result<()> {
+        fs::write(self.root.join(name), j.to_string_pretty())
+    }
+
+    pub fn add_record(&mut self, rec: &Record) -> std::io::Result<()> {
+        if rec.granularity == Granularity::None {
+            return Ok(()); // Table II: nothing stored
+        }
+        let file = format!("records/{}.json", rec.id);
+        fs::write(self.root.join(&file), rec.to_json().to_string_pretty())?;
+        self.index.push(
+            Json::obj()
+                .set("id", rec.id.as_str())
+                .set("file", file.as_str())
+                .set("collective", rec.collective.as_str())
+                .set("bytes", rec.bytes)
+                .set("nodes", rec.nodes)
+                .set("algorithm", rec.effective_algorithm.as_str())
+                .set("median_s", crate::util::median(&rec.measurement.iter_maxima())),
+        );
+        Ok(())
+    }
+
+    /// Write the index (call once at campaign end).
+    pub fn finalize(&self) -> std::io::Result<()> {
+        fs::write(
+            self.root.join("index.json"),
+            Json::Arr(self.index.clone()).to_string_pretty(),
+        )
+    }
+
+    /// Load an index back for post-processing.
+    pub fn load_index(root: impl AsRef<Path>) -> Result<Vec<Json>, String> {
+        let text = fs::read_to_string(root.as_ref().join("index.json"))
+            .map_err(|e| e.to_string())?;
+        match Json::parse(&text)? {
+            Json::Arr(a) => Ok(a),
+            _ => Err("index.json is not an array".into()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meas() -> Measurement {
+        Measurement {
+            times: vec![vec![1.0, 2.0, 3.0], vec![1.5, 2.5, 3.5]],
+            components: Components { comm: 1.0, reduction: 0.5, datamove: 0.25, other: 0.0 },
+            tag_times: vec![("phase:redscat".into(), 0.7)],
+        }
+    }
+
+    #[test]
+    fn granularity_encodings_consistent() {
+        let m = meas();
+        // Full keeps everything
+        let full = m.encode(Granularity::Full);
+        assert_eq!(full.as_arr().unwrap().len(), 2);
+        assert_eq!(full.as_arr().unwrap()[0].as_arr().unwrap().len(), 3);
+        // Minimal = per-iteration maxima
+        let min = m.encode(Granularity::Minimal);
+        assert_eq!(min.as_arr().unwrap()[0].as_f64(), Some(3.0));
+        assert_eq!(min.as_arr().unwrap()[1].as_f64(), Some(3.5));
+        // Summary aggregates the maxima
+        let sum = m.encode(Granularity::Summary);
+        assert_eq!(sum.get("n").unwrap().as_usize(), Some(2));
+        assert_eq!(sum.get("max").unwrap().as_f64(), Some(3.5));
+        // Statistics: one stats object per iteration
+        let st = m.encode(Granularity::Statistics);
+        assert_eq!(st.as_arr().unwrap().len(), 2);
+        // None stores nothing
+        assert_eq!(m.encode(Granularity::None), Json::Null);
+    }
+
+    #[test]
+    fn summary_derivable_from_full() {
+        // Table II invariant: coarser modes are pure functions of Full
+        let m = meas();
+        let full = m.encode(Granularity::Full);
+        let maxima: Vec<f64> = full
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|it| {
+                it.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).fold(0.0f64, f64::max)
+            })
+            .collect();
+        assert_eq!(maxima, m.iter_maxima());
+    }
+
+    #[test]
+    fn granularity_parse_round_trip() {
+        for g in Granularity::ALL {
+            assert_eq!(Granularity::parse(g.label()), Some(g));
+        }
+        assert_eq!(Granularity::parse("bogus"), None);
+    }
+
+    #[test]
+    fn run_dir_round_trip() {
+        let dir = std::env::temp_dir().join(format!("pico_test_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let mut rd = RunDir::create(&dir).unwrap();
+        let rec = Record {
+            id: "t0".into(),
+            collective: "allreduce".into(),
+            backend: "openmpi-sim".into(),
+            bytes: 1024,
+            nodes: 2,
+            ppn: 1,
+            requested_algorithm: None,
+            effective_algorithm: "ring".into(),
+            knobs_effective: vec![],
+            knobs_degraded: vec![],
+            measurement: meas(),
+            granularity: Granularity::Summary,
+        };
+        rd.add_record(&rec).unwrap();
+        rd.finalize().unwrap();
+        let idx = RunDir::load_index(&dir).unwrap();
+        assert_eq!(idx.len(), 1);
+        assert_eq!(idx[0].get("algorithm").unwrap().as_str(), Some("ring"));
+        // the record file parses back
+        let file = idx[0].get("file").unwrap().as_str().unwrap();
+        let rec_json = Json::parse(&fs::read_to_string(dir.join(file)).unwrap()).unwrap();
+        assert_eq!(rec_json.get("effective_algorithm").unwrap().as_str(), Some("ring"));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn none_granularity_stores_nothing() {
+        let dir = std::env::temp_dir().join(format!("pico_none_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let mut rd = RunDir::create(&dir).unwrap();
+        let rec = Record {
+            id: "t0".into(),
+            collective: "allreduce".into(),
+            backend: "openmpi-sim".into(),
+            bytes: 1024,
+            nodes: 2,
+            ppn: 1,
+            requested_algorithm: None,
+            effective_algorithm: "ring".into(),
+            knobs_effective: vec![],
+            knobs_degraded: vec![],
+            measurement: meas(),
+            granularity: Granularity::None,
+        };
+        rd.add_record(&rec).unwrap();
+        assert!(!dir.join("records/t0.json").exists());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,663 @@
+//! Deterministic discrete-event simulator: executes a [`Goal`] on a
+//! modelled cluster (the substitute for the paper's real machines).
+//!
+//! Mechanisms:
+//! - per-rank dependency-driven op execution (send/recv/reduce/copy/calc);
+//! - MPI-style message matching by (src, dst, tag) in FIFO order;
+//! - eager (buffered, sender-completes-early) vs rendezvous (both-sides,
+//!   handshake, striped) transfer semantics from [`netmodel`];
+//! - **resource occupancy** congestion: per-node NIC tx/rx pools, per-node
+//!   scale-up fabric, and per-group tapered uplink pools.  Concurrent flows
+//!   queue on shared resources, which is exactly what separates
+//!   distance-halving from distance-doubling broadcast (Fig. 8–10) and
+//!   creates the structured suboptimality regions of Fig. 6;
+//! - component attribution: per-rank interval union over op categories
+//!   (communication / reduction / data movement / other) and per-tag-region
+//!   timing, feeding Fig. 11.
+//!
+//! The engine is fully deterministic: identical inputs produce identical
+//! virtual timelines (asserted by tests), satisfying reproducibility (R5).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+
+use crate::goal::{Goal, OpKind};
+use crate::netmodel::{NetConfig, NetParams};
+use crate::topology::{Placement, SystemProfile, Tier};
+
+/// A bandwidth pool with serialized occupancy.
+#[derive(Debug, Clone)]
+struct Resource {
+    busy_until: f64,
+    bw: f64,
+}
+
+impl Resource {
+    fn new(bw: f64) -> Self {
+        Self { busy_until: 0.0, bw }
+    }
+
+    /// Reserve `bytes` starting no earlier than `t`; returns completion.
+    fn reserve(&mut self, t: f64, bytes: f64) -> f64 {
+        let start = t.max(self.busy_until);
+        let end = start + bytes / self.bw;
+        self.busy_until = end;
+        end
+    }
+}
+
+/// Time attribution per op category (Fig. 11's stacked components).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Components {
+    pub comm: f64,
+    pub reduction: f64,
+    pub datamove: f64,
+    pub other: f64,
+}
+
+impl Components {
+    pub fn total(&self) -> f64 {
+        self.comm + self.reduction + self.datamove + self.other
+    }
+}
+
+/// Result of simulating one Goal.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Collective completion: max finish time across ranks.
+    pub total_time: f64,
+    pub per_rank_time: Vec<f64>,
+    /// Component breakdown averaged across ranks.
+    pub components: Components,
+    /// Mean time per tag region name (averaged over ranks that have it).
+    pub tag_times: HashMap<String, f64>,
+    pub events_processed: usize,
+}
+
+/// Simulation context: where the Goal runs and under which knobs.
+pub struct SimContext<'a> {
+    pub profile: &'a SystemProfile,
+    pub placement: &'a Placement,
+    pub cfg: NetConfig,
+    /// Optional per-rank start offsets (synchronization skew, C3).
+    pub start_times: Option<&'a [f64]>,
+    /// Data-plane override: NCCL-style backends stage/reduce on the GPU
+    /// (HBM bandwidth), plain-MPI ones on the host (profile default).
+    pub mem: Option<&'a crate::netmodel::MemParams>,
+}
+
+impl<'a> SimContext<'a> {
+    pub fn new(profile: &'a SystemProfile, placement: &'a Placement) -> Self {
+        Self { profile, placement, cfg: NetConfig::default(), start_times: None, mem: None }
+    }
+
+    pub fn with_cfg(mut self, cfg: NetConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    pub fn with_mem(mut self, mem: &'a crate::netmodel::MemParams) -> Self {
+        self.mem = Some(mem);
+        self
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Category {
+    Comm,
+    Reduction,
+    Datamove,
+    Other,
+}
+
+fn category(kind: &OpKind) -> Category {
+    match kind {
+        OpKind::Send { .. } | OpKind::Recv { .. } => Category::Comm,
+        OpKind::Reduce { .. } => Category::Reduction,
+        OpKind::Copy { .. } => Category::Datamove,
+        OpKind::Calc { .. } => Category::Other,
+    }
+}
+
+/// Totally ordered f64 key for the event heap.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct TimeKey(f64);
+
+impl Eq for TimeKey {}
+
+impl PartialOrd for TimeKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TimeKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+type ChannelKey = (u32, u32, u32); // (src, dst, tag)
+
+#[derive(Default)]
+struct Channel {
+    sends: VecDeque<(usize, usize, f64)>, // (rank, op, ready time)
+    recvs: VecDeque<(usize, usize, f64)>,
+}
+
+/// Run `goal` on the modelled cluster.
+pub fn simulate(goal: &Goal, ctx: &SimContext) -> SimReport {
+    let p = goal.p();
+    assert_eq!(
+        p,
+        ctx.placement.n_ranks(),
+        "goal has {p} ranks but placement has {}",
+        ctx.placement.n_ranks()
+    );
+    let net = &ctx.profile.net;
+    let mem = ctx.mem.unwrap_or(&ctx.profile.mem);
+    let rails = ctx.profile.rails;
+
+    // ---- resources -------------------------------------------------------
+    // Map allocated nodes/groups to dense indices.
+    let mut node_idx: HashMap<usize, usize, crate::util::FastBuild> = Default::default();
+    let mut group_idx: HashMap<usize, usize, crate::util::FastBuild> = Default::default();
+    let mut group_nodes: Vec<usize> = Vec::new(); // allocated nodes per group
+    for r in 0..p {
+        let nd = ctx.placement.rank_node[r];
+        let next = node_idx.len();
+        if node_idx.try_insert_or(nd, next) {
+            let g = ctx.profile.group_of(nd);
+            let gi = *group_idx.entry(g).or_insert_with(|| {
+                group_nodes.push(0);
+                group_nodes.len() - 1
+            });
+            group_nodes[gi] += 1;
+        }
+    }
+    let nic_bw = rails as f64 * net.rail_bw;
+    let mut nic_tx: Vec<Resource> = (0..node_idx.len()).map(|_| Resource::new(nic_bw)).collect();
+    let mut nic_rx: Vec<Resource> = (0..node_idx.len()).map(|_| Resource::new(nic_bw)).collect();
+    let mut fabric: Vec<Resource> =
+        (0..node_idx.len()).map(|_| Resource::new(net.intra_node.bw)).collect();
+    // Per-group uplink pool: the job's share of global links scales with
+    // its footprint in the group (taper models oversubscription), plus one
+    // NIC's worth of headroom — adaptive routing gives small footprints
+    // near-full global bandwidth, and only dense per-group traffic tapers.
+    let mut uplink_tx: Vec<Resource> = group_nodes
+        .iter()
+        .map(|&n| Resource::new(nic_bw * (net.taper * n as f64 + 1.0)))
+        .collect();
+    let mut uplink_rx: Vec<Resource> = uplink_tx.clone();
+
+    // ---- dependency bookkeeping -------------------------------------------
+    // Flat (CSR) layout: per-op state is indexed by a global op id, and the
+    // dependents graph lives in two flat arrays — no per-op allocations
+    // (this was the event loop's dominant cost; see EXPERIMENTS.md §Perf).
+    let mut base = vec![0usize; p + 1]; // rank → first global op id
+    for r in 0..p {
+        base[r + 1] = base[r] + goal.ranks[r].ops.len();
+    }
+    let total_ops = base[p];
+    let gid = |r: usize, i: usize| base[r] + i;
+
+    let mut pending = vec![0u32; total_ops];
+    let mut dep_count = vec![0u32; total_ops]; // dependents per op (CSR sizes)
+    for (r, prog) in goal.ranks.iter().enumerate() {
+        for (i, op) in prog.ops.iter().enumerate() {
+            pending[gid(r, i)] = op.deps.len() as u32;
+            for &d in &op.deps {
+                dep_count[gid(r, d)] += 1;
+            }
+        }
+    }
+    let mut dep_off = vec![0usize; total_ops + 1];
+    for g in 0..total_ops {
+        dep_off[g + 1] = dep_off[g] + dep_count[g] as usize;
+    }
+    let mut dependents = vec![0u32; dep_off[total_ops]];
+    let mut cursor = dep_off.clone();
+    for (r, prog) in goal.ranks.iter().enumerate() {
+        for (i, op) in prog.ops.iter().enumerate() {
+            for &d in &op.deps {
+                let dg = gid(r, d);
+                dependents[cursor[dg]] = gid(r, i) as u32;
+                cursor[dg] += 1;
+            }
+        }
+    }
+    let mut finish = vec![f64::NAN; total_ops];
+    let mut start = vec![f64::NAN; total_ops];
+
+    let mut heap: BinaryHeap<Reverse<(TimeKey, usize, usize)>> =
+        BinaryHeap::with_capacity(total_ops / 4 + 16);
+    for r in 0..p {
+        let t0 = ctx.start_times.map_or(0.0, |s| s[r]);
+        for (i, op) in goal.ranks[r].ops.iter().enumerate() {
+            if op.deps.is_empty() {
+                heap.push(Reverse((TimeKey(t0), r, i)));
+            }
+        }
+    }
+
+    let mut channels: HashMap<ChannelKey, Channel, crate::util::FastBuild> =
+        HashMap::with_capacity_and_hasher(64, Default::default());
+    let mut events = 0usize;
+
+    // Completion helper: mark op finished, release dependents.
+    macro_rules! complete {
+        ($heap:ident, $r:expr, $i:expr, $t_start:expr, $t_end:expr) => {{
+            let g = gid($r, $i);
+            start[g] = $t_start;
+            finish[g] = $t_end;
+            for di in dep_off[g]..dep_off[g + 1] {
+                let dep_g = dependents[di] as usize;
+                pending[dep_g] -= 1;
+                if pending[dep_g] == 0 {
+                    let dep_i = dep_g - base[$r];
+                    let ready = goal.ranks[$r].ops[dep_i]
+                        .deps
+                        .iter()
+                        .map(|&d| finish[base[$r] + d])
+                        .fold(0.0f64, f64::max);
+                    $heap.push(Reverse((TimeKey(ready), $r, dep_i)));
+                }
+            }
+        }};
+    }
+
+    while let Some(Reverse((TimeKey(t), r, i))) = heap.pop() {
+        events += 1;
+        let kind = goal.ranks[r].ops[i].kind;
+        match kind {
+            OpKind::Calc { seconds } => {
+                complete!(heap, r, i, t, t + seconds);
+            }
+            OpKind::Copy { src, .. } => {
+                let dur = mem.copy_time(src.bytes(goal.elem_bytes));
+                complete!(heap, r, i, t, t + dur);
+            }
+            OpKind::Reduce { src, .. } => {
+                let dur = mem.reduce_time(src.bytes(goal.elem_bytes));
+                complete!(heap, r, i, t, t + dur);
+            }
+            OpKind::Send { peer, seg, tag } => {
+                let key = (r as u32, peer as u32, tag);
+                let ch = channels.entry(key).or_default();
+                if let Some((rr, ri, rt)) = ch.recvs.pop_front() {
+                    let bytes = seg.bytes(goal.elem_bytes);
+                    let (s_fin, r_fin, s_start, r_start) = transfer(
+                        net, &ctx.cfg, ctx.placement, ctx.profile, rails, r, rr, bytes, t, rt,
+                        &node_idx, &group_idx, &mut nic_tx, &mut nic_rx, &mut fabric,
+                        &mut uplink_tx, &mut uplink_rx,
+                    );
+                    complete!(heap, r, i, s_start, s_fin);
+                    complete!(heap, rr, ri, r_start, r_fin);
+                } else {
+                    ch.sends.push_back((r, i, t));
+                }
+            }
+            OpKind::Recv { peer, seg, tag } => {
+                let key = (peer as u32, r as u32, tag);
+                let ch = channels.entry(key).or_default();
+                if let Some((sr, si, st)) = ch.sends.pop_front() {
+                    let bytes = seg.bytes(goal.elem_bytes);
+                    let (s_fin, r_fin, s_start, r_start) = transfer(
+                        net, &ctx.cfg, ctx.placement, ctx.profile, rails, sr, r, bytes, st, t,
+                        &node_idx, &group_idx, &mut nic_tx, &mut nic_rx, &mut fabric,
+                        &mut uplink_tx, &mut uplink_rx,
+                    );
+                    complete!(heap, sr, si, s_start, s_fin);
+                    complete!(heap, r, i, r_start, r_fin);
+                } else {
+                    ch.recvs.push_back((r, i, t));
+                }
+            }
+        }
+    }
+
+    // All ops must have completed (deadlock = bug in a schedule generator).
+    for r in 0..p {
+        for i in 0..goal.ranks[r].ops.len() {
+            assert!(
+                finish[gid(r, i)].is_finite(),
+                "deadlock: rank {r} op {i} ({:?}) never completed",
+                goal.ranks[r].ops[i].kind
+            );
+        }
+    }
+
+    // ---- reporting --------------------------------------------------------
+    let per_rank_time: Vec<f64> = (0..p)
+        .map(|r| finish[base[r]..base[r + 1]].iter().copied().fold(0.0f64, f64::max))
+        .collect();
+    let total_time = per_rank_time.iter().copied().fold(0.0f64, f64::max);
+
+    // Component breakdown: per-rank interval union per category.
+    let mut comps = Components::default();
+    for r in 0..p {
+        let mut cat_ivs: [Vec<(f64, f64)>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for (i, op) in goal.ranks[r].ops.iter().enumerate() {
+            let idx = match category(&op.kind) {
+                Category::Comm => 0,
+                Category::Reduction => 1,
+                Category::Datamove => 2,
+                Category::Other => continue,
+            };
+            cat_ivs[idx].push((start[gid(r, i)], finish[gid(r, i)]));
+        }
+        let comm = interval_union(&mut cat_ivs[0]);
+        let red = interval_union(&mut cat_ivs[1]);
+        let dm = interval_union(&mut cat_ivs[2]);
+        comps.comm += comm;
+        comps.reduction += red;
+        comps.datamove += dm;
+        comps.other += (per_rank_time[r] - comm - red - dm).max(0.0);
+    }
+    let pf = p as f64;
+    comps.comm /= pf;
+    comps.reduction /= pf;
+    comps.datamove /= pf;
+    comps.other /= pf;
+
+    // Tag regions: entry = max finish of outside-region deps; exit = max
+    // finish inside region.
+    let mut tag_sums: HashMap<String, (f64, usize)> = HashMap::new();
+    for r in 0..p {
+        for span in &goal.ranks[r].tags {
+            let mut entry = 0.0f64;
+            let mut exit = 0.0f64;
+            for i in span.first..=span.last.min(goal.ranks[r].ops.len().saturating_sub(1)) {
+                for &d in &goal.ranks[r].ops[i].deps {
+                    if d < span.first {
+                        entry = entry.max(finish[gid(r, d)]);
+                    }
+                }
+                exit = exit.max(finish[gid(r, i)]);
+            }
+            let e = tag_sums.entry(span.name.clone()).or_insert((0.0, 0));
+            e.0 += (exit - entry).max(0.0);
+            e.1 += 1;
+        }
+    }
+    let tag_times =
+        tag_sums.into_iter().map(|(k, (sum, n))| (k, sum / n as f64)).collect();
+
+    SimReport { total_time, per_rank_time, components: comps, tag_times, events_processed: events }
+}
+
+/// Schedule one matched transfer; returns (send_finish, recv_finish,
+/// send_start, recv_start).
+#[allow(clippy::too_many_arguments)]
+fn transfer(
+    net: &NetParams,
+    cfg: &NetConfig,
+    placement: &Placement,
+    profile: &SystemProfile,
+    rails: usize,
+    src: usize,
+    dst: usize,
+    bytes: usize,
+    send_ready: f64,
+    recv_ready: f64,
+    node_idx: &HashMap<usize, usize, crate::util::FastBuild>,
+    group_idx: &HashMap<usize, usize, crate::util::FastBuild>,
+    nic_tx: &mut [Resource],
+    nic_rx: &mut [Resource],
+    fabric: &mut [Resource],
+    uplink_tx: &mut [Resource],
+    uplink_rx: &mut [Resource],
+) -> (f64, f64, f64, f64) {
+    let tier = placement.tier(src, dst);
+    if tier == Tier::SelfRank {
+        // local: a staging copy at memory bandwidth
+        let dur = profile.mem.copy_time(bytes);
+        let s = send_ready;
+        let rstart = recv_ready.max(send_ready);
+        return (s + dur, rstart.max(s + dur), s, rstart);
+    }
+    let alpha = net.flow_alpha(cfg, tier, bytes);
+    let flow_bw = net.flow_bw(cfg, tier, bytes, rails);
+    let fbytes = bytes as f64;
+    let sn = node_idx[&placement.rank_node[src]];
+    let dn = node_idx[&placement.rank_node[dst]];
+
+    if tier == Tier::IntraNode {
+        // scale-up fabric pool on the node; no NIC involvement.
+        let t0 = send_ready.max(recv_ready);
+        let end = fabric[sn].reserve(t0, fbytes).max(t0 + fbytes / flow_bw) + alpha;
+        return (end, end, send_ready, recv_ready);
+    }
+
+    let eager = bytes <= net.eager_max(cfg);
+    if eager {
+        // Sender injects as soon as it is ready and completes locally.
+        let inj_end = nic_tx[sn].reserve(send_ready, fbytes).max(send_ready + fbytes / flow_bw);
+        let mut arrival = inj_end + alpha;
+        if tier == Tier::InterGroup {
+            let sg = group_idx[&placement.rank_group[src]];
+            let dg = group_idx[&placement.rank_group[dst]];
+            arrival = arrival
+                .max(uplink_tx[sg].reserve(send_ready, fbytes))
+                .max(uplink_rx[dg].reserve(send_ready, fbytes));
+        }
+        let drain = nic_rx[dn].reserve(arrival - fbytes / flow_bw, fbytes).max(arrival);
+        let recv_fin = recv_ready.max(drain);
+        (inj_end, recv_fin, send_ready, recv_ready)
+    } else {
+        // Rendezvous: both sides synchronize, then a striped zero-copy
+        // transfer occupies the full path.
+        let t0 = send_ready.max(recv_ready);
+        let mut end = (t0 + fbytes / flow_bw)
+            .max(nic_tx[sn].reserve(t0, fbytes))
+            .max(nic_rx[dn].reserve(t0, fbytes));
+        if tier == Tier::InterGroup {
+            let sg = group_idx[&placement.rank_group[src]];
+            let dg = group_idx[&placement.rank_group[dst]];
+            end = end
+                .max(uplink_tx[sg].reserve(t0, fbytes))
+                .max(uplink_rx[dg].reserve(t0, fbytes));
+        }
+        let end = end + alpha;
+        (end, end, send_ready, recv_ready)
+    }
+}
+
+/// Length of the union of (possibly overlapping) intervals.  Sorts in place.
+fn interval_union(ivs: &mut [(f64, f64)]) -> f64 {
+    if ivs.is_empty() {
+        return 0.0;
+    }
+    ivs.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut total = 0.0;
+    let (mut cs, mut ce) = ivs[0];
+    for &(s, e) in ivs.iter().skip(1) {
+        if s > ce {
+            total += ce - cs;
+            cs = s;
+            ce = e;
+        } else {
+            ce = ce.max(e);
+        }
+    }
+    total + (ce - cs)
+}
+
+/// Tiny ergonomic helper: HashMap insert-if-absent returning whether the
+/// key was new (keeps the resource-mapping loop readable).
+trait TryInsertOr {
+    fn try_insert_or(&mut self, k: usize, v: usize) -> bool;
+}
+
+impl TryInsertOr for HashMap<usize, usize, crate::util::FastBuild> {
+    fn try_insert_or(&mut self, k: usize, v: usize) -> bool {
+        use std::collections::hash_map::Entry;
+        match self.entry(k) {
+            Entry::Vacant(e) => {
+                e.insert(v);
+                true
+            }
+            Entry::Occupied(_) => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::goal::{Op, Seg};
+    use crate::topology::{leonardo, AllocPolicy, Allocation, RankOrder};
+
+    fn ctx_fixture(nodes: usize, ppn: usize) -> (crate::topology::SystemProfile, Placement) {
+        let prof = leonardo();
+        let alloc = Allocation::new(&prof, nodes, AllocPolicy::Contiguous, 42);
+        let pl = Placement::new(&prof, &alloc, ppn, RankOrder::Block);
+        (prof, pl)
+    }
+
+    fn pingpong(bytes: usize) -> Goal {
+        let elems = bytes / 4;
+        let mut g = Goal::new(2, elems, 4);
+        g.ranks[0].ops.push(Op {
+            kind: OpKind::Send { peer: 1, seg: Seg::input(0, elems), tag: 0 },
+            deps: vec![],
+        });
+        g.ranks[0].ops.push(Op {
+            kind: OpKind::Recv { peer: 1, seg: Seg::output(0, elems), tag: 1 },
+            deps: vec![0],
+        });
+        g.ranks[1].ops.push(Op {
+            kind: OpKind::Recv { peer: 0, seg: Seg::output(0, elems), tag: 0 },
+            deps: vec![],
+        });
+        g.ranks[1].ops.push(Op {
+            kind: OpKind::Send { peer: 0, seg: Seg::input(0, elems), tag: 1 },
+            deps: vec![0],
+        });
+        g
+    }
+
+    #[test]
+    fn pingpong_timing_reasonable() {
+        let (prof, pl) = ctx_fixture(2, 1);
+        let g = pingpong(8);
+        let rep = simulate(&g, &SimContext::new(&prof, &pl));
+        // 2 one-way small messages: ~2α plus negligible bandwidth
+        let alpha = prof.net.intra_group.alpha;
+        assert!(rep.total_time > 1.5 * alpha && rep.total_time < 8.0 * alpha,
+            "t={} alpha={alpha}", rep.total_time);
+    }
+
+    #[test]
+    fn simulation_is_deterministic() {
+        let (prof, pl) = ctx_fixture(2, 1);
+        let g = pingpong(1 << 20);
+        let a = simulate(&g, &SimContext::new(&prof, &pl));
+        let b = simulate(&g, &SimContext::new(&prof, &pl));
+        assert_eq!(a.total_time, b.total_time);
+        assert_eq!(a.per_rank_time, b.per_rank_time);
+    }
+
+    #[test]
+    fn bigger_messages_take_longer() {
+        let (prof, pl) = ctx_fixture(2, 1);
+        let small = simulate(&pingpong(1 << 10), &SimContext::new(&prof, &pl));
+        let big = simulate(&pingpong(64 << 20), &SimContext::new(&prof, &pl));
+        assert!(big.total_time > 10.0 * small.total_time);
+    }
+
+    #[test]
+    fn nic_contention_serializes_flows() {
+        // Two ranks on node A each send a large message to node B:
+        // the NIC pool must serialize them vs a single flow.
+        let (prof, pl) = ctx_fixture(2, 2); // ranks 0,1 on node0; 2,3 on node1
+        let elems = (32 << 20) / 4;
+        let mut one = Goal::new(4, elems, 4);
+        one.ranks[0].ops.push(Op {
+            kind: OpKind::Send { peer: 2, seg: Seg::input(0, elems), tag: 0 },
+            deps: vec![],
+        });
+        one.ranks[2].ops.push(Op {
+            kind: OpKind::Recv { peer: 0, seg: Seg::output(0, elems), tag: 0 },
+            deps: vec![],
+        });
+        let mut two = one.clone();
+        two.ranks[1].ops.push(Op {
+            kind: OpKind::Send { peer: 3, seg: Seg::input(0, elems), tag: 1 },
+            deps: vec![],
+        });
+        two.ranks[3].ops.push(Op {
+            kind: OpKind::Recv { peer: 1, seg: Seg::output(0, elems), tag: 1 },
+            deps: vec![],
+        });
+        // 4-rail flows (38 GB/s each) oversubscribe the 50 GB/s NIC pool
+        let cfg = NetConfig { max_rndv_rails: Some(4), ..Default::default() };
+        let t1 = simulate(&one, &SimContext::new(&prof, &pl).with_cfg(cfg)).total_time;
+        let t2 = simulate(&two, &SimContext::new(&prof, &pl).with_cfg(cfg)).total_time;
+        assert!(t2 > 1.3 * t1, "expected NIC contention: t1={t1} t2={t2}");
+    }
+
+    #[test]
+    fn start_skew_shifts_completion() {
+        let (prof, pl) = ctx_fixture(2, 1);
+        let g = pingpong(1 << 10);
+        let base = simulate(&g, &SimContext::new(&prof, &pl)).total_time;
+        let skew = [0.0, 100e-6];
+        let mut ctx = SimContext::new(&prof, &pl);
+        ctx.start_times = Some(&skew);
+        let skewed = simulate(&g, &ctx).total_time;
+        assert!(skewed >= base + 90e-6);
+    }
+
+    #[test]
+    fn components_sum_to_total() {
+        let (prof, pl) = ctx_fixture(2, 1);
+        let elems = 1 << 18;
+        let mut g = Goal::new(2, elems, 4);
+        g.ranks[0].ops.push(Op {
+            kind: OpKind::Send { peer: 1, seg: Seg::input(0, elems), tag: 0 },
+            deps: vec![],
+        });
+        g.ranks[0].ops.push(Op {
+            kind: OpKind::Reduce {
+                dst: Seg::output(0, elems),
+                src: Seg::input(0, elems),
+                op: Default::default(),
+            },
+            deps: vec![0],
+        });
+        g.ranks[1].ops.push(Op {
+            kind: OpKind::Recv { peer: 0, seg: Seg::output(0, elems), tag: 0 },
+            deps: vec![],
+        });
+        g.ranks[1].ops.push(Op {
+            kind: OpKind::Copy { dst: Seg::tmp(0, elems), src: Seg::output(0, elems) },
+            deps: vec![0],
+        });
+        let rep = simulate(&g, &SimContext::new(&prof, &pl));
+        let c = rep.components;
+        assert!(c.comm > 0.0 && c.reduction > 0.0 && c.datamove > 0.0);
+        // average per-rank busy time can't exceed makespan
+        assert!(c.total() <= rep.total_time + 1e-12);
+    }
+
+    #[test]
+    fn interval_union_handles_overlap() {
+        let mut ivs = vec![(0.0, 2.0), (1.0, 3.0), (5.0, 6.0)];
+        assert!((interval_union(&mut ivs) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn deadlock_detected() {
+        let (prof, pl) = ctx_fixture(2, 1);
+        let mut g = Goal::new(2, 4, 4);
+        g.ranks[0].ops.push(Op {
+            kind: OpKind::Recv { peer: 1, seg: Seg::output(0, 4), tag: 0 },
+            deps: vec![],
+        });
+        // rank1 never sends
+        simulate(&g, &SimContext::new(&prof, &pl));
+    }
+}

@@ -1,0 +1,138 @@
+//! Process-synchronization methodology (paper challenge C3).
+//!
+//! Benchmark timing needs all ranks to enter the measured region together.
+//! PICO uses an internal barrier; the paper discusses how barrier choice
+//! skews results (ring worst, dissemination best) and the window-based
+//! alternative that trades barrier skew for clock drift.  This module
+//! quantifies both on the simulated cluster: it runs each barrier schedule
+//! through the DES and reports per-rank *exit skew*, and models windowed
+//! start with configurable clock-drift spread.
+
+
+use crate::collectives::{barrier, GenParams};
+use crate::netmodel::NetConfig;
+use crate::sim::{simulate, SimContext};
+use crate::topology::{Placement, SystemProfile};
+use crate::util::Rng;
+
+/// How ranks are released into the measured region.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum SyncMethod {
+    /// Dissemination barrier before each iteration (PICO's default).
+    #[default]
+    BarrierDissemination,
+    /// Ring-token barrier (the cautionary tale).
+    BarrierLinear,
+    /// Binomial-tree barrier.
+    BarrierTree,
+    /// Window-based: agree on a future start time; skew = clock drift.
+    Window,
+}
+
+impl SyncMethod {
+    pub const ALL: [SyncMethod; 4] = [
+        SyncMethod::BarrierDissemination,
+        SyncMethod::BarrierLinear,
+        SyncMethod::BarrierTree,
+        SyncMethod::Window,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SyncMethod::BarrierDissemination => "barrier:dissemination",
+            SyncMethod::BarrierLinear => "barrier:linear",
+            SyncMethod::BarrierTree => "barrier:tree",
+            SyncMethod::Window => "window",
+        }
+    }
+}
+
+/// Per-rank start offsets produced by a synchronization method, plus the
+/// skew (max − min exit time) it induces.
+#[derive(Debug, Clone)]
+pub struct SkewProfile {
+    pub method: String,
+    pub offsets: Vec<f64>,
+    pub skew: f64,
+}
+
+/// Simulate the release pattern of `method` on this placement: the
+/// per-rank barrier *exit* times become the start offsets of the measured
+/// collective (exactly the bias mechanism of [56][57]).
+pub fn skew_profile(
+    method: SyncMethod,
+    profile: &SystemProfile,
+    placement: &Placement,
+    seed: u64,
+) -> SkewProfile {
+    let p = placement.n_ranks();
+    let offsets: Vec<f64> = match method {
+        SyncMethod::Window => {
+            // clocks are synchronized within ±drift; uniform spread
+            let drift = 2e-6;
+            let mut rng = Rng::new(seed);
+            (0..p).map(|_| rng.f64() * drift).collect()
+        }
+        m => {
+            let gen = match m {
+                SyncMethod::BarrierDissemination => barrier::dissemination,
+                SyncMethod::BarrierLinear => barrier::linear,
+                SyncMethod::BarrierTree => barrier::tree,
+                SyncMethod::Window => unreachable!(),
+            };
+            let goal = gen(&GenParams::new(p, 0)).expect("barrier generators accept any p");
+            let ctx = SimContext::new(profile, placement).with_cfg(NetConfig::default());
+            let rep = simulate(&goal, &ctx);
+            rep.per_rank_time
+        }
+    };
+    let min = offsets.iter().copied().fold(f64::INFINITY, f64::min);
+    let max = offsets.iter().copied().fold(0.0f64, f64::max);
+    // normalize: earliest exit = 0
+    let offsets = offsets.iter().map(|t| t - min).collect();
+    SkewProfile { method: method.label().to_string(), offsets, skew: max - min }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{leonardo, AllocPolicy, Allocation, RankOrder};
+
+    fn fixture() -> (SystemProfile, Placement) {
+        let prof = leonardo();
+        let alloc = Allocation::new(&prof, 8, AllocPolicy::Contiguous, 1);
+        let pl = Placement::new(&prof, &alloc, 2, RankOrder::Block);
+        (prof, pl)
+    }
+
+    #[test]
+    fn linear_barrier_skews_most() {
+        let (prof, pl) = fixture();
+        let lin = skew_profile(SyncMethod::BarrierLinear, &prof, &pl, 1);
+        let dis = skew_profile(SyncMethod::BarrierDissemination, &prof, &pl, 1);
+        assert!(
+            lin.skew > 2.0 * dis.skew,
+            "expected ring barrier skew ({}) >> dissemination ({})",
+            lin.skew,
+            dis.skew
+        );
+    }
+
+    #[test]
+    fn window_skew_bounded_by_drift() {
+        let (prof, pl) = fixture();
+        let w = skew_profile(SyncMethod::Window, &prof, &pl, 3);
+        assert!(w.skew <= 2e-6);
+    }
+
+    #[test]
+    fn offsets_normalized() {
+        let (prof, pl) = fixture();
+        for m in SyncMethod::ALL {
+            let s = skew_profile(m, &prof, &pl, 5);
+            let min = s.offsets.iter().copied().fold(f64::INFINITY, f64::min);
+            assert!(min.abs() < 1e-15, "{}", m.label());
+            assert_eq!(s.offsets.len(), pl.n_ranks());
+        }
+    }
+}

@@ -1,0 +1,325 @@
+//! Cluster topology substrate (paper challenge C1).
+//!
+//! The paper runs on Leonardo (Dragonfly+, 4×IB rails), LUMI (Dragonfly,
+//! Slingshot) and MareNostrum 5 (tapered fat-tree).  We substitute those
+//! machines with [`SystemProfile`]s: a hierarchy of *tiers* — same rank,
+//! intra-node, intra-group (same switch group / leaf), inter-group (global
+//! links) — plus the node/NIC/rail inventory the network model consumes.
+//!
+//! Allocations model what SLURM actually hands out: contiguous blocks,
+//! block-scattered sets, or fully scattered node lists; rank placement maps
+//! MPI ranks onto allocated nodes (block or round-robin), reproducing the
+//! placement sensitivity of Sec. IV-B.
+
+
+use crate::netmodel::{MemParams, NetParams};
+use crate::util::Rng;
+
+/// Global node identifier within a [`SystemProfile`].
+pub type NodeId = usize;
+
+/// Communication locality tier between two ranks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Tier {
+    /// Same rank (self-message; free).
+    SelfRank,
+    /// Different ranks on the same node (scale-up fabric).
+    IntraNode,
+    /// Different nodes under the same switch group / Dragonfly group.
+    IntraGroup,
+    /// Nodes in different groups (global / tapered links).
+    InterGroup,
+}
+
+impl Tier {
+    pub const ALL: [Tier; 4] = [Tier::SelfRank, Tier::IntraNode, Tier::IntraGroup, Tier::InterGroup];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Tier::SelfRank => "self",
+            Tier::IntraNode => "intra-node",
+            Tier::IntraGroup => "intra-group",
+            Tier::InterGroup => "inter-group",
+        }
+    }
+}
+
+/// Interconnect family, for metadata and tracer reporting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyKind {
+    DragonflyPlus,
+    Dragonfly,
+    FatTree,
+}
+
+/// A machine description: the env.json analogue of a supercomputer.
+#[derive(Debug, Clone)]
+pub struct SystemProfile {
+    pub name: String,
+    pub topology: TopologyKind,
+    /// Total nodes on the machine (allocations draw from these).
+    pub nodes_total: usize,
+    /// Nodes per switch group (Dragonfly group / fat-tree leaf domain).
+    pub nodes_per_group: usize,
+    /// Max processes (GPUs) per node.
+    pub ppn_max: usize,
+    /// NIC rails per node (Leonardo: 4 links usable by rendezvous striping).
+    pub rails: usize,
+    pub net: NetParams,
+    pub mem: MemParams,
+}
+
+impl SystemProfile {
+    pub fn group_of(&self, node: NodeId) -> usize {
+        node / self.nodes_per_group
+    }
+
+    pub fn groups_total(&self) -> usize {
+        self.nodes_total.div_ceil(self.nodes_per_group)
+    }
+}
+
+/// How the scheduler picks nodes for a job.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AllocPolicy {
+    /// First-fit contiguous block (idealized quiet machine).
+    Contiguous,
+    /// Whole blocks of `block` nodes, blocks scattered over groups.
+    BlockScattered { block: usize },
+    /// Fully scattered random nodes (busy machine; the realistic default —
+    /// real allocations on Leonardo span many Dragonfly groups, which is
+    /// what produces the Fig. 9 internal/external byte splits).
+    Scattered,
+}
+
+/// A set of allocated nodes on a system.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    pub system: String,
+    pub nodes: Vec<NodeId>,
+    pub policy: AllocPolicy,
+    pub seed: u64,
+}
+
+impl Allocation {
+    pub fn new(profile: &SystemProfile, n_nodes: usize, policy: AllocPolicy, seed: u64) -> Self {
+        assert!(
+            n_nodes <= profile.nodes_total,
+            "allocation of {n_nodes} exceeds machine size {}",
+            profile.nodes_total
+        );
+        let mut rng = Rng::new(seed);
+        let nodes = match policy {
+            AllocPolicy::Contiguous => {
+                let start = rng.below(profile.nodes_total - n_nodes + 1);
+                (start..start + n_nodes).collect()
+            }
+            AllocPolicy::BlockScattered { block } => {
+                let block = block.max(1);
+                let n_blocks = n_nodes.div_ceil(block);
+                let mut starts: Vec<usize> =
+                    (0..profile.nodes_total / block).map(|b| b * block).collect();
+                rng.shuffle(&mut starts);
+                let mut nodes: Vec<NodeId> = starts
+                    .into_iter()
+                    .take(n_blocks)
+                    .flat_map(|s| s..s + block)
+                    .take(n_nodes)
+                    .collect();
+                nodes.sort_unstable();
+                nodes
+            }
+            AllocPolicy::Scattered => {
+                let mut all: Vec<NodeId> = (0..profile.nodes_total).collect();
+                rng.shuffle(&mut all);
+                let mut nodes: Vec<NodeId> = all.into_iter().take(n_nodes).collect();
+                nodes.sort_unstable();
+                nodes
+            }
+        };
+        Self { system: profile.name.clone(), nodes, policy, seed }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// Rank→node mapping order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RankOrder {
+    /// Fill each node before the next (SLURM block distribution; default).
+    Block,
+    /// Round-robin ranks over nodes (cyclic distribution).
+    Cyclic,
+}
+
+/// Placement of `p = nodes × ppn` ranks onto an allocation.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub rank_node: Vec<NodeId>,
+    pub rank_group: Vec<usize>,
+    pub ppn: usize,
+    pub order: RankOrder,
+}
+
+impl Placement {
+    pub fn new(profile: &SystemProfile, alloc: &Allocation, ppn: usize, order: RankOrder) -> Self {
+        assert!(ppn >= 1 && ppn <= profile.ppn_max, "ppn {ppn} out of range");
+        let n = alloc.nodes.len();
+        let p = n * ppn;
+        let mut rank_node = Vec::with_capacity(p);
+        for r in 0..p {
+            let node_idx = match order {
+                RankOrder::Block => r / ppn,
+                RankOrder::Cyclic => r % n,
+            };
+            rank_node.push(alloc.nodes[node_idx]);
+        }
+        let rank_group = rank_node.iter().map(|&nd| profile.group_of(nd)).collect();
+        Self { rank_node, rank_group, ppn, order }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.rank_node.len()
+    }
+
+    /// Locality tier between two ranks — the core lookup of the network
+    /// model and the tracer.  O(1).
+    #[inline]
+    pub fn tier(&self, a: usize, b: usize) -> Tier {
+        if a == b {
+            Tier::SelfRank
+        } else if self.rank_node[a] == self.rank_node[b] {
+            Tier::IntraNode
+        } else if self.rank_group[a] == self.rank_group[b] {
+            Tier::IntraGroup
+        } else {
+            Tier::InterGroup
+        }
+    }
+}
+
+/// Built-in system profiles approximating the paper's three machines.
+/// Constants follow the public system papers PICO cites ([35][36][37]) and
+/// GPU-interconnect measurements ([21]); they are calibrated for *shape*
+/// (crossover decades, relative tiers), not absolute reproduction.
+pub fn builtin_profiles() -> Vec<SystemProfile> {
+    vec![leonardo(), lumi(), mn5()]
+}
+
+pub fn profile_by_name(name: &str) -> Option<SystemProfile> {
+    builtin_profiles().into_iter().find(|p| p.name == name)
+}
+
+/// Leonardo: Dragonfly+, 4 NVIDIA A100 per node, 2×dual-port HDR100 ≈ 4
+/// rails of 100 Gb/s, NVLink3 intra-node.
+pub fn leonardo() -> SystemProfile {
+    SystemProfile {
+        name: "leonardo".into(),
+        topology: TopologyKind::DragonflyPlus,
+        nodes_total: 3456,
+        nodes_per_group: 180,
+        ppn_max: 4,
+        rails: 4,
+        net: NetParams::leonardo_like(),
+        mem: MemParams::hbm_node(),
+    }
+}
+
+/// LUMI: Dragonfly, 4×MI250x (8 GCDs) per node, 4×Slingshot-11 200 Gb/s.
+pub fn lumi() -> SystemProfile {
+    SystemProfile {
+        name: "lumi".into(),
+        topology: TopologyKind::Dragonfly,
+        nodes_total: 2978,
+        nodes_per_group: 124,
+        ppn_max: 8,
+        rails: 4,
+        net: NetParams::lumi_like(),
+        mem: MemParams::hbm_node(),
+    }
+}
+
+/// MareNostrum 5 ACC: tapered NDR200 fat-tree, 4×H100 per node.
+pub fn mn5() -> SystemProfile {
+    SystemProfile {
+        name: "mn5".into(),
+        topology: TopologyKind::FatTree,
+        nodes_total: 1120,
+        nodes_per_group: 60,
+        ppn_max: 4,
+        rails: 2,
+        net: NetParams::mn5_like(),
+        mem: MemParams::hbm_node(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_alloc_is_contiguous() {
+        let prof = leonardo();
+        let a = Allocation::new(&prof, 128, AllocPolicy::Contiguous, 1);
+        assert_eq!(a.nodes.len(), 128);
+        for w in a.nodes.windows(2) {
+            assert_eq!(w[1], w[0] + 1);
+        }
+    }
+
+    #[test]
+    fn scattered_alloc_unique_sorted() {
+        let prof = leonardo();
+        let a = Allocation::new(&prof, 128, AllocPolicy::Scattered, 2);
+        assert_eq!(a.nodes.len(), 128);
+        for w in a.nodes.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn allocation_deterministic_from_seed() {
+        let prof = lumi();
+        let a = Allocation::new(&prof, 64, AllocPolicy::Scattered, 9);
+        let b = Allocation::new(&prof, 64, AllocPolicy::Scattered, 9);
+        assert_eq!(a.nodes, b.nodes);
+    }
+
+    #[test]
+    fn block_placement_tiers() {
+        let prof = leonardo();
+        let a = Allocation::new(&prof, 2, AllocPolicy::Contiguous, 3);
+        let pl = Placement::new(&prof, &a, 4, RankOrder::Block);
+        assert_eq!(pl.n_ranks(), 8);
+        assert_eq!(pl.tier(0, 0), Tier::SelfRank);
+        assert_eq!(pl.tier(0, 1), Tier::IntraNode);
+        assert!(matches!(pl.tier(0, 4), Tier::IntraGroup | Tier::InterGroup));
+    }
+
+    #[test]
+    fn cyclic_placement_spreads() {
+        let prof = leonardo();
+        let a = Allocation::new(&prof, 2, AllocPolicy::Contiguous, 3);
+        let pl = Placement::new(&prof, &a, 2, RankOrder::Cyclic);
+        // ranks 0,1 land on different nodes under cyclic order
+        assert_ne!(pl.rank_node[0], pl.rank_node[1]);
+    }
+
+    #[test]
+    fn group_math() {
+        let prof = leonardo();
+        assert_eq!(prof.group_of(0), 0);
+        assert_eq!(prof.group_of(180), 1);
+        assert!(prof.groups_total() >= 19);
+    }
+
+    #[test]
+    fn builtin_profiles_sane() {
+        for p in builtin_profiles() {
+            assert!(p.nodes_per_group > 1 && p.nodes_per_group < p.nodes_total);
+            assert!(p.ppn_max >= 1 && p.rails >= 1);
+        }
+    }
+}

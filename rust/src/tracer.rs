@@ -1,0 +1,156 @@
+//! Network traffic tracer (paper Sec. III-F, Fig. 9): estimates how a
+//! schedule's traffic distributes over the topology's domains — without
+//! running a simulation.
+//!
+//! Input: a [`Goal`] (rank-level sends) + the run's placement metadata
+//! (R5).  Output: bytes and message counts per locality tier, the
+//! internal/external split the paper reports in units of the send-buffer
+//! size n, and per-group uplink load estimates for congestion reasoning.
+//! Topology-level estimate only — not a packet simulation (same caveat as
+//! the paper).
+
+use std::collections::HashMap;
+
+use crate::goal::{Goal, OpKind};
+use crate::topology::{Placement, Tier};
+
+#[derive(Debug, Clone, Default)]
+pub struct TraceReport {
+    /// Bytes per tier, indexed by [`Tier::ALL`] order.
+    pub bytes_by_tier: [usize; 4],
+    /// Message counts per tier.
+    pub msgs_by_tier: [usize; 4],
+    /// Bytes crossing group boundaries, per source group.
+    pub group_out_bytes: HashMap<usize, usize>,
+    /// Bytes crossing group boundaries, per destination group.
+    pub group_in_bytes: HashMap<usize, usize>,
+}
+
+impl TraceReport {
+    /// Traffic staying inside a node or group ("internal" in Fig. 9).
+    pub fn internal_bytes(&self) -> usize {
+        self.bytes_by_tier[1] + self.bytes_by_tier[2]
+    }
+
+    /// Traffic on inter-group/global links ("external" in Fig. 9).
+    pub fn external_bytes(&self) -> usize {
+        self.bytes_by_tier[3]
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.bytes_by_tier.iter().sum()
+    }
+
+    /// Fig. 9 presentation: volumes as multiples of the payload size n.
+    pub fn in_units_of(&self, n_bytes: usize) -> (f64, f64, f64) {
+        let n = n_bytes.max(1) as f64;
+        (
+            self.internal_bytes() as f64 / n,
+            self.external_bytes() as f64 / n,
+            self.total_bytes() as f64 / n,
+        )
+    }
+
+    /// Most-loaded group uplink (bytes) — where congestion pressure
+    /// concentrates when comparing schedules.
+    pub fn max_uplink_bytes(&self) -> usize {
+        self.group_out_bytes
+            .values()
+            .chain(self.group_in_bytes.values())
+            .copied()
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Classify every transfer of `goal` by the locality tier of its endpoints.
+pub fn trace(goal: &Goal, placement: &Placement) -> TraceReport {
+    let mut rep = TraceReport::default();
+    for (src, prog) in goal.ranks.iter().enumerate() {
+        for op in &prog.ops {
+            if let OpKind::Send { peer, seg, .. } = &op.kind {
+                let bytes = seg.bytes(goal.elem_bytes);
+                let tier = placement.tier(src, *peer);
+                let idx = Tier::ALL.iter().position(|t| *t == tier).unwrap();
+                rep.bytes_by_tier[idx] += bytes;
+                rep.msgs_by_tier[idx] += 1;
+                if tier == Tier::InterGroup {
+                    *rep.group_out_bytes.entry(placement.rank_group[src]).or_insert(0) += bytes;
+                    *rep.group_in_bytes.entry(placement.rank_group[*peer]).or_insert(0) += bytes;
+                }
+            }
+        }
+    }
+    rep
+}
+
+/// Render the Fig. 9-style comparison block for one schedule.
+pub fn render(algorithm: &str, rep: &TraceReport, n_bytes: usize) -> String {
+    let (int, ext, tot) = rep.in_units_of(n_bytes);
+    format!(
+        "Algorithm:      {algorithm}\n  Internal bytes: {int:>6.1} n bytes\n  External bytes: {ext:>6.1} n bytes\n  Total bytes:    {tot:>6.1} n bytes\n"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{bcast, GenParams};
+    use crate::topology::{leonardo, AllocPolicy, Allocation, RankOrder};
+
+    fn placement_scattered(nodes: usize, ppn: usize, seed: u64) -> Placement {
+        let prof = leonardo();
+        let alloc = Allocation::new(&prof, nodes, AllocPolicy::Scattered, seed);
+        Placement::new(&prof, &alloc, ppn, RankOrder::Block)
+    }
+
+    #[test]
+    fn conservation_internal_plus_external_is_total() {
+        let pl = placement_scattered(16, 2, 3);
+        let g = bcast::binomial_doubling(&GenParams::new(32, 1024)).unwrap();
+        let rep = trace(&g, &pl);
+        assert_eq!(
+            rep.internal_bytes() + rep.external_bytes() + rep.bytes_by_tier[0],
+            rep.total_bytes()
+        );
+        // bcast: p−1 sends of n
+        assert_eq!(rep.total_bytes(), 31 * 1024 * 4);
+    }
+
+    #[test]
+    fn halving_keeps_more_traffic_internal_than_doubling() {
+        // the Fig. 9 effect, on a scattered 128-node allocation
+        let pl = placement_scattered(128, 1, 11);
+        let params = GenParams::new(128, 1024);
+        let d = trace(&bcast::binomial_doubling(&params).unwrap(), &pl);
+        let h = trace(&bcast::binomial_halving(&params).unwrap(), &pl);
+        assert_eq!(d.total_bytes(), h.total_bytes(), "same total volume (127 n)");
+        assert!(
+            h.internal_bytes() > 2 * d.internal_bytes(),
+            "halving internal {} vs doubling internal {}",
+            h.internal_bytes(),
+            d.internal_bytes()
+        );
+    }
+
+    #[test]
+    fn group_ledgers_balance() {
+        let pl = placement_scattered(32, 1, 5);
+        let g = bcast::binomial_halving(&GenParams::new(32, 256)).unwrap();
+        let rep = trace(&g, &pl);
+        let out: usize = rep.group_out_bytes.values().sum();
+        let inn: usize = rep.group_in_bytes.values().sum();
+        assert_eq!(out, rep.external_bytes());
+        assert_eq!(inn, rep.external_bytes());
+    }
+
+    #[test]
+    fn render_formats_units() {
+        let pl = placement_scattered(8, 1, 1);
+        let g = bcast::binomial_doubling(&GenParams::new(8, 256)).unwrap();
+        let rep = trace(&g, &pl);
+        let s = render("binomial_doubling", &rep, 1024);
+        assert!(s.contains("Internal bytes"));
+        assert!(s.contains("7.0 n"));
+    }
+}

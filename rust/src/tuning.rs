@@ -1,0 +1,242 @@
+//! Benchmark-informed tuning outputs (paper Sec. IV-A): turn sweep results
+//! into actionable library configuration — an Open MPI `coll_tuned` dynamic
+//! decision file, and a compact JSON "collective profile" consumed by the
+//! replayer (Fig. 12's optimized profiles).
+
+use std::collections::BTreeMap;
+
+use crate::collectives::Coll;
+use crate::json::Json;
+use crate::netmodel::Proto;
+use crate::orchestrator::PointOutcome;
+
+/// The winning configuration for one (nodes, bytes) cell.
+#[derive(Debug, Clone)]
+pub struct BestChoice {
+    pub nodes: usize,
+    pub bytes: usize,
+    pub algorithm: String,
+    pub proto: Proto,
+    pub median_s: f64,
+}
+
+/// Extract per-cell winners from a sweep (including the default run —
+/// tuning keeps the default when nothing beats it).
+pub fn best_choices(outcomes: &[PointOutcome]) -> Vec<BestChoice> {
+    let mut by_cell: BTreeMap<(usize, usize), &PointOutcome> = BTreeMap::new();
+    for o in outcomes {
+        let key = (o.point.nodes, o.point.bytes);
+        match by_cell.get(&key) {
+            Some(prev) if prev.median_s <= o.median_s => {}
+            _ => {
+                by_cell.insert(key, o);
+            }
+        }
+    }
+    by_cell
+        .into_iter()
+        .map(|((nodes, bytes), o)| BestChoice {
+            nodes,
+            bytes,
+            algorithm: o.effective_algorithm.clone(),
+            proto: o.effective_proto,
+            median_s: o.median_s,
+        })
+        .collect()
+}
+
+/// A collective profile: (collective → size-threshold rules), the artifact
+/// PICO feeds to the trace replayer and to library config files.
+#[derive(Debug, Clone, Default)]
+pub struct Profile {
+    /// (coll, max_bytes inclusive, algorithm, proto); rules are evaluated
+    /// in order, first match wins; last rule should be a catch-all
+    /// (max_bytes = usize::MAX).
+    pub rules: Vec<(Coll, usize, String, Proto)>,
+    pub name: String,
+}
+
+impl Profile {
+    pub fn new(name: &str) -> Self {
+        Self { rules: Vec::new(), name: name.to_string() }
+    }
+
+    pub fn rule(mut self, coll: Coll, max_bytes: usize, algo: &str, proto: Proto) -> Self {
+        self.rules.push((coll, max_bytes, algo.to_string(), proto));
+        self
+    }
+
+    /// Look up the (algorithm, proto) for an invocation.
+    pub fn select(&self, coll: Coll, bytes: usize) -> Option<(&str, Proto)> {
+        self.rules
+            .iter()
+            .find(|(c, max, _, _)| *c == coll && bytes <= *max)
+            .map(|(_, _, a, p)| (a.as_str(), *p))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj().set("name", self.name.as_str()).set(
+            "rules",
+            Json::Arr(
+                self.rules
+                    .iter()
+                    .map(|(c, max, a, p)| {
+                        Json::obj()
+                            .set("collective", c.label())
+                            .set("max_bytes", if *max == usize::MAX { Json::Null } else { (*max).into() })
+                            .set("algorithm", a.as_str())
+                            .set("proto", p.label())
+                    })
+                    .collect(),
+            ),
+        )
+    }
+}
+
+/// Fit size-threshold rules from per-cell winners at one node count:
+/// collapse runs of identical winners into `≤ threshold` rules (the same
+/// shape Open MPI dynamic decision files use).
+pub fn fit_rules(coll: Coll, choices: &[BestChoice]) -> Profile {
+    let mut profile = Profile::new("fitted");
+    let mut sorted: Vec<&BestChoice> = choices.iter().collect();
+    sorted.sort_by_key(|c| c.bytes);
+    let mut i = 0;
+    while i < sorted.len() {
+        let run_algo = &sorted[i].algorithm;
+        let run_proto = sorted[i].proto;
+        let mut j = i;
+        while j + 1 < sorted.len()
+            && sorted[j + 1].algorithm == *run_algo
+            && sorted[j + 1].proto == run_proto
+        {
+            j += 1;
+        }
+        let max = if j + 1 == sorted.len() { usize::MAX } else { sorted[j].bytes };
+        profile.rules.push((coll, max, run_algo.clone(), run_proto));
+        i = j + 1;
+    }
+    profile
+}
+
+/// Emit an Open MPI-style `coll_tuned` dynamic decision file section.
+/// (Format follows the documented structure: per-collective blocks of
+/// message-size thresholds → algorithm ids.)
+pub fn ompi_decision_file(coll: Coll, choices: &[BestChoice], algo_ids: &[(&str, usize)]) -> String {
+    let id_of = |name: &str| {
+        algo_ids
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, i)| *i)
+            .unwrap_or(0)
+    };
+    let mut sorted: Vec<&BestChoice> = choices.iter().collect();
+    sorted.sort_by_key(|c| c.bytes);
+    let mut out = String::new();
+    out.push_str("# pico-rs generated coll_tuned dynamic decision file\n");
+    out.push_str(&format!("1 # num collectives\n{} # collective id\n", coll_id(coll)));
+    out.push_str("1 # number of comm sizes\n");
+    let nodes = sorted.first().map(|c| c.nodes).unwrap_or(1);
+    out.push_str(&format!("{nodes} # comm size\n"));
+    out.push_str(&format!("{} # number of msg sizes\n", sorted.len()));
+    for c in &sorted {
+        // msg_size algorithm_id topo_level segmentation
+        out.push_str(&format!("{} {} 0 0 # {}\n", c.bytes, id_of(&c.algorithm), c.algorithm));
+    }
+    out
+}
+
+fn coll_id(coll: Coll) -> usize {
+    // Open MPI coll_tuned collective indices (subset)
+    match coll {
+        Coll::Allgather => 0,
+        Coll::Allreduce => 2,
+        Coll::Alltoall => 3,
+        Coll::Barrier => 5,
+        Coll::Bcast => 6,
+        Coll::Gather => 9,
+        Coll::Reduce => 10,
+        Coll::ReduceScatter => 11,
+        Coll::Scatter => 13,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TestPoint;
+    use crate::netmodel::NetConfig;
+    use crate::results::Measurement;
+    use crate::sim::Components;
+
+    fn outcome(bytes: usize, algo: &str, s: f64) -> PointOutcome {
+        PointOutcome {
+            point: TestPoint {
+                collective: Coll::Allreduce,
+                bytes,
+                nodes: 8,
+                ppn: 1,
+                algorithm: Some(algo.to_string()),
+                net_cfg: NetConfig::default(),
+                degraded_knobs: vec![],
+            },
+            effective_algorithm: algo.to_string(),
+            effective_proto: Proto::Simple,
+            measurement: Measurement {
+                times: vec![vec![s]],
+                components: Components::default(),
+                tag_times: vec![],
+            },
+            median_s: s,
+        }
+    }
+
+    #[test]
+    fn best_choice_picks_minimum() {
+        let outs = vec![
+            outcome(1024, "ring", 5.0),
+            outcome(1024, "tree", 3.0),
+            outcome(4096, "ring", 4.0),
+        ];
+        let best = best_choices(&outs);
+        assert_eq!(best.len(), 2);
+        assert_eq!(best[0].algorithm, "tree");
+        assert_eq!(best[1].algorithm, "ring");
+    }
+
+    #[test]
+    fn fit_rules_collapses_runs() {
+        let choices = vec![
+            BestChoice { nodes: 8, bytes: 64, algorithm: "tree".into(), proto: Proto::LL, median_s: 1.0 },
+            BestChoice { nodes: 8, bytes: 1024, algorithm: "tree".into(), proto: Proto::LL, median_s: 1.0 },
+            BestChoice { nodes: 8, bytes: 1 << 20, algorithm: "ring".into(), proto: Proto::Simple, median_s: 1.0 },
+        ];
+        let p = fit_rules(Coll::Allreduce, &choices);
+        assert_eq!(p.rules.len(), 2);
+        assert_eq!(p.select(Coll::Allreduce, 512), Some(("tree", Proto::LL)));
+        assert_eq!(p.select(Coll::Allreduce, 2 << 20), Some(("ring", Proto::Simple)));
+        assert_eq!(p.select(Coll::Bcast, 512), None);
+    }
+
+    #[test]
+    fn decision_file_format() {
+        let choices = vec![BestChoice {
+            nodes: 8,
+            bytes: 1024,
+            algorithm: "ring".into(),
+            proto: Proto::Simple,
+            median_s: 1.0,
+        }];
+        let f = ompi_decision_file(Coll::Allreduce, &choices, &[("ring", 4)]);
+        assert!(f.contains("2 # collective id"));
+        assert!(f.contains("1024 4 0 0 # ring"));
+    }
+
+    #[test]
+    fn profile_json() {
+        let p = Profile::new("opt")
+            .rule(Coll::Allreduce, 1024, "tree", Proto::LL)
+            .rule(Coll::Allreduce, usize::MAX, "ring", Proto::Simple);
+        let j = p.to_json();
+        assert_eq!(j.get("rules").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

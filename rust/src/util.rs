@@ -1,0 +1,263 @@
+//! Small shared utilities: byte-size parsing/formatting, deterministic RNG,
+//! and robust statistics used across sweeps and result aggregation.
+
+
+/// Parse a human size string ("32", "2KiB", "512MiB", "1GiB") into bytes.
+pub fn parse_size(s: &str) -> Option<usize> {
+    let s = s.trim();
+    let (num, mult) = if let Some(p) = s.strip_suffix("GiB") {
+        (p, 1usize << 30)
+    } else if let Some(p) = s.strip_suffix("MiB") {
+        (p, 1usize << 20)
+    } else if let Some(p) = s.strip_suffix("KiB") {
+        (p, 1usize << 10)
+    } else if let Some(p) = s.strip_suffix('B') {
+        (p, 1usize)
+    } else {
+        (s, 1usize)
+    };
+    let num = num.trim();
+    if let Ok(v) = num.parse::<usize>() {
+        return Some(v * mult);
+    }
+    num.parse::<f64>().ok().map(|v| (v * mult as f64) as usize)
+}
+
+/// Format bytes with binary units, matching the paper's axis labels.
+pub fn fmt_size(bytes: usize) -> String {
+    const UNITS: [(usize, &str); 3] = [(1 << 30, "GiB"), (1 << 20, "MiB"), (1 << 10, "KiB")];
+    for (m, u) in UNITS {
+        if bytes >= m && bytes % m == 0 {
+            return format!("{}{u}", bytes / m);
+        }
+        if bytes >= m {
+            return format!("{:.1}{u}", bytes as f64 / m as f64);
+        }
+    }
+    format!("{bytes}B")
+}
+
+/// Format seconds the way the paper reports latencies (µs / ms / s).
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-3 {
+        format!("{:.1}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.2}s", secs)
+    }
+}
+
+/// SplitMix64: tiny deterministic RNG. Every stochastic choice in the
+/// simulator (allocations, workload jitter) flows through this so runs are
+/// reproducible from the seed recorded in metadata (R5).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n.max(1) as u64) as usize
+    }
+
+    /// Uniform float in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Log-uniform in [lo, hi] (used for message-size distributions).
+    pub fn log_uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        (lo.ln() + self.f64() * (hi.ln() - lo.ln())).exp()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            v.swap(i, self.below(i + 1));
+        }
+    }
+}
+
+/// Multiply-rotate hasher (FxHash-style) for the simulator's hot maps —
+/// the std SipHash is measurably slower on the (u32,u32,u32) channel keys.
+#[derive(Default, Clone, Copy)]
+pub struct FastHasher(u64);
+
+impl std::hash::Hasher for FastHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.write_u64(b as u64);
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.0 = (self.0.rotate_left(5) ^ n).wrapping_mul(0x51_7c_c1_b7_27_22_0a_95);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.write_u64(n as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.write_u64(n as u64);
+    }
+}
+
+/// `BuildHasher` for [`FastHasher`]; use as
+/// `HashMap::with_hasher(FastBuild::default())`.
+pub type FastBuild = std::hash::BuildHasherDefault<FastHasher>;
+
+/// Aggregate statistics over a sample, the schema unit behind the
+/// `Statistics` and `Summary` result granularities (Table II).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stats {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub median: f64,
+    pub p25: f64,
+    pub p75: f64,
+    pub std: f64,
+}
+
+impl Stats {
+    pub fn from_samples(xs: &[f64]) -> Self {
+        assert!(!xs.is_empty(), "stats over empty sample");
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = s.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        Self {
+            n,
+            min: s[0],
+            max: s[n - 1],
+            mean,
+            median: percentile_sorted(&s, 50.0),
+            p25: percentile_sorted(&s, 25.0),
+            p75: percentile_sorted(&s, 75.0),
+            std: var.sqrt(),
+        }
+    }
+}
+
+/// Linear-interpolated percentile over a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let idx = p / 100.0 * (n - 1) as f64;
+    let lo = idx.floor() as usize;
+    let hi = idx.ceil() as usize;
+    let frac = idx - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&s, 50.0)
+}
+
+/// Power-of-two message-size sweep [lo, hi], the paper's standard x-axis.
+pub fn pow2_sizes(lo: usize, hi: usize) -> Vec<usize> {
+    let mut v = Vec::new();
+    let mut s = lo;
+    while s <= hi {
+        v.push(s);
+        s *= 2;
+    }
+    v
+}
+
+/// Integer log2 for exact powers of two.
+pub fn ilog2_exact(x: usize) -> Option<u32> {
+    (x.is_power_of_two()).then(|| x.trailing_zeros())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_round_trip() {
+        for s in ["32B", "2KiB", "512MiB", "1GiB"] {
+            assert_eq!(fmt_size(parse_size(s).unwrap()), s);
+        }
+        assert_eq!(parse_size("1024"), Some(1024));
+        assert_eq!(parse_size("1.5KiB"), Some(1536));
+        assert_eq!(parse_size("bogus"), None);
+    }
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_below_bounds() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            assert!(r.below(10) < 10);
+            let f = r.f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from_samples(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [0.0, 10.0];
+        assert_eq!(percentile_sorted(&s, 50.0), 5.0);
+    }
+
+    #[test]
+    fn pow2_sweep() {
+        assert_eq!(pow2_sizes(32, 256), vec![32, 64, 128, 256]);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert_eq!(fmt_time(10e-6), "10.0us");
+        assert_eq!(fmt_time(304e-3), "304.00ms");
+        assert_eq!(fmt_time(1.9), "1.90s");
+    }
+}

@@ -1,0 +1,137 @@
+//! End-to-end control-plane test: descriptors as raw JSON text → resolve →
+//! campaign → standardized run directory → post-processing, exactly the
+//! Fig. 3 pipeline, including graceful degradation and metadata capture.
+
+use std::fs;
+
+use pico::config::{EnvSpec, TestSpec};
+use pico::json::Json;
+use pico::orchestrator::run_campaign;
+use pico::results::RunDir;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("pico_e2e_{name}_{}", std::process::id()))
+}
+
+#[test]
+fn descriptor_text_to_run_dir() {
+    let test_json = r#"{
+        "name": "e2e-sweep",
+        "backend": "openmpi",
+        "collective": "allreduce",
+        "sizes": ["2KiB", "1MiB"],
+        "nodes": [4],
+        "ppn": 2,
+        "algorithms": ["ring", "rabenseifner"],
+        "knobs": {"max_rndv_rails": "4"},
+        "iterations": 2,
+        "warmup": 1,
+        "granularity": "statistics",
+        "instrument": true,
+        "seed": 7
+    }"#;
+    let env_json = r#"{
+        "system": "leonardo",
+        "alloc_policy": "scattered",
+        "rank_order": "block",
+        "metadata_verbosity": 2
+    }"#;
+    let test = TestSpec::from_json(&Json::parse(test_json).unwrap()).unwrap();
+    let env = EnvSpec::from_json(&Json::parse(env_json).unwrap()).unwrap();
+    let dir = tmp("main");
+    let _ = fs::remove_dir_all(&dir);
+
+    let outcomes = run_campaign(&test, &env, Some(&dir)).unwrap();
+    assert_eq!(outcomes.len(), 4); // 2 sizes × 2 algorithms
+
+    let root = dir.join("e2e-sweep");
+    // descriptors snapshotted
+    let test_back = Json::parse(&fs::read_to_string(root.join("test.json")).unwrap()).unwrap();
+    assert_eq!(test_back.get("name").unwrap().as_str(), Some("e2e-sweep"));
+    // rich metadata captured (verbosity 2 ⇒ node list + env vars present)
+    let meta = Json::parse(&fs::read_to_string(root.join("metadata.json")).unwrap()).unwrap();
+    assert!(meta.get("node_list").is_some());
+    assert!(meta.get("env_vars").is_some());
+    assert_eq!(meta.get("system").unwrap().as_str(), Some("leonardo"));
+    // records: parse one and check requested vs effective + knob + tags
+    let idx = RunDir::load_index(&root).unwrap();
+    assert_eq!(idx.len(), 4);
+    let rec_file = idx[0].get("file").unwrap().as_str().unwrap();
+    let rec = Json::parse(&fs::read_to_string(root.join(rec_file)).unwrap()).unwrap();
+    assert_eq!(rec.get("requested_algorithm").unwrap().as_str(), Some("ring"));
+    assert_eq!(rec.get("effective_algorithm").unwrap().as_str(), Some("ring"));
+    assert_eq!(
+        rec.path(&["knobs_effective", "max_rndv_rails"]).unwrap().as_str(),
+        Some("4")
+    );
+    // instrumented: tag map non-empty
+    assert!(!rec.get("tags").unwrap().as_obj().unwrap().is_empty());
+    // statistics granularity: one stats object per iteration
+    assert_eq!(rec.get("data").unwrap().as_arr().unwrap().len(), 2);
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn degraded_knob_recorded_in_run_dir() {
+    // Cray MPICH ignores the UCX rail knob (R6): the record must say so.
+    let mut test = TestSpec::new("deg", "craympich", pico::collectives::Coll::Allreduce);
+    test.sizes = vec![4096];
+    test.nodes = vec![2];
+    test.knobs = vec![("max_rndv_rails".into(), "4".into())];
+    test.iterations = 1;
+    test.warmup = 0;
+    let env = EnvSpec::for_system("lumi");
+    let dir = tmp("deg");
+    let _ = fs::remove_dir_all(&dir);
+    run_campaign(&test, &env, Some(&dir)).unwrap();
+    let root = dir.join("deg");
+    let idx = RunDir::load_index(&root).unwrap();
+    let rec_file = idx[0].get("file").unwrap().as_str().unwrap();
+    let rec = Json::parse(&fs::read_to_string(root.join(rec_file)).unwrap()).unwrap();
+    let degraded = rec.get("knobs_degraded").unwrap().as_obj().unwrap();
+    assert_eq!(degraded.len(), 1);
+    assert_eq!(degraded[0].0, "max_rndv_rails");
+    let effective = rec.get("knobs_effective").unwrap().as_obj().unwrap();
+    assert!(effective.is_empty());
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn simccl_campaign_uses_gpu_data_plane_defaults() {
+    // NCCL-flavoured backends: LL for small, Simple for large, and rails
+    // default to every NIC.
+    let mut test = TestSpec::new("nccl", "simccl", pico::collectives::Coll::Allreduce);
+    test.sizes = vec![512, 8 << 20];
+    test.nodes = vec![4];
+    test.ppn = 4;
+    test.iterations = 1;
+    test.warmup = 0;
+    let env = EnvSpec::for_system("leonardo");
+    let out = run_campaign(&test, &env, None).unwrap();
+    assert_eq!(out[0].effective_proto.label(), "LL");
+    assert_eq!(out[1].effective_proto.label(), "Simple");
+}
+
+#[test]
+fn campaign_is_reproducible_from_seed() {
+    let mk = || {
+        let mut test = TestSpec::new("rep", "openmpi", pico::collectives::Coll::Bcast);
+        test.sizes = vec![1 << 20];
+        test.nodes = vec![8];
+        test.iterations = 3;
+        test.warmup = 1;
+        test.seed = 123;
+        let env = EnvSpec::for_system("mn5");
+        run_campaign(&test, &env, None).unwrap()[0].measurement.times.clone()
+    };
+    assert_eq!(mk(), mk());
+}
+
+#[test]
+fn unknown_collective_for_backend_fails_cleanly() {
+    // simccl-2.22 implements no Gather
+    let test = TestSpec::new("bad", "simccl", pico::collectives::Coll::Gather);
+    let env = EnvSpec::for_system("leonardo");
+    let err = run_campaign(&test, &env, None).unwrap_err();
+    assert!(err.contains("does not implement"), "{err}");
+}

@@ -1,0 +1,218 @@
+//! Execute-mode correctness: every libpico algorithm, randomized
+//! (p, count, op, root) trials, checked against the oracles.
+//!
+//! This is the property-based layer of the suite (the environment vendors
+//! no proptest, so the trials are driven by the crate's deterministic RNG —
+//! failures print the exact parameters and reproduce from the seed).
+
+use pico::collectives::{self, chunk, Coll, GenParams};
+use pico::execute::{execute, make_inputs, oracle, ScalarReducer};
+use pico::goal::ReduceOp;
+use pico::util::Rng;
+
+const OPS: [ReduceOp; 4] = [ReduceOp::Sum, ReduceOp::Prod, ReduceOp::Max, ReduceOp::Min];
+
+fn close(a: f32, b: f32) -> bool {
+    let diff = (a - b).abs();
+    diff <= 1e-3 * (1.0 + a.abs().max(b.abs()))
+}
+
+fn assert_close(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert!(close(*a, *b), "{what}: elem {i}: got {a}, want {b}");
+    }
+}
+
+/// Pick (p, count) compatible with an algorithm's constraints.
+fn pick_shape(rng: &mut Rng, any_p: bool, needs_uniform: bool) -> (usize, usize) {
+    let p = if any_p {
+        2 + rng.below(13) // 2..=14
+    } else {
+        1usize << (1 + rng.below(4)) // 2,4,8,16
+    };
+    let _ = &needs_uniform;
+    let count = if needs_uniform {
+        p * (1 + rng.below(40))
+    } else {
+        1 + rng.below(300)
+    };
+    (p, count)
+}
+
+fn needs_uniform(coll: Coll, name: &str) -> bool {
+    matches!(coll, Coll::Alltoall)
+        || (coll == Coll::Allgather
+            && matches!(name, "bruck" | "recursive_doubling" | "pat" | "neighbor_exchange"))
+        || (coll == Coll::ReduceScatter && matches!(name, "recursive_halving" | "pat"))
+        || (coll == Coll::Reduce && name == "rabenseifner")
+}
+
+#[test]
+fn every_algorithm_matches_oracle() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for info in collectives::registry() {
+        if info.coll == Coll::Barrier {
+            continue; // no data semantics
+        }
+        for trial in 0..12 {
+            let (p, count) = pick_shape(&mut rng, info.any_p, needs_uniform(info.coll, info.name));
+            let op = OPS[rng.below(OPS.len())];
+            // binomial gather/scatter are registered for root 0 only (R6)
+            let root = if (info.name == "binomial"
+                && matches!(info.coll, Coll::Gather | Coll::Scatter))
+                || (info.name == "rabenseifner" && info.coll == Coll::Reduce)
+            {
+                0
+            } else {
+                rng.below(p)
+            };
+            let params = GenParams { root, ..GenParams::new(p, count).with_op(op) };
+            let goal = match collectives::generate(info.coll, info.name, &params) {
+                Ok(g) => g,
+                Err(e) => panic!("{:?}:{} p={p} count={count}: {e}", info.coll, info.name),
+            };
+            goal.validate()
+                .unwrap_or_else(|e| panic!("{:?}:{} p={p} count={count}: {e}", info.coll, info.name));
+
+            let seed = 1000 + trial as u64;
+            let inputs = make_inputs(p, count, seed);
+            let what = format!("{}:{} p={p} count={count} op={:?} root={root}", info.coll.label(), info.name, op);
+            let bufs = execute(&goal, inputs.clone(), &ScalarReducer);
+
+            match info.coll {
+                Coll::Allreduce => {
+                    let want = oracle::allreduce(&inputs, op);
+                    for r in 0..p {
+                        assert_close(&bufs[r].output, &want, &format!("{what} rank{r}"));
+                    }
+                }
+                Coll::Reduce => {
+                    let want = oracle::reduce(&inputs, op);
+                    assert_close(&bufs[root].output, &want, &what);
+                }
+                Coll::Bcast => {
+                    let want = oracle::bcast(&inputs, root);
+                    for r in 0..p {
+                        assert_close(&bufs[r].output, &want, &format!("{what} rank{r}"));
+                    }
+                }
+                Coll::Allgather => {
+                    let want = oracle::allgather(&inputs, count);
+                    for r in 0..p {
+                        assert_close(&bufs[r].output, &want, &format!("{what} rank{r}"));
+                    }
+                }
+                Coll::ReduceScatter => {
+                    for r in 0..p {
+                        let want = oracle::reduce_scatter(&inputs, op, r);
+                        assert_close(
+                            &bufs[r].output[..want.len()],
+                            &want,
+                            &format!("{what} rank{r}"),
+                        );
+                    }
+                }
+                Coll::Alltoall => {
+                    for r in 0..p {
+                        let want = oracle::alltoall(&inputs, r);
+                        assert_close(&bufs[r].output, &want, &format!("{what} rank{r}"));
+                    }
+                }
+                Coll::Gather => {
+                    let want = oracle::gather(&inputs, count);
+                    assert_close(&bufs[root].output, &want, &what);
+                }
+                Coll::Scatter => {
+                    for r in 0..p {
+                        let want = oracle::scatter(&inputs, root, r);
+                        assert_close(
+                            &bufs[r].output[..want.len()],
+                            &want,
+                            &format!("{what} rank{r}"),
+                        );
+                    }
+                }
+                Coll::Barrier => unreachable!(),
+            }
+        }
+    }
+}
+
+#[test]
+fn allreduce_single_rank_degenerate() {
+    for name in ["linear", "recursive_doubling", "ring", "rabenseifner", "tree"] {
+        let goal = collectives::generate(Coll::Allreduce, name, &GenParams::new(1, 17)).unwrap();
+        let inputs = make_inputs(1, 17, 3);
+        let bufs = execute(&goal, inputs.clone(), &ScalarReducer);
+        assert_close(&bufs[0].output, &inputs[0], name);
+    }
+}
+
+#[test]
+fn large_prime_rank_counts() {
+    // stress the non-power-of-two paths
+    for p in [17usize, 31] {
+        for name in ["ring", "recursive_doubling", "rabenseifner", "tree_pipelined"] {
+            let count = 257;
+            let goal =
+                collectives::generate(Coll::Allreduce, name, &GenParams::new(p, count)).unwrap();
+            let inputs = make_inputs(p, count, 9);
+            let want = oracle::allreduce(&inputs, ReduceOp::Sum);
+            let bufs = execute(&goal, inputs, &ScalarReducer);
+            for r in 0..p {
+                assert_close(&bufs[r].output, &want, &format!("{name} p={p} rank{r}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn chunk_map_is_the_oracle_layout() {
+    // the oracles and generators must agree on chunk boundaries
+    let (count, p) = (103, 7);
+    let mut total = 0;
+    for i in 0..p {
+        let (off, len) = chunk(count, p, i);
+        assert_eq!(off, total);
+        total += len;
+    }
+    assert_eq!(total, count);
+}
+
+#[test]
+fn threaded_executor_matches_oracle() {
+    use pico::execute::execute_threaded;
+    // true-concurrency execution: ring + rabenseifner + pat across threads
+    for (coll, name, p, count) in [
+        (Coll::Allreduce, "ring", 8usize, 4096usize),
+        (Coll::Allreduce, "rabenseifner", 16, 1600),
+        (Coll::ReduceScatter, "pat", 8, 800),
+        (Coll::Bcast, "binomial_halving", 12, 500),
+    ] {
+        let goal = collectives::generate(coll, name, &GenParams::new(p, count)).unwrap();
+        let inputs = make_inputs(p, count, 77);
+        let bufs = execute_threaded(&goal, inputs.clone(), &ScalarReducer);
+        match coll {
+            Coll::Allreduce => {
+                let want = oracle::allreduce(&inputs, ReduceOp::Sum);
+                for r in 0..p {
+                    assert_close(&bufs[r].output, &want, &format!("threaded {name} rank{r}"));
+                }
+            }
+            Coll::ReduceScatter => {
+                for r in 0..p {
+                    let want = oracle::reduce_scatter(&inputs, ReduceOp::Sum, r);
+                    assert_close(&bufs[r].output[..want.len()], &want, &format!("threaded {name} rank{r}"));
+                }
+            }
+            Coll::Bcast => {
+                let want = oracle::bcast(&inputs, 0);
+                for r in 0..p {
+                    assert_close(&bufs[r].output, &want, &format!("threaded {name} rank{r}"));
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+}

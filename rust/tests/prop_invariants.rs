@@ -1,0 +1,195 @@
+//! Property-style invariants over randomized inputs (driven by the crate's
+//! deterministic RNG; the vendor set has no proptest).  These guard the
+//! coordinator-level invariants: schedule structure, routing/matching,
+//! conservation laws, determinism, and monotonicity of the cost model.
+
+use pico::collectives::{self, Coll, GenParams};
+use pico::goal::OpKind;
+use pico::json::Json;
+use pico::netmodel::{NetConfig, Proto};
+use pico::sim::{simulate, SimContext};
+use pico::topology::{leonardo, lumi, AllocPolicy, Allocation, Placement, RankOrder, Tier};
+use pico::tracer::trace;
+use pico::util::Rng;
+
+fn random_placement(rng: &mut Rng, nodes: usize, ppn: usize) -> (pico::topology::SystemProfile, Placement) {
+    let prof = if rng.below(2) == 0 { leonardo() } else { lumi() };
+    let policy = match rng.below(3) {
+        0 => AllocPolicy::Contiguous,
+        1 => AllocPolicy::Scattered,
+        _ => AllocPolicy::BlockScattered { block: 2 },
+    };
+    let alloc = Allocation::new(&prof, nodes, policy, rng.next_u64());
+    let order = if rng.below(2) == 0 { RankOrder::Block } else { RankOrder::Cyclic };
+    let pl = Placement::new(&prof, &alloc, ppn, order);
+    (prof, pl)
+}
+
+/// Every generated schedule validates structurally, for every registered
+/// algorithm, across randomized shapes.
+#[test]
+fn prop_all_schedules_validate() {
+    let mut rng = Rng::new(1);
+    for info in collectives::registry() {
+        for _ in 0..8 {
+            let p = if info.any_p { 1 + rng.below(20) } else { 1usize << (1 + rng.below(5)) };
+            let count = if info.coll == Coll::Barrier {
+                0
+            } else {
+                p * (1 + rng.below(32)) // uniform-block-safe for all
+            };
+            let params = GenParams::new(p, count);
+            let goal = collectives::generate(info.coll, info.name, &params)
+                .unwrap_or_else(|e| panic!("{:?}:{}: {e}", info.coll, info.name));
+            goal.validate().unwrap_or_else(|e| panic!("{:?}:{} p={p}: {e}", info.coll, info.name));
+        }
+    }
+}
+
+/// Tracer conservation: per-tier bytes sum to total wire bytes, and group
+/// in/out ledgers both equal external bytes — for random schedules and
+/// placements.
+#[test]
+fn prop_tracer_conservation() {
+    let mut rng = Rng::new(2);
+    for _ in 0..20 {
+        let nodes = 2 + rng.below(30);
+        let ppn = 1 + rng.below(3);
+        let (_, pl) = random_placement(&mut rng, nodes, ppn);
+        let p = pl.n_ranks();
+        let count = p * (1 + rng.below(16));
+        let algos = [
+            (Coll::Allreduce, "ring"),
+            (Coll::Bcast, "binomial_halving"),
+            (Coll::Allgather, "bruck"),
+            (Coll::Alltoall, "pairwise"),
+        ];
+        let (coll, algo) = algos[rng.below(algos.len())];
+        let goal = collectives::generate(coll, algo, &GenParams::new(p, count)).unwrap();
+        let rep = trace(&goal, &pl);
+        assert_eq!(rep.bytes_by_tier.iter().sum::<usize>(), goal.total_wire_bytes());
+        let out: usize = rep.group_out_bytes.values().sum();
+        let inn: usize = rep.group_in_bytes.values().sum();
+        assert_eq!(out, rep.external_bytes());
+        assert_eq!(inn, rep.external_bytes());
+    }
+}
+
+/// DES determinism + physical sanity: same inputs → identical report; the
+/// makespan is at least the single-message lower bound and finite.
+#[test]
+fn prop_sim_deterministic_and_bounded() {
+    let mut rng = Rng::new(3);
+    for _ in 0..10 {
+        let nodes = 2 + rng.below(8);
+        let (prof, pl) = random_placement(&mut rng, nodes, 1);
+        let p = pl.n_ranks();
+        let count = 256 + rng.below(100_000);
+        let goal = collectives::generate(Coll::Allreduce, "ring", &GenParams::new(p, count)).unwrap();
+        let a = simulate(&goal, &SimContext::new(&prof, &pl));
+        let b = simulate(&goal, &SimContext::new(&prof, &pl));
+        assert_eq!(a.total_time, b.total_time);
+        assert_eq!(a.per_rank_time, b.per_rank_time);
+        assert!(a.total_time.is_finite() && a.total_time > 0.0);
+        // lower bound: one chunk must cross the slowest tier at least once
+        let alpha = prof.net.intra_group.alpha;
+        assert!(a.total_time >= alpha, "{} < {alpha}", a.total_time);
+        // components are non-negative and bounded by the makespan
+        let c = a.components;
+        for v in [c.comm, c.reduction, c.datamove, c.other] {
+            assert!(v >= 0.0 && v <= a.total_time + 1e-12);
+        }
+    }
+}
+
+/// Cost-model monotonicity: more bytes never get faster; LL never loses at
+/// 64 B and never wins at 128 MiB (random tiers).
+#[test]
+fn prop_cost_model_monotone() {
+    let mut rng = Rng::new(4);
+    let net = leonardo().net;
+    for _ in 0..50 {
+        let tier = [Tier::IntraNode, Tier::IntraGroup, Tier::InterGroup][rng.below(3)];
+        let cfg = NetConfig {
+            max_rndv_rails: Some(1 + rng.below(4)),
+            proto: if rng.below(2) == 0 { Proto::Simple } else { Proto::LL },
+            ..Default::default()
+        };
+        let b1 = 1 + rng.below(1 << 20);
+        let b2 = b1 * (2 + rng.below(8));
+        assert!(
+            net.ptp_time(&cfg, tier, b2, 4) >= net.ptp_time(&cfg, tier, b1, 4),
+            "{tier:?} {b1} vs {b2}"
+        );
+    }
+    let simple = NetConfig::default();
+    let ll = NetConfig { proto: Proto::LL, ..Default::default() };
+    assert!(net.ptp_time(&ll, Tier::InterGroup, 64, 4) < net.ptp_time(&simple, Tier::InterGroup, 64, 4));
+    assert!(net.ptp_time(&ll, Tier::InterGroup, 128 << 20, 4) > net.ptp_time(&simple, Tier::InterGroup, 128 << 20, 4));
+}
+
+/// JSON fuzz: generated random values round-trip through text.
+#[test]
+fn prop_json_round_trip() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.next_u64() % 1_000_000) as f64 / 97.0),
+            3 => Json::Str(format!("s{}-\"é\\n{}", rng.below(100), rng.below(10))),
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => {
+                let mut o = Json::obj();
+                for i in 0..rng.below(5) {
+                    o = o.set(&format!("k{i}"), gen(rng, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    let mut rng = Rng::new(5);
+    for _ in 0..200 {
+        let j = gen(&mut rng, 3);
+        let pretty = Json::parse(&j.to_string_pretty()).unwrap();
+        let compact = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(pretty, j);
+        assert_eq!(compact, j);
+    }
+}
+
+/// Barrier schedules move zero bytes yet still synchronize (every rank's
+/// completion is within the schedule depth × α of the slowest).
+#[test]
+fn prop_barriers_synchronize() {
+    let mut rng = Rng::new(6);
+    for _ in 0..8 {
+        let nodes = 2 + rng.below(16);
+        let (prof, pl) = random_placement(&mut rng, nodes, 1);
+        let p = pl.n_ranks();
+        let goal = collectives::generate(Coll::Barrier, "dissemination", &GenParams::new(p, 0)).unwrap();
+        assert_eq!(goal.total_wire_bytes(), 0);
+        let rep = simulate(&goal, &SimContext::new(&prof, &pl));
+        let min = rep.per_rank_time.iter().copied().fold(f64::INFINITY, f64::min);
+        assert!(rep.total_time - min < rep.total_time * 0.9, "dissemination exit skew too large");
+    }
+}
+
+/// Fold/unfold correctness at scale: non-power-of-two allreduce equals the
+/// oracle even at p=100 (stress vrank mapping).
+#[test]
+fn prop_non_pow2_large() {
+    use pico::execute::{execute, make_inputs, oracle, ScalarReducer};
+    let p = 100;
+    let count = 333;
+    for algo in ["recursive_doubling", "rabenseifner"] {
+        let goal = collectives::generate(Coll::Allreduce, algo, &GenParams::new(p, count)).unwrap();
+        let inputs = make_inputs(p, count, 8);
+        let want = oracle::allreduce(&inputs, Default::default());
+        let bufs = execute(&goal, inputs, &ScalarReducer);
+        for r in [0usize, 1, 50, 99] {
+            for (a, b) in bufs[r].output.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-2 * (1.0 + b.abs()), "{algo} rank {r}");
+            }
+        }
+    }
+}

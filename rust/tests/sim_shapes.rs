@@ -1,0 +1,148 @@
+//! Paper-shape regression tests: light versions of every figure's key
+//! claim, so `cargo test` guards the reproduction (the benches print the
+//! full tables).
+
+use pico::analysis::best_to_default;
+use pico::collectives::Coll;
+use pico::config::{EnvSpec, TestSpec};
+use pico::orchestrator::{quick_latency, run_campaign};
+use pico::replay::{llama7b, mistral_moe, profiles, replay};
+use pico::results::Granularity;
+use pico::topology::leonardo;
+
+/// Fig. 6: the default heuristic must lose somewhere (structured r < 1).
+#[test]
+fn fig6_default_suboptimal_regions_exist() {
+    let mut spec = TestSpec::new("t", "openmpi", Coll::Allreduce);
+    spec.sizes = vec![128 * 1024, 1 << 20];
+    spec.nodes = vec![32];
+    spec.algorithms = vec!["*".into()];
+    spec.iterations = 1;
+    spec.warmup = 0;
+    spec.granularity = Granularity::None;
+    let env = EnvSpec::for_system("leonardo");
+    let outcomes = run_campaign(&spec, &env, None).unwrap();
+    let cells = best_to_default(&outcomes);
+    assert!(!cells.is_empty());
+    assert!(
+        cells.iter().any(|c| c.r < 0.8),
+        "expected a >20% suboptimal default: {:?}",
+        cells.iter().map(|c| c.r).collect::<Vec<_>>()
+    );
+}
+
+/// Fig. 7: rails matter only in the rendezvous regime.
+#[test]
+fn fig7_rails_only_help_rendezvous() {
+    let lat = |bytes: usize, rails: usize| {
+        let mut spec = TestSpec::new("t", "openmpi", Coll::Allreduce);
+        spec.sizes = vec![bytes];
+        spec.nodes = vec![32];
+        spec.algorithms = vec!["ring".into()];
+        spec.knobs = vec![("max_rndv_rails".into(), rails.to_string())];
+        spec.iterations = 1;
+        spec.warmup = 0;
+        spec.granularity = Granularity::None;
+        let env = EnvSpec::for_system("leonardo");
+        run_campaign(&spec, &env, None).unwrap()[0].median_s
+    };
+    // eager: identical
+    assert_eq!(lat(4096, 2), lat(4096, 4));
+    // rendezvous: 4 rails strictly faster, within a sane bound
+    let (r2, r4) = (lat(64 << 20, 2), lat(64 << 20, 4));
+    assert!(r4 < r2, "rails=4 must win at 64MiB: {r4} vs {r2}");
+    assert!(r4 > 0.6 * r2, "gain should be moderate, got {}", r4 / r2);
+}
+
+/// Fig. 10: halving ≈ doubling at small sizes, ≥1.5× apart at 512 MiB,
+/// and the staged internal binomial far slower still.
+#[test]
+fn fig10_binomial_divergence() {
+    let q = |backend: &str, algo: &str, bytes: usize| {
+        quick_latency(backend, "leonardo", Coll::Bcast, Some(algo), bytes, 128, 4, 42).unwrap()
+    };
+    let small_h = q("libpico", "binomial_halving", 16 * 1024);
+    let small_d = q("libpico", "binomial_doubling", 16 * 1024);
+    assert!((small_d / small_h - 1.0).abs() < 0.25, "small sizes nearly identical");
+    let big_h = q("libpico", "binomial_halving", 512 << 20);
+    let big_d = q("libpico", "binomial_doubling", 512 << 20);
+    assert!(big_d / big_h > 1.5, "doubling must be >=1.5x slower at 512MiB, got {}", big_d / big_h);
+    let internal = q("openmpi", "binomial", 512 << 20);
+    assert!(internal / big_h > 2.5, "internal binomial must be far slower, got {}", internal / big_h);
+}
+
+/// Fig. 11: comm share is non-monotonic in message size.
+#[test]
+fn fig11_comm_share_non_monotonic() {
+    let share = |bytes: usize| {
+        let mut spec = TestSpec::new("t", "libpico", Coll::Allreduce);
+        spec.sizes = vec![bytes];
+        spec.nodes = vec![8];
+        spec.algorithms = vec!["rabenseifner".into()];
+        spec.iterations = 1;
+        spec.warmup = 0;
+        spec.granularity = Granularity::None;
+        let env = EnvSpec::for_system("leonardo");
+        let c = run_campaign(&spec, &env, None).unwrap()[0].measurement.components;
+        c.comm / c.total()
+    };
+    let small = share(2048);
+    let mid = share(4 << 20);
+    let large = share(512 << 20);
+    assert!(small > 0.75, "small must be comm-dominated: {small}");
+    assert!(mid < small - 0.25, "mid must dip: {mid} vs {small}");
+    assert!(large > mid + 0.1, "large must partially recover: {large} vs {mid}");
+}
+
+/// Fig. 12: L128 gain > L16 gain > 0; MoE neutral; suboptimal never wins.
+#[test]
+fn fig12_replay_ordering() {
+    let sys = leonardo();
+    let gain = |t: &pico::replay::Trace| {
+        let native = replay(t, &sys, None, 5).iteration_s;
+        let opt = replay(t, &sys, Some(&profiles::pico_optimized()), 5).iteration_s;
+        1.0 - opt / native
+    };
+    let g16 = gain(&llama7b(16, 1));
+    let g128 = gain(&llama7b(128, 1));
+    let gmoe = gain(&mistral_moe(64, 1));
+    assert!(g128 > g16, "L128 ({g128}) must improve more than L16 ({g16})");
+    assert!(g16 > 0.05, "L16 must improve: {g16}");
+    assert!(g128 > 0.30, "L128 must improve strongly: {g128}");
+    assert!(gmoe.abs() < 0.08, "MoE must be near-neutral: {gmoe}");
+    let t = llama7b(16, 1);
+    let native = replay(&t, &sys, None, 5).iteration_s;
+    let bad = replay(&t, &sys, Some(&profiles::suboptimal_ll()), 5).iteration_s;
+    assert!(bad >= native * 0.98, "suboptimal must not beat native");
+}
+
+/// Fig. 9 (already unit-tested in tracer): sanity at the campaign level —
+/// the simulated latency gap correlates with the tracer's external share.
+#[test]
+fn tracer_prediction_matches_simulation() {
+    // Fig. 10's configuration: 4 ppn, so halving's late rounds are local
+    let q = |algo: &str| {
+        quick_latency("libpico", "leonardo", Coll::Bcast, Some(algo), 128 << 20, 128, 4, 11)
+            .unwrap()
+    };
+    let t_h = q("binomial_halving");
+    let t_d = q("binomial_doubling");
+    // the tracer says doubling externalizes far more traffic → slower
+    assert!(t_d > t_h, "doubling {t_d} must exceed halving {t_h}");
+}
+
+/// Sec. II-C / C3: linear barrier must skew worse than dissemination at
+/// campaign level too (measured through sync in the orchestrator).
+#[test]
+fn sync_method_affects_measured_spread() {
+    use pico::sync::{skew_profile, SyncMethod};
+    use pico::topology::{AllocPolicy, Allocation, Placement, RankOrder};
+    let prof = leonardo();
+    let alloc = Allocation::new(&prof, 32, AllocPolicy::Scattered, 3);
+    let pl = Placement::new(&prof, &alloc, 2, RankOrder::Block);
+    let lin = skew_profile(SyncMethod::BarrierLinear, &prof, &pl, 1).skew;
+    let dis = skew_profile(SyncMethod::BarrierDissemination, &prof, &pl, 1).skew;
+    let win = skew_profile(SyncMethod::Window, &prof, &pl, 1).skew;
+    assert!(lin > 3.0 * dis, "ring barrier skew {lin} vs dissemination {dis}");
+    assert!(win <= 2e-6);
+}
