@@ -1,4 +1,4 @@
-//! End-to-end driver (the EXPERIMENTS.md validation run): replay LLM
+//! End-to-end driver (the DESIGN.md validation run): replay LLM
 //! training traces through the full stack and reproduce the paper's
 //! headline metric — PICO-derived collective profiles cut projected
 //! per-iteration training time by up to ~44% (Fig. 12).

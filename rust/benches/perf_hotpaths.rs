@@ -1,14 +1,16 @@
 //! §Perf — hot-path microbenchmarks for the performance pass
-//! (EXPERIMENTS.md §Perf records before/after for each).
+//! (DESIGN.md §Perf records before/after for each).
 //!
 //! L3 targets: DES event throughput, schedule generation, message matching,
 //! tag-instrumentation overhead (<100 ns/region enabled, ~free disabled),
-//! replay memoization, JSON encode/parse.
+//! parallel campaign engine speedup, replay memoization, JSON encode/parse.
 //! L1 target: PJRT-compiled Pallas reduction throughput vs the scalar
-//! reference data plane (requires `make artifacts`).
+//! reference data plane (requires `make artifacts` and `--features xla`).
 
-use pico::benchkit::{bench, report_rate, section};
+use pico::benchkit::{bench, bench_parallel, report_rate, section};
 use pico::collectives::{self, Coll, GenParams};
+use pico::config::{EnvSpec, TestSpec};
+use pico::orchestrator::run_campaign_jobs;
 use pico::execute::{execute, make_inputs, Reducer, ScalarReducer};
 use pico::goal::ReduceOp;
 use pico::instrument::Recorder;
@@ -102,6 +104,30 @@ fn main() {
             );
         }
         Err(e) => println!("  skipped: {e:#} (run `make artifacts`)"),
+    }
+
+    section("L3: parallel campaign engine (DESIGN.md §Perf: >=2x at 4 jobs)");
+    {
+        // 2 node counts x 4 sizes x (default + 5 algorithms) = 48 points
+        let mut spec = TestSpec::new("perf-par", "openmpi", Coll::Allreduce);
+        spec.sizes = vec![64 * 1024, 1 << 20, 8 << 20, 32 << 20];
+        spec.nodes = vec![16, 32];
+        spec.algorithms = vec!["*".into()];
+        spec.iterations = 2;
+        spec.warmup = 0;
+        spec.granularity = pico::results::Granularity::None;
+        let env = EnvSpec::for_system("leonardo");
+        let speedup = bench_parallel(
+            "campaign: 48-point allreduce sweep",
+            0,
+            3,
+            || run_campaign_jobs(&spec, &env, None, 1).unwrap().len(),
+            || run_campaign_jobs(&spec, &env, None, 4).unwrap().len(),
+        );
+        println!(
+            "  -> 4-job wall-clock target (>=2x): {}",
+            if speedup >= 2.0 { "met" } else { "MISSED" }
+        );
     }
 
     section("L3: replay memoization");

@@ -45,7 +45,11 @@ pub enum KnobOutcome {
 }
 
 /// A communication-stack adapter.
-pub trait Backend {
+/// `Send + Sync` is a supertrait so a resolved backend can be shared by
+/// reference across the parallel campaign engine's worker threads; every
+/// implementation is a stateless (or `Copy`-state) struct, so this costs
+/// nothing.
+pub trait Backend: Send + Sync {
     fn name(&self) -> &'static str;
     fn version(&self) -> &'static str;
     fn caps(&self) -> Caps;

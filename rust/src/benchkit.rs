@@ -41,6 +41,26 @@ pub fn bench<T>(name: &str, warmup: usize, reps: usize, f: impl FnMut() -> T) ->
     s.median
 }
 
+/// Measure a serial and a parallel variant of the same workload, report
+/// both, and return the wall-clock speedup (serial median / parallel
+/// median).  Used by `perf_hotpaths.rs` to track the parallel campaign
+/// engine (DESIGN.md §Perf: ≥2x at 4 jobs on a multi-point sweep).
+pub fn bench_parallel<A, B>(
+    name: &str,
+    warmup: usize,
+    reps: usize,
+    serial: impl FnMut() -> A,
+    parallel: impl FnMut() -> B,
+) -> f64 {
+    let s = measure(warmup, reps, serial);
+    let p = measure(warmup, reps, parallel);
+    report(&format!("{name} (serial)"), &s);
+    report(&format!("{name} (parallel)"), &p);
+    let speedup = s.median / p.median.max(1e-30);
+    println!("  -> parallel speedup: {speedup:.2}x");
+    speedup
+}
+
 /// Throughput report helper (events/sec style).
 pub fn report_rate(name: &str, items: usize, seconds: f64) {
     println!(
@@ -67,5 +87,11 @@ mod tests {
         assert_eq!(n, 7);
         assert_eq!(s.n, 5);
         assert!(s.median >= 0.0);
+    }
+
+    #[test]
+    fn bench_parallel_returns_finite_speedup() {
+        let speedup = bench_parallel("noop", 0, 3, || 1 + 1, || 2 + 2);
+        assert!(speedup.is_finite() && speedup > 0.0);
     }
 }

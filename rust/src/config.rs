@@ -175,6 +175,11 @@ pub struct EnvSpec {
     pub backends_available: Vec<String>,
     /// Metadata verbosity: 0 minimal, 1 standard, 2 rich.
     pub metadata_verbosity: u8,
+    /// Campaign worker threads: 1 = serial (default), 0 = one per available
+    /// CPU, N = exactly N workers.  `pico run --jobs` overrides this per
+    /// invocation; record order and run-dir bytes are identical either way
+    /// (see `orchestrator`).
+    pub parallelism: usize,
 }
 
 impl EnvSpec {
@@ -191,6 +196,7 @@ impl EnvSpec {
                 "simccl-2.23".into(),
             ],
             metadata_verbosity: 1,
+            parallelism: 1,
         }
     }
 
@@ -221,6 +227,7 @@ impl EnvSpec {
                 Json::Arr(self.backends_available.iter().map(|b| b.as_str().into()).collect()),
             )
             .set("metadata_verbosity", self.metadata_verbosity as usize)
+            .set("parallelism", self.parallelism)
     }
 
     pub fn from_json(j: &Json) -> Result<EnvSpec, String> {
@@ -255,6 +262,7 @@ impl EnvSpec {
                 .get("metadata_verbosity")
                 .and_then(Json::as_usize)
                 .unwrap_or(1) as u8,
+            parallelism: j.get("parallelism").and_then(Json::as_usize).unwrap_or(1),
         })
     }
 }
@@ -375,11 +383,20 @@ mod tests {
 
     #[test]
     fn env_spec_round_trip() {
-        let e = EnvSpec::for_system("leonardo");
+        let mut e = EnvSpec::for_system("leonardo");
+        e.parallelism = 8;
         let back = EnvSpec::from_json(&e.to_json()).unwrap();
         assert_eq!(back.system, "leonardo");
         assert_eq!(back.backends_available, e.backends_available);
+        assert_eq!(back.parallelism, 8);
         assert!(back.profile().is_ok());
+    }
+
+    #[test]
+    fn env_spec_parallelism_defaults_serial() {
+        // env.json files written before the knob existed stay valid
+        let j = Json::parse(r#"{"system":"leonardo"}"#).unwrap();
+        assert_eq!(EnvSpec::from_json(&j).unwrap().parallelism, 1);
     }
 
     #[test]

@@ -249,6 +249,16 @@ mod tests {
         assert_eq!(make_inputs(2, 8, 1), make_inputs(2, 8, 1));
         assert_ne!(make_inputs(2, 8, 1), make_inputs(2, 8, 2));
     }
+
+    #[test]
+    fn execute_types_are_thread_safe() {
+        // Goals are shared by reference across campaign workers; buffers
+        // move between rank threads in execute_threaded.
+        fn assert_sync<T: Sync>() {}
+        fn assert_send<T: Send>() {}
+        assert_sync::<Goal>();
+        assert_send::<RankBuffers>();
+    }
 }
 
 /// Threaded execute mode: every rank is a real OS thread and messages move

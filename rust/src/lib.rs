@@ -13,7 +13,42 @@
 //! Layer map:
 //! - L3 (this crate): coordination, scheduling, simulation, analysis.
 //! - L2/L1 (build-time Python): JAX reduction graphs calling a Pallas kernel,
-//!   AOT-lowered to `artifacts/*.hlo.txt`, executed from [`runtime`].
+//!   AOT-lowered to `artifacts/*.hlo.txt`, executed from [`runtime`]
+//!   (feature-gated; the offline default falls back to the scalar plane).
+//!
+//! Campaigns run serially or on the multi-threaded point scheduler in
+//! [`orchestrator`] — `jobs = N` produces byte-identical results to
+//! `jobs = 1` (see `DESIGN.md`, "Parallel campaign engine").
+//!
+//! # Example
+//!
+//! Ask for the simulated latency of one collective on a modelled machine:
+//!
+//! ```
+//! use pico::collectives::Coll;
+//! use pico::config::{EnvSpec, TestSpec};
+//! use pico::orchestrator::run_campaign_jobs;
+//!
+//! // a small sweep: 2 sizes x 2 algorithms on 4 Leonardo-like nodes
+//! let mut spec = TestSpec::new("demo", "openmpi", Coll::Allreduce);
+//! spec.sizes = vec![4096, 1 << 20];
+//! spec.algorithms = vec!["ring".into(), "rabenseifner".into()];
+//! spec.nodes = vec![4];
+//! spec.iterations = 2;
+//! spec.warmup = 0;
+//! let env = EnvSpec::for_system("leonardo");
+//!
+//! // run the 4-point grid on 2 workers; order matches a serial run
+//! let outcomes = run_campaign_jobs(&spec, &env, None, 2).unwrap();
+//! assert_eq!(outcomes.len(), 4);
+//! assert!(outcomes.iter().all(|o| o.median_s > 0.0));
+//!
+//! // single-point convenience wrapper
+//! let t = pico::orchestrator::quick_latency(
+//!     "openmpi", "leonardo", Coll::Allreduce, Some("ring"), 1 << 20, 4, 1, 1,
+//! ).unwrap();
+//! assert!(t > 0.0);
+//! ```
 
 pub mod analysis;
 pub mod backends;

@@ -8,6 +8,11 @@
 //!   probe  ...                   one test point, with phase breakdown
 //!   trace  ...                   topology traffic estimate (Fig. 9 style)
 //!   replay ...                   LLM trace replay (Fig. 12 style)
+//!   help                         this text
+//!
+//! `run` and `sweep` accept `--jobs N` to execute the point grid on N
+//! worker threads (0 = one per CPU); results are byte-identical to a
+//! serial run (see DESIGN.md, "Parallel campaign engine").
 //!
 //! The environment vendors no clap; arguments are parsed by a small
 //! in-tree key-value parser (`--key value` pairs after the subcommand).
@@ -21,7 +26,7 @@ use pico::backends;
 use pico::collectives::{self, Coll, GenParams};
 use pico::config::{EnvSpec, TestSpec};
 use pico::json::Json;
-use pico::orchestrator::{self, run_campaign};
+use pico::orchestrator::{self, run_campaign, run_campaign_jobs};
 use pico::replay::{self, profiles};
 use pico::results::Granularity;
 use pico::topology::{builtin_profiles, profile_by_name, AllocPolicy, Allocation, Placement, RankOrder};
@@ -121,9 +126,12 @@ usage: pico <command> [--key value ...]
 
   list                              systems, backends, exposed algorithms
   spec   [--out DIR]                write skeleton test.json + env.json
-  run    --test F --env F [--out D] run a campaign from descriptors
+  run    --test F --env F [--out D] [--jobs N]
+         run a campaign from descriptors; --jobs N spreads the point grid
+         over N worker threads (0 = one per CPU, default = env parallelism)
   sweep  [--backend openmpi] [--system leonardo] [--coll allreduce]
          [--sizes 32B,2KiB,...] [--nodes 2,8,32] [--ppn 1] [--iters 3]
+         [--jobs N]
          tuning sweep over all exposed algorithms; prints the ratio heatmap
   probe  [--system leonardo] [--backend openmpi] [--coll allreduce]
          [--algo ring] [--bytes 1MiB] [--nodes 8] [--ppn 1] [--rails N]
@@ -201,7 +209,8 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         &Json::parse(&std::fs::read_to_string(env_path).map_err(|e| e.to_string())?)?,
     )?;
     let out = args.get("out").map(PathBuf::from);
-    let outcomes = run_campaign(&test, &env, out.as_deref())?;
+    let jobs = args.usize_or("jobs", env.parallelism)?;
+    let outcomes = run_campaign_jobs(&test, &env, out.as_deref(), jobs)?;
     println!(
         "{:<12} {:>10} {:>6} {:>20} {:>7} {:>12}",
         "collective", "size", "nodes", "algorithm", "proto", "median"
@@ -242,7 +251,8 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     spec.algorithms = vec!["*".into()];
     spec.granularity = Granularity::Summary;
     let env = EnvSpec::for_system(&args.get_or("system", "leonardo"));
-    let outcomes = run_campaign(&spec, &env, None)?;
+    let jobs = args.usize_or("jobs", env.parallelism)?;
+    let outcomes = run_campaign_jobs(&spec, &env, None, jobs)?;
     let cells = analysis::best_to_default(&outcomes);
     println!(
         "{}",

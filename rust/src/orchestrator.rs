@@ -1,20 +1,49 @@
 //! Campaign orchestrator (paper Fig. 3 ③/④, R4): expands descriptors into
-//! test points, runs them on the simulated cluster, and writes the
-//! standardized run directory.
+//! test points, runs them on the simulated cluster — serially or on a
+//! multi-threaded worker pool — and writes the standardized run directory.
 //!
 //! This is pico_core + the orchestrator script fused into one in-process
 //! engine: the platform-setup complexity the paper front-loads into
 //! env.json creation maps to [`EnvSpec`]; job submission maps to the
-//! point loop below.
+//! point scheduler below.
+//!
+//! # Worker/aggregator flow
+//!
+//! [`run_campaign`] resolves the descriptor pair into a [`TestPoint`] grid
+//! and hands it to the self-scheduling pool in [`parallel_ordered`]:
+//! `jobs` scoped threads claim point indices from a shared atomic cursor
+//! (work stealing at point granularity — whichever worker goes idle first
+//! takes the next undone point, so a skewed grid cannot strand a thread on
+//! a long tail), run [`run_point`] in isolation, and stream
+//! `(index, outcome)` pairs over an mpsc channel to the single aggregator
+//! on the calling thread.  Each point builds its own `SimContext`,
+//! allocation and placement — nothing mutable is shared between workers,
+//! which is what makes the fan-out safe (`SystemProfile`, `Placement` and
+//! every [`Backend`] are `Sync`; see `sim` and `backends`).
+//!
+//! The aggregator reorders arrivals and commits records through the
+//! [`OrderedRecordSink`](crate::results::OrderedRecordSink) streaming
+//! writer, so record files and `index.json` land in exact serial order: a
+//! `jobs = N` campaign produces a run directory byte-identical to
+//! `jobs = 1` (asserted by `rust/tests/campaign_parallel.rs`).
+//!
+//! A panicking point is caught at the worker boundary, converted into an
+//! error, and aborts the pool via a shared flag: in-flight points drain,
+//! no new ones start, and the campaign returns the error of the *lowest*
+//! failing index — the same error a serial run would have reported — never
+//! hanging the pool.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
 
 use crate::backends::{schedule_effective, Backend};
 use crate::collectives::{Coll, GenParams};
 use crate::config::{resolve, EnvSpec, TestPoint, TestSpec};
 use crate::metadata;
 use crate::netmodel::Proto;
-use crate::results::{Granularity, Measurement, Record, RunDir};
+use crate::results::{Granularity, Measurement, OrderedRecordSink, Record, RunDir};
 use crate::sim::{simulate, SimContext};
 use crate::sync::skew_profile;
 use crate::topology::{Allocation, Placement, SystemProfile};
@@ -42,6 +71,10 @@ pub fn effective_count(coll: Coll, bytes: usize, p: usize) -> usize {
 }
 
 /// Run one resolved test point.
+///
+/// Re-entrant by construction: every invocation builds its own allocation,
+/// placement, skew profile and `SimContext`, so the parallel engine calls
+/// this concurrently from N workers without synchronization.
 pub fn run_point(
     backend: &dyn Backend,
     profile: &SystemProfile,
@@ -116,11 +149,185 @@ pub fn run_point(
     })
 }
 
-/// Run a whole campaign; optionally persist the standardized run directory.
+/// Build the standardized record for campaign point `i` (identical bytes
+/// whether the point ran serially or on a worker).
+fn make_record(i: usize, spec: &TestSpec, backend_name: &str, outcome: &PointOutcome) -> Record {
+    let point = &outcome.point;
+    Record {
+        id: format!("p{i:05}"),
+        collective: point.collective.label().to_string(),
+        backend: backend_name.to_string(),
+        bytes: point.bytes,
+        nodes: point.nodes,
+        ppn: point.ppn,
+        requested_algorithm: point.algorithm.clone(),
+        effective_algorithm: outcome.effective_algorithm.clone(),
+        knobs_effective: spec
+            .knobs
+            .iter()
+            .filter(|(k, _)| !point.degraded_knobs.iter().any(|(dk, _)| dk == k))
+            .cloned()
+            .collect(),
+        knobs_degraded: point.degraded_knobs.clone(),
+        measurement: outcome.measurement.clone(),
+        granularity: spec.granularity,
+    }
+}
+
+/// Resolve a jobs request: 0 = one worker per available CPU, otherwise the
+/// requested count, never more workers than points.
+fn effective_jobs(jobs: usize, n_points: usize) -> usize {
+    let j = if jobs == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        jobs
+    };
+    j.max(1).min(n_points.max(1))
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run `f` over `items` on a pool of `jobs` self-scheduling workers,
+/// delivering results to `on_ready` strictly in item order as the
+/// completed prefix grows (streaming — item `k` is delivered as soon as
+/// items `0..=k` have all finished, without waiting for the rest).
+///
+/// Semantics, chosen to match what a plain serial loop would do:
+///
+/// - the returned `Vec` is in item order;
+/// - on failure the error of the **lowest** failing index is returned
+///   (workers claim indices in order, so every index below a failure is
+///   always processed, never skipped);
+/// - a panic inside `f` is caught at the worker boundary and reported as
+///   an error naming the item — the pool aborts cleanly instead of
+///   hanging or poisoning;
+/// - `on_ready` failures abort the pool the same way;
+/// - with `jobs <= 1` this is exactly a serial loop (no threads, no
+///   panic-catching), preserving the historical single-threaded behavior.
+pub fn parallel_ordered<T, R, F, G>(
+    items: &[T],
+    jobs: usize,
+    f: F,
+    mut on_ready: G,
+) -> Result<Vec<R>, String>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> Result<R, String> + Sync,
+    G: FnMut(usize, &R) -> Result<(), String>,
+{
+    let jobs = effective_jobs(jobs, items.len());
+    if jobs <= 1 {
+        let mut results = Vec::with_capacity(items.len());
+        for (i, item) in items.iter().enumerate() {
+            let r = f(i, item)?;
+            on_ready(i, &r)?;
+            results.push(r);
+        }
+        return Ok(results);
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let abort = AtomicBool::new(false);
+    let (tx, rx) = mpsc::channel::<(usize, Result<R, String>)>();
+
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            let tx = tx.clone();
+            let (cursor, abort, f) = (&cursor, &abort, &f);
+            scope.spawn(move || loop {
+                if abort.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let out = match catch_unwind(AssertUnwindSafe(|| f(i, &items[i]))) {
+                    Ok(r) => r,
+                    Err(p) => Err(format!("item {i} panicked: {}", panic_message(p.as_ref()))),
+                };
+                if out.is_err() {
+                    abort.store(true, Ordering::Relaxed);
+                }
+                if tx.send((i, out)).is_err() {
+                    break;
+                }
+            });
+        }
+        // The aggregator holds the only remaining sender alive via `tx`;
+        // drop it so `rx` closes once every worker is done.
+        drop(tx);
+
+        let mut slots: Vec<Option<Result<R, String>>> = Vec::new();
+        slots.resize_with(items.len(), || None);
+        let mut next = 0usize;
+        let mut results: Vec<R> = Vec::with_capacity(items.len());
+        let mut first_err: Option<String> = None;
+        for (i, out) in rx {
+            slots[i] = Some(out);
+            // commit the contiguous ready prefix, in order
+            while next < items.len() && slots[next].is_some() {
+                match slots[next].take().unwrap() {
+                    Ok(r) => {
+                        if first_err.is_none() {
+                            if let Err(e) = on_ready(next, &r) {
+                                abort.store(true, Ordering::Relaxed);
+                                first_err = Some(e);
+                            }
+                        }
+                        results.push(r);
+                    }
+                    Err(e) => {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                }
+                next += 1;
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        if results.len() != items.len() {
+            return Err(format!(
+                "internal: worker pool produced {}/{} results",
+                results.len(),
+                items.len()
+            ));
+        }
+        Ok(results)
+    })
+}
+
+/// Run a whole campaign with the worker count from `env.parallelism`
+/// (1 = serial); optionally persist the standardized run directory.
 pub fn run_campaign(
     spec: &TestSpec,
     env: &EnvSpec,
     out_dir: Option<&Path>,
+) -> Result<Vec<PointOutcome>, String> {
+    run_campaign_jobs(spec, env, out_dir, env.parallelism)
+}
+
+/// [`run_campaign`] with an explicit worker count (the `--jobs` flag);
+/// `jobs = 0` means one worker per available CPU.  Whatever the worker
+/// count, the outcome vector, the record files and `index.json` are
+/// byte-identical to a serial run.
+pub fn run_campaign_jobs(
+    spec: &TestSpec,
+    env: &EnvSpec,
+    out_dir: Option<&Path>,
+    jobs: usize,
 ) -> Result<Vec<PointOutcome>, String> {
     let (points, backend) = resolve(spec, env)?;
     let profile = env.profile()?;
@@ -133,47 +340,39 @@ pub fn run_campaign(
         }
         None => None,
     };
-
-    let mut outcomes = Vec::with_capacity(points.len());
-    for (i, point) in points.iter().enumerate() {
-        let outcome = run_point(backend.as_ref(), &profile, env, spec, point)?;
-        if let Some(rd) = run_dir.as_mut() {
-            let alloc_seed = spec.seed ^ (point.nodes as u64).wrapping_mul(0x9E37_79B9);
-            let alloc = Allocation::new(&profile, point.nodes, env.alloc_policy, alloc_seed);
-            let placement = Placement::new(&profile, &alloc, point.ppn, env.rank_order);
-            if i == 0 {
-                let meta = metadata::capture(
-                    env.metadata_verbosity,
-                    env,
-                    Some(&alloc),
-                    Some(&placement),
-                    spec.seed,
-                );
-                rd.write_descriptor("metadata.json", &meta).map_err(|e| e.to_string())?;
-            }
-            let rec = Record {
-                id: format!("p{i:05}"),
-                collective: point.collective.label().to_string(),
-                backend: backend.name().to_string(),
-                bytes: point.bytes,
-                nodes: point.nodes,
-                ppn: point.ppn,
-                requested_algorithm: point.algorithm.clone(),
-                effective_algorithm: outcome.effective_algorithm.clone(),
-                knobs_effective: spec
-                    .knobs
-                    .iter()
-                    .filter(|(k, _)| !point.degraded_knobs.iter().any(|(dk, _)| dk == k))
-                    .cloned()
-                    .collect(),
-                knobs_degraded: point.degraded_knobs.clone(),
-                measurement: outcome.measurement.clone(),
-                granularity: spec.granularity,
-            };
-            rd.add_record(&rec).map_err(|e| e.to_string())?;
-        }
-        outcomes.push(outcome);
+    // Metadata snapshots the first point's allocation/placement (exactly
+    // what the serial loop recorded); captured up front so it does not
+    // depend on worker scheduling.
+    if let (Some(rd), Some(point)) = (run_dir.as_ref(), points.first()) {
+        let alloc_seed = spec.seed ^ (point.nodes as u64).wrapping_mul(0x9E37_79B9);
+        let alloc = Allocation::new(&profile, point.nodes, env.alloc_policy, alloc_seed);
+        let placement = Placement::new(&profile, &alloc, point.ppn, env.rank_order);
+        let meta = metadata::capture(
+            env.metadata_verbosity,
+            env,
+            Some(&alloc),
+            Some(&placement),
+            spec.seed,
+        );
+        rd.write_descriptor("metadata.json", &meta).map_err(|e| e.to_string())?;
     }
+
+    let backend_ref: &dyn Backend = backend.as_ref();
+    let outcomes = {
+        let mut sink = run_dir.as_mut().map(OrderedRecordSink::new);
+        parallel_ordered(
+            &points,
+            jobs,
+            |_, point| run_point(backend_ref, &profile, env, spec, point),
+            |i, outcome| {
+                if let Some(sink) = sink.as_mut() {
+                    let rec = make_record(i, spec, backend_ref.name(), outcome);
+                    sink.push(i, rec).map_err(|e| e.to_string())?;
+                }
+                Ok(())
+            },
+        )?
+    };
     if let Some(rd) = run_dir.as_ref() {
         rd.finalize().map_err(|e| e.to_string())?;
     }
@@ -278,5 +477,71 @@ mod tests {
         let big = quick_latency("openmpi", "leonardo", Coll::Allreduce, Some("ring"), 64 << 20, 4, 1, 1)
             .unwrap();
         assert!(big > small);
+    }
+
+    #[test]
+    fn effective_jobs_clamps() {
+        assert_eq!(effective_jobs(1, 100), 1);
+        assert_eq!(effective_jobs(4, 100), 4);
+        assert_eq!(effective_jobs(8, 3), 3); // never more workers than points
+        assert_eq!(effective_jobs(4, 0), 1);
+        assert!(effective_jobs(0, 1000) >= 1); // 0 = auto
+    }
+
+    #[test]
+    fn parallel_ordered_preserves_order_and_streams_prefix() {
+        let items: Vec<usize> = (0..40).collect();
+        let mut delivered = Vec::new();
+        let out = parallel_ordered(
+            &items,
+            4,
+            |i, &x| {
+                // stagger completion so arrivals are genuinely out of order
+                std::thread::sleep(std::time::Duration::from_micros(((x * 7) % 13) as u64));
+                Ok(i * 10)
+            },
+            |i, &r| {
+                delivered.push((i, r));
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(out, (0..40).map(|i| i * 10).collect::<Vec<_>>());
+        assert_eq!(delivered, (0..40).map(|i| (i, i * 10)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_ordered_reports_lowest_failing_index() {
+        let items: Vec<usize> = (0..64).collect();
+        let f = |_i: usize, &x: &usize| {
+            if x >= 20 {
+                Err(format!("fail {x}"))
+            } else {
+                Ok(x)
+            }
+        };
+        let serial = parallel_ordered(&items, 1, f, |_, _| Ok(())).unwrap_err();
+        let par = parallel_ordered(&items, 4, f, |_, _| Ok(())).unwrap_err();
+        assert_eq!(serial, "fail 20");
+        assert_eq!(par, serial);
+    }
+
+    #[test]
+    fn campaign_parallel_matches_serial_outcomes() {
+        let mut spec = TestSpec::new("par", "openmpi", Coll::Allreduce);
+        spec.sizes = vec![2048, 64 * 1024, 1 << 20];
+        spec.nodes = vec![2, 4];
+        spec.algorithms = vec!["ring".into(), "rabenseifner".into()];
+        spec.iterations = 2;
+        spec.warmup = 0;
+        let env = EnvSpec::for_system("leonardo");
+        let serial = run_campaign_jobs(&spec, &env, None, 1).unwrap();
+        let par = run_campaign_jobs(&spec, &env, None, 4).unwrap();
+        assert_eq!(serial.len(), par.len());
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.effective_algorithm, b.effective_algorithm);
+            assert_eq!(a.median_s, b.median_s);
+            assert_eq!(a.measurement.times, b.measurement.times);
+        }
     }
 }

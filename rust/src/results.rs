@@ -1,5 +1,7 @@
-//! Standardized results: record schema, granularity modes (Table II) and
-//! the run-directory layout with its index (paper Sec. III-E, R4/R5).
+//! Standardized results: record schema, granularity modes (Table II), the
+//! run-directory layout with its index (paper Sec. III-E, R4/R5), and the
+//! [`OrderedRecordSink`] streaming writer that lets the parallel campaign
+//! engine commit out-of-order worker outcomes in exact serial order.
 //!
 //! Layout of a campaign directory:
 //!
@@ -238,6 +240,49 @@ impl RunDir {
     }
 }
 
+/// Ordered streaming writer over a [`RunDir`].
+///
+/// The parallel campaign engine's workers finish test points out of order;
+/// record files and `index.json` entries must nevertheless land in exact
+/// campaign order so a `jobs = N` run directory is byte-identical to the
+/// serial one.  The sink accepts `(sequence, record)` pairs in any order,
+/// buffers what arrived early, and flushes the contiguous ready prefix to
+/// the directory as soon as it completes — streaming, not batch-at-end:
+/// memory held is bounded by worker skew, not campaign size.
+pub struct OrderedRecordSink<'a> {
+    dir: &'a mut RunDir,
+    pending: std::collections::BTreeMap<usize, Record>,
+    next: usize,
+}
+
+impl<'a> OrderedRecordSink<'a> {
+    pub fn new(dir: &'a mut RunDir) -> Self {
+        Self { dir, pending: std::collections::BTreeMap::new(), next: 0 }
+    }
+
+    /// Records written to the directory so far (the committed prefix).
+    pub fn written(&self) -> usize {
+        self.next
+    }
+
+    /// Records buffered waiting for an earlier sequence number.
+    pub fn buffered(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Accept record number `seq` (0-based campaign order) and flush every
+    /// record that is now part of the contiguous prefix.
+    pub fn push(&mut self, seq: usize, rec: Record) -> std::io::Result<()> {
+        debug_assert!(seq >= self.next, "sequence {seq} already committed");
+        self.pending.insert(seq, rec);
+        while let Some(rec) = self.pending.remove(&self.next) {
+            self.dir.add_record(&rec)?;
+            self.next += 1;
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -324,6 +369,44 @@ mod tests {
         let file = idx[0].get("file").unwrap().as_str().unwrap();
         let rec_json = Json::parse(&fs::read_to_string(dir.join(file)).unwrap()).unwrap();
         assert_eq!(rec_json.get("effective_algorithm").unwrap().as_str(), Some("ring"));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn ordered_sink_commits_out_of_order_pushes_in_order() {
+        let dir = std::env::temp_dir().join(format!("pico_sink_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let mut rd = RunDir::create(&dir).unwrap();
+        let rec = |i: usize| Record {
+            id: format!("p{i:05}"),
+            collective: "allreduce".into(),
+            backend: "openmpi-sim".into(),
+            bytes: 1024 * (i + 1),
+            nodes: 2,
+            ppn: 1,
+            requested_algorithm: None,
+            effective_algorithm: "ring".into(),
+            knobs_effective: vec![],
+            knobs_degraded: vec![],
+            measurement: meas(),
+            granularity: Granularity::Summary,
+        };
+        {
+            let mut sink = OrderedRecordSink::new(&mut rd);
+            // worker-completion order 2, 0, 3, 1 → commit order 0, 1, 2, 3
+            sink.push(2, rec(2)).unwrap();
+            assert_eq!((sink.written(), sink.buffered()), (0, 1));
+            sink.push(0, rec(0)).unwrap();
+            assert_eq!((sink.written(), sink.buffered()), (1, 1));
+            sink.push(3, rec(3)).unwrap();
+            sink.push(1, rec(1)).unwrap();
+            assert_eq!((sink.written(), sink.buffered()), (4, 0));
+        }
+        rd.finalize().unwrap();
+        let idx = RunDir::load_index(&dir).unwrap();
+        let ids: Vec<_> =
+            idx.iter().map(|e| e.get("id").unwrap().as_str().unwrap().to_string()).collect();
+        assert_eq!(ids, vec!["p00000", "p00001", "p00002", "p00003"]);
         fs::remove_dir_all(&dir).unwrap();
     }
 

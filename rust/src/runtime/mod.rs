@@ -5,22 +5,26 @@
 //!
 //! Interchange format is HLO *text*, not serialized HloModuleProto — jax
 //! ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
-//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//! rejects; the text parser reassigns ids.
 //!
 //! [`XlaReducer`] implements [`crate::execute::Reducer`], so execute-mode
 //! collectives can run their `MPI_Reduce_local` steps through the actual
 //! Pallas kernel.  Messages are padded to the artifact bucket sizes with
 //! the op's identity element (padding never perturbs live data — asserted
 //! by the Python tests and again by `rust/tests/runtime_reduce.rs`).
+//!
+//! # Offline builds
+//!
+//! The PJRT bindings (`xla` crate) are not vendored in the offline
+//! container, so the executable half of the bridge is compiled only with
+//! the `xla` cargo feature.  Without it, [`XlaReducer`] is an
+//! API-compatible stub whose constructors always fail, and callers fall
+//! back to the scalar data plane ([`crate::execute::ScalarReducer`]) —
+//! the same path they already take when artifacts are missing.  Errors
+//! throughout are plain `String`s; the crate stays dependency-free.
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
-use anyhow::{anyhow, bail, Context, Result};
-
-use crate::execute::Reducer;
-use crate::goal::ReduceOp;
 use crate::json::Json;
 
 /// Parsed `artifacts/manifest.json`.
@@ -42,39 +46,53 @@ pub struct ManifestEntry {
 }
 
 impl Manifest {
-    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, String> {
         let dir = dir.as_ref().to_path_buf();
-        let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            format!("reading {} (run `make artifacts`): {e}", path.display())
+        })?;
+        let j = Json::parse(&text).map_err(|e| format!("manifest.json: {e}"))?;
         let buckets = j
             .get("buckets")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("manifest: missing buckets"))?
+            .ok_or("manifest: missing buckets")?
             .iter()
             .filter_map(Json::as_usize)
             .collect::<Vec<_>>();
         let entries = j
             .get("entries")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("manifest: missing entries"))?
+            .ok_or("manifest: missing entries")?
             .iter()
             .map(|e| {
                 Ok(ManifestEntry {
-                    name: e.get("name").and_then(Json::as_str).context("entry name")?.into(),
-                    file: e.get("file").and_then(Json::as_str).context("entry file")?.into(),
+                    name: e
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or("manifest: entry name")?
+                        .into(),
+                    file: e
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or("manifest: entry file")?
+                        .into(),
                     shape: e
                         .get("shape")
                         .and_then(Json::as_arr)
-                        .context("entry shape")?
+                        .ok_or("manifest: entry shape")?
                         .iter()
                         .filter_map(Json::as_usize)
                         .collect(),
-                    dtype: e.get("dtype").and_then(Json::as_str).context("entry dtype")?.into(),
+                    dtype: e
+                        .get("dtype")
+                        .and_then(Json::as_str)
+                        .ok_or("manifest: entry dtype")?
+                        .into(),
                     n_args: e.get("n_args").and_then(Json::as_usize).unwrap_or(2),
                 })
             })
-            .collect::<Result<Vec<_>>>()?;
+            .collect::<Result<Vec<_>, String>>()?;
         Ok(Manifest {
             dir,
             tile_elems: j.get("tile_elems").and_then(Json::as_usize).unwrap_or(32768),
@@ -86,131 +104,229 @@ impl Manifest {
     pub fn find(&self, name: &str) -> Option<&ManifestEntry> {
         self.entries.iter().find(|e| e.name == name)
     }
-}
-
-/// PJRT-backed reducer: one CPU client, lazily compiled executables per
-/// (op, bucket) variant, bucket-padded execution.
-pub struct XlaReducer {
-    manifest: Manifest,
-    client: xla::PjRtClient,
-    /// (artifact name) → compiled executable; lazy, mutex-guarded so the
-    /// reducer can be shared across executing rank threads.
-    exes: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
-}
-
-impl XlaReducer {
-    /// Load from an artifact directory.
-    pub fn new(dir: impl AsRef<Path>) -> Result<XlaReducer> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(XlaReducer { manifest, client, exes: Mutex::new(HashMap::new()) })
-    }
-
-    /// `PICO_ARTIFACTS` env var or `<crate>/artifacts`.
-    pub fn default_dir() -> PathBuf {
-        std::env::var("PICO_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
-    }
-
-    pub fn from_default_dir() -> Result<XlaReducer> {
-        Self::new(Self::default_dir())
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
 
     /// Smallest bucket that fits `n` elements (largest bucket if none fit;
     /// the caller then chunks).
-    fn bucket_for(&self, n: usize) -> Result<usize> {
-        self.manifest
-            .buckets
+    pub fn bucket_for(&self, n: usize) -> Result<usize, String> {
+        self.buckets
             .iter()
             .copied()
             .find(|&b| b >= n)
-            .or_else(|| self.manifest.buckets.last().copied())
-            .ok_or_else(|| anyhow!("manifest has no buckets"))
-    }
-
-    /// Execute `dst = op(dst, src)` through the compiled Pallas artifact.
-    /// Chunks longer than the largest bucket are processed bucket-by-bucket.
-    pub fn reduce_f32(&self, op: ReduceOp, dst: &mut [f32], src: &[f32]) -> Result<()> {
-        anyhow::ensure!(dst.len() == src.len(), "length mismatch");
-        let max_bucket = *self.manifest.buckets.last().unwrap();
-        let mut off = 0usize;
-        while off < dst.len() {
-            let take = (dst.len() - off).min(max_bucket);
-            self.reduce_chunk(op, &mut dst[off..off + take], &src[off..off + take])?;
-            off += take;
-        }
-        Ok(())
-    }
-
-    fn reduce_chunk(&self, op: ReduceOp, dst: &mut [f32], src: &[f32]) -> Result<()> {
-        let n = dst.len();
-        let bucket = self.bucket_for(n)?;
-        let name = format!("reduce_{}_f32_{}", op.name(), bucket);
-        let entry = self
-            .manifest
-            .find(&name)
-            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?
-            .clone();
-
-        // pad with the op identity so the dead suffix cannot leak in
-        let ident = op.identity();
-        let mut a = vec![ident; bucket];
-        let mut b = vec![ident; bucket];
-        a[..n].copy_from_slice(dst);
-        b[..n].copy_from_slice(src);
-
-        let mut exes = self.exes.lock().unwrap();
-        if !exes.contains_key(&name) {
-            let path = self.manifest.dir.join(&entry.file);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe =
-                self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-            exes.insert(name.clone(), exe);
-        }
-        let exe = exes.get(&name).unwrap();
-
-        let la = xla::Literal::vec1(&a);
-        let lb = xla::Literal::vec1(&b);
-        let result = exe
-            .execute::<xla::Literal>(&[la, lb])
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("sync {name}: {e:?}"))?;
-        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
-        let out = result.to_tuple1().map_err(|e| anyhow!("tuple {name}: {e:?}"))?;
-        let values = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec {name}: {e:?}"))?;
-        if values.len() != bucket {
-            bail!("artifact {name} returned {} values, expected {bucket}", values.len());
-        }
-        dst.copy_from_slice(&values[..n]);
-        Ok(())
+            .or_else(|| self.buckets.last().copied())
+            .ok_or_else(|| "manifest has no buckets".to_string())
     }
 }
 
-impl Reducer for XlaReducer {
-    fn reduce(&self, op: ReduceOp, dst: &mut [f32], src: &[f32]) {
-        self.reduce_f32(op, dst, src).expect("XLA reduction failed");
+/// `PICO_ARTIFACTS` env var or `<crate>/artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var("PICO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+#[cfg(feature = "xla")]
+mod pjrt {
+    //! The real PJRT-backed reducer (requires vendored `xla` bindings).
+
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
+
+    use super::Manifest;
+    use crate::execute::Reducer;
+    use crate::goal::ReduceOp;
+
+    /// PJRT-backed reducer: one CPU client, lazily compiled executables per
+    /// (op, bucket) variant, bucket-padded execution.
+    pub struct XlaReducer {
+        manifest: Manifest,
+        client: xla::PjRtClient,
+        /// (artifact name) → compiled executable; lazy, mutex-guarded so the
+        /// reducer can be shared across executing rank threads.
+        exes: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    }
+
+    impl XlaReducer {
+        /// Load from an artifact directory.
+        pub fn new(dir: impl AsRef<Path>) -> Result<XlaReducer, String> {
+            let manifest = Manifest::load(dir)?;
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| format!("PJRT cpu client: {e:?}"))?;
+            Ok(XlaReducer { manifest, client, exes: Mutex::new(HashMap::new()) })
+        }
+
+        pub fn default_dir() -> PathBuf {
+            super::default_artifact_dir()
+        }
+
+        pub fn from_default_dir() -> Result<XlaReducer, String> {
+            Self::new(Self::default_dir())
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// Execute `dst = op(dst, src)` through the compiled Pallas
+        /// artifact.  Chunks longer than the largest bucket are processed
+        /// bucket-by-bucket.
+        pub fn reduce_f32(
+            &self,
+            op: ReduceOp,
+            dst: &mut [f32],
+            src: &[f32],
+        ) -> Result<(), String> {
+            if dst.len() != src.len() {
+                return Err("length mismatch".into());
+            }
+            let max_bucket = *self.manifest.buckets.last().ok_or("manifest has no buckets")?;
+            let mut off = 0usize;
+            while off < dst.len() {
+                let take = (dst.len() - off).min(max_bucket);
+                self.reduce_chunk(op, &mut dst[off..off + take], &src[off..off + take])?;
+                off += take;
+            }
+            Ok(())
+        }
+
+        fn reduce_chunk(&self, op: ReduceOp, dst: &mut [f32], src: &[f32]) -> Result<(), String> {
+            let n = dst.len();
+            let bucket = self.manifest.bucket_for(n)?;
+            let name = format!("reduce_{}_f32_{}", op.name(), bucket);
+            let entry = self
+                .manifest
+                .find(&name)
+                .ok_or_else(|| format!("artifact {name} not in manifest"))?
+                .clone();
+
+            // pad with the op identity so the dead suffix cannot leak in
+            let ident = op.identity();
+            let mut a = vec![ident; bucket];
+            let mut b = vec![ident; bucket];
+            a[..n].copy_from_slice(dst);
+            b[..n].copy_from_slice(src);
+
+            let mut exes = self.exes.lock().unwrap();
+            if !exes.contains_key(&name) {
+                let path = self.manifest.dir.join(&entry.file);
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| format!("loading {}: {e:?}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| format!("compiling {name}: {e:?}"))?;
+                exes.insert(name.clone(), exe);
+            }
+            let exe = exes.get(&name).unwrap();
+
+            let la = xla::Literal::vec1(&a);
+            let lb = xla::Literal::vec1(&b);
+            let result = exe
+                .execute::<xla::Literal>(&[la, lb])
+                .map_err(|e| format!("executing {name}: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| format!("sync {name}: {e:?}"))?;
+            // aot.py lowers with return_tuple=True → unwrap the 1-tuple
+            let out = result.to_tuple1().map_err(|e| format!("tuple {name}: {e:?}"))?;
+            let values =
+                out.to_vec::<f32>().map_err(|e| format!("to_vec {name}: {e:?}"))?;
+            if values.len() != bucket {
+                return Err(format!(
+                    "artifact {name} returned {} values, expected {bucket}",
+                    values.len()
+                ));
+            }
+            dst.copy_from_slice(&values[..n]);
+            Ok(())
+        }
+    }
+
+    impl Reducer for XlaReducer {
+        fn reduce(&self, op: ReduceOp, dst: &mut [f32], src: &[f32]) {
+            self.reduce_f32(op, dst, src).expect("XLA reduction failed");
+        }
     }
 }
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    //! API-compatible stand-in compiled when the `xla` feature is off:
+    //! construction always fails, so every caller takes its documented
+    //! scalar-fallback branch.
+
+    use std::path::{Path, PathBuf};
+
+    use super::Manifest;
+    use crate::execute::Reducer;
+    use crate::goal::ReduceOp;
+
+    /// Stub reducer (crate built without the `xla` feature).  The
+    /// constructors always return `Err`, so the remaining methods are
+    /// unreachable at runtime; they exist to keep callers compiling
+    /// unchanged.
+    pub struct XlaReducer {
+        manifest: Manifest,
+    }
+
+    impl XlaReducer {
+        pub fn new(dir: impl AsRef<Path>) -> Result<XlaReducer, String> {
+            // Validate the artifact dir first so the error message matches
+            // the real implementation's when artifacts are absent.
+            let _manifest = Manifest::load(dir)?;
+            Err("pico was built without the `xla` feature: the PJRT data plane is \
+                 unavailable (vendor the xla bindings, add them as a dependency in \
+                 rust/Cargo.toml, and rebuild with `--features xla`); falling back \
+                 to the scalar reducer"
+                .into())
+        }
+
+        pub fn default_dir() -> PathBuf {
+            super::default_artifact_dir()
+        }
+
+        pub fn from_default_dir() -> Result<XlaReducer, String> {
+            Self::new(Self::default_dir())
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn reduce_f32(
+            &self,
+            _op: ReduceOp,
+            _dst: &mut [f32],
+            _src: &[f32],
+        ) -> Result<(), String> {
+            Err("xla feature disabled".into())
+        }
+    }
+
+    impl Reducer for XlaReducer {
+        fn reduce(&self, _op: ReduceOp, _dst: &mut [f32], _src: &[f32]) {
+            unreachable!("stub XlaReducer cannot be constructed");
+        }
+    }
+}
+
+#[cfg(feature = "xla")]
+pub use pjrt::XlaReducer;
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaReducer;
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
     // Full artifact-backed tests live in rust/tests/runtime_reduce.rs
-    // (they need `make artifacts`); here: manifest parsing only.
+    // (they need `make artifacts` and `--features xla`); here: manifest
+    // parsing and the stub's fallback contract only.
 
     #[test]
     fn manifest_missing_dir_errors() {
         let err = Manifest::load("/nonexistent/path").unwrap_err();
-        assert!(format!("{err:#}").contains("manifest.json"));
+        assert!(err.contains("manifest.json"), "{err}");
     }
 
     #[test]
@@ -228,6 +344,16 @@ mod tests {
         assert_eq!(m.buckets, vec![32768]);
         assert!(m.find("reduce_sum_f32_32768").is_some());
         assert!(m.find("nope").is_none());
+        assert_eq!(m.bucket_for(100).unwrap(), 32768);
+        assert_eq!(m.bucket_for(50000).unwrap(), 32768); // falls back to largest
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn reducer_construction_fails_gracefully_without_artifacts() {
+        // Whether or not the xla feature is on, a bogus dir must produce a
+        // String error mentioning the manifest, never a panic.
+        let err = XlaReducer::new("/nonexistent/artifact/dir").unwrap_err();
+        assert!(err.contains("manifest.json"), "{err}");
     }
 }

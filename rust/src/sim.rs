@@ -5,7 +5,7 @@
 //! - per-rank dependency-driven op execution (send/recv/reduce/copy/calc);
 //! - MPI-style message matching by (src, dst, tag) in FIFO order;
 //! - eager (buffered, sender-completes-early) vs rendezvous (both-sides,
-//!   handshake, striped) transfer semantics from [`netmodel`];
+//!   handshake, striped) transfer semantics from [`crate::netmodel`];
 //! - **resource occupancy** congestion: per-node NIC tx/rx pools, per-node
 //!   scale-up fabric, and per-group tapered uplink pools.  Concurrent flows
 //!   queue on shared resources, which is exactly what separates
@@ -17,6 +17,14 @@
 //!
 //! The engine is fully deterministic: identical inputs produce identical
 //! virtual timelines (asserted by tests), satisfying reproducibility (R5).
+//!
+//! It is also re-entrant: [`simulate`] keeps all mutable state (resource
+//! pools, event heap, channel queues) on its own stack, and a
+//! [`SimContext`] only borrows shared immutable inputs — so the parallel
+//! campaign engine (`orchestrator`) constructs one context per worker per
+//! point and simulates concurrently with no synchronization.  `SimContext`
+//! is `Send` and the borrowed `SystemProfile`/`Placement` are `Sync`
+//! (compile-time asserted in the tests below).
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
@@ -194,7 +202,7 @@ pub fn simulate(goal: &Goal, ctx: &SimContext) -> SimReport {
     // ---- dependency bookkeeping -------------------------------------------
     // Flat (CSR) layout: per-op state is indexed by a global op id, and the
     // dependents graph lives in two flat arrays — no per-op allocations
-    // (this was the event loop's dominant cost; see EXPERIMENTS.md §Perf).
+    // (this was the event loop's dominant cost; see DESIGN.md §Perf).
     let mut base = vec![0usize; p + 1]; // rank → first global op id
     for r in 0..p {
         base[r + 1] = base[r] + goal.ranks[r].ops.len();
@@ -640,6 +648,19 @@ mod tests {
         assert!(c.comm > 0.0 && c.reduction > 0.0 && c.datamove > 0.0);
         // average per-rank busy time can't exceed makespan
         assert!(c.total() <= rep.total_time + 1e-12);
+    }
+
+    #[test]
+    fn sim_types_are_thread_safe() {
+        // The parallel campaign engine shares profiles/placements across
+        // workers and builds one SimContext per point; keep that statically
+        // true (a regression here breaks `run_campaign --jobs N`).
+        fn assert_sync<T: Sync>() {}
+        fn assert_send<T: Send>() {}
+        assert_sync::<crate::topology::SystemProfile>();
+        assert_sync::<Placement>();
+        assert_send::<SimContext<'static>>();
+        assert_send::<SimReport>();
     }
 
     #[test]

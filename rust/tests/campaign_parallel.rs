@@ -1,0 +1,175 @@
+//! Parallel campaign engine contract (see DESIGN.md, "Parallel campaign
+//! engine"): a `jobs = 4` campaign must produce a run directory
+//! byte-identical to `jobs = 1` — same record files, same bytes, same
+//! index order — and a panicking point must fail the pool cleanly instead
+//! of hanging it.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use pico::collectives::Coll;
+use pico::config::{EnvSpec, TestSpec};
+use pico::orchestrator::{parallel_ordered, run_campaign_jobs};
+use pico::results::Granularity;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("pico_par_{name}_{}", std::process::id()))
+}
+
+/// A 48-point sweep: 2 node counts × 4 sizes × (default + 5 algorithms).
+fn sweep_spec(name: &str) -> TestSpec {
+    let mut spec = TestSpec::new(name, "openmpi", Coll::Allreduce);
+    spec.sizes = vec![2048, 64 * 1024, 1 << 20, 4 << 20];
+    spec.nodes = vec![2, 4];
+    spec.algorithms = vec!["*".into()];
+    spec.iterations = 2;
+    spec.warmup = 1;
+    spec.granularity = Granularity::Statistics;
+    spec.instrument = true;
+    spec.seed = 99;
+    spec
+}
+
+/// Read every file under `root` into rel-path → bytes.  metadata.json is
+/// the one file with wall-clock content (timestamp_unix), so that line is
+/// stripped before comparison; everything else must match bit for bit.
+fn read_tree(root: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(dir: &Path, base: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        for entry in fs::read_dir(dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.is_dir() {
+                walk(&path, base, out);
+            } else {
+                let rel = path.strip_prefix(base).unwrap().to_string_lossy().to_string();
+                let mut bytes = fs::read(&path).unwrap();
+                if rel == "metadata.json" {
+                    let text = String::from_utf8(bytes).unwrap();
+                    bytes = text
+                        .lines()
+                        .filter(|l| !l.contains("timestamp_unix"))
+                        .collect::<Vec<_>>()
+                        .join("\n")
+                        .into_bytes();
+                }
+                out.insert(rel, bytes);
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(root, root, &mut out);
+    out
+}
+
+#[test]
+fn four_jobs_run_dir_is_byte_identical_to_serial() {
+    let d1 = tmp("serial");
+    let d4 = tmp("jobs4");
+    let _ = fs::remove_dir_all(&d1);
+    let _ = fs::remove_dir_all(&d4);
+
+    let spec = sweep_spec("detsweep");
+    let env = EnvSpec::for_system("leonardo");
+    let serial = run_campaign_jobs(&spec, &env, Some(&d1), 1).unwrap();
+    let par = run_campaign_jobs(&spec, &env, Some(&d4), 4).unwrap();
+    assert_eq!(serial.len(), 48);
+    assert_eq!(par.len(), 48);
+
+    // outcome stream identical: order and values
+    for (i, (a, b)) in serial.iter().zip(&par).enumerate() {
+        assert_eq!(a.effective_algorithm, b.effective_algorithm, "point {i}");
+        assert_eq!(a.median_s, b.median_s, "point {i}");
+        assert_eq!(a.measurement.times, b.measurement.times, "point {i}");
+    }
+
+    // run directory identical: same file set, same bytes
+    let t1 = read_tree(&d1.join("detsweep"));
+    let t4 = read_tree(&d4.join("detsweep"));
+    assert_eq!(
+        t1.keys().collect::<Vec<_>>(),
+        t4.keys().collect::<Vec<_>>(),
+        "file sets differ"
+    );
+    assert_eq!(t1.len(), 48 + 4, "48 records + 4 descriptors");
+    for (name, bytes) in &t1 {
+        assert_eq!(bytes, &t4[name], "file {name} differs between jobs=1 and jobs=4");
+    }
+
+    fs::remove_dir_all(&d1).unwrap();
+    fs::remove_dir_all(&d4).unwrap();
+}
+
+#[test]
+fn jobs_zero_auto_detects_and_matches_serial() {
+    let mut spec = sweep_spec("auto");
+    spec.sizes = vec![2048, 1 << 20];
+    spec.granularity = Granularity::None;
+    let env = EnvSpec::for_system("leonardo");
+    let serial = run_campaign_jobs(&spec, &env, None, 1).unwrap();
+    let auto = run_campaign_jobs(&spec, &env, None, 0).unwrap();
+    assert_eq!(serial.len(), auto.len());
+    for (a, b) in serial.iter().zip(&auto) {
+        assert_eq!(a.median_s, b.median_s);
+    }
+}
+
+#[test]
+fn env_parallelism_knob_drives_run_campaign() {
+    let mut spec = sweep_spec("envknob");
+    spec.sizes = vec![2048, 1 << 20];
+    spec.granularity = Granularity::None;
+    let mut env = EnvSpec::for_system("leonardo");
+    let serial = pico::orchestrator::run_campaign(&spec, &env, None).unwrap();
+    env.parallelism = 4;
+    let par = pico::orchestrator::run_campaign(&spec, &env, None).unwrap();
+    assert_eq!(serial.len(), par.len());
+    for (a, b) in serial.iter().zip(&par) {
+        assert_eq!(a.measurement.times, b.measurement.times);
+    }
+}
+
+#[test]
+fn panicking_point_fails_campaign_cleanly() {
+    // Drive the engine's worker pool directly with a point runner that
+    // panics: the pool must drain and return an error naming the item —
+    // not hang, not poison later campaigns.
+    // Note: the expected panic prints its one message to stderr — that is
+    // deliberate.  Swapping in a silent global panic hook here would race
+    // with the other tests in this binary and could swallow their
+    // diagnostics, which costs more than one noisy line.
+    let items: Vec<usize> = (0..32).collect();
+    let res = parallel_ordered(
+        &items,
+        4,
+        |i, &x| {
+            if x == 7 {
+                panic!("simulated deadlock in point {i}");
+            }
+            Ok(x * 2)
+        },
+        |_, _| Ok(()),
+    );
+    let err = res.unwrap_err();
+    assert!(err.contains("panicked"), "{err}");
+    assert!(err.contains("simulated deadlock"), "{err}");
+
+    // the pool is reusable after a panic (nothing global was poisoned)
+    let ok = parallel_ordered(&items, 4, |_, &x| Ok(x + 1), |_, _| Ok(())).unwrap();
+    assert_eq!(ok, (1..=32).collect::<Vec<_>>());
+}
+
+#[test]
+fn failing_point_reports_lowest_index_like_serial() {
+    let items: Vec<usize> = (0..64).collect();
+    let f = |_i: usize, &x: &usize| {
+        if x % 10 == 9 {
+            Err(format!("point {x} failed"))
+        } else {
+            Ok(x)
+        }
+    };
+    let serial_err = parallel_ordered(&items, 1, f, |_, _| Ok(())).unwrap_err();
+    let par_err = parallel_ordered(&items, 8, f, |_, _| Ok(())).unwrap_err();
+    assert_eq!(serial_err, "point 9 failed");
+    assert_eq!(par_err, serial_err);
+}

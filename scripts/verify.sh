@@ -1,0 +1,56 @@
+#!/usr/bin/env bash
+# Repo verification (see README.md "Verification"):
+#   1. tier-1: release build + full test suite
+#   2. rustdoc with warnings denied
+#   3. parallel-equivalence smoke: a 48-point sweep run with --jobs 1 and
+#      --jobs 4 must produce byte-identical run directories.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release && cargo test -q"
+cargo build --release
+cargo test -q
+
+echo "== docs: cargo doc --no-deps (warnings are errors)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "== smoke: jobs=4 run dir must be byte-identical to jobs=1"
+BIN=target/release/pico
+TMP=$(mktemp -d)
+trap 'rm -rf "$TMP"' EXIT
+
+"$BIN" spec --out "$TMP" >/dev/null   # provides a default env.json
+
+# overwrite the skeleton test.json with a fixed 48-point sweep:
+# 2 node counts x 4 sizes x (default + 5 algorithms)
+cat > "$TMP/test.json" <<'EOF'
+{
+  "name": "paritycheck",
+  "backend": "openmpi",
+  "collective": "allreduce",
+  "sizes": ["2KiB", "64KiB", "1MiB", "4MiB"],
+  "nodes": [2, 4],
+  "algorithms": ["*"],
+  "iterations": 2,
+  "warmup": 1,
+  "granularity": "statistics",
+  "seed": 7
+}
+EOF
+
+# pin the one wall-clock metadata field so both dirs are byte-comparable
+export PICO_TIMESTAMP=1700000000
+"$BIN" run --test "$TMP/test.json" --env "$TMP/env.json" \
+    --out "$TMP/serial" --jobs 1 >/dev/null
+"$BIN" run --test "$TMP/test.json" --env "$TMP/env.json" \
+    --out "$TMP/par" --jobs 4 >/dev/null
+
+n_records=$(ls "$TMP/serial/paritycheck/records" | wc -l)
+if [ "$n_records" -lt 32 ]; then
+    echo "FAIL: smoke sweep has only $n_records points (< 32)" >&2
+    exit 1
+fi
+diff -r "$TMP/serial/paritycheck" "$TMP/par/paritycheck"
+echo "OK: $n_records records byte-identical at jobs=1 and jobs=4"
+
+echo "verify: all checks passed"
