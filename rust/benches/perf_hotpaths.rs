@@ -7,10 +7,11 @@
 //! L1 target: PJRT-compiled Pallas reduction throughput vs the scalar
 //! reference data plane (requires `make artifacts` and `--features xla`).
 
-use pico::benchkit::{bench, bench_parallel, report_rate, section};
+use pico::backends::{by_name, Backend};
+use pico::benchkit::{bench, bench_parallel, report_rate, section, BenchJson};
 use pico::collectives::{self, Coll, GenParams};
 use pico::config::{EnvSpec, TestSpec};
-use pico::orchestrator::run_campaign_jobs;
+use pico::orchestrator::{run_campaign_jobs, run_campaign_jobs_cached, ScheduleCache};
 use pico::execute::{execute, make_inputs, Reducer, ScalarReducer};
 use pico::goal::ReduceOp;
 use pico::instrument::Recorder;
@@ -166,4 +167,96 @@ fn main() {
     bench("sim: 512-rank ring, 4-rail contention", 1, 10, || {
         simulate(&goal, &SimContext::new(&prof, &pl).with_cfg(cfg)).total_time
     });
+
+    // ---- Goal IR arena + schedule cache (BENCH_ir.json) -------------------
+    // Set PICO_BENCH_OUT=<path> (scripts/bench.sh does) to persist the
+    // section's numbers as the machine-readable bench trajectory entry.
+    section("L3: Goal IR arena + schedule cache");
+    let mut ir = BenchJson::new("ir");
+
+    // schedule build = generate + seal (CSR compiled once, validated)
+    let t_build = bench("ir: build+seal ring allreduce p=512", 1, 10, || {
+        collectives::generate(Coll::Allreduce, "ring", &GenParams::new(512, 512 * 64)).unwrap()
+    });
+    ir.set_seconds("schedule_build_s", t_build);
+
+    // simulate on the precompiled CSR (no per-run dependency rebuild)
+    let t_sim = bench("ir: simulate p=512 ring (precompiled CSR)", 1, 10, || {
+        simulate(&goal, &SimContext::new(&prof, &pl)).total_time
+    });
+    ir.set_seconds("simulate_s", t_sim);
+
+    // the 48-point sweep's schedules: direct generation vs the cache
+    // (skeleton built once per algorithm, rescaled per size)
+    let backend = by_name("openmpi").unwrap();
+    let sweep_sizes = [64 * 1024usize, 1 << 20, 8 << 20, 32 << 20];
+    let sweep_p = [16usize, 32];
+    let algos = ["linear", "recursive_doubling", "ring", "segmented_ring", "rabenseifner", "tree"];
+    let t_direct = bench("ir: 48-schedule set, direct generate", 1, 5, || {
+        let mut n = 0usize;
+        for &p in &sweep_p {
+            for &bytes in &sweep_sizes {
+                for algo in algos {
+                    let params = GenParams::new(p, (bytes / 4).max(1));
+                    n += backend.schedule(Coll::Allreduce, algo, &params).unwrap().total_ops();
+                }
+            }
+        }
+        n
+    });
+    let cache = ScheduleCache::new();
+    let t_cached = bench("ir: 48-schedule set, via cache", 1, 5, || {
+        let mut n = 0usize;
+        for &p in &sweep_p {
+            for &bytes in &sweep_sizes {
+                for algo in algos {
+                    let params = GenParams::new(p, (bytes / 4).max(1));
+                    n += cache
+                        .schedule(backend.as_ref(), Coll::Allreduce, algo, &params)
+                        .unwrap()
+                        .total_ops();
+                }
+            }
+        }
+        n
+    });
+    let stats = cache.stats();
+    println!(
+        "  -> schedule cache: {} hits, {} misses, {} skeleton rescales ({:.2}x vs direct)",
+        stats.hits,
+        stats.misses,
+        stats.rescales,
+        t_direct / t_cached.max(1e-30)
+    );
+    ir.set_seconds("schedule_direct_s", t_direct);
+    ir.set_seconds("schedule_cached_s", t_cached);
+    ir.set("schedule_cache_speedup", t_direct / t_cached.max(1e-30));
+    ir.set("cache_hits", stats.hits);
+    ir.set("cache_misses", stats.misses);
+    ir.set("cache_rescales", stats.rescales);
+
+    // end-to-end cached sweep throughput, serial vs --jobs 4
+    {
+        let mut spec = TestSpec::new("perf-ir", "openmpi", Coll::Allreduce);
+        spec.sizes = sweep_sizes.to_vec();
+        spec.nodes = sweep_p.to_vec();
+        spec.algorithms = vec!["*".into()];
+        spec.iterations = 2;
+        spec.warmup = 0;
+        spec.granularity = pico::results::Granularity::None;
+        let env = EnvSpec::for_system("leonardo");
+        let sweep_cache = ScheduleCache::new();
+        let t_serial = bench("ir: cached 48-point sweep (serial)", 1, 3, || {
+            run_campaign_jobs_cached(&spec, &env, None, 1, &sweep_cache).unwrap().len()
+        });
+        let t_jobs4 = bench("ir: cached 48-point sweep (--jobs 4)", 1, 3, || {
+            run_campaign_jobs_cached(&spec, &env, None, 4, &sweep_cache).unwrap().len()
+        });
+        ir.set_seconds("cached_sweep_serial_s", t_serial);
+        ir.set_seconds("cached_sweep_jobs4_s", t_jobs4);
+        ir.set("cached_sweep_parallel_speedup", t_serial / t_jobs4.max(1e-30));
+        println!("  -> cached sweep serial/jobs4: {:.2}x", t_serial / t_jobs4.max(1e-30));
+    }
+
+    ir.write_if_env("PICO_BENCH_OUT");
 }

@@ -88,6 +88,38 @@ pub trait Backend: Send + Sync {
     fn msg_overhead(&self) -> Option<f64> {
         None
     }
+
+    /// True when `schedule(coll, algo, ·)` is **count-scalable** for this
+    /// stack at `p` ranks: the schedule at `m × count` equals the schedule
+    /// at `count` with every segment scaled by `m`, for any `count`
+    /// divisible by `p` (see [`crate::collectives::count_scalable`]).
+    ///
+    /// The orchestrator's schedule cache consults this before reusing a
+    /// byte-agnostic skeleton across the message sizes of a sweep.  The
+    /// conservative default is `false` — an adapter that remaps algorithm
+    /// names must resolve them to the underlying generator before
+    /// answering.
+    fn count_scalable(&self, _coll: Coll, _algo: &str, _p: usize) -> bool {
+        false
+    }
+}
+
+/// Resolve the algorithm name a backend will actually run for a request:
+/// an exposed explicit choice wins, anything else (including `None`)
+/// degrades to the stack's built-in selection heuristic (R6).
+pub fn resolve_algorithm(
+    backend: &dyn Backend,
+    coll: Coll,
+    algo: Option<&str>,
+    params: &GenParams,
+    ppn: usize,
+) -> String {
+    match algo {
+        Some(a) if backend.algorithms(coll).contains(&a) => a.to_string(),
+        Some(_) | None => {
+            backend.default_algorithm(coll, params.p, params.bytes(), ppn).to_string()
+        }
+    }
 }
 
 /// Generate with fallback: unknown/unsupported algorithm names degrade to
@@ -99,12 +131,7 @@ pub fn schedule_effective(
     params: &GenParams,
     ppn: usize,
 ) -> Result<(Goal, String), String> {
-    let name = match algo {
-        Some(a) if backend.algorithms(coll).contains(&a) => a.to_string(),
-        Some(_) | None => {
-            backend.default_algorithm(coll, params.p, params.bytes(), ppn).to_string()
-        }
-    };
+    let name = resolve_algorithm(backend, coll, algo, params, ppn);
     let goal = backend.schedule(coll, &name, params)?;
     Ok((goal, name))
 }
@@ -224,6 +251,12 @@ impl Backend for LibPico {
             }
         }
         libpico(coll, algo, params)
+    }
+
+    fn count_scalable(&self, coll: Coll, algo: &str, p: usize) -> bool {
+        // the non-pow2 degradations above all land on ring, which is
+        // itself scalable, so the registry answer holds either way
+        collectives::count_scalable(coll, algo, p)
     }
 }
 
@@ -361,6 +394,15 @@ impl Backend for OpenMpiSim {
             (c, a) => libpico(c, a, params),
         }
     }
+
+    fn count_scalable(&self, coll: Coll, algo: &str, p: usize) -> bool {
+        match (coll, algo) {
+            (Coll::Bcast, "binomial") => {
+                collectives::count_scalable(coll, "binomial_doubling_staged", p)
+            }
+            _ => collectives::count_scalable(coll, algo, p),
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -483,6 +525,12 @@ impl Backend for CrayMpichSim {
             return libpico(coll, "binomial", params);
         }
         libpico(coll, algo, params)
+    }
+
+    fn count_scalable(&self, coll: Coll, algo: &str, p: usize) -> bool {
+        // every degradation path above (ring, binomial) is itself
+        // scalable, so the registry answer is safe for all branches
+        collectives::count_scalable(coll, algo, p)
     }
 }
 
@@ -627,6 +675,24 @@ impl Backend for SimCcl {
             (c, a) => Err(format!("{} does not implement {}:{a}", self.name(), c.label())),
         }
     }
+
+    fn count_scalable(&self, coll: Coll, algo: &str, p: usize) -> bool {
+        // resolve the NCCL-facing names to the underlying generators first
+        let underlying = match (coll, algo) {
+            (Coll::Allreduce, "ring") => Some((Coll::Allreduce, "ring")),
+            (Coll::Allreduce, "tree") => Some((Coll::Allreduce, "tree_pipelined")),
+            (Coll::Bcast, "ring") => Some((Coll::Bcast, "pipeline")),
+            (Coll::Bcast, "tree") => Some((Coll::Bcast, "binomial_halving")),
+            (Coll::Allgather, "pat") if self.has_pat() => Some((Coll::Allgather, "pat")),
+            (Coll::ReduceScatter, "pat") if self.has_pat() => Some((Coll::ReduceScatter, "pat")),
+            (Coll::Allgather, "ring") => Some((Coll::Allgather, "ring")),
+            (Coll::ReduceScatter, "ring") => Some((Coll::ReduceScatter, "ring")),
+            (Coll::Alltoall, "pairwise") => Some((Coll::Alltoall, "pairwise")),
+            (Coll::Reduce, "tree") => Some((Coll::Reduce, "binomial")),
+            _ => None,
+        };
+        underlying.is_some_and(|(c, a)| collectives::count_scalable(c, a, p))
+    }
 }
 
 #[cfg(test)]
@@ -725,11 +791,7 @@ mod tests {
         let internal = OpenMpiSim.schedule(Coll::Bcast, "binomial", &p).unwrap();
         let clean = collectives::generate(Coll::Bcast, "binomial_doubling", &p).unwrap();
         let copies = |g: &Goal| {
-            g.ranks
-                .iter()
-                .flat_map(|r| r.ops.iter())
-                .filter(|o| matches!(o.kind, crate::goal::OpKind::Copy { .. }))
-                .count()
+            g.kinds.iter().filter(|k| matches!(k, crate::goal::OpKind::Copy { .. })).count()
         };
         assert!(copies(&internal) > copies(&clean));
     }

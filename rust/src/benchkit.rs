@@ -7,6 +7,7 @@
 
 use std::time::Instant;
 
+use crate::json::Json;
 use crate::util::Stats;
 
 /// Measure a closure: `warmup` unmeasured runs, then `reps` timed ones.
@@ -76,6 +77,53 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Accumulates bench results into a JSON document (`BENCH_*.json`), the
+/// machine-readable half of the bench trajectory: `scripts/bench.sh` runs
+/// the bench binaries with `PICO_BENCH_OUT` set and collects the emitted
+/// files at the repository root.
+pub struct BenchJson {
+    obj: Json,
+}
+
+impl BenchJson {
+    pub fn new(bench: &str) -> Self {
+        Self { obj: Json::obj().set("bench", bench) }
+    }
+
+    /// Attach a value under `key` (accepts anything `Into<Json>`).
+    pub fn set(&mut self, key: &str, value: impl Into<Json>) {
+        let obj = std::mem::replace(&mut self.obj, Json::Null);
+        self.obj = obj.set(key, value);
+    }
+
+    /// Record a timing in seconds.
+    pub fn set_seconds(&mut self, key: &str, seconds: f64) {
+        self.set(key, seconds);
+    }
+
+    pub fn to_json(&self) -> &Json {
+        &self.obj
+    }
+
+    /// Write the document to `path`.
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.obj.to_string_pretty())
+    }
+
+    /// Write to the path named by env var `var` (if set) and report where
+    /// it landed; silently skips when unset so plain `cargo bench` runs
+    /// stay file-free.
+    pub fn write_if_env(&self, var: &str) {
+        if let Ok(path) = std::env::var(var) {
+            let path = std::path::PathBuf::from(path);
+            match self.write(&path) {
+                Ok(()) => println!("bench-json: wrote {}", path.display()),
+                Err(e) => eprintln!("bench-json: failed to write {}: {e}", path.display()),
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -93,5 +141,16 @@ mod tests {
     fn bench_parallel_returns_finite_speedup() {
         let speedup = bench_parallel("noop", 0, 3, || 1 + 1, || 2 + 2);
         assert!(speedup.is_finite() && speedup > 0.0);
+    }
+
+    #[test]
+    fn bench_json_accumulates_and_serializes() {
+        let mut j = BenchJson::new("ir");
+        j.set_seconds("simulate_s", 1.5e-3);
+        j.set("cache_hits", 3usize);
+        let s = j.to_json().to_string_pretty();
+        assert!(s.contains("\"bench\""));
+        assert!(s.contains("simulate_s"));
+        assert!(s.contains("cache_hits"));
     }
 }

@@ -48,7 +48,7 @@ pub fn linear(params: &GenParams) -> GenResult {
             );
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 /// Ring allgather: p−1 neighbor steps, bandwidth-optimal.
@@ -58,7 +58,7 @@ pub fn ring(params: &GenParams) -> GenResult {
     let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
     own_init(&mut b, p, n, inst);
     if p == 1 {
-        return Ok(b.finish());
+        return Ok(b.finish()?);
     }
     for rank in 0..p {
         if inst {
@@ -91,7 +91,7 @@ pub fn ring(params: &GenParams) -> GenResult {
             b.tag_end(rank, "phase:ring");
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 /// Recursive doubling (power-of-two ranks, uniform blocks): log₂ p
@@ -133,7 +133,7 @@ pub fn recursive_doubling(params: &GenParams) -> GenResult {
             b.tag_end(rank, "phase:doubling");
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 /// Bruck allgather: ⌈log₂ p⌉ steps for any p, at the cost of a final
@@ -189,7 +189,7 @@ pub fn bruck(params: &GenParams) -> GenResult {
             b.tag_end(rank, "final:mem-move");
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 /// NCCL PAT-style binomial butterfly allgather with *locality-aware
@@ -258,7 +258,7 @@ pub fn pat(params: &GenParams) -> GenResult {
             b.tag_end(rank, "final:mem-move");
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 #[cfg(test)]
@@ -302,10 +302,10 @@ mod tests {
     #[test]
     fn bruck_log_steps() {
         let g = bruck(&GenParams::new(12, 24)).unwrap();
-        let sends = g.ranks[0]
-            .ops
+        let sends = g
+            .ops(0)
             .iter()
-            .filter(|o| matches!(o.kind, crate::goal::OpKind::Send { .. }))
+            .filter(|k| matches!(k, crate::goal::OpKind::Send { .. }))
             .count();
         assert_eq!(sends, 4); // ceil(log2 12)
     }
@@ -382,5 +382,5 @@ pub fn neighbor_exchange(params: &GenParams) -> GenResult {
             b.tag_end(rank, "phase:neighbor");
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }

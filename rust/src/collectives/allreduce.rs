@@ -94,7 +94,7 @@ pub fn linear(params: &GenParams) -> GenResult {
     for dst in 1..p {
         b.send(0, dst, Seg::output(0, n));
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 /// Recursive doubling: log₂(p′) full-buffer exchange+reduce steps.
@@ -142,7 +142,7 @@ pub fn recursive_doubling(params: &GenParams) -> GenResult {
         }
     }
     emit_unfold(&mut b, r, n);
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 /// Ring allreduce: reduce-scatter ring + allgather ring; bandwidth-optimal
@@ -153,7 +153,7 @@ pub fn ring(params: &GenParams) -> GenResult {
     let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
     emit_init(&mut b, p, n, inst);
     if p == 1 {
-        return Ok(b.finish());
+        return Ok(b.finish()?);
     }
     let next = |r: usize| (r + 1) % p;
     let prev = |r: usize| (r + p - 1) % p;
@@ -216,7 +216,7 @@ pub fn ring(params: &GenParams) -> GenResult {
             b.tag_end(rank, "phase:allgather");
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 /// Byte range owned by participant v after `k` halving steps.
@@ -309,7 +309,7 @@ pub fn rabenseifner(params: &GenParams) -> GenResult {
         }
     }
     emit_unfold(&mut b, r, n);
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 /// Binomial-tree allreduce: reduce to rank 0, then distance-doubling bcast.
@@ -331,7 +331,7 @@ fn tree_segmented(params: &GenParams, segsize: usize) -> GenResult {
     let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
     emit_init(&mut b, p, n, inst);
     if p == 1 {
-        return Ok(b.finish());
+        return Ok(b.finish()?);
     }
     let nseg = n.div_ceil(segsize).max(1);
     let seg_bounds: Vec<(usize, usize)> = (0..nseg).map(|s| chunk(n, nseg, s)).collect();
@@ -382,7 +382,7 @@ fn tree_segmented(params: &GenParams, segsize: usize) -> GenResult {
             }
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 #[cfg(test)]
@@ -446,7 +446,7 @@ mod tests {
     #[test]
     fn instrumentation_emits_fig5_regions() {
         let g = rabenseifner(&GenParams::new(8, 64).instrumented()).unwrap();
-        let names: Vec<_> = g.ranks[0].tags.iter().map(|t| t.name.as_str()).collect();
+        let names: Vec<_> = g.rank_tags(0).iter().map(|t| t.name.as_str()).collect();
         assert!(names.contains(&"init:mem-move"));
         assert!(names.contains(&"phase:redscat"));
         assert!(names.contains(&"phase:allgather"));
@@ -457,7 +457,7 @@ mod tests {
     #[test]
     fn uninstrumented_goal_has_no_tags() {
         let g = rabenseifner(&GenParams::new(8, 64)).unwrap();
-        assert!(g.ranks.iter().all(|r| r.tags.is_empty()));
+        assert!(g.tags.is_empty());
     }
 }
 
@@ -575,5 +575,5 @@ pub fn segmented_ring(params: &GenParams) -> GenResult {
         let all: Vec<usize> = (0..b.ops_len(rank)).collect();
         b.group_wait(rank, all);
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }

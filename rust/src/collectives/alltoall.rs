@@ -42,7 +42,7 @@ pub fn linear(params: &GenParams) -> GenResult {
         }
         b.group_wait(rank, ids);
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 /// MPICH pairwise exchange: p−1 strided sendrecv steps, any p.
@@ -78,7 +78,7 @@ pub fn pairwise(params: &GenParams) -> GenResult {
             b.tag_end(rank, "phase:pairwise");
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 /// Bruck alltoall: ⌈log₂ p⌉ rounds with pack/unpack staging — latency-
@@ -148,7 +148,7 @@ pub fn bruck(params: &GenParams) -> GenResult {
             b.tag_end(rank, "final:mem-move");
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 #[cfg(test)]
@@ -175,11 +175,7 @@ mod tests {
     fn bruck_fewer_messages_than_pairwise() {
         let p = 16;
         let count_sends = |g: &crate::goal::Goal| {
-            g.ranks[0]
-                .ops
-                .iter()
-                .filter(|o| matches!(o.kind, OpKind::Send { .. }))
-                .count()
+            g.ops(0).iter().filter(|k| matches!(k, OpKind::Send { .. })).count()
         };
         let gb = bruck(&GenParams::new(p, p * 4)).unwrap();
         let gp = pairwise(&GenParams::new(p, p * 4)).unwrap();
@@ -191,8 +187,8 @@ mod tests {
     fn linear_posts_receives_concurrently() {
         let g = linear(&GenParams::new(4, 16)).unwrap();
         // all comm ops of rank 0 depend only on the initial copy (op 0)
-        for op in &g.ranks[0].ops[1..] {
-            assert_eq!(op.deps, vec![0]);
+        for i in 1..g.ops(0).len() {
+            assert_eq!(g.deps_local(0, i), vec![0]);
         }
     }
 }

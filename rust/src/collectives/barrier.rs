@@ -22,7 +22,7 @@ pub fn linear(params: &GenParams) -> GenResult {
     let mut b = GoalBuilder::new(p, params.count, params.elem_bytes)
         .with_instrumentation(params.instrument);
     if p == 1 {
-        return Ok(b.finish());
+        return Ok(b.finish()?);
     }
     // Two full circulations of a token 0→1→…→p−1→0: after the second pass
     // every rank has proof that every other rank entered the barrier.
@@ -37,7 +37,7 @@ pub fn linear(params: &GenParams) -> GenResult {
             }
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 /// Dissemination barrier: ⌈log₂ p⌉ rounds of strided sendrecv; near-flat
@@ -47,7 +47,7 @@ pub fn dissemination(params: &GenParams) -> GenResult {
     let mut b = GoalBuilder::new(p, params.count, params.elem_bytes)
         .with_instrumentation(params.instrument);
     if p == 1 {
-        return Ok(b.finish());
+        return Ok(b.finish()?);
     }
     let rounds = usize::BITS as usize - (p - 1).leading_zeros() as usize;
     for rank in 0..p {
@@ -58,7 +58,7 @@ pub fn dissemination(params: &GenParams) -> GenResult {
             b.sendrecv_tagged(rank, to, token(), from, token(), k as u32, k as u32);
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 /// Binomial tree barrier: fan-in to rank 0 then fan-out; log-depth with
@@ -68,7 +68,7 @@ pub fn tree(params: &GenParams) -> GenResult {
     let mut b = GoalBuilder::new(p, params.count, params.elem_bytes)
         .with_instrumentation(params.instrument);
     if p == 1 {
-        return Ok(b.finish());
+        return Ok(b.finish()?);
     }
     let levels = usize::BITS as usize - (p - 1).leading_zeros() as usize;
     for rank in 0..p {
@@ -99,7 +99,7 @@ pub fn tree(params: &GenParams) -> GenResult {
             }
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 #[cfg(test)]
@@ -119,10 +119,10 @@ mod tests {
     #[test]
     fn dissemination_rounds() {
         let g = dissemination(&GenParams::new(16, 0)).unwrap();
-        let sends = g.ranks[0]
-            .ops
+        let sends = g
+            .ops(0)
             .iter()
-            .filter(|o| matches!(o.kind, crate::goal::OpKind::Send { .. }))
+            .filter(|k| matches!(k, crate::goal::OpKind::Send { .. }))
             .count();
         assert_eq!(sends, 4);
     }

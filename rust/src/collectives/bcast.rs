@@ -48,7 +48,7 @@ pub fn linear(params: &GenParams) -> GenResult {
         b.send(root, dst, Seg::output(0, n));
         b.recv(dst, root, Seg::output(0, n));
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 /// One (round, sender, receiver, distance) edge of a binomial schedule —
@@ -136,7 +136,7 @@ fn binomial_from_edges(params: &GenParams, edges: &[ScheduleEdge], label: &str) 
             b.tag_end(rank, &format!("phase:{label}"));
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 /// Open MPI-style binomial broadcast: distance-doubling partner order.
@@ -157,7 +157,7 @@ pub fn scatter_allgather(params: &GenParams) -> GenResult {
     let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
     emit_root_init(&mut b, params);
     if p == 1 {
-        return Ok(b.finish());
+        return Ok(b.finish()?);
     }
     // --- binomial (halving) scatter over vranks: vrank v receives its
     // subtree's chunk range [v, v+lsb(v)) from v − lsb(v), then forwards
@@ -215,7 +215,7 @@ pub fn scatter_allgather(params: &GenParams) -> GenResult {
             b.tag_end(rank, "phase:allgather");
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 /// Chained/pipelined broadcast: the payload flows down a rank chain in
@@ -227,7 +227,7 @@ pub fn pipeline(params: &GenParams) -> GenResult {
     let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
     emit_root_init(&mut b, params);
     if p == 1 {
-        return Ok(b.finish());
+        return Ok(b.finish()?);
     }
     let nseg = n.div_ceil(segsize).max(1);
     for rank in 0..p {
@@ -248,7 +248,7 @@ pub fn pipeline(params: &GenParams) -> GenResult {
             b.tag_end(rank, "phase:pipeline");
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 /// The "backend-internal" binomial of Fig. 10: same distance-doubling
@@ -279,7 +279,7 @@ pub fn binomial_doubling_staged(params: &GenParams) -> GenResult {
             }
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 #[cfg(test)]
@@ -371,7 +371,7 @@ pub fn knomial(params: &GenParams) -> GenResult {
     let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
     emit_root_init(&mut b, params);
     if p == 1 {
-        return Ok(b.finish());
+        return Ok(b.finish()?);
     }
     // doubling order: round j's senders are the v < k^j (all digits at
     // positions ≥ j zero), each sending to v + i·k^j for i = 1..k−1.
@@ -417,5 +417,5 @@ pub fn knomial(params: &GenParams) -> GenResult {
             b.tag_end(rank, "phase:knomial");
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }

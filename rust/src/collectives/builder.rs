@@ -7,11 +7,20 @@
 //! rank-local dependencies automatically (sequential semantics, with
 //! `sendrecv` expressing the one intended concurrency) and tracks scratch
 //! usage so the executor can size buffers.
+//!
+//! Emission accumulates lightweight per-rank [`ProgramDraft`]s;
+//! [`GoalBuilder::finish`] **seals** them into the flat [`GoalGraph`]
+//! arena — flattening ops, compiling the dependency + dependents CSRs
+//! exactly once, and running [`GoalGraph::validate`] so malformed
+//! schedules surface as a typed [`GoalError`] instead of a downstream
+//! panic (DESIGN.md §IR).
 
-use crate::goal::{Buf, Goal, Op, OpId, OpKind, ReduceOp, Seg, TagSpan};
+use crate::goal::{Buf, GoalError, GoalGraph, OpId, OpKind, ProgramDraft, ReduceOp, Seg, TagSpan};
 
 pub struct GoalBuilder {
-    goal: Goal,
+    drafts: Vec<ProgramDraft>,
+    count: usize,
+    elem_bytes: usize,
     /// Dependency frontier per rank: the op(s) the next op must wait for.
     frontier: Vec<Vec<OpId>>,
     /// Open tag regions per rank: (name, first op index, depth).
@@ -24,7 +33,9 @@ pub struct GoalBuilder {
 impl GoalBuilder {
     pub fn new(p: usize, count: usize, elem_bytes: usize) -> Self {
         Self {
-            goal: Goal::new(p, count, elem_bytes),
+            drafts: (0..p).map(|_| ProgramDraft::default()).collect(),
+            count,
+            elem_bytes,
             frontier: vec![Vec::new(); p],
             open: vec![Vec::new(); p],
             instrument: false,
@@ -40,23 +51,23 @@ impl GoalBuilder {
     }
 
     pub fn p(&self) -> usize {
-        self.goal.p()
+        self.drafts.len()
     }
 
     pub fn count(&self) -> usize {
-        self.goal.count
+        self.count
     }
 
     /// Number of ops emitted so far for `rank`.
     pub fn ops_len(&self, rank: usize) -> usize {
-        self.goal.ranks[rank].ops.len()
+        self.drafts[rank].ops.len()
     }
 
     fn push(&mut self, rank: usize, kind: OpKind) -> OpId {
         self.track_tmp(&kind);
         let deps = std::mem::take(&mut self.frontier[rank]);
-        let id = self.goal.ranks[rank].ops.len();
-        self.goal.ranks[rank].ops.push(Op { kind, deps });
+        let id = self.drafts[rank].ops.len();
+        self.drafts[rank].ops.push((kind, deps));
         self.frontier[rank] = vec![id];
         id
     }
@@ -120,14 +131,10 @@ impl GoalBuilder {
         self.track_tmp(&OpKind::Send { peer: to, seg: sseg, tag: stag });
         self.track_tmp(&OpKind::Recv { peer: from, seg: rseg, tag: rtag });
         let deps = std::mem::take(&mut self.frontier[rank]);
-        let s = self.goal.ranks[rank].ops.len();
-        self.goal.ranks[rank]
-            .ops
-            .push(Op { kind: OpKind::Send { peer: to, seg: sseg, tag: stag }, deps: deps.clone() });
+        let s = self.drafts[rank].ops.len();
+        self.drafts[rank].ops.push((OpKind::Send { peer: to, seg: sseg, tag: stag }, deps.clone()));
         let r = s + 1;
-        self.goal.ranks[rank]
-            .ops
-            .push(Op { kind: OpKind::Recv { peer: from, seg: rseg, tag: rtag }, deps });
+        self.drafts[rank].ops.push((OpKind::Recv { peer: from, seg: rseg, tag: rtag }, deps));
         self.frontier[rank] = vec![s, r];
         (s, r)
     }
@@ -142,8 +149,8 @@ impl GoalBuilder {
     /// returns its id.  Pair with [`GoalBuilder::group_wait`].
     pub fn post_with_deps(&mut self, rank: usize, kind: OpKind, base: &[OpId]) -> OpId {
         self.track_tmp(&kind);
-        let id = self.goal.ranks[rank].ops.len();
-        self.goal.ranks[rank].ops.push(Op { kind, deps: base.to_vec() });
+        let id = self.drafts[rank].ops.len();
+        self.drafts[rank].ops.push((kind, base.to_vec()));
         id
     }
 
@@ -171,7 +178,7 @@ impl GoalBuilder {
     pub fn tag_begin(&mut self, rank: usize, name: &str) {
         if self.instrument {
             let depth = self.open[rank].len() as u8;
-            let first = self.goal.ranks[rank].ops.len();
+            let first = self.drafts[rank].ops.len();
             self.open[rank].push((name.to_string(), first, depth));
         }
     }
@@ -182,9 +189,9 @@ impl GoalBuilder {
             let (open_name, first, depth) =
                 self.open[rank].pop().unwrap_or_else(|| panic!("tag_end({name}) with no open tag"));
             assert_eq!(open_name, name, "mismatched tag_end: open {open_name}, got {name}");
-            let last = self.goal.ranks[rank].ops.len();
+            let last = self.drafts[rank].ops.len();
             if last > first {
-                self.goal.ranks[rank].tags.push(TagSpan {
+                self.drafts[rank].tags.push(TagSpan {
                     name: open_name,
                     first,
                     last: last - 1,
@@ -194,15 +201,27 @@ impl GoalBuilder {
         }
     }
 
-    /// Seal the schedule.  Panics on unbalanced tags; validates structure
-    /// in debug builds.
-    pub fn finish(mut self) -> Goal {
+    fn check_open_tags(&self) {
         for (r, open) in self.open.iter().enumerate() {
             assert!(open.is_empty(), "rank {r}: unclosed tags {open:?}");
         }
-        self.goal.tmp_count = self.tmp_high;
-        debug_assert_eq!(self.goal.validate(), Ok(()));
-        self.goal
+    }
+
+    /// Seal the schedule into the flat arena: flatten ops, compile the
+    /// dependency + dependents CSRs once, validate (structure + channel
+    /// matching).  Panics on unbalanced tags (a generator bug); returns a
+    /// typed [`GoalError`] for structural defects.
+    pub fn finish(self) -> Result<GoalGraph, GoalError> {
+        self.check_open_tags();
+        GoalGraph::assemble(self.count, self.elem_bytes, self.tmp_high, self.drafts, true)
+    }
+
+    /// Seal without channel matching — for deliberately partial schedules
+    /// (deadlock tests, fuzzing).  Structural validation still runs.
+    pub fn finish_unchecked(self) -> GoalGraph {
+        self.check_open_tags();
+        GoalGraph::assemble(self.count, self.elem_bytes, self.tmp_high, self.drafts, false)
+            .expect("builder emitted structurally invalid schedule")
     }
 }
 
@@ -227,8 +246,8 @@ mod tests {
         b.copy(0, Seg::output(0, 8), Seg::input(0, 8));
         b.send(0, 1, Seg::output(0, 8));
         b.recv(1, 0, Seg::output(0, 8));
-        let g = b.finish();
-        assert_eq!(g.ranks[0].ops[1].deps, vec![0]);
+        let g = b.finish().unwrap();
+        assert_eq!(g.deps_local(0, 1), vec![0]);
         assert!(g.validate().is_ok());
     }
 
@@ -239,9 +258,9 @@ mod tests {
         b.reduce_local(0, Seg::output(0, 4), Seg::tmp(0, 4), ReduceOp::Sum);
         b.sendrecv(1, 0, Seg::input(0, 4), 0, Seg::tmp(0, 4));
         b.reduce_local(1, Seg::output(0, 4), Seg::tmp(0, 4), ReduceOp::Sum);
-        let g = b.finish();
+        let g = b.finish().unwrap();
         // reduce waits on both halves of the sendrecv
-        assert_eq!(g.ranks[0].ops[2].deps, vec![0, 1]);
+        assert_eq!(g.deps_local(0, 2), vec![0, 1]);
         assert_eq!(g.tmp_count, 4);
     }
 
@@ -252,12 +271,12 @@ mod tests {
             b.tag_begin(0, "phase:x");
             b.copy(0, Seg::output(0, 4), Seg::input(0, 4));
             b.tag_end(0, "phase:x");
-            b.finish()
+            b.finish().unwrap()
         };
-        assert_eq!(mk(false).ranks[0].tags.len(), 0);
+        assert_eq!(mk(false).rank_tags(0).len(), 0);
         let g = mk(true);
-        assert_eq!(g.ranks[0].tags.len(), 1);
-        assert_eq!(g.ranks[0].tags[0].name, "phase:x");
+        assert_eq!(g.rank_tags(0).len(), 1);
+        assert_eq!(g.rank_tags(0)[0].name, "phase:x");
     }
 
     #[test]
@@ -268,9 +287,9 @@ mod tests {
         b.copy(0, Seg::output(0, 4), Seg::input(0, 4));
         b.tag_end(0, "step:0");
         b.tag_end(0, "phase:p");
-        let g = b.finish();
-        let step = g.ranks[0].tags.iter().find(|t| t.name == "step:0").unwrap();
-        let phase = g.ranks[0].tags.iter().find(|t| t.name == "phase:p").unwrap();
+        let g = b.finish().unwrap();
+        let step = g.rank_tags(0).iter().find(|t| t.name == "step:0").unwrap();
+        let phase = g.rank_tags(0).iter().find(|t| t.name == "phase:p").unwrap();
         assert_eq!(step.depth, 1);
         assert_eq!(phase.depth, 0);
     }

@@ -218,6 +218,44 @@ pub fn find(coll: Coll, name: &str) -> Option<&'static AlgoInfo> {
     registry().iter().find(|a| a.coll == coll && a.name == name)
 }
 
+/// True when the named libpico generator is **count-scalable**: for any
+/// `m ≥ 1` and any `count` with `count % p == 0`, the schedule it emits at
+/// `m × count` is exactly the schedule at `count` with every segment
+/// offset/length multiplied by `m` (op structure, dependencies, peers,
+/// tags and relative chunk boundaries depend only on `p`).
+///
+/// This is the contract behind [`crate::goal::GoalGraph::rescaled`] and the
+/// orchestrator's schedule cache: a scalable algorithm's skeleton is built
+/// once at `count = p` and rescaled per message size.  The list is audited
+/// per generator and enforced end-to-end by
+/// `rust/tests/prop_invariants.rs::prop_schedule_cache_transparent`.
+///
+/// Deliberately excluded: every segsize-pipelined generator
+/// (`tree_pipelined`, `segmented_ring`, bcast `pipeline`) — their segment
+/// *count* depends on the byte size — and `allreduce::rabenseifner` on
+/// non-power-of-two ranks, whose element-space halving rounds differently
+/// at different counts.
+pub fn count_scalable(coll: Coll, algo: &str, p: usize) -> bool {
+    match (coll, algo) {
+        (Coll::Allreduce, "linear" | "recursive_doubling" | "ring" | "tree") => true,
+        (Coll::Allreduce, "rabenseifner") => p.is_power_of_two(),
+        (
+            Coll::Bcast,
+            "linear" | "binomial_doubling" | "binomial_halving" | "binomial_doubling_staged"
+            | "scatter_allgather" | "knomial",
+        ) => true,
+        (Coll::Reduce, "linear" | "binomial" | "rabenseifner") => true,
+        (
+            Coll::Allgather,
+            "linear" | "ring" | "recursive_doubling" | "bruck" | "pat" | "neighbor_exchange",
+        ) => true,
+        (Coll::ReduceScatter, "ring" | "pairwise" | "recursive_halving" | "pat") => true,
+        (Coll::Alltoall, "linear" | "pairwise" | "bruck") => true,
+        (Coll::Gather | Coll::Scatter, "linear" | "binomial") => true,
+        _ => false,
+    }
+}
+
 /// Generate the schedule for (collective, algorithm) at a test point.
 pub fn generate(coll: Coll, algo: &str, params: &GenParams) -> GenResult {
     let info = find(coll, algo)

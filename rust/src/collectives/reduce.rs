@@ -26,7 +26,7 @@ pub fn linear(params: &GenParams) -> GenResult {
         b.recv(root, s, Seg::tmp(0, n));
         b.reduce_local(root, Seg::output(0, n), Seg::tmp(0, n), op);
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 /// Binomial reduce: leaves fold up a distance-doubling tree in
@@ -65,7 +65,7 @@ pub fn binomial(params: &GenParams) -> GenResult {
             b.tag_end(rank, "phase:binomial_reduce");
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 /// Linear gather: every rank ships its chunk straight to the root.
@@ -82,7 +82,7 @@ pub fn gather_linear(params: &GenParams) -> GenResult {
         b.send(s, root, Seg::input(0, len));
         b.recv(root, s, Seg::output(off, len));
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 /// Binomial gather (root 0): subtree ranges fold up the tree; interior
@@ -127,7 +127,7 @@ pub fn gather_binomial(params: &GenParams) -> GenResult {
             b.send_tagged(rank, rank - span, Seg::tmp(off, len), k as u32);
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 /// Linear scatter: the root ships each rank its chunk.
@@ -144,7 +144,7 @@ pub fn scatter_linear(params: &GenParams) -> GenResult {
         b.send(root, s, Seg::input(off, len));
         b.recv(s, root, Seg::output(0, len));
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 /// Binomial scatter (root 0): the mirror of binomial gather — subtree
@@ -184,7 +184,7 @@ pub fn scatter_binomial(params: &GenParams) -> GenResult {
         }
         b.copy(rank, Seg::output(0, own_len), Seg::tmp(own_off, own_len));
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 #[cfg(test)]
@@ -219,10 +219,10 @@ mod tests {
         let g = binomial(&GenParams::new(8, 16)).unwrap();
         // every non-root sends exactly once
         for r in 1..8 {
-            let sends = g.ranks[r]
-                .ops
+            let sends = g
+                .ops(r)
                 .iter()
-                .filter(|o| matches!(o.kind, crate::goal::OpKind::Send { .. }))
+                .filter(|k| matches!(k, crate::goal::OpKind::Send { .. }))
                 .count();
             assert_eq!(sends, 1, "rank {r}");
         }
@@ -324,5 +324,5 @@ pub fn rabenseifner(params: &GenParams) -> GenResult {
             b.tag_end(rank, "phase:gather");
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }

@@ -70,7 +70,7 @@ pub fn ring(params: &GenParams) -> GenResult {
             b.tag_end(rank, "final:mem-move");
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 /// MPICH pairwise exchange: p−1 strided sendrecvs straight out of Input —
@@ -108,7 +108,7 @@ pub fn pairwise(params: &GenParams) -> GenResult {
             b.tag_end(rank, "phase:pairwise");
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 /// Recursive halving (power-of-two ranks, uniform blocks): the
@@ -180,7 +180,7 @@ pub fn recursive_halving(params: &GenParams) -> GenResult {
             b.tag_end(rank, "final:mem-move");
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 /// NCCL PAT-style binomial butterfly reduce-scatter with *locality-aware
@@ -261,7 +261,7 @@ pub fn pat(params: &GenParams) -> GenResult {
             b.tag_end(rank, "final:mem-move");
         }
     }
-    Ok(b.finish())
+    Ok(b.finish()?)
 }
 
 #[cfg(test)]

@@ -78,10 +78,10 @@ pub fn execute(goal: &Goal, inputs: Vec<Vec<f32>>, reducer: &dyn Reducer) -> Vec
         })
         .collect();
 
-    // dependency state
-    let mut done: Vec<Vec<bool>> = goal.ranks.iter().map(|r| vec![false; r.ops.len()]).collect();
-    let mut mail: HashMap<(usize, usize, u32), VecDeque<Vec<f32>>> = HashMap::new();
+    // dependency state, global-op-id indexed (flat arena)
     let total: usize = goal.total_ops();
+    let mut done: Vec<bool> = vec![false; total];
+    let mut mail: HashMap<(usize, usize, u32), VecDeque<Vec<f32>>> = HashMap::new();
     let mut completed = 0usize;
 
     // Dataflow scan: repeatedly execute every op whose deps are met and —
@@ -90,12 +90,12 @@ pub fn execute(goal: &Goal, inputs: Vec<Vec<f32>>, reducer: &dyn Reducer) -> Vec
     while completed < total {
         let mut progressed = false;
         for r in 0..p {
-            for i in 0..goal.ranks[r].ops.len() {
-                let op = &goal.ranks[r].ops[i];
-                if done[r][i] || !op.deps.iter().all(|&d| done[r][d]) {
+            for i in 0..goal.ops(r).len() {
+                let g = goal.gid(r, i);
+                if done[g] || !goal.deps(g).iter().all(|&d| done[d as usize]) {
                     continue;
                 }
-                match &op.kind {
+                match &goal.kinds[g] {
                     OpKind::Send { peer, seg, tag } => {
                         let data = bufs[r].seg(seg).to_vec();
                         mail.entry((r, *peer, *tag)).or_default().push_back(data);
@@ -119,7 +119,7 @@ pub fn execute(goal: &Goal, inputs: Vec<Vec<f32>>, reducer: &dyn Reducer) -> Vec
                     }
                     OpKind::Calc { .. } => {}
                 }
-                done[r][i] = true;
+                done[g] = true;
                 completed += 1;
                 progressed = true;
             }
@@ -236,11 +236,9 @@ mod tests {
     #[test]
     #[should_panic(expected = "deadlock")]
     fn executor_detects_deadlock() {
-        let mut g = Goal::new(1, 4, 4);
-        g.ranks[0].ops.push(crate::goal::Op {
-            kind: OpKind::Recv { peer: 0, seg: Seg::output(0, 4), tag: 0 },
-            deps: vec![],
-        });
+        let mut b = crate::collectives::GoalBuilder::new(1, 4, 4);
+        b.recv(0, 0, Seg::output(0, 4));
+        let g = b.finish_unchecked();
         execute(&g, vec![vec![0.0; 4]], &ScalarReducer);
     }
 
@@ -303,7 +301,7 @@ pub fn execute_threaded(
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(p);
         for (rank, (input, rx_row)) in inputs.into_iter().zip(receivers).enumerate() {
-            let prog = &goal.ranks[rank];
+            let prog_ops: &[OpKind] = goal.ops(rank);
             // senders indexed [src][dst]: this rank sends via its own row
             let my_tx: Vec<Sender<Msg>> = senders[rank].clone();
             let count = goal.count;
@@ -317,8 +315,8 @@ pub fn execute_threaded(
                 // out-of-order arrivals per peer are stashed until their op runs
                 let mut stash: Vec<Vec<Msg>> = vec![Vec::new(); p];
                 let rx_row = rx_row;
-                for op in &prog.ops {
-                    match &op.kind {
+                for kind in prog_ops {
+                    match kind {
                         OpKind::Send { peer, seg, tag } => {
                             let data = bufs.seg(seg).to_vec();
                             my_tx[*peer].send((*tag, data)).expect("peer hung up");

@@ -4,19 +4,43 @@
 //! (Group Operation Assembly Language [64]): per-rank DAGs of send / recv /
 //! calc operations.  We adopt the same IR as the *internal* representation:
 //!
-//! - `collectives::*` generate a [`Goal`] for each (algorithm, p, bytes);
-//! - `sim::Engine` executes a Goal on the discrete-event cluster model;
-//! - `execute::LocalExecutor` interprets the same Goal with real buffers
+//! - `collectives::*` generate a [`GoalGraph`] for each (algorithm, p, bytes);
+//! - `sim::Engine` executes it on the discrete-event cluster model;
+//! - `execute::LocalExecutor` interprets the same graph with real buffers
 //!   and real reductions through the PJRT/Pallas artifact;
-//! - `tracer` classifies a Goal's transfers by topology tier;
-//! - `replay` stitches per-invocation Goals into application timelines.
+//! - `tracer` classifies its transfers by topology tier;
+//! - `replay` stitches per-invocation graphs into application timelines.
+//!
+//! # Arena layout
+//!
+//! A sealed schedule is a **flat arena**, not a nest of per-rank vectors:
+//!
+//! - `kinds` — every op of every rank in one array, rank-major.  A
+//!   *global op id* `g` indexes it; rank r's ops occupy
+//!   `rank_base[r]..rank_base[r+1]`, so a rank-local id `i` maps to
+//!   `g = rank_base[r] + i`.
+//! - `csr` — an [`Arc`]-shared [`DepGraph`]: the dependency CSR
+//!   (`dep_off`/`dep_targets`, global ids, preserving emission order) plus
+//!   the **precompiled dependents CSR** the simulator consumes directly.
+//!   It is built exactly once, when [`GoalBuilder`](crate::collectives::GoalBuilder)
+//!   seals the schedule — consumers never rebuild it (DESIGN.md §IR).
+//! - `tags` / `tag_off` — instrumentation regions (Fig. 5), flat with a
+//!   per-rank offset table; `first`/`last` stay rank-local op ids.
+//!
+//! Because dependencies and op structure are byte-agnostic, a graph can be
+//! [`rescaled`](GoalGraph::rescaled) to a multiple of its element count:
+//! segments, `count` and `tmp_count` scale, the `DepGraph` is shared via
+//! `Arc`.  The schedule cache in [`crate::orchestrator`] exploits this to
+//! build one skeleton per (algorithm, p) and re-derive every message size
+//! of a sweep from it.
 //!
 //! Ops carry *data semantics* ([`Seg`] references into per-rank buffers) so
 //! execute-mode can verify numerics, and *tag spans* (instrumentation
 //! regions, Fig. 5) so the simulator can attribute time to algorithm phases.
 
+use std::sync::Arc;
 
-/// Index of an op within one rank's program.
+/// Index of an op within one rank's program (rank-local).
 pub type OpId = usize;
 
 /// Which per-rank buffer a segment lives in.  Execute mode materializes
@@ -58,6 +82,10 @@ impl Seg {
 
     pub fn bytes(&self, elem_bytes: usize) -> usize {
         self.len * elem_bytes
+    }
+
+    fn scaled(&self, m: usize) -> Self {
+        Self { buf: self.buf, off: self.off * m, len: self.len * m }
     }
 }
 
@@ -125,18 +153,22 @@ impl OpKind {
             _ => 0,
         }
     }
-}
 
-/// A schedule op plus its intra-rank dependencies.
-#[derive(Debug, Clone, PartialEq)]
-pub struct Op {
-    pub kind: OpKind,
-    /// Rank-local deps: op indices that must complete first.
-    pub deps: Vec<OpId>,
+    fn scaled(&self, m: usize) -> Self {
+        match *self {
+            OpKind::Send { peer, seg, tag } => OpKind::Send { peer, seg: seg.scaled(m), tag },
+            OpKind::Recv { peer, seg, tag } => OpKind::Recv { peer, seg: seg.scaled(m), tag },
+            OpKind::Reduce { dst, src, op } => {
+                OpKind::Reduce { dst: dst.scaled(m), src: src.scaled(m), op }
+            }
+            OpKind::Copy { dst, src } => OpKind::Copy { dst: dst.scaled(m), src: src.scaled(m) },
+            OpKind::Calc { seconds } => OpKind::Calc { seconds },
+        }
+    }
 }
 
 /// An instrumentation region over a contiguous range of one rank's ops
-/// (Fig. 5: `PICO_TAG_BEGIN/END`).  `first..=last` inclusive.
+/// (Fig. 5: `PICO_TAG_BEGIN/END`).  `first..=last` inclusive, rank-local.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TagSpan {
     pub name: String,
@@ -146,17 +178,127 @@ pub struct TagSpan {
     pub depth: u8,
 }
 
-/// One rank's program: ops + tag spans.
+/// One rank's *draft* program: ops with rank-local deps, before sealing.
+/// Only [`GoalBuilder`](crate::collectives::GoalBuilder), the GOAL-text
+/// parser and tests construct these; everything downstream consumes the
+/// sealed [`GoalGraph`].
 #[derive(Debug, Clone, Default)]
-pub struct RankProgram {
-    pub ops: Vec<Op>,
+pub struct ProgramDraft {
+    pub ops: Vec<(OpKind, Vec<OpId>)>,
     pub tags: Vec<TagSpan>,
 }
 
-/// A complete schedule for `p` ranks moving elements of `elem_bytes`.
-#[derive(Debug, Clone)]
-pub struct Goal {
-    pub ranks: Vec<RankProgram>,
+/// Typed validation failure for a schedule graph (satellite of §IR: the
+/// simulator used to answer malformed graphs with an index-out-of-bounds
+/// panic; sealing and parsing now reject them up front).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GoalError {
+    /// A dep names an op id beyond the rank's program.
+    DanglingDep { rank: usize, op: usize, dep: usize, ops: usize },
+    /// An op depends on itself.
+    SelfDep { rank: usize, op: usize },
+    /// A dep points forward (deps must point strictly backwards).
+    ForwardDep { rank: usize, op: usize, dep: usize },
+    /// A dep crosses rank boundaries (flat-form check).
+    CrossRankDep { rank: usize, op: usize, dep: usize },
+    /// Send/Recv peer outside `0..p`.
+    BadPeer { rank: usize, op: usize, peer: usize, p: usize },
+    /// Segment exceeds its buffer (`count` for Input/Output, `tmp_count`
+    /// for Tmp).
+    SegOutOfRange { rank: usize, op: usize, buf: Buf, off: usize, len: usize, cap: usize },
+    /// Tag span indices out of order or beyond the rank's program.
+    BadTagSpan { rank: usize, name: String, first: usize, last: usize, ops: usize },
+    /// Different numbers of send and recv channels.
+    UnbalancedChannels { sends: usize, recvs: usize },
+    /// A (src, dst, tag) channel has sends but no matching recvs.
+    UnmatchedSend { src: usize, dst: usize, tag: u32 },
+    /// A (src, dst, tag) channel's send and recv length sequences differ.
+    ChannelLenMismatch { src: usize, dst: usize, tag: u32 },
+}
+
+impl std::fmt::Display for GoalError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GoalError::DanglingDep { rank, op, dep, ops } => {
+                write!(f, "rank {rank} op {op}: dangling dep {dep} (program has {ops} ops)")
+            }
+            GoalError::SelfDep { rank, op } => write!(f, "rank {rank} op {op}: self dep"),
+            GoalError::ForwardDep { rank, op, dep } => {
+                write!(f, "rank {rank} op {op}: forward dep {dep}")
+            }
+            GoalError::CrossRankDep { rank, op, dep } => {
+                write!(f, "rank {rank} op {op}: dep {dep} crosses rank boundary")
+            }
+            GoalError::BadPeer { rank, op, peer, p } => {
+                write!(f, "rank {rank} op {op}: bad peer {peer} (p = {p})")
+            }
+            GoalError::SegOutOfRange { rank, op, buf, off, len, cap } => {
+                write!(
+                    f,
+                    "rank {rank} op {op}: segment {buf:?}[{off}..{}] exceeds capacity {cap}",
+                    off + len
+                )
+            }
+            GoalError::BadTagSpan { rank, name, first, last, ops } => {
+                write!(f, "rank {rank}: bad tag span {name:?} ops {first}..={last} of {ops}")
+            }
+            GoalError::UnbalancedChannels { sends, recvs } => {
+                write!(f, "unmatched channels: {sends} send vs {recvs} recv")
+            }
+            GoalError::UnmatchedSend { src, dst, tag } => {
+                write!(f, "send channel ({src} -> {dst}, tag {tag}) has no recv")
+            }
+            GoalError::ChannelLenMismatch { src, dst, tag } => {
+                write!(f, "channel ({src} -> {dst}, tag {tag}): send/recv length mismatch")
+            }
+        }
+    }
+}
+
+impl std::error::Error for GoalError {}
+
+impl From<GoalError> for String {
+    fn from(e: GoalError) -> String {
+        e.to_string()
+    }
+}
+
+/// Precompiled dependency structure of a schedule, shared (via [`Arc`])
+/// between a skeleton and every message size rescaled from it.
+///
+/// All arrays are global-op-id indexed; `dep_targets` preserves each op's
+/// dep emission order (the simulator's ready-time fold iterates it), and
+/// `dependents` lists, for every op, the ops waiting on it — in ascending
+/// global-id order, which is exactly the order the old per-simulate CSR
+/// rebuild produced.
+#[derive(Debug, PartialEq)]
+pub struct DepGraph {
+    /// rank → first global op id; `rank_base[p]` = total ops.
+    pub rank_base: Vec<usize>,
+    /// global op id → owning rank.
+    pub op_rank: Vec<u32>,
+    /// Dependency CSR offsets (len total_ops + 1).
+    pub dep_off: Vec<usize>,
+    /// Dependency targets as global op ids, in per-op emission order.
+    pub dep_targets: Vec<u32>,
+    /// Dependents CSR offsets (len total_ops + 1).
+    pub dependents_off: Vec<usize>,
+    /// Dependents as global op ids.
+    pub dependents: Vec<u32>,
+}
+
+/// A complete sealed schedule for `p` ranks moving elements of
+/// `elem_bytes`: the flat arena described in the module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GoalGraph {
+    /// Every op of every rank, rank-major (global-op-id indexed).
+    pub kinds: Vec<OpKind>,
+    /// Shared precompiled dependency structure.
+    pub csr: Arc<DepGraph>,
+    /// All tag spans, rank-major; rank r's spans are
+    /// `tags[tag_off[r]..tag_off[r + 1]]`.
+    pub tags: Vec<TagSpan>,
+    pub tag_off: Vec<usize>,
     pub elem_bytes: usize,
     /// Elements per rank buffer (Input/Output size; Tmp may be larger).
     pub count: usize,
@@ -164,136 +306,476 @@ pub struct Goal {
     pub tmp_count: usize,
 }
 
-impl Goal {
-    pub fn new(p: usize, count: usize, elem_bytes: usize) -> Self {
-        Self {
-            ranks: (0..p).map(|_| RankProgram::default()).collect(),
+/// The historical name for the schedule IR, kept as an alias so call sites
+/// read naturally ("a Goal") while the arena type carries the layout name.
+pub type Goal = GoalGraph;
+
+impl GoalGraph {
+    /// Seal per-rank draft programs into the flat arena, building the
+    /// dependency and dependents CSRs once.
+    ///
+    /// Structural validation (dangling / self / forward deps, peer and
+    /// segment ranges, tag spans) always runs; `check_channels` adds the
+    /// send/recv matching check (skipped by
+    /// [`GoalBuilder::finish_unchecked`](crate::collectives::GoalBuilder::finish_unchecked)
+    /// for intentionally partial test schedules).
+    pub fn assemble(
+        count: usize,
+        elem_bytes: usize,
+        tmp_count: usize,
+        drafts: Vec<ProgramDraft>,
+        check_channels: bool,
+    ) -> Result<GoalGraph, GoalError> {
+        let p = drafts.len();
+        let mut rank_base = Vec::with_capacity(p + 1);
+        rank_base.push(0usize);
+        for d in &drafts {
+            rank_base.push(rank_base[rank_base.len() - 1] + d.ops.len());
+        }
+        let total = rank_base[p];
+
+        let mut kinds = Vec::with_capacity(total);
+        let mut op_rank = Vec::with_capacity(total);
+        let mut dep_off = Vec::with_capacity(total + 1);
+        dep_off.push(0usize);
+        let mut dep_targets: Vec<u32> = Vec::new();
+        let mut tags = Vec::new();
+        let mut tag_off = Vec::with_capacity(p + 1);
+        tag_off.push(0usize);
+
+        for (r, d) in drafts.iter().enumerate() {
+            let base = rank_base[r];
+            let ops = d.ops.len();
+            for (i, (kind, deps)) in d.ops.iter().enumerate() {
+                for &dep in deps {
+                    if dep >= ops {
+                        return Err(GoalError::DanglingDep { rank: r, op: i, dep, ops });
+                    }
+                    if dep == i {
+                        return Err(GoalError::SelfDep { rank: r, op: i });
+                    }
+                    if dep > i {
+                        return Err(GoalError::ForwardDep { rank: r, op: i, dep });
+                    }
+                    dep_targets.push((base + dep) as u32);
+                }
+                dep_off.push(dep_targets.len());
+                kinds.push(*kind);
+                op_rank.push(r as u32);
+            }
+            tags.extend(d.tags.iter().cloned());
+            tag_off.push(tags.len());
+        }
+
+        // Dependents CSR: counts → prefix sums → fill.  Iterating global
+        // ids in ascending order keeps each op's dependent list ascending.
+        let mut cnt = vec![0usize; total];
+        for &t in &dep_targets {
+            cnt[t as usize] += 1;
+        }
+        let mut dependents_off = vec![0usize; total + 1];
+        for g in 0..total {
+            dependents_off[g + 1] = dependents_off[g] + cnt[g];
+        }
+        let mut dependents = vec![0u32; dep_targets.len()];
+        let mut cursor = dependents_off.clone();
+        for g in 0..total {
+            for di in dep_off[g]..dep_off[g + 1] {
+                let d = dep_targets[di] as usize;
+                dependents[cursor[d]] = g as u32;
+                cursor[d] += 1;
+            }
+        }
+
+        let graph = GoalGraph {
+            kinds,
+            csr: Arc::new(DepGraph {
+                rank_base,
+                op_rank,
+                dep_off,
+                dep_targets,
+                dependents_off,
+                dependents,
+            }),
+            tags,
+            tag_off,
             elem_bytes,
             count,
-            tmp_count: 0,
+            tmp_count,
+        };
+        // deps were fully checked in the flattening loop above; only the
+        // op payloads and tag spans remain to validate
+        graph.validate_ops_and_tags()?;
+        if check_channels {
+            graph.validate_channels()?;
         }
+        Ok(graph)
     }
 
     pub fn p(&self) -> usize {
-        self.ranks.len()
+        self.csr.rank_base.len() - 1
     }
 
     pub fn total_ops(&self) -> usize {
-        self.ranks.iter().map(|r| r.ops.len()).sum()
+        self.kinds.len()
+    }
+
+    /// Global op id of rank-local op (r, i).
+    #[inline]
+    pub fn gid(&self, r: usize, i: usize) -> usize {
+        self.csr.rank_base[r] + i
+    }
+
+    /// Owning rank of a global op id.
+    #[inline]
+    pub fn rank_of(&self, g: usize) -> usize {
+        self.csr.op_rank[g] as usize
+    }
+
+    /// Rank r's ops as a contiguous slice of the arena.
+    #[inline]
+    pub fn ops(&self, r: usize) -> &[OpKind] {
+        &self.kinds[self.csr.rank_base[r]..self.csr.rank_base[r + 1]]
+    }
+
+    /// Dependencies of global op `g` (global ids, emission order).
+    #[inline]
+    pub fn deps(&self, g: usize) -> &[u32] {
+        &self.csr.dep_targets[self.csr.dep_off[g]..self.csr.dep_off[g + 1]]
+    }
+
+    #[inline]
+    pub fn dep_count(&self, g: usize) -> u32 {
+        (self.csr.dep_off[g + 1] - self.csr.dep_off[g]) as u32
+    }
+
+    /// Ops waiting on global op `g` (precompiled at seal time).
+    #[inline]
+    pub fn dependents(&self, g: usize) -> &[u32] {
+        &self.csr.dependents[self.csr.dependents_off[g]..self.csr.dependents_off[g + 1]]
+    }
+
+    /// Rank-local dependency ids of op (r, i) — serialization and tests.
+    pub fn deps_local(&self, r: usize, i: usize) -> Vec<OpId> {
+        let base = self.csr.rank_base[r];
+        self.deps(base + i).iter().map(|&d| d as usize - base).collect()
+    }
+
+    /// Rank r's tag spans.
+    #[inline]
+    pub fn rank_tags(&self, r: usize) -> &[TagSpan] {
+        &self.tags[self.tag_off[r]..self.tag_off[r + 1]]
     }
 
     /// Total bytes crossing the wire (sum over Send ops).
     pub fn total_wire_bytes(&self) -> usize {
-        self.ranks
-            .iter()
-            .flat_map(|r| r.ops.iter())
-            .map(|o| o.kind.wire_bytes(self.elem_bytes))
-            .sum()
+        self.kinds.iter().map(|k| k.wire_bytes(self.elem_bytes)).sum()
     }
 
-    /// Structural sanity: every Send has exactly one matching Recv with the
-    /// same (peer, tag, len) and vice versa; deps are in range and acyclic
-    /// (guaranteed by construction: deps only point backwards).
-    pub fn validate(&self) -> Result<(), String> {
-        use std::collections::HashMap;
-        let mut sends: HashMap<(usize, usize, u32), Vec<usize>> = HashMap::new();
-        let mut recvs: HashMap<(usize, usize, u32), Vec<usize>> = HashMap::new();
-        for (r, prog) in self.ranks.iter().enumerate() {
-            for (i, op) in prog.ops.iter().enumerate() {
-                for &d in &op.deps {
-                    if d >= i {
-                        return Err(format!("rank {r} op {i}: forward dep {d}"));
+    /// Structural checks: deps point strictly backwards within the rank,
+    /// peers are in range, segments fit their buffers, tag spans are sane.
+    pub fn validate_structure(&self) -> Result<(), GoalError> {
+        self.validate_deps()?;
+        self.validate_ops_and_tags()
+    }
+
+    /// Dependency walk over the flat CSR (backwards, same-rank, no
+    /// self-deps).  [`assemble`](GoalGraph::assemble) skips this — the
+    /// flattening loop already enforces it — but hand-assembled or mutated
+    /// graphs go through it via [`validate`](GoalGraph::validate).
+    fn validate_deps(&self) -> Result<(), GoalError> {
+        for r in 0..self.p() {
+            let base = self.csr.rank_base[r];
+            let ops = self.ops(r).len();
+            for i in 0..ops {
+                let g = base + i;
+                for &d in self.deps(g) {
+                    let d = d as usize;
+                    if d < base || d >= base + ops {
+                        return Err(GoalError::CrossRankDep { rank: r, op: i, dep: d });
                     }
-                }
-                match &op.kind {
-                    OpKind::Send { peer, seg, tag } => {
-                        if *peer >= self.p() {
-                            return Err(format!("rank {r} op {i}: bad peer {peer}"));
-                        }
-                        sends.entry((r, *peer, *tag)).or_default().push(seg.len);
+                    if d == g {
+                        return Err(GoalError::SelfDep { rank: r, op: i });
                     }
-                    OpKind::Recv { peer, seg, tag } => {
-                        if *peer >= self.p() {
-                            return Err(format!("rank {r} op {i}: bad peer {peer}"));
-                        }
-                        recvs.entry((*peer, r, *tag)).or_default().push(seg.len);
-                    }
-                    _ => {}
-                }
-            }
-            for t in &prog.tags {
-                if t.first > t.last || t.last >= prog.ops.len().max(1) {
-                    return Err(format!("rank {r}: bad tag span {t:?}"));
-                }
-            }
-        }
-        if sends.len() != recvs.len() {
-            return Err(format!("unmatched channels: {} send vs {} recv", sends.len(), recvs.len()));
-        }
-        for (k, s_lens) in &sends {
-            match recvs.get(k) {
-                None => return Err(format!("send {k:?} has no recv")),
-                Some(r_lens) => {
-                    if s_lens != r_lens {
-                        return Err(format!("channel {k:?}: len mismatch {s_lens:?} vs {r_lens:?}"));
+                    if d > g {
+                        return Err(GoalError::ForwardDep { rank: r, op: i, dep: d - base });
                     }
                 }
             }
         }
         Ok(())
     }
+
+    /// Op payload (peer / segment range) and tag-span checks.
+    fn validate_ops_and_tags(&self) -> Result<(), GoalError> {
+        let p = self.p();
+        for r in 0..p {
+            let base = self.csr.rank_base[r];
+            let ops = self.ops(r).len();
+            for i in 0..ops {
+                let g = base + i;
+                let check_seg = |seg: &Seg| -> Result<(), GoalError> {
+                    let cap = match seg.buf {
+                        Buf::Input | Buf::Output => self.count,
+                        Buf::Tmp => self.tmp_count,
+                    };
+                    // checked_add: a hostile off/len pair must not wrap
+                    // past the cap comparison in release builds
+                    if seg.off.checked_add(seg.len).map_or(true, |end| end > cap) {
+                        return Err(GoalError::SegOutOfRange {
+                            rank: r,
+                            op: i,
+                            buf: seg.buf,
+                            off: seg.off,
+                            len: seg.len,
+                            cap,
+                        });
+                    }
+                    Ok(())
+                };
+                match &self.kinds[g] {
+                    OpKind::Send { peer, seg, .. } | OpKind::Recv { peer, seg, .. } => {
+                        if *peer >= p {
+                            return Err(GoalError::BadPeer { rank: r, op: i, peer: *peer, p });
+                        }
+                        check_seg(seg)?;
+                    }
+                    OpKind::Reduce { dst, src, .. } | OpKind::Copy { dst, src } => {
+                        check_seg(dst)?;
+                        check_seg(src)?;
+                    }
+                    OpKind::Calc { .. } => {}
+                }
+            }
+            for t in self.rank_tags(r) {
+                if t.first > t.last || t.last >= ops.max(1) {
+                    return Err(GoalError::BadTagSpan {
+                        rank: r,
+                        name: t.name.clone(),
+                        first: t.first,
+                        last: t.last,
+                        ops,
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Channel matching: every (src, dst, tag) channel's ordered send
+    /// lengths must equal its ordered recv lengths.
+    pub fn validate_channels(&self) -> Result<(), GoalError> {
+        use std::collections::HashMap;
+        let mut sends: HashMap<(usize, usize, u32), Vec<usize>> = HashMap::new();
+        let mut recvs: HashMap<(usize, usize, u32), Vec<usize>> = HashMap::new();
+        for r in 0..self.p() {
+            for kind in self.ops(r) {
+                match kind {
+                    OpKind::Send { peer, seg, tag } => {
+                        sends.entry((r, *peer, *tag)).or_default().push(seg.len);
+                    }
+                    OpKind::Recv { peer, seg, tag } => {
+                        recvs.entry((*peer, r, *tag)).or_default().push(seg.len);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        if sends.len() != recvs.len() {
+            return Err(GoalError::UnbalancedChannels { sends: sends.len(), recvs: recvs.len() });
+        }
+        for (&(src, dst, tag), s_lens) in &sends {
+            match recvs.get(&(src, dst, tag)) {
+                None => return Err(GoalError::UnmatchedSend { src, dst, tag }),
+                Some(r_lens) => {
+                    if s_lens != r_lens {
+                        return Err(GoalError::ChannelLenMismatch { src, dst, tag });
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Structural + channel validation (what sealing and the GOAL-text
+    /// parser run).
+    pub fn validate(&self) -> Result<(), GoalError> {
+        self.validate_structure()?;
+        self.validate_channels()
+    }
+
+    /// Rescale this schedule to `m ×` its element count: every segment
+    /// offset/length, `count` and `tmp_count` are multiplied by `m`; the
+    /// dependency CSR, tags and op structure are *shared* (`Arc`), not
+    /// rebuilt.
+    ///
+    /// Only valid for schedules whose generator derives every segment
+    /// linearly from [`chunk`](crate::collectives::chunk)-style boundaries
+    /// of the count — see `collectives::count_scalable` for the audited
+    /// list; `rust/tests/prop_invariants.rs` asserts the rescaled graph is
+    /// bit-identical to a direct generation at the target count.
+    pub fn rescaled(&self, m: usize) -> GoalGraph {
+        GoalGraph {
+            kinds: self.kinds.iter().map(|k| k.scaled(m)).collect(),
+            csr: Arc::clone(&self.csr),
+            tags: self.tags.clone(),
+            tag_off: self.tag_off.clone(),
+            elem_bytes: self.elem_bytes,
+            count: self.count * m,
+            tmp_count: self.tmp_count * m,
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collectives::{allreduce, GenParams, GoalBuilder};
 
-    fn tiny_goal() -> Goal {
+    fn tiny_goal() -> GoalGraph {
         // rank0 sends 4 elems to rank1
-        let mut g = Goal::new(2, 4, 4);
-        g.ranks[0].ops.push(Op {
-            kind: OpKind::Send { peer: 1, seg: Seg::input(0, 4), tag: 0 },
-            deps: vec![],
-        });
-        g.ranks[1].ops.push(Op {
-            kind: OpKind::Recv { peer: 0, seg: Seg::output(0, 4), tag: 0 },
-            deps: vec![],
-        });
-        g
+        let mut b = GoalBuilder::new(2, 4, 4);
+        b.send(0, 1, Seg::input(0, 4));
+        b.recv(1, 0, Seg::output(0, 4));
+        b.finish().unwrap()
     }
 
     #[test]
     fn validate_ok() {
-        assert!(tiny_goal().validate().is_ok());
+        assert_eq!(tiny_goal().validate(), Ok(()));
     }
 
     #[test]
     fn validate_detects_missing_recv() {
-        let mut g = tiny_goal();
-        g.ranks[1].ops.clear();
-        assert!(g.validate().is_err());
+        let mut b = GoalBuilder::new(2, 4, 4);
+        b.send(0, 1, Seg::input(0, 4));
+        let g = b.finish_unchecked();
+        assert!(matches!(g.validate(), Err(GoalError::UnbalancedChannels { .. })));
     }
 
     #[test]
     fn validate_detects_len_mismatch() {
-        let mut g = tiny_goal();
-        if let OpKind::Recv { seg, .. } = &mut g.ranks[1].ops[0].kind {
-            seg.len = 2;
-        }
-        assert!(g.validate().is_err());
+        let mut b = GoalBuilder::new(2, 4, 4);
+        b.send(0, 1, Seg::input(0, 4));
+        b.recv(1, 0, Seg::output(0, 2));
+        let g = b.finish_unchecked();
+        assert!(matches!(g.validate(), Err(GoalError::ChannelLenMismatch { .. })));
     }
 
     #[test]
-    fn validate_detects_forward_dep() {
-        let mut g = tiny_goal();
-        g.ranks[0].ops[0].deps.push(5);
-        assert!(g.validate().is_err());
+    fn assemble_rejects_forward_self_and_dangling_deps() {
+        let draft = |deps: Vec<OpId>| {
+            vec![ProgramDraft {
+                ops: vec![
+                    (OpKind::Calc { seconds: 0.0 }, vec![]),
+                    (OpKind::Calc { seconds: 0.0 }, deps),
+                ],
+                tags: vec![],
+            }]
+        };
+        assert!(matches!(
+            GoalGraph::assemble(4, 4, 0, draft(vec![5]), false),
+            Err(GoalError::DanglingDep { .. })
+        ));
+        assert!(matches!(
+            GoalGraph::assemble(4, 4, 0, draft(vec![1]), false),
+            Err(GoalError::SelfDep { .. })
+        ));
+        let forward = vec![ProgramDraft {
+            ops: vec![
+                (OpKind::Calc { seconds: 0.0 }, vec![1]),
+                (OpKind::Calc { seconds: 0.0 }, vec![]),
+            ],
+            tags: vec![],
+        }];
+        assert!(matches!(
+            GoalGraph::assemble(4, 4, 0, forward, false),
+            Err(GoalError::ForwardDep { .. })
+        ));
+        assert_eq!(GoalGraph::assemble(4, 4, 0, draft(vec![0]), false).unwrap().total_ops(), 2);
+    }
+
+    #[test]
+    fn assemble_rejects_bad_peer_and_seg() {
+        let mk = |kind: OpKind| {
+            GoalGraph::assemble(
+                4,
+                4,
+                0,
+                vec![ProgramDraft { ops: vec![(kind, vec![])], tags: vec![] }],
+                false,
+            )
+        };
+        assert!(matches!(
+            mk(OpKind::Send { peer: 3, seg: Seg::input(0, 4), tag: 0 }),
+            Err(GoalError::BadPeer { .. })
+        ));
+        assert!(matches!(
+            mk(OpKind::Copy { dst: Seg::output(2, 4), src: Seg::input(0, 4) }),
+            Err(GoalError::SegOutOfRange { .. })
+        ));
+        assert!(matches!(
+            mk(OpKind::Copy { dst: Seg::output(0, 4), src: Seg::tmp(0, 1) }),
+            Err(GoalError::SegOutOfRange { .. })
+        ));
+        // hostile offsets must not wrap past the capacity check
+        assert!(matches!(
+            mk(OpKind::Copy { dst: Seg::output(usize::MAX - 1, 4), src: Seg::input(0, 4) }),
+            Err(GoalError::SegOutOfRange { .. })
+        ));
     }
 
     #[test]
     fn wire_bytes_counts_sends_once() {
         let g = tiny_goal();
         assert_eq!(g.total_wire_bytes(), 16);
+    }
+
+    #[test]
+    fn arena_accessors_agree_with_layout() {
+        let g = collectives_goal();
+        let mut seen = 0usize;
+        for r in 0..g.p() {
+            for (i, _) in g.ops(r).iter().enumerate() {
+                let gid = g.gid(r, i);
+                assert_eq!(g.rank_of(gid), r);
+                seen += 1;
+            }
+        }
+        assert_eq!(seen, g.total_ops());
+    }
+
+    fn collectives_goal() -> GoalGraph {
+        allreduce::rabenseifner(&GenParams::new(8, 64)).unwrap()
+    }
+
+    #[test]
+    fn dependents_csr_mirrors_deps() {
+        let g = collectives_goal();
+        let mut pairs_fwd = Vec::new();
+        let mut pairs_bwd = Vec::new();
+        for gi in 0..g.total_ops() {
+            for &d in g.deps(gi) {
+                pairs_fwd.push((d as usize, gi));
+            }
+            for &dep_g in g.dependents(gi) {
+                pairs_bwd.push((gi, dep_g as usize));
+            }
+        }
+        pairs_fwd.sort_unstable();
+        pairs_bwd.sort_unstable();
+        assert_eq!(pairs_fwd, pairs_bwd);
+        assert_eq!(g.csr.dep_targets.len(), g.csr.dependents.len());
+    }
+
+    #[test]
+    fn rescaled_matches_direct_generation() {
+        let p = 4;
+        let base = allreduce::ring(&GenParams::new(p, p)).unwrap();
+        let direct = allreduce::ring(&GenParams::new(p, 12 * p)).unwrap();
+        let scaled = base.rescaled(12);
+        assert_eq!(scaled, direct);
+        assert!(Arc::ptr_eq(&scaled.csr, &base.csr), "CSR must be shared, not rebuilt");
     }
 
     #[test]

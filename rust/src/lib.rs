@@ -73,5 +73,5 @@ pub mod tracer;
 pub mod tuning;
 pub mod util;
 
-pub use goal::{Goal, Op, OpKind, Seg};
+pub use goal::{Goal, GoalError, GoalGraph, OpKind, Seg};
 pub use topology::{Allocation, Placement, SystemProfile, Tier};

@@ -32,15 +32,31 @@
 //! no new ones start, and the campaign returns the error of the *lowest*
 //! failing index — the same error a serial run would have reported — never
 //! hanging the pool.
+//!
+//! # Schedule cache
+//!
+//! Every campaign owns a [`ScheduleCache`] shared by all workers: sealed
+//! [`Goal`] arenas are memoized by everything that determines them
+//! (backend, collective, algorithm, p, count, op, root, segsize,
+//! instrumentation), and for count-scalable algorithms a **byte-agnostic
+//! skeleton** built once at `count = p` is rescaled per message size — a
+//! sweep over sizes compiles each schedule's dependency CSR once instead
+//! of once per point.  Multi-campaign drivers (tuning, replay, benches)
+//! can share one cache across campaigns via
+//! [`run_campaign_jobs_cached`]; entries never go stale because the key
+//! covers every generator input and schedules are topology-independent
+//! (invalidation rules in DESIGN.md §IR).
 
+use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc, Mutex};
 
-use crate::backends::{schedule_effective, Backend};
+use crate::backends::{self, Backend};
 use crate::collectives::{Coll, GenParams};
 use crate::config::{resolve, EnvSpec, TestPoint, TestSpec};
+use crate::goal::{Goal, ReduceOp};
 use crate::metadata;
 use crate::netmodel::Proto;
 use crate::results::{Granularity, Measurement, OrderedRecordSink, Record, RunDir};
@@ -70,17 +86,179 @@ pub fn effective_count(coll: Coll, bytes: usize, p: usize) -> usize {
     }
 }
 
-/// Run one resolved test point.
-///
-/// Re-entrant by construction: every invocation builds its own allocation,
-/// placement, skew profile and `SimContext`, so the parallel engine calls
-/// this concurrently from N workers without synchronization.
+/// Cache key: every input the schedule generators read.  `skeleton`
+/// entries hold the byte-agnostic template (always built at `count = p`).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct CacheKey {
+    backend: &'static str,
+    coll: Coll,
+    algo: String,
+    p: usize,
+    count: usize,
+    elem_bytes: usize,
+    op: ReduceOp,
+    root: usize,
+    segsize: Option<usize>,
+    instrument: bool,
+    skeleton: bool,
+}
+
+impl CacheKey {
+    fn new(backend: &'static str, coll: Coll, algo: &str, params: &GenParams) -> Self {
+        Self {
+            backend,
+            coll,
+            algo: algo.to_string(),
+            p: params.p,
+            count: params.count,
+            elem_bytes: params.elem_bytes,
+            op: params.op,
+            root: params.root,
+            segsize: params.segsize,
+            instrument: params.instrument,
+            skeleton: false,
+        }
+    }
+}
+
+/// Counters for [`ScheduleCache::stats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Exact-key lookups served from the cache.
+    pub hits: usize,
+    /// Exact-key lookups that had to build (directly or from a skeleton).
+    pub misses: usize,
+    /// Misses served by rescaling a byte-agnostic skeleton (no generator
+    /// run, no CSR compilation).
+    pub rescales: usize,
+}
+
+#[derive(Default)]
+struct CacheInner {
+    goals: HashMap<CacheKey, Arc<Goal>>,
+    stats: CacheStats,
+}
+
+/// Cross-point schedule cache (see the module docs).  Cheap to construct,
+/// `Sync` — one instance is shared by reference across all campaign
+/// workers; lookups hold the lock only around map access, generation runs
+/// outside it.
+#[derive(Default)]
+pub struct ScheduleCache {
+    inner: Mutex<CacheInner>,
+}
+
+impl ScheduleCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Produce the sealed schedule for `(coll, algo)` at `params` through
+    /// the cache.
+    ///
+    /// Resolution order: exact key hit → rescale from a byte-agnostic
+    /// skeleton (count-scalable algorithms with `count % p == 0` and no
+    /// explicit segsize; the skeleton is generated once at `count = p`) →
+    /// direct generation.  The rescale path is bit-transparent: the
+    /// returned graph equals a direct generation at the requested count
+    /// (property-tested in `rust/tests/prop_invariants.rs`).
+    pub fn schedule(
+        &self,
+        backend: &dyn Backend,
+        coll: Coll,
+        algo: &str,
+        params: &GenParams,
+    ) -> Result<Arc<Goal>, String> {
+        let key = CacheKey::new(backend.name(), coll, algo, params);
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(g) = inner.goals.get(&key) {
+                inner.stats.hits += 1;
+                return Ok(g.clone());
+            }
+            inner.stats.misses += 1;
+        }
+        let scalable = params.segsize.is_none()
+            && params.p > 0
+            && params.count > 0
+            && params.count % params.p == 0
+            && backend.count_scalable(coll, algo, params.p);
+        let goal = if scalable {
+            let skel_key = CacheKey { skeleton: true, count: 0, ..key.clone() };
+            let skel = {
+                let inner = self.inner.lock().unwrap();
+                inner.goals.get(&skel_key).cloned()
+            };
+            let skel = match skel {
+                Some(s) => s,
+                None => {
+                    let sk_params = GenParams { count: params.p, ..params.clone() };
+                    let g = Arc::new(backend.schedule(coll, algo, &sk_params)?);
+                    self.inner.lock().unwrap().goals.insert(skel_key, g.clone());
+                    g
+                }
+            };
+            let m = params.count / params.p;
+            if m == 1 {
+                skel
+            } else {
+                self.inner.lock().unwrap().stats.rescales += 1;
+                Arc::new(skel.rescaled(m))
+            }
+        } else {
+            Arc::new(backend.schedule(coll, algo, params)?)
+        };
+        self.inner.lock().unwrap().goals.insert(key, goal.clone());
+        Ok(goal)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Number of cached entries (exact + skeleton).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().goals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every entry (the explicit invalidation hook; normally
+    /// unnecessary — see the module docs on key coverage).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.goals.clear();
+        inner.stats = CacheStats::default();
+    }
+}
+
+/// [`run_point_cached`] with a private single-use cache — for callers
+/// outside a campaign (probes, tests).
 pub fn run_point(
     backend: &dyn Backend,
     profile: &SystemProfile,
     env: &EnvSpec,
     spec: &TestSpec,
     point: &TestPoint,
+) -> Result<PointOutcome, String> {
+    run_point_cached(backend, profile, env, spec, point, &ScheduleCache::new())
+}
+
+/// Run one resolved test point, sourcing its schedule from `cache`.
+///
+/// Re-entrant by construction: every invocation builds its own allocation,
+/// placement, skew profile and `SimContext`, so the parallel engine calls
+/// this concurrently from N workers without synchronization (the shared
+/// cache synchronizes internally).
+pub fn run_point_cached(
+    backend: &dyn Backend,
+    profile: &SystemProfile,
+    env: &EnvSpec,
+    spec: &TestSpec,
+    point: &TestPoint,
+    cache: &ScheduleCache,
 ) -> Result<PointOutcome, String> {
     let alloc_seed = spec.seed ^ (point.nodes as u64).wrapping_mul(0x9E37_79B9);
     let alloc = Allocation::new(profile, point.nodes, env.alloc_policy, alloc_seed);
@@ -92,8 +270,14 @@ pub fn run_point(
         instrument: spec.instrument,
         ..GenParams::new(p, count)
     };
-    let (goal, effective_algorithm) =
-        schedule_effective(backend, point.collective, point.algorithm.as_deref(), &params, point.ppn)?;
+    let effective_algorithm = backends::resolve_algorithm(
+        backend,
+        point.collective,
+        point.algorithm.as_deref(),
+        &params,
+        point.ppn,
+    );
+    let goal = cache.schedule(backend, point.collective, &effective_algorithm, &params)?;
 
     // protocol: explicit knob wins; otherwise the backend's own default
     let mut cfg = point.net_cfg;
@@ -329,6 +513,20 @@ pub fn run_campaign_jobs(
     out_dir: Option<&Path>,
     jobs: usize,
 ) -> Result<Vec<PointOutcome>, String> {
+    run_campaign_jobs_cached(spec, env, out_dir, jobs, &ScheduleCache::new())
+}
+
+/// [`run_campaign_jobs`] with a caller-owned [`ScheduleCache`], so
+/// multi-campaign drivers (tuning sweeps, replay harnesses, benches) reuse
+/// skeletons across campaigns.  Caching is result-transparent: outcomes
+/// are identical with a cold, warm or absent-entry cache.
+pub fn run_campaign_jobs_cached(
+    spec: &TestSpec,
+    env: &EnvSpec,
+    out_dir: Option<&Path>,
+    jobs: usize,
+    cache: &ScheduleCache,
+) -> Result<Vec<PointOutcome>, String> {
     let (points, backend) = resolve(spec, env)?;
     let profile = env.profile()?;
     let mut run_dir = match out_dir {
@@ -363,7 +561,7 @@ pub fn run_campaign_jobs(
         parallel_ordered(
             &points,
             jobs,
-            |_, point| run_point(backend_ref, &profile, env, spec, point),
+            |_, point| run_point_cached(backend_ref, &profile, env, spec, point, cache),
             |i, outcome| {
                 if let Some(sink) = sink.as_mut() {
                     let rec = make_record(i, spec, backend_ref.name(), outcome);
@@ -524,6 +722,62 @@ mod tests {
         let par = parallel_ordered(&items, 4, f, |_, _| Ok(())).unwrap_err();
         assert_eq!(serial, "fail 20");
         assert_eq!(par, serial);
+    }
+
+    #[test]
+    fn schedule_cache_hits_and_rescales() {
+        use crate::backends::LibPico;
+        let cache = ScheduleCache::new();
+        let b = LibPico;
+        let p = 4;
+        // first request: builds the skeleton (count = p) and rescales
+        let small = cache.schedule(&b, Coll::Allreduce, "ring", &GenParams::new(p, 8 * p)).unwrap();
+        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 1, rescales: 1 });
+        // same size again: exact hit, same shared instance
+        let again = cache.schedule(&b, Coll::Allreduce, "ring", &GenParams::new(p, 8 * p)).unwrap();
+        assert!(Arc::ptr_eq(&small, &again));
+        assert_eq!(cache.stats().hits, 1);
+        // a different size reuses the skeleton: CSR shared, segments scaled
+        let big = cache.schedule(&b, Coll::Allreduce, "ring", &GenParams::new(p, 32 * p)).unwrap();
+        assert!(Arc::ptr_eq(&small.csr, &big.csr), "skeleton CSR must be shared");
+        assert_eq!(cache.stats().rescales, 2);
+        // rescale transparency: equals a direct generation
+        let direct = b.schedule(Coll::Allreduce, "ring", &GenParams::new(p, 32 * p)).unwrap();
+        assert_eq!(*big, direct);
+    }
+
+    #[test]
+    fn schedule_cache_falls_back_for_unscalable_counts() {
+        use crate::backends::LibPico;
+        let cache = ScheduleCache::new();
+        // count not divisible by p: direct generation, still correct
+        let g = cache.schedule(&LibPico, Coll::Allreduce, "ring", &GenParams::new(4, 7)).unwrap();
+        let direct = LibPico.schedule(Coll::Allreduce, "ring", &GenParams::new(4, 7)).unwrap();
+        assert_eq!(*g, direct);
+        assert_eq!(cache.stats().rescales, 0);
+    }
+
+    #[test]
+    fn campaign_shared_cache_is_result_transparent() {
+        let mut spec = TestSpec::new("cachecheck", "openmpi", Coll::Allreduce);
+        spec.sizes = vec![4096, 64 * 1024, 1 << 20];
+        spec.nodes = vec![4];
+        spec.algorithms = vec!["ring".into(), "rabenseifner".into()];
+        spec.iterations = 2;
+        spec.warmup = 0;
+        let env = EnvSpec::for_system("leonardo");
+        let cold = run_campaign_jobs(&spec, &env, None, 1).unwrap();
+        let cache = ScheduleCache::new();
+        let warm1 = run_campaign_jobs_cached(&spec, &env, None, 1, &cache).unwrap();
+        let warm2 = run_campaign_jobs_cached(&spec, &env, None, 4, &cache).unwrap();
+        assert!(cache.stats().hits > 0, "second campaign must hit the shared cache");
+        for (a, b) in cold.iter().zip(&warm1) {
+            assert_eq!(a.median_s, b.median_s);
+            assert_eq!(a.measurement.times, b.measurement.times);
+        }
+        for (a, b) in cold.iter().zip(&warm2) {
+            assert_eq!(a.median_s, b.median_s);
+        }
     }
 
     #[test]

@@ -18,17 +18,22 @@
 //! The engine is fully deterministic: identical inputs produce identical
 //! virtual timelines (asserted by tests), satisfying reproducibility (R5).
 //!
-//! It is also re-entrant: [`simulate`] keeps all mutable state (resource
-//! pools, event heap, channel queues) on its own stack, and a
-//! [`SimContext`] only borrows shared immutable inputs — so the parallel
-//! campaign engine (`orchestrator`) constructs one context per worker per
-//! point and simulates concurrently with no synchronization.  `SimContext`
-//! is `Send` and the borrowed `SystemProfile`/`Placement` are `Sync`
-//! (compile-time asserted in the tests below).
+//! The dependency graph arrives **precompiled**: the [`Goal`] arena carries
+//! the dependents CSR built once at sealing time (`goal.rs` §Arena
+//! layout), so each `simulate` call allocates only its own per-run state
+//! (pending counters, start/finish times, the event heap and channel
+//! queues) — the per-invocation CSR rebuild that used to dominate sweep
+//! hot paths is gone (DESIGN.md §IR).
+//!
+//! It is also re-entrant: [`simulate`] keeps all mutable state on its own
+//! stack, and a [`SimContext`] only borrows shared immutable inputs — so
+//! the parallel campaign engine (`orchestrator`) constructs one context per
+//! worker per point and simulates concurrently with no synchronization.
+//! `SimContext` is `Send` and the borrowed `SystemProfile`/`Placement` are
+//! `Sync` (compile-time asserted in the tests below).
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
-
 
 use crate::goal::{Goal, OpKind};
 use crate::netmodel::{NetConfig, NetParams};
@@ -150,8 +155,8 @@ type ChannelKey = (u32, u32, u32); // (src, dst, tag)
 
 #[derive(Default)]
 struct Channel {
-    sends: VecDeque<(usize, usize, f64)>, // (rank, op, ready time)
-    recvs: VecDeque<(usize, usize, f64)>,
+    sends: VecDeque<(usize, f64)>, // (global op id, ready time)
+    recvs: VecDeque<(usize, f64)>,
 }
 
 /// Run `goal` on the modelled cluster.
@@ -199,52 +204,22 @@ pub fn simulate(goal: &Goal, ctx: &SimContext) -> SimReport {
         .collect();
     let mut uplink_rx: Vec<Resource> = uplink_tx.clone();
 
-    // ---- dependency bookkeeping -------------------------------------------
-    // Flat (CSR) layout: per-op state is indexed by a global op id, and the
-    // dependents graph lives in two flat arrays — no per-op allocations
-    // (this was the event loop's dominant cost; see DESIGN.md §Perf).
-    let mut base = vec![0usize; p + 1]; // rank → first global op id
-    for r in 0..p {
-        base[r + 1] = base[r] + goal.ranks[r].ops.len();
-    }
-    let total_ops = base[p];
-    let gid = |r: usize, i: usize| base[r] + i;
-
-    let mut pending = vec![0u32; total_ops];
-    let mut dep_count = vec![0u32; total_ops]; // dependents per op (CSR sizes)
-    for (r, prog) in goal.ranks.iter().enumerate() {
-        for (i, op) in prog.ops.iter().enumerate() {
-            pending[gid(r, i)] = op.deps.len() as u32;
-            for &d in &op.deps {
-                dep_count[gid(r, d)] += 1;
-            }
-        }
-    }
-    let mut dep_off = vec![0usize; total_ops + 1];
-    for g in 0..total_ops {
-        dep_off[g + 1] = dep_off[g] + dep_count[g] as usize;
-    }
-    let mut dependents = vec![0u32; dep_off[total_ops]];
-    let mut cursor = dep_off.clone();
-    for (r, prog) in goal.ranks.iter().enumerate() {
-        for (i, op) in prog.ops.iter().enumerate() {
-            for &d in &op.deps {
-                let dg = gid(r, d);
-                dependents[cursor[dg]] = gid(r, i) as u32;
-                cursor[dg] += 1;
-            }
-        }
-    }
+    // ---- per-run state ----------------------------------------------------
+    // The dependents CSR is precompiled in the Goal arena (built once at
+    // sealing); here we only allocate this run's mutable progress arrays.
+    let total_ops = goal.total_ops();
+    let mut pending: Vec<u32> = (0..total_ops).map(|g| goal.dep_count(g)).collect();
     let mut finish = vec![f64::NAN; total_ops];
     let mut start = vec![f64::NAN; total_ops];
 
-    let mut heap: BinaryHeap<Reverse<(TimeKey, usize, usize)>> =
+    let mut heap: BinaryHeap<Reverse<(TimeKey, usize)>> =
         BinaryHeap::with_capacity(total_ops / 4 + 16);
     for r in 0..p {
         let t0 = ctx.start_times.map_or(0.0, |s| s[r]);
-        for (i, op) in goal.ranks[r].ops.iter().enumerate() {
-            if op.deps.is_empty() {
-                heap.push(Reverse((TimeKey(t0), r, i)));
+        for i in 0..goal.ops(r).len() {
+            let g = goal.gid(r, i);
+            if pending[g] == 0 {
+                heap.push(Reverse((TimeKey(t0), g)));
             }
         }
     }
@@ -253,107 +228,114 @@ pub fn simulate(goal: &Goal, ctx: &SimContext) -> SimReport {
         HashMap::with_capacity_and_hasher(64, Default::default());
     let mut events = 0usize;
 
-    // Completion helper: mark op finished, release dependents.
+    // Completion helper: mark op finished, release dependents (straight
+    // walk of the precompiled dependents CSR).
     macro_rules! complete {
-        ($heap:ident, $r:expr, $i:expr, $t_start:expr, $t_end:expr) => {{
-            let g = gid($r, $i);
+        ($heap:ident, $g:expr, $t_start:expr, $t_end:expr) => {{
+            let g: usize = $g;
             start[g] = $t_start;
             finish[g] = $t_end;
-            for di in dep_off[g]..dep_off[g + 1] {
-                let dep_g = dependents[di] as usize;
-                pending[dep_g] -= 1;
-                if pending[dep_g] == 0 {
-                    let dep_i = dep_g - base[$r];
-                    let ready = goal.ranks[$r].ops[dep_i]
-                        .deps
+            for &dg in goal.dependents(g) {
+                let dg = dg as usize;
+                pending[dg] -= 1;
+                if pending[dg] == 0 {
+                    let ready = goal
+                        .deps(dg)
                         .iter()
-                        .map(|&d| finish[base[$r] + d])
+                        .map(|&d| finish[d as usize])
                         .fold(0.0f64, f64::max);
-                    $heap.push(Reverse((TimeKey(ready), $r, dep_i)));
+                    $heap.push(Reverse((TimeKey(ready), dg)));
                 }
             }
         }};
     }
 
-    while let Some(Reverse((TimeKey(t), r, i))) = heap.pop() {
+    while let Some(Reverse((TimeKey(t), g))) = heap.pop() {
         events += 1;
-        let kind = goal.ranks[r].ops[i].kind;
+        let r = goal.rank_of(g);
+        let kind = goal.kinds[g];
         match kind {
             OpKind::Calc { seconds } => {
-                complete!(heap, r, i, t, t + seconds);
+                complete!(heap, g, t, t + seconds);
             }
             OpKind::Copy { src, .. } => {
                 let dur = mem.copy_time(src.bytes(goal.elem_bytes));
-                complete!(heap, r, i, t, t + dur);
+                complete!(heap, g, t, t + dur);
             }
             OpKind::Reduce { src, .. } => {
                 let dur = mem.reduce_time(src.bytes(goal.elem_bytes));
-                complete!(heap, r, i, t, t + dur);
+                complete!(heap, g, t, t + dur);
             }
             OpKind::Send { peer, seg, tag } => {
                 let key = (r as u32, peer as u32, tag);
                 let ch = channels.entry(key).or_default();
-                if let Some((rr, ri, rt)) = ch.recvs.pop_front() {
+                if let Some((rg, rt)) = ch.recvs.pop_front() {
+                    let rr = goal.rank_of(rg);
                     let bytes = seg.bytes(goal.elem_bytes);
                     let (s_fin, r_fin, s_start, r_start) = transfer(
                         net, &ctx.cfg, ctx.placement, ctx.profile, rails, r, rr, bytes, t, rt,
                         &node_idx, &group_idx, &mut nic_tx, &mut nic_rx, &mut fabric,
                         &mut uplink_tx, &mut uplink_rx,
                     );
-                    complete!(heap, r, i, s_start, s_fin);
-                    complete!(heap, rr, ri, r_start, r_fin);
+                    complete!(heap, g, s_start, s_fin);
+                    complete!(heap, rg, r_start, r_fin);
                 } else {
-                    ch.sends.push_back((r, i, t));
+                    ch.sends.push_back((g, t));
                 }
             }
             OpKind::Recv { peer, seg, tag } => {
                 let key = (peer as u32, r as u32, tag);
                 let ch = channels.entry(key).or_default();
-                if let Some((sr, si, st)) = ch.sends.pop_front() {
+                if let Some((sg, st)) = ch.sends.pop_front() {
+                    let sr = goal.rank_of(sg);
                     let bytes = seg.bytes(goal.elem_bytes);
                     let (s_fin, r_fin, s_start, r_start) = transfer(
                         net, &ctx.cfg, ctx.placement, ctx.profile, rails, sr, r, bytes, st, t,
                         &node_idx, &group_idx, &mut nic_tx, &mut nic_rx, &mut fabric,
                         &mut uplink_tx, &mut uplink_rx,
                     );
-                    complete!(heap, sr, si, s_start, s_fin);
-                    complete!(heap, r, i, r_start, r_fin);
+                    complete!(heap, sg, s_start, s_fin);
+                    complete!(heap, g, r_start, r_fin);
                 } else {
-                    ch.recvs.push_back((r, i, t));
+                    ch.recvs.push_back((g, t));
                 }
             }
         }
     }
 
     // All ops must have completed (deadlock = bug in a schedule generator).
-    for r in 0..p {
-        for i in 0..goal.ranks[r].ops.len() {
-            assert!(
-                finish[gid(r, i)].is_finite(),
-                "deadlock: rank {r} op {i} ({:?}) never completed",
-                goal.ranks[r].ops[i].kind
-            );
-        }
+    for g in 0..total_ops {
+        assert!(
+            finish[g].is_finite(),
+            "deadlock: rank {} op {} ({:?}) never completed",
+            goal.rank_of(g),
+            g - goal.gid(goal.rank_of(g), 0),
+            goal.kinds[g]
+        );
     }
 
     // ---- reporting --------------------------------------------------------
     let per_rank_time: Vec<f64> = (0..p)
-        .map(|r| finish[base[r]..base[r + 1]].iter().copied().fold(0.0f64, f64::max))
+        .map(|r| {
+            let base = goal.gid(r, 0);
+            finish[base..base + goal.ops(r).len()].iter().copied().fold(0.0f64, f64::max)
+        })
         .collect();
     let total_time = per_rank_time.iter().copied().fold(0.0f64, f64::max);
 
     // Component breakdown: per-rank interval union per category.
     let mut comps = Components::default();
     for r in 0..p {
+        let base = goal.gid(r, 0);
         let mut cat_ivs: [Vec<(f64, f64)>; 3] = [Vec::new(), Vec::new(), Vec::new()];
-        for (i, op) in goal.ranks[r].ops.iter().enumerate() {
-            let idx = match category(&op.kind) {
+        for (i, kind) in goal.ops(r).iter().enumerate() {
+            let idx = match category(kind) {
                 Category::Comm => 0,
                 Category::Reduction => 1,
                 Category::Datamove => 2,
                 Category::Other => continue,
             };
-            cat_ivs[idx].push((start[gid(r, i)], finish[gid(r, i)]));
+            cat_ivs[idx].push((start[base + i], finish[base + i]));
         }
         let comm = interval_union(&mut cat_ivs[0]);
         let red = interval_union(&mut cat_ivs[1]);
@@ -373,16 +355,18 @@ pub fn simulate(goal: &Goal, ctx: &SimContext) -> SimReport {
     // finish inside region.
     let mut tag_sums: HashMap<String, (f64, usize)> = HashMap::new();
     for r in 0..p {
-        for span in &goal.ranks[r].tags {
+        let base = goal.gid(r, 0);
+        let ops = goal.ops(r).len();
+        for span in goal.rank_tags(r) {
             let mut entry = 0.0f64;
             let mut exit = 0.0f64;
-            for i in span.first..=span.last.min(goal.ranks[r].ops.len().saturating_sub(1)) {
-                for &d in &goal.ranks[r].ops[i].deps {
-                    if d < span.first {
-                        entry = entry.max(finish[gid(r, d)]);
+            for i in span.first..=span.last.min(ops.saturating_sub(1)) {
+                for &d in goal.deps(base + i) {
+                    if (d as usize) < base + span.first {
+                        entry = entry.max(finish[d as usize]);
                     }
                 }
-                exit = exit.max(finish[gid(r, i)]);
+                exit = exit.max(finish[base + i]);
             }
             let e = tag_sums.entry(span.name.clone()).or_insert((0.0, 0));
             e.0 += (exit - entry).max(0.0);
@@ -514,7 +498,8 @@ impl TryInsertOr for HashMap<usize, usize, crate::util::FastBuild> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::goal::{Op, Seg};
+    use crate::collectives::GoalBuilder;
+    use crate::goal::Seg;
     use crate::topology::{leonardo, AllocPolicy, Allocation, RankOrder};
 
     fn ctx_fixture(nodes: usize, ppn: usize) -> (crate::topology::SystemProfile, Placement) {
@@ -526,24 +511,19 @@ mod tests {
 
     fn pingpong(bytes: usize) -> Goal {
         let elems = bytes / 4;
-        let mut g = Goal::new(2, elems, 4);
-        g.ranks[0].ops.push(Op {
-            kind: OpKind::Send { peer: 1, seg: Seg::input(0, elems), tag: 0 },
-            deps: vec![],
-        });
-        g.ranks[0].ops.push(Op {
-            kind: OpKind::Recv { peer: 1, seg: Seg::output(0, elems), tag: 1 },
-            deps: vec![0],
-        });
-        g.ranks[1].ops.push(Op {
-            kind: OpKind::Recv { peer: 0, seg: Seg::output(0, elems), tag: 0 },
-            deps: vec![],
-        });
-        g.ranks[1].ops.push(Op {
-            kind: OpKind::Send { peer: 0, seg: Seg::input(0, elems), tag: 1 },
-            deps: vec![0],
-        });
-        g
+        let mut b = GoalBuilder::new(2, elems, 4);
+        b.send_tagged(0, 1, Seg::input(0, elems), 0);
+        b.recv_tagged(0, 1, Seg::output(0, elems), 1);
+        b.recv_tagged(1, 0, Seg::output(0, elems), 0);
+        b.send_tagged(1, 0, Seg::input(0, elems), 1);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn pingpong_deps_chain_sequentially() {
+        let g = pingpong(16);
+        assert_eq!(g.deps_local(0, 1), vec![0]);
+        assert_eq!(g.deps_local(1, 1), vec![0]);
     }
 
     #[test]
@@ -575,30 +555,24 @@ mod tests {
         assert!(big.total_time > 10.0 * small.total_time);
     }
 
+    /// `pairs` concurrent large flows node0 → node1 (ppn = 2 fixture).
+    fn cross_node_flows(pairs: usize, elems: usize) -> Goal {
+        let mut b = GoalBuilder::new(4, elems, 4);
+        for k in 0..pairs {
+            b.send_tagged(k, k + 2, Seg::input(0, elems), k as u32);
+            b.recv_tagged(k + 2, k, Seg::output(0, elems), k as u32);
+        }
+        b.finish().unwrap()
+    }
+
     #[test]
     fn nic_contention_serializes_flows() {
         // Two ranks on node A each send a large message to node B:
         // the NIC pool must serialize them vs a single flow.
         let (prof, pl) = ctx_fixture(2, 2); // ranks 0,1 on node0; 2,3 on node1
         let elems = (32 << 20) / 4;
-        let mut one = Goal::new(4, elems, 4);
-        one.ranks[0].ops.push(Op {
-            kind: OpKind::Send { peer: 2, seg: Seg::input(0, elems), tag: 0 },
-            deps: vec![],
-        });
-        one.ranks[2].ops.push(Op {
-            kind: OpKind::Recv { peer: 0, seg: Seg::output(0, elems), tag: 0 },
-            deps: vec![],
-        });
-        let mut two = one.clone();
-        two.ranks[1].ops.push(Op {
-            kind: OpKind::Send { peer: 3, seg: Seg::input(0, elems), tag: 1 },
-            deps: vec![],
-        });
-        two.ranks[3].ops.push(Op {
-            kind: OpKind::Recv { peer: 1, seg: Seg::output(0, elems), tag: 1 },
-            deps: vec![],
-        });
+        let one = cross_node_flows(1, elems);
+        let two = cross_node_flows(2, elems);
         // 4-rail flows (38 GB/s each) oversubscribe the 50 GB/s NIC pool
         let cfg = NetConfig { max_rndv_rails: Some(4), ..Default::default() };
         let t1 = simulate(&one, &SimContext::new(&prof, &pl).with_cfg(cfg)).total_time;
@@ -622,27 +596,12 @@ mod tests {
     fn components_sum_to_total() {
         let (prof, pl) = ctx_fixture(2, 1);
         let elems = 1 << 18;
-        let mut g = Goal::new(2, elems, 4);
-        g.ranks[0].ops.push(Op {
-            kind: OpKind::Send { peer: 1, seg: Seg::input(0, elems), tag: 0 },
-            deps: vec![],
-        });
-        g.ranks[0].ops.push(Op {
-            kind: OpKind::Reduce {
-                dst: Seg::output(0, elems),
-                src: Seg::input(0, elems),
-                op: Default::default(),
-            },
-            deps: vec![0],
-        });
-        g.ranks[1].ops.push(Op {
-            kind: OpKind::Recv { peer: 0, seg: Seg::output(0, elems), tag: 0 },
-            deps: vec![],
-        });
-        g.ranks[1].ops.push(Op {
-            kind: OpKind::Copy { dst: Seg::tmp(0, elems), src: Seg::output(0, elems) },
-            deps: vec![0],
-        });
+        let mut b = GoalBuilder::new(2, elems, 4);
+        b.send(0, 1, Seg::input(0, elems));
+        b.reduce_local(0, Seg::output(0, elems), Seg::input(0, elems), Default::default());
+        b.recv(1, 0, Seg::output(0, elems));
+        b.copy(1, Seg::tmp(0, elems), Seg::output(0, elems));
+        let g = b.finish().unwrap();
         let rep = simulate(&g, &SimContext::new(&prof, &pl));
         let c = rep.components;
         assert!(c.comm > 0.0 && c.reduction > 0.0 && c.datamove > 0.0);
@@ -673,12 +632,10 @@ mod tests {
     #[should_panic(expected = "deadlock")]
     fn deadlock_detected() {
         let (prof, pl) = ctx_fixture(2, 1);
-        let mut g = Goal::new(2, 4, 4);
-        g.ranks[0].ops.push(Op {
-            kind: OpKind::Recv { peer: 1, seg: Seg::output(0, 4), tag: 0 },
-            deps: vec![],
-        });
-        // rank1 never sends
+        let mut b = GoalBuilder::new(2, 4, 4);
+        b.recv(0, 1, Seg::output(0, 4));
+        // rank1 never sends; skip channel matching to reach the engine
+        let g = b.finish_unchecked();
         simulate(&g, &SimContext::new(&prof, &pl));
     }
 }

@@ -66,9 +66,9 @@ impl TraceReport {
 /// Classify every transfer of `goal` by the locality tier of its endpoints.
 pub fn trace(goal: &Goal, placement: &Placement) -> TraceReport {
     let mut rep = TraceReport::default();
-    for (src, prog) in goal.ranks.iter().enumerate() {
-        for op in &prog.ops {
-            if let OpKind::Send { peer, seg, .. } = &op.kind {
+    for src in 0..goal.p() {
+        for kind in goal.ops(src) {
+            if let OpKind::Send { peer, seg, .. } = kind {
                 let bytes = seg.bytes(goal.elem_bytes);
                 let tier = placement.tier(src, *peer);
                 let idx = Tier::ALL.iter().position(|t| *t == tier).unwrap();

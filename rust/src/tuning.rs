@@ -6,9 +6,10 @@
 use std::collections::BTreeMap;
 
 use crate::collectives::Coll;
+use crate::config::{EnvSpec, TestSpec};
 use crate::json::Json;
 use crate::netmodel::Proto;
-use crate::orchestrator::PointOutcome;
+use crate::orchestrator::{run_campaign_jobs_cached, PointOutcome, ScheduleCache};
 
 /// The winning configuration for one (nodes, bytes) cell.
 #[derive(Debug, Clone)]
@@ -116,6 +117,28 @@ pub fn fit_rules(coll: Coll, choices: &[BestChoice]) -> Profile {
         i = j + 1;
     }
     profile
+}
+
+/// Run a tuning sweep and fit its winners into a [`Profile`], sourcing
+/// schedules from a caller-owned [`ScheduleCache`].
+///
+/// This is the multi-campaign cache plumbing: an autotuner that sweeps
+/// several collectives (or refines a grid iteratively) passes the same
+/// cache to every call, so the byte-agnostic skeletons compiled for the
+/// first sweep serve all later ones.  The cache never needs invalidating
+/// between campaigns — its key covers every generator input, and schedules
+/// are placement-independent (only the simulation consumes topology).
+pub fn autotune(
+    spec: &TestSpec,
+    env: &EnvSpec,
+    jobs: usize,
+    cache: &ScheduleCache,
+) -> Result<(Vec<PointOutcome>, Profile), String> {
+    let outcomes = run_campaign_jobs_cached(spec, env, None, jobs, cache)?;
+    let choices = best_choices(&outcomes);
+    let mut profile = fit_rules(spec.collective, &choices);
+    profile.name = format!("autotuned-{}", spec.name);
+    Ok((outcomes, profile))
 }
 
 /// Emit an Open MPI-style `coll_tuned` dynamic decision file section.
@@ -229,6 +252,27 @@ mod tests {
         let f = ompi_decision_file(Coll::Allreduce, &choices, &[("ring", 4)]);
         assert!(f.contains("2 # collective id"));
         assert!(f.contains("1024 4 0 0 # ring"));
+    }
+
+    #[test]
+    fn autotune_fits_profile_and_shares_cache() {
+        let mut spec = TestSpec::new("tune", "openmpi", Coll::Allreduce);
+        spec.sizes = vec![1024, 1 << 20];
+        spec.nodes = vec![4];
+        spec.algorithms = vec!["ring".into(), "recursive_doubling".into()];
+        spec.iterations = 1;
+        spec.warmup = 0;
+        let env = EnvSpec::for_system("leonardo");
+        let cache = ScheduleCache::new();
+        let (outcomes, profile) = autotune(&spec, &env, 1, &cache).unwrap();
+        assert!(!outcomes.is_empty());
+        assert!(!profile.rules.is_empty());
+        assert!(profile.name.starts_with("autotuned-"));
+        assert!(profile.select(Coll::Allreduce, 512).is_some());
+        // a second sweep over the same grid is served from the cache
+        let before = cache.stats().hits;
+        autotune(&spec, &env, 1, &cache).unwrap();
+        assert!(cache.stats().hits > before);
     }
 
     #[test]

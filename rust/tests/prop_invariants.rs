@@ -3,10 +3,11 @@
 //! coordinator-level invariants: schedule structure, routing/matching,
 //! conservation laws, determinism, and monotonicity of the cost model.
 
+use pico::backends::{Backend, LibPico};
 use pico::collectives::{self, Coll, GenParams};
-use pico::goal::OpKind;
 use pico::json::Json;
 use pico::netmodel::{NetConfig, Proto};
+use pico::orchestrator::{effective_count, ScheduleCache};
 use pico::sim::{simulate, SimContext};
 use pico::topology::{leonardo, lumi, AllocPolicy, Allocation, Placement, RankOrder, Tier};
 use pico::tracer::trace;
@@ -191,5 +192,112 @@ fn prop_non_pow2_large() {
                 assert!((a - b).abs() < 1e-2 * (1.0 + b.abs()), "{algo} rank {r}");
             }
         }
+    }
+}
+
+/// Schedule-cache transparency: for every registered algorithm and a grid
+/// of (p, count), the graph served by the orchestrator's cache — whether
+/// exact, skeleton-rescaled or directly generated — is bit-identical to a
+/// fresh generation at that count.  This is the contract that lets a sweep
+/// reuse one byte-agnostic skeleton per (algorithm, p) across all message
+/// sizes (DESIGN.md §IR).
+#[test]
+fn prop_schedule_cache_transparent() {
+    let backend = LibPico;
+    let cache = ScheduleCache::new();
+    for info in collectives::registry() {
+        for p in [2usize, 4, 8, 13, 16] {
+            if !info.any_p && !p.is_power_of_two() {
+                continue;
+            }
+            for mult in [1usize, 3, 8] {
+                let count = if info.coll == Coll::Barrier { 0 } else { p * mult };
+                let params = GenParams::new(p, count);
+                let direct = backend
+                    .schedule(info.coll, info.name, &params)
+                    .unwrap_or_else(|e| panic!("{:?}:{} p={p}: {e}", info.coll, info.name));
+                let cached = cache
+                    .schedule(&backend, info.coll, info.name, &params)
+                    .unwrap_or_else(|e| panic!("{:?}:{} p={p}: {e}", info.coll, info.name));
+                assert_eq!(
+                    *cached, direct,
+                    "{:?}:{} p={p} count={count}: cache must be bit-transparent",
+                    info.coll, info.name
+                );
+            }
+        }
+    }
+    // instrumented schedules carry tag spans through the rescale path too
+    for algo in ["ring", "rabenseifner", "recursive_doubling"] {
+        let params = GenParams::new(8, 8 * 16).instrumented();
+        let direct = backend.schedule(Coll::Allreduce, algo, &params).unwrap();
+        let cached = cache.schedule(&backend, Coll::Allreduce, algo, &params).unwrap();
+        assert_eq!(*cached, direct, "instrumented {algo}");
+        assert!(!cached.tags.is_empty());
+    }
+}
+
+/// Arena/cache equivalence at the SimReport level: for the paper's seven
+/// collectives × p ∈ {2,4,8,13,16} × a bytes sweep, simulating the cached
+/// (possibly skeleton-rescaled) schedule yields *identical* totals and
+/// component breakdowns to simulating a freshly generated one — the
+/// representation refactor must not move a single float.
+#[test]
+fn prop_sim_reports_identical_via_cache() {
+    let seven = [
+        Coll::Allreduce,
+        Coll::Bcast,
+        Coll::Reduce,
+        Coll::Allgather,
+        Coll::ReduceScatter,
+        Coll::Alltoall,
+        Coll::Barrier,
+    ];
+    let backend = LibPico;
+    let cache = ScheduleCache::new();
+    let prof = leonardo();
+    for coll in seven {
+        for p in [2usize, 4, 8, 13, 16] {
+            let alloc = Allocation::new(&prof, p, AllocPolicy::Contiguous, 9);
+            let pl = Placement::new(&prof, &alloc, 1, RankOrder::Block);
+            for bytes in [4 << 10, 256 << 10, 2 << 20] {
+                let count =
+                    if coll == Coll::Barrier { 0 } else { effective_count(coll, bytes, p) };
+                let params = GenParams::new(p, count);
+                let algo = backend.default_algorithm(coll, p, bytes, 1);
+                let direct = backend.schedule(coll, algo, &params).unwrap();
+                let cached = cache.schedule(&backend, coll, algo, &params).unwrap();
+                let a = simulate(&direct, &SimContext::new(&prof, &pl));
+                let b = simulate(&cached, &SimContext::new(&prof, &pl));
+                assert_eq!(
+                    a.total_time, b.total_time,
+                    "{coll:?}:{algo} p={p} bytes={bytes}: totals diverged"
+                );
+                assert_eq!(a.per_rank_time, b.per_rank_time);
+                assert_eq!(a.components, b.components, "{coll:?}:{algo} p={p} bytes={bytes}");
+                assert_eq!(a.events_processed, b.events_processed);
+            }
+        }
+    }
+}
+
+/// GOAL-text round trip through the flat IR: serialize, parse, and the
+/// re-sealed arena (kinds, dependency CSR, counts) is equal to the source
+/// for randomized algorithms and shapes (uninstrumented — tag spans are
+/// comments on the wire by design).
+#[test]
+fn prop_goal_text_round_trip_flat_ir() {
+    let mut rng = Rng::new(7);
+    for _ in 0..25 {
+        let regs = collectives::registry();
+        let info = &regs[rng.below(regs.len())];
+        let p = if info.any_p { 1 + rng.below(12) } else { 1usize << (1 + rng.below(4)) };
+        let count = if info.coll == Coll::Barrier { 0 } else { p * (1 + rng.below(16)) };
+        let goal = collectives::generate(info.coll, info.name, &GenParams::new(p, count))
+            .unwrap_or_else(|e| panic!("{:?}:{}: {e}", info.coll, info.name));
+        let text = pico::goal_text::to_text(&goal);
+        let back = pico::goal_text::from_text(&text)
+            .unwrap_or_else(|e| panic!("{:?}:{} p={p}: {e}", info.coll, info.name));
+        assert_eq!(back, goal, "{:?}:{} p={p} count={count}", info.coll, info.name);
     }
 }

@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Bench trajectory runner: executes the hot-path bench suite and collects
+# its machine-readable output (BENCH_ir.json) at the repository root.
+#
+#   scripts/bench.sh            # run perf_hotpaths, emit BENCH_ir.json
+#
+# The bench binary prints the human-readable report as usual; the JSON
+# side-channel is enabled by exporting PICO_BENCH_OUT (consumed by
+# benchkit::BenchJson::write_if_env).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found on PATH — install a Rust toolchain" \
+         "(https://rustup.rs) or enter the build container before running" \
+         "scripts/bench.sh" >&2
+    exit 2
+fi
+
+out="$PWD/BENCH_ir.json"
+echo "== bench: perf_hotpaths (IR section -> $out)"
+PICO_BENCH_OUT="$out" cargo bench --bench perf_hotpaths
+
+if [ ! -s "$out" ]; then
+    echo "FAIL: $out was not produced" >&2
+    exit 1
+fi
+echo "bench: wrote $out"

@@ -1,15 +1,29 @@
 #!/usr/bin/env bash
 # Repo verification (see README.md "Verification"):
 #   1. tier-1: release build + full test suite
-#   2. rustdoc with warnings denied
-#   3. parallel-equivalence smoke: a 48-point sweep run with --jobs 1 and
+#   2. clippy with warnings denied
+#   3. rustdoc with warnings denied
+#   4. parallel-equivalence smoke: a 48-point sweep run with --jobs 1 and
 #      --jobs 4 must produce byte-identical run directories.
+#
+# Every stage runs under `set -euo pipefail`, so the first non-zero exit
+# aborts the script with that stage's status.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found on PATH — install a Rust toolchain" \
+         "(https://rustup.rs) or enter the build container before running" \
+         "scripts/verify.sh" >&2
+    exit 2
+fi
 
 echo "== tier-1: cargo build --release && cargo test -q"
 cargo build --release
 cargo test -q
+
+echo "== lint: cargo clippy (warnings are errors)"
+cargo clippy -q --all-targets -- -D warnings
 
 echo "== docs: cargo doc --no-deps (warnings are errors)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
