@@ -12,7 +12,7 @@ use pico::benchkit::{bench, bench_parallel, report_rate, section, BenchJson};
 use pico::collectives::{self, Coll, GenParams};
 use pico::config::{EnvSpec, TestSpec};
 use pico::orchestrator::{run_campaign_jobs, run_campaign_jobs_cached, ScheduleCache};
-use pico::execute::{execute, make_inputs, Reducer, ScalarReducer};
+use pico::execute::{execute, execute_scan, make_inputs, Reducer, ScalarReducer};
 use pico::goal::ReduceOp;
 use pico::instrument::Recorder;
 use pico::netmodel::NetConfig;
@@ -79,6 +79,25 @@ fn main() {
     bench("exec: 8-rank 256KiB ring allreduce (scalar)", 1, 10, || {
         execute(&goal8, make_inputs(8, 65536, 3), &ScalarReducer)
     });
+
+    // §Perf: worklist executor vs the old quadratic frontier scan.  A
+    // p=64 ring allreduce has 2·(p−1) dependency-chained steps per rank,
+    // exactly the deep-schedule shape where re-scanning the whole program
+    // per pass went quadratic (DESIGN.md §Perf, "arena-native executor").
+    section("L3: executor — dependents-CSR worklist vs quadratic scan (p=64 allreduce)");
+    {
+        let p = 64;
+        let count = p * 64;
+        let goal64 =
+            collectives::generate(Coll::Allreduce, "ring", &GenParams::new(p, count)).unwrap();
+        let t_scan = bench("exec: p=64 ring (old: frontier re-scan)", 1, 5, || {
+            execute_scan(&goal64, make_inputs(p, count, 3), &ScalarReducer)
+        });
+        let t_work = bench("exec: p=64 ring (new: CSR worklist)", 1, 5, || {
+            execute(&goal64, make_inputs(p, count, 3), &ScalarReducer)
+        });
+        println!("  -> worklist speedup: {:.2}x", t_scan / t_work.max(1e-30));
+    }
 
     section("L1: PJRT Pallas reduction vs scalar (requires make artifacts)");
     match pico::runtime::XlaReducer::from_default_dir() {

@@ -88,6 +88,43 @@ pub fn render_ratio_heatmap(title: &str, cells: &[RatioCell]) -> String {
     out
 }
 
+/// Per-cell winner lines under the heatmap (what `pico sweep` prints —
+/// lifted out of the CLI so [`Engine::sweep`](crate::engine::Engine::sweep)
+/// reports read identically from the library).
+pub fn render_cell_lines(cells: &[RatioCell]) -> String {
+    let mut out = String::new();
+    for c in cells {
+        out.push_str(&format!(
+            "  nodes={:<4} size={:<8} default={:<20} ({}) best={:<20} ({})  r={:.2}\n",
+            c.nodes,
+            fmt_size(c.bytes),
+            c.default_algo,
+            fmt_time(c.default_s),
+            c.best_algo,
+            fmt_time(c.best_s),
+            c.r
+        ));
+    }
+    out
+}
+
+/// One-line component attribution, absolute + percentage shares — shared
+/// by the probe and import reports so the two stay format-identical.
+pub fn render_components(c: &crate::sim::Components) -> String {
+    let t = c.total().max(1e-30);
+    format!(
+        "comm {} ({:.1}%), reduction {} ({:.1}%), datamove {} ({:.1}%), other {} ({:.1}%)",
+        fmt_time(c.comm),
+        100.0 * c.comm / t,
+        fmt_time(c.reduction),
+        100.0 * c.reduction / t,
+        fmt_time(c.datamove),
+        100.0 * c.datamove / t,
+        fmt_time(c.other),
+        100.0 * c.other / t
+    )
+}
+
 /// A latency-vs-size line table (Fig. 7/10 style): one column per series.
 pub fn render_latency_table(
     title: &str,
@@ -216,6 +253,18 @@ mod tests {
         assert!(hm.contains("1KiB"));
         assert!(hm.contains("0.90"));
         assert!(hm.contains("1.20"));
+    }
+
+    #[test]
+    fn cell_lines_render_winners() {
+        let outs = vec![
+            outcome(8, 1024, None, "ring", 10.0),
+            outcome(8, 1024, Some("tree"), "tree", 9.0),
+        ];
+        let lines = render_cell_lines(&best_to_default(&outs));
+        assert!(lines.contains("nodes=8"));
+        assert!(lines.contains("best=tree"));
+        assert!(lines.contains("r=0.90"));
     }
 
     #[test]

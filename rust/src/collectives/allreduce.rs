@@ -459,6 +459,36 @@ mod tests {
         let g = rabenseifner(&GenParams::new(8, 64)).unwrap();
         assert!(g.tags.is_empty());
     }
+
+    /// Audit result pinned as a regression test (ROADMAP "rescale
+    /// coverage"): rabenseifner on non-power-of-two p is **not**
+    /// count-rescalable, because [`rs_range`] halves element ranges with
+    /// integer division — at `count = p` the surviving `l = 2^⌊log₂p⌋`
+    /// participants split ranges of odd length, and `⌊m·x/2⌋ ≠ m·⌊x/2⌋`
+    /// for odd x, so the skeleton's boundaries do not scale linearly.
+    /// Concretely at p = 6 (l = 4): halving [0,3) at count 6 yields
+    /// [0,1)/[1,3), but the same step at count 12 yields [0,3)/[3,6) —
+    /// not 2× the former.  Power-of-two p always halves even ranges, so
+    /// it stays whitelisted.
+    #[test]
+    fn rabenseifner_non_pow2_rescale_is_inexact_and_stays_excluded() {
+        use crate::collectives::{count_scalable, Coll};
+        let p = 6;
+        let skel = rabenseifner(&GenParams::new(p, p)).unwrap();
+        let direct = rabenseifner(&GenParams::new(p, 2 * p)).unwrap();
+        assert_ne!(
+            skel.rescaled(2),
+            direct,
+            "odd-range halving boundaries shift under rescale; if this ever \
+             becomes equal, re-audit before whitelisting"
+        );
+        // the whitelist must agree with the audit, both ways
+        assert!(!count_scalable(Coll::Allreduce, "rabenseifner", p));
+        assert!(count_scalable(Coll::Allreduce, "rabenseifner", 8));
+        // and the exact boundary arithmetic that breaks linearity
+        assert_eq!(rs_range(0, 2, 4, 6), (0, 1));
+        assert_eq!(rs_range(0, 2, 4, 12), (0, 3));
+    }
 }
 
 /// Segmented ring allreduce (Open MPI `coll_tuned` large-message default):

@@ -234,7 +234,12 @@ pub fn find(coll: Coll, name: &str) -> Option<&'static AlgoInfo> {
 /// (`tree_pipelined`, `segmented_ring`, bcast `pipeline`) — their segment
 /// *count* depends on the byte size — and `allreduce::rabenseifner` on
 /// non-power-of-two ranks, whose element-space halving rounds differently
-/// at different counts.
+/// at different counts.  The rabenseifner exclusion is an audited
+/// impossibility, not caution: integer halving of odd-length ranges is
+/// non-linear in the count (`⌊m·x/2⌋ ≠ m·⌊x/2⌋` for odd x), so a
+/// `count = p` skeleton's boundaries cannot be rescaled exactly — pinned
+/// by `rabenseifner_non_pow2_rescale_is_inexact_and_stays_excluded` in
+/// `allreduce.rs`.
 pub fn count_scalable(coll: Coll, algo: &str, p: usize) -> bool {
     match (coll, algo) {
         (Coll::Allreduce, "linear" | "recursive_doubling" | "ring" | "tree") => true,

@@ -166,6 +166,17 @@ impl TestSpec {
     }
 }
 
+impl TryFrom<&Json> for TestSpec {
+    type Error = String;
+
+    /// Alias of [`TestSpec::from_json`] so descriptor files, CLI flags and
+    /// library calls share the standard conversion trait (the
+    /// [`Engine`](crate::engine::Engine) spec structs build on this).
+    fn try_from(j: &Json) -> Result<Self, String> {
+        TestSpec::from_json(j)
+    }
+}
+
 /// Platform descriptor (env.json).
 #[derive(Debug, Clone)]
 pub struct EnvSpec {
@@ -264,6 +275,16 @@ impl EnvSpec {
                 .unwrap_or(1) as u8,
             parallelism: j.get("parallelism").and_then(Json::as_usize).unwrap_or(1),
         })
+    }
+}
+
+impl TryFrom<&Json> for EnvSpec {
+    type Error = String;
+
+    /// Alias of [`EnvSpec::from_json`] — same rationale as `TestSpec`'s
+    /// `TryFrom` impl above.
+    fn try_from(j: &Json) -> Result<Self, String> {
+        EnvSpec::from_json(j)
     }
 }
 

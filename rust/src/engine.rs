@@ -1,0 +1,1075 @@
+//! Typed `Engine` facade — the one programmatic API over everything the
+//! CLI exposes (run / sweep / probe / trace / replay / autotune) plus GOAL
+//! trace import.
+//!
+//! PICO's pitch is a *lightweight, extensible* benchmarking framework; the
+//! facade is what makes it embeddable as a library instead of only
+//! scriptable through argv.  One [`Engine`] owns the process-wide
+//! [`ScheduleCache`] (every subcommand's schedules are memoized in the same
+//! instance) and the platform descriptor; each entry point takes a typed,
+//! validated spec struct, and JSON descriptors, CLI flags and library calls
+//! all converge on the same spec types (`TryFrom<&Json>` for the JSON
+//! route, builder-style constructors for the programmatic one).
+//!
+//! Ownership (DESIGN.md §API):
+//!
+//! ```text
+//! Engine
+//! ├── EnvSpec            platform: system profile, policies, parallelism
+//! ├── ScheduleCache      ONE per process: skeletons + sealed arenas,
+//! │                      shared by campaign/sweep/probe/trace/replay
+//! └── campaign(…) ──────▶ RecordSink (pluggable per call)
+//!       ├── OrderedRecordSink   standardized run directory (CLI default)
+//!       └── VecSink             in-memory records (library users, tests)
+//! ```
+//!
+//! # Example — a 2-point campaign into a [`VecSink`](crate::results::VecSink), no argv anywhere
+//!
+//! ```
+//! use pico::collectives::Coll;
+//! use pico::config::TestSpec;
+//! use pico::engine::{CampaignSpec, Engine, EngineConfig};
+//! use pico::results::VecSink;
+//!
+//! let engine = Engine::new(EngineConfig::for_system("leonardo"));
+//! let mut test = TestSpec::new("demo", "openmpi", Coll::Allreduce);
+//! test.sizes = vec![4096, 1 << 20]; // 2 points
+//! test.nodes = vec![4];
+//! test.algorithms = vec!["ring".into()];
+//! test.iterations = 2;
+//! test.warmup = 0;
+//! let mut sink = VecSink::new();
+//! let outcomes = engine.campaign_into(&CampaignSpec::new(test), &mut sink).unwrap();
+//! assert_eq!(outcomes.len(), 2);
+//! assert_eq!(sink.records.len(), 2);
+//! assert!(engine.cache_stats().misses > 0); // schedules landed in the shared cache
+//! ```
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::analysis::{self, RatioCell};
+use crate::collectives::Coll;
+use crate::config::{EnvSpec, TestSpec};
+use crate::goal::Goal;
+use crate::goal_text;
+use crate::json::Json;
+use crate::orchestrator::{
+    run_campaign_jobs_cached, run_campaign_sink, CacheStats, PointOutcome, ScheduleCache,
+};
+use crate::replay::{self, ReplayResult};
+use crate::results::{Granularity, RecordSink};
+use crate::sim::{simulate, SimContext, SimReport};
+use crate::topology::{Allocation, Placement};
+use crate::tracer::{self, TraceReport};
+use crate::tuning::{self, Profile};
+use crate::util::{fmt_size, fmt_time, parse_size};
+
+// ---------------------------------------------------------------------------
+// Engine configuration + the facade itself
+// ---------------------------------------------------------------------------
+
+/// How to build an [`Engine`]: the platform descriptor plus process-level
+/// overrides.  Fields are private (non-exhaustive style) so new knobs can
+/// be added without breaking library callers; construct via
+/// [`EngineConfig::new`] / [`EngineConfig::for_system`] and chain setters.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    env: EnvSpec,
+    jobs: Option<usize>,
+    out_dir: Option<PathBuf>,
+}
+
+impl EngineConfig {
+    pub fn new(env: EnvSpec) -> Self {
+        Self { env, jobs: None, out_dir: None }
+    }
+
+    /// Shortcut: default platform descriptor for a modelled system.
+    pub fn for_system(system: &str) -> Self {
+        Self::new(EnvSpec::for_system(system))
+    }
+
+    /// Worker threads for campaigns (0 = one per CPU).  Defaults to the
+    /// env descriptor's `parallelism`.
+    pub fn with_jobs(mut self, jobs: usize) -> Self {
+        self.jobs = Some(jobs);
+        self
+    }
+
+    /// Default output directory for run directories (campaign specs can
+    /// still override per call).
+    pub fn with_out_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.out_dir = Some(dir.into());
+        self
+    }
+}
+
+impl TryFrom<&Json> for EngineConfig {
+    type Error = String;
+
+    /// Build from an env.json document (the same schema
+    /// [`EnvSpec::from_json`] validates).
+    fn try_from(j: &Json) -> Result<Self, String> {
+        Ok(Self::new(EnvSpec::from_json(j)?))
+    }
+}
+
+/// The facade: one per process.  Owns the single [`ScheduleCache`] every
+/// entry point draws schedules from, the platform descriptor, and the
+/// default worker count; all methods take `&self` (the cache synchronizes
+/// internally, campaigns fan out onto scoped workers).
+pub struct Engine {
+    env: EnvSpec,
+    jobs: usize,
+    out_dir: Option<PathBuf>,
+    cache: ScheduleCache,
+}
+
+impl Engine {
+    pub fn new(config: EngineConfig) -> Engine {
+        let jobs = config.jobs.unwrap_or(config.env.parallelism);
+        Engine { env: config.env, jobs, out_dir: config.out_dir, cache: ScheduleCache::new() }
+    }
+
+    pub fn env(&self) -> &EnvSpec {
+        &self.env
+    }
+
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// The process-wide schedule cache (shared across every subcommand
+    /// served by this engine).
+    pub fn cache(&self) -> &ScheduleCache {
+        &self.cache
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Run a resolved [`TestSpec`] through the engine's cache and worker
+    /// pool, returning outcomes only (no sink, no run directory).  The
+    /// building block `tuning::autotune` and the report methods share.
+    pub fn run_spec(&self, spec: &TestSpec) -> Result<Vec<PointOutcome>, String> {
+        run_campaign_sink(spec, &self.env, self.jobs, &self.cache, None)
+    }
+
+    /// Run a campaign; when an output directory is configured (on the spec
+    /// or the engine) the standardized run directory is written through an
+    /// [`OrderedRecordSink`](crate::results::OrderedRecordSink).
+    pub fn campaign(&self, spec: &CampaignSpec) -> Result<CampaignHandle, String> {
+        let jobs = spec.jobs.unwrap_or(self.jobs);
+        let out = spec.out.clone().or_else(|| self.out_dir.clone());
+        let outcomes =
+            run_campaign_jobs_cached(&spec.test, &self.env, out.as_deref(), jobs, &self.cache)?;
+        Ok(CampaignHandle { run_root: out.map(|d| d.join(&spec.test.name)), outcomes })
+    }
+
+    /// Run a campaign into a caller-owned [`RecordSink`] — the library
+    /// entry point (e.g. a [`VecSink`](crate::results::VecSink); see the
+    /// module example).  No descriptors or directories are written.
+    pub fn campaign_into(
+        &self,
+        spec: &CampaignSpec,
+        sink: &mut dyn RecordSink,
+    ) -> Result<Vec<PointOutcome>, String> {
+        let jobs = spec.jobs.unwrap_or(self.jobs);
+        run_campaign_sink(&spec.test, &self.env, jobs, &self.cache, Some(sink))
+    }
+
+    /// Tuning sweep over every exposed algorithm (Fig. 6 style).
+    pub fn sweep(&self, spec: &SweepSpec) -> Result<SweepReport, String> {
+        let test = spec.to_test_spec();
+        let jobs = spec.jobs.unwrap_or(self.jobs);
+        let outcomes = run_campaign_sink(&test, &self.env, jobs, &self.cache, None)?;
+        let cells = analysis::best_to_default(&outcomes);
+        Ok(SweepReport {
+            title: format!("{} {} on {}", test.backend, spec.coll.label(), self.env.system),
+            outcomes,
+            cells,
+        })
+    }
+
+    /// One test point with component and tag breakdown (Fig. 11 style).
+    pub fn probe(&self, spec: &ProbeSpec) -> Result<PointReport, String> {
+        let test = spec.to_test_spec();
+        let outcomes = run_campaign_sink(&test, &self.env, 1, &self.cache, None)?;
+        let outcome = outcomes.into_iter().next().ok_or("probe produced no outcome")?;
+        Ok(PointReport { backend: test.backend, system: self.env.system.clone(), outcome })
+    }
+
+    /// Topology traffic estimate for one schedule (Fig. 9 style).  The
+    /// schedule is sourced through the shared cache under the `libpico`
+    /// backend (trace works on reference algorithms).
+    pub fn trace(&self, spec: &TraceSpec) -> Result<TraceOutcome, String> {
+        use crate::backends::LibPico;
+        use crate::collectives::GenParams;
+        use crate::orchestrator::effective_count;
+
+        let profile = self.env.profile()?;
+        let alloc = Allocation::new(&profile, spec.nodes, self.env.alloc_policy, spec.seed);
+        let placement = Placement::new(&profile, &alloc, spec.ppn, self.env.rank_order);
+        let p = placement.n_ranks();
+        let count = effective_count(spec.coll, spec.bytes, p);
+        let goal = self.cache.schedule(&LibPico, spec.coll, &spec.algo, &GenParams::new(p, count))?;
+        let report = tracer::trace(&goal, &placement);
+        Ok(TraceOutcome { algorithm: spec.algo.clone(), bytes: spec.bytes, p, report })
+    }
+
+    /// LLM trace replay with substituted collective profiles (Fig. 12
+    /// style), schedules sourced from the shared cache.
+    pub fn replay(&self, spec: &ReplaySpec) -> Result<ReplayOutcome, String> {
+        let trace = match spec.workload.as_str() {
+            "llama16" => replay::llama7b(16, spec.seed),
+            "llama128" => replay::llama7b(128, spec.seed),
+            "moe" => replay::mistral_moe(64, spec.seed),
+            other => return Err(format!("unknown workload {other:?}")),
+        };
+        let profile = match spec.profile.as_str() {
+            "native" => None,
+            "pico" => Some(replay::profiles::pico_optimized()),
+            "suboptimal" => Some(replay::profiles::suboptimal_ll()),
+            other => return Err(format!("unknown profile {other:?}")),
+        };
+        let result = replay::replay_engine(self, &trace, profile.as_ref(), spec.seed)?;
+        Ok(ReplayOutcome {
+            workload: trace.name.clone(),
+            gpus: trace.gpus,
+            system: self.env.system.clone(),
+            result,
+        })
+    }
+
+    /// Run a tuning sweep and fit its winners into a [`Profile`]
+    /// (delegates to [`tuning::autotune`], which draws schedules from this
+    /// engine's cache).
+    pub fn autotune(&self, spec: &TestSpec) -> Result<(Vec<PointOutcome>, Profile), String> {
+        tuning::autotune(self, spec)
+    }
+
+    /// Import an external GOAL schedule (ATLAHS / LogGOPSim interchange
+    /// text, paper Sec. IV-D): parse, seal into the flat arena, and run
+    /// full validation.  Malformed input yields a typed error message.
+    pub fn import(&self, src: &GoalSource) -> Result<SealedSchedule, String> {
+        let (text, origin) = match src {
+            GoalSource::Text(t) => (t.clone(), "<inline>".to_string()),
+            GoalSource::File(p) => (
+                std::fs::read_to_string(p).map_err(|e| format!("{}: {e}", p.display()))?,
+                p.display().to_string(),
+            ),
+        };
+        let goal = goal_text::from_text(&text)?;
+        Ok(SealedSchedule { goal: Arc::new(goal), origin })
+    }
+
+    /// Simulate + trace an imported schedule on this engine's system,
+    /// exactly like a generated collective: allocation, placement and the
+    /// DES all follow the env descriptor.
+    pub fn run_imported(
+        &self,
+        sched: &SealedSchedule,
+        spec: &ImportRunSpec,
+    ) -> Result<ImportReport, String> {
+        let profile = self.env.profile()?;
+        let p = sched.p();
+        if p == 0 {
+            return Err("imported schedule has no ranks".into());
+        }
+        let ppn = spec.ppn.max(1);
+        if ppn > profile.ppn_max {
+            return Err(format!("ppn {ppn} exceeds {}'s limit {}", profile.name, profile.ppn_max));
+        }
+        let nodes = spec.nodes.unwrap_or_else(|| p.div_ceil(ppn));
+        if nodes * ppn < p {
+            return Err(format!("{nodes} nodes x ppn {ppn} cannot host {p} ranks"));
+        }
+        if nodes > profile.nodes_total {
+            return Err(format!(
+                "{nodes} nodes exceeds {}'s machine size {}",
+                profile.name, profile.nodes_total
+            ));
+        }
+        let alloc = Allocation::new(&profile, nodes, self.env.alloc_policy, spec.seed);
+        let full = Placement::new(&profile, &alloc, ppn, self.env.rank_order);
+        // the schedule's rank count rules; surplus placement slots are cut
+        let placement = Placement {
+            rank_node: full.rank_node[..p].to_vec(),
+            rank_group: full.rank_group[..p].to_vec(),
+            ppn,
+            order: full.order,
+        };
+        let sim = simulate(sched.goal(), &SimContext::new(&profile, &placement));
+        let trace = tracer::trace(sched.goal(), &placement);
+        Ok(ImportReport {
+            system: profile.name,
+            p,
+            nodes,
+            ppn,
+            total_ops: sched.total_ops(),
+            wire_bytes: sched.total_wire_bytes(),
+            sim,
+            trace,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spec types — one validated struct per entry point
+// ---------------------------------------------------------------------------
+
+/// A campaign request: the portable [`TestSpec`] plus per-call overrides.
+#[derive(Debug, Clone)]
+pub struct CampaignSpec {
+    test: TestSpec,
+    out: Option<PathBuf>,
+    jobs: Option<usize>,
+}
+
+impl CampaignSpec {
+    pub fn new(test: TestSpec) -> Self {
+        Self { test, out: None, jobs: None }
+    }
+
+    /// Persist the standardized run directory under `dir`.
+    pub fn with_out(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.out = Some(dir.into());
+        self
+    }
+
+    /// Worker threads for this campaign (0 = one per CPU).
+    pub fn with_jobs(mut self, jobs: usize) -> Self {
+        self.jobs = Some(jobs);
+        self
+    }
+
+    pub fn test(&self) -> &TestSpec {
+        &self.test
+    }
+}
+
+impl TryFrom<&Json> for CampaignSpec {
+    type Error = String;
+
+    /// Build from a test.json document (validated by
+    /// [`TestSpec::from_json`]) — the descriptor route and the library
+    /// route meet here.
+    fn try_from(j: &Json) -> Result<Self, String> {
+        Ok(Self::new(TestSpec::from_json(j)?))
+    }
+}
+
+/// Tuning sweep over every exposed algorithm of one collective.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    backend: String,
+    coll: Coll,
+    sizes: Vec<usize>,
+    nodes: Vec<usize>,
+    ppn: usize,
+    iterations: usize,
+    jobs: Option<usize>,
+}
+
+impl SweepSpec {
+    pub fn new(backend: &str, coll: Coll) -> Self {
+        Self {
+            backend: backend.to_string(),
+            coll,
+            sizes: vec![32, 2048, 128 * 1024, 8 << 20, 128 << 20],
+            nodes: vec![2, 8, 32],
+            ppn: 1,
+            iterations: 3,
+            jobs: None,
+        }
+    }
+
+    pub fn with_sizes(mut self, sizes: Vec<usize>) -> Self {
+        self.sizes = sizes;
+        self
+    }
+
+    pub fn with_nodes(mut self, nodes: Vec<usize>) -> Self {
+        self.nodes = nodes;
+        self
+    }
+
+    pub fn with_ppn(mut self, ppn: usize) -> Self {
+        self.ppn = ppn;
+        self
+    }
+
+    pub fn with_iterations(mut self, iterations: usize) -> Self {
+        self.iterations = iterations;
+        self
+    }
+
+    pub fn with_jobs(mut self, jobs: usize) -> Self {
+        self.jobs = Some(jobs);
+        self
+    }
+
+    fn to_test_spec(&self) -> TestSpec {
+        let mut t = TestSpec::new("sweep", &self.backend, self.coll);
+        t.sizes = self.sizes.clone();
+        t.nodes = self.nodes.clone();
+        t.ppn = self.ppn;
+        t.iterations = self.iterations;
+        t.warmup = 1;
+        t.algorithms = vec!["*".into()];
+        t.granularity = Granularity::Summary;
+        t
+    }
+}
+
+impl TryFrom<&Json> for SweepSpec {
+    type Error = String;
+
+    fn try_from(j: &Json) -> Result<Self, String> {
+        let backend = j.get("backend").and_then(Json::as_str).unwrap_or("openmpi");
+        let coll_s = j.get("collective").and_then(Json::as_str).unwrap_or("allreduce");
+        let coll = Coll::parse(coll_s).ok_or_else(|| format!("unknown collective {coll_s:?}"))?;
+        let mut s = SweepSpec::new(backend, coll);
+        if let Some(sizes) = j.get("sizes").and_then(Json::as_arr) {
+            s.sizes = parse_sizes(sizes)?;
+        }
+        if let Some(nodes) = j.get("nodes").and_then(Json::as_arr) {
+            s.nodes = nodes
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| "bad node count".to_string()))
+                .collect::<Result<_, _>>()?;
+        }
+        if let Some(p) = j.get("ppn").and_then(Json::as_usize) {
+            s.ppn = p;
+        }
+        if let Some(i) = j.get("iterations").and_then(Json::as_usize) {
+            s.iterations = i;
+        }
+        Ok(s)
+    }
+}
+
+/// One fully pinned test point (the `probe` subcommand).
+#[derive(Debug, Clone)]
+pub struct ProbeSpec {
+    backend: String,
+    coll: Coll,
+    algo: Option<String>,
+    bytes: usize,
+    nodes: usize,
+    ppn: usize,
+    iterations: usize,
+    instrument: bool,
+    knobs: Vec<(String, String)>,
+}
+
+impl ProbeSpec {
+    pub fn new(backend: &str, coll: Coll) -> Self {
+        Self {
+            backend: backend.to_string(),
+            coll,
+            algo: None,
+            bytes: 1 << 20,
+            nodes: 8,
+            ppn: 1,
+            iterations: 3,
+            instrument: false,
+            knobs: vec![],
+        }
+    }
+
+    pub fn with_algo(mut self, algo: &str) -> Self {
+        self.algo = Some(algo.to_string());
+        self
+    }
+
+    pub fn with_bytes(mut self, bytes: usize) -> Self {
+        self.bytes = bytes;
+        self
+    }
+
+    pub fn with_nodes(mut self, nodes: usize) -> Self {
+        self.nodes = nodes;
+        self
+    }
+
+    pub fn with_ppn(mut self, ppn: usize) -> Self {
+        self.ppn = ppn;
+        self
+    }
+
+    pub fn with_iterations(mut self, iterations: usize) -> Self {
+        self.iterations = iterations;
+        self
+    }
+
+    pub fn with_instrument(mut self, on: bool) -> Self {
+        self.instrument = on;
+        self
+    }
+
+    /// Abstract knob request (resolved per backend, R6).
+    pub fn with_knob(mut self, key: &str, value: &str) -> Self {
+        self.knobs.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    fn to_test_spec(&self) -> TestSpec {
+        let mut t = TestSpec::new("probe", &self.backend, self.coll);
+        t.sizes = vec![self.bytes];
+        t.nodes = vec![self.nodes];
+        t.ppn = self.ppn;
+        t.iterations = self.iterations;
+        t.warmup = 1;
+        t.instrument = self.instrument;
+        t.knobs = self.knobs.clone();
+        if let Some(a) = &self.algo {
+            t.algorithms = vec![a.clone()];
+        }
+        t
+    }
+}
+
+impl TryFrom<&Json> for ProbeSpec {
+    type Error = String;
+
+    fn try_from(j: &Json) -> Result<Self, String> {
+        let backend = j.get("backend").and_then(Json::as_str).unwrap_or("openmpi");
+        let coll_s = j.get("collective").and_then(Json::as_str).unwrap_or("allreduce");
+        let coll = Coll::parse(coll_s).ok_or_else(|| format!("unknown collective {coll_s:?}"))?;
+        let mut s = ProbeSpec::new(backend, coll);
+        if let Some(a) = j.get("algorithm").and_then(Json::as_str) {
+            s.algo = Some(a.to_string());
+        }
+        if let Some(b) = j.get("bytes") {
+            s.bytes = json_size(b)?;
+        }
+        if let Some(n) = j.get("nodes").and_then(Json::as_usize) {
+            s.nodes = n;
+        }
+        if let Some(p) = j.get("ppn").and_then(Json::as_usize) {
+            s.ppn = p;
+        }
+        if let Some(i) = j.get("iterations").and_then(Json::as_usize) {
+            s.iterations = i;
+        }
+        if let Some(b) = j.get("instrument").and_then(Json::as_bool) {
+            s.instrument = b;
+        }
+        if let Some(Json::Obj(o)) = j.get("knobs") {
+            for (k, v) in o {
+                let vs = match v {
+                    Json::Str(st) => st.clone(),
+                    other => other.to_string_compact(),
+                };
+                s.knobs.push((k.clone(), vs));
+            }
+        }
+        Ok(s)
+    }
+}
+
+/// Topology traffic estimate request (the `trace` subcommand).
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    coll: Coll,
+    algo: String,
+    nodes: usize,
+    ppn: usize,
+    bytes: usize,
+    seed: u64,
+}
+
+impl TraceSpec {
+    pub fn new(coll: Coll, algo: &str) -> Self {
+        Self { coll, algo: algo.to_string(), nodes: 128, ppn: 1, bytes: 1 << 20, seed: 11 }
+    }
+
+    pub fn with_nodes(mut self, nodes: usize) -> Self {
+        self.nodes = nodes;
+        self
+    }
+
+    pub fn with_ppn(mut self, ppn: usize) -> Self {
+        self.ppn = ppn;
+        self
+    }
+
+    pub fn with_bytes(mut self, bytes: usize) -> Self {
+        self.bytes = bytes;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+impl TryFrom<&Json> for TraceSpec {
+    type Error = String;
+
+    fn try_from(j: &Json) -> Result<Self, String> {
+        let coll_s = j.get("collective").and_then(Json::as_str).unwrap_or("bcast");
+        let coll = Coll::parse(coll_s).ok_or_else(|| format!("unknown collective {coll_s:?}"))?;
+        let algo =
+            j.get("algorithm").and_then(Json::as_str).unwrap_or("binomial_halving").to_string();
+        let mut s = TraceSpec::new(coll, &algo);
+        if let Some(n) = j.get("nodes").and_then(Json::as_usize) {
+            s.nodes = n;
+        }
+        if let Some(p) = j.get("ppn").and_then(Json::as_usize) {
+            s.ppn = p;
+        }
+        if let Some(b) = j.get("bytes") {
+            s.bytes = json_size(b)?;
+        }
+        if let Some(x) = j.get("seed").and_then(Json::as_u64) {
+            s.seed = x;
+        }
+        Ok(s)
+    }
+}
+
+/// LLM trace replay request (the `replay` subcommand).  Workloads:
+/// `llama16`, `llama128`, `moe`; profiles: `native`, `pico`, `suboptimal`.
+#[derive(Debug, Clone)]
+pub struct ReplaySpec {
+    workload: String,
+    profile: String,
+    seed: u64,
+}
+
+impl ReplaySpec {
+    pub fn new(workload: &str) -> Self {
+        Self { workload: workload.to_string(), profile: "native".to_string(), seed: 1 }
+    }
+
+    pub fn with_profile(mut self, profile: &str) -> Self {
+        self.profile = profile.to_string();
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+impl TryFrom<&Json> for ReplaySpec {
+    type Error = String;
+
+    fn try_from(j: &Json) -> Result<Self, String> {
+        let workload = j.get("workload").and_then(Json::as_str).unwrap_or("llama16");
+        let mut s = ReplaySpec::new(workload);
+        if let Some(p) = j.get("profile").and_then(Json::as_str) {
+            s.profile = p.to_string();
+        }
+        if let Some(x) = j.get("seed").and_then(Json::as_u64) {
+            s.seed = x;
+        }
+        Ok(s)
+    }
+}
+
+/// Where an external GOAL schedule comes from.
+#[derive(Debug, Clone)]
+pub enum GoalSource {
+    /// GOAL interchange text held in memory.
+    Text(String),
+    /// Path to a GOAL file on disk (`pico import --goal FILE`).
+    File(PathBuf),
+}
+
+impl GoalSource {
+    pub fn text(t: impl Into<String>) -> Self {
+        GoalSource::Text(t.into())
+    }
+
+    pub fn file(p: impl Into<PathBuf>) -> Self {
+        GoalSource::File(p.into())
+    }
+}
+
+/// Placement parameters for running an imported schedule: the schedule
+/// fixes `p`; nodes default to `ceil(p / ppn)` on the engine's system.
+#[derive(Debug, Clone)]
+pub struct ImportRunSpec {
+    nodes: Option<usize>,
+    ppn: usize,
+    seed: u64,
+}
+
+impl ImportRunSpec {
+    pub fn new() -> Self {
+        Self { nodes: None, ppn: 1, seed: 11 }
+    }
+
+    pub fn with_nodes(mut self, nodes: usize) -> Self {
+        self.nodes = Some(nodes);
+        self
+    }
+
+    pub fn with_ppn(mut self, ppn: usize) -> Self {
+        self.ppn = ppn;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+impl Default for ImportRunSpec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TryFrom<&Json> for ImportRunSpec {
+    type Error = String;
+
+    fn try_from(j: &Json) -> Result<Self, String> {
+        let mut s = ImportRunSpec::new();
+        if let Some(n) = j.get("nodes").and_then(Json::as_usize) {
+            s.nodes = Some(n);
+        }
+        if let Some(p) = j.get("ppn").and_then(Json::as_usize) {
+            s.ppn = p;
+        }
+        if let Some(x) = j.get("seed").and_then(Json::as_u64) {
+            s.seed = x;
+        }
+        Ok(s)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Return types
+// ---------------------------------------------------------------------------
+
+/// A validated, sealed external schedule — usable anywhere a [`Goal`] is
+/// (it derefs to the arena): simulate, trace, execute, re-export.
+#[derive(Debug, Clone)]
+pub struct SealedSchedule {
+    goal: Arc<Goal>,
+    origin: String,
+}
+
+impl SealedSchedule {
+    pub fn goal(&self) -> &Arc<Goal> {
+        &self.goal
+    }
+
+    /// Where the schedule came from (file path or `<inline>`).
+    pub fn origin(&self) -> &str {
+        &self.origin
+    }
+
+    /// Re-export as GOAL interchange text (round-trip safe: re-importing
+    /// yields an identical arena).
+    pub fn to_text(&self) -> String {
+        goal_text::to_text(&self.goal)
+    }
+}
+
+impl std::ops::Deref for SealedSchedule {
+    type Target = Goal;
+
+    fn deref(&self) -> &Goal {
+        &self.goal
+    }
+}
+
+/// What [`Engine::campaign`] hands back: outcomes in campaign order and
+/// where the run directory landed (when one was written).
+#[derive(Debug, Clone)]
+pub struct CampaignHandle {
+    pub outcomes: Vec<PointOutcome>,
+    pub run_root: Option<PathBuf>,
+}
+
+impl CampaignHandle {
+    /// Fig. 6 ratio cells over this campaign's outcomes.
+    pub fn ratio_cells(&self) -> Vec<RatioCell> {
+        analysis::best_to_default(&self.outcomes)
+    }
+}
+
+/// Sweep outcomes plus the best-to-default ratio analysis.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub title: String,
+    pub outcomes: Vec<PointOutcome>,
+    pub cells: Vec<RatioCell>,
+}
+
+impl SweepReport {
+    /// The Fig. 6 heatmap plus per-cell winner lines (what `pico sweep`
+    /// prints, byte-for-byte — including the blank separator line the
+    /// pre-facade CLI emitted between the two blocks).
+    pub fn render(&self) -> String {
+        let mut out = analysis::render_ratio_heatmap(&self.title, &self.cells);
+        out.push('\n');
+        out.push_str(&analysis::render_cell_lines(&self.cells));
+        out
+    }
+}
+
+/// One probed point: latency, component shares, tag regions.
+#[derive(Debug, Clone)]
+pub struct PointReport {
+    pub backend: String,
+    pub system: String,
+    pub outcome: PointOutcome,
+}
+
+impl PointReport {
+    /// The `pico probe` text block.
+    pub fn render(&self) -> String {
+        let o = &self.outcome;
+        let mut out = format!(
+            "{} {} on {} nodes={} ppn={} algo={} proto={}\n",
+            self.backend,
+            o.point.collective.label(),
+            self.system,
+            o.point.nodes,
+            o.point.ppn,
+            o.effective_algorithm,
+            o.effective_proto.label()
+        );
+        out.push_str(&format!("  median latency: {}\n", fmt_time(o.median_s)));
+        out.push_str(&format!(
+            "  components: {}\n",
+            analysis::render_components(&o.measurement.components)
+        ));
+        if !o.measurement.tag_times.is_empty() {
+            out.push_str("  tag regions:\n");
+            for (name, s) in &o.measurement.tag_times {
+                out.push_str(&format!("    {name:<28} {}\n", fmt_time(*s)));
+            }
+        }
+        out
+    }
+}
+
+/// One schedule's topology traffic estimate.
+#[derive(Debug, Clone)]
+pub struct TraceOutcome {
+    pub algorithm: String,
+    pub bytes: usize,
+    pub p: usize,
+    pub report: TraceReport,
+}
+
+impl TraceOutcome {
+    /// The `pico trace` text block (Fig. 9 units + uplink load).
+    pub fn render(&self) -> String {
+        let mut out = tracer::render(&self.algorithm, &self.report, self.bytes);
+        out.push_str(&format!(
+            "  max single-group uplink load: {}\n",
+            fmt_size(self.report.max_uplink_bytes())
+        ));
+        out
+    }
+}
+
+/// One replay run: workload identity plus the timing result.
+#[derive(Debug, Clone)]
+pub struct ReplayOutcome {
+    pub workload: String,
+    pub gpus: usize,
+    pub system: String,
+    pub result: ReplayResult,
+}
+
+impl ReplayOutcome {
+    /// The `pico replay` text block.
+    pub fn render(&self) -> String {
+        let r = &self.result;
+        format!(
+            "workload {} on {} ({} GPUs):\n  profile:        {}\n  iteration time: {}\n  communication:  {}\n  compute:        {}\n  invocations:    {} (sim cache hits {})\n",
+            self.workload,
+            self.system,
+            self.gpus,
+            r.profile,
+            fmt_time(r.iteration_s),
+            fmt_time(r.comm_s),
+            fmt_time(r.compute_s),
+            r.invocations,
+            r.sim_cache_hits
+        )
+    }
+}
+
+/// End-to-end report for an imported GOAL schedule: structure, simulated
+/// latency with component shares, and the topology traffic split.
+#[derive(Debug, Clone)]
+pub struct ImportReport {
+    pub system: String,
+    pub p: usize,
+    pub nodes: usize,
+    pub ppn: usize,
+    pub total_ops: usize,
+    pub wire_bytes: usize,
+    pub sim: SimReport,
+    pub trace: TraceReport,
+}
+
+impl ImportReport {
+    /// The `pico import` text block.  Deliberately origin-free so the
+    /// report of a re-exported schedule diffs clean against the original
+    /// (scripts/verify.sh's import smoke stage relies on this).
+    pub fn render(&self) -> String {
+        let (int, ext, tot) = self.trace.in_units_of(self.wire_bytes.max(1));
+        format!(
+            "imported GOAL schedule\n  ranks: {}  ops: {}  wire bytes: {}\n  placement: {} nodes={} ppn={}\n  simulated latency: {}\n  components: {}\n  traffic split (units of total wire bytes): internal {:.3}, external {:.3}, total {:.3}\n",
+            self.p,
+            self.total_ops,
+            fmt_size(self.wire_bytes),
+            self.system,
+            self.nodes,
+            self.ppn,
+            fmt_time(self.sim.total_time),
+            analysis::render_components(&self.sim.components),
+            int,
+            ext,
+            tot
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared JSON helpers
+// ---------------------------------------------------------------------------
+
+fn json_size(v: &Json) -> Result<usize, String> {
+    match v {
+        Json::Num(_) => v.as_usize().ok_or_else(|| "bad size".to_string()),
+        Json::Str(s) => parse_size(s).ok_or_else(|| format!("bad size {s:?}")),
+        other => Err(format!("bad size entry {other:?}")),
+    }
+}
+
+fn parse_sizes(arr: &[Json]) -> Result<Vec<usize>, String> {
+    arr.iter().map(json_size).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::results::VecSink;
+
+    fn engine() -> Engine {
+        Engine::new(EngineConfig::for_system("leonardo"))
+    }
+
+    fn two_point_test() -> TestSpec {
+        let mut t = TestSpec::new("eng", "openmpi", Coll::Allreduce);
+        t.sizes = vec![4096, 1 << 20];
+        t.nodes = vec![4];
+        t.algorithms = vec!["ring".into()];
+        t.iterations = 1;
+        t.warmup = 0;
+        t
+    }
+
+    #[test]
+    fn campaign_into_vec_sink_matches_outcomes() {
+        let e = engine();
+        let mut sink = VecSink::new();
+        let outcomes = e.campaign_into(&CampaignSpec::new(two_point_test()), &mut sink).unwrap();
+        assert_eq!(outcomes.len(), 2);
+        assert_eq!(sink.records.len(), 2);
+        assert_eq!(sink.records[0].id, "p00000");
+        assert_eq!(sink.records[0].bytes, 4096);
+        assert_eq!(sink.records[1].bytes, 1 << 20);
+    }
+
+    #[test]
+    fn engine_methods_share_one_cache() {
+        let e = engine();
+        let spec = ProbeSpec::new("openmpi", Coll::Allreduce).with_algo("ring").with_nodes(4);
+        e.probe(&spec).unwrap();
+        let first = e.cache_stats();
+        assert!(first.misses > 0);
+        // a second subcommand over the same point must hit, not rebuild
+        e.probe(&spec).unwrap();
+        let second = e.cache_stats();
+        assert!(second.hits > first.hits, "{second:?} vs {first:?}");
+        assert_eq!(second.misses, first.misses);
+    }
+
+    #[test]
+    fn sweep_produces_ratio_cells() {
+        let e = engine();
+        let spec = SweepSpec::new("openmpi", Coll::Allreduce)
+            .with_sizes(vec![2048, 64 * 1024])
+            .with_nodes(vec![2])
+            .with_iterations(1);
+        let rep = e.sweep(&spec).unwrap();
+        assert!(!rep.outcomes.is_empty());
+        assert!(!rep.cells.is_empty());
+        assert!(rep.render().contains("t_best"));
+    }
+
+    #[test]
+    fn probe_renders_components() {
+        let e = engine();
+        let rep = e
+            .probe(&ProbeSpec::new("openmpi", Coll::Allreduce).with_instrument(true).with_nodes(4))
+            .unwrap();
+        let text = rep.render();
+        assert!(text.contains("median latency"));
+        assert!(text.contains("components:"));
+        assert!(text.contains("tag regions:"), "{text}");
+    }
+
+    #[test]
+    fn trace_and_replay_run_through_the_facade() {
+        let e = engine();
+        let t = e.trace(&TraceSpec::new(Coll::Bcast, "binomial_halving").with_nodes(16)).unwrap();
+        assert!(t.report.total_bytes() > 0);
+        assert!(t.render().contains("Internal bytes"));
+        let r = e.replay(&ReplaySpec::new("llama16")).unwrap();
+        assert!(r.result.iteration_s > 0.0);
+        assert!(r.render().contains("iteration time"));
+        assert!(e.replay(&ReplaySpec::new("nope")).is_err());
+    }
+
+    #[test]
+    fn import_inline_text_and_reject_garbage() {
+        let e = engine();
+        let text = "num_ranks 2\nelem_bytes 4\ncount 4\ntmp_count 0\nrank 0 {\n  l0: send 16b to 1 tag 0 buf in off 0 len 4\n}\nrank 1 {\n  l0: recv 16b from 0 tag 0 buf out off 0 len 4\n}\n";
+        let sched = e.import(&GoalSource::text(text)).unwrap();
+        assert_eq!(sched.p(), 2);
+        assert_eq!(sched.origin(), "<inline>");
+        let rep = e.run_imported(&sched, &ImportRunSpec::default()).unwrap();
+        assert!(rep.sim.total_time > 0.0);
+        assert_eq!(rep.wire_bytes, 16);
+        assert!(rep.render().contains("simulated latency"));
+        assert!(e.import(&GoalSource::text("nonsense")).is_err());
+        assert!(e.import(&GoalSource::file("/nonexistent/x.goal")).is_err());
+    }
+
+    #[test]
+    fn specs_build_from_json() {
+        let j = Json::parse(
+            r#"{"backend":"openmpi","collective":"allreduce","bytes":"64KiB","nodes":4,
+                "instrument":true,"knobs":{"max_rndv_rails":"2"}}"#,
+        )
+        .unwrap();
+        let p = ProbeSpec::try_from(&j).unwrap();
+        assert_eq!(p.bytes, 64 * 1024);
+        assert!(p.instrument);
+        assert_eq!(p.knobs.len(), 1);
+        let j = Json::parse(r#"{"collective":"bcast","algorithm":"pipeline","bytes":1024}"#).unwrap();
+        let t = TraceSpec::try_from(&j).unwrap();
+        assert_eq!(t.algo, "pipeline");
+        assert_eq!(t.bytes, 1024);
+        assert!(ProbeSpec::try_from(&Json::parse(r#"{"collective":"bogus"}"#).unwrap()).is_err());
+    }
+}

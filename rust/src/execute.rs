@@ -62,11 +62,91 @@ impl RankBuffers {
 
 /// Execute `goal` with the given per-rank input buffers.
 ///
-/// The interpreter is a deterministic cooperative scheduler: ranks run
-/// until they block on an unavailable receive; messages queue FIFO per
-/// (src, dst, tag) channel exactly like the simulator's matching rule.
-/// Panics on deadlock (a schedule-generator bug) or shape mismatch.
+/// Worklist interpreter over the **precompiled dependents CSR** (the same
+/// structure the simulator's event loop walks): each op's remaining-dep
+/// count starts at `dep_count`, the ready set is a min-heap of global op
+/// ids, and completing an op decrements exactly its dependents — `O(V+E)`
+/// total instead of the old quadratic re-scan of the whole frontier (kept
+/// as [`execute_scan`] for differential testing and the §Perf
+/// comparison).  Receives whose (src, dst, tag) channel is empty park on
+/// the channel and are rewoken by the matching send; messages queue FIFO
+/// per channel exactly like the simulator's matching rule.  Panics on
+/// deadlock (a schedule-generator bug) or shape mismatch.
 pub fn execute(goal: &Goal, inputs: Vec<Vec<f32>>, reducer: &dyn Reducer) -> Vec<RankBuffers> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    let p = goal.p();
+    assert_eq!(inputs.len(), p, "need one input buffer per rank");
+    let mut bufs: Vec<RankBuffers> = inputs
+        .into_iter()
+        .map(|input| RankBuffers {
+            input,
+            output: vec![0.0; goal.count],
+            tmp: vec![0.0; goal.tmp_count],
+        })
+        .collect();
+
+    let total: usize = goal.total_ops();
+    let mut remaining: Vec<u32> = (0..total).map(|g| goal.dep_count(g)).collect();
+    // min-heap on global op id: deterministic pop order (lowest ready id
+    // first, matching the old scan's rank-major sweep direction)
+    let mut ready: BinaryHeap<Reverse<usize>> =
+        (0..total).filter(|&g| remaining[g] == 0).map(Reverse).collect();
+    let mut mail: HashMap<(usize, usize, u32), VecDeque<Vec<f32>>> = HashMap::new();
+    // receives blocked on an empty channel, FIFO per channel
+    let mut parked: HashMap<(usize, usize, u32), VecDeque<usize>> = HashMap::new();
+    let mut completed = 0usize;
+
+    while let Some(Reverse(g)) = ready.pop() {
+        let r = goal.rank_of(g);
+        match &goal.kinds[g] {
+            OpKind::Send { peer, seg, tag } => {
+                let data = bufs[r].seg(seg).to_vec();
+                let chan = (r, *peer, *tag);
+                mail.entry(chan).or_default().push_back(data);
+                // wake the first receive waiting on this channel, if any
+                if let Some(w) = parked.get_mut(&chan).and_then(VecDeque::pop_front) {
+                    ready.push(Reverse(w));
+                }
+            }
+            OpKind::Recv { peer, seg, tag } => {
+                let chan = (*peer, r, *tag);
+                let Some(data) = mail.get_mut(&chan).and_then(VecDeque::pop_front) else {
+                    parked.entry(chan).or_default().push_back(g);
+                    continue; // not completed; dependents stay blocked
+                };
+                assert_eq!(data.len(), seg.len, "message length mismatch");
+                bufs[r].seg_mut(seg).copy_from_slice(&data);
+            }
+            OpKind::Reduce { dst, src, op } => {
+                let s = bufs[r].seg(src).to_vec();
+                reducer.reduce(*op, bufs[r].seg_mut(dst), &s);
+            }
+            OpKind::Copy { dst, src } => {
+                let s = bufs[r].seg(src).to_vec();
+                bufs[r].seg_mut(dst).copy_from_slice(&s);
+            }
+            OpKind::Calc { .. } => {}
+        }
+        completed += 1;
+        for &d in goal.dependents(g) {
+            let d = d as usize;
+            remaining[d] -= 1;
+            if remaining[d] == 0 {
+                ready.push(Reverse(d));
+            }
+        }
+    }
+    assert_eq!(completed, total, "deadlock: {completed}/{total} ops executed");
+    bufs
+}
+
+/// The pre-worklist reference interpreter: a repeated dataflow scan over
+/// every rank's whole program (quadratic in ops for deep schedules).  Kept
+/// for differential testing against [`execute`] and the
+/// `perf_hotpaths` old-vs-new comparison; semantics are identical.
+pub fn execute_scan(goal: &Goal, inputs: Vec<Vec<f32>>, reducer: &dyn Reducer) -> Vec<RankBuffers> {
     let p = goal.p();
     assert_eq!(inputs.len(), p, "need one input buffer per rank");
     let mut bufs: Vec<RankBuffers> = inputs
@@ -240,6 +320,39 @@ mod tests {
         b.recv(0, 0, Seg::output(0, 4));
         let g = b.finish_unchecked();
         execute(&g, vec![vec![0.0; 4]], &ScalarReducer);
+    }
+
+    #[test]
+    fn worklist_matches_scan_executor_bitwise() {
+        // the CSR worklist must be observationally identical to the old
+        // quadratic frontier scan: same channels FIFO, same dep-ordered
+        // reductions, hence bit-equal buffers
+        use crate::collectives::{self, Coll};
+        let cases = [
+            (Coll::Allreduce, "rabenseifner", 6usize),
+            (Coll::Allreduce, "segmented_ring", 5),
+            (Coll::Allreduce, "tree_pipelined", 8),
+            (Coll::Bcast, "scatter_allgather", 7),
+            (Coll::ReduceScatter, "pairwise", 4),
+        ];
+        for (coll, algo, p) in cases {
+            let count = p * 12;
+            let goal = collectives::generate(coll, algo, &GenParams::new(p, count)).unwrap();
+            let a = execute(&goal, make_inputs(p, count, 9), &ScalarReducer);
+            let b = execute_scan(&goal, make_inputs(p, count, 9), &ScalarReducer);
+            for r in 0..p {
+                assert_eq!(a[r].output, b[r].output, "{coll:?}:{algo} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn scan_executor_detects_deadlock_too() {
+        let mut b = crate::collectives::GoalBuilder::new(1, 4, 4);
+        b.recv(0, 0, Seg::output(0, 4));
+        let g = b.finish_unchecked();
+        execute_scan(&g, vec![vec![0.0; 4]], &ScalarReducer);
     }
 
     #[test]

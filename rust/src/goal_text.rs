@@ -189,7 +189,7 @@ fn parse_op(line: &str) -> Result<(OpKind, Vec<OpId>), String> {
     let kind = match body.first().copied() {
         Some("send") | Some("recv") => {
             // send <N>b to <peer> tag <t> buf <b> off <o> len <l>
-            if body.len() < 11 {
+            if body.len() < 12 {
                 return Err(format!("short send/recv: {line:?}"));
             }
             // layout: [send|recv, <N>b, to|from, peer, tag, t, buf, b, off, o, len, l]
@@ -290,6 +290,11 @@ mod tests {
     fn parse_rejects_garbage() {
         assert!(from_text("nonsense").is_err());
         assert!(from_text("num_ranks 2\nrank 0 {\n  l0: frobnicate\n}\n").is_err());
+        // truncated send (len value missing) is a typed error, not an
+        // index panic — reachable from untrusted files via `pico import`
+        let short = "num_ranks 2\nelem_bytes 4\ncount 4\ntmp_count 0\nrank 0 {\n  l0: send 16b to 1 tag 0 buf in off 0 len\n}\nrank 1 {\n}\n";
+        let err = from_text(short).unwrap_err();
+        assert!(err.contains("short send/recv"), "{err}");
         // unmatched send fails validation
         let bad = "num_ranks 2\nelem_bytes 4\ncount 4\ntmp_count 0\nrank 0 {\n  l0: send 16b to 1 tag 0 buf in off 0 len 4\n}\nrank 1 {\n}\n";
         assert!(from_text(bad).is_err());

@@ -20,6 +20,11 @@
 //! [`orchestrator`] — `jobs = N` produces byte-identical results to
 //! `jobs = 1` (see `DESIGN.md`, "Parallel campaign engine").
 //!
+//! The crate is **a library with a thin CLI**: the [`engine::Engine`]
+//! facade is the one programmatic API over every subcommand (run / sweep /
+//! probe / trace / replay / autotune / GOAL import); `pico`'s `main` is
+//! argv→spec translation plus `Engine` calls.
+//!
 //! # Example
 //!
 //! Ask for the simulated latency of one collective on a modelled machine:
@@ -27,7 +32,7 @@
 //! ```
 //! use pico::collectives::Coll;
 //! use pico::config::{EnvSpec, TestSpec};
-//! use pico::orchestrator::run_campaign_jobs;
+//! use pico::engine::{CampaignSpec, Engine, EngineConfig};
 //!
 //! // a small sweep: 2 sizes x 2 algorithms on 4 Leonardo-like nodes
 //! let mut spec = TestSpec::new("demo", "openmpi", Coll::Allreduce);
@@ -36,12 +41,12 @@
 //! spec.nodes = vec![4];
 //! spec.iterations = 2;
 //! spec.warmup = 0;
-//! let env = EnvSpec::for_system("leonardo");
 //!
-//! // run the 4-point grid on 2 workers; order matches a serial run
-//! let outcomes = run_campaign_jobs(&spec, &env, None, 2).unwrap();
-//! assert_eq!(outcomes.len(), 4);
-//! assert!(outcomes.iter().all(|o| o.median_s > 0.0));
+//! // one Engine per process: it owns the shared schedule cache
+//! let engine = Engine::new(EngineConfig::for_system("leonardo"));
+//! let handle = engine.campaign(&CampaignSpec::new(spec).with_jobs(2)).unwrap();
+//! assert_eq!(handle.outcomes.len(), 4);
+//! assert!(handle.outcomes.iter().all(|o| o.median_s > 0.0));
 //!
 //! // single-point convenience wrapper
 //! let t = pico::orchestrator::quick_latency(
@@ -55,6 +60,7 @@ pub mod backends;
 pub mod benchkit;
 pub mod collectives;
 pub mod config;
+pub mod engine;
 pub mod execute;
 pub mod goal;
 pub mod goal_text;
@@ -73,5 +79,12 @@ pub mod tracer;
 pub mod tuning;
 pub mod util;
 
+pub use engine::{Engine, EngineConfig};
 pub use goal::{Goal, GoalError, GoalGraph, OpKind, Seg};
 pub use topology::{Allocation, Placement, SystemProfile, Tier};
+
+/// Compile the README's Rust snippets (the library-usage quickstart) as
+/// doctests, so the documented example can never drift from the API.
+#[cfg(doctest)]
+#[doc = include_str!("../../README.md")]
+pub struct ReadmeDoctests;

@@ -1,4 +1,4 @@
-//! pico — CLI front-end (the paper's Fig. 3 ① orchestrator entry).
+//! pico — thin CLI front-end (the paper's Fig. 3 ① orchestrator entry).
 //!
 //! Subcommands:
 //!   list                         inventory: systems, backends, algorithms
@@ -8,45 +8,85 @@
 //!   probe  ...                   one test point, with phase breakdown
 //!   trace  ...                   topology traffic estimate (Fig. 9 style)
 //!   replay ...                   LLM trace replay (Fig. 12 style)
+//!   import --goal F ...          simulate an external GOAL schedule
 //!   help                         this text
 //!
-//! `run` and `sweep` accept `--jobs N` to execute the point grid on N
-//! worker threads (0 = one per CPU); results are byte-identical to a
-//! serial run (see DESIGN.md, "Parallel campaign engine").
+//! Every subcommand is argv→spec translation plus one call into the typed
+//! [`Engine`](pico::engine::Engine) facade — the CLI and library share one
+//! code path (spec structs + the process-wide schedule cache).  `run` and
+//! `sweep` accept `--jobs N` to execute the point grid on N worker threads
+//! (0 = one per CPU); results are byte-identical to a serial run (see
+//! DESIGN.md, "Parallel campaign engine").
 //!
 //! The environment vendors no clap; arguments are parsed by a small
 //! in-tree key-value parser (`--key value` pairs after the subcommand).
+//! Boolean switches (`--instrument`) may omit the value; every other key
+//! requires one — a dangling `--key` is a typed `ArgError`, not a
+//! silently invented `"true"`.
 
 use std::collections::HashMap;
+use std::fmt;
 use std::path::PathBuf;
 use std::process::ExitCode;
 
 use pico::analysis;
 use pico::backends;
-use pico::collectives::{self, Coll, GenParams};
+use pico::collectives::{self, Coll};
 use pico::config::{EnvSpec, TestSpec};
+use pico::engine::{
+    CampaignSpec, Engine, EngineConfig, GoalSource, ImportRunSpec, ProbeSpec, ReplaySpec,
+    SweepSpec, TraceSpec,
+};
 use pico::json::Json;
-use pico::orchestrator::{self, run_campaign, run_campaign_jobs};
-use pico::replay::{self, profiles};
-use pico::results::Granularity;
-use pico::topology::{builtin_profiles, profile_by_name, AllocPolicy, Allocation, Placement, RankOrder};
-use pico::tracer;
+use pico::topology::builtin_profiles;
 use pico::util::{fmt_size, fmt_time, parse_size};
+
+/// Keys that act as boolean switches: a bare `--key` means `true`.
+const BOOL_KEYS: &[&str] = &["instrument"];
+
+/// Typed argv-parse failure (distinguishes the two malformed shapes so the
+/// message can say exactly what was wrong).
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum ArgError {
+    /// A positional token where `--key` was expected.
+    NotAFlag { arg: String },
+    /// A non-boolean `--key` with no following value.
+    MissingValue { key: String },
+}
+
+impl fmt::Display for ArgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArgError::NotAFlag { arg } => {
+                write!(f, "unexpected argument {arg:?} (expected --key value)")
+            }
+            ArgError::MissingValue { key } => {
+                write!(f, "--{key} requires a value (only boolean switches like --instrument may omit it)")
+            }
+        }
+    }
+}
 
 struct Args {
     flags: HashMap<String, String>,
 }
 
 impl Args {
-    fn parse(argv: &[String]) -> Result<Args, String> {
+    fn parse(argv: &[String]) -> Result<Args, ArgError> {
         let mut flags = HashMap::new();
-        let mut it = argv.iter();
+        let mut it = argv.iter().peekable();
         while let Some(a) = it.next() {
             let Some(key) = a.strip_prefix("--") else {
-                return Err(format!("unexpected argument {a:?} (expected --key value)"));
+                return Err(ArgError::NotAFlag { arg: a.clone() });
             };
-            let val = it.next().cloned().unwrap_or_else(|| "true".to_string());
-            flags.insert(key.to_string(), val);
+            let next_is_value = it.peek().is_some_and(|v| !v.starts_with("--"));
+            if next_is_value {
+                flags.insert(key.to_string(), it.next().unwrap().clone());
+            } else if BOOL_KEYS.contains(&key) {
+                flags.insert(key.to_string(), "true".to_string());
+            } else {
+                return Err(ArgError::MissingValue { key: key.to_string() });
+            }
         }
         Ok(Args { flags })
     }
@@ -82,6 +122,15 @@ impl Args {
                 .collect(),
         }
     }
+
+    fn bool_or(&self, key: &str, default: bool) -> Result<bool, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") => Ok(true),
+            Some("false") => Ok(false),
+            Some(v) => Err(format!("--{key}: expected true/false, got {v:?}")),
+        }
+    }
 }
 
 fn main() -> ExitCode {
@@ -105,6 +154,7 @@ fn main() -> ExitCode {
         "probe" => cmd_probe(&args),
         "trace" => cmd_trace(&args),
         "replay" => cmd_replay(&args),
+        "import" => cmd_import(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -135,14 +185,22 @@ usage: pico <command> [--key value ...]
          tuning sweep over all exposed algorithms; prints the ratio heatmap
   probe  [--system leonardo] [--backend openmpi] [--coll allreduce]
          [--algo ring] [--bytes 1MiB] [--nodes 8] [--ppn 1] [--rails N]
-         [--proto Simple|LL] [--instrument true]
+         [--proto Simple|LL] [--instrument]
          one point; prints latency, component and tag breakdown
   trace  [--system leonardo] [--coll bcast] [--algo binomial_halving]
          [--nodes 128] [--ppn 1] [--bytes 1MiB] [--seed 11]
          topology traffic estimate (internal/external volumes)
   replay [--workload llama16|llama128|moe] [--system leonardo]
          [--profile native|pico|suboptimal]
-         LLM trace replay with substituted collective profiles";
+         LLM trace replay with substituted collective profiles
+  import --goal FILE [--system leonardo] [--nodes N] [--ppn 1] [--seed 11]
+         [--emit-goal OUT]
+         simulate an external ATLAHS/LogGOPSim GOAL schedule end-to-end";
+
+/// Build the process's one [`Engine`] from the shared `--system` flag.
+fn engine_for(args: &Args) -> Engine {
+    Engine::new(EngineConfig::for_system(&args.get_or("system", "leonardo")))
+}
 
 fn cmd_list() -> Result<(), String> {
     println!("systems:");
@@ -202,20 +260,23 @@ fn cmd_spec(args: &Args) -> Result<(), String> {
 fn cmd_run(args: &Args) -> Result<(), String> {
     let test_path = args.get("test").ok_or("run: --test test.json required")?;
     let env_path = args.get("env").ok_or("run: --env env.json required")?;
-    let test = TestSpec::from_json(
-        &Json::parse(&std::fs::read_to_string(test_path).map_err(|e| e.to_string())?)?,
-    )?;
-    let env = EnvSpec::from_json(
-        &Json::parse(&std::fs::read_to_string(env_path).map_err(|e| e.to_string())?)?,
-    )?;
-    let out = args.get("out").map(PathBuf::from);
-    let jobs = args.usize_or("jobs", env.parallelism)?;
-    let outcomes = run_campaign_jobs(&test, &env, out.as_deref(), jobs)?;
+    let test_json =
+        Json::parse(&std::fs::read_to_string(test_path).map_err(|e| e.to_string())?)?;
+    let env_json = Json::parse(&std::fs::read_to_string(env_path).map_err(|e| e.to_string())?)?;
+    let engine = Engine::new(EngineConfig::try_from(&env_json)?);
+    let mut spec = CampaignSpec::try_from(&test_json)?;
+    if let Some(out) = args.get("out") {
+        spec = spec.with_out(out);
+    }
+    if let Some(jobs) = args.get("jobs") {
+        spec = spec.with_jobs(jobs.parse().map_err(|_| format!("--jobs: bad integer {jobs:?}"))?);
+    }
+    let handle = engine.campaign(&spec)?;
     println!(
         "{:<12} {:>10} {:>6} {:>20} {:>7} {:>12}",
         "collective", "size", "nodes", "algorithm", "proto", "median"
     );
-    for o in &outcomes {
+    for o in &handle.outcomes {
         println!(
             "{:<12} {:>10} {:>6} {:>20} {:>7} {:>12}",
             o.point.collective.label(),
@@ -226,150 +287,151 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             fmt_time(o.median_s)
         );
     }
-    let cells = analysis::best_to_default(&outcomes);
+    let cells = handle.ratio_cells();
     if !cells.is_empty() {
-        println!("\n{}", analysis::render_ratio_heatmap(&test.name, &cells));
+        println!("\n{}", analysis::render_ratio_heatmap(spec.test().name.as_str(), &cells));
     }
-    if let Some(d) = out {
-        println!("results under {}", d.join(&test.name).display());
+    if let Some(root) = &handle.run_root {
+        println!("results under {}", root.display());
     }
     Ok(())
 }
 
 fn cmd_sweep(args: &Args) -> Result<(), String> {
     let coll = Coll::parse(&args.get_or("coll", "allreduce")).ok_or("bad --coll")?;
-    let mut spec = TestSpec::new("sweep", &args.get_or("backend", "openmpi"), coll);
-    spec.sizes = args.sizes_or("sizes", &[32, 2048, 128 * 1024, 8 << 20, 128 << 20])?;
-    spec.nodes = args
-        .get_or("nodes", "2,8,32")
-        .split(',')
-        .map(|s| s.trim().parse::<usize>().map_err(|_| format!("bad node count {s:?}")))
-        .collect::<Result<Vec<_>, _>>()?;
-    spec.ppn = args.usize_or("ppn", 1)?;
-    spec.iterations = args.usize_or("iters", 3)?;
-    spec.warmup = 1;
-    spec.algorithms = vec!["*".into()];
-    spec.granularity = Granularity::Summary;
-    let env = EnvSpec::for_system(&args.get_or("system", "leonardo"));
-    let jobs = args.usize_or("jobs", env.parallelism)?;
-    let outcomes = run_campaign_jobs(&spec, &env, None, jobs)?;
-    let cells = analysis::best_to_default(&outcomes);
-    println!(
-        "{}",
-        analysis::render_ratio_heatmap(
-            &format!("{} {} on {}", spec.backend, coll.label(), env.system),
-            &cells
+    let mut spec = SweepSpec::new(&args.get_or("backend", "openmpi"), coll)
+        .with_sizes(args.sizes_or("sizes", &[32, 2048, 128 * 1024, 8 << 20, 128 << 20])?)
+        .with_nodes(
+            args.get_or("nodes", "2,8,32")
+                .split(',')
+                .map(|s| s.trim().parse::<usize>().map_err(|_| format!("bad node count {s:?}")))
+                .collect::<Result<Vec<_>, _>>()?,
         )
-    );
-    for c in &cells {
-        println!(
-            "  nodes={:<4} size={:<8} default={:<20} ({}) best={:<20} ({})  r={:.2}",
-            c.nodes,
-            fmt_size(c.bytes),
-            c.default_algo,
-            fmt_time(c.default_s),
-            c.best_algo,
-            fmt_time(c.best_s),
-            c.r
-        );
+        .with_ppn(args.usize_or("ppn", 1)?)
+        .with_iterations(args.usize_or("iters", 3)?);
+    if let Some(jobs) = args.get("jobs") {
+        spec =
+            spec.with_jobs(jobs.parse().map_err(|_| format!("--jobs: bad integer {jobs:?}"))?);
     }
+    let engine = engine_for(args);
+    print!("{}", engine.sweep(&spec)?.render());
     Ok(())
 }
 
 fn cmd_probe(args: &Args) -> Result<(), String> {
     let coll = Coll::parse(&args.get_or("coll", "allreduce")).ok_or("bad --coll")?;
-    let mut spec = TestSpec::new("probe", &args.get_or("backend", "openmpi"), coll);
-    spec.sizes = vec![args.size_or("bytes", 1 << 20)?];
-    spec.nodes = vec![args.usize_or("nodes", 8)?];
-    spec.ppn = args.usize_or("ppn", 1)?;
-    spec.iterations = args.usize_or("iters", 3)?;
-    spec.warmup = 1;
-    spec.instrument = args.get("instrument").is_some();
+    let mut spec = ProbeSpec::new(&args.get_or("backend", "openmpi"), coll)
+        .with_bytes(args.size_or("bytes", 1 << 20)?)
+        .with_nodes(args.usize_or("nodes", 8)?)
+        .with_ppn(args.usize_or("ppn", 1)?)
+        .with_iterations(args.usize_or("iters", 3)?)
+        .with_instrument(args.bool_or("instrument", false)?);
     if let Some(a) = args.get("algo") {
-        spec.algorithms = vec![a.to_string()];
+        spec = spec.with_algo(a);
     }
     if let Some(r) = args.get("rails") {
-        spec.knobs.push(("max_rndv_rails".into(), r.to_string()));
+        spec = spec.with_knob("max_rndv_rails", r);
     }
     if let Some(p) = args.get("proto") {
-        spec.knobs.push(("proto".into(), p.to_string()));
+        spec = spec.with_knob("proto", p);
     }
-    let env = EnvSpec::for_system(&args.get_or("system", "leonardo"));
-    let outcomes = run_campaign(&spec, &env, None)?;
-    let o = &outcomes[0];
-    println!(
-        "{} {} on {} nodes={} ppn={} algo={} proto={}",
-        spec.backend,
-        coll.label(),
-        env.system,
-        o.point.nodes,
-        o.point.ppn,
-        o.effective_algorithm,
-        o.effective_proto.label()
-    );
-    println!("  median latency: {}", fmt_time(o.median_s));
-    let c = o.measurement.components;
-    let t = c.total().max(1e-30);
-    println!(
-        "  components: comm {} ({:.1}%), reduction {} ({:.1}%), datamove {} ({:.1}%), other {} ({:.1}%)",
-        fmt_time(c.comm),
-        100.0 * c.comm / t,
-        fmt_time(c.reduction),
-        100.0 * c.reduction / t,
-        fmt_time(c.datamove),
-        100.0 * c.datamove / t,
-        fmt_time(c.other),
-        100.0 * c.other / t
-    );
-    if !o.measurement.tag_times.is_empty() {
-        println!("  tag regions:");
-        for (name, s) in &o.measurement.tag_times {
-            println!("    {name:<28} {}", fmt_time(*s));
-        }
-    }
+    let engine = engine_for(args);
+    print!("{}", engine.probe(&spec)?.render());
     Ok(())
 }
 
 fn cmd_trace(args: &Args) -> Result<(), String> {
-    let system = profile_by_name(&args.get_or("system", "leonardo")).ok_or("bad --system")?;
     let coll = Coll::parse(&args.get_or("coll", "bcast")).ok_or("bad --coll")?;
-    let algo = args.get_or("algo", "binomial_halving");
-    let nodes = args.usize_or("nodes", 128)?;
-    let ppn = args.usize_or("ppn", 1)?;
-    let bytes = args.size_or("bytes", 1 << 20)?;
-    let seed = args.usize_or("seed", 11)? as u64;
-    let alloc = Allocation::new(&system, nodes, AllocPolicy::Scattered, seed);
-    let placement = Placement::new(&system, &alloc, ppn, RankOrder::Block);
-    let p = placement.n_ranks();
-    let count = orchestrator::effective_count(coll, bytes, p);
-    let goal = collectives::generate(coll, &algo, &GenParams::new(p, count))?;
-    let rep = tracer::trace(&goal, &placement);
-    print!("{}", tracer::render(&algo, &rep, bytes));
-    println!("  max single-group uplink load: {}", fmt_size(rep.max_uplink_bytes()));
+    let spec = TraceSpec::new(coll, &args.get_or("algo", "binomial_halving"))
+        .with_nodes(args.usize_or("nodes", 128)?)
+        .with_ppn(args.usize_or("ppn", 1)?)
+        .with_bytes(args.size_or("bytes", 1 << 20)?)
+        .with_seed(args.usize_or("seed", 11)? as u64);
+    let engine = engine_for(args);
+    print!("{}", engine.trace(&spec)?.render());
     Ok(())
 }
 
 fn cmd_replay(args: &Args) -> Result<(), String> {
-    let system = profile_by_name(&args.get_or("system", "leonardo")).ok_or("bad --system")?;
-    let seed = args.usize_or("seed", 1)? as u64;
-    let trace = match args.get_or("workload", "llama16").as_str() {
-        "llama16" => replay::llama7b(16, seed),
-        "llama128" => replay::llama7b(128, seed),
-        "moe" => replay::mistral_moe(64, seed),
-        other => return Err(format!("unknown workload {other:?}")),
-    };
-    let profile = match args.get_or("profile", "native").as_str() {
-        "native" => None,
-        "pico" => Some(profiles::pico_optimized()),
-        "suboptimal" => Some(profiles::suboptimal_ll()),
-        other => return Err(format!("unknown profile {other:?}")),
-    };
-    let r = replay::replay(&trace, &system, profile.as_ref(), seed);
-    println!("workload {} on {} ({} GPUs):", trace.name, system.name, trace.gpus);
-    println!("  profile:        {}", r.profile);
-    println!("  iteration time: {}", fmt_time(r.iteration_s));
-    println!("  communication:  {}", fmt_time(r.comm_s));
-    println!("  compute:        {}", fmt_time(r.compute_s));
-    println!("  invocations:    {} (sim cache hits {})", r.invocations, r.sim_cache_hits);
+    let spec = ReplaySpec::new(&args.get_or("workload", "llama16"))
+        .with_profile(&args.get_or("profile", "native"))
+        .with_seed(args.usize_or("seed", 1)? as u64);
+    let engine = engine_for(args);
+    print!("{}", engine.replay(&spec)?.render());
     Ok(())
+}
+
+fn cmd_import(args: &Args) -> Result<(), String> {
+    let path = args.get("goal").ok_or("import: --goal FILE required")?;
+    let engine = engine_for(args);
+    let sched = engine.import(&GoalSource::file(path))?;
+    // origin goes to stderr so the stdout report of a re-exported schedule
+    // diffs clean against the original (scripts/verify.sh smoke stage)
+    eprintln!("importing {} ({} ranks, {} ops)", sched.origin(), sched.p(), sched.total_ops());
+    if let Some(out) = args.get("emit-goal") {
+        std::fs::write(out, sched.to_text()).map_err(|e| format!("{out}: {e}"))?;
+        eprintln!("re-exported GOAL text to {out}");
+    }
+    let mut spec = ImportRunSpec::new()
+        .with_ppn(args.usize_or("ppn", 1)?)
+        .with_seed(args.usize_or("seed", 11)? as u64);
+    if args.get("nodes").is_some() {
+        spec = spec.with_nodes(args.usize_or("nodes", 0)?);
+    }
+    print!("{}", engine.run_imported(&sched, &spec)?.render());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_key_value_pairs() {
+        let a = Args::parse(&argv(&["--coll", "allreduce", "--bytes", "1MiB"])).unwrap();
+        assert_eq!(a.get("coll"), Some("allreduce"));
+        assert_eq!(a.size_or("bytes", 0).unwrap(), 1 << 20);
+        assert_eq!(a.get("nope"), None);
+    }
+
+    #[test]
+    fn parse_rejects_dangling_non_boolean_flag() {
+        // trailing --key with no value
+        let e = Args::parse(&argv(&["--coll"])).err().expect("must reject");
+        assert_eq!(e, ArgError::MissingValue { key: "coll".into() });
+        // --key immediately followed by another flag
+        let e = Args::parse(&argv(&["--bytes", "--nodes", "8"])).err().expect("must reject");
+        assert_eq!(e, ArgError::MissingValue { key: "bytes".into() });
+    }
+
+    #[test]
+    fn parse_accepts_bare_boolean_switches() {
+        let a = Args::parse(&argv(&["--instrument", "--coll", "allreduce"])).unwrap();
+        assert_eq!(a.get("instrument"), Some("true"));
+        assert!(a.bool_or("instrument", false).unwrap());
+        // explicit values still work, and false is honoured (the old
+        // parser treated any presence as true)
+        let a = Args::parse(&argv(&["--instrument", "false"])).unwrap();
+        assert!(!a.bool_or("instrument", false).unwrap());
+        let a = Args::parse(&argv(&["--instrument", "banana"])).unwrap();
+        assert!(a.bool_or("instrument", false).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_positional_arguments() {
+        let e = Args::parse(&argv(&["whoops", "--coll", "allreduce"])).err().expect("must reject");
+        assert_eq!(e, ArgError::NotAFlag { arg: "whoops".into() });
+    }
+
+    #[test]
+    fn arg_errors_render_helpful_messages() {
+        let e = ArgError::MissingValue { key: "bytes".into() };
+        assert!(e.to_string().contains("--bytes requires a value"));
+        let e = ArgError::NotAFlag { arg: "x".into() };
+        assert!(e.to_string().contains("expected --key value"));
+    }
 }

@@ -59,7 +59,7 @@ use crate::config::{resolve, EnvSpec, TestPoint, TestSpec};
 use crate::goal::{Goal, ReduceOp};
 use crate::metadata;
 use crate::netmodel::Proto;
-use crate::results::{Granularity, Measurement, OrderedRecordSink, Record, RunDir};
+use crate::results::{Granularity, Measurement, OrderedRecordSink, Record, RecordSink, RunDir};
 use crate::sim::{simulate, SimContext};
 use crate::sync::skew_profile;
 use crate::topology::{Allocation, Placement, SystemProfile};
@@ -527,7 +527,12 @@ pub fn run_campaign_jobs_cached(
     jobs: usize,
     cache: &ScheduleCache,
 ) -> Result<Vec<PointOutcome>, String> {
-    let (points, backend) = resolve(spec, env)?;
+    // Resolved again inside run_campaign_sink; this pass exists so an
+    // invalid spec errors *before* the run directory is created and so the
+    // first point can seed the metadata snapshot.  Resolution is pure
+    // descriptor expansion — no generation or simulation — so the repeat
+    // costs microseconds against a campaign that simulates every point.
+    let (points, _backend) = resolve(spec, env)?;
     let profile = env.profile()?;
     let mut run_dir = match out_dir {
         Some(d) => {
@@ -555,26 +560,51 @@ pub fn run_campaign_jobs_cached(
         rd.write_descriptor("metadata.json", &meta).map_err(|e| e.to_string())?;
     }
 
-    let backend_ref: &dyn Backend = backend.as_ref();
-    let outcomes = {
-        let mut sink = run_dir.as_mut().map(OrderedRecordSink::new);
-        parallel_ordered(
-            &points,
-            jobs,
-            |_, point| run_point_cached(backend_ref, &profile, env, spec, point, cache),
-            |i, outcome| {
-                if let Some(sink) = sink.as_mut() {
-                    let rec = make_record(i, spec, backend_ref.name(), outcome);
-                    sink.push(i, rec).map_err(|e| e.to_string())?;
-                }
-                Ok(())
-            },
-        )?
+    let outcomes = match run_dir.as_mut() {
+        Some(rd) => {
+            let mut sink = OrderedRecordSink::new(rd);
+            run_campaign_sink(spec, env, jobs, cache, Some(&mut sink))?
+        }
+        None => run_campaign_sink(spec, env, jobs, cache, None)?,
     };
     if let Some(rd) = run_dir.as_ref() {
         rd.finalize().map_err(|e| e.to_string())?;
     }
     Ok(outcomes)
+}
+
+/// The sink-generic campaign core: expand `(spec, env)` into the point
+/// grid, run it on `jobs` workers against the shared schedule `cache`, and
+/// stream one standardized [`Record`] per point into `sink` in exact
+/// campaign order.
+///
+/// This is the single code path under every entry point: the run-directory
+/// flavours above wrap it with an [`OrderedRecordSink`] plus descriptor /
+/// metadata capture, while [`Engine::campaign_into`](crate::engine::Engine::campaign_into)
+/// passes any caller-owned [`RecordSink`] (e.g. an in-memory
+/// [`VecSink`](crate::results::VecSink)) and no directory is touched.
+pub fn run_campaign_sink(
+    spec: &TestSpec,
+    env: &EnvSpec,
+    jobs: usize,
+    cache: &ScheduleCache,
+    mut sink: Option<&mut dyn RecordSink>,
+) -> Result<Vec<PointOutcome>, String> {
+    let (points, backend) = resolve(spec, env)?;
+    let profile = env.profile()?;
+    let backend_ref: &dyn Backend = backend.as_ref();
+    parallel_ordered(
+        &points,
+        jobs,
+        |_, point| run_point_cached(backend_ref, &profile, env, spec, point, cache),
+        |i, outcome| {
+            if let Some(sink) = sink.as_deref_mut() {
+                let rec = make_record(i, spec, backend_ref.name(), outcome);
+                sink.push(i, rec)?;
+            }
+            Ok(())
+        },
+    )
 }
 
 /// Convenience: single-point latency query used by examples/benches —

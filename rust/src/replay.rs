@@ -235,6 +235,21 @@ pub fn replay(
     replay_cached(trace, system, profile, seed, &ScheduleCache::new())
 }
 
+/// [`replay`] through an [`Engine`](crate::engine::Engine): the system
+/// profile comes from the engine's env descriptor and every invocation's
+/// schedule is drawn from the engine's process-wide cache, so back-to-back
+/// profile comparisons (and any campaigns the same process ran) share
+/// skeletons.
+pub fn replay_engine(
+    engine: &crate::engine::Engine,
+    trace: &Trace,
+    profile: Option<&Profile>,
+    seed: u64,
+) -> Result<ReplayResult, String> {
+    let system = engine.env().profile()?;
+    Ok(replay_cached(trace, &system, profile, seed, engine.cache()))
+}
+
 /// [`replay`] with a caller-owned schedule cache, so a harness comparing
 /// several profiles over the same trace (Fig. 12 runs native / optimized /
 /// suboptimal back to back) builds each invocation's schedule arena once

@@ -240,6 +240,45 @@ impl RunDir {
     }
 }
 
+/// Destination for campaign records — the pluggable half of the
+/// [`Engine`](crate::engine::Engine) facade.
+///
+/// The orchestrator builds one [`Record`] per test point and delivers them
+/// with strictly increasing `seq` (0-based campaign order — the ordered
+/// prefix streaming in [`crate::orchestrator::parallel_ordered`] guarantees
+/// this even on a multi-worker campaign).  Implementations choose what
+/// "commit" means: [`OrderedRecordSink`] writes the standardized run
+/// directory, [`VecSink`] buffers in memory for library users and tests.
+pub trait RecordSink {
+    /// Accept record number `seq` (0-based campaign order).
+    fn push(&mut self, seq: usize, rec: Record) -> Result<(), String>;
+}
+
+/// In-memory [`RecordSink`]: collects every record in campaign order.
+/// The library-user counterpart of the run directory — an
+/// [`Engine::campaign_into`](crate::engine::Engine::campaign_into) call
+/// lands here without touching the filesystem.  Unlike the directory
+/// sink it keeps `Granularity::None` records too (the caller asked for
+/// them in memory; Table II only governs what is *stored on disk*).
+#[derive(Debug, Default)]
+pub struct VecSink {
+    pub records: Vec<Record>,
+}
+
+impl VecSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl RecordSink for VecSink {
+    fn push(&mut self, seq: usize, rec: Record) -> Result<(), String> {
+        debug_assert_eq!(seq, self.records.len(), "records must arrive in campaign order");
+        self.records.push(rec);
+        Ok(())
+    }
+}
+
 /// Ordered streaming writer over a [`RunDir`].
 ///
 /// The parallel campaign engine's workers finish test points out of order;
@@ -280,6 +319,12 @@ impl<'a> OrderedRecordSink<'a> {
             self.next += 1;
         }
         Ok(())
+    }
+}
+
+impl RecordSink for OrderedRecordSink<'_> {
+    fn push(&mut self, seq: usize, rec: Record) -> Result<(), String> {
+        OrderedRecordSink::push(self, seq, rec).map_err(|e| e.to_string())
     }
 }
 
@@ -408,6 +453,30 @@ mod tests {
             idx.iter().map(|e| e.get("id").unwrap().as_str().unwrap().to_string()).collect();
         assert_eq!(ids, vec!["p00000", "p00001", "p00002", "p00003"]);
         fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn vec_sink_keeps_records_in_campaign_order() {
+        let rec = |i: usize| Record {
+            id: format!("p{i:05}"),
+            collective: "allreduce".into(),
+            backend: "openmpi-sim".into(),
+            bytes: 1024,
+            nodes: 2,
+            ppn: 1,
+            requested_algorithm: None,
+            effective_algorithm: "ring".into(),
+            knobs_effective: vec![],
+            knobs_degraded: vec![],
+            measurement: meas(),
+            granularity: Granularity::None, // VecSink keeps even None records
+        };
+        let mut sink = VecSink::new();
+        RecordSink::push(&mut sink, 0, rec(0)).unwrap();
+        RecordSink::push(&mut sink, 1, rec(1)).unwrap();
+        assert_eq!(sink.records.len(), 2);
+        assert_eq!(sink.records[0].id, "p00000");
+        assert_eq!(sink.records[1].id, "p00001");
     }
 
     #[test]

@@ -6,10 +6,11 @@
 use std::collections::BTreeMap;
 
 use crate::collectives::Coll;
-use crate::config::{EnvSpec, TestSpec};
+use crate::config::TestSpec;
+use crate::engine::Engine;
 use crate::json::Json;
 use crate::netmodel::Proto;
-use crate::orchestrator::{run_campaign_jobs_cached, PointOutcome, ScheduleCache};
+use crate::orchestrator::PointOutcome;
 
 /// The winning configuration for one (nodes, bytes) cell.
 #[derive(Debug, Clone)]
@@ -120,21 +121,16 @@ pub fn fit_rules(coll: Coll, choices: &[BestChoice]) -> Profile {
 }
 
 /// Run a tuning sweep and fit its winners into a [`Profile`], sourcing
-/// schedules from a caller-owned [`ScheduleCache`].
+/// schedules from the [`Engine`]'s process-wide cache.
 ///
 /// This is the multi-campaign cache plumbing: an autotuner that sweeps
-/// several collectives (or refines a grid iteratively) passes the same
-/// cache to every call, so the byte-agnostic skeletons compiled for the
-/// first sweep serve all later ones.  The cache never needs invalidating
-/// between campaigns — its key covers every generator input, and schedules
-/// are placement-independent (only the simulation consumes topology).
-pub fn autotune(
-    spec: &TestSpec,
-    env: &EnvSpec,
-    jobs: usize,
-    cache: &ScheduleCache,
-) -> Result<(Vec<PointOutcome>, Profile), String> {
-    let outcomes = run_campaign_jobs_cached(spec, env, None, jobs, cache)?;
+/// several collectives (or refines a grid iteratively) calls this against
+/// the same engine, so the byte-agnostic skeletons compiled for the first
+/// sweep serve all later ones.  The cache never needs invalidating between
+/// campaigns — its key covers every generator input, and schedules are
+/// placement-independent (only the simulation consumes topology).
+pub fn autotune(engine: &Engine, spec: &TestSpec) -> Result<(Vec<PointOutcome>, Profile), String> {
+    let outcomes = engine.run_spec(spec)?;
     let choices = best_choices(&outcomes);
     let mut profile = fit_rules(spec.collective, &choices);
     profile.name = format!("autotuned-{}", spec.name);
@@ -256,23 +252,23 @@ mod tests {
 
     #[test]
     fn autotune_fits_profile_and_shares_cache() {
+        use crate::engine::EngineConfig;
         let mut spec = TestSpec::new("tune", "openmpi", Coll::Allreduce);
         spec.sizes = vec![1024, 1 << 20];
         spec.nodes = vec![4];
         spec.algorithms = vec!["ring".into(), "recursive_doubling".into()];
         spec.iterations = 1;
         spec.warmup = 0;
-        let env = EnvSpec::for_system("leonardo");
-        let cache = ScheduleCache::new();
-        let (outcomes, profile) = autotune(&spec, &env, 1, &cache).unwrap();
+        let engine = Engine::new(EngineConfig::for_system("leonardo"));
+        let (outcomes, profile) = autotune(&engine, &spec).unwrap();
         assert!(!outcomes.is_empty());
         assert!(!profile.rules.is_empty());
         assert!(profile.name.starts_with("autotuned-"));
         assert!(profile.select(Coll::Allreduce, 512).is_some());
-        // a second sweep over the same grid is served from the cache
-        let before = cache.stats().hits;
-        autotune(&spec, &env, 1, &cache).unwrap();
-        assert!(cache.stats().hits > before);
+        // a second sweep over the same grid is served from the engine cache
+        let before = engine.cache_stats().hits;
+        autotune(&engine, &spec).unwrap();
+        assert!(engine.cache_stats().hits > before);
     }
 
     #[test]

@@ -1,0 +1,204 @@
+//! Engine facade acceptance tests: CLI-vs-library parity (byte-identical
+//! run directories), the Engine-only VecSink campaign, the process-wide
+//! schedule cache, and the GOAL import → simulate → re-export round trip
+//! on the checked-in golden file.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use pico::collectives::Coll;
+use pico::config::TestSpec;
+use pico::engine::{
+    CampaignSpec, Engine, EngineConfig, GoalSource, ImportRunSpec, ProbeSpec,
+};
+use pico::json::Json;
+use pico::results::VecSink;
+
+const GOLDEN_GOAL: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/data/ring4.goal");
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("pico_facade_{name}_{}", std::process::id()))
+}
+
+/// Relative path → file bytes for every file under `root`.
+fn dir_snapshot(root: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(root: &Path, dir: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        for entry in fs::read_dir(dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.is_dir() {
+                walk(root, &path, out);
+            } else {
+                let rel = path.strip_prefix(root).unwrap().to_string_lossy().into_owned();
+                out.insert(rel, fs::read(&path).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(root, root, &mut out);
+    out
+}
+
+#[test]
+fn cli_and_engine_produce_byte_identical_run_dirs() {
+    // pin the only wall-clock field so metadata.json is comparable
+    std::env::set_var("PICO_TIMESTAMP", "1700000000");
+    let base = tmp("parity");
+    let _ = fs::remove_dir_all(&base);
+    fs::create_dir_all(&base).unwrap();
+
+    let mut test = TestSpec::new("parity", "openmpi", Coll::Allreduce);
+    test.sizes = vec![2048, 64 * 1024];
+    test.nodes = vec![2, 4];
+    test.algorithms = vec!["ring".into(), "rabenseifner".into()];
+    test.iterations = 2;
+    test.warmup = 1;
+    test.seed = 7;
+    let env = pico::config::EnvSpec::for_system("leonardo");
+    let test_path = base.join("test.json");
+    let env_path = base.join("env.json");
+    fs::write(&test_path, test.to_json().to_string_pretty()).unwrap();
+    fs::write(&env_path, env.to_json().to_string_pretty()).unwrap();
+
+    // main-path: the actual binary, argv → spec → Engine
+    let cli_out = base.join("cli");
+    let out = Command::new(env!("CARGO_BIN_EXE_pico"))
+        .args([
+            "run",
+            "--test",
+            test_path.to_str().unwrap(),
+            "--env",
+            env_path.to_str().unwrap(),
+            "--out",
+            cli_out.to_str().unwrap(),
+            "--jobs",
+            "2",
+        ])
+        .env("PICO_TIMESTAMP", "1700000000")
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "CLI run failed: {}", String::from_utf8_lossy(&out.stderr));
+
+    // library path: same descriptors through the typed facade
+    let eng_out = base.join("engine");
+    let env_json = Json::parse(&fs::read_to_string(&env_path).unwrap()).unwrap();
+    let test_json = Json::parse(&fs::read_to_string(&test_path).unwrap()).unwrap();
+    let engine = Engine::new(EngineConfig::try_from(&env_json).unwrap());
+    let spec = CampaignSpec::try_from(&test_json).unwrap().with_out(&eng_out).with_jobs(2);
+    let handle = engine.campaign(&spec).unwrap();
+    assert_eq!(handle.outcomes.len(), 2 * 2 * 2);
+    assert_eq!(handle.run_root.as_deref(), Some(eng_out.join("parity").as_path()));
+
+    let a = dir_snapshot(&cli_out.join("parity"));
+    let b = dir_snapshot(&eng_out.join("parity"));
+    assert_eq!(
+        a.keys().collect::<Vec<_>>(),
+        b.keys().collect::<Vec<_>>(),
+        "run dirs must contain the same files"
+    );
+    for (file, bytes) in &a {
+        assert_eq!(bytes, &b[file], "{file} differs between CLI and Engine runs");
+    }
+    fs::remove_dir_all(&base).unwrap();
+}
+
+#[test]
+fn engine_only_two_point_campaign_into_vec_sink() {
+    // no argv anywhere: spec structs in, records in memory out
+    let mut test = TestSpec::new("vecsink", "openmpi", Coll::Allreduce);
+    test.sizes = vec![4096, 1 << 20]; // 2 points
+    test.nodes = vec![4];
+    test.algorithms = vec!["ring".into()];
+    test.iterations = 2;
+    test.warmup = 0;
+    let engine = Engine::new(EngineConfig::for_system("leonardo"));
+    let mut sink = VecSink::new();
+    let outcomes = engine.campaign_into(&CampaignSpec::new(test), &mut sink).unwrap();
+    assert_eq!(outcomes.len(), 2);
+    assert_eq!(sink.records.len(), 2);
+    assert_eq!(sink.records[0].id, "p00000");
+    assert_eq!(sink.records[1].id, "p00001");
+    assert_eq!(sink.records[0].effective_algorithm, "ring");
+    // record medians agree with the outcomes they were built from
+    for (rec, o) in sink.records.iter().zip(&outcomes) {
+        assert_eq!(rec.bytes, o.point.bytes);
+        assert_eq!(rec.measurement.times, o.measurement.times);
+    }
+}
+
+#[test]
+fn schedule_cache_is_shared_across_engine_calls() {
+    let engine = Engine::new(EngineConfig::for_system("leonardo"));
+    let probe = ProbeSpec::new("openmpi", Coll::Allreduce)
+        .with_algo("ring")
+        .with_bytes(1 << 20)
+        .with_nodes(4)
+        .with_iterations(1);
+    engine.probe(&probe).unwrap();
+    let first = engine.cache_stats();
+    assert!(first.misses > 0, "first call must populate the cache");
+    // second subcommand in the same process: served by the same instance
+    engine.probe(&probe).unwrap();
+    let second = engine.cache_stats();
+    assert!(second.hits > first.hits, "expected cache hits, got {second:?} after {first:?}");
+    assert_eq!(second.misses, first.misses, "no schedule may be rebuilt");
+}
+
+#[test]
+fn import_golden_goal_simulates_and_round_trips() {
+    let engine = Engine::new(EngineConfig::for_system("leonardo"));
+    let sched = engine.import(&GoalSource::file(GOLDEN_GOAL)).unwrap();
+    assert_eq!(sched.p(), 4);
+    assert_eq!(sched.total_ops(), 11);
+    assert_eq!(sched.total_wire_bytes(), 4 * 16);
+
+    // end-to-end simulate + trace on the engine's system
+    let report = engine.run_imported(&sched, &ImportRunSpec::default()).unwrap();
+    assert_eq!(report.p, 4);
+    assert_eq!(report.nodes, 4);
+    assert!(report.sim.total_time > 0.0 && report.sim.total_time.is_finite());
+    assert!(report.sim.components.comm > 0.0);
+    assert_eq!(report.trace.total_bytes(), 64);
+    let text = report.render();
+    assert!(text.contains("simulated latency"), "{text}");
+
+    // golden round trip: export → re-import → identical arena, identical sim
+    let exported = sched.to_text();
+    let again = engine.import(&GoalSource::text(&exported)).unwrap();
+    assert_eq!(*again.goal().as_ref(), *sched.goal().as_ref());
+    let report2 = engine.run_imported(&again, &ImportRunSpec::default()).unwrap();
+    assert_eq!(report.sim.total_time, report2.sim.total_time);
+    assert_eq!(report.render(), report2.render());
+
+    // data semantics survive import: rank 3 reduces two copies of rank 0's
+    // staged buffer, so its output is exactly 2x rank 0's input
+    use pico::execute::{execute, make_inputs, ScalarReducer};
+    let inputs = make_inputs(4, 4, 3);
+    let want: Vec<f32> = inputs[0].iter().map(|x| 2.0 * x).collect();
+    let bufs = execute(sched.goal(), inputs, &ScalarReducer);
+    assert_eq!(bufs[3].output, want);
+}
+
+#[test]
+fn cli_import_subcommand_runs_end_to_end() {
+    let out = Command::new(env!("CARGO_BIN_EXE_pico"))
+        .args(["import", "--goal", GOLDEN_GOAL, "--system", "leonardo"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("imported GOAL schedule"), "{stdout}");
+    assert!(stdout.contains("ranks: 4"), "{stdout}");
+    assert!(stdout.contains("simulated latency"), "{stdout}");
+    // a malformed file is a clean typed error, not a panic
+    let bad = tmp("badgoal");
+    fs::write(&bad, "num_ranks 1\nrank 0 {\n  l0: frobnicate\n}\n").unwrap();
+    let out = Command::new(env!("CARGO_BIN_EXE_pico"))
+        .args(["import", "--goal", bad.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("error:"));
+    fs::remove_file(&bad).unwrap();
+}

@@ -5,6 +5,8 @@
 #   3. rustdoc with warnings denied
 #   4. parallel-equivalence smoke: a 48-point sweep run with --jobs 1 and
 #      --jobs 4 must produce byte-identical run directories.
+#   5. GOAL-import smoke: import the checked-in golden schedule, simulate
+#      it, re-export + re-import, and diff the two reports.
 #
 # Every stage runs under `set -euo pipefail`, so the first non-zero exit
 # aborts the script with that stage's status.
@@ -66,5 +68,20 @@ if [ "$n_records" -lt 32 ]; then
 fi
 diff -r "$TMP/serial/paritycheck" "$TMP/par/paritycheck"
 echo "OK: $n_records records byte-identical at jobs=1 and jobs=4"
+
+echo "== smoke: GOAL import (golden file -> simulate -> re-export round trip)"
+GOLD=rust/tests/data/ring4.goal
+# import the checked-in golden schedule and keep the simulated report
+"$BIN" import --goal "$GOLD" --system leonardo > "$TMP/import1.txt" 2>/dev/null
+# re-export it as GOAL text, re-import that, and diff the two reports:
+# the sealed arena (and therefore the simulation) must be identical
+"$BIN" import --goal "$GOLD" --system leonardo \
+    --emit-goal "$TMP/reexport.goal" > /dev/null 2>&1
+"$BIN" import --goal "$TMP/reexport.goal" --system leonardo \
+    > "$TMP/import2.txt" 2>/dev/null
+diff "$TMP/import1.txt" "$TMP/import2.txt"
+grep -q "ranks: 4" "$TMP/import1.txt"
+grep -q "simulated latency" "$TMP/import1.txt"
+echo "OK: GOAL import report stable across an export/import round trip"
 
 echo "verify: all checks passed"
