@@ -278,4 +278,64 @@ fn main() {
     }
 
     ir.write_if_env("PICO_BENCH_OUT");
+
+    // ---- overlap composer + workload layer (BENCH_overlap.json) -----------
+    // Set PICO_BENCH_OVERLAP_OUT=<path> (scripts/bench.sh does) to persist
+    // this section as its own bench-trajectory entry.
+    section("L3: overlap composer + dnn_step workload");
+    let mut ov = BenchJson::new("overlap");
+    {
+        use pico::compose::{compose, ChainPolicy};
+        use pico::engine::{Engine, EngineConfig, OverlapSpec};
+        use pico::workload::{ChainKind, DnnStepSpec, WorkloadSpec};
+
+        // composition cost: offset-shift concatenation of 4 sealed
+        // p=128 ring all-reduces (the pure-IR hot path, no simulation)
+        let base = collectives::generate(
+            Coll::Allreduce,
+            "ring",
+            &GenParams::new(128, 128 * 64),
+        )
+        .unwrap();
+        let t_comp = bench("overlap: compose 4x p=128 ring (serial)", 1, 10, || {
+            compose(&[&base, &base, &base, &base], &ChainPolicy::Serial).unwrap().total_ops()
+        });
+        ov.set_seconds("compose_4x_p128_s", t_comp);
+
+        // end-to-end dnn_step: lower + compose + simulate, ready vs serial
+        let engine = Engine::new(EngineConfig::for_system("leonardo"));
+        let w = WorkloadSpec::dnn_step("bench", DnnStepSpec::new(64 << 20, 4, 4e-3));
+        let ready_spec =
+            OverlapSpec::workload(w.clone()).with_nodes(16).with_chain(ChainKind::Ready);
+        let serial_spec =
+            OverlapSpec::workload(w).with_nodes(16).with_chain(ChainKind::Serial);
+        let t_ready = bench("overlap: dnn_step 4-bucket ready (p=16)", 1, 5, || {
+            engine.overlap(&ready_spec).unwrap().sim.total_time
+        });
+        let t_serial = bench("overlap: dnn_step serial chain (p=16)", 1, 5, || {
+            engine.overlap(&serial_spec).unwrap().sim.total_time
+        });
+        ov.set_seconds("dnn_step_ready_wall_s", t_ready);
+        ov.set_seconds("dnn_step_serial_wall_s", t_serial);
+        let ready = engine.overlap(&ready_spec).unwrap();
+        println!(
+            "  -> dnn_step virtual time: ready {:.3} ms vs serial baseline {:.3} ms ({:.2}x, {:.0}% comm hidden)",
+            ready.sim.total_time * 1e3,
+            ready.metrics.serial_s * 1e3,
+            ready.metrics.speedup,
+            100.0 * ready.metrics.efficiency
+        );
+        ov.set("dnn_step_virtual_ready_s", ready.sim.total_time);
+        ov.set("dnn_step_virtual_serial_s", ready.metrics.serial_s);
+        ov.set("dnn_step_overlap_efficiency", ready.metrics.efficiency);
+        let stats = engine.cache_stats();
+        println!(
+            "  -> bucket-skeleton reuse: {} skeletons, {} rescales, {} hits",
+            stats.skeletons, stats.rescales, stats.hits
+        );
+        ov.set("cache_skeletons", stats.skeletons);
+        ov.set("cache_rescales", stats.rescales);
+        ov.set("cache_hits", stats.hits);
+    }
+    ov.write_if_env("PICO_BENCH_OVERLAP_OUT");
 }

@@ -125,6 +125,94 @@ pub fn render_components(c: &crate::sim::Components) -> String {
     )
 }
 
+/// Compute/communication overlap metrics for a composed schedule
+/// ([`crate::compose`]): how much of the serial-replay communication time
+/// the overlapping schedule actually hid.
+///
+/// Definitions (all virtual seconds):
+/// - `exposed_comm_s` = overlapped total − compute: the communication the
+///   critical path could not hide behind compute;
+/// - `serial_comm_s` = serial-baseline total − compute: what the same
+///   traffic costs when replayed one collective at a time;
+/// - `hidden_comm_s` = serial_comm − exposed_comm;
+/// - `efficiency` = hidden / serial_comm ∈ [0, 1] (0 when there is no
+///   communication to hide);
+/// - `speedup` = serial / overlapped.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OverlapMetrics {
+    pub total_s: f64,
+    pub compute_s: f64,
+    pub serial_s: f64,
+    pub exposed_comm_s: f64,
+    pub serial_comm_s: f64,
+    pub hidden_comm_s: f64,
+    pub efficiency: f64,
+    pub speedup: f64,
+}
+
+/// Derive [`OverlapMetrics`] from the overlapped makespan, the compute
+/// timeline length, and the serial-baseline makespan.
+pub fn overlap_metrics(total_s: f64, compute_s: f64, serial_s: f64) -> OverlapMetrics {
+    let exposed_comm_s = (total_s - compute_s).max(0.0);
+    let serial_comm_s = (serial_s - compute_s).max(0.0);
+    let hidden_comm_s = (serial_comm_s - exposed_comm_s).max(0.0);
+    let efficiency = if serial_comm_s > 0.0 {
+        (hidden_comm_s / serial_comm_s).clamp(0.0, 1.0)
+    } else {
+        0.0
+    };
+    let speedup = if total_s > 0.0 { serial_s / total_s } else { 0.0 };
+    OverlapMetrics {
+        total_s,
+        compute_s,
+        serial_s,
+        exposed_comm_s,
+        serial_comm_s,
+        hidden_comm_s,
+        efficiency,
+        speedup,
+    }
+}
+
+/// The `pico overlap` metrics block.  `baseline_note` names what the
+/// serial baseline actually was (it differs per route: workloads replay
+/// compute + one monolithic collective, `--repeat` sums standalone
+/// per-phase makespans).
+pub fn render_overlap(m: &OverlapMetrics, baseline_note: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("  makespan:           {}\n", fmt_time(m.total_s)));
+    out.push_str(&format!(
+        "  serial baseline:    {}   ({baseline_note})\n",
+        fmt_time(m.serial_s)
+    ));
+    out.push_str(&format!("  compute:            {}\n", fmt_time(m.compute_s)));
+    out.push_str(&format!("  exposed comm:       {}\n", fmt_time(m.exposed_comm_s)));
+    out.push_str(&format!("  hidden comm:        {}\n", fmt_time(m.hidden_comm_s)));
+    out.push_str(&format!("  overlap efficiency: {:.1}%\n", 100.0 * m.efficiency));
+    out.push_str(&format!("  speedup vs serial:  {:.2}x\n", m.speedup));
+    out.push_str(&format!(
+        "  faster-than-serial: {}\n",
+        if m.total_s < m.serial_s { "yes" } else { "no" }
+    ));
+    out
+}
+
+/// Per-phase span table (composed schedules).
+pub fn render_phase_spans(spans: &[crate::sim::PhaseSpan]) -> String {
+    let mut out = String::from("  phases:\n");
+    let width = spans.iter().map(|s| s.name.len()).max().unwrap_or(0).max(8);
+    for s in spans {
+        out.push_str(&format!(
+            "    {:<width$} start {:>10}  finish {:>10}  makespan {:>10}\n",
+            s.name,
+            fmt_time(s.start),
+            fmt_time(s.finish),
+            fmt_time(s.makespan()),
+        ));
+    }
+    out
+}
+
 /// A latency-vs-size line table (Fig. 7/10 style): one column per series.
 pub fn render_latency_table(
     title: &str,
@@ -265,6 +353,36 @@ mod tests {
         assert!(lines.contains("nodes=8"));
         assert!(lines.contains("best=tree"));
         assert!(lines.contains("r=0.90"));
+    }
+
+    #[test]
+    fn overlap_metrics_partition_time() {
+        let m = overlap_metrics(6.0, 4.0, 9.0);
+        assert_eq!(m.exposed_comm_s, 2.0);
+        assert_eq!(m.serial_comm_s, 5.0);
+        assert_eq!(m.hidden_comm_s, 3.0);
+        assert!((m.efficiency - 0.6).abs() < 1e-12);
+        assert!((m.speedup - 1.5).abs() < 1e-12);
+        let txt = render_overlap(&m, "test baseline");
+        assert!(txt.contains("faster-than-serial: yes"));
+        assert!(txt.contains("overlap efficiency: 60.0%"));
+        assert!(txt.contains("(test baseline)"));
+        // degenerate: no communication to hide
+        let z = overlap_metrics(4.0, 4.0, 4.0);
+        assert_eq!(z.efficiency, 0.0);
+        assert!(render_overlap(&z, "x").contains("faster-than-serial: no"));
+    }
+
+    #[test]
+    fn phase_span_table_renders() {
+        let spans = vec![
+            crate::sim::PhaseSpan { name: "compute".into(), start: 0.0, finish: 4e-3 },
+            crate::sim::PhaseSpan { name: "bucket0".into(), start: 1e-3, finish: 2e-3 },
+        ];
+        let txt = render_phase_spans(&spans);
+        assert!(txt.contains("compute"));
+        assert!(txt.contains("bucket0"));
+        assert!(txt.contains("makespan"));
     }
 
     #[test]

@@ -174,6 +174,18 @@ impl GoalBuilder {
         self.push(rank, OpKind::Calc { seconds })
     }
 
+    /// A back-to-back chain of `steps` equal `Calc` ops — the workload
+    /// layer's backprop timeline (step i finishing marks gradient bucket i
+    /// ready for the overlap composer's `Ready` triggers).  Returns the id
+    /// of the first op of the chain.
+    pub fn calc_timeline(&mut self, rank: usize, step_seconds: f64, steps: usize) -> OpId {
+        let first = self.drafts[rank].ops.len();
+        for _ in 0..steps {
+            self.calc(rank, step_seconds);
+        }
+        first
+    }
+
     /// PICO_TAG_BEGIN analogue.  No-op unless instrumentation is enabled.
     pub fn tag_begin(&mut self, rank: usize, name: &str) {
         if self.instrument {

@@ -1,0 +1,481 @@
+//! Overlap composer: concatenate N sealed [`GoalGraph`]s into one
+//! multi-phase schedule (ROADMAP "multi-collective overlap").
+//!
+//! Real AI training traffic is never one collective at a time — gradient
+//! all-reduces are bucketed and overlapped with backprop compute — so a
+//! benchmark that replays invocations serially cannot represent it.  The
+//! flat arena IR makes composition cheap: concatenating sealed graphs is a
+//! pure offset-shift of the op stores, the dep CSR and the tag spans; the
+//! only new structure is the cross-phase chaining edges and a per-op
+//! [`PhaseTable`] so the simulator and the analysis layer can attribute
+//! time back to phases.
+//!
+//! # Chain policies
+//!
+//! - [`ChainPolicy::Serial`] — a global barrier between consecutive
+//!   phases: every root of phase k+1 depends on every sink of phase k
+//!   (across all ranks), so the composed makespan equals the sum of the
+//!   per-phase makespans (up to f64 rounding; property-tested in
+//!   `rust/tests/compose_overlap.rs`).  This is exactly "replay the
+//!   invocations one after another", expressed as one schedule.
+//! - [`ChainPolicy::PerRank`] — rank-local chaining: rank r's roots of
+//!   phase k+1 depend on rank r's sinks of phase k.  Ranks flow into the
+//!   next phase as soon as *they* are done — the MPI-on-one-communicator
+//!   behaviour of back-to-back blocking collectives.
+//! - [`ChainPolicy::Ready`] — dataflow-triggered: phase k's roots depend
+//!   (per rank) on one designated `Calc` op of an earlier phase.  This is
+//!   the bucketed-DNN shape: each gradient bucket's sends are gated on the
+//!   backprop `Calc` that produces that bucket, and communication overlaps
+//!   the remaining compute (`crate::workload` lowers `dnn_step` this way).
+//!
+//! # Mechanics
+//!
+//! Ops stay rank-major, phase-ordered within each rank.  Within-phase
+//! dependencies are offset-shifted; tag spaces are remapped per phase
+//! (uniform per-phase shift, so channel matching within a phase is
+//! untouched while phases can never cross-match on a shared `(src, dst,
+//! tag)` channel).  The injected cross-phase deps are the only edges that
+//! may cross rank boundaries — [`GoalGraph`] validation licenses them via
+//! the phase table (a dep may cross ranks iff it points into a strictly
+//! earlier phase), which keeps every composed schedule an acyclic DAG.
+//!
+//! Composition is closed under itself: composing already-composed graphs
+//! flattens their phase tables (inner phase names are prefixed with the
+//! outer phase name).
+
+use std::sync::Arc;
+
+use crate::goal::{ArenaParts, GoalError, GoalGraph, OpId, OpKind, PhaseTable, TagSpan};
+
+/// How consecutive phases of a composition are chained together.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ChainPolicy {
+    /// Global barrier: phase k+1 starts only after *every* rank finished
+    /// phase k.  Composed makespan = Σ per-phase makespans.
+    Serial,
+    /// Rank-local chaining: each rank enters phase k+1 as soon as its own
+    /// phase-k program is done.
+    PerRank,
+    /// Dataflow-triggered: one [`ReadyDep`] per phase after the first;
+    /// `triggers[k-1]` gates phase k's roots (per rank) on a designated
+    /// `Calc` op of an earlier phase.
+    Ready(Vec<ReadyDep>),
+}
+
+impl ChainPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ChainPolicy::Serial => "serial",
+            ChainPolicy::PerRank => "per_rank",
+            ChainPolicy::Ready(_) => "ready",
+        }
+    }
+}
+
+/// A `Ready` chain trigger: phase k's first ops wait, on every rank r, for
+/// op `op` (rank-local id, must be a `Calc`) of phase `phase` on the same
+/// rank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReadyDep {
+    /// Which earlier phase holds the trigger op.
+    pub phase: usize,
+    /// Rank-local op id of the trigger `Calc` (same on every rank).
+    pub op: OpId,
+}
+
+/// [`compose_named`] with default phase names (`phase0`, `phase1`, …).
+pub fn compose(graphs: &[&GoalGraph], policy: &ChainPolicy) -> Result<GoalGraph, GoalError> {
+    let named: Vec<(String, &GoalGraph)> =
+        graphs.iter().enumerate().map(|(k, g)| (format!("phase{k}"), *g)).collect();
+    compose_impl(&named, policy)
+}
+
+/// Concatenate `parts` into one sealed multi-phase schedule under
+/// `policy`, recording a per-op [`PhaseTable`] with the given phase names.
+///
+/// Requirements: at least one graph, all with the same `p` and
+/// `elem_bytes` (typed [`GoalError`] otherwise).  `count` / `tmp_count` of
+/// the result are the per-rank maxima — phases share buffers, which is
+/// sound for simulate/trace (lengths only); composed schedules are not
+/// meant for execute-mode numerics.
+pub fn compose_named(
+    parts: &[(&str, &GoalGraph)],
+    policy: &ChainPolicy,
+) -> Result<GoalGraph, GoalError> {
+    let named: Vec<(String, &GoalGraph)> =
+        parts.iter().map(|(n, g)| (n.to_string(), *g)).collect();
+    compose_impl(&named, policy)
+}
+
+fn compose_impl(
+    parts: &[(String, &GoalGraph)],
+    policy: &ChainPolicy,
+) -> Result<GoalGraph, GoalError> {
+    let n_phases = parts.len();
+    if n_phases == 0 {
+        return Err(GoalError::ComposeEmpty);
+    }
+    let p = parts[0].1.p();
+    let elem_bytes = parts[0].1.elem_bytes;
+    for (k, (_, g)) in parts.iter().enumerate() {
+        if g.p() != p {
+            return Err(GoalError::ComposeRankMismatch { phase: k, p: g.p(), expected: p });
+        }
+        if g.elem_bytes != elem_bytes {
+            return Err(GoalError::ComposeElemBytesMismatch {
+                phase: k,
+                elem_bytes: g.elem_bytes,
+                expected: elem_bytes,
+            });
+        }
+    }
+    if let ChainPolicy::Ready(triggers) = policy {
+        if triggers.len() + 1 != n_phases {
+            return Err(GoalError::BadReadyTrigger {
+                phase: n_phases,
+                trigger_phase: triggers.len(),
+                op: 0,
+                why: "need exactly one trigger per phase after the first",
+            });
+        }
+        for (j, t) in triggers.iter().enumerate() {
+            let phase = j + 1;
+            let bad = |why| GoalError::BadReadyTrigger {
+                phase,
+                trigger_phase: t.phase,
+                op: t.op,
+                why,
+            };
+            if t.phase >= phase {
+                return Err(bad("trigger must name a strictly earlier phase"));
+            }
+            let tg = parts[t.phase].1;
+            for r in 0..p {
+                match tg.ops(r).get(t.op) {
+                    None => return Err(bad("trigger op id out of range on some rank")),
+                    Some(OpKind::Calc { .. }) => {}
+                    Some(_) => return Err(bad("trigger op must be a Calc")),
+                }
+            }
+        }
+    }
+
+    // Tag-space remap: one uniform stride per phase keeps within-phase
+    // channel matching intact while making phases channel-disjoint.
+    let mut max_tag = 0u32;
+    for (_, g) in parts {
+        for kind in &g.kinds {
+            if let OpKind::Send { tag, .. } | OpKind::Recv { tag, .. } = kind {
+                max_tag = max_tag.max(*tag);
+            }
+        }
+    }
+    let stride = max_tag as u64 + 1;
+    let remap_tag = |k: usize, tag: u32| -> Result<u32, GoalError> {
+        if k == 0 {
+            return Ok(tag);
+        }
+        u32::try_from(k as u64 * stride + tag as u64)
+            .map_err(|_| GoalError::TagRemapOverflow { phase: k, tag })
+    };
+
+    // Layout: rank-major, phase-ordered within each rank.
+    // prefix[r][k] = rank-local op offset of phase k on rank r.
+    let mut prefix = vec![vec![0usize; n_phases]; p];
+    let mut new_base = vec![0usize; p + 1];
+    for r in 0..p {
+        let mut acc = 0usize;
+        for (k, (_, g)) in parts.iter().enumerate() {
+            prefix[r][k] = acc;
+            acc += g.ops(r).len();
+        }
+        new_base[r + 1] = new_base[r] + acc;
+    }
+    let total = new_base[p];
+    let map = |k: usize, old_g: usize| -> usize {
+        let g = parts[k].1;
+        let rr = g.rank_of(old_g);
+        new_base[rr] + prefix[rr][k] + (old_g - g.gid(rr, 0))
+    };
+
+    // Sinks (no dependents) per phase, split by rank — the fan-in targets
+    // of Serial / PerRank chaining.  `Ready` chaining never reads them, so
+    // skip the O(phases × ops) dependents scan on that path.
+    let sinks_by_rank: Vec<Vec<Vec<usize>>> = if matches!(policy, ChainPolicy::Ready(_)) {
+        Vec::new()
+    } else {
+        parts
+            .iter()
+            .map(|(_, g)| {
+                let mut by = vec![Vec::new(); p];
+                for x in 0..g.total_ops() {
+                    if g.dependents(x).is_empty() {
+                        by[g.rank_of(x)].push(x);
+                    }
+                }
+                by
+            })
+            .collect()
+    };
+    // Serial barrier edges into phase k: every sink of phase k-1, mapped
+    // to composed ids, ascending (deterministic emission order).
+    let serial_deps: Vec<Vec<usize>> = (0..n_phases)
+        .map(|k| {
+            if k == 0 || !matches!(policy, ChainPolicy::Serial) {
+                return Vec::new();
+            }
+            let mut v: Vec<usize> = sinks_by_rank[k - 1]
+                .iter()
+                .flatten()
+                .map(|&s| map(k - 1, s))
+                .collect();
+            v.sort_unstable();
+            v
+        })
+        .collect();
+
+    // Flattened phase numbering (composition is closed under itself).
+    let mut names = Vec::new();
+    let mut phase_name_base = Vec::with_capacity(n_phases);
+    for (name, g) in parts {
+        phase_name_base.push(names.len());
+        match &g.phases {
+            Some(pt) if pt.len() > 1 => {
+                names.extend(pt.names.iter().map(|inner| format!("{name}:{inner}")));
+            }
+            _ => names.push(name.clone()),
+        }
+    }
+
+    let mut kinds = Vec::with_capacity(total);
+    let mut dep_off = Vec::with_capacity(total + 1);
+    dep_off.push(0usize);
+    let mut dep_targets: Vec<u32> = Vec::new();
+    let mut tags: Vec<TagSpan> = Vec::new();
+    let mut tag_off = Vec::with_capacity(p + 1);
+    tag_off.push(0usize);
+    let mut phase_of: Vec<u32> = Vec::with_capacity(total);
+
+    for r in 0..p {
+        for (k, (_, g)) in parts.iter().enumerate() {
+            let base_old = g.gid(r, 0);
+            for i in 0..g.ops(r).len() {
+                let old_g = base_old + i;
+                let kind = match g.kinds[old_g] {
+                    OpKind::Send { peer, seg, tag } => {
+                        OpKind::Send { peer, seg, tag: remap_tag(k, tag)? }
+                    }
+                    OpKind::Recv { peer, seg, tag } => {
+                        OpKind::Recv { peer, seg, tag: remap_tag(k, tag)? }
+                    }
+                    other => other,
+                };
+                kinds.push(kind);
+                let deps = g.deps(old_g);
+                if deps.is_empty() && k > 0 {
+                    // A root of phase k: inject the chaining edges.
+                    match policy {
+                        ChainPolicy::Serial => {
+                            dep_targets.extend(serial_deps[k].iter().map(|&s| s as u32));
+                        }
+                        ChainPolicy::PerRank => {
+                            dep_targets.extend(
+                                sinks_by_rank[k - 1][r].iter().map(|&s| map(k - 1, s) as u32),
+                            );
+                        }
+                        ChainPolicy::Ready(triggers) => {
+                            let t = &triggers[k - 1];
+                            let tg = parts[t.phase].1;
+                            dep_targets.push(map(t.phase, tg.gid(r, t.op)) as u32);
+                        }
+                    }
+                } else {
+                    dep_targets.extend(deps.iter().map(|&d| map(k, d as usize) as u32));
+                }
+                dep_off.push(dep_targets.len());
+                phase_of.push((phase_name_base[k] + g.phase_of(old_g)) as u32);
+            }
+            for t in g.rank_tags(r) {
+                tags.push(TagSpan {
+                    name: t.name.clone(),
+                    first: t.first + prefix[r][k],
+                    last: t.last + prefix[r][k],
+                    depth: t.depth,
+                });
+            }
+        }
+        tag_off.push(tags.len());
+    }
+
+    ArenaParts {
+        count: parts.iter().map(|(_, g)| g.count).max().unwrap_or(0),
+        elem_bytes,
+        tmp_count: parts.iter().map(|(_, g)| g.tmp_count).max().unwrap_or(0),
+        kinds,
+        rank_base: new_base,
+        dep_off,
+        dep_targets,
+        tags,
+        tag_off,
+        phases: Some(Arc::new(PhaseTable { names, phase_of })),
+    }
+    .seal(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{allreduce, GenParams, GoalBuilder};
+    use crate::goal::Seg;
+
+    fn ring(p: usize, count: usize) -> GoalGraph {
+        allreduce::ring(&GenParams::new(p, count)).unwrap()
+    }
+
+    #[test]
+    fn identity_compose_preserves_arena() {
+        let g = ring(4, 16);
+        let c = compose(&[&g], &ChainPolicy::Serial).unwrap();
+        // everything except the (new, single-entry) phase table matches
+        assert_eq!(c.kinds, g.kinds);
+        assert_eq!(c.csr.dep_off, g.csr.dep_off);
+        assert_eq!(c.csr.dep_targets, g.csr.dep_targets);
+        assert_eq!(c.csr.dependents, g.csr.dependents);
+        assert_eq!((c.count, c.tmp_count, c.elem_bytes), (g.count, g.tmp_count, g.elem_bytes));
+        assert_eq!(c.phase_count(), 1);
+    }
+
+    #[test]
+    fn serial_compose_injects_global_barrier() {
+        let g = ring(4, 16);
+        let c = compose(&[&g, &g], &ChainPolicy::Serial).unwrap();
+        assert_eq!(c.total_ops(), 2 * g.total_ops());
+        assert_eq!(c.phase_count(), 2);
+        // phase-1 roots fan in from sinks of *all* ranks (cross-rank deps)
+        let pt = c.phases.as_ref().unwrap();
+        let mut saw_cross_rank = false;
+        for g_id in 0..c.total_ops() {
+            if pt.phase_of[g_id] == 1 {
+                for &d in c.deps(g_id) {
+                    assert_eq!(pt.phase_of[d as usize], 0, "chain deps must point to phase 0");
+                    if c.rank_of(d as usize) != c.rank_of(g_id) {
+                        saw_cross_rank = true;
+                    }
+                }
+            }
+        }
+        assert!(saw_cross_rank, "Serial chaining must barrier across ranks");
+        assert_eq!(c.validate(), Ok(()));
+    }
+
+    #[test]
+    fn per_rank_compose_stays_rank_local() {
+        let g = ring(4, 16);
+        let c = compose(&[&g, &g], &ChainPolicy::PerRank).unwrap();
+        for g_id in 0..c.total_ops() {
+            for &d in c.deps(g_id) {
+                assert_eq!(c.rank_of(d as usize), c.rank_of(g_id));
+            }
+        }
+        assert_eq!(c.validate(), Ok(()));
+    }
+
+    #[test]
+    fn ready_compose_gates_on_calc() {
+        // phase 0: one Calc per rank; phase 1: a ring allreduce gated on it
+        let p = 4;
+        let mut b = GoalBuilder::new(p, 0, 4);
+        for r in 0..p {
+            b.calc(r, 1e-3);
+        }
+        let compute = b.finish().unwrap();
+        let coll = ring(p, 16);
+        let c = compose(
+            &[&compute, &coll],
+            &ChainPolicy::Ready(vec![ReadyDep { phase: 0, op: 0 }]),
+        )
+        .unwrap();
+        assert_eq!(c.validate(), Ok(()));
+        // every phase-1 root depends on exactly its own rank's Calc
+        let pt = c.phases.as_ref().unwrap();
+        for g_id in 0..c.total_ops() {
+            if pt.phase_of[g_id] == 1 {
+                for &d in c.deps(g_id) {
+                    if pt.phase_of[d as usize] == 0 {
+                        assert_eq!(c.rank_of(d as usize), c.rank_of(g_id));
+                        assert!(matches!(c.kinds[d as usize], OpKind::Calc { .. }));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compose_rejects_mismatched_inputs() {
+        let a = ring(4, 16);
+        let b = ring(8, 16);
+        assert!(matches!(
+            compose(&[&a, &b], &ChainPolicy::Serial),
+            Err(GoalError::ComposeRankMismatch { phase: 1, p: 8, expected: 4 })
+        ));
+        assert!(matches!(compose(&[], &ChainPolicy::Serial), Err(GoalError::ComposeEmpty)));
+    }
+
+    #[test]
+    fn ready_trigger_validation() {
+        let p = 2;
+        let mut b = GoalBuilder::new(p, 4, 4);
+        for r in 0..p {
+            b.copy(r, Seg::output(0, 4), Seg::input(0, 4)); // not a Calc
+        }
+        let not_calc = b.finish().unwrap();
+        let coll = ring(p, 4);
+        let go = |trig| compose(&[&not_calc, &coll], &ChainPolicy::Ready(vec![trig]));
+        assert!(matches!(
+            go(ReadyDep { phase: 0, op: 0 }),
+            Err(GoalError::BadReadyTrigger { why: "trigger op must be a Calc", .. })
+        ));
+        assert!(matches!(
+            go(ReadyDep { phase: 0, op: 9 }),
+            Err(GoalError::BadReadyTrigger { .. })
+        ));
+        assert!(matches!(
+            go(ReadyDep { phase: 1, op: 0 }),
+            Err(GoalError::BadReadyTrigger { .. })
+        ));
+        // wrong arity
+        assert!(matches!(
+            compose(&[&not_calc, &coll], &ChainPolicy::Ready(vec![])),
+            Err(GoalError::BadReadyTrigger { .. })
+        ));
+    }
+
+    #[test]
+    fn tags_remap_keeps_phases_channel_disjoint() {
+        let g = ring(4, 16);
+        let c = compose(&[&g, &g], &ChainPolicy::PerRank).unwrap();
+        let pt = c.phases.as_ref().unwrap();
+        let mut tags0 = std::collections::HashSet::new();
+        let mut tags1 = std::collections::HashSet::new();
+        for g_id in 0..c.total_ops() {
+            if let OpKind::Send { tag, .. } | OpKind::Recv { tag, .. } = c.kinds[g_id] {
+                if pt.phase_of[g_id] == 0 {
+                    tags0.insert(tag);
+                } else {
+                    tags1.insert(tag);
+                }
+            }
+        }
+        assert!(tags0.is_disjoint(&tags1), "phases must not share channel tags");
+    }
+
+    #[test]
+    fn nested_compose_flattens_phase_table() {
+        let g = ring(2, 8);
+        let inner = compose_named(&[("a", &g), ("b", &g)], &ChainPolicy::PerRank).unwrap();
+        let outer = compose_named(&[("x", &inner), ("y", &g)], &ChainPolicy::PerRank).unwrap();
+        let pt = outer.phases.as_ref().unwrap();
+        assert_eq!(pt.names, vec!["x:a", "x:b", "y"]);
+        assert_eq!(outer.validate(), Ok(()));
+    }
+}

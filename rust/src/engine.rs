@@ -48,22 +48,26 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use crate::analysis::{self, RatioCell};
-use crate::collectives::Coll;
+use crate::analysis::{self, OverlapMetrics, RatioCell};
+use crate::backends::LibPico;
+use crate::collectives::{Coll, GenParams};
+use crate::compose::{compose_named, ChainPolicy};
 use crate::config::{EnvSpec, TestSpec};
 use crate::goal::Goal;
 use crate::goal_text;
 use crate::json::Json;
 use crate::orchestrator::{
-    run_campaign_jobs_cached, run_campaign_sink, CacheStats, PointOutcome, ScheduleCache,
+    effective_count, run_campaign_jobs_cached, run_campaign_sink, CacheStats, PointOutcome,
+    ScheduleCache,
 };
 use crate::replay::{self, ReplayResult};
-use crate::results::{Granularity, RecordSink};
+use crate::results::{Granularity, Measurement, Record, RecordSink, RunDir};
 use crate::sim::{simulate, SimContext, SimReport};
 use crate::topology::{Allocation, Placement};
 use crate::tracer::{self, TraceReport};
 use crate::tuning::{self, Profile};
 use crate::util::{fmt_size, fmt_time, parse_size};
+use crate::workload::{ChainKind, WorkloadSpec};
 
 // ---------------------------------------------------------------------------
 // Engine configuration + the facade itself
@@ -205,10 +209,6 @@ impl Engine {
     /// schedule is sourced through the shared cache under the `libpico`
     /// backend (trace works on reference algorithms).
     pub fn trace(&self, spec: &TraceSpec) -> Result<TraceOutcome, String> {
-        use crate::backends::LibPico;
-        use crate::collectives::GenParams;
-        use crate::orchestrator::effective_count;
-
         let profile = self.env.profile()?;
         let alloc = Allocation::new(&profile, spec.nodes, self.env.alloc_policy, spec.seed);
         let placement = Placement::new(&profile, &alloc, spec.ppn, self.env.rank_order);
@@ -312,6 +312,201 @@ impl Engine {
             wire_bytes: sched.total_wire_bytes(),
             sim,
             trace,
+        })
+    }
+
+    /// Run a multi-collective overlap composition (the `pico overlap`
+    /// subcommand): lower the spec's phases (bucket skeletons come from
+    /// this engine's shared [`ScheduleCache`]), compose them under the
+    /// chain policy, simulate, and report per-phase spans plus overlap
+    /// metrics against the serial-replay baseline.  When an output
+    /// directory is set the run lands as a standardized run directory —
+    /// the record flows through a [`RecordSink`] like every campaign
+    /// point, and `cache_stats.json` proves bucket-skeleton reuse.
+    pub fn overlap(&self, spec: &OverlapSpec) -> Result<OverlapReport, String> {
+        let mut report = self.overlap_core(spec)?;
+        if let Some(out) = &spec.out {
+            // the run name comes verbatim from an untrusted descriptor —
+            // it must stay a real single path component under --out
+            if report.name.is_empty()
+                || report.name == "."
+                || report.name.contains(['/', '\\'])
+                || report.name.contains("..")
+            {
+                return Err(format!(
+                    "overlap: workload name {:?} must be a non-empty path component",
+                    report.name
+                ));
+            }
+            let mut rd =
+                RunDir::create(out.join(&report.name)).map_err(|e| e.to_string())?;
+            if let OverlapSource::Workload(w) = &spec.source {
+                // persist a *reproducing* descriptor: the workload fields
+                // plus the placement and effective chain of this run, so
+                // `pico overlap --spec <run>/workload.json` replays it
+                let doc = w
+                    .to_json()
+                    .set("nodes", spec.nodes)
+                    .set("ppn", spec.ppn)
+                    .set("seed", spec.seed as usize)
+                    .set("chain", report.chain);
+                rd.write_descriptor("workload.json", &doc).map_err(|e| e.to_string())?;
+            }
+            rd.write_descriptor("env.json", &self.env.to_json()).map_err(|e| e.to_string())?;
+            rd.write_descriptor("cache_stats.json", &report.cache.to_json())
+                .map_err(|e| e.to_string())?;
+            let mut sink = crate::results::OrderedRecordSink::new(&mut rd);
+            RecordSink::push(&mut sink, 0, report.to_record())?;
+            rd.finalize().map_err(|e| e.to_string())?;
+            report.run_root = Some(out.join(&report.name));
+        }
+        Ok(report)
+    }
+
+    /// [`Engine::overlap`] into a caller-owned [`RecordSink`] — no
+    /// directories are touched; the single overlap record is pushed at
+    /// sequence 0.
+    pub fn overlap_into(
+        &self,
+        spec: &OverlapSpec,
+        sink: &mut dyn RecordSink,
+    ) -> Result<OverlapReport, String> {
+        let report = self.overlap_core(spec)?;
+        sink.push(0, report.to_record())?;
+        Ok(report)
+    }
+
+    fn overlap_core(&self, spec: &OverlapSpec) -> Result<OverlapReport, String> {
+        let profile = self.env.profile()?;
+        let alloc = Allocation::new(&profile, spec.nodes, self.env.alloc_policy, spec.seed);
+        let placement = Placement::new(&profile, &alloc, spec.ppn, self.env.rank_order);
+        let p = placement.n_ranks();
+
+        // lower the source into named phase graphs + a chain policy
+        let (name, collective_label, algo, bytes, parts, policy, baseline) = match &spec.source {
+            OverlapSource::Workload(w) => {
+                let chain = spec.chain.unwrap_or_else(|| w.default_chain());
+                let (parts, policy) = w.lower_parts(p, &self.cache, chain)?;
+                let baseline = Some(w.lower_baseline_parts(p, &self.cache)?);
+                let (label, algo, bytes) = match &w.kind {
+                    crate::workload::WorkloadKind::DnnStep(s) => {
+                        ("dnn_step".to_string(), s.algo.clone(), s.grad_bytes)
+                    }
+                };
+                (w.name.clone(), label, algo, bytes, parts, policy, baseline)
+            }
+            OverlapSource::Repeat { coll, algo, bytes, phases } => {
+                let chain = spec.chain.unwrap_or(ChainKind::Serial);
+                if chain == ChainKind::Ready {
+                    return Err(
+                        "overlap: ready chaining needs a workload (it defines the triggers); \
+                         use --chain serial or per_rank with --repeat"
+                            .into(),
+                    );
+                }
+                if *phases == 0 {
+                    return Err("overlap: --repeat must be >= 1".into());
+                }
+                let count = effective_count(*coll, *bytes, p);
+                let g =
+                    self.cache.schedule(&LibPico, *coll, algo, &GenParams::new(p, count))?;
+                let parts: Vec<(String, Arc<Goal>)> =
+                    (0..*phases).map(|i| (format!("phase{i}"), g.clone())).collect();
+                let policy = match chain {
+                    ChainKind::Serial => ChainPolicy::Serial,
+                    ChainKind::PerRank => ChainPolicy::PerRank,
+                    ChainKind::Ready => unreachable!("rejected above"),
+                };
+                let name = format!("overlap-{}-{}", coll.label(), algo);
+                (name, coll.label().to_string(), algo.clone(), *bytes, parts, policy, None)
+            }
+        };
+
+        let refs: Vec<(&str, &Goal)> = parts.iter().map(|(n, g)| (n.as_str(), &**g)).collect();
+        let schedule = Arc::new(compose_named(&refs, &policy).map_err(String::from)?);
+        let ctx = SimContext::new(&profile, &placement);
+        let sim = simulate(&schedule, &ctx);
+
+        // Σ standalone per-phase makespans: the serial-replay number for
+        // the --repeat route and the conservation reference under Serial
+        // chaining.  Computed once (repeat phases share one Arc, so each
+        // distinct graph is simulated a single time).
+        let standalone_sum: Option<f64> =
+            if baseline.is_none() || matches!(policy, ChainPolicy::Serial) {
+                let mut sum = 0.0f64;
+                let mut memo: Vec<(*const Goal, f64)> = Vec::new();
+                for (_, g) in &parts {
+                    let key = Arc::as_ptr(g);
+                    let t = match memo.iter().find(|(k, _)| *k == key) {
+                        Some((_, t)) => *t,
+                        None => {
+                            let t = simulate(g, &ctx).total_time;
+                            memo.push((key, t));
+                            t
+                        }
+                    };
+                    sum += t;
+                }
+                Some(sum)
+            } else {
+                None
+            };
+
+        // serial-replay baseline: for workloads, the same compute plus one
+        // monolithic collective, Serial-chained; for --repeat, the sum of
+        // standalone phase makespans (the literal one-at-a-time replay).
+        let serial_s = match &baseline {
+            Some((bparts, bpolicy)) => {
+                let brefs: Vec<(&str, &Goal)> =
+                    bparts.iter().map(|(n, g)| (n.as_str(), &**g)).collect();
+                let bgraph = compose_named(&brefs, bpolicy).map_err(String::from)?;
+                simulate(&bgraph, &ctx).total_time
+            }
+            None => standalone_sum.expect("computed for the baseline-free route"),
+        };
+
+        // compute timeline length = the "compute" phase's span (workloads);
+        // pure-collective compositions have no compute to hide behind
+        let compute_s = sim
+            .phase_spans
+            .iter()
+            .find(|s| s.name == "compute")
+            .map(|s| s.makespan())
+            .unwrap_or(0.0);
+
+        // Serial chaining must conserve: composed makespan = Σ standalone
+        // per-phase makespans (up to f64 rounding — the barrier deps shift
+        // every phase rigidly, they change no duration)
+        let conservation = if matches!(policy, ChainPolicy::Serial) {
+            let sum = standalone_sum.expect("computed for Serial chaining");
+            let ok = (sim.total_time - sum).abs() <= 1e-9 * sum.max(1e-30);
+            Some((sum, ok))
+        } else {
+            None
+        };
+
+        let metrics = analysis::overlap_metrics(sim.total_time, compute_s, serial_s);
+        Ok(OverlapReport {
+            name,
+            system: self.env.system.clone(),
+            p,
+            nodes: spec.nodes,
+            ppn: spec.ppn,
+            chain: policy.label(),
+            collective_label,
+            algo,
+            bytes,
+            sim,
+            metrics,
+            baseline_note: if baseline.is_some() {
+                "compute + monolithic collective, Serial-chained"
+            } else {
+                "sum of standalone per-phase makespans"
+            },
+            conservation,
+            schedule,
+            cache: self.cache_stats(),
+            run_root: None,
         })
     }
 }
@@ -747,6 +942,119 @@ impl TryFrom<&Json> for ImportRunSpec {
     }
 }
 
+/// What a [`OverlapSpec`] composes: a declarative workload, or N repeats
+/// of one collective (the minimal conservation-check shape).
+#[derive(Debug, Clone)]
+pub enum OverlapSource {
+    /// A [`WorkloadSpec`] scenario (e.g. `dnn_step`).
+    Workload(WorkloadSpec),
+    /// `phases` copies of one (collective, algorithm, bytes) schedule.
+    Repeat { coll: Coll, algo: String, bytes: usize, phases: usize },
+}
+
+/// An overlap-composition request (the `pico overlap` subcommand).
+#[derive(Debug, Clone)]
+pub struct OverlapSpec {
+    source: OverlapSource,
+    nodes: usize,
+    ppn: usize,
+    seed: u64,
+    /// Chain policy selector; `None` = the source's default (`Ready` for
+    /// workloads, `Serial` for repeats).
+    chain: Option<ChainKind>,
+    out: Option<PathBuf>,
+}
+
+impl OverlapSpec {
+    pub fn workload(w: WorkloadSpec) -> Self {
+        Self { source: OverlapSource::Workload(w), nodes: 8, ppn: 1, seed: 11, chain: None, out: None }
+    }
+
+    /// Compose repeats of one collective (defaults: 1 MiB, 2 phases).
+    pub fn repeat(coll: Coll, algo: &str) -> Self {
+        Self {
+            source: OverlapSource::Repeat {
+                coll,
+                algo: algo.to_string(),
+                bytes: 1 << 20,
+                phases: 2,
+            },
+            nodes: 8,
+            ppn: 1,
+            seed: 11,
+            chain: None,
+            out: None,
+        }
+    }
+
+    pub fn with_bytes(mut self, bytes: usize) -> Self {
+        if let OverlapSource::Repeat { bytes: b, .. } = &mut self.source {
+            *b = bytes;
+        }
+        self
+    }
+
+    pub fn with_phases(mut self, phases: usize) -> Self {
+        if let OverlapSource::Repeat { phases: n, .. } = &mut self.source {
+            *n = phases;
+        }
+        self
+    }
+
+    pub fn with_nodes(mut self, nodes: usize) -> Self {
+        self.nodes = nodes;
+        self
+    }
+
+    pub fn with_ppn(mut self, ppn: usize) -> Self {
+        self.ppn = ppn;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_chain(mut self, chain: ChainKind) -> Self {
+        self.chain = Some(chain);
+        self
+    }
+
+    /// Persist a standardized run directory (record + descriptors +
+    /// `cache_stats.json`) under `dir`.
+    pub fn with_out(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.out = Some(dir.into());
+        self
+    }
+}
+
+impl TryFrom<&Json> for OverlapSpec {
+    type Error = String;
+
+    /// Build from a workload descriptor document
+    /// (`examples/dnn_step.json`): the scenario fields are parsed by
+    /// [`WorkloadSpec`]; `nodes` / `ppn` / `chain` / `seed` ride in the
+    /// same document.
+    fn try_from(j: &Json) -> Result<Self, String> {
+        let mut s = OverlapSpec::workload(WorkloadSpec::try_from(j)?);
+        if let Some(n) = j.get("nodes").and_then(Json::as_usize) {
+            s.nodes = n;
+        }
+        if let Some(ppn) = j.get("ppn").and_then(Json::as_usize) {
+            s.ppn = ppn;
+        }
+        if let Some(x) = j.get("seed").and_then(Json::as_u64) {
+            s.seed = x;
+        }
+        if let Some(c) = j.get("chain").and_then(Json::as_str) {
+            s.chain =
+                Some(ChainKind::parse(c).ok_or_else(|| format!("unknown chain {c:?}"))?);
+        }
+        Ok(s)
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Return types
 // ---------------------------------------------------------------------------
@@ -922,10 +1230,13 @@ pub struct ImportReport {
 impl ImportReport {
     /// The `pico import` text block.  Deliberately origin-free so the
     /// report of a re-exported schedule diffs clean against the original
-    /// (scripts/verify.sh's import smoke stage relies on this).
+    /// (scripts/verify.sh's import smoke stage relies on this).  Imported
+    /// *composed* schedules (a `phases` header in the GOAL text) also get
+    /// the per-phase span table — phase attribution survives the
+    /// export/import round trip.
     pub fn render(&self) -> String {
         let (int, ext, tot) = self.trace.in_units_of(self.wire_bytes.max(1));
-        format!(
+        let mut out = format!(
             "imported GOAL schedule\n  ranks: {}  ops: {}  wire bytes: {}\n  placement: {} nodes={} ppn={}\n  simulated latency: {}\n  components: {}\n  traffic split (units of total wire bytes): internal {:.3}, external {:.3}, total {:.3}\n",
             self.p,
             self.total_ops,
@@ -938,7 +1249,112 @@ impl ImportReport {
             int,
             ext,
             tot
-        )
+        );
+        if !self.sim.phase_spans.is_empty() {
+            out.push_str(&analysis::render_phase_spans(&self.sim.phase_spans));
+        }
+        out
+    }
+}
+
+/// One overlap-composition run: identity, the simulated report with its
+/// per-phase spans, overlap metrics against the serial baseline, and the
+/// composed schedule itself (exportable as GOAL text).
+#[derive(Debug, Clone)]
+pub struct OverlapReport {
+    pub name: String,
+    pub system: String,
+    pub p: usize,
+    pub nodes: usize,
+    pub ppn: usize,
+    /// Chain policy label (`serial` / `per_rank` / `ready`).
+    pub chain: &'static str,
+    /// Collective (or scenario) label for the record schema.
+    pub collective_label: String,
+    pub algo: String,
+    pub bytes: usize,
+    pub sim: SimReport,
+    pub metrics: OverlapMetrics,
+    /// What the serial baseline was (differs per route; rendered next to
+    /// the baseline figure).
+    pub baseline_note: &'static str,
+    /// `Serial` chaining only: (Σ standalone per-phase makespans, whether
+    /// the composed makespan matches it within 1e-9 relative).
+    pub conservation: Option<(f64, bool)>,
+    /// The composed multi-phase schedule (GOAL-text exportable).
+    pub schedule: Arc<Goal>,
+    /// Engine cache counters after the run (bucket-skeleton reuse proof).
+    pub cache: CacheStats,
+    pub run_root: Option<PathBuf>,
+}
+
+impl OverlapReport {
+    /// Export the composed schedule as GOAL interchange text (phases and
+    /// cross-phase deps round-trip through `pico import`).
+    pub fn to_goal_text(&self) -> String {
+        goal_text::to_text(&self.schedule)
+    }
+
+    /// The standardized record this run pushes through a [`RecordSink`]:
+    /// the makespan as a one-shot measurement, per-phase makespans as
+    /// named sub-timings, the chain policy as an effective knob.
+    pub fn to_record(&self) -> Record {
+        let phase_times: Vec<(String, f64)> =
+            self.sim.phase_spans.iter().map(|s| (s.name.clone(), s.makespan())).collect();
+        Record {
+            id: "p00000".to_string(),
+            collective: self.collective_label.clone(),
+            backend: "libpico".to_string(),
+            bytes: self.bytes,
+            nodes: self.nodes,
+            ppn: self.ppn,
+            requested_algorithm: Some(self.algo.clone()),
+            effective_algorithm: self.algo.clone(),
+            knobs_effective: vec![("chain".to_string(), self.chain.to_string())],
+            knobs_degraded: vec![],
+            measurement: Measurement::single_shot(
+                self.sim.total_time,
+                self.sim.components,
+                phase_times,
+            ),
+            granularity: Granularity::Summary,
+        }
+    }
+
+    /// The `pico overlap` text block.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "overlap {} on {} (p={} nodes={} ppn={}, phases={}, chain={})\n",
+            self.name,
+            self.system,
+            self.p,
+            self.nodes,
+            self.ppn,
+            self.sim.phase_spans.len().max(1),
+            self.chain
+        );
+        out.push_str(&analysis::render_overlap(&self.metrics, self.baseline_note));
+        if !self.sim.phase_spans.is_empty() {
+            out.push_str(&analysis::render_phase_spans(&self.sim.phase_spans));
+        }
+        if let Some((sum, ok)) = self.conservation {
+            if ok {
+                out.push_str(&format!(
+                    "  conservation: ok (composed makespan = sum of per-phase makespans {}, within 1e-9)\n",
+                    fmt_time(sum)
+                ));
+            } else {
+                out.push_str(&format!(
+                    "  conservation: FAILED (composed {} vs per-phase sum {})\n",
+                    fmt_time(self.sim.total_time),
+                    fmt_time(sum)
+                ));
+            }
+        }
+        if let Some(root) = &self.run_root {
+            out.push_str(&format!("  results under {}\n", root.display()));
+        }
+        out
     }
 }
 
@@ -1053,6 +1469,46 @@ mod tests {
         assert!(rep.render().contains("simulated latency"));
         assert!(e.import(&GoalSource::text("nonsense")).is_err());
         assert!(e.import(&GoalSource::file("/nonexistent/x.goal")).is_err());
+    }
+
+    #[test]
+    fn overlap_runs_through_the_facade() {
+        use crate::workload::DnnStepSpec;
+        let e = engine();
+        let w = WorkloadSpec::dnn_step("t", DnnStepSpec::new(8 << 20, 2, 2e-3));
+        let mut sink = VecSink::new();
+        let rep = e.overlap_into(&OverlapSpec::workload(w).with_nodes(4), &mut sink).unwrap();
+        assert_eq!(sink.records.len(), 1);
+        assert_eq!(sink.records[0].collective, "dnn_step");
+        assert!(rep.sim.total_time > 0.0);
+        assert_eq!(rep.sim.phase_spans.len(), 3, "compute + 2 buckets");
+        assert_eq!(rep.chain, "ready");
+        assert!(rep.cache.skeletons >= 1, "buckets must come from a skeleton: {:?}", rep.cache);
+        assert!(rep.render().contains("overlap efficiency"));
+        // the composed schedule exports and re-imports
+        let sched = e.import(&GoalSource::text(rep.to_goal_text())).unwrap();
+        assert_eq!(sched.p(), rep.p);
+        assert_eq!(sched.phase_count(), 3);
+        // --repeat with ready chaining is a typed error (no triggers)
+        let bad = OverlapSpec::repeat(Coll::Allreduce, "ring").with_chain(ChainKind::Ready);
+        assert!(e.overlap(&bad).is_err());
+    }
+
+    #[test]
+    fn overlap_spec_parses_descriptor_json() {
+        let j = Json::parse(
+            r#"{"scenario":"dnn_step","name":"d","grad_bytes":"16MiB","buckets":2,
+                "compute_ms":2.0,"algorithm":"ring","nodes":4,"chain":"serial"}"#,
+        )
+        .unwrap();
+        let s = OverlapSpec::try_from(&j).unwrap();
+        assert_eq!(s.nodes, 4);
+        assert_eq!(s.chain, Some(ChainKind::Serial));
+        let e = engine();
+        let rep = e.overlap(&s).unwrap();
+        let (sum, ok) = rep.conservation.expect("serial chain must report conservation");
+        assert!(ok, "composed {} vs sum {sum}", rep.sim.total_time);
+        assert!(rep.render().contains("conservation: ok"));
     }
 
     #[test]

@@ -80,8 +80,14 @@ impl Seg {
         Self::new(Buf::Tmp, off, len)
     }
 
+    /// Byte size of the segment.  Overflow is a seal-time error
+    /// ([`GoalError::ByteOverflow`]) — composition multiplies op counts and
+    /// imported GOAL headers are attacker-controlled, so the product is
+    /// checked here too instead of silently wrapping in release builds.
     pub fn bytes(&self, elem_bytes: usize) -> usize {
-        self.len * elem_bytes
+        self.len
+            .checked_mul(elem_bytes)
+            .expect("segment byte size overflows usize (rejected at seal/validate)")
     }
 
     fn scaled(&self, m: usize) -> Self {
@@ -146,7 +152,9 @@ pub enum OpKind {
 
 impl OpKind {
     /// Bytes this op moves over the network (sends only, so volume is not
-    /// double counted), for the tracer.
+    /// double counted), for the tracer.  Delegates to the checked
+    /// [`Seg::bytes`] — an unsealed graph with an overflowing segment is a
+    /// [`GoalError::ByteOverflow`] at validation, never a silent wrap.
     pub fn wire_bytes(&self, elem_bytes: usize) -> usize {
         match self {
             OpKind::Send { seg, .. } => seg.bytes(elem_bytes),
@@ -214,6 +222,30 @@ pub enum GoalError {
     UnmatchedSend { src: usize, dst: usize, tag: u32 },
     /// A (src, dst, tag) channel's send and recv length sequences differ.
     ChannelLenMismatch { src: usize, dst: usize, tag: u32 },
+    /// `count` (or `tmp_count`) × `elem_bytes` overflows usize — reachable
+    /// from adversarial imported GOAL headers, and from composition which
+    /// multiplies op counts; segments are bounded by these capacities, so
+    /// this one check makes every [`Seg::bytes`] product safe.
+    ByteOverflow { what: &'static str, elems: usize, elem_bytes: usize },
+    /// The phase table's length disagrees with the op arena.
+    PhaseTableMismatch { ops: usize, entries: usize },
+    /// Composition over an empty graph list.
+    ComposeEmpty,
+    /// Composed graphs disagree on rank count (`p`).
+    ComposeRankMismatch { phase: usize, p: usize, expected: usize },
+    /// Composed graphs disagree on element width.
+    ComposeElemBytesMismatch { phase: usize, elem_bytes: usize, expected: usize },
+    /// A `Ready` chain trigger is unusable: wrong arity, not an earlier
+    /// phase, op id out of range on some rank, or not a `Calc` op.
+    BadReadyTrigger { phase: usize, trigger_phase: usize, op: usize, why: &'static str },
+    /// A dep points into a **later** phase (any direction).  Cross-phase
+    /// deps must always target a strictly earlier phase; without this
+    /// check a crafted wire form (non-monotonic `@phase` markers plus
+    /// same-rank backward deps) could smuggle a dependency cycle past
+    /// validation and abort the simulator's deadlock assert.
+    PhaseOrderDep { rank: usize, op: usize, dep: usize, op_phase: usize, dep_phase: usize },
+    /// Per-phase tag-space remapping overflowed the u32 tag domain.
+    TagRemapOverflow { phase: usize, tag: u32 },
 }
 
 impl std::fmt::Display for GoalError {
@@ -251,6 +283,31 @@ impl std::fmt::Display for GoalError {
             GoalError::ChannelLenMismatch { src, dst, tag } => {
                 write!(f, "channel ({src} -> {dst}, tag {tag}): send/recv length mismatch")
             }
+            GoalError::ByteOverflow { what, elems, elem_bytes } => {
+                write!(f, "{what}: {elems} elements x {elem_bytes} bytes overflows usize")
+            }
+            GoalError::PhaseTableMismatch { ops, entries } => {
+                write!(f, "phase table has {entries} entries for {ops} ops")
+            }
+            GoalError::ComposeEmpty => write!(f, "compose: empty graph list"),
+            GoalError::ComposeRankMismatch { phase, p, expected } => {
+                write!(f, "compose: phase {phase} has {p} ranks, expected {expected}")
+            }
+            GoalError::ComposeElemBytesMismatch { phase, elem_bytes, expected } => {
+                write!(f, "compose: phase {phase} has elem_bytes {elem_bytes}, expected {expected}")
+            }
+            GoalError::BadReadyTrigger { phase, trigger_phase, op, why } => {
+                write!(f, "compose: phase {phase} ready trigger (phase {trigger_phase}, op {op}): {why}")
+            }
+            GoalError::TagRemapOverflow { phase, tag } => {
+                write!(f, "compose: phase {phase} tag {tag} overflows the remapped tag space")
+            }
+            GoalError::PhaseOrderDep { rank, op, dep, op_phase, dep_phase } => {
+                write!(
+                    f,
+                    "rank {rank} op {op} (phase {op_phase}): dep {dep} points into later phase {dep_phase}"
+                )
+            }
         }
     }
 }
@@ -287,6 +344,129 @@ pub struct DepGraph {
     pub dependents: Vec<u32>,
 }
 
+/// Dependents CSR from a dependency CSR: counts → prefix sums → fill.
+/// Iterating global ids in ascending order keeps each op's dependent list
+/// ascending — exactly the order the old per-simulate rebuild produced.
+fn dependents_csr(total: usize, dep_off: &[usize], dep_targets: &[u32]) -> (Vec<usize>, Vec<u32>) {
+    let mut cnt = vec![0usize; total];
+    for &t in dep_targets {
+        cnt[t as usize] += 1;
+    }
+    let mut dependents_off = vec![0usize; total + 1];
+    for g in 0..total {
+        dependents_off[g + 1] = dependents_off[g] + cnt[g];
+    }
+    let mut dependents = vec![0u32; dep_targets.len()];
+    let mut cursor = dependents_off.clone();
+    for g in 0..total {
+        for di in dep_off[g]..dep_off[g + 1] {
+            let d = dep_targets[di] as usize;
+            dependents[cursor[d]] = g as u32;
+            cursor[d] += 1;
+        }
+    }
+    (dependents_off, dependents)
+}
+
+/// Pre-flattened arena parts for [`ArenaParts::seal`].  The overlap
+/// composer ([`crate::compose`]) and the GOAL-text importer build these
+/// directly — their dependency lists can reference ops globally (deps into
+/// earlier *phases* may cross rank boundaries), a shape the rank-local
+/// [`ProgramDraft`] route cannot express.
+pub struct ArenaParts {
+    pub count: usize,
+    pub elem_bytes: usize,
+    pub tmp_count: usize,
+    /// Every op, rank-major.
+    pub kinds: Vec<OpKind>,
+    /// rank → first global op id; `rank_base[p]` = total ops.
+    pub rank_base: Vec<usize>,
+    /// Dependency CSR offsets (len total + 1, `dep_off[0] == 0`).
+    pub dep_off: Vec<usize>,
+    /// Dependency targets as global op ids, per-op emission order.
+    pub dep_targets: Vec<u32>,
+    /// Tag spans, rank-major, with `tag_off` (len p + 1).
+    pub tags: Vec<TagSpan>,
+    pub tag_off: Vec<usize>,
+    pub phases: Option<Arc<PhaseTable>>,
+}
+
+impl ArenaParts {
+    /// Seal the parts into a validated [`GoalGraph`]: derive `op_rank`,
+    /// compile the dependents CSR, then run the full structural (and
+    /// optionally channel) validation — unlike
+    /// [`GoalGraph::assemble`], nothing here is trusted, so the dependency
+    /// walk always runs.
+    pub fn seal(self, check_channels: bool) -> Result<GoalGraph, GoalError> {
+        let total = self.kinds.len();
+        let mut op_rank = Vec::with_capacity(total);
+        for (r, w) in self.rank_base.windows(2).enumerate() {
+            for _ in w[0]..w[1] {
+                op_rank.push(r as u32);
+            }
+        }
+        debug_assert_eq!(op_rank.len(), total, "rank_base does not cover the op arena");
+        if let Some(pt) = &self.phases {
+            if pt.phase_of.len() != total {
+                return Err(GoalError::PhaseTableMismatch {
+                    ops: total,
+                    entries: pt.phase_of.len(),
+                });
+            }
+        }
+        let (dependents_off, dependents) = dependents_csr(total, &self.dep_off, &self.dep_targets);
+        let graph = GoalGraph {
+            kinds: self.kinds,
+            csr: Arc::new(DepGraph {
+                rank_base: self.rank_base,
+                op_rank,
+                dep_off: self.dep_off,
+                dep_targets: self.dep_targets,
+                dependents_off,
+                dependents,
+            }),
+            tags: self.tags,
+            tag_off: self.tag_off,
+            elem_bytes: self.elem_bytes,
+            count: self.count,
+            tmp_count: self.tmp_count,
+            phases: self.phases,
+        };
+        graph.validate_structure()?;
+        if check_channels {
+            graph.validate_channels()?;
+        }
+        Ok(graph)
+    }
+}
+
+/// Phase attribution for a composed schedule (the overlap composer in
+/// [`crate::compose`]): which phase of a multi-collective composition each
+/// op belongs to.  Single-collective graphs carry no table (`phases:
+/// None`), so the common path pays nothing.
+///
+/// The table is what licenses the one relaxation composition needs in the
+/// dependency rules: a dep may cross rank boundaries (or point forward in
+/// global-id space) **iff** it points into a strictly earlier phase —
+/// which keeps every composed graph an acyclic DAG by construction.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PhaseTable {
+    /// Phase names, in composition order (workload-layer labels).
+    pub names: Vec<String>,
+    /// global op id → phase index.
+    pub phase_of: Vec<u32>,
+}
+
+impl PhaseTable {
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+}
+
 /// A complete sealed schedule for `p` ranks moving elements of
 /// `elem_bytes`: the flat arena described in the module docs.
 #[derive(Debug, Clone, PartialEq)]
@@ -304,6 +484,9 @@ pub struct GoalGraph {
     pub count: usize,
     /// Scratch elements needed per rank.
     pub tmp_count: usize,
+    /// Phase attribution for composed schedules (`None` = single phase).
+    /// `Arc`-shared with rescaled copies, like the dep CSR.
+    pub phases: Option<Arc<PhaseTable>>,
 }
 
 /// The historical name for the schedule IR, kept as an alias so call sites
@@ -367,25 +550,7 @@ impl GoalGraph {
             tag_off.push(tags.len());
         }
 
-        // Dependents CSR: counts → prefix sums → fill.  Iterating global
-        // ids in ascending order keeps each op's dependent list ascending.
-        let mut cnt = vec![0usize; total];
-        for &t in &dep_targets {
-            cnt[t as usize] += 1;
-        }
-        let mut dependents_off = vec![0usize; total + 1];
-        for g in 0..total {
-            dependents_off[g + 1] = dependents_off[g] + cnt[g];
-        }
-        let mut dependents = vec![0u32; dep_targets.len()];
-        let mut cursor = dependents_off.clone();
-        for g in 0..total {
-            for di in dep_off[g]..dep_off[g + 1] {
-                let d = dep_targets[di] as usize;
-                dependents[cursor[d]] = g as u32;
-                cursor[d] += 1;
-            }
-        }
+        let (dependents_off, dependents) = dependents_csr(total, &dep_off, &dep_targets);
 
         let graph = GoalGraph {
             kinds,
@@ -402,6 +567,7 @@ impl GoalGraph {
             elem_bytes,
             count,
             tmp_count,
+            phases: None,
         };
         // deps were fully checked in the flattening loop above; only the
         // op payloads and tag spans remain to validate
@@ -479,10 +645,15 @@ impl GoalGraph {
         self.validate_ops_and_tags()
     }
 
-    /// Dependency walk over the flat CSR (backwards, same-rank, no
-    /// self-deps).  [`assemble`](GoalGraph::assemble) skips this — the
-    /// flattening loop already enforces it — but hand-assembled or mutated
-    /// graphs go through it via [`validate`](GoalGraph::validate).
+    /// Dependency walk over the flat CSR.  The base rule is the historical
+    /// one — deps point strictly backwards within the same rank — with one
+    /// relaxation for composed schedules: when a [`PhaseTable`] is present,
+    /// a dep may land anywhere in a strictly **earlier phase** (the
+    /// cross-phase chaining edges the overlap composer injects, e.g. the
+    /// `Serial` barrier deps that fan in from every rank's sinks).  Either
+    /// way the graph stays acyclic.  [`assemble`](GoalGraph::assemble)
+    /// skips this — the flattening loop already enforces it — but
+    /// hand-assembled graphs and [`ArenaParts::seal`] go through it.
     fn validate_deps(&self) -> Result<(), GoalError> {
         for r in 0..self.p() {
             let base = self.csr.rank_base[r];
@@ -491,23 +662,66 @@ impl GoalGraph {
                 let g = base + i;
                 for &d in self.deps(g) {
                     let d = d as usize;
-                    if d < base || d >= base + ops {
-                        return Err(GoalError::CrossRankDep { rank: r, op: i, dep: d });
+                    if d >= self.total_ops() {
+                        return Err(GoalError::DanglingDep { rank: r, op: i, dep: d, ops });
                     }
                     if d == g {
                         return Err(GoalError::SelfDep { rank: r, op: i });
                     }
-                    if d > g {
+                    let same_rank = d >= base && d < base + ops;
+                    if same_rank && d < g {
+                        // backwards within the rank: legal unless a phase
+                        // table marks the dep as *later-phase* — a crafted
+                        // wire form (non-monotonic @phase markers) could
+                        // otherwise close a cycle through a backward edge
+                        if let Some(pt) = &self.phases {
+                            if pt.phase_of[d] > pt.phase_of[g] {
+                                return Err(GoalError::PhaseOrderDep {
+                                    rank: r,
+                                    op: i,
+                                    dep: d - base,
+                                    op_phase: pt.phase_of[g] as usize,
+                                    dep_phase: pt.phase_of[d] as usize,
+                                });
+                            }
+                        }
+                        continue;
+                    }
+                    // cross-rank or forward: legal only into an earlier phase
+                    if let Some(pt) = &self.phases {
+                        if pt.phase_of[d] < pt.phase_of[g] {
+                            continue;
+                        }
+                    }
+                    if same_rank {
                         return Err(GoalError::ForwardDep { rank: r, op: i, dep: d - base });
                     }
+                    return Err(GoalError::CrossRankDep { rank: r, op: i, dep: d });
                 }
             }
         }
         Ok(())
     }
 
-    /// Op payload (peer / segment range) and tag-span checks.
+    /// Op payload (peer / segment range) and tag-span checks, plus the
+    /// byte-capacity overflow guard: every segment is bounded by `count` /
+    /// `tmp_count`, so checking the two capacity products once makes every
+    /// downstream [`Seg::bytes`] call safe.
     fn validate_ops_and_tags(&self) -> Result<(), GoalError> {
+        if self.count.checked_mul(self.elem_bytes).is_none() {
+            return Err(GoalError::ByteOverflow {
+                what: "count",
+                elems: self.count,
+                elem_bytes: self.elem_bytes,
+            });
+        }
+        if self.tmp_count.checked_mul(self.elem_bytes).is_none() {
+            return Err(GoalError::ByteOverflow {
+                what: "tmp_count",
+                elems: self.tmp_count,
+                elem_bytes: self.elem_bytes,
+            });
+        }
         let p = self.p();
         for r in 0..p {
             let base = self.csr.rank_base[r];
@@ -623,7 +837,19 @@ impl GoalGraph {
             elem_bytes: self.elem_bytes,
             count: self.count * m,
             tmp_count: self.tmp_count * m,
+            phases: self.phases.clone(),
         }
+    }
+
+    /// Number of composition phases (1 when the graph carries no table).
+    pub fn phase_count(&self) -> usize {
+        self.phases.as_ref().map_or(1, |pt| pt.len())
+    }
+
+    /// Phase index of a global op id (0 when the graph carries no table).
+    #[inline]
+    pub fn phase_of(&self, g: usize) -> usize {
+        self.phases.as_ref().map_or(0, |pt| pt.phase_of[g] as usize)
     }
 }
 
@@ -729,6 +955,29 @@ mod tests {
     fn wire_bytes_counts_sends_once() {
         let g = tiny_goal();
         assert_eq!(g.total_wire_bytes(), 16);
+    }
+
+    #[test]
+    fn byte_overflow_rejected_at_seal() {
+        // count × elem_bytes wrapping is a typed error at sealing, not a
+        // silent wrap inside Seg::bytes downstream (reachable from
+        // adversarial imported GOAL headers)
+        let draft = || {
+            vec![ProgramDraft {
+                ops: vec![(OpKind::Calc { seconds: 0.0 }, vec![])],
+                tags: vec![],
+            }]
+        };
+        assert!(matches!(
+            GoalGraph::assemble(usize::MAX / 2, 4, 0, draft(), false),
+            Err(GoalError::ByteOverflow { what: "count", .. })
+        ));
+        assert!(matches!(
+            GoalGraph::assemble(4, 4, usize::MAX / 2, draft(), false),
+            Err(GoalError::ByteOverflow { what: "tmp_count", .. })
+        ));
+        // the same products that fit are fine
+        assert!(GoalGraph::assemble(4, 4, 4, draft(), false).is_ok());
     }
 
     #[test]

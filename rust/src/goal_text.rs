@@ -10,39 +10,67 @@
 //! emitted as comments).
 //!
 //! The wire form stays rank-local (`l0`, `l1`, … labels per rank block);
-//! parsing re-seals the flat [`GoalGraph`] arena through
-//! [`GoalGraph::assemble`], which compiles the dependency CSR and runs
-//! full validation — malformed text yields a typed error message instead
-//! of the out-of-bounds panic a raw graph would produce downstream.
+//! parsing re-seals the flat [`Goal`] arena through
+//! [`ArenaParts::seal`], which compiles the dependency CSR and runs full
+//! validation — malformed text yields a typed error message instead of
+//! the out-of-bounds panic a raw graph would produce downstream.
+//!
+//! **Composed schedules** (the overlap composer, `crate::compose`)
+//! round-trip too: a multi-phase graph emits a `phases` header naming
+//! every phase, `@phase k` markers inside each rank block, and cross-rank
+//! chain dependencies as `r<rank>.l<op>` tokens.  Single-phase schedules
+//! emit none of this, so their wire form is byte-identical to the
+//! pre-composer dialect (pinned by the identity-compose property test).
 //!
 //! ```text
 //! num_ranks 4
 //! elem_bytes 4
 //! count 1024
+//! phases 2
+//! phase 0 compute
+//! phase 1 bucket0
 //! rank 0 {
-//!   l0: send 512b to 1 tag 0 buf out off 0 len 128
-//!   l1: recv 512b from 1 tag 0 buf tmp off 0 len 128 requires l0
-//!   l2: reduce sum dst out 0 128 src tmp 0 128 requires l0 l1
+//!   l0: calc 1e-3
+//!   @phase 1
+//!   l1: send 512b to 1 tag 0 buf out off 0 len 128 requires l0 r1.l0
+//!   l2: recv 512b from 1 tag 0 buf tmp off 0 len 128 requires l1
 //! }
 //! ```
 
 use std::fmt::Write as _;
+use std::sync::Arc;
 
-use crate::goal::{Buf, Goal, GoalGraph, OpId, OpKind, ProgramDraft, ReduceOp, Seg};
+use crate::goal::{ArenaParts, Buf, Goal, OpKind, PhaseTable, ReduceOp, Seg};
 
 /// Serialize a Goal to GOAL text.
 pub fn to_text(goal: &Goal) -> String {
+    let multi_phase = goal.phase_count() > 1;
     let mut out = String::new();
     let _ = writeln!(out, "num_ranks {}", goal.p());
     let _ = writeln!(out, "elem_bytes {}", goal.elem_bytes);
     let _ = writeln!(out, "count {}", goal.count);
     let _ = writeln!(out, "tmp_count {}", goal.tmp_count);
+    if multi_phase {
+        let pt = goal.phases.as_ref().unwrap();
+        let _ = writeln!(out, "phases {}", pt.len());
+        for (k, name) in pt.names.iter().enumerate() {
+            let _ = writeln!(out, "phase {k} {name}");
+        }
+    }
     for r in 0..goal.p() {
         let _ = writeln!(out, "rank {r} {{");
         for t in goal.rank_tags(r) {
             let _ = writeln!(out, "  # tag {} ops {}..={} depth {}", t.name, t.first, t.last, t.depth);
         }
+        let mut cur_phase = 0usize;
         for (i, kind) in goal.ops(r).iter().enumerate() {
+            if multi_phase {
+                let ph = goal.phase_of(goal.gid(r, i));
+                if ph != cur_phase {
+                    let _ = writeln!(out, "  @phase {ph}");
+                    cur_phase = ph;
+                }
+            }
             let _ = write!(out, "  l{i}: ");
             match kind {
                 OpKind::Send { peer, seg, tag } => {
@@ -77,11 +105,19 @@ pub fn to_text(goal: &Goal) -> String {
                     let _ = write!(out, "calc {seconds:e}");
                 }
             }
-            let deps = goal.deps_local(r, i);
+            let deps = goal.deps(goal.gid(r, i));
             if !deps.is_empty() {
                 let _ = write!(out, " requires");
-                for d in deps {
-                    let _ = write!(out, " l{d}");
+                for &d in deps {
+                    let d = d as usize;
+                    let rr = goal.rank_of(d);
+                    let j = d - goal.gid(rr, 0);
+                    if rr == r {
+                        let _ = write!(out, " l{j}");
+                    } else {
+                        // cross-rank chain dep (composed schedules only)
+                        let _ = write!(out, " r{rr}.l{j}");
+                    }
                 }
             }
             let _ = writeln!(out);
@@ -107,16 +143,43 @@ fn seg_short(s: &Seg) -> String {
     format!("{} {} {}", buf_name(s.buf), s.off, s.len)
 }
 
+/// A dependency token as written: rank-local (`l3`) or explicit-rank
+/// (`r2.l5`, composed schedules' cross-rank chain deps).
+#[derive(Clone, Copy)]
+enum DepTok {
+    Local(usize),
+    Remote(usize, usize),
+}
+
 /// Parse GOAL text back into a sealed Goal (validated; see module docs).
+///
+/// Dependencies may reference other ranks (`r<rank>.l<op>`), so the parse
+/// is two-pass: collect every rank's ops with raw dep tokens first, then
+/// resolve tokens to global op ids once all program lengths are known and
+/// seal through [`ArenaParts::seal`] (CSR compilation + full validation).
 pub fn from_text(text: &str) -> Result<Goal, String> {
     let mut lines = text.lines().map(str::trim).peekable();
     let mut header = std::collections::HashMap::new();
+    let mut phase_names: Vec<String> = Vec::new();
     while let Some(&line) = lines.peek() {
         if line.starts_with("rank ") {
             break;
         }
         let line = lines.next().unwrap();
         if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("phase ") {
+            // "phase <k> <name>": names land in declaration order
+            let (k, name) = rest
+                .trim()
+                .split_once(' ')
+                .ok_or_else(|| format!("bad phase line {line:?}"))?;
+            let k: usize = k.parse().map_err(|e| format!("phase index: {e}"))?;
+            if k != phase_names.len() {
+                return Err(format!("phase {k} declared out of order"));
+            }
+            phase_names.push(name.trim().to_string());
             continue;
         }
         let mut it = line.split_whitespace();
@@ -129,8 +192,17 @@ pub fn from_text(text: &str) -> Result<Goal, String> {
     let count = *header.get("count").unwrap_or(&0);
     let elem_bytes = *header.get("elem_bytes").unwrap_or(&4);
     let tmp_count = *header.get("tmp_count").unwrap_or(&0);
-    let mut drafts: Vec<ProgramDraft> = (0..p).map(|_| ProgramDraft::default()).collect();
+    let n_phases = *header.get("phases").unwrap_or(&0);
+    if n_phases != phase_names.len() {
+        return Err(format!(
+            "phases header says {n_phases} but {} phase lines follow",
+            phase_names.len()
+        ));
+    }
 
+    // pass 1: ops with raw dep tokens, per rank
+    type RawOp = (OpKind, Vec<DepTok>, u32);
+    let mut raw: Vec<Vec<RawOp>> = (0..p).map(|_| Vec::new()).collect();
     while let Some(line) = lines.next() {
         if line.is_empty() || line.starts_with('#') {
             continue;
@@ -145,6 +217,7 @@ pub fn from_text(text: &str) -> Result<Goal, String> {
         if rank >= p {
             return Err(format!("rank {rank} out of range"));
         }
+        let mut cur_phase = 0u32;
         for line in lines.by_ref() {
             let line = line.trim();
             if line == "}" {
@@ -153,10 +226,73 @@ pub fn from_text(text: &str) -> Result<Goal, String> {
             if line.is_empty() || line.starts_with('#') {
                 continue;
             }
-            drafts[rank].ops.push(parse_op(line)?);
+            if let Some(rest) = line.strip_prefix("@phase ") {
+                let k: usize = rest.trim().parse().map_err(|e| format!("@phase: {e}"))?;
+                if n_phases > 0 && k >= n_phases {
+                    return Err(format!("@phase {k} out of range (phases {n_phases})"));
+                }
+                cur_phase = k as u32;
+                continue;
+            }
+            let (kind, deps) = parse_op(line)?;
+            raw[rank].push((kind, deps, cur_phase));
         }
     }
-    GoalGraph::assemble(count, elem_bytes, tmp_count, drafts, true).map_err(String::from)
+
+    // pass 2: resolve dep tokens to global ids and seal the flat arena
+    let mut rank_base = Vec::with_capacity(p + 1);
+    rank_base.push(0usize);
+    for ops in &raw {
+        rank_base.push(rank_base[rank_base.len() - 1] + ops.len());
+    }
+    let total = rank_base[p];
+    let mut kinds = Vec::with_capacity(total);
+    let mut dep_off = Vec::with_capacity(total + 1);
+    dep_off.push(0usize);
+    let mut dep_targets: Vec<u32> = Vec::new();
+    let mut phase_of: Vec<u32> = Vec::with_capacity(total);
+    for (r, ops) in raw.iter().enumerate() {
+        for (i, (kind, deps, phase)) in ops.iter().enumerate() {
+            for tok in deps {
+                let (rr, j) = match *tok {
+                    DepTok::Local(j) => (r, j),
+                    DepTok::Remote(rr, j) => (rr, j),
+                };
+                if rr >= p {
+                    return Err(format!("rank {r} op {i}: dep names rank {rr} (num_ranks {p})"));
+                }
+                let ops_rr = raw[rr].len();
+                if j >= ops_rr {
+                    return Err(format!(
+                        "rank {r} op {i}: dangling dep {j} (rank {rr} has {ops_rr} ops)"
+                    ));
+                }
+                dep_targets.push((rank_base[rr] + j) as u32);
+            }
+            dep_off.push(dep_targets.len());
+            kinds.push(*kind);
+            phase_of.push(*phase);
+        }
+    }
+    let phases = if phase_names.len() > 1 {
+        Some(Arc::new(PhaseTable { names: phase_names, phase_of }))
+    } else {
+        None
+    };
+    ArenaParts {
+        count,
+        elem_bytes,
+        tmp_count,
+        kinds,
+        rank_base,
+        dep_off,
+        dep_targets,
+        tags: Vec::new(),
+        tag_off: vec![0usize; p + 1],
+        phases,
+    }
+    .seal(true)
+    .map_err(String::from)
 }
 
 fn parse_buf(s: &str) -> Result<Buf, String> {
@@ -168,7 +304,20 @@ fn parse_buf(s: &str) -> Result<Buf, String> {
     }
 }
 
-fn parse_op(line: &str) -> Result<(OpKind, Vec<OpId>), String> {
+fn parse_dep(tok: &str) -> Result<DepTok, String> {
+    if let Some(j) = tok.strip_prefix('l') {
+        return Ok(DepTok::Local(j.parse().map_err(|e| format!("bad dep {tok:?}: {e}"))?));
+    }
+    // r<rank>.l<op>: cross-rank chain dep of a composed schedule
+    let rest = tok.strip_prefix('r').ok_or_else(|| format!("bad dep {tok:?}"))?;
+    let (rr, j) = rest.split_once(".l").ok_or_else(|| format!("bad dep {tok:?}"))?;
+    Ok(DepTok::Remote(
+        rr.parse().map_err(|e| format!("bad dep {tok:?}: {e}"))?,
+        j.parse().map_err(|e| format!("bad dep {tok:?}: {e}"))?,
+    ))
+}
+
+fn parse_op(line: &str) -> Result<(OpKind, Vec<DepTok>), String> {
     let (_, rest) = line.split_once(':').ok_or_else(|| format!("missing label in {line:?}"))?;
     let toks: Vec<&str> = rest.split_whitespace().collect();
     let req = toks.iter().position(|t| *t == "requires");
@@ -176,15 +325,7 @@ fn parse_op(line: &str) -> Result<(OpKind, Vec<OpId>), String> {
         Some(i) => (&toks[..i], &toks[i + 1..]),
         None => (&toks[..], &[][..]),
     };
-    let deps = deps_toks
-        .iter()
-        .map(|t| {
-            t.strip_prefix('l')
-                .ok_or_else(|| format!("bad dep {t:?}"))?
-                .parse::<usize>()
-                .map_err(|e| e.to_string())
-        })
-        .collect::<Result<Vec<_>, _>>()?;
+    let deps = deps_toks.iter().map(|t| parse_dep(t)).collect::<Result<Vec<_>, _>>()?;
     let num = |t: &str| -> Result<usize, String> { t.parse().map_err(|e| format!("{t:?}: {e}")) };
     let kind = match body.first().copied() {
         Some("send") | Some("recv") => {
@@ -284,6 +425,56 @@ mod tests {
         assert!(text.contains("# tag phase:redscat"));
         // parse ignores them
         assert!(from_text(&text).is_ok());
+    }
+
+    #[test]
+    fn composed_multi_phase_round_trip() {
+        use crate::compose::{compose, ChainPolicy};
+        let goal =
+            collectives::generate(Coll::Allreduce, "ring", &GenParams::new(4, 16)).unwrap();
+        let c = compose(&[&goal, &goal], &ChainPolicy::Serial).unwrap();
+        let text = to_text(&c);
+        assert!(text.contains("phases 2"), "{text}");
+        assert!(text.contains("phase 0 phase0"), "{text}");
+        assert!(text.contains("@phase 1"), "{text}");
+        assert!(text.contains("r1.l"), "cross-rank chain deps must serialize: {text}");
+        let back = from_text(&text).unwrap();
+        // the sealed arena — kinds, dep CSR, phase table — round-trips
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn parse_rejects_bad_phase_syntax() {
+        let hdr = "num_ranks 1\nelem_bytes 4\ncount 4\ntmp_count 0\n";
+        // @phase out of range
+        let bad = format!(
+            "{hdr}phases 2\nphase 0 a\nphase 1 b\nrank 0 {{\n  @phase 7\n  l0: calc 1e-6\n}}\n"
+        );
+        assert!(from_text(&bad).unwrap_err().contains("out of range"));
+        // phase count disagrees with phase lines
+        let bad = format!("{hdr}phases 3\nphase 0 a\nrank 0 {{\n}}\n");
+        assert!(from_text(&bad).unwrap_err().contains("phase lines"));
+        // malformed cross-rank dep token
+        let bad = format!("{hdr}rank 0 {{\n  l0: calc 1e-6\n  l1: calc 1e-6 requires r0l0\n}}\n");
+        assert!(from_text(&bad).unwrap_err().contains("bad dep"));
+        // dep naming a nonexistent rank
+        let bad =
+            format!("{hdr}rank 0 {{\n  l0: calc 1e-6\n  l1: calc 1e-6 requires r7.l0\n}}\n");
+        assert!(from_text(&bad).unwrap_err().contains("names rank 7"));
+    }
+
+    #[test]
+    fn crafted_phase_cycle_is_a_typed_error_not_a_deadlock_panic() {
+        // Non-monotonic @phase markers + a same-rank backward dep used to
+        // smuggle a dependency cycle past validation (r0.l0 -> r1.l1 ->
+        // r1.l0 -> r0.l0), which only surfaced as the simulator's deadlock
+        // panic.  It must be rejected at import with a typed error.
+        let evil = "num_ranks 2\nelem_bytes 4\ncount 4\ntmp_count 0\n\
+                    phases 3\nphase 0 a\nphase 1 b\nphase 2 c\n\
+                    rank 0 {\n  @phase 1\n  l0: calc 1e-6 requires r1.l1\n}\n\
+                    rank 1 {\n  @phase 2\n  l0: calc 1e-6 requires r0.l0\n  @phase 0\n  l1: calc 1e-6 requires l0\n}\n";
+        let err = from_text(evil).unwrap_err();
+        assert!(err.contains("later phase"), "{err}");
     }
 
     #[test]

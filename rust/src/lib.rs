@@ -22,8 +22,12 @@
 //!
 //! The crate is **a library with a thin CLI**: the [`engine::Engine`]
 //! facade is the one programmatic API over every subcommand (run / sweep /
-//! probe / trace / replay / autotune / GOAL import); `pico`'s `main` is
-//! argv→spec translation plus `Engine` calls.
+//! probe / trace / replay / autotune / GOAL import / overlap); `pico`'s
+//! `main` is argv→spec translation plus `Engine` calls.  The [`compose`]
+//! and [`workload`] layers turn per-invocation schedules into
+//! workload-level benchmarks: N sealed graphs concatenate into one
+//! multi-phase schedule (bucketed all-reduce streams overlapping a
+//! backprop timeline), simulated and attributed per phase.
 //!
 //! # Example
 //!
@@ -59,6 +63,7 @@ pub mod analysis;
 pub mod backends;
 pub mod benchkit;
 pub mod collectives;
+pub mod compose;
 pub mod config;
 pub mod engine;
 pub mod execute;
@@ -78,9 +83,11 @@ pub mod topology;
 pub mod tracer;
 pub mod tuning;
 pub mod util;
+pub mod workload;
 
+pub use compose::{compose, compose_named, ChainPolicy, ReadyDep};
 pub use engine::{Engine, EngineConfig};
-pub use goal::{Goal, GoalError, GoalGraph, OpKind, Seg};
+pub use goal::{Goal, GoalError, GoalGraph, OpKind, PhaseTable, Seg};
 pub use topology::{Allocation, Placement, SystemProfile, Tier};
 
 /// Compile the README's Rust snippets (the library-usage quickstart) as

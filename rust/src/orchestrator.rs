@@ -56,7 +56,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use crate::backends::{self, Backend};
 use crate::collectives::{Coll, GenParams};
 use crate::config::{resolve, EnvSpec, TestPoint, TestSpec};
-use crate::goal::{Goal, ReduceOp};
+use crate::goal::{Goal, GoalError, ReduceOp};
 use crate::metadata;
 use crate::netmodel::Proto;
 use crate::results::{Granularity, Measurement, OrderedRecordSink, Record, RecordSink, RunDir};
@@ -121,7 +121,10 @@ impl CacheKey {
     }
 }
 
-/// Counters for [`ScheduleCache::stats`].
+/// Counters for [`ScheduleCache::stats`] — exposed through
+/// [`Engine::cache_stats`](crate::engine::Engine::cache_stats) and the
+/// `--cache-stats` flag on `pico sweep` / `pico overlap` (the overlap
+/// run-dir persists them so bucket-skeleton reuse is provable from disk).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     /// Exact-key lookups served from the cache.
@@ -131,6 +134,29 @@ pub struct CacheStats {
     /// Misses served by rescaling a byte-agnostic skeleton (no generator
     /// run, no CSR compilation).
     pub rescales: usize,
+    /// Byte-agnostic skeletons generated (one per count-scalable
+    /// (backend, collective, algorithm, p); every sweep size and every
+    /// workload bucket after the first reuses one of these).
+    pub skeletons: usize,
+}
+
+impl CacheStats {
+    /// JSON form for run-dir metadata (`cache_stats.json`).
+    pub fn to_json(&self) -> crate::json::Json {
+        crate::json::Json::obj()
+            .set("hits", self.hits)
+            .set("misses", self.misses)
+            .set("rescales", self.rescales)
+            .set("skeletons", self.skeletons)
+    }
+
+    /// One-line human rendering (the `--cache-stats` flag).
+    pub fn render(&self) -> String {
+        format!(
+            "schedule cache: {} hits, {} misses, {} skeletons built, {} rescales",
+            self.hits, self.misses, self.skeletons, self.rescales
+        )
+    }
 }
 
 #[derive(Default)]
@@ -194,7 +220,9 @@ impl ScheduleCache {
                 None => {
                     let sk_params = GenParams { count: params.p, ..params.clone() };
                     let g = Arc::new(backend.schedule(coll, algo, &sk_params)?);
-                    self.inner.lock().unwrap().goals.insert(skel_key, g.clone());
+                    let mut inner = self.inner.lock().unwrap();
+                    inner.stats.skeletons += 1;
+                    inner.goals.insert(skel_key, g.clone());
                     g
                 }
             };
@@ -202,6 +230,34 @@ impl ScheduleCache {
             if m == 1 {
                 skel
             } else {
+                // Rescale arithmetic guard: `rescaled` multiplies count /
+                // tmp_count / every segment offset+length by `m` without
+                // checks, and nothing re-validates the result — a hostile
+                // byte size must surface as the same typed ByteOverflow a
+                // seal would produce, not wrap (segments are bounded by
+                // the two capacities, so these two products cover them).
+                let fits = |elems: usize| {
+                    elems
+                        .checked_mul(m)
+                        .and_then(|c| c.checked_mul(skel.elem_bytes))
+                        .is_some()
+                };
+                if !fits(skel.count) {
+                    return Err(GoalError::ByteOverflow {
+                        what: "count",
+                        elems: params.count,
+                        elem_bytes: skel.elem_bytes,
+                    }
+                    .into());
+                }
+                if !fits(skel.tmp_count) {
+                    return Err(GoalError::ByteOverflow {
+                        what: "tmp_count",
+                        elems: skel.tmp_count.saturating_mul(m),
+                        elem_bytes: skel.elem_bytes,
+                    }
+                    .into());
+                }
                 self.inner.lock().unwrap().stats.rescales += 1;
                 Arc::new(skel.rescaled(m))
             }
@@ -762,7 +818,10 @@ mod tests {
         let p = 4;
         // first request: builds the skeleton (count = p) and rescales
         let small = cache.schedule(&b, Coll::Allreduce, "ring", &GenParams::new(p, 8 * p)).unwrap();
-        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 1, rescales: 1 });
+        assert_eq!(
+            cache.stats(),
+            CacheStats { hits: 0, misses: 1, rescales: 1, skeletons: 1 }
+        );
         // same size again: exact hit, same shared instance
         let again = cache.schedule(&b, Coll::Allreduce, "ring", &GenParams::new(p, 8 * p)).unwrap();
         assert!(Arc::ptr_eq(&small, &again));

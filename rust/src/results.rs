@@ -71,6 +71,18 @@ pub struct Measurement {
 }
 
 impl Measurement {
+    /// A one-shot measurement: a single simulated makespan with optional
+    /// named sub-timings (workload-level runs record their per-phase
+    /// makespans here, so overlap records flow through every
+    /// [`RecordSink`] exactly like campaign points).
+    pub fn single_shot(
+        total_s: f64,
+        components: Components,
+        tag_times: Vec<(String, f64)>,
+    ) -> Measurement {
+        Measurement { times: vec![vec![total_s]], components, tag_times }
+    }
+
     /// Per-iteration collective latency: the max across ranks (the
     /// convention end-to-end benchmarks report).
     pub fn iter_maxima(&self) -> Vec<f64> {

@@ -75,6 +75,26 @@ impl Components {
     }
 }
 
+/// Virtual-time span of one composition phase (overlap composer): when
+/// the phase's first op started and its last op finished across all
+/// ranks.  Under `Serial` chaining spans tile the timeline, so makespans
+/// sum to the total; under `Ready` chaining they overlap — the difference
+/// is exactly the hidden communication the analysis layer reports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseSpan {
+    pub name: String,
+    /// Earliest op start in the phase.
+    pub start: f64,
+    /// Latest op finish in the phase.
+    pub finish: f64,
+}
+
+impl PhaseSpan {
+    pub fn makespan(&self) -> f64 {
+        (self.finish - self.start).max(0.0)
+    }
+}
+
 /// Result of simulating one Goal.
 #[derive(Debug, Clone)]
 pub struct SimReport {
@@ -86,6 +106,9 @@ pub struct SimReport {
     /// Mean time per tag region name (averaged over ranks that have it).
     pub tag_times: HashMap<String, f64>,
     pub events_processed: usize,
+    /// Per-phase spans, in phase order (empty unless the goal carries a
+    /// [`PhaseTable`](crate::goal::PhaseTable) — i.e. composed schedules).
+    pub phase_spans: Vec<PhaseSpan>,
 }
 
 /// Simulation context: where the Goal runs and under which knobs.
@@ -376,7 +399,37 @@ pub fn simulate(goal: &Goal, ctx: &SimContext) -> SimReport {
     let tag_times =
         tag_sums.into_iter().map(|(k, (sum, n))| (k, sum / n as f64)).collect();
 
-    SimReport { total_time, per_rank_time, components: comps, tag_times, events_processed: events }
+    // Phase attribution (composed schedules): earliest start / latest
+    // finish per phase over the whole arena.
+    let phase_spans = match &goal.phases {
+        None => Vec::new(),
+        Some(pt) => {
+            let mut spans: Vec<(f64, f64)> = vec![(f64::INFINITY, f64::NEG_INFINITY); pt.len()];
+            for g in 0..total_ops {
+                let k = pt.phase_of[g] as usize;
+                spans[k].0 = spans[k].0.min(start[g]);
+                spans[k].1 = spans[k].1.max(finish[g]);
+            }
+            pt.names
+                .iter()
+                .zip(spans)
+                .map(|(name, (s, f))| PhaseSpan {
+                    name: name.clone(),
+                    start: if s.is_finite() { s } else { 0.0 },
+                    finish: if f.is_finite() { f } else { 0.0 },
+                })
+                .collect()
+        }
+    };
+
+    SimReport {
+        total_time,
+        per_rank_time,
+        components: comps,
+        tag_times,
+        events_processed: events,
+        phase_spans,
+    }
 }
 
 /// Schedule one matched transfer; returns (send_finish, recv_finish,

@@ -1,0 +1,319 @@
+//! Workload layer: declarative multi-collective scenarios lowered onto the
+//! overlap composer ([`crate::compose`]).
+//!
+//! A [`WorkloadSpec`] describes *traffic shape*, not schedules: the first
+//! scenario, [`dnn_step`](WorkloadKind::DnnStep), is one data-parallel
+//! training step — a backprop `Calc` timeline plus a large gradient
+//! all-reduce split into `buckets` sub-collectives, each bucket's sends
+//! gated on the backprop step that produces its gradients (the
+//! bucketed-overlap pattern every DDP stack implements).  Lowering emits
+//! the phase graphs — bucket skeletons come from the shared
+//! [`ScheduleCache`], so a B-bucket step builds **one** collective
+//! schedule and reuses it B times — and a [`ChainPolicy`] for the
+//! composer; the [`Engine`](crate::engine::Engine) simulates the composed
+//! graph and the analysis layer attributes time back to phases.
+
+use std::sync::Arc;
+
+use crate::backends::LibPico;
+use crate::collectives::{Coll, GenParams, GoalBuilder};
+use crate::compose::{ChainPolicy, ReadyDep};
+use crate::goal::Goal;
+use crate::json::Json;
+use crate::orchestrator::ScheduleCache;
+use crate::util::parse_size;
+
+/// How a workload's phases are chained (the CLI-facing selector; lowering
+/// turns it into a concrete [`ChainPolicy`] with the scenario's triggers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChainKind {
+    /// Global barrier between phases — the serial-replay shape.
+    Serial,
+    /// Rank-local chaining.
+    PerRank,
+    /// Dataflow-triggered overlap (the scenario defines the triggers).
+    Ready,
+}
+
+impl ChainKind {
+    pub const ALL: [ChainKind; 3] = [ChainKind::Serial, ChainKind::PerRank, ChainKind::Ready];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ChainKind::Serial => "serial",
+            ChainKind::PerRank => "per_rank",
+            ChainKind::Ready => "ready",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ChainKind> {
+        ChainKind::ALL.into_iter().find(|c| c.label() == s)
+    }
+}
+
+/// What lowering produces: named phase graphs plus the chain policy to
+/// hand to [`compose_named`](crate::compose::compose_named).
+pub type LoweredParts = (Vec<(String, Arc<Goal>)>, ChainPolicy);
+
+/// One data-parallel DNN training step (gradient bucketing).
+#[derive(Debug, Clone)]
+pub struct DnnStepSpec {
+    /// Total gradient volume per rank.
+    pub grad_bytes: usize,
+    /// Number of gradient buckets (sub-collectives).
+    pub buckets: usize,
+    /// Total backprop compute time, evenly split across buckets.
+    pub compute_s: f64,
+    /// All-reduce algorithm for the buckets (libpico registry name).
+    pub algo: String,
+}
+
+impl DnnStepSpec {
+    pub fn new(grad_bytes: usize, buckets: usize, compute_s: f64) -> Self {
+        Self { grad_bytes, buckets, compute_s, algo: "ring".to_string() }
+    }
+
+    pub fn with_algo(mut self, algo: &str) -> Self {
+        self.algo = algo.to_string();
+        self
+    }
+}
+
+/// The scenario catalogue (one entry so far; the enum is where pipeline /
+/// MoE-dispatch shapes land next).
+#[derive(Debug, Clone)]
+pub enum WorkloadKind {
+    DnnStep(DnnStepSpec),
+}
+
+/// A named, declarative workload — the unit `pico overlap` runs.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub name: String,
+    pub kind: WorkloadKind,
+}
+
+impl WorkloadSpec {
+    pub fn dnn_step(name: &str, spec: DnnStepSpec) -> Self {
+        Self { name: name.to_string(), kind: WorkloadKind::DnnStep(spec) }
+    }
+
+    /// Default chain for the scenario (`dnn_step` exists to overlap).
+    pub fn default_chain(&self) -> ChainKind {
+        ChainKind::Ready
+    }
+
+    /// Lower to named phase graphs plus the chain policy for
+    /// [`compose_named`](crate::compose::compose_named).  Phase graphs are
+    /// returned individually (not pre-composed) so callers can also
+    /// simulate them standalone — that is how conservation checks and the
+    /// serial baseline are computed without regenerating anything.
+    pub fn lower_parts(
+        &self,
+        p: usize,
+        cache: &ScheduleCache,
+        chain: ChainKind,
+    ) -> Result<LoweredParts, String> {
+        match &self.kind {
+            WorkloadKind::DnnStep(s) => lower_dnn_step(s, p, cache, chain),
+        }
+    }
+
+    /// The serial-replay baseline the paperly comparison is against: the
+    /// same backprop timeline plus **one monolithic** all-reduce of the
+    /// full gradient, `Serial`-chained.
+    pub fn lower_baseline_parts(
+        &self,
+        p: usize,
+        cache: &ScheduleCache,
+    ) -> Result<LoweredParts, String> {
+        match &self.kind {
+            WorkloadKind::DnnStep(s) => {
+                let compute = compute_timeline(p, s.buckets, s.compute_s)?;
+                let mono = bucket_schedule(p, s.grad_bytes, 1, &s.algo, cache)?;
+                Ok((
+                    vec![("compute".to_string(), compute), ("allreduce".to_string(), mono)],
+                    ChainPolicy::Serial,
+                ))
+            }
+        }
+    }
+
+    /// The workload descriptor (what `pico overlap --out` persists).
+    pub fn to_json(&self) -> Json {
+        match &self.kind {
+            WorkloadKind::DnnStep(s) => Json::obj()
+                .set("name", self.name.as_str())
+                .set("scenario", "dnn_step")
+                .set("grad_bytes", s.grad_bytes)
+                .set("buckets", s.buckets)
+                .set("compute_ms", s.compute_s * 1e3)
+                .set("algorithm", s.algo.as_str()),
+        }
+    }
+}
+
+impl TryFrom<&Json> for WorkloadSpec {
+    type Error = String;
+
+    /// Parse a workload descriptor (`examples/dnn_step.json`).  Required:
+    /// `scenario`; `grad_bytes` accepts numbers or size strings
+    /// (`"64MiB"`); `compute_ms` is fractional milliseconds.
+    fn try_from(j: &Json) -> Result<Self, String> {
+        let scenario = j
+            .get("scenario")
+            .and_then(Json::as_str)
+            .ok_or("workload: missing \"scenario\"")?;
+        if scenario != "dnn_step" {
+            return Err(format!("unknown workload scenario {scenario:?}"));
+        }
+        let name = j.get("name").and_then(Json::as_str).unwrap_or("dnn-step").to_string();
+        let grad_bytes = match j.get("grad_bytes") {
+            Some(n @ Json::Num(_)) => n.as_usize().ok_or("bad grad_bytes")?,
+            Some(Json::Str(s)) => parse_size(s).ok_or_else(|| format!("bad grad_bytes {s:?}"))?,
+            Some(other) => return Err(format!("bad grad_bytes {other:?}")),
+            None => 64 << 20,
+        };
+        let buckets = j.get("buckets").and_then(Json::as_usize).unwrap_or(4);
+        if buckets == 0 {
+            return Err("dnn_step: buckets must be >= 1".into());
+        }
+        let compute_s = match j.get("compute_ms").and_then(Json::as_f64) {
+            Some(ms) if ms > 0.0 => ms * 1e-3,
+            Some(ms) => return Err(format!("dnn_step: compute_ms must be > 0, got {ms}")),
+            None => 4e-3,
+        };
+        if grad_bytes == 0 {
+            return Err("dnn_step: grad_bytes must be > 0".into());
+        }
+        let algo = j.get("algorithm").and_then(Json::as_str).unwrap_or("ring").to_string();
+        Ok(WorkloadSpec::dnn_step(&name, DnnStepSpec {
+            grad_bytes,
+            buckets,
+            compute_s,
+            algo,
+        }))
+    }
+}
+
+/// The backprop `Calc` timeline: every rank runs `buckets` equal compute
+/// steps back-to-back; step i finishing means gradient bucket i is ready.
+fn compute_timeline(p: usize, buckets: usize, compute_s: f64) -> Result<Arc<Goal>, String> {
+    if p == 0 {
+        return Err("workload: p must be >= 1".into());
+    }
+    let step = compute_s / buckets as f64;
+    let mut b = GoalBuilder::new(p, 0, 4);
+    for r in 0..p {
+        b.calc_timeline(r, step, buckets);
+    }
+    Ok(Arc::new(b.finish().map_err(String::from)?))
+}
+
+/// One gradient bucket's all-reduce, sourced through the shared cache.
+/// The per-bucket element count is rounded up to a multiple of `p` so the
+/// cache's byte-agnostic skeleton-rescale path applies: a B-bucket step
+/// compiles one dependency CSR and rescales/reuses it B times
+/// (`CacheStats::skeletons` proves it).
+fn bucket_schedule(
+    p: usize,
+    total_bytes: usize,
+    buckets: usize,
+    algo: &str,
+    cache: &ScheduleCache,
+) -> Result<Arc<Goal>, String> {
+    let per_bucket_elems = (total_bytes / buckets / 4).max(1).div_ceil(p) * p;
+    cache.schedule(&LibPico, Coll::Allreduce, algo, &GenParams::new(p, per_bucket_elems))
+}
+
+fn lower_dnn_step(
+    s: &DnnStepSpec,
+    p: usize,
+    cache: &ScheduleCache,
+    chain: ChainKind,
+) -> Result<LoweredParts, String> {
+    if s.buckets == 0 {
+        return Err("dnn_step: buckets must be >= 1".into());
+    }
+    let compute = compute_timeline(p, s.buckets, s.compute_s)?;
+    let bucket = bucket_schedule(p, s.grad_bytes, s.buckets, &s.algo, cache)?;
+    let mut parts: Vec<(String, Arc<Goal>)> = Vec::with_capacity(s.buckets + 1);
+    parts.push(("compute".to_string(), compute));
+    for i in 0..s.buckets {
+        parts.push((format!("bucket{i}"), bucket.clone()));
+    }
+    let policy = match chain {
+        ChainKind::Serial => ChainPolicy::Serial,
+        ChainKind::PerRank => ChainPolicy::PerRank,
+        // bucket i's sends wait for the backprop step that produced its
+        // gradients: Calc op i of phase 0, per rank
+        ChainKind::Ready => ChainPolicy::Ready(
+            (0..s.buckets).map(|i| ReadyDep { phase: 0, op: i }).collect(),
+        ),
+    };
+    Ok((parts, policy))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compose::compose_named;
+
+    fn spec() -> WorkloadSpec {
+        WorkloadSpec::dnn_step("t", DnnStepSpec::new(1 << 20, 4, 2e-3))
+    }
+
+    fn composed(chain: ChainKind) -> Goal {
+        let cache = ScheduleCache::new();
+        let (parts, policy) = spec().lower_parts(8, &cache, chain).unwrap();
+        let refs: Vec<(&str, &Goal)> = parts.iter().map(|(n, g)| (n.as_str(), &**g)).collect();
+        compose_named(&refs, &policy).unwrap()
+    }
+
+    #[test]
+    fn dnn_step_lowers_to_five_phases() {
+        let g = composed(ChainKind::Ready);
+        assert_eq!(g.phase_count(), 5); // compute + 4 buckets
+        assert_eq!(g.p(), 8);
+        assert_eq!(g.validate(), Ok(()));
+        let pt = g.phases.as_ref().unwrap();
+        assert_eq!(pt.names[0], "compute");
+        assert_eq!(pt.names[1], "bucket0");
+    }
+
+    #[test]
+    fn buckets_share_one_cached_skeleton() {
+        let cache = ScheduleCache::new();
+        let (parts, _) = spec().lower_parts(8, &cache, ChainKind::Ready).unwrap();
+        // one generator run total: every bucket is the same Arc
+        assert!(Arc::ptr_eq(&parts[1].1, &parts[2].1));
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 1, "{stats:?}");
+        assert_eq!(stats.skeletons, 1, "{stats:?}");
+    }
+
+    #[test]
+    fn workload_spec_parses_from_json() {
+        let j = Json::parse(
+            r#"{"scenario":"dnn_step","name":"x","grad_bytes":"8MiB","buckets":2,
+                "compute_ms":1.5,"algorithm":"ring"}"#,
+        )
+        .unwrap();
+        let w = WorkloadSpec::try_from(&j).unwrap();
+        assert_eq!(w.name, "x");
+        let WorkloadKind::DnnStep(s) = &w.kind;
+        assert_eq!(s.grad_bytes, 8 << 20);
+        assert_eq!(s.buckets, 2);
+        assert!((s.compute_s - 1.5e-3).abs() < 1e-12);
+        // round trip through the descriptor
+        let again = WorkloadSpec::try_from(&w.to_json()).unwrap();
+        let WorkloadKind::DnnStep(s2) = &again.kind;
+        assert_eq!(s2.grad_bytes, s.grad_bytes);
+        // bad inputs are typed errors
+        assert!(WorkloadSpec::try_from(&Json::parse(r#"{"scenario":"nope"}"#).unwrap()).is_err());
+        assert!(WorkloadSpec::try_from(
+            &Json::parse(r#"{"scenario":"dnn_step","buckets":0}"#).unwrap()
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,179 @@
+//! Composition invariants for the overlap composer (ISSUE 4): identity
+//! compose is wire-format invisible, `Serial` chaining conserves makespan
+//! across the collective registry grid, mismatched inputs are typed
+//! errors, and the `dnn_step` acceptance criterion — `Ready`-chained
+//! bucketed overlap strictly beats the serial replay of the same compute
+//! plus one monolithic all-reduce.
+
+use pico::collectives::{self, Coll, GenParams};
+use pico::compose::{compose, compose_named, ChainPolicy};
+use pico::engine::{Engine, EngineConfig, OverlapSpec};
+use pico::goal::{Goal, GoalError};
+use pico::goal_text;
+use pico::orchestrator::ScheduleCache;
+use pico::sim::{simulate, SimContext};
+use pico::topology::{leonardo, AllocPolicy, Allocation, Placement, RankOrder};
+use pico::workload::{ChainKind, DnnStepSpec, WorkloadSpec};
+
+fn ctx_fixture(nodes: usize, ppn: usize) -> (pico::topology::SystemProfile, Placement) {
+    let prof = leonardo();
+    let alloc = Allocation::new(&prof, nodes, AllocPolicy::Contiguous, 42);
+    let pl = Placement::new(&prof, &alloc, ppn, RankOrder::Block);
+    (prof, pl)
+}
+
+/// Identity compose: composing a single graph under any policy yields a
+/// schedule whose GOAL text is byte-identical to the original — phase
+/// machinery must be invisible until there are ≥ 2 phases.
+#[test]
+fn prop_identity_compose_goal_text_byte_identical() {
+    for info in collectives::registry() {
+        let p = if info.any_p { 6 } else { 8 };
+        let count = if info.coll == Coll::Barrier { 0 } else { p * 8 };
+        let g = collectives::generate(info.coll, info.name, &GenParams::new(p, count))
+            .unwrap_or_else(|e| panic!("{:?}:{}: {e}", info.coll, info.name));
+        let original = goal_text::to_text(&g);
+        for policy in
+            [ChainPolicy::Serial, ChainPolicy::PerRank, ChainPolicy::Ready(Vec::new())]
+        {
+            let c = compose(&[&g], &policy).unwrap();
+            assert_eq!(
+                goal_text::to_text(&c),
+                original,
+                "{:?}:{} under {policy:?}",
+                info.coll,
+                info.name
+            );
+        }
+    }
+}
+
+/// Serial chaining is conservation: for every registry algorithm composed
+/// after a ring all-reduce, the composed makespan equals the sum of the
+/// standalone per-phase makespans (up to f64 rounding), and the reported
+/// phase spans tile the timeline.
+#[test]
+fn prop_serial_composition_conserves_makespan() {
+    let (prof, pl) = ctx_fixture(8, 1);
+    let p = 8;
+    let ring = collectives::generate(Coll::Allreduce, "ring", &GenParams::new(p, p * 8)).unwrap();
+    let ctx = SimContext::new(&prof, &pl);
+    let t_ring = simulate(&ring, &ctx).total_time;
+    for info in collectives::registry() {
+        let count = if info.coll == Coll::Barrier { 0 } else { p * 16 };
+        let g = collectives::generate(info.coll, info.name, &GenParams::new(p, count))
+            .unwrap_or_else(|e| panic!("{:?}:{}: {e}", info.coll, info.name));
+        let t_g = simulate(&g, &ctx).total_time;
+        let c = compose(&[&g, &ring], &ChainPolicy::Serial).unwrap();
+        let rep = simulate(&c, &ctx);
+        let sum = t_g + t_ring;
+        let tol = 1e-9 * sum.max(1e-30);
+        assert!(
+            (rep.total_time - sum).abs() <= tol,
+            "{:?}:{}: composed {} vs serial sum {sum}",
+            info.coll,
+            info.name,
+            rep.total_time
+        );
+        assert_eq!(rep.phase_spans.len(), 2);
+        let tiled = rep.phase_spans[0].makespan() + rep.phase_spans[1].makespan();
+        assert!(
+            (tiled - rep.total_time).abs() <= tol,
+            "{:?}:{}: spans {tiled} do not tile {}",
+            info.coll,
+            info.name,
+            rep.total_time
+        );
+    }
+}
+
+#[test]
+fn composing_mismatched_p_is_a_typed_error() {
+    let a = collectives::generate(Coll::Allreduce, "ring", &GenParams::new(4, 16)).unwrap();
+    let b = collectives::generate(Coll::Allreduce, "ring", &GenParams::new(8, 32)).unwrap();
+    match compose(&[&a, &b], &ChainPolicy::Serial) {
+        Err(GoalError::ComposeRankMismatch { phase, p, expected }) => {
+            assert_eq!((phase, p, expected), (1, 8, 4));
+        }
+        other => panic!("expected ComposeRankMismatch, got {other:?}"),
+    }
+}
+
+/// The headline acceptance criterion: a `dnn_step` with ≥ 2 buckets and
+/// `Ready` chaining simulates strictly faster than serially replaying the
+/// same compute plus one monolithic all-reduce, while `Serial` chaining
+/// reproduces the serial sum exactly.
+#[test]
+fn dnn_step_ready_overlap_beats_serial_replay() {
+    let engine = Engine::new(EngineConfig::for_system("leonardo"));
+    let w = WorkloadSpec::dnn_step("accept", DnnStepSpec::new(64 << 20, 4, 4e-3));
+    let ready = engine
+        .overlap(&OverlapSpec::workload(w.clone()).with_nodes(8).with_chain(ChainKind::Ready))
+        .unwrap();
+    assert!(
+        ready.sim.total_time < ready.metrics.serial_s,
+        "overlap {} must be strictly below serial replay {}",
+        ready.sim.total_time,
+        ready.metrics.serial_s
+    );
+    assert!(ready.metrics.hidden_comm_s > 0.0, "{:?}", ready.metrics);
+    assert!(ready.metrics.efficiency > 0.0 && ready.metrics.efficiency <= 1.0);
+    assert_eq!(ready.sim.phase_spans.len(), 5, "compute + 4 buckets");
+    // compute runs undisturbed: its span equals the configured timeline
+    let compute = &ready.sim.phase_spans[0];
+    assert!((compute.makespan() - 4e-3).abs() < 1e-12, "{compute:?}");
+
+    // Serial chaining of the same workload conserves exactly
+    let serial = engine
+        .overlap(&OverlapSpec::workload(w).with_nodes(8).with_chain(ChainKind::Serial))
+        .unwrap();
+    let (sum, ok) = serial.conservation.expect("serial chain reports conservation");
+    assert!(ok, "composed {} vs per-phase sum {sum}", serial.sim.total_time);
+    // and overlap beats the bucketed serial replay too
+    assert!(ready.sim.total_time < serial.sim.total_time);
+}
+
+/// A composed multi-phase schedule survives the GOAL-text round trip
+/// bit-for-bit: arena equality and identical simulation (phase spans
+/// included) after export + re-import.
+#[test]
+fn composed_schedule_round_trips_through_goal_text() {
+    let cache = ScheduleCache::new();
+    let w = WorkloadSpec::dnn_step("rt", DnnStepSpec::new(1 << 20, 3, 1e-3));
+    let (parts, policy) = w.lower_parts(4, &cache, ChainKind::Ready).unwrap();
+    let refs: Vec<(&str, &Goal)> = parts.iter().map(|(n, g)| (n.as_str(), &**g)).collect();
+    let c = compose_named(&refs, &policy).unwrap();
+    let back = goal_text::from_text(&goal_text::to_text(&c)).unwrap();
+    assert_eq!(back, c, "sealed arena must round-trip exactly");
+    let (prof, pl) = ctx_fixture(4, 1);
+    let ctx = SimContext::new(&prof, &pl);
+    let a = simulate(&c, &ctx);
+    let b = simulate(&back, &ctx);
+    assert_eq!(a.total_time, b.total_time);
+    assert_eq!(a.per_rank_time, b.per_rank_time);
+    assert_eq!(a.phase_spans, b.phase_spans);
+    assert_eq!(a.phase_spans.len(), 4);
+}
+
+/// Bucket skeleton reuse is observable through the engine: one skeleton
+/// build serves every bucket of every dnn_step at the same (algo, p).
+#[test]
+fn overlap_buckets_prove_skeleton_reuse() {
+    let engine = Engine::new(EngineConfig::for_system("leonardo"));
+    let spec = |buckets| {
+        OverlapSpec::workload(WorkloadSpec::dnn_step(
+            "reuse",
+            DnnStepSpec::new(32 << 20, buckets, 2e-3),
+        ))
+        .with_nodes(4)
+    };
+    engine.overlap(&spec(2)).unwrap();
+    let first = engine.cache_stats();
+    assert_eq!(first.skeletons, 1, "{first:?}");
+    // a different bucket count at the same (algo, p): same skeleton,
+    // served by rescale (different per-bucket size) — no new generator run
+    engine.overlap(&spec(4)).unwrap();
+    let second = engine.cache_stats();
+    assert_eq!(second.skeletons, 1, "{second:?}");
+    assert!(second.rescales > first.rescales || second.hits > first.hits, "{second:?}");
+}

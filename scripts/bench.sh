@@ -1,12 +1,14 @@
 #!/usr/bin/env bash
 # Bench trajectory runner: executes the hot-path bench suite and collects
-# its machine-readable output (BENCH_ir.json) at the repository root.
+# its machine-readable output (BENCH_ir.json + BENCH_overlap.json) at the
+# repository root.
 #
-#   scripts/bench.sh            # run perf_hotpaths, emit BENCH_ir.json
+#   scripts/bench.sh            # run perf_hotpaths, emit BENCH_*.json
 #
 # The bench binary prints the human-readable report as usual; the JSON
-# side-channel is enabled by exporting PICO_BENCH_OUT (consumed by
-# benchkit::BenchJson::write_if_env).
+# side-channels are enabled by exporting PICO_BENCH_OUT (IR section) and
+# PICO_BENCH_OVERLAP_OUT (overlap composer section), both consumed by
+# benchkit::BenchJson::write_if_env.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -17,12 +19,16 @@ if ! command -v cargo >/dev/null 2>&1; then
     exit 2
 fi
 
-out="$PWD/BENCH_ir.json"
-echo "== bench: perf_hotpaths (IR section -> $out)"
-PICO_BENCH_OUT="$out" cargo bench --bench perf_hotpaths
+ir_out="$PWD/BENCH_ir.json"
+overlap_out="$PWD/BENCH_overlap.json"
+echo "== bench: perf_hotpaths (IR -> $ir_out, overlap -> $overlap_out)"
+PICO_BENCH_OUT="$ir_out" PICO_BENCH_OVERLAP_OUT="$overlap_out" \
+    cargo bench --bench perf_hotpaths
 
-if [ ! -s "$out" ]; then
-    echo "FAIL: $out was not produced" >&2
-    exit 1
-fi
-echo "bench: wrote $out"
+for out in "$ir_out" "$overlap_out"; do
+    if [ ! -s "$out" ]; then
+        echo "FAIL: $out was not produced" >&2
+        exit 1
+    fi
+    echo "bench: wrote $out"
+done

@@ -7,6 +7,10 @@
 #      --jobs 4 must produce byte-identical run directories.
 #   5. GOAL-import smoke: import the checked-in golden schedule, simulate
 #      it, re-export + re-import, and diff the two reports.
+#   6. overlap smoke: two ring all-reduces Serial-composed must conserve
+#      makespan; the examples/dnn_step.json workload with Ready chaining
+#      must beat its serial replay; the composed schedule must survive a
+#      GOAL-text export/import round trip.
 #
 # Every stage runs under `set -euo pipefail`, so the first non-zero exit
 # aborts the script with that stage's status.
@@ -83,5 +87,26 @@ diff "$TMP/import1.txt" "$TMP/import2.txt"
 grep -q "ranks: 4" "$TMP/import1.txt"
 grep -q "simulated latency" "$TMP/import1.txt"
 echo "OK: GOAL import report stable across an export/import round trip"
+
+echo "== smoke: overlap composer"
+# two ring all-reduces Serial-composed: makespan conservation is checked
+# in-engine (composed = sum of per-phase makespans) and reported
+"$BIN" overlap --coll allreduce --algo ring --bytes 1MiB --nodes 4 \
+    --repeat 2 --chain serial > "$TMP/ov_serial.txt"
+grep -q "conservation: ok" "$TMP/ov_serial.txt"
+# the dnn_step workload descriptor, default (Ready) chaining: bucketed
+# overlap must be strictly faster than the serial replay baseline, and
+# the bucket skeletons must come from the shared schedule cache
+"$BIN" overlap --spec examples/dnn_step.json --cache-stats > "$TMP/ov_ready.txt"
+grep -q "faster-than-serial: yes" "$TMP/ov_ready.txt"
+grep -q "skeletons built" "$TMP/ov_ready.txt"
+# composed schedules survive the GOAL-text round trip (phases included)
+"$BIN" overlap --spec examples/dnn_step.json --emit-goal "$TMP/dnn.goal" \
+    > /dev/null 2>&1
+"$BIN" import --goal "$TMP/dnn.goal" --system leonardo \
+    > "$TMP/ov_import.txt" 2>/dev/null
+grep -q "simulated latency" "$TMP/ov_import.txt"
+grep -q "compute" "$TMP/ov_import.txt"   # phase spans survive the trip
+echo "OK: overlap composer conserves serially, overlaps with Ready chaining"
 
 echo "verify: all checks passed"
