@@ -203,11 +203,87 @@ pub fn render_phase_spans(spans: &[crate::sim::PhaseSpan]) -> String {
     let width = spans.iter().map(|s| s.name.len()).max().unwrap_or(0).max(8);
     for s in spans {
         out.push_str(&format!(
-            "    {:<width$} start {:>10}  finish {:>10}  makespan {:>10}\n",
+            "    {:<width$} start {:>10}  finish {:>10}  makespan {:>10}  busy {:>10}\n",
             s.name,
             fmt_time(s.start),
             fmt_time(s.finish),
             fmt_time(s.makespan()),
+            fmt_time(s.busy),
+        ));
+    }
+    out
+}
+
+/// Pipeline bubble fraction: the share of the composed makespan each
+/// stage spends *not* computing, `1 − compute / makespan`, clamped to
+/// [0, 1].  `compute_s` is the per-stage compute total (every stage
+/// processes every microbatch, so it is uniform); with any real p2p
+/// traffic the fraction is strictly inside (0, 1).
+pub fn pipeline_bubble(compute_s: f64, makespan_s: f64) -> f64 {
+    if makespan_s <= 0.0 {
+        return 0.0;
+    }
+    (1.0 - compute_s / makespan_s).clamp(0.0, 1.0)
+}
+
+/// Per-job attribution of an interference composition: one job's share of
+/// the union timeline versus its isolated (same placement slice, no
+/// neighbour traffic) replay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpan {
+    /// Job name (the disjoint-composition phase prefix).
+    pub name: String,
+    /// Earliest op start of the job in the union schedule.
+    pub start: f64,
+    /// Latest op finish of the job in the union schedule.
+    pub finish: f64,
+    /// Makespan of the same job replayed alone on its placement slice.
+    pub isolated_s: f64,
+    /// (finish − start) / isolated: ≥ 1, and > 1 exactly when the
+    /// co-located jobs contend for NICs, scale-up fabric or group
+    /// uplinks.
+    pub slowdown: f64,
+}
+
+/// Derive [`JobSpan`]s from a union simulation's phase spans: a phase
+/// belongs to job `name` when it is named `name` or `name:<inner>` (the
+/// disjoint composer's flattened-prefix convention).  `jobs` pairs each
+/// job name with its isolated makespan.
+pub fn job_attribution(
+    spans: &[crate::sim::PhaseSpan],
+    jobs: &[(String, f64)],
+) -> Vec<JobSpan> {
+    jobs.iter()
+        .map(|(name, isolated_s)| {
+            let prefix = format!("{name}:");
+            let mut start = f64::INFINITY;
+            let mut finish = f64::NEG_INFINITY;
+            for s in spans {
+                if s.name == *name || s.name.starts_with(&prefix) {
+                    start = start.min(s.start);
+                    finish = finish.max(s.finish);
+                }
+            }
+            let (start, finish) =
+                if start.is_finite() { (start, finish) } else { (0.0, 0.0) };
+            let slowdown =
+                if *isolated_s > 0.0 { (finish - start) / isolated_s } else { 0.0 };
+            JobSpan { name: name.clone(), start, finish, isolated_s: *isolated_s, slowdown }
+        })
+        .collect()
+}
+
+/// The per-job interference table (`pico overlap`, interference runs).
+pub fn render_jobs(jobs: &[JobSpan]) -> String {
+    let mut out = String::from("  jobs:\n");
+    let width = jobs.iter().map(|j| j.name.len()).max().unwrap_or(0).max(8);
+    for j in jobs {
+        out.push_str(&format!(
+            "    {:<width$} makespan {:>10}  isolated {:>10}  slowdown {:>6.3}x\n",
+            j.name,
+            fmt_time(j.finish - j.start),
+            fmt_time(j.isolated_s),
+            j.slowdown,
         ));
     }
     out
@@ -376,13 +452,46 @@ mod tests {
     #[test]
     fn phase_span_table_renders() {
         let spans = vec![
-            crate::sim::PhaseSpan { name: "compute".into(), start: 0.0, finish: 4e-3 },
-            crate::sim::PhaseSpan { name: "bucket0".into(), start: 1e-3, finish: 2e-3 },
+            crate::sim::PhaseSpan { name: "compute".into(), start: 0.0, finish: 4e-3, busy: 4e-3 },
+            crate::sim::PhaseSpan { name: "bucket0".into(), start: 1e-3, finish: 2e-3, busy: 5e-4 },
         ];
         let txt = render_phase_spans(&spans);
         assert!(txt.contains("compute"));
         assert!(txt.contains("bucket0"));
         assert!(txt.contains("makespan"));
+        assert!(txt.contains("busy"));
+    }
+
+    #[test]
+    fn pipeline_bubble_fraction_behaves() {
+        assert!((pipeline_bubble(3.0, 4.0) - 0.25).abs() < 1e-12);
+        assert_eq!(pipeline_bubble(4.0, 4.0), 0.0);
+        assert_eq!(pipeline_bubble(5.0, 4.0), 0.0); // clamped
+        assert_eq!(pipeline_bubble(1.0, 0.0), 0.0); // degenerate
+    }
+
+    #[test]
+    fn job_attribution_matches_prefixed_spans() {
+        use crate::sim::PhaseSpan;
+        let spans = vec![
+            PhaseSpan { name: "train:compute".into(), start: 0.0, finish: 2.0, busy: 2.0 },
+            PhaseSpan { name: "train:bucket0".into(), start: 1.0, finish: 3.0, busy: 1.0 },
+            PhaseSpan { name: "neighbor".into(), start: 0.0, finish: 5.0, busy: 4.0 },
+        ];
+        let jobs = job_attribution(
+            &spans,
+            &[("train".to_string(), 2.0), ("neighbor".to_string(), 5.0)],
+        );
+        assert_eq!(jobs.len(), 2);
+        assert_eq!((jobs[0].start, jobs[0].finish), (0.0, 3.0));
+        assert!((jobs[0].slowdown - 1.5).abs() < 1e-12);
+        assert!((jobs[1].slowdown - 1.0).abs() < 1e-12);
+        let txt = render_jobs(&jobs);
+        assert!(txt.contains("train"));
+        assert!(txt.contains("slowdown"));
+        // a name that is a prefix of another must not capture its spans
+        let tricky = job_attribution(&spans, &[("neigh".to_string(), 1.0)]);
+        assert_eq!((tricky[0].start, tricky[0].finish), (0.0, 0.0));
     }
 
     #[test]

@@ -27,6 +27,27 @@
 //!   the bucketed-DNN shape: each gradient bucket's sends are gated on the
 //!   backprop `Calc` that produces that bucket, and communication overlaps
 //!   the remaining compute (`crate::workload` lowers `dnn_step` this way).
+//! - [`ChainPolicy::Links`] — a per-boundary mix: each phase after the
+//!   first picks its own [`PhaseLink`] (`Serial` / `PerRank` / `Ready`).
+//!   The MoE scenario needs this: the dispatch alltoall is `Ready`-gated
+//!   on the router `Calc`, while expert compute and the combine alltoall
+//!   chain `PerRank` on their predecessors.
+//! - [`ChainPolicy::Concurrent`] — no cross-phase edges at all; every
+//!   phase starts at virtual time zero.  With [`Placement::Disjoint`]
+//!   this is the multi-job interference shape: independent jobs sharing
+//!   one machine through the simulator's resource pools only.
+//!
+//! # Rank placement
+//!
+//! [`Placement::Shared`] (the classic mode) requires every phase to have
+//! the same rank count — phases are successive programs of the *same*
+//! ranks.  [`Placement::Disjoint`] instead **rank-remaps** each phase into
+//! its own slice of a larger union rank space: phase k's rank r becomes
+//! union rank `offsets[k] + r`, `Send`/`Recv` peers shift with it, and
+//! the slices must not overlap (typed [`GoalError`] otherwise).  Union
+//! ranks covered by no phase get empty programs (idle ranks — allocated
+//! but unused slots of the placement).  This is how two independent
+//! workloads are composed onto one topology to measure interference.
 //!
 //! # Mechanics
 //!
@@ -42,6 +63,8 @@
 //! Composition is closed under itself: composing already-composed graphs
 //! flattens their phase tables (inner phase names are prefixed with the
 //! outer phase name).
+
+#![deny(missing_docs)]
 
 use std::sync::Arc;
 
@@ -60,16 +83,40 @@ pub enum ChainPolicy {
     /// `triggers[k-1]` gates phase k's roots (per rank) on a designated
     /// `Calc` op of an earlier phase.
     Ready(Vec<ReadyDep>),
+    /// Per-boundary mix: `links[k-1]` chains phase k to its predecessors
+    /// with its own [`PhaseLink`] (exactly one link per phase after the
+    /// first, arity-checked at compose time).
+    Links(Vec<PhaseLink>),
+    /// No cross-phase edges: every phase's roots are released at virtual
+    /// time zero.  Phases interact only through the simulator's shared
+    /// resource pools — the multi-job interference mode (pair with
+    /// [`Placement::Disjoint`]).
+    Concurrent,
 }
 
 impl ChainPolicy {
+    /// Stable lowercase label for reports and persisted records.
     pub fn label(&self) -> &'static str {
         match self {
             ChainPolicy::Serial => "serial",
             ChainPolicy::PerRank => "per_rank",
             ChainPolicy::Ready(_) => "ready",
+            ChainPolicy::Links(_) => "mixed",
+            ChainPolicy::Concurrent => "concurrent",
         }
     }
+}
+
+/// One boundary's chaining rule inside [`ChainPolicy::Links`]: how phase k
+/// connects to its predecessors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseLink {
+    /// Global barrier on the previous phase (every sink, every rank).
+    Serial,
+    /// Rank-local chaining on the previous phase's sinks.
+    PerRank,
+    /// Dataflow gate on a designated `Calc` of an earlier phase.
+    Ready(ReadyDep),
 }
 
 /// A `Ready` chain trigger: phase k's first ops wait, on every rank r, for
@@ -81,6 +128,35 @@ pub struct ReadyDep {
     pub phase: usize,
     /// Rank-local op id of the trigger `Calc` (same on every rank).
     pub op: OpId,
+}
+
+/// Where each phase's ranks land in the composed schedule's rank space.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Placement {
+    /// Every phase runs on the same ranks (all graphs must agree on `p`) —
+    /// the classic overlap composition.
+    Shared,
+    /// Rank-remap composition: phase k's rank r becomes union rank
+    /// `offsets[k] + r` in a `union_p`-rank schedule.  Slices must be
+    /// pairwise disjoint and fit inside `union_p`; uncovered union ranks
+    /// get empty programs.  Only [`ChainPolicy::Serial`] (jobs
+    /// back-to-back) and [`ChainPolicy::Concurrent`] (jobs co-scheduled)
+    /// are meaningful here — other policies are typed errors.
+    Disjoint {
+        /// First union rank of each phase, one entry per composed graph.
+        offsets: Vec<usize>,
+        /// Total rank count of the composed schedule.
+        union_p: usize,
+    },
+}
+
+/// Per-phase view of the effective chaining rule (uniform policies expand
+/// to the same link at every boundary).
+enum LinkKind<'a> {
+    None,
+    Serial,
+    PerRank,
+    Ready(&'a ReadyDep),
 }
 
 /// [`compose_named`] with default phase names (`phase0`, `phase1`, …).
@@ -107,6 +183,148 @@ pub fn compose_named(
     compose_impl(&named, policy)
 }
 
+/// [`compose_named`] with an explicit rank [`Placement`]:
+/// [`Placement::Shared`] is the classic same-ranks composition;
+/// [`Placement::Disjoint`] rank-remaps each phase into its own slice of a
+/// `union_p`-rank schedule (the multi-job interference substrate — see the
+/// module docs).
+pub fn compose_placed(
+    parts: &[(&str, &GoalGraph)],
+    policy: &ChainPolicy,
+    placement: &Placement,
+) -> Result<GoalGraph, GoalError> {
+    let named: Vec<(String, &GoalGraph)> =
+        parts.iter().map(|(n, g)| (n.to_string(), *g)).collect();
+    match placement {
+        Placement::Shared => compose_impl(&named, policy),
+        Placement::Disjoint { offsets, union_p } => {
+            compose_disjoint_impl(&named, policy, offsets, *union_p)
+        }
+    }
+}
+
+/// The effective link chaining phase `k` (k ≥ 1) to its predecessors, for
+/// a policy already arity-checked against `n_phases`.
+fn link_for(policy: &ChainPolicy, k: usize) -> LinkKind<'_> {
+    match policy {
+        ChainPolicy::Serial => LinkKind::Serial,
+        ChainPolicy::PerRank => LinkKind::PerRank,
+        ChainPolicy::Ready(triggers) => LinkKind::Ready(&triggers[k - 1]),
+        ChainPolicy::Links(links) => match &links[k - 1] {
+            PhaseLink::Serial => LinkKind::Serial,
+            PhaseLink::PerRank => LinkKind::PerRank,
+            PhaseLink::Ready(t) => LinkKind::Ready(t),
+        },
+        ChainPolicy::Concurrent => LinkKind::None,
+    }
+}
+
+/// Validate one `Ready` trigger for the phase at `phase_idx`: it must name
+/// a strictly earlier phase whose op `t.op` exists on every rank and is a
+/// `Calc`.
+fn validate_trigger(
+    parts: &[(String, &GoalGraph)],
+    phase_idx: usize,
+    t: &ReadyDep,
+) -> Result<(), GoalError> {
+    let bad = |why| GoalError::BadReadyTrigger {
+        phase: phase_idx,
+        trigger_phase: t.phase,
+        op: t.op,
+        why,
+    };
+    if t.phase >= phase_idx {
+        return Err(bad("trigger must name a strictly earlier phase"));
+    }
+    let tg = parts[t.phase].1;
+    for r in 0..tg.p() {
+        match tg.ops(r).get(t.op) {
+            None => return Err(bad("trigger op id out of range on some rank")),
+            Some(OpKind::Calc { .. }) => {}
+            Some(_) => return Err(bad("trigger op must be a Calc")),
+        }
+    }
+    Ok(())
+}
+
+/// Arity check shared by the uniform-`Ready` and `Links` policies, plus
+/// per-trigger validation of every `Ready` link.
+fn validate_policy(
+    parts: &[(String, &GoalGraph)],
+    policy: &ChainPolicy,
+) -> Result<(), GoalError> {
+    let n_phases = parts.len();
+    match policy {
+        ChainPolicy::Ready(triggers) => {
+            if triggers.len() + 1 != n_phases {
+                return Err(GoalError::BadReadyTrigger {
+                    phase: n_phases,
+                    trigger_phase: triggers.len(),
+                    op: 0,
+                    why: "need exactly one trigger per phase after the first",
+                });
+            }
+            for (j, t) in triggers.iter().enumerate() {
+                validate_trigger(parts, j + 1, t)?;
+            }
+        }
+        ChainPolicy::Links(links) => {
+            if links.len() + 1 != n_phases {
+                return Err(GoalError::BadLinkArity {
+                    phases: n_phases,
+                    links: links.len(),
+                });
+            }
+            for (j, l) in links.iter().enumerate() {
+                if let PhaseLink::Ready(t) = l {
+                    validate_trigger(parts, j + 1, t)?;
+                }
+            }
+        }
+        ChainPolicy::Serial | ChainPolicy::PerRank | ChainPolicy::Concurrent => {}
+    }
+    Ok(())
+}
+
+/// True when any boundary of `policy` fans in from the previous phase's
+/// sinks (and the O(phases × ops) dependents scan is therefore needed).
+fn needs_sinks(policy: &ChainPolicy, n_phases: usize) -> bool {
+    (1..n_phases).any(|k| matches!(link_for(policy, k), LinkKind::Serial | LinkKind::PerRank))
+}
+
+/// Flattened phase numbering for the composed table (composition is
+/// closed under itself: inner multi-phase tables contribute their names
+/// prefixed with the outer phase name).  Returns (names, per-part base
+/// index into them).
+fn flatten_phase_names(parts: &[(String, &GoalGraph)]) -> (Vec<String>, Vec<usize>) {
+    let mut names = Vec::new();
+    let mut base = Vec::with_capacity(parts.len());
+    for (name, g) in parts {
+        base.push(names.len());
+        match &g.phases {
+            Some(pt) if pt.len() > 1 => {
+                names.extend(pt.names.iter().map(|inner| format!("{name}:{inner}")));
+            }
+            _ => names.push(name.clone()),
+        }
+    }
+    (names, base)
+}
+
+/// The uniform per-phase tag stride: one more than the largest channel tag
+/// used by any part, so `tag + k × stride` never collides across phases.
+fn tag_stride(parts: &[(String, &GoalGraph)]) -> u64 {
+    let mut max_tag = 0u32;
+    for (_, g) in parts {
+        for kind in &g.kinds {
+            if let OpKind::Send { tag, .. } | OpKind::Recv { tag, .. } = kind {
+                max_tag = max_tag.max(*tag);
+            }
+        }
+    }
+    max_tag as u64 + 1
+}
+
 fn compose_impl(
     parts: &[(String, &GoalGraph)],
     policy: &ChainPolicy,
@@ -129,48 +347,11 @@ fn compose_impl(
             });
         }
     }
-    if let ChainPolicy::Ready(triggers) = policy {
-        if triggers.len() + 1 != n_phases {
-            return Err(GoalError::BadReadyTrigger {
-                phase: n_phases,
-                trigger_phase: triggers.len(),
-                op: 0,
-                why: "need exactly one trigger per phase after the first",
-            });
-        }
-        for (j, t) in triggers.iter().enumerate() {
-            let phase = j + 1;
-            let bad = |why| GoalError::BadReadyTrigger {
-                phase,
-                trigger_phase: t.phase,
-                op: t.op,
-                why,
-            };
-            if t.phase >= phase {
-                return Err(bad("trigger must name a strictly earlier phase"));
-            }
-            let tg = parts[t.phase].1;
-            for r in 0..p {
-                match tg.ops(r).get(t.op) {
-                    None => return Err(bad("trigger op id out of range on some rank")),
-                    Some(OpKind::Calc { .. }) => {}
-                    Some(_) => return Err(bad("trigger op must be a Calc")),
-                }
-            }
-        }
-    }
+    validate_policy(parts, policy)?;
 
     // Tag-space remap: one uniform stride per phase keeps within-phase
     // channel matching intact while making phases channel-disjoint.
-    let mut max_tag = 0u32;
-    for (_, g) in parts {
-        for kind in &g.kinds {
-            if let OpKind::Send { tag, .. } | OpKind::Recv { tag, .. } = kind {
-                max_tag = max_tag.max(*tag);
-            }
-        }
-    }
-    let stride = max_tag as u64 + 1;
+    let stride = tag_stride(parts);
     let remap_tag = |k: usize, tag: u32| -> Result<u32, GoalError> {
         if k == 0 {
             return Ok(tag);
@@ -199,9 +380,9 @@ fn compose_impl(
     };
 
     // Sinks (no dependents) per phase, split by rank — the fan-in targets
-    // of Serial / PerRank chaining.  `Ready` chaining never reads them, so
-    // skip the O(phases × ops) dependents scan on that path.
-    let sinks_by_rank: Vec<Vec<Vec<usize>>> = if matches!(policy, ChainPolicy::Ready(_)) {
+    // of Serial / PerRank chaining.  Skipped when no boundary needs them
+    // (pure Ready / Concurrent policies).
+    let sinks_by_rank: Vec<Vec<Vec<usize>>> = if !needs_sinks(policy, n_phases) {
         Vec::new()
     } else {
         parts
@@ -221,7 +402,7 @@ fn compose_impl(
     // to composed ids, ascending (deterministic emission order).
     let serial_deps: Vec<Vec<usize>> = (0..n_phases)
         .map(|k| {
-            if k == 0 || !matches!(policy, ChainPolicy::Serial) {
+            if k == 0 || !matches!(link_for(policy, k), LinkKind::Serial) {
                 return Vec::new();
             }
             let mut v: Vec<usize> = sinks_by_rank[k - 1]
@@ -234,18 +415,7 @@ fn compose_impl(
         })
         .collect();
 
-    // Flattened phase numbering (composition is closed under itself).
-    let mut names = Vec::new();
-    let mut phase_name_base = Vec::with_capacity(n_phases);
-    for (name, g) in parts {
-        phase_name_base.push(names.len());
-        match &g.phases {
-            Some(pt) if pt.len() > 1 => {
-                names.extend(pt.names.iter().map(|inner| format!("{name}:{inner}")));
-            }
-            _ => names.push(name.clone()),
-        }
-    }
+    let (names, phase_name_base) = flatten_phase_names(parts);
 
     let mut kinds = Vec::with_capacity(total);
     let mut dep_off = Vec::with_capacity(total + 1);
@@ -274,17 +444,17 @@ fn compose_impl(
                 let deps = g.deps(old_g);
                 if deps.is_empty() && k > 0 {
                     // A root of phase k: inject the chaining edges.
-                    match policy {
-                        ChainPolicy::Serial => {
+                    match link_for(policy, k) {
+                        LinkKind::None => {}
+                        LinkKind::Serial => {
                             dep_targets.extend(serial_deps[k].iter().map(|&s| s as u32));
                         }
-                        ChainPolicy::PerRank => {
+                        LinkKind::PerRank => {
                             dep_targets.extend(
                                 sinks_by_rank[k - 1][r].iter().map(|&s| map(k - 1, s) as u32),
                             );
                         }
-                        ChainPolicy::Ready(triggers) => {
-                            let t = &triggers[k - 1];
+                        LinkKind::Ready(t) => {
                             let tg = parts[t.phase].1;
                             dep_targets.push(map(t.phase, tg.gid(r, t.op)) as u32);
                         }
@@ -303,6 +473,170 @@ fn compose_impl(
                     depth: t.depth,
                 });
             }
+        }
+        tag_off.push(tags.len());
+    }
+
+    ArenaParts {
+        count: parts.iter().map(|(_, g)| g.count).max().unwrap_or(0),
+        elem_bytes,
+        tmp_count: parts.iter().map(|(_, g)| g.tmp_count).max().unwrap_or(0),
+        kinds,
+        rank_base: new_base,
+        dep_off,
+        dep_targets,
+        tags,
+        tag_off,
+        phases: Some(Arc::new(PhaseTable { names, phase_of })),
+    }
+    .seal(true)
+}
+
+/// Rank-remap composition ([`Placement::Disjoint`]): each part's ranks are
+/// shifted into its own slice of a `union_p`-rank schedule, peers shift
+/// with them, tag spaces stay phase-disjoint, and union ranks owned by no
+/// part get empty programs.
+fn compose_disjoint_impl(
+    parts: &[(String, &GoalGraph)],
+    policy: &ChainPolicy,
+    offsets: &[usize],
+    union_p: usize,
+) -> Result<GoalGraph, GoalError> {
+    let n_phases = parts.len();
+    if n_phases == 0 {
+        return Err(GoalError::ComposeEmpty);
+    }
+    if offsets.len() != n_phases {
+        return Err(GoalError::DisjointArity { parts: n_phases, offsets: offsets.len() });
+    }
+    match policy {
+        ChainPolicy::Serial | ChainPolicy::Concurrent => {}
+        other => return Err(GoalError::DisjointBadChain { policy: other.label() }),
+    }
+    let elem_bytes = parts[0].1.elem_bytes;
+    for (k, (_, g)) in parts.iter().enumerate() {
+        if g.elem_bytes != elem_bytes {
+            return Err(GoalError::ComposeElemBytesMismatch {
+                phase: k,
+                elem_bytes: g.elem_bytes,
+                expected: elem_bytes,
+            });
+        }
+        let end = offsets[k].checked_add(g.p());
+        if end.map_or(true, |e| e > union_p) {
+            return Err(GoalError::DisjointOutOfRange {
+                phase: k,
+                offset: offsets[k],
+                p: g.p(),
+                union_p,
+            });
+        }
+    }
+    // Pairwise-disjoint rank slices: sort by offset, then each slice must
+    // end before the next begins.
+    let mut order: Vec<usize> = (0..n_phases).collect();
+    order.sort_unstable_by_key(|&k| offsets[k]);
+    for w in order.windows(2) {
+        let (a, b) = (w[0], w[1]);
+        if offsets[a] + parts[a].1.p() > offsets[b] {
+            return Err(GoalError::DisjointRankOverlap { phase: a, other: b });
+        }
+    }
+
+    // owner[u] = which phase occupies union rank u (if any).
+    let mut owner: Vec<Option<usize>> = vec![None; union_p];
+    for (k, (_, g)) in parts.iter().enumerate() {
+        for r in 0..g.p() {
+            owner[offsets[k] + r] = Some(k);
+        }
+    }
+
+    let stride = tag_stride(parts);
+    let remap_tag = |k: usize, tag: u32| -> Result<u32, GoalError> {
+        if k == 0 {
+            return Ok(tag);
+        }
+        u32::try_from(k as u64 * stride + tag as u64)
+            .map_err(|_| GoalError::TagRemapOverflow { phase: k, tag })
+    };
+
+    // Layout: union-rank-major; each union rank holds exactly one phase's
+    // program (or none), so rank-local op ids carry over unchanged.
+    let mut new_base = vec![0usize; union_p + 1];
+    for u in 0..union_p {
+        let ops = match owner[u] {
+            Some(k) => parts[k].1.ops(u - offsets[k]).len(),
+            None => 0,
+        };
+        new_base[u + 1] = new_base[u] + ops;
+    }
+    let total = new_base[union_p];
+    let map = |k: usize, old_g: usize| -> usize {
+        let g = parts[k].1;
+        let rr = g.rank_of(old_g);
+        new_base[offsets[k] + rr] + (old_g - g.gid(rr, 0))
+    };
+
+    // Sinks per phase (Serial chaining of whole jobs only).
+    let serial_deps: Vec<Vec<usize>> = (0..n_phases)
+        .map(|k| {
+            if k == 0 || !matches!(policy, ChainPolicy::Serial) {
+                return Vec::new();
+            }
+            let g = parts[k - 1].1;
+            let mut v: Vec<usize> = (0..g.total_ops())
+                .filter(|&x| g.dependents(x).is_empty())
+                .map(|x| map(k - 1, x))
+                .collect();
+            v.sort_unstable();
+            v
+        })
+        .collect();
+
+    let (names, phase_name_base) = flatten_phase_names(parts);
+
+    let mut kinds = Vec::with_capacity(total);
+    let mut dep_off = Vec::with_capacity(total + 1);
+    dep_off.push(0usize);
+    let mut dep_targets: Vec<u32> = Vec::new();
+    let mut tags: Vec<TagSpan> = Vec::new();
+    let mut tag_off = Vec::with_capacity(union_p + 1);
+    tag_off.push(0usize);
+    let mut phase_of: Vec<u32> = Vec::with_capacity(total);
+
+    for u in 0..union_p {
+        if let Some(k) = owner[u] {
+            let g = parts[k].1;
+            let r = u - offsets[k];
+            let base_old = g.gid(r, 0);
+            for i in 0..g.ops(r).len() {
+                let old_g = base_old + i;
+                let kind = match g.kinds[old_g] {
+                    OpKind::Send { peer, seg, tag } => OpKind::Send {
+                        peer: peer + offsets[k],
+                        seg,
+                        tag: remap_tag(k, tag)?,
+                    },
+                    OpKind::Recv { peer, seg, tag } => OpKind::Recv {
+                        peer: peer + offsets[k],
+                        seg,
+                        tag: remap_tag(k, tag)?,
+                    },
+                    other => other,
+                };
+                kinds.push(kind);
+                let deps = g.deps(old_g);
+                if deps.is_empty() && k > 0 && matches!(policy, ChainPolicy::Serial) {
+                    dep_targets.extend(serial_deps[k].iter().map(|&s| s as u32));
+                } else {
+                    dep_targets.extend(deps.iter().map(|&d| map(k, d as usize) as u32));
+                }
+                dep_off.push(dep_targets.len());
+                phase_of.push((phase_name_base[k] + g.phase_of(old_g)) as u32);
+            }
+            // tag spans carry over verbatim: rank-local op ids are
+            // unchanged under disjoint placement
+            tags.extend(g.rank_tags(r).iter().cloned());
         }
         tag_off.push(tags.len());
     }
@@ -477,5 +811,143 @@ mod tests {
         let pt = outer.phases.as_ref().unwrap();
         assert_eq!(pt.names, vec!["x:a", "x:b", "y"]);
         assert_eq!(outer.validate(), Ok(()));
+    }
+
+    #[test]
+    fn links_policy_mixes_boundaries() {
+        // router Calc -> Ready-gated collective -> PerRank-chained Calc
+        let p = 4;
+        let mut b = GoalBuilder::new(p, 0, 4);
+        for r in 0..p {
+            b.calc(r, 1e-3);
+        }
+        let calc = b.finish().unwrap();
+        let coll = ring(p, 16);
+        let c = compose_named(
+            &[("router", &calc), ("dispatch", &coll), ("experts", &calc)],
+            &ChainPolicy::Links(vec![
+                PhaseLink::Ready(ReadyDep { phase: 0, op: 0 }),
+                PhaseLink::PerRank,
+            ]),
+        )
+        .unwrap();
+        assert_eq!(c.validate(), Ok(()));
+        assert_eq!(c.phase_count(), 3);
+        let pt = c.phases.as_ref().unwrap();
+        for g_id in 0..c.total_ops() {
+            match pt.phase_of[g_id] {
+                1 => {
+                    // dispatch roots gate on their own rank's router Calc
+                    for &d in c.deps(g_id) {
+                        if pt.phase_of[d as usize] == 0 {
+                            assert_eq!(c.rank_of(d as usize), c.rank_of(g_id));
+                            assert!(matches!(c.kinds[d as usize], OpKind::Calc { .. }));
+                        }
+                    }
+                }
+                2 => {
+                    // experts chain rank-locally on dispatch sinks
+                    for &d in c.deps(g_id) {
+                        assert_eq!(c.rank_of(d as usize), c.rank_of(g_id));
+                    }
+                }
+                _ => {}
+            }
+        }
+        // wrong arity is typed
+        assert!(matches!(
+            compose_named(&[("a", &calc), ("b", &coll)], &ChainPolicy::Links(vec![])),
+            Err(GoalError::BadLinkArity { phases: 2, links: 0 })
+        ));
+    }
+
+    #[test]
+    fn disjoint_placement_remaps_ranks_and_peers() {
+        let a = ring(2, 8);
+        let b = ring(3, 9);
+        let c = compose_placed(
+            &[("jobA", &a), ("jobB", &b)],
+            &ChainPolicy::Concurrent,
+            &Placement::Disjoint { offsets: vec![0, 2], union_p: 6 },
+        )
+        .unwrap();
+        assert_eq!(c.p(), 6);
+        assert_eq!(c.validate(), Ok(()));
+        assert_eq!(c.total_ops(), a.total_ops() + b.total_ops());
+        // union rank 5 is idle
+        assert!(c.ops(5).is_empty());
+        // jobB's peers land in [2, 5)
+        let pt = c.phases.as_ref().unwrap();
+        for g_id in 0..c.total_ops() {
+            if let OpKind::Send { peer, .. } | OpKind::Recv { peer, .. } = c.kinds[g_id] {
+                if pt.phase_of[g_id] == 1 {
+                    assert!((2..5).contains(&peer), "jobB peer {peer} outside its slice");
+                } else {
+                    assert!(peer < 2, "jobA peer {peer} outside its slice");
+                }
+            }
+            // Concurrent: no cross-phase deps at all
+            for &d in c.deps(g_id) {
+                assert_eq!(pt.phase_of[d as usize], pt.phase_of[g_id]);
+            }
+        }
+        // wire volume is conserved per job
+        assert_eq!(c.total_wire_bytes(), a.total_wire_bytes() + b.total_wire_bytes());
+    }
+
+    #[test]
+    fn disjoint_overlap_and_range_are_typed_errors() {
+        let a = ring(4, 16);
+        let b = ring(4, 16);
+        let go = |offsets: Vec<usize>, union_p| {
+            compose_placed(
+                &[("a", &a), ("b", &b)],
+                &ChainPolicy::Concurrent,
+                &Placement::Disjoint { offsets, union_p },
+            )
+        };
+        assert!(matches!(
+            go(vec![0, 2], 8),
+            Err(GoalError::DisjointRankOverlap { phase: 0, other: 1 })
+        ));
+        assert!(matches!(
+            go(vec![0, 6], 8),
+            Err(GoalError::DisjointOutOfRange { phase: 1, offset: 6, p: 4, union_p: 8 })
+        ));
+        assert!(matches!(go(vec![0], 8), Err(GoalError::DisjointArity { parts: 2, offsets: 1 })));
+        // rank-local chaining is meaningless across disjoint subsets
+        assert!(matches!(
+            compose_placed(
+                &[("a", &a), ("b", &b)],
+                &ChainPolicy::PerRank,
+                &Placement::Disjoint { offsets: vec![0, 4], union_p: 8 },
+            ),
+            Err(GoalError::DisjointBadChain { policy: "per_rank" })
+        ));
+    }
+
+    #[test]
+    fn disjoint_serial_chains_jobs_back_to_back() {
+        let a = ring(2, 8);
+        let c = compose_placed(
+            &[("first", &a), ("second", &a)],
+            &ChainPolicy::Serial,
+            &Placement::Disjoint { offsets: vec![0, 2], union_p: 4 },
+        )
+        .unwrap();
+        assert_eq!(c.validate(), Ok(()));
+        let pt = c.phases.as_ref().unwrap();
+        // every phase-1 root gained cross-job barrier deps into phase 0
+        let mut saw_chain = false;
+        for g_id in 0..c.total_ops() {
+            if pt.phase_of[g_id] == 1 {
+                for &d in c.deps(g_id) {
+                    if pt.phase_of[d as usize] == 0 {
+                        saw_chain = true;
+                    }
+                }
+            }
+        }
+        assert!(saw_chain, "Serial disjoint composition must chain the jobs");
     }
 }

@@ -48,10 +48,10 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use crate::analysis::{self, OverlapMetrics, RatioCell};
+use crate::analysis::{self, JobSpan, OverlapMetrics, RatioCell};
 use crate::backends::LibPico;
 use crate::collectives::{Coll, GenParams};
-use crate::compose::{compose_named, ChainPolicy};
+use crate::compose::{compose_placed, ChainPolicy, Placement as PhasePlacement};
 use crate::config::{EnvSpec, TestSpec};
 use crate::goal::Goal;
 use crate::goal_text;
@@ -67,7 +67,7 @@ use crate::topology::{Allocation, Placement};
 use crate::tracer::{self, TraceReport};
 use crate::tuning::{self, Profile};
 use crate::util::{fmt_size, fmt_time, parse_size};
-use crate::workload::{ChainKind, WorkloadSpec};
+use crate::workload::{ChainKind, Lowered, WorkloadSpec};
 
 // ---------------------------------------------------------------------------
 // Engine configuration + the facade itself
@@ -382,105 +382,149 @@ impl Engine {
         let placement = Placement::new(&profile, &alloc, spec.ppn, self.env.rank_order);
         let p = placement.n_ranks();
 
-        // lower the source into named phase graphs + a chain policy
-        let (name, collective_label, algo, bytes, parts, policy, baseline) = match &spec.source {
-            OverlapSource::Workload(w) => {
-                let chain = spec.chain.unwrap_or_else(|| w.default_chain());
-                let (parts, policy) = w.lower_parts(p, &self.cache, chain)?;
-                let baseline = Some(w.lower_baseline_parts(p, &self.cache)?);
-                let (label, algo, bytes) = match &w.kind {
-                    crate::workload::WorkloadKind::DnnStep(s) => {
-                        ("dnn_step".to_string(), s.algo.clone(), s.grad_bytes)
+        // lower the source into named phase graphs + a composition recipe
+        // (chain policy and rank placement)
+        let (name, chain_label, collective_label, algo, bytes, lowered, baseline, compute_s) =
+            match &spec.source {
+                OverlapSource::Workload(w) => {
+                    let chain = spec.chain.unwrap_or_else(|| w.default_chain());
+                    let lowered = w.lower(p, &self.cache, chain).map_err(String::from)?;
+                    let baseline =
+                        Some(w.lower_baseline(p, &self.cache).map_err(String::from)?);
+                    (
+                        w.name.clone(),
+                        chain.label(),
+                        w.scenario_label().to_string(),
+                        w.algo_label(),
+                        w.total_bytes(),
+                        lowered,
+                        baseline,
+                        w.compute_seconds(),
+                    )
+                }
+                OverlapSource::Repeat { coll, algo, bytes, phases } => {
+                    let chain = spec.chain.unwrap_or(ChainKind::Serial);
+                    if chain == ChainKind::Ready {
+                        return Err(
+                            "overlap: ready chaining needs a workload (it defines the triggers); \
+                             use --chain serial or per_rank with --repeat"
+                                .into(),
+                        );
                     }
-                };
-                (w.name.clone(), label, algo, bytes, parts, policy, baseline)
-            }
-            OverlapSource::Repeat { coll, algo, bytes, phases } => {
-                let chain = spec.chain.unwrap_or(ChainKind::Serial);
-                if chain == ChainKind::Ready {
-                    return Err(
-                        "overlap: ready chaining needs a workload (it defines the triggers); \
-                         use --chain serial or per_rank with --repeat"
-                            .into(),
-                    );
+                    if *phases == 0 {
+                        return Err("overlap: --repeat must be >= 1".into());
+                    }
+                    let count = effective_count(*coll, *bytes, p);
+                    let g =
+                        self.cache.schedule(&LibPico, *coll, algo, &GenParams::new(p, count))?;
+                    let parts: Vec<(String, Arc<Goal>)> =
+                        (0..*phases).map(|i| (format!("phase{i}"), g.clone())).collect();
+                    let policy = match chain {
+                        ChainKind::Serial => ChainPolicy::Serial,
+                        ChainKind::PerRank => ChainPolicy::PerRank,
+                        ChainKind::Ready => unreachable!("rejected above"),
+                    };
+                    let name = format!("overlap-{}-{}", coll.label(), algo);
+                    let lowered = Lowered {
+                        parts,
+                        policy,
+                        placement: PhasePlacement::Shared,
+                        jobs: Vec::new(),
+                    };
+                    let label = lowered.policy.label();
+                    let coll_label = coll.label().to_string();
+                    (name, label, coll_label, algo.clone(), *bytes, lowered, None, 0.0)
                 }
-                if *phases == 0 {
-                    return Err("overlap: --repeat must be >= 1".into());
-                }
-                let count = effective_count(*coll, *bytes, p);
-                let g =
-                    self.cache.schedule(&LibPico, *coll, algo, &GenParams::new(p, count))?;
-                let parts: Vec<(String, Arc<Goal>)> =
-                    (0..*phases).map(|i| (format!("phase{i}"), g.clone())).collect();
-                let policy = match chain {
-                    ChainKind::Serial => ChainPolicy::Serial,
-                    ChainKind::PerRank => ChainPolicy::PerRank,
-                    ChainKind::Ready => unreachable!("rejected above"),
-                };
-                let name = format!("overlap-{}-{}", coll.label(), algo);
-                (name, coll.label().to_string(), algo.clone(), *bytes, parts, policy, None)
-            }
-        };
+            };
 
-        let refs: Vec<(&str, &Goal)> = parts.iter().map(|(n, g)| (n.as_str(), &**g)).collect();
-        let schedule = Arc::new(compose_named(&refs, &policy).map_err(String::from)?);
+        let refs: Vec<(&str, &Goal)> =
+            lowered.parts.iter().map(|(n, g)| (n.as_str(), &**g)).collect();
+        let schedule = Arc::new(
+            compose_placed(&refs, &lowered.policy, &lowered.placement).map_err(String::from)?,
+        );
         let ctx = SimContext::new(&profile, &placement);
         let sim = simulate(&schedule, &ctx);
+        let shared = matches!(lowered.placement, PhasePlacement::Shared);
 
         // Σ standalone per-phase makespans: the serial-replay number for
         // the --repeat route and the conservation reference under Serial
         // chaining.  Computed once (repeat phases share one Arc, so each
-        // distinct graph is simulated a single time).
-        let standalone_sum: Option<f64> =
-            if baseline.is_none() || matches!(policy, ChainPolicy::Serial) {
-                let mut sum = 0.0f64;
-                let mut memo: Vec<(*const Goal, f64)> = Vec::new();
-                for (_, g) in &parts {
-                    let key = Arc::as_ptr(g);
-                    let t = match memo.iter().find(|(k, _)| *k == key) {
-                        Some((_, t)) => *t,
-                        None => {
-                            let t = simulate(g, &ctx).total_time;
-                            memo.push((key, t));
-                            t
-                        }
-                    };
-                    sum += t;
-                }
-                Some(sum)
-            } else {
-                None
-            };
+        // distinct graph is simulated a single time).  Only defined under
+        // shared placement — disjoint parts have fewer ranks than the
+        // placement and cannot be simulated standalone on it.
+        let standalone_sum: Option<f64> = if shared
+            && (baseline.is_none() || matches!(lowered.policy, ChainPolicy::Serial))
+        {
+            let mut sum = 0.0f64;
+            let mut memo: Vec<(*const Goal, f64)> = Vec::new();
+            for (_, g) in &lowered.parts {
+                let key = Arc::as_ptr(g);
+                let t = match memo.iter().find(|(k, _)| *k == key) {
+                    Some((_, t)) => *t,
+                    None => {
+                        let t = simulate(g, &ctx).total_time;
+                        memo.push((key, t));
+                        t
+                    }
+                };
+                sum += t;
+            }
+            Some(sum)
+        } else {
+            None
+        };
 
-        // serial-replay baseline: for workloads, the same compute plus one
-        // monolithic collective, Serial-chained; for --repeat, the sum of
-        // standalone phase makespans (the literal one-at-a-time replay).
+        // serial-replay baseline: for workloads, the scenario's own
+        // serial shape (monolithic collective, one-microbatch-at-a-time
+        // pipeline, Serial-chained phases, jobs back-to-back); for
+        // --repeat, the sum of standalone phase makespans (the literal
+        // one-at-a-time replay).
         let serial_s = match &baseline {
-            Some((bparts, bpolicy)) => {
+            Some(b) => {
                 let brefs: Vec<(&str, &Goal)> =
-                    bparts.iter().map(|(n, g)| (n.as_str(), &**g)).collect();
-                let bgraph = compose_named(&brefs, bpolicy).map_err(String::from)?;
+                    b.parts.iter().map(|(n, g)| (n.as_str(), &**g)).collect();
+                let bgraph =
+                    compose_placed(&brefs, &b.policy, &b.placement).map_err(String::from)?;
                 simulate(&bgraph, &ctx).total_time
             }
             None => standalone_sum.expect("computed for the baseline-free route"),
         };
 
-        // compute timeline length = the "compute" phase's span (workloads);
-        // pure-collective compositions have no compute to hide behind
-        let compute_s = sim
-            .phase_spans
-            .iter()
-            .find(|s| s.name == "compute")
-            .map(|s| s.makespan())
-            .unwrap_or(0.0);
-
         // Serial chaining must conserve: composed makespan = Σ standalone
         // per-phase makespans (up to f64 rounding — the barrier deps shift
         // every phase rigidly, they change no duration)
-        let conservation = if matches!(policy, ChainPolicy::Serial) {
+        let conservation = if shared && matches!(lowered.policy, ChainPolicy::Serial) {
             let sum = standalone_sum.expect("computed for Serial chaining");
             let ok = (sim.total_time - sum).abs() <= 1e-9 * sum.max(1e-30);
             Some((sum, ok))
+        } else {
+            None
+        };
+
+        // Per-job attribution (interference): replay each job alone in
+        // the same union rank space — identical placement, nodes and
+        // resource pools, just without the neighbours' traffic — and
+        // compare against its span in the union timeline.
+        let jobs: Vec<JobSpan> = if lowered.jobs.is_empty() {
+            Vec::new()
+        } else {
+            let mut iso: Vec<(String, f64)> = Vec::with_capacity(lowered.jobs.len());
+            for (slot, (pname, g)) in lowered.jobs.iter().zip(&lowered.parts) {
+                let padded = compose_placed(
+                    &[(pname.as_str(), &**g)],
+                    &ChainPolicy::Concurrent,
+                    &PhasePlacement::Disjoint { offsets: vec![slot.offset], union_p: p },
+                )
+                .map_err(String::from)?;
+                iso.push((slot.name.clone(), simulate(&padded, &ctx).total_time));
+            }
+            analysis::job_attribution(&sim.phase_spans, &iso)
+        };
+
+        // Pipeline-parallel runs additionally report the bubble fraction
+        // (share of the makespan each stage spends idle or communicating).
+        let bubble = if collective_label == "pipeline_step" {
+            Some(analysis::pipeline_bubble(compute_s, sim.total_time))
         } else {
             None
         };
@@ -492,18 +536,20 @@ impl Engine {
             p,
             nodes: spec.nodes,
             ppn: spec.ppn,
-            chain: policy.label(),
+            chain: chain_label,
             collective_label,
             algo,
             bytes,
             sim,
             metrics,
             baseline_note: if baseline.is_some() {
-                "compute + monolithic collective, Serial-chained"
+                "the scenario's serial replay"
             } else {
                 "sum of standalone per-phase makespans"
             },
             conservation,
+            bubble,
+            jobs,
             schedule,
             cache: self.cache_stats(),
             run_root: None,
@@ -946,7 +992,8 @@ impl TryFrom<&Json> for ImportRunSpec {
 /// of one collective (the minimal conservation-check shape).
 #[derive(Debug, Clone)]
 pub enum OverlapSource {
-    /// A [`WorkloadSpec`] scenario (e.g. `dnn_step`).
+    /// A [`WorkloadSpec`] scenario (`dnn_step`, `pipeline_step`,
+    /// `moe_step`, `interference`).
     Workload(WorkloadSpec),
     /// `phases` copies of one (collective, algorithm, bytes) schedule.
     Repeat { coll: Coll, algo: String, bytes: usize, phases: usize },
@@ -966,6 +1013,8 @@ pub struct OverlapSpec {
 }
 
 impl OverlapSpec {
+    /// An overlap run over a declarative [`WorkloadSpec`] scenario
+    /// (defaults: 8 nodes, ppn 1, the scenario's default chain).
     pub fn workload(w: WorkloadSpec) -> Self {
         Self { source: OverlapSource::Workload(w), nodes: 8, ppn: 1, seed: 11, chain: None, out: None }
     }
@@ -987,6 +1036,8 @@ impl OverlapSpec {
         }
     }
 
+    /// Message size for the `repeat` route (no-op on workload sources —
+    /// the scenario's own size fields rule there).
     pub fn with_bytes(mut self, bytes: usize) -> Self {
         if let OverlapSource::Repeat { bytes: b, .. } = &mut self.source {
             *b = bytes;
@@ -994,6 +1045,7 @@ impl OverlapSpec {
         self
     }
 
+    /// Phase count for the `repeat` route (no-op on workload sources).
     pub fn with_phases(mut self, phases: usize) -> Self {
         if let OverlapSource::Repeat { phases: n, .. } = &mut self.source {
             *n = phases;
@@ -1001,21 +1053,26 @@ impl OverlapSpec {
         self
     }
 
+    /// Node count of the allocation the composition runs on.
     pub fn with_nodes(mut self, nodes: usize) -> Self {
         self.nodes = nodes;
         self
     }
 
+    /// Ranks per node (p = nodes × ppn).
     pub fn with_ppn(mut self, ppn: usize) -> Self {
         self.ppn = ppn;
         self
     }
 
+    /// Allocation seed (which nodes of the machine the job gets).
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 
+    /// Override the chain selector (`None` = the source's default:
+    /// `Ready` for workloads, `Serial` for repeats).
     pub fn with_chain(mut self, chain: ChainKind) -> Self {
         self.chain = Some(chain);
         self
@@ -1032,10 +1089,9 @@ impl OverlapSpec {
 impl TryFrom<&Json> for OverlapSpec {
     type Error = String;
 
-    /// Build from a workload descriptor document
-    /// (`examples/dnn_step.json`): the scenario fields are parsed by
-    /// [`WorkloadSpec`]; `nodes` / `ppn` / `chain` / `seed` ride in the
-    /// same document.
+    /// Build from a workload descriptor document (`examples/*.json`):
+    /// the scenario fields are parsed by [`WorkloadSpec`]; `nodes` /
+    /// `ppn` / `chain` / `seed` ride in the same document.
     fn try_from(j: &Json) -> Result<Self, String> {
         let mut s = OverlapSpec::workload(WorkloadSpec::try_from(j)?);
         if let Some(n) = j.get("nodes").and_then(Json::as_usize) {
@@ -1281,6 +1337,13 @@ pub struct OverlapReport {
     /// `Serial` chaining only: (Σ standalone per-phase makespans, whether
     /// the composed makespan matches it within 1e-9 relative).
     pub conservation: Option<(f64, bool)>,
+    /// `pipeline_step` only: the bubble fraction — the share of the
+    /// makespan each stage spends idle or communicating, in (0, 1) for
+    /// any real pipeline.
+    pub bubble: Option<f64>,
+    /// Interference only: per-job spans and slowdowns vs each job's
+    /// isolated replay on the same placement slice.
+    pub jobs: Vec<JobSpan>,
     /// The composed multi-phase schedule (GOAL-text exportable).
     pub schedule: Arc<Goal>,
     /// Engine cache counters after the run (bucket-skeleton reuse proof).
@@ -1334,8 +1397,14 @@ impl OverlapReport {
             self.chain
         );
         out.push_str(&analysis::render_overlap(&self.metrics, self.baseline_note));
+        if let Some(bubble) = self.bubble {
+            out.push_str(&format!("  pipeline bubble:    {:.1}%\n", 100.0 * bubble));
+        }
         if !self.sim.phase_spans.is_empty() {
             out.push_str(&analysis::render_phase_spans(&self.sim.phase_spans));
+        }
+        if !self.jobs.is_empty() {
+            out.push_str(&analysis::render_jobs(&self.jobs));
         }
         if let Some((sum, ok)) = self.conservation {
             if ok {

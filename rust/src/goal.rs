@@ -238,6 +238,20 @@ pub enum GoalError {
     /// A `Ready` chain trigger is unusable: wrong arity, not an earlier
     /// phase, op id out of range on some rank, or not a `Calc` op.
     BadReadyTrigger { phase: usize, trigger_phase: usize, op: usize, why: &'static str },
+    /// A `Links` chain policy has the wrong arity (need exactly one link
+    /// per phase after the first).
+    BadLinkArity { phases: usize, links: usize },
+    /// Disjoint placement has a different number of offsets than graphs.
+    DisjointArity { parts: usize, offsets: usize },
+    /// A disjoint-placed phase's rank slice does not fit in the union
+    /// rank space.
+    DisjointOutOfRange { phase: usize, offset: usize, p: usize, union_p: usize },
+    /// Two disjoint-placed phases claim overlapping rank slices.
+    DisjointRankOverlap { phase: usize, other: usize },
+    /// The chain policy is meaningless under disjoint placement (only
+    /// `Serial` and `Concurrent` chaining are defined across disjoint
+    /// rank subsets).
+    DisjointBadChain { policy: &'static str },
     /// A dep points into a **later** phase (any direction).  Cross-phase
     /// deps must always target a strictly earlier phase; without this
     /// check a crafted wire form (non-monotonic `@phase` markers plus
@@ -298,6 +312,33 @@ impl std::fmt::Display for GoalError {
             }
             GoalError::BadReadyTrigger { phase, trigger_phase, op, why } => {
                 write!(f, "compose: phase {phase} ready trigger (phase {trigger_phase}, op {op}): {why}")
+            }
+            GoalError::BadLinkArity { phases, links } => {
+                write!(
+                    f,
+                    "compose: {phases} phases need {} links, got {links}",
+                    phases.saturating_sub(1)
+                )
+            }
+            GoalError::DisjointArity { parts, offsets } => {
+                write!(f, "compose: {parts} graphs but {offsets} disjoint offsets")
+            }
+            GoalError::DisjointOutOfRange { phase, offset, p, union_p } => {
+                write!(
+                    f,
+                    "compose: phase {phase} ranks [{offset}, {}) exceed union rank space {union_p}",
+                    offset + p
+                )
+            }
+            GoalError::DisjointRankOverlap { phase, other } => {
+                write!(f, "compose: phases {phase} and {other} claim overlapping rank subsets")
+            }
+            GoalError::DisjointBadChain { policy } => {
+                write!(
+                    f,
+                    "compose: chain policy {policy:?} is undefined across disjoint rank subsets \
+                     (use serial or concurrent)"
+                )
             }
             GoalError::TagRemapOverflow { phase, tag } => {
                 write!(f, "compose: phase {phase} tag {tag} overflows the remapped tag space")

@@ -26,8 +26,10 @@
 //! `main` is argv→spec translation plus `Engine` calls.  The [`compose`]
 //! and [`workload`] layers turn per-invocation schedules into
 //! workload-level benchmarks: N sealed graphs concatenate into one
-//! multi-phase schedule (bucketed all-reduce streams overlapping a
-//! backprop timeline), simulated and attributed per phase.
+//! multi-phase schedule — on shared ranks (bucketed all-reduce streams
+//! overlapping a backprop timeline, 1F1B pipeline stages, MoE
+//! dispatch/combine) or rank-remapped onto disjoint subsets (multi-job
+//! interference) — simulated and attributed per phase and per job.
 //!
 //! # Example
 //!
@@ -85,7 +87,7 @@ pub mod tuning;
 pub mod util;
 pub mod workload;
 
-pub use compose::{compose, compose_named, ChainPolicy, ReadyDep};
+pub use compose::{compose, compose_named, compose_placed, ChainPolicy, PhaseLink, ReadyDep};
 pub use engine::{Engine, EngineConfig};
 pub use goal::{Goal, GoalError, GoalGraph, OpKind, PhaseTable, Seg};
 pub use topology::{Allocation, Placement, SystemProfile, Tier};

@@ -202,10 +202,14 @@ usage: pico <command> [--key value ...]
   overlap --spec workload.json [--system leonardo] [--nodes N] [--ppn 1]
          [--chain ready|per_rank|serial] [--out DIR] [--emit-goal OUT]
          [--cache-stats]
-         compose + simulate a multi-collective workload (e.g. dnn_step:
-         bucketed gradient all-reduce overlapping a backprop timeline);
-         alternative source: --coll allreduce --algo ring --bytes 1MiB
-         --repeat 2 composes N copies of one collective (serial/per_rank)";
+         compose + simulate a multi-collective workload; scenarios:
+         dnn_step (bucketed gradient all-reduce over a backprop timeline),
+         pipeline_step (1F1B pipeline parallelism; reports the bubble
+         fraction), moe_step (alltoall dispatch -> experts -> alltoall
+         combine), interference (jobs on disjoint rank subsets; reports
+         per-job slowdown) — see examples/*.json; alternative source:
+         --coll allreduce --algo ring --bytes 1MiB --repeat 2 composes N
+         copies of one collective (serial/per_rank)";
 
 /// Build the process's one [`Engine`] from the shared `--system` flag.
 fn engine_for(args: &Args) -> Engine {

@@ -87,6 +87,11 @@ pub struct PhaseSpan {
     pub start: f64,
     /// Latest op finish in the phase.
     pub finish: f64,
+    /// Mean busy time inside the phase over the ranks that participate in
+    /// it: per-rank union of the phase's op intervals, averaged.  The gap
+    /// `makespan() - busy` is the phase's internal idle time — what the
+    /// pipeline-bubble and per-job interference attribution read.
+    pub busy: f64,
 }
 
 impl PhaseSpan {
@@ -400,23 +405,39 @@ pub fn simulate(goal: &Goal, ctx: &SimContext) -> SimReport {
         tag_sums.into_iter().map(|(k, (sum, n))| (k, sum / n as f64)).collect();
 
     // Phase attribution (composed schedules): earliest start / latest
-    // finish per phase over the whole arena.
+    // finish per phase over the whole arena, plus per-phase busy time
+    // (mean over participating ranks of the union of op intervals — the
+    // makespan/busy gap is the phase's internal idle time).
     let phase_spans = match &goal.phases {
         None => Vec::new(),
         Some(pt) => {
             let mut spans: Vec<(f64, f64)> = vec![(f64::INFINITY, f64::NEG_INFINITY); pt.len()];
+            let mut ivs: Vec<Vec<Vec<(f64, f64)>>> = vec![vec![Vec::new(); p]; pt.len()];
             for g in 0..total_ops {
                 let k = pt.phase_of[g] as usize;
                 spans[k].0 = spans[k].0.min(start[g]);
                 spans[k].1 = spans[k].1.max(finish[g]);
+                ivs[k][goal.rank_of(g)].push((start[g], finish[g]));
             }
             pt.names
                 .iter()
                 .zip(spans)
-                .map(|(name, (s, f))| PhaseSpan {
-                    name: name.clone(),
-                    start: if s.is_finite() { s } else { 0.0 },
-                    finish: if f.is_finite() { f } else { 0.0 },
+                .zip(ivs.iter_mut())
+                .map(|((name, (s, f)), rank_ivs)| {
+                    let mut busy_sum = 0.0f64;
+                    let mut active = 0usize;
+                    for riv in rank_ivs.iter_mut() {
+                        if !riv.is_empty() {
+                            busy_sum += interval_union(riv);
+                            active += 1;
+                        }
+                    }
+                    PhaseSpan {
+                        name: name.clone(),
+                        start: if s.is_finite() { s } else { 0.0 },
+                        finish: if f.is_finite() { f } else { 0.0 },
+                        busy: if active > 0 { busy_sum / active as f64 } else { 0.0 },
+                    }
                 })
                 .collect()
         }

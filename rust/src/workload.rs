@@ -1,24 +1,46 @@
 //! Workload layer: declarative multi-collective scenarios lowered onto the
 //! overlap composer ([`crate::compose`]).
 //!
-//! A [`WorkloadSpec`] describes *traffic shape*, not schedules: the first
-//! scenario, [`dnn_step`](WorkloadKind::DnnStep), is one data-parallel
-//! training step — a backprop `Calc` timeline plus a large gradient
-//! all-reduce split into `buckets` sub-collectives, each bucket's sends
-//! gated on the backprop step that produces its gradients (the
-//! bucketed-overlap pattern every DDP stack implements).  Lowering emits
-//! the phase graphs — bucket skeletons come from the shared
-//! [`ScheduleCache`], so a B-bucket step builds **one** collective
-//! schedule and reuses it B times — and a [`ChainPolicy`] for the
-//! composer; the [`Engine`](crate::engine::Engine) simulates the composed
-//! graph and the analysis layer attributes time back to phases.
+//! A [`WorkloadSpec`] describes *traffic shape*, not schedules.  The
+//! scenario library covers the dominant large-model patterns:
+//!
+//! - [`dnn_step`](WorkloadKind::DnnStep) — one data-parallel training
+//!   step: a backprop `Calc` timeline plus a large gradient all-reduce
+//!   split into `buckets` sub-collectives, each bucket's sends gated on
+//!   the backprop step that produces its gradients (the bucketed-overlap
+//!   pattern every DDP stack implements);
+//! - [`pipeline_step`](WorkloadKind::PipelineStep) — one pipeline-parallel
+//!   training step: every placement rank is a pipeline stage, microbatch
+//!   activations/gradients flow stage-to-stage as tagged p2p send/recv
+//!   pairs, and each stage executes the 1F1B static order (warmup
+//!   forwards, steady one-forward-one-backward, cooldown backwards);
+//! - [`moe_step`](WorkloadKind::MoeStep) — one mixture-of-experts layer:
+//!   router `Calc` → alltoall token dispatch (`Ready`-gated on the
+//!   router) → expert `Calc` → alltoall combine, the last three chained
+//!   per rank;
+//! - [`interference`](WorkloadKind::Interference) — two or more
+//!   independent workloads placed on **disjoint rank subsets** of one
+//!   topology ([`Placement::Disjoint`]) and co-scheduled, so the only
+//!   coupling is the simulator's shared resource pools (NICs, scale-up
+//!   fabric, group uplinks) — the multi-job noisy-neighbour shape.
+//!
+//! Lowering emits named phase graphs — collective skeletons come from the
+//! shared [`ScheduleCache`], so a B-bucket step builds **one** collective
+//! schedule and reuses it B times — plus a [`ChainPolicy`] and a rank
+//! [`Placement`] for the composer; the
+//! [`Engine`](crate::engine::Engine) simulates the composed graph and the
+//! analysis layer attributes time back to phases (and, for interference,
+//! back to jobs).  DESIGN.md §Workloads documents the full pipeline and a
+//! recipe for adding a scenario.
+
+#![deny(missing_docs)]
 
 use std::sync::Arc;
 
 use crate::backends::LibPico;
 use crate::collectives::{Coll, GenParams, GoalBuilder};
-use crate::compose::{ChainPolicy, ReadyDep};
-use crate::goal::Goal;
+use crate::compose::{compose_placed, ChainPolicy, PhaseLink, Placement, ReadyDep};
+use crate::goal::{Goal, GoalError, OpKind, PhaseTable, Seg};
 use crate::json::Json;
 use crate::orchestrator::ScheduleCache;
 use crate::util::parse_size;
@@ -31,13 +53,16 @@ pub enum ChainKind {
     Serial,
     /// Rank-local chaining.
     PerRank,
-    /// Dataflow-triggered overlap (the scenario defines the triggers).
+    /// Dataflow-triggered overlap (the scenario defines the triggers; for
+    /// `interference` this means the jobs run concurrently).
     Ready,
 }
 
 impl ChainKind {
+    /// Every selector, in CLI declaration order.
     pub const ALL: [ChainKind; 3] = [ChainKind::Serial, ChainKind::PerRank, ChainKind::Ready];
 
+    /// Stable lowercase label (CLI value and persisted descriptor field).
     pub fn label(&self) -> &'static str {
         match self {
             ChainKind::Serial => "serial",
@@ -46,14 +71,116 @@ impl ChainKind {
         }
     }
 
+    /// Inverse of [`ChainKind::label`].
     pub fn parse(s: &str) -> Option<ChainKind> {
         ChainKind::ALL.into_iter().find(|c| c.label() == s)
     }
 }
 
-/// What lowering produces: named phase graphs plus the chain policy to
-/// hand to [`compose_named`](crate::compose::compose_named).
-pub type LoweredParts = (Vec<(String, Arc<Goal>)>, ChainPolicy);
+/// Typed failure of workload validation or lowering (the workload-layer
+/// analogue of [`GoalError`]; converted to a `String` at the engine
+/// boundary).
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadError {
+    /// A spec field that must be positive was zero (or negative).
+    ZeroField {
+        /// Which scenario rejected the field.
+        scenario: &'static str,
+        /// The offending field name.
+        field: &'static str,
+    },
+    /// `buckets` exceeds the gradient element count: at least one bucket
+    /// would be empty, which silently breaks the per-bucket size
+    /// arithmetic spec authors rely on.
+    BucketsExceedCount {
+        /// Requested bucket count.
+        buckets: usize,
+        /// Gradient elements available to split.
+        elems: usize,
+    },
+    /// The interference jobs ask for more ranks than the placement has.
+    RanksExceedPlacement {
+        /// Sum of per-job rank counts.
+        needed: usize,
+        /// Ranks the placement provides.
+        available: usize,
+    },
+    /// Interference needs at least two jobs.
+    TooFewJobs {
+        /// Jobs the spec declared.
+        jobs: usize,
+    },
+    /// Interference jobs must be leaf scenarios (one level of nesting).
+    NestedInterference,
+    /// Two interference jobs share a name (per-job attribution matches
+    /// phase spans by name prefix, so names must be unique).
+    DuplicateJobName {
+        /// The repeated job name.
+        name: String,
+    },
+    /// The chain selector is undefined for the scenario.
+    BadChain {
+        /// Which scenario rejected the selector.
+        scenario: &'static str,
+        /// The rejected chain label.
+        chain: &'static str,
+    },
+    /// Composition of the lowered phase graphs failed.
+    Compose(GoalError),
+    /// A collective schedule could not be generated.
+    Schedule(String),
+}
+
+impl std::fmt::Display for WorkloadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WorkloadError::ZeroField { scenario, field } => {
+                write!(f, "{scenario}: {field} must be > 0")
+            }
+            WorkloadError::BucketsExceedCount { buckets, elems } => {
+                write!(
+                    f,
+                    "dnn_step: {buckets} buckets over {elems} gradient elements would leave \
+                     empty buckets (need buckets <= elements)"
+                )
+            }
+            WorkloadError::RanksExceedPlacement { needed, available } => {
+                write!(
+                    f,
+                    "interference: jobs need {needed} ranks but the placement has {available}"
+                )
+            }
+            WorkloadError::TooFewJobs { jobs } => {
+                write!(f, "interference: need at least 2 jobs, got {jobs}")
+            }
+            WorkloadError::NestedInterference => {
+                write!(f, "interference: jobs must be leaf scenarios (no nested interference)")
+            }
+            WorkloadError::DuplicateJobName { name } => {
+                write!(f, "interference: duplicate job name {name:?}")
+            }
+            WorkloadError::BadChain { scenario, chain } => {
+                write!(f, "{scenario}: chain {chain:?} is undefined for this scenario")
+            }
+            WorkloadError::Compose(e) => write!(f, "workload compose: {e}"),
+            WorkloadError::Schedule(e) => write!(f, "workload schedule: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WorkloadError {}
+
+impl From<GoalError> for WorkloadError {
+    fn from(e: GoalError) -> Self {
+        WorkloadError::Compose(e)
+    }
+}
+
+impl From<WorkloadError> for String {
+    fn from(e: WorkloadError) -> String {
+        e.to_string()
+    }
+}
 
 /// One data-parallel DNN training step (gradient bucketing).
 #[derive(Debug, Clone)]
@@ -69,161 +196,398 @@ pub struct DnnStepSpec {
 }
 
 impl DnnStepSpec {
+    /// A `dnn_step` over `grad_bytes` of gradients in `buckets` buckets
+    /// with `compute_s` of backprop, defaulting to the ring all-reduce.
     pub fn new(grad_bytes: usize, buckets: usize, compute_s: f64) -> Self {
         Self { grad_bytes, buckets, compute_s, algo: "ring".to_string() }
     }
 
+    /// Select the all-reduce algorithm (libpico registry name).
     pub fn with_algo(mut self, algo: &str) -> Self {
         self.algo = algo.to_string();
         self
     }
 }
 
-/// The scenario catalogue (one entry so far; the enum is where pipeline /
-/// MoE-dispatch shapes land next).
+/// One pipeline-parallel training step: every placement rank is a
+/// pipeline stage; `microbatches` activations of `act_bytes` flow
+/// stage-to-stage under the 1F1B static order.
+#[derive(Debug, Clone)]
+pub struct PipelineStepSpec {
+    /// Activation (and gradient) volume per microbatch per stage boundary.
+    pub act_bytes: usize,
+    /// Microbatches per step (the 1F1B steady-state depth).
+    pub microbatches: usize,
+    /// Forward compute per microbatch per stage.
+    pub fwd_s: f64,
+    /// Backward compute per microbatch per stage.
+    pub bwd_s: f64,
+}
+
+impl PipelineStepSpec {
+    /// A `pipeline_step` moving `act_bytes` activations across
+    /// `microbatches` microbatches (defaults: 1 ms forward, 2 ms backward
+    /// per microbatch per stage).
+    pub fn new(act_bytes: usize, microbatches: usize) -> Self {
+        Self { act_bytes, microbatches, fwd_s: 1e-3, bwd_s: 2e-3 }
+    }
+
+    /// Set the per-microbatch forward/backward compute times.
+    pub fn with_compute(mut self, fwd_s: f64, bwd_s: f64) -> Self {
+        self.fwd_s = fwd_s;
+        self.bwd_s = bwd_s;
+        self
+    }
+}
+
+/// One mixture-of-experts layer: router compute, alltoall token dispatch,
+/// expert compute, alltoall combine.
+#[derive(Debug, Clone)]
+pub struct MoeStepSpec {
+    /// Total token volume per rank entering each alltoall.
+    pub dispatch_bytes: usize,
+    /// Expert compute time per rank.
+    pub expert_s: f64,
+    /// Router (gating) compute time per rank.
+    pub router_s: f64,
+    /// Alltoall algorithm for dispatch and combine (libpico registry name).
+    pub algo: String,
+}
+
+impl MoeStepSpec {
+    /// A `moe_step` dispatching `dispatch_bytes` per rank (defaults: 2 ms
+    /// expert compute, 0.2 ms router, pairwise alltoall).
+    pub fn new(dispatch_bytes: usize) -> Self {
+        Self { dispatch_bytes, expert_s: 2e-3, router_s: 2e-4, algo: "pairwise".to_string() }
+    }
+
+    /// Select the alltoall algorithm (libpico registry name).
+    pub fn with_algo(mut self, algo: &str) -> Self {
+        self.algo = algo.to_string();
+        self
+    }
+
+    /// Set the router and expert compute times.
+    pub fn with_compute(mut self, router_s: f64, expert_s: f64) -> Self {
+        self.router_s = router_s;
+        self.expert_s = expert_s;
+        self
+    }
+}
+
+/// One job of an [`interference`](WorkloadKind::Interference) scenario: a
+/// leaf workload plus its slice of the placement's rank space.
+#[derive(Debug, Clone)]
+pub struct InterferenceJob {
+    /// Ranks this job occupies (0 = an even share of the placement).
+    pub ranks: usize,
+    /// Chain override for the job's own phases (`None` = its default).
+    pub chain: Option<ChainKind>,
+    /// The job's workload (must be a leaf scenario, not `interference`).
+    pub workload: WorkloadSpec,
+}
+
+/// Two or more independent workloads co-scheduled on disjoint rank
+/// subsets of one topology.
+#[derive(Debug, Clone)]
+pub struct InterferenceSpec {
+    /// The co-located jobs, placed at consecutive rank offsets.
+    pub jobs: Vec<InterferenceJob>,
+}
+
+/// The scenario catalogue.
 #[derive(Debug, Clone)]
 pub enum WorkloadKind {
+    /// Data-parallel bucketed gradient all-reduce over a backprop timeline.
     DnnStep(DnnStepSpec),
+    /// Pipeline-parallel 1F1B microbatch schedule over p2p stages.
+    PipelineStep(PipelineStepSpec),
+    /// MoE dispatch/combine alltoalls around expert compute.
+    MoeStep(MoeStepSpec),
+    /// Multiple jobs on disjoint rank subsets of one machine.
+    Interference(InterferenceSpec),
+}
+
+/// Where one interference job landed in the union rank space (engine-side
+/// per-job attribution keys off this).
+#[derive(Debug, Clone)]
+pub struct JobSlot {
+    /// Job name (phase spans of the job are `name` or `name:<inner>`).
+    pub name: String,
+    /// First union rank of the job's slice.
+    pub offset: usize,
+    /// Ranks the job occupies.
+    pub ranks: usize,
+}
+
+/// What lowering produces: named phase graphs plus the composition recipe
+/// ([`ChainPolicy`] + rank [`Placement`]) to hand to
+/// [`compose_placed`](crate::compose::compose_placed).
+#[derive(Debug, Clone)]
+pub struct Lowered {
+    /// Named phase graphs, in composition order.
+    pub parts: Vec<(String, Arc<Goal>)>,
+    /// How the phases chain.
+    pub policy: ChainPolicy,
+    /// Where each phase's ranks land ([`Placement::Shared`] for every
+    /// single-job scenario; [`Placement::Disjoint`] for interference).
+    pub placement: Placement,
+    /// Interference only: one slot per job for per-job attribution.
+    pub jobs: Vec<JobSlot>,
 }
 
 /// A named, declarative workload — the unit `pico overlap` runs.
 #[derive(Debug, Clone)]
 pub struct WorkloadSpec {
+    /// Workload name (run-directory component; must stay path-safe).
     pub name: String,
+    /// Which scenario this is.
     pub kind: WorkloadKind,
 }
 
 impl WorkloadSpec {
+    /// A named `dnn_step` workload.
     pub fn dnn_step(name: &str, spec: DnnStepSpec) -> Self {
         Self { name: name.to_string(), kind: WorkloadKind::DnnStep(spec) }
     }
 
-    /// Default chain for the scenario (`dnn_step` exists to overlap).
+    /// A named `pipeline_step` workload.
+    pub fn pipeline_step(name: &str, spec: PipelineStepSpec) -> Self {
+        Self { name: name.to_string(), kind: WorkloadKind::PipelineStep(spec) }
+    }
+
+    /// A named `moe_step` workload.
+    pub fn moe_step(name: &str, spec: MoeStepSpec) -> Self {
+        Self { name: name.to_string(), kind: WorkloadKind::MoeStep(spec) }
+    }
+
+    /// A named `interference` workload over `jobs`.
+    pub fn interference(name: &str, jobs: Vec<InterferenceJob>) -> Self {
+        Self { name: name.to_string(), kind: WorkloadKind::Interference(InterferenceSpec { jobs }) }
+    }
+
+    /// Default chain for the scenario (every scenario exists to overlap:
+    /// `Ready` triggers for `dnn_step`/`moe_step`, the 1F1B interleave for
+    /// `pipeline_step`, concurrent co-scheduling for `interference`).
     pub fn default_chain(&self) -> ChainKind {
         ChainKind::Ready
     }
 
-    /// Lower to named phase graphs plus the chain policy for
-    /// [`compose_named`](crate::compose::compose_named).  Phase graphs are
-    /// returned individually (not pre-composed) so callers can also
-    /// simulate them standalone — that is how conservation checks and the
-    /// serial baseline are computed without regenerating anything.
-    pub fn lower_parts(
-        &self,
-        p: usize,
-        cache: &ScheduleCache,
-        chain: ChainKind,
-    ) -> Result<LoweredParts, String> {
+    /// Stable scenario label (descriptor `scenario` field, record schema).
+    pub fn scenario_label(&self) -> &'static str {
         match &self.kind {
-            WorkloadKind::DnnStep(s) => lower_dnn_step(s, p, cache, chain),
+            WorkloadKind::DnnStep(_) => "dnn_step",
+            WorkloadKind::PipelineStep(_) => "pipeline_step",
+            WorkloadKind::MoeStep(_) => "moe_step",
+            WorkloadKind::Interference(_) => "interference",
         }
     }
 
-    /// The serial-replay baseline the paperly comparison is against: the
-    /// same backprop timeline plus **one monolithic** all-reduce of the
-    /// full gradient, `Serial`-chained.
-    pub fn lower_baseline_parts(
-        &self,
-        p: usize,
-        cache: &ScheduleCache,
-    ) -> Result<LoweredParts, String> {
+    /// Algorithm label for the record schema (`p2p` for pipeline, `mixed`
+    /// for interference — those scenarios have no single registry name).
+    pub fn algo_label(&self) -> String {
         match &self.kind {
-            WorkloadKind::DnnStep(s) => {
-                let compute = compute_timeline(p, s.buckets, s.compute_s)?;
-                let mono = bucket_schedule(p, s.grad_bytes, 1, &s.algo, cache)?;
-                Ok((
-                    vec![("compute".to_string(), compute), ("allreduce".to_string(), mono)],
-                    ChainPolicy::Serial,
-                ))
+            WorkloadKind::DnnStep(s) => s.algo.clone(),
+            WorkloadKind::PipelineStep(_) => "p2p".to_string(),
+            WorkloadKind::MoeStep(s) => s.algo.clone(),
+            WorkloadKind::Interference(_) => "mixed".to_string(),
+        }
+    }
+
+    /// Nominal traffic volume for the record schema (per-rank bytes the
+    /// scenario moves: gradients, activations both ways, tokens both
+    /// ways, or the jobs' sum).
+    pub fn total_bytes(&self) -> usize {
+        match &self.kind {
+            WorkloadKind::DnnStep(s) => s.grad_bytes,
+            WorkloadKind::PipelineStep(s) => 2 * s.microbatches * s.act_bytes,
+            WorkloadKind::MoeStep(s) => 2 * s.dispatch_bytes,
+            WorkloadKind::Interference(s) => {
+                s.jobs.iter().map(|j| j.workload.total_bytes()).sum()
             }
         }
     }
 
-    /// The workload descriptor (what `pico overlap --out` persists).
-    pub fn to_json(&self) -> Json {
+    /// Total modelled compute per rank (the overlap metrics' compute
+    /// baseline; 0 for interference, whose jobs are attributed
+    /// individually).
+    pub fn compute_seconds(&self) -> f64 {
         match &self.kind {
-            WorkloadKind::DnnStep(s) => Json::obj()
-                .set("name", self.name.as_str())
-                .set("scenario", "dnn_step")
+            WorkloadKind::DnnStep(s) => s.compute_s,
+            WorkloadKind::PipelineStep(s) => s.microbatches as f64 * (s.fwd_s + s.bwd_s),
+            WorkloadKind::MoeStep(s) => s.router_s + s.expert_s,
+            WorkloadKind::Interference(_) => 0.0,
+        }
+    }
+
+    /// Lower to named phase graphs plus the composition recipe for
+    /// [`compose_placed`](crate::compose::compose_placed).  Phase graphs
+    /// are returned individually (not pre-composed) so callers can also
+    /// simulate them standalone — that is how conservation checks and the
+    /// serial baseline are computed without regenerating anything.
+    pub fn lower(
+        &self,
+        p: usize,
+        cache: &ScheduleCache,
+        chain: ChainKind,
+    ) -> Result<Lowered, WorkloadError> {
+        match &self.kind {
+            WorkloadKind::DnnStep(s) => lower_dnn_step(s, p, cache, chain),
+            WorkloadKind::PipelineStep(s) => lower_pipeline_step(s, p, chain),
+            WorkloadKind::MoeStep(s) => lower_moe_step(s, p, cache, chain),
+            WorkloadKind::Interference(s) => lower_interference(s, p, cache, chain),
+        }
+    }
+
+    /// The serial-replay baseline the paperly comparison is against:
+    /// compute plus **one monolithic** collective for `dnn_step`,
+    /// one-microbatch-at-a-time traversal for `pipeline_step`, the same
+    /// phases `Serial`-chained for `moe_step`, and the jobs back-to-back
+    /// for `interference`.
+    pub fn lower_baseline(
+        &self,
+        p: usize,
+        cache: &ScheduleCache,
+    ) -> Result<Lowered, WorkloadError> {
+        match &self.kind {
+            WorkloadKind::DnnStep(s) => {
+                // same input validation as the forward lowering: a spec
+                // lower() rejects must not silently yield a baseline
+                if s.grad_bytes == 0 {
+                    return Err(WorkloadError::ZeroField {
+                        scenario: "dnn_step",
+                        field: "grad_bytes",
+                    });
+                }
+                if s.compute_s <= 0.0 {
+                    return Err(WorkloadError::ZeroField {
+                        scenario: "dnn_step",
+                        field: "compute_ms",
+                    });
+                }
+                let elems = grad_elems(s.grad_bytes);
+                bucket_split(elems, s.buckets)?;
+                let compute = compute_timeline(p, s.buckets, s.compute_s)?;
+                let mono = allreduce_schedule(p, round_to_rank_multiple(elems, p), &s.algo, cache)?;
+                Ok(Lowered {
+                    parts: vec![("compute".to_string(), compute), ("allreduce".to_string(), mono)],
+                    policy: ChainPolicy::Serial,
+                    placement: Placement::Shared,
+                    jobs: Vec::new(),
+                })
+            }
+            WorkloadKind::PipelineStep(s) => {
+                let mb = Arc::new(pipeline_microbatch(p, s)?);
+                let parts = (0..s.microbatches).map(|m| (format!("mb{m}"), mb.clone())).collect();
+                Ok(Lowered {
+                    parts,
+                    policy: ChainPolicy::Serial,
+                    placement: Placement::Shared,
+                    jobs: Vec::new(),
+                })
+            }
+            WorkloadKind::MoeStep(s) => lower_moe_step(s, p, cache, ChainKind::Serial),
+            WorkloadKind::Interference(s) => lower_interference(s, p, cache, ChainKind::Serial),
+        }
+    }
+
+    /// The workload descriptor (what `pico overlap --out` persists); the
+    /// inverse of the `TryFrom<&Json>` parse.
+    pub fn to_json(&self) -> Json {
+        let base = Json::obj()
+            .set("name", self.name.as_str())
+            .set("scenario", self.scenario_label());
+        match &self.kind {
+            WorkloadKind::DnnStep(s) => base
                 .set("grad_bytes", s.grad_bytes)
                 .set("buckets", s.buckets)
                 .set("compute_ms", s.compute_s * 1e3)
                 .set("algorithm", s.algo.as_str()),
+            WorkloadKind::PipelineStep(s) => base
+                .set("act_bytes", s.act_bytes)
+                .set("microbatches", s.microbatches)
+                .set("fwd_ms", s.fwd_s * 1e3)
+                .set("bwd_ms", s.bwd_s * 1e3),
+            WorkloadKind::MoeStep(s) => base
+                .set("dispatch_bytes", s.dispatch_bytes)
+                .set("expert_ms", s.expert_s * 1e3)
+                .set("router_ms", s.router_s * 1e3)
+                .set("algorithm", s.algo.as_str()),
+            WorkloadKind::Interference(s) => {
+                let jobs: Vec<Json> = s
+                    .jobs
+                    .iter()
+                    .map(|j| {
+                        let mut doc = j.workload.to_json().set("ranks", j.ranks);
+                        if let Some(c) = j.chain {
+                            doc = doc.set("chain", c.label());
+                        }
+                        doc
+                    })
+                    .collect();
+                base.set("jobs", jobs)
+            }
         }
     }
 }
 
-impl TryFrom<&Json> for WorkloadSpec {
-    type Error = String;
-
-    /// Parse a workload descriptor (`examples/dnn_step.json`).  Required:
-    /// `scenario`; `grad_bytes` accepts numbers or size strings
-    /// (`"64MiB"`); `compute_ms` is fractional milliseconds.
-    fn try_from(j: &Json) -> Result<Self, String> {
-        let scenario = j
-            .get("scenario")
-            .and_then(Json::as_str)
-            .ok_or("workload: missing \"scenario\"")?;
-        if scenario != "dnn_step" {
-            return Err(format!("unknown workload scenario {scenario:?}"));
-        }
-        let name = j.get("name").and_then(Json::as_str).unwrap_or("dnn-step").to_string();
-        let grad_bytes = match j.get("grad_bytes") {
-            Some(n @ Json::Num(_)) => n.as_usize().ok_or("bad grad_bytes")?,
-            Some(Json::Str(s)) => parse_size(s).ok_or_else(|| format!("bad grad_bytes {s:?}"))?,
-            Some(other) => return Err(format!("bad grad_bytes {other:?}")),
-            None => 64 << 20,
-        };
-        let buckets = j.get("buckets").and_then(Json::as_usize).unwrap_or(4);
-        if buckets == 0 {
-            return Err("dnn_step: buckets must be >= 1".into());
-        }
-        let compute_s = match j.get("compute_ms").and_then(Json::as_f64) {
-            Some(ms) if ms > 0.0 => ms * 1e-3,
-            Some(ms) => return Err(format!("dnn_step: compute_ms must be > 0, got {ms}")),
-            None => 4e-3,
-        };
-        if grad_bytes == 0 {
-            return Err("dnn_step: grad_bytes must be > 0".into());
-        }
-        let algo = j.get("algorithm").and_then(Json::as_str).unwrap_or("ring").to_string();
-        Ok(WorkloadSpec::dnn_step(&name, DnnStepSpec {
-            grad_bytes,
-            buckets,
-            compute_s,
-            algo,
-        }))
+/// Split `elems` gradient elements into `buckets` buckets: every bucket
+/// gets `elems / buckets` elements and the **last bucket absorbs the
+/// remainder** (`elems - (buckets - 1) × (elems / buckets)`), so spec
+/// authors can predict every per-bucket size from the two inputs.
+/// Returns `(base, last)`.  `buckets == 0` and `buckets > elems` are
+/// typed errors — the latter would silently produce empty buckets.
+pub fn bucket_split(elems: usize, buckets: usize) -> Result<(usize, usize), WorkloadError> {
+    if buckets == 0 {
+        return Err(WorkloadError::ZeroField { scenario: "dnn_step", field: "buckets" });
     }
+    if buckets > elems {
+        return Err(WorkloadError::BucketsExceedCount { buckets, elems });
+    }
+    let base = elems / buckets;
+    Ok((base, elems - base * (buckets - 1)))
 }
 
-/// The backprop `Calc` timeline: every rank runs `buckets` equal compute
+// ---------------------------------------------------------------------------
+// lowering helpers
+// ---------------------------------------------------------------------------
+
+/// Gradient bytes → f32 elements (floor, at least one element).
+fn grad_elems(grad_bytes: usize) -> usize {
+    (grad_bytes / 4).max(1)
+}
+
+/// Round an element count up to a multiple of `p` so the cache's
+/// byte-agnostic skeleton-rescale path applies (one dependency CSR per
+/// (algorithm, p), rescaled per size — `CacheStats::skeletons` proves it).
+fn round_to_rank_multiple(elems: usize, p: usize) -> usize {
+    elems.max(1).div_ceil(p) * p
+}
+
+/// The backprop `Calc` timeline: every rank runs `steps` equal compute
 /// steps back-to-back; step i finishing means gradient bucket i is ready.
-fn compute_timeline(p: usize, buckets: usize, compute_s: f64) -> Result<Arc<Goal>, String> {
+fn compute_timeline(p: usize, steps: usize, compute_s: f64) -> Result<Arc<Goal>, WorkloadError> {
     if p == 0 {
-        return Err("workload: p must be >= 1".into());
+        return Err(WorkloadError::ZeroField { scenario: "workload", field: "p" });
     }
-    let step = compute_s / buckets as f64;
+    let step = compute_s / steps as f64;
     let mut b = GoalBuilder::new(p, 0, 4);
     for r in 0..p {
-        b.calc_timeline(r, step, buckets);
+        b.calc_timeline(r, step, steps);
     }
-    Ok(Arc::new(b.finish().map_err(String::from)?))
+    Ok(Arc::new(b.finish()?))
 }
 
-/// One gradient bucket's all-reduce, sourced through the shared cache.
-/// The per-bucket element count is rounded up to a multiple of `p` so the
-/// cache's byte-agnostic skeleton-rescale path applies: a B-bucket step
-/// compiles one dependency CSR and rescales/reuses it B times
-/// (`CacheStats::skeletons` proves it).
-fn bucket_schedule(
+/// One collective schedule sourced through the shared cache.
+fn allreduce_schedule(
     p: usize,
-    total_bytes: usize,
-    buckets: usize,
+    elems: usize,
     algo: &str,
     cache: &ScheduleCache,
-) -> Result<Arc<Goal>, String> {
-    let per_bucket_elems = (total_bytes / buckets / 4).max(1).div_ceil(p) * p;
-    cache.schedule(&LibPico, Coll::Allreduce, algo, &GenParams::new(p, per_bucket_elems))
+) -> Result<Arc<Goal>, WorkloadError> {
+    cache
+        .schedule(&LibPico, Coll::Allreduce, algo, &GenParams::new(p, elems))
+        .map_err(WorkloadError::Schedule)
 }
 
 fn lower_dnn_step(
@@ -231,17 +595,31 @@ fn lower_dnn_step(
     p: usize,
     cache: &ScheduleCache,
     chain: ChainKind,
-) -> Result<LoweredParts, String> {
-    if s.buckets == 0 {
-        return Err("dnn_step: buckets must be >= 1".into());
+) -> Result<Lowered, WorkloadError> {
+    if s.grad_bytes == 0 {
+        return Err(WorkloadError::ZeroField { scenario: "dnn_step", field: "grad_bytes" });
     }
+    if s.compute_s <= 0.0 {
+        return Err(WorkloadError::ZeroField { scenario: "dnn_step", field: "compute_ms" });
+    }
+    let elems = grad_elems(s.grad_bytes);
+    let (base, last) = bucket_split(elems, s.buckets)?;
     let compute = compute_timeline(p, s.buckets, s.compute_s)?;
-    let bucket = bucket_schedule(p, s.grad_bytes, s.buckets, &s.algo, cache)?;
+    // Every bucket but the last shares one schedule Arc; the remainder
+    // bucket gets its own size (often the same, then the Arc is shared
+    // too — both sizes rescale from the same cached skeleton).
+    let bucket = allreduce_schedule(p, round_to_rank_multiple(base, p), &s.algo, cache)?;
+    let last_bucket = if round_to_rank_multiple(last, p) == round_to_rank_multiple(base, p) {
+        bucket.clone()
+    } else {
+        allreduce_schedule(p, round_to_rank_multiple(last, p), &s.algo, cache)?
+    };
     let mut parts: Vec<(String, Arc<Goal>)> = Vec::with_capacity(s.buckets + 1);
     parts.push(("compute".to_string(), compute));
-    for i in 0..s.buckets {
+    for i in 0..s.buckets - 1 {
         parts.push((format!("bucket{i}"), bucket.clone()));
     }
+    parts.push((format!("bucket{}", s.buckets - 1), last_bucket));
     let policy = match chain {
         ChainKind::Serial => ChainPolicy::Serial,
         ChainKind::PerRank => ChainPolicy::PerRank,
@@ -251,13 +629,368 @@ fn lower_dnn_step(
             (0..s.buckets).map(|i| ReadyDep { phase: 0, op: i }).collect(),
         ),
     };
-    Ok((parts, policy))
+    Ok(Lowered { parts, policy, placement: Placement::Shared, jobs: Vec::new() })
+}
+
+/// The 1F1B static order of one stage: `warmup` forwards, then
+/// one-backward-one-forward until forwards are exhausted, then the
+/// remaining backwards.  Emitted per microbatch as (is_forward,
+/// microbatch index, phase) where phase is 0 = warmup, 1 = steady,
+/// 2 = cooldown.
+fn one_f_one_b_order(stage: usize, p: usize, mb: usize) -> Vec<(bool, usize, u32)> {
+    let warmup = (p - stage).min(mb);
+    let mut order = Vec::with_capacity(2 * mb);
+    for m in 0..warmup {
+        order.push((true, m, 0));
+    }
+    for k in 0..(mb - warmup) {
+        order.push((false, k, 1));
+        order.push((true, warmup + k, 1));
+    }
+    for m in (mb - warmup)..mb {
+        order.push((false, m, 2));
+    }
+    order
+}
+
+/// Build the 1F1B pipeline graph: rank s is stage s; activations flow
+/// `s → s+1` on tag `2m`, gradients `s+1 → s` on tag `2m+1`.  Receives
+/// and compute chain rank-locally (blocking); sends are posted
+/// non-blocking off the producing `Calc` so a stage never stalls on a
+/// consumer — exactly the Isend/Recv structure real 1F1B uses, and the
+/// reason the schedule is deadlock-free under rendezvous semantics.
+fn pipeline_1f1b(p: usize, s: &PipelineStepSpec) -> Result<Goal, WorkloadError> {
+    let act_elems = (s.act_bytes / 4).max(1);
+    let mut b = GoalBuilder::new(p, act_elems, 4);
+    let mut phase_rows: Vec<Vec<u32>> = vec![Vec::new(); p];
+    for stage in 0..p {
+        for (is_fwd, m, phase) in one_f_one_b_order(stage, p, s.microbatches) {
+            let before = b.ops_len(stage);
+            if is_fwd {
+                if stage > 0 {
+                    b.recv_tagged(stage, stage - 1, Seg::output(0, act_elems), (2 * m) as u32);
+                }
+                b.calc(stage, s.fwd_s);
+                if stage + 1 < p {
+                    let base = b.group_base(stage);
+                    b.post_with_deps(
+                        stage,
+                        OpKind::Send {
+                            peer: stage + 1,
+                            seg: Seg::input(0, act_elems),
+                            tag: (2 * m) as u32,
+                        },
+                        &base,
+                    );
+                }
+            } else {
+                if stage + 1 < p {
+                    b.recv_tagged(stage, stage + 1, Seg::output(0, act_elems), (2 * m + 1) as u32);
+                }
+                b.calc(stage, s.bwd_s);
+                if stage > 0 {
+                    let base = b.group_base(stage);
+                    b.post_with_deps(
+                        stage,
+                        OpKind::Send {
+                            peer: stage - 1,
+                            seg: Seg::input(0, act_elems),
+                            tag: (2 * m + 1) as u32,
+                        },
+                        &base,
+                    );
+                }
+            }
+            for _ in before..b.ops_len(stage) {
+                phase_rows[stage].push(phase);
+            }
+        }
+    }
+    let mut g = b.finish()?;
+    g.phases = Some(Arc::new(PhaseTable {
+        names: vec!["warmup".to_string(), "steady".to_string(), "cooldown".to_string()],
+        phase_of: phase_rows.concat(),
+    }));
+    g.validate()?;
+    Ok(g)
+}
+
+/// One microbatch traversing the whole pipeline with no overlap (forward
+/// down the chain, backward back up) — the non-pipelined baseline unit.
+fn pipeline_microbatch(p: usize, s: &PipelineStepSpec) -> Result<Goal, WorkloadError> {
+    let act_elems = (s.act_bytes / 4).max(1);
+    let mut b = GoalBuilder::new(p, act_elems, 4);
+    for stage in 0..p {
+        if stage > 0 {
+            b.recv_tagged(stage, stage - 1, Seg::output(0, act_elems), 0);
+        }
+        b.calc(stage, s.fwd_s);
+        if stage + 1 < p {
+            b.send_tagged(stage, stage + 1, Seg::input(0, act_elems), 0);
+        }
+        if stage + 1 < p {
+            b.recv_tagged(stage, stage + 1, Seg::output(0, act_elems), 1);
+        }
+        b.calc(stage, s.bwd_s);
+        if stage > 0 {
+            b.send_tagged(stage, stage - 1, Seg::input(0, act_elems), 1);
+        }
+    }
+    Ok(b.finish()?)
+}
+
+fn lower_pipeline_step(
+    s: &PipelineStepSpec,
+    p: usize,
+    _chain: ChainKind,
+) -> Result<Lowered, WorkloadError> {
+    // The 1F1B interleave *is* the schedule: the chain selector does not
+    // alter it (the serial baseline is the non-pipelined replay).
+    if p == 0 {
+        return Err(WorkloadError::ZeroField { scenario: "pipeline_step", field: "p" });
+    }
+    if s.microbatches == 0 {
+        return Err(WorkloadError::ZeroField { scenario: "pipeline_step", field: "microbatches" });
+    }
+    if s.fwd_s <= 0.0 {
+        return Err(WorkloadError::ZeroField { scenario: "pipeline_step", field: "fwd_ms" });
+    }
+    if s.bwd_s <= 0.0 {
+        return Err(WorkloadError::ZeroField { scenario: "pipeline_step", field: "bwd_ms" });
+    }
+    let g = Arc::new(pipeline_1f1b(p, s)?);
+    Ok(Lowered {
+        parts: vec![("pipeline".to_string(), g)],
+        policy: ChainPolicy::Ready(Vec::new()),
+        placement: Placement::Shared,
+        jobs: Vec::new(),
+    })
+}
+
+fn lower_moe_step(
+    s: &MoeStepSpec,
+    p: usize,
+    cache: &ScheduleCache,
+    chain: ChainKind,
+) -> Result<Lowered, WorkloadError> {
+    if s.dispatch_bytes == 0 {
+        return Err(WorkloadError::ZeroField { scenario: "moe_step", field: "dispatch_bytes" });
+    }
+    if s.expert_s <= 0.0 {
+        return Err(WorkloadError::ZeroField { scenario: "moe_step", field: "expert_ms" });
+    }
+    if s.router_s <= 0.0 {
+        return Err(WorkloadError::ZeroField { scenario: "moe_step", field: "router_ms" });
+    }
+    let elems = round_to_rank_multiple((s.dispatch_bytes / 4).max(1), p);
+    let a2a = cache
+        .schedule(&LibPico, Coll::Alltoall, &s.algo, &GenParams::new(p, elems))
+        .map_err(WorkloadError::Schedule)?;
+    let router = compute_timeline(p, 1, s.router_s)?;
+    let experts = compute_timeline(p, 1, s.expert_s)?;
+    // dispatch and combine share one schedule Arc: the composer's
+    // per-phase tag remap keeps their channels disjoint
+    let parts = vec![
+        ("router".to_string(), router),
+        ("dispatch".to_string(), a2a.clone()),
+        ("experts".to_string(), experts),
+        ("combine".to_string(), a2a),
+    ];
+    let policy = match chain {
+        ChainKind::Serial => ChainPolicy::Serial,
+        ChainKind::PerRank => ChainPolicy::PerRank,
+        // dispatch fires the moment the router Calc retires (per rank);
+        // experts and combine chain on their own rank's predecessors
+        ChainKind::Ready => ChainPolicy::Links(vec![
+            PhaseLink::Ready(ReadyDep { phase: 0, op: 0 }),
+            PhaseLink::PerRank,
+            PhaseLink::PerRank,
+        ]),
+    };
+    Ok(Lowered { parts, policy, placement: Placement::Shared, jobs: Vec::new() })
+}
+
+fn lower_interference(
+    s: &InterferenceSpec,
+    p: usize,
+    cache: &ScheduleCache,
+    chain: ChainKind,
+) -> Result<Lowered, WorkloadError> {
+    if s.jobs.len() < 2 {
+        return Err(WorkloadError::TooFewJobs { jobs: s.jobs.len() });
+    }
+    let even = p / s.jobs.len();
+    let mut offsets = Vec::with_capacity(s.jobs.len());
+    let mut slots = Vec::with_capacity(s.jobs.len());
+    let mut parts: Vec<(String, Arc<Goal>)> = Vec::with_capacity(s.jobs.len());
+    let mut offset = 0usize;
+    for job in &s.jobs {
+        if matches!(job.workload.kind, WorkloadKind::Interference(_)) {
+            return Err(WorkloadError::NestedInterference);
+        }
+        let ranks = if job.ranks == 0 { even } else { job.ranks };
+        if ranks == 0 {
+            return Err(WorkloadError::ZeroField { scenario: "interference", field: "ranks" });
+        }
+        let name = job.workload.name.clone();
+        if slots.iter().any(|sl: &JobSlot| sl.name == name) {
+            return Err(WorkloadError::DuplicateJobName { name });
+        }
+        // lower the job at its own rank count and seal it into one graph;
+        // the disjoint composition then remaps it into the union space
+        let inner_chain = job.chain.unwrap_or_else(|| job.workload.default_chain());
+        let inner = job.workload.lower(ranks, cache, inner_chain)?;
+        let refs: Vec<(&str, &Goal)> =
+            inner.parts.iter().map(|(n, g)| (n.as_str(), &**g)).collect();
+        let sealed = compose_placed(&refs, &inner.policy, &inner.placement)?;
+        parts.push((name.clone(), Arc::new(sealed)));
+        offsets.push(offset);
+        slots.push(JobSlot { name, offset, ranks });
+        offset += ranks;
+    }
+    if offset > p {
+        return Err(WorkloadError::RanksExceedPlacement { needed: offset, available: p });
+    }
+    let policy = match chain {
+        ChainKind::Ready => ChainPolicy::Concurrent,
+        ChainKind::Serial => ChainPolicy::Serial,
+        ChainKind::PerRank => {
+            return Err(WorkloadError::BadChain { scenario: "interference", chain: "per_rank" })
+        }
+    };
+    Ok(Lowered {
+        parts,
+        policy,
+        placement: Placement::Disjoint { offsets, union_p: p },
+        jobs: slots,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// JSON descriptors
+// ---------------------------------------------------------------------------
+
+/// Parse a size field that accepts numbers or size strings (`"64MiB"`).
+fn json_bytes(j: &Json, key: &str, default: usize) -> Result<usize, String> {
+    match j.get(key) {
+        Some(n @ Json::Num(_)) => n.as_usize().ok_or_else(|| format!("bad {key}")),
+        Some(Json::Str(s)) => parse_size(s).ok_or_else(|| format!("bad {key} {s:?}")),
+        Some(other) => Err(format!("bad {key} {other:?}")),
+        None => Ok(default),
+    }
+}
+
+/// Parse a fractional-milliseconds field into seconds (> 0 enforced).
+fn json_ms(j: &Json, key: &str, default_s: f64) -> Result<f64, String> {
+    match j.get(key).and_then(Json::as_f64) {
+        Some(ms) if ms > 0.0 => Ok(ms * 1e-3),
+        Some(ms) => Err(format!("{key} must be > 0, got {ms}")),
+        None => Ok(default_s),
+    }
+}
+
+impl TryFrom<&Json> for WorkloadSpec {
+    type Error = String;
+
+    /// Parse a workload descriptor (`examples/*.json`).  Required:
+    /// `scenario`; size fields accept numbers or size strings (`"64MiB"`);
+    /// `*_ms` fields are fractional milliseconds.
+    fn try_from(j: &Json) -> Result<Self, String> {
+        let scenario = j
+            .get("scenario")
+            .and_then(Json::as_str)
+            .ok_or("workload: missing \"scenario\"")?;
+        match scenario {
+            "dnn_step" => {
+                let name = j.get("name").and_then(Json::as_str).unwrap_or("dnn-step").to_string();
+                let grad_bytes = json_bytes(j, "grad_bytes", 64 << 20)?;
+                if grad_bytes == 0 {
+                    return Err("dnn_step: grad_bytes must be > 0".into());
+                }
+                let buckets = j.get("buckets").and_then(Json::as_usize).unwrap_or(4);
+                if buckets == 0 {
+                    return Err("dnn_step: buckets must be >= 1".into());
+                }
+                let compute_s =
+                    json_ms(j, "compute_ms", 4e-3).map_err(|e| format!("dnn_step: {e}"))?;
+                let algo = j.get("algorithm").and_then(Json::as_str).unwrap_or("ring").to_string();
+                Ok(WorkloadSpec::dnn_step(&name, DnnStepSpec {
+                    grad_bytes,
+                    buckets,
+                    compute_s,
+                    algo,
+                }))
+            }
+            "pipeline_step" => {
+                let name =
+                    j.get("name").and_then(Json::as_str).unwrap_or("pipeline-step").to_string();
+                let act_bytes = json_bytes(j, "act_bytes", 4 << 20)?;
+                let microbatches = j.get("microbatches").and_then(Json::as_usize).unwrap_or(8);
+                if microbatches == 0 {
+                    return Err("pipeline_step: microbatches must be >= 1".into());
+                }
+                let fwd_s = json_ms(j, "fwd_ms", 1e-3).map_err(|e| format!("pipeline_step: {e}"))?;
+                let bwd_s = json_ms(j, "bwd_ms", 2e-3).map_err(|e| format!("pipeline_step: {e}"))?;
+                Ok(WorkloadSpec::pipeline_step(&name, PipelineStepSpec {
+                    act_bytes,
+                    microbatches,
+                    fwd_s,
+                    bwd_s,
+                }))
+            }
+            "moe_step" => {
+                let name = j.get("name").and_then(Json::as_str).unwrap_or("moe-step").to_string();
+                let dispatch_bytes = json_bytes(j, "dispatch_bytes", 16 << 20)?;
+                if dispatch_bytes == 0 {
+                    return Err("moe_step: dispatch_bytes must be > 0".into());
+                }
+                let expert_s = json_ms(j, "expert_ms", 2e-3).map_err(|e| format!("moe_step: {e}"))?;
+                let router_s = json_ms(j, "router_ms", 2e-4).map_err(|e| format!("moe_step: {e}"))?;
+                let algo =
+                    j.get("algorithm").and_then(Json::as_str).unwrap_or("pairwise").to_string();
+                Ok(WorkloadSpec::moe_step(&name, MoeStepSpec {
+                    dispatch_bytes,
+                    expert_s,
+                    router_s,
+                    algo,
+                }))
+            }
+            "interference" => {
+                let name =
+                    j.get("name").and_then(Json::as_str).unwrap_or("interference").to_string();
+                let jobs_json = j
+                    .get("jobs")
+                    .and_then(Json::as_arr)
+                    .ok_or("interference: missing \"jobs\" array")?;
+                let mut jobs = Vec::with_capacity(jobs_json.len());
+                for job in jobs_json {
+                    let workload = WorkloadSpec::try_from(job)?;
+                    if matches!(workload.kind, WorkloadKind::Interference(_)) {
+                        return Err(WorkloadError::NestedInterference.to_string());
+                    }
+                    let ranks = job.get("ranks").and_then(Json::as_usize).unwrap_or(0);
+                    let chain = match job.get("chain").and_then(Json::as_str) {
+                        Some(c) => Some(
+                            ChainKind::parse(c)
+                                .ok_or_else(|| format!("interference: unknown chain {c:?}"))?,
+                        ),
+                        None => None,
+                    };
+                    jobs.push(InterferenceJob { ranks, chain, workload });
+                }
+                if jobs.len() < 2 {
+                    return Err(WorkloadError::TooFewJobs { jobs: jobs.len() }.to_string());
+                }
+                Ok(WorkloadSpec::interference(&name, jobs))
+            }
+            other => Err(format!("unknown workload scenario {other:?}")),
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compose::compose_named;
 
     fn spec() -> WorkloadSpec {
         WorkloadSpec::dnn_step("t", DnnStepSpec::new(1 << 20, 4, 2e-3))
@@ -265,9 +998,10 @@ mod tests {
 
     fn composed(chain: ChainKind) -> Goal {
         let cache = ScheduleCache::new();
-        let (parts, policy) = spec().lower_parts(8, &cache, chain).unwrap();
-        let refs: Vec<(&str, &Goal)> = parts.iter().map(|(n, g)| (n.as_str(), &**g)).collect();
-        compose_named(&refs, &policy).unwrap()
+        let lowered = spec().lower(8, &cache, chain).unwrap();
+        let refs: Vec<(&str, &Goal)> =
+            lowered.parts.iter().map(|(n, g)| (n.as_str(), &**g)).collect();
+        compose_placed(&refs, &lowered.policy, &lowered.placement).unwrap()
     }
 
     #[test]
@@ -284,12 +1018,185 @@ mod tests {
     #[test]
     fn buckets_share_one_cached_skeleton() {
         let cache = ScheduleCache::new();
-        let (parts, _) = spec().lower_parts(8, &cache, ChainKind::Ready).unwrap();
-        // one generator run total: every bucket is the same Arc
-        assert!(Arc::ptr_eq(&parts[1].1, &parts[2].1));
+        let lowered = spec().lower(8, &cache, ChainKind::Ready).unwrap();
+        // one generator run total: every bucket is the same Arc (1 MiB
+        // splits evenly into 4 buckets, so the remainder bucket matches)
+        assert!(Arc::ptr_eq(&lowered.parts[1].1, &lowered.parts[2].1));
+        assert!(Arc::ptr_eq(&lowered.parts[1].1, &lowered.parts[4].1));
         let stats = cache.stats();
         assert_eq!(stats.misses, 1, "{stats:?}");
         assert_eq!(stats.skeletons, 1, "{stats:?}");
+    }
+
+    #[test]
+    fn bucket_split_last_bucket_absorbs_remainder() {
+        // 10 elements over 3 buckets: 3 + 3 + 4
+        assert_eq!(bucket_split(10, 3).unwrap(), (3, 4));
+        // even split: remainder bucket equals the base
+        assert_eq!(bucket_split(12, 4).unwrap(), (3, 3));
+        // one bucket takes everything
+        assert_eq!(bucket_split(7, 1).unwrap(), (7, 7));
+        // buckets == elements: all singletons
+        assert_eq!(bucket_split(5, 5).unwrap(), (1, 1));
+        // sum conservation over a small grid
+        for elems in 1..40usize {
+            for buckets in 1..=elems {
+                let (base, last) = bucket_split(elems, buckets).unwrap();
+                assert_eq!(base * (buckets - 1) + last, elems, "{elems}/{buckets}");
+                assert!(last >= base, "last must absorb, never shrink");
+            }
+        }
+        // typed errors instead of silent empty buckets
+        assert_eq!(
+            bucket_split(3, 4),
+            Err(WorkloadError::BucketsExceedCount { buckets: 4, elems: 3 })
+        );
+        assert!(matches!(
+            bucket_split(3, 0),
+            Err(WorkloadError::ZeroField { field: "buckets", .. })
+        ));
+    }
+
+    #[test]
+    fn dnn_remainder_bucket_gets_its_own_size() {
+        // 13 elements' worth of gradients over 3 buckets at p = 2:
+        // base 4 (already a p-multiple), last 5 → rounded 6 — the
+        // remainder bucket gets its own schedule, rescaled from the same
+        // cached skeleton as the base buckets
+        let cache = ScheduleCache::new();
+        let w = WorkloadSpec::dnn_step("r", DnnStepSpec::new(13 * 4, 3, 1e-3));
+        let lowered = w.lower(2, &cache, ChainKind::Ready).unwrap();
+        assert!(Arc::ptr_eq(&lowered.parts[1].1, &lowered.parts[2].1));
+        assert_eq!(lowered.parts[1].1.count, 4);
+        assert_eq!(lowered.parts[3].1.count, 6);
+        assert!(!Arc::ptr_eq(&lowered.parts[1].1, &lowered.parts[3].1));
+        let stats = cache.stats();
+        assert_eq!(stats.skeletons, 1, "both sizes rescale one skeleton: {stats:?}");
+        assert_eq!(stats.misses, 2, "{stats:?}");
+        // buckets > elements is typed
+        let bad = WorkloadSpec::dnn_step("b", DnnStepSpec::new(8, 3, 1e-3)); // 2 elems
+        assert!(matches!(
+            bad.lower(2, &cache, ChainKind::Ready),
+            Err(WorkloadError::BucketsExceedCount { buckets: 3, elems: 2 })
+        ));
+    }
+
+    #[test]
+    fn pipeline_lowers_to_valid_1f1b_graph() {
+        let w = WorkloadSpec::pipeline_step("pp", PipelineStepSpec::new(1 << 20, 6));
+        let cache = ScheduleCache::new();
+        let lowered = w.lower(4, &cache, ChainKind::Ready).unwrap();
+        assert_eq!(lowered.parts.len(), 1);
+        let g = &lowered.parts[0].1;
+        assert_eq!(g.p(), 4);
+        assert_eq!(g.validate(), Ok(()));
+        assert_eq!(g.phase_count(), 3); // warmup / steady / cooldown
+        // every stage runs all 12 calcs (6 fwd + 6 bwd)
+        for r in 0..4 {
+            let calcs =
+                g.ops(r).iter().filter(|k| matches!(k, OpKind::Calc { .. })).count();
+            assert_eq!(calcs, 12, "stage {r}");
+        }
+        // interior stages move 2 recvs + 2 sends per microbatch
+        let sends1 = g.ops(1).iter().filter(|k| matches!(k, OpKind::Send { .. })).count();
+        assert_eq!(sends1, 12);
+        // baseline: 6 serial microbatch phases sharing one Arc
+        let base = w.lower_baseline(4, &cache).unwrap();
+        assert_eq!(base.parts.len(), 6);
+        assert!(Arc::ptr_eq(&base.parts[0].1, &base.parts[5].1));
+        assert!(matches!(base.policy, ChainPolicy::Serial));
+    }
+
+    #[test]
+    fn moe_lowers_to_router_dispatch_experts_combine() {
+        let w = WorkloadSpec::moe_step("moe", MoeStepSpec::new(8 << 20));
+        let cache = ScheduleCache::new();
+        let lowered = w.lower(8, &cache, ChainKind::Ready).unwrap();
+        let names: Vec<&str> = lowered.parts.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["router", "dispatch", "experts", "combine"]);
+        // dispatch and combine share one alltoall schedule
+        assert!(Arc::ptr_eq(&lowered.parts[1].1, &lowered.parts[3].1));
+        assert!(matches!(&lowered.policy, ChainPolicy::Links(links) if links.len() == 3));
+        let refs: Vec<(&str, &Goal)> =
+            lowered.parts.iter().map(|(n, g)| (n.as_str(), &**g)).collect();
+        let c = compose_placed(&refs, &lowered.policy, &lowered.placement).unwrap();
+        assert_eq!(c.validate(), Ok(()));
+        assert_eq!(c.phase_count(), 4);
+    }
+
+    #[test]
+    fn interference_places_jobs_disjointly() {
+        let jobs = vec![
+            InterferenceJob {
+                ranks: 4,
+                chain: None,
+                workload: WorkloadSpec::dnn_step("train", DnnStepSpec::new(4 << 20, 2, 2e-3)),
+            },
+            InterferenceJob {
+                ranks: 4,
+                chain: None,
+                workload: WorkloadSpec::moe_step("neighbor", MoeStepSpec::new(4 << 20)),
+            },
+        ];
+        let w = WorkloadSpec::interference("pair", jobs);
+        let cache = ScheduleCache::new();
+        let lowered = w.lower(8, &cache, ChainKind::Ready).unwrap();
+        assert_eq!(lowered.jobs.len(), 2);
+        assert_eq!((lowered.jobs[0].offset, lowered.jobs[0].ranks), (0, 4));
+        assert_eq!((lowered.jobs[1].offset, lowered.jobs[1].ranks), (4, 4));
+        assert!(matches!(lowered.policy, ChainPolicy::Concurrent));
+        assert!(matches!(lowered.placement, Placement::Disjoint { ref offsets, union_p: 8 }
+            if offsets == &vec![0, 4]));
+        let refs: Vec<(&str, &Goal)> =
+            lowered.parts.iter().map(|(n, g)| (n.as_str(), &**g)).collect();
+        let c = compose_placed(&refs, &lowered.policy, &lowered.placement).unwrap();
+        assert_eq!(c.p(), 8);
+        assert_eq!(c.validate(), Ok(()));
+        // flattened per-job phase names carry the job prefix
+        let pt = c.phases.as_ref().unwrap();
+        assert!(pt.names.iter().any(|n| n == "train:compute"), "{:?}", pt.names);
+        assert!(pt.names.iter().any(|n| n == "neighbor:dispatch"), "{:?}", pt.names);
+    }
+
+    #[test]
+    fn interference_validation_is_typed() {
+        let cache = ScheduleCache::new();
+        let dnn = |name: &str| WorkloadSpec::dnn_step(name, DnnStepSpec::new(1 << 20, 2, 1e-3));
+        let job = |ranks, name: &str| InterferenceJob { ranks, chain: None, workload: dnn(name) };
+        // too many ranks
+        let w = WorkloadSpec::interference("x", vec![job(6, "a"), job(6, "b")]);
+        assert!(matches!(
+            w.lower(8, &cache, ChainKind::Ready),
+            Err(WorkloadError::RanksExceedPlacement { needed: 12, available: 8 })
+        ));
+        // one job is not interference
+        let w = WorkloadSpec::interference("x", vec![job(2, "a")]);
+        assert!(matches!(
+            w.lower(8, &cache, ChainKind::Ready),
+            Err(WorkloadError::TooFewJobs { jobs: 1 })
+        ));
+        // nesting is rejected
+        let nested = WorkloadSpec::interference("inner", vec![job(2, "a"), job(2, "b")]);
+        let w = WorkloadSpec::interference(
+            "x",
+            vec![job(2, "c"), InterferenceJob { ranks: 2, chain: None, workload: nested }],
+        );
+        assert!(matches!(
+            w.lower(8, &cache, ChainKind::Ready),
+            Err(WorkloadError::NestedInterference)
+        ));
+        // duplicate names break per-job attribution
+        let w = WorkloadSpec::interference("x", vec![job(2, "same"), job(2, "same")]);
+        assert!(matches!(
+            w.lower(8, &cache, ChainKind::Ready),
+            Err(WorkloadError::DuplicateJobName { .. })
+        ));
+        // per-rank chaining is undefined across disjoint subsets
+        let w = WorkloadSpec::interference("x", vec![job(2, "a"), job(2, "b")]);
+        assert!(matches!(
+            w.lower(8, &cache, ChainKind::PerRank),
+            Err(WorkloadError::BadChain { chain: "per_rank", .. })
+        ));
     }
 
     #[test]
@@ -301,13 +1208,13 @@ mod tests {
         .unwrap();
         let w = WorkloadSpec::try_from(&j).unwrap();
         assert_eq!(w.name, "x");
-        let WorkloadKind::DnnStep(s) = &w.kind;
+        let WorkloadKind::DnnStep(s) = &w.kind else { panic!("wrong kind") };
         assert_eq!(s.grad_bytes, 8 << 20);
         assert_eq!(s.buckets, 2);
         assert!((s.compute_s - 1.5e-3).abs() < 1e-12);
         // round trip through the descriptor
         let again = WorkloadSpec::try_from(&w.to_json()).unwrap();
-        let WorkloadKind::DnnStep(s2) = &again.kind;
+        let WorkloadKind::DnnStep(s2) = &again.kind else { panic!("wrong kind") };
         assert_eq!(s2.grad_bytes, s.grad_bytes);
         // bad inputs are typed errors
         assert!(WorkloadSpec::try_from(&Json::parse(r#"{"scenario":"nope"}"#).unwrap()).is_err());
@@ -315,5 +1222,72 @@ mod tests {
             &Json::parse(r#"{"scenario":"dnn_step","buckets":0}"#).unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn new_scenarios_round_trip_through_json() {
+        let pp = WorkloadSpec::pipeline_step(
+            "pp",
+            PipelineStepSpec::new(2 << 20, 12).with_compute(0.5e-3, 1e-3),
+        );
+        let back = WorkloadSpec::try_from(&pp.to_json()).unwrap();
+        let WorkloadKind::PipelineStep(s) = &back.kind else { panic!("wrong kind") };
+        assert_eq!((s.act_bytes, s.microbatches), (2 << 20, 12));
+        assert!((s.fwd_s - 0.5e-3).abs() < 1e-12);
+
+        let moe = WorkloadSpec::moe_step("m", MoeStepSpec::new(8 << 20).with_algo("bruck"));
+        let back = WorkloadSpec::try_from(&moe.to_json()).unwrap();
+        let WorkloadKind::MoeStep(s) = &back.kind else { panic!("wrong kind") };
+        assert_eq!(s.dispatch_bytes, 8 << 20);
+        assert_eq!(s.algo, "bruck");
+
+        let j = Json::parse(
+            r#"{"scenario":"interference","name":"pair","jobs":[
+                {"scenario":"dnn_step","name":"a","grad_bytes":"1MiB","buckets":2,"ranks":4},
+                {"scenario":"moe_step","name":"b","dispatch_bytes":"1MiB","ranks":4,"chain":"serial"}
+            ]}"#,
+        )
+        .unwrap();
+        let w = WorkloadSpec::try_from(&j).unwrap();
+        let WorkloadKind::Interference(s) = &w.kind else { panic!("wrong kind") };
+        assert_eq!(s.jobs.len(), 2);
+        assert_eq!(s.jobs[0].ranks, 4);
+        assert_eq!(s.jobs[1].chain, Some(ChainKind::Serial));
+        // and back out
+        let back = WorkloadSpec::try_from(&w.to_json()).unwrap();
+        let WorkloadKind::Interference(s2) = &back.kind else { panic!("wrong kind") };
+        assert_eq!(s2.jobs[1].workload.name, "b");
+        // nested interference is rejected at parse time
+        let nested = r#"{"scenario":"interference","jobs":[
+            {"scenario":"interference","jobs":[]},
+            {"scenario":"dnn_step"}
+        ]}"#;
+        assert!(WorkloadSpec::try_from(&Json::parse(nested).unwrap()).is_err());
+        // single-job interference is rejected
+        let single = r#"{"scenario":"interference","jobs":[{"scenario":"dnn_step"}]}"#;
+        assert!(WorkloadSpec::try_from(&Json::parse(single).unwrap())
+            .unwrap_err()
+            .contains("at least 2"));
+    }
+
+    #[test]
+    fn one_f_one_b_order_is_complete_and_interleaved() {
+        for p in 1..=6usize {
+            for mb in 1..=8usize {
+                for stage in 0..p {
+                    let order = one_f_one_b_order(stage, p, mb);
+                    assert_eq!(order.len(), 2 * mb);
+                    let fwds: Vec<usize> =
+                        order.iter().filter(|(f, _, _)| *f).map(|(_, m, _)| *m).collect();
+                    let bwds: Vec<usize> =
+                        order.iter().filter(|(f, _, _)| !*f).map(|(_, m, _)| *m).collect();
+                    assert_eq!(fwds, (0..mb).collect::<Vec<_>>(), "stage {stage} p {p}");
+                    assert_eq!(bwds, (0..mb).collect::<Vec<_>>(), "stage {stage} p {p}");
+                    // phases are monotone (warmup <= steady <= cooldown)
+                    let phases: Vec<u32> = order.iter().map(|(_, _, ph)| *ph).collect();
+                    assert!(phases.windows(2).all(|w| w[0] <= w[1]), "{phases:?}");
+                }
+            }
+        }
     }
 }

@@ -1,19 +1,26 @@
-//! Composition invariants for the overlap composer (ISSUE 4): identity
-//! compose is wire-format invisible, `Serial` chaining conserves makespan
-//! across the collective registry grid, mismatched inputs are typed
-//! errors, and the `dnn_step` acceptance criterion — `Ready`-chained
-//! bucketed overlap strictly beats the serial replay of the same compute
-//! plus one monolithic all-reduce.
+//! Composition invariants for the overlap composer (ISSUE 4) and the
+//! scenario library (ISSUE 5): identity compose is wire-format invisible,
+//! `Serial` chaining conserves makespan across the collective registry
+//! grid, mismatched inputs are typed errors, the `dnn_step` acceptance
+//! criterion — `Ready`-chained bucketed overlap strictly beats the serial
+//! replay — plus the scenario-library properties: per-job conservation
+//! under `Disjoint` placement, typed errors on overlapping rank subsets,
+//! the 1F1B pipeline bubble fraction in (0, 1), the `moe_step` GOAL
+//! round trip, and interference slowdown ≥ 1 vs isolated replay.
 
 use pico::collectives::{self, Coll, GenParams};
-use pico::compose::{compose, compose_named, ChainPolicy};
+use pico::compose::{
+    compose, compose_named, compose_placed, ChainPolicy, Placement as PhasePlacement,
+};
 use pico::engine::{Engine, EngineConfig, OverlapSpec};
 use pico::goal::{Goal, GoalError};
 use pico::goal_text;
 use pico::orchestrator::ScheduleCache;
 use pico::sim::{simulate, SimContext};
 use pico::topology::{leonardo, AllocPolicy, Allocation, Placement, RankOrder};
-use pico::workload::{ChainKind, DnnStepSpec, WorkloadSpec};
+use pico::workload::{
+    ChainKind, DnnStepSpec, InterferenceJob, MoeStepSpec, PipelineStepSpec, WorkloadSpec,
+};
 
 fn ctx_fixture(nodes: usize, ppn: usize) -> (pico::topology::SystemProfile, Placement) {
     let prof = leonardo();
@@ -140,9 +147,10 @@ fn dnn_step_ready_overlap_beats_serial_replay() {
 fn composed_schedule_round_trips_through_goal_text() {
     let cache = ScheduleCache::new();
     let w = WorkloadSpec::dnn_step("rt", DnnStepSpec::new(1 << 20, 3, 1e-3));
-    let (parts, policy) = w.lower_parts(4, &cache, ChainKind::Ready).unwrap();
-    let refs: Vec<(&str, &Goal)> = parts.iter().map(|(n, g)| (n.as_str(), &**g)).collect();
-    let c = compose_named(&refs, &policy).unwrap();
+    let lowered = w.lower(4, &cache, ChainKind::Ready).unwrap();
+    let refs: Vec<(&str, &Goal)> =
+        lowered.parts.iter().map(|(n, g)| (n.as_str(), &**g)).collect();
+    let c = compose_named(&refs, &lowered.policy).unwrap();
     let back = goal_text::from_text(&goal_text::to_text(&c)).unwrap();
     assert_eq!(back, c, "sealed arena must round-trip exactly");
     let (prof, pl) = ctx_fixture(4, 1);
@@ -153,6 +161,240 @@ fn composed_schedule_round_trips_through_goal_text() {
     assert_eq!(a.per_rank_time, b.per_rank_time);
     assert_eq!(a.phase_spans, b.phase_spans);
     assert_eq!(a.phase_spans.len(), 4);
+}
+
+/// Per-job conservation under `Disjoint` placement: with ppn = 1 and
+/// consecutive rank slices the two jobs touch disjoint nodes, so the
+/// union simulation must reproduce each job's isolated replay exactly —
+/// the composition machinery may not perturb either job — and the union
+/// wire volume is the sum of the jobs'.
+#[test]
+fn disjoint_placement_conserves_per_job() {
+    let cache = ScheduleCache::new();
+    let jobs = vec![
+        InterferenceJob {
+            ranks: 4,
+            chain: None,
+            workload: WorkloadSpec::dnn_step("train", DnnStepSpec::new(16 << 20, 2, 2e-3)),
+        },
+        InterferenceJob {
+            ranks: 4,
+            chain: None,
+            workload: WorkloadSpec::moe_step("neighbor", MoeStepSpec::new(8 << 20)),
+        },
+    ];
+    let w = WorkloadSpec::interference("pair", jobs);
+    let lowered = w.lower(8, &cache, ChainKind::Ready).unwrap();
+    let refs: Vec<(&str, &Goal)> =
+        lowered.parts.iter().map(|(n, g)| (n.as_str(), &**g)).collect();
+    let union = compose_placed(&refs, &lowered.policy, &lowered.placement).unwrap();
+    assert_eq!(union.p(), 8);
+    assert_eq!(union.validate(), Ok(()));
+    // wire volume is conserved per job
+    let job_wire: usize = lowered.parts.iter().map(|(_, g)| g.total_wire_bytes()).sum();
+    assert_eq!(union.total_wire_bytes(), job_wire);
+
+    let (prof, pl) = ctx_fixture(8, 1);
+    let ctx = SimContext::new(&prof, &pl);
+    let rep = simulate(&union, &ctx);
+    for slot in &lowered.jobs {
+        // isolated replay: the job alone in the same union rank space
+        let (pname, g) = lowered
+            .parts
+            .iter()
+            .find(|(n, _)| *n == slot.name)
+            .expect("one part per job");
+        let padded = compose_placed(
+            &[(pname.as_str(), &**g)],
+            &ChainPolicy::Concurrent,
+            &PhasePlacement::Disjoint { offsets: vec![slot.offset], union_p: 8 },
+        )
+        .unwrap();
+        let isolated = simulate(&padded, &ctx).total_time;
+        // the job's spans in the union timeline
+        let prefix = format!("{}:", slot.name);
+        let finish = rep
+            .phase_spans
+            .iter()
+            .filter(|s| s.name == slot.name || s.name.starts_with(&prefix))
+            .map(|s| s.finish)
+            .fold(0.0f64, f64::max);
+        let tol = 1e-9 * isolated.max(1e-30);
+        assert!(
+            (finish - isolated).abs() <= tol,
+            "job {}: union finish {finish} vs isolated {isolated} (disjoint nodes must not interfere)",
+            slot.name
+        );
+    }
+}
+
+/// Overlapping rank subsets are a typed `GoalError`, not a silent
+/// mis-placement — both at the composer and through the workload layer.
+#[test]
+fn overlapping_disjoint_rank_subsets_are_a_typed_error() {
+    let a = collectives::generate(Coll::Allreduce, "ring", &GenParams::new(4, 16)).unwrap();
+    let b = collectives::generate(Coll::Allreduce, "ring", &GenParams::new(4, 16)).unwrap();
+    match compose_placed(
+        &[("a", &a), ("b", &b)],
+        &ChainPolicy::Concurrent,
+        &PhasePlacement::Disjoint { offsets: vec![0, 2], union_p: 8 },
+    ) {
+        Err(GoalError::DisjointRankOverlap { phase: 0, other: 1 }) => {}
+        other => panic!("expected DisjointRankOverlap, got {other:?}"),
+    }
+    // a slice past the union rank space is typed too
+    assert!(matches!(
+        compose_placed(
+            &[("a", &a), ("b", &b)],
+            &ChainPolicy::Concurrent,
+            &PhasePlacement::Disjoint { offsets: vec![0, 6], union_p: 8 },
+        ),
+        Err(GoalError::DisjointOutOfRange { phase: 1, .. })
+    ));
+    // and the workload layer rejects over-subscribed placements
+    let jobs = vec![
+        InterferenceJob {
+            ranks: 6,
+            chain: None,
+            workload: WorkloadSpec::dnn_step("a", DnnStepSpec::new(1 << 20, 2, 1e-3)),
+        },
+        InterferenceJob {
+            ranks: 6,
+            chain: None,
+            workload: WorkloadSpec::dnn_step("b", DnnStepSpec::new(1 << 20, 2, 1e-3)),
+        },
+    ];
+    let w = WorkloadSpec::interference("over", jobs);
+    let cache = ScheduleCache::new();
+    assert!(w.lower(8, &cache, ChainKind::Ready).is_err());
+}
+
+/// The 1F1B pipeline: a real bubble fraction strictly inside (0, 1), and
+/// the interleaved schedule strictly beats the one-microbatch-at-a-time
+/// serial replay.
+#[test]
+fn pipeline_bubble_fraction_in_unit_interval() {
+    let engine = Engine::new(EngineConfig::for_system("leonardo"));
+    let w = WorkloadSpec::pipeline_step(
+        "pp",
+        PipelineStepSpec::new(4 << 20, 8).with_compute(1e-3, 2e-3),
+    );
+    let rep = engine.overlap(&OverlapSpec::workload(w).with_nodes(4)).unwrap();
+    let bubble = rep.bubble.expect("pipeline runs report the bubble fraction");
+    assert!(
+        bubble > 0.0 && bubble < 1.0,
+        "bubble fraction must be in (0, 1), got {bubble}"
+    );
+    // per-stage compute is exactly microbatches × (fwd + bwd)
+    assert!((rep.metrics.compute_s - 8.0 * 3e-3).abs() < 1e-12);
+    // 1F1B strictly beats the non-pipelined replay
+    assert!(
+        rep.sim.total_time < rep.metrics.serial_s,
+        "1F1B {} must beat serial replay {}",
+        rep.sim.total_time,
+        rep.metrics.serial_s
+    );
+    // warmup / steady / cooldown spans are attributed
+    let names: Vec<&str> = rep.sim.phase_spans.iter().map(|s| s.name.as_str()).collect();
+    assert!(names.contains(&"pipeline:warmup"), "{names:?}");
+    assert!(names.contains(&"pipeline:steady"), "{names:?}");
+    assert!(names.contains(&"pipeline:cooldown"), "{names:?}");
+    assert!(rep.render().contains("pipeline bubble"));
+}
+
+/// A composed `moe_step` (router → dispatch → experts → combine under a
+/// mixed Links policy) survives the GOAL-text round trip bit-for-bit and
+/// simulates identically after re-import.
+#[test]
+fn moe_step_goal_round_trip() {
+    let cache = ScheduleCache::new();
+    let w = WorkloadSpec::moe_step("moe", MoeStepSpec::new(4 << 20));
+    let lowered = w.lower(4, &cache, ChainKind::Ready).unwrap();
+    let refs: Vec<(&str, &Goal)> =
+        lowered.parts.iter().map(|(n, g)| (n.as_str(), &**g)).collect();
+    let c = compose_placed(&refs, &lowered.policy, &lowered.placement).unwrap();
+    assert_eq!(c.phase_count(), 4);
+    let back = goal_text::from_text(&goal_text::to_text(&c)).unwrap();
+    assert_eq!(back, c, "sealed arena must round-trip exactly");
+    let (prof, pl) = ctx_fixture(4, 1);
+    let ctx = SimContext::new(&prof, &pl);
+    let a = simulate(&c, &ctx);
+    let b = simulate(&back, &ctx);
+    assert_eq!(a.total_time, b.total_time);
+    assert_eq!(a.phase_spans, b.phase_spans);
+    // dispatch cannot start before the router Calc retires
+    let router = a.phase_spans.iter().find(|s| s.name == "router").unwrap();
+    let dispatch = a.phase_spans.iter().find(|s| s.name == "dispatch").unwrap();
+    assert!(dispatch.start >= router.finish - 1e-15, "{dispatch:?} vs {router:?}");
+}
+
+/// A rank-remapped interference composition survives the GOAL-text round
+/// trip: @phase markers, shifted peers and idle ranks all serialize.
+#[test]
+fn interference_goal_round_trip() {
+    let cache = ScheduleCache::new();
+    let jobs = vec![
+        InterferenceJob {
+            ranks: 2,
+            chain: None,
+            workload: WorkloadSpec::dnn_step("a", DnnStepSpec::new(1 << 20, 2, 1e-3)),
+        },
+        InterferenceJob {
+            ranks: 2,
+            chain: None,
+            workload: WorkloadSpec::dnn_step("b", DnnStepSpec::new(1 << 20, 2, 1e-3)),
+        },
+    ];
+    let w = WorkloadSpec::interference("pair", jobs);
+    // leave union rank 4 idle on purpose: idle ranks must serialize too
+    let lowered = w.lower(5, &cache, ChainKind::Ready).unwrap();
+    let refs: Vec<(&str, &Goal)> =
+        lowered.parts.iter().map(|(n, g)| (n.as_str(), &**g)).collect();
+    let c = compose_placed(&refs, &lowered.policy, &lowered.placement).unwrap();
+    assert_eq!(c.p(), 5);
+    assert!(c.ops(4).is_empty());
+    let back = goal_text::from_text(&goal_text::to_text(&c)).unwrap();
+    assert_eq!(back, c, "rank-remapped arena must round-trip exactly");
+}
+
+/// The interference acceptance criterion: every co-located job's slowdown
+/// versus its isolated replay is ≥ 1 — shared resource pools can only
+/// delay, never accelerate.
+#[test]
+fn interference_slowdown_at_least_one_vs_isolated() {
+    let engine = Engine::new(EngineConfig::for_system("leonardo"));
+    // ppn = 2 with a 3/5 rank split: the jobs share a node, so their
+    // traffic contends on its NIC pool
+    let jobs = vec![
+        InterferenceJob {
+            ranks: 3,
+            chain: None,
+            workload: WorkloadSpec::dnn_step("train", DnnStepSpec::new(32 << 20, 2, 2e-3)),
+        },
+        InterferenceJob {
+            ranks: 5,
+            chain: None,
+            workload: WorkloadSpec::dnn_step("neighbor", DnnStepSpec::new(32 << 20, 2, 2e-3)),
+        },
+    ];
+    let w = WorkloadSpec::interference("noisy", jobs);
+    let rep = engine
+        .overlap(&OverlapSpec::workload(w).with_nodes(4).with_ppn(2))
+        .unwrap();
+    assert_eq!(rep.jobs.len(), 2);
+    for job in &rep.jobs {
+        assert!(job.isolated_s > 0.0, "{job:?}");
+        assert!(
+            job.slowdown >= 1.0 - 1e-9,
+            "job {} sped up under interference: {:?}",
+            job.name,
+            job
+        );
+    }
+    assert!(rep.render().contains("slowdown"));
+    // the union makespan covers the slowest job
+    let max_finish = rep.jobs.iter().map(|j| j.finish).fold(0.0f64, f64::max);
+    assert!((rep.sim.total_time - max_finish).abs() <= 1e-9 * max_finish.max(1e-30));
 }
 
 /// Bucket skeleton reuse is observable through the engine: one skeleton

@@ -109,4 +109,15 @@ grep -q "simulated latency" "$TMP/ov_import.txt"
 grep -q "compute" "$TMP/ov_import.txt"   # phase spans survive the trip
 echo "OK: overlap composer conserves serially, overlaps with Ready chaining"
 
+echo "== smoke: workload scenario library (every examples/*.json runs)"
+for f in examples/*.json; do
+    "$BIN" overlap --spec "$f" > "$TMP/example_$(basename "$f" .json).txt"
+done
+# interference reports per-job slowdown vs isolated replay
+grep -q "slowdown" "$TMP/example_interference.txt"
+# pipeline reports the bubble fraction and beats the serial replay
+grep -q "pipeline bubble" "$TMP/example_pipeline_step.txt"
+grep -q "faster-than-serial: yes" "$TMP/example_pipeline_step.txt"
+echo "OK: pipeline_step, moe_step and interference scenarios run end-to-end"
+
 echo "verify: all checks passed"
