@@ -108,6 +108,92 @@ pub fn render_cell_lines(cells: &[RatioCell]) -> String {
     out
 }
 
+/// One (nodes, bytes) point of the host-vs-in-network comparison: the
+/// `innet`-requested run against the best host-algorithm run at the same
+/// point (DESIGN.md §In-Network; the frontier `pico sweep` renders).
+#[derive(Debug, Clone)]
+pub struct CrossoverCell {
+    pub nodes: usize,
+    pub bytes: usize,
+    /// What the innet request actually ran (a host name when it fell back).
+    pub switch_algo: String,
+    pub switch_s: f64,
+    pub host_algo: String,
+    pub host_s: f64,
+    /// True when the switch could not serve the request and the innet run
+    /// degraded to a host algorithm.
+    pub fell_back: bool,
+}
+
+impl CrossoverCell {
+    /// The switch wins only when strictly faster — ties (including the
+    /// fallback case, where both sides run host code) go to the host.
+    pub fn winner(&self) -> &'static str {
+        if self.switch_s < self.host_s {
+            "switch"
+        } else {
+            "host"
+        }
+    }
+}
+
+/// Pair each (nodes, bytes) point's `innet`-requested outcome with the
+/// best host-algorithm outcome at the same point.  Family membership is by
+/// *request*: a fallen-back innet run stays in the switch family (it is
+/// what asking for in-network gets you there), it just cannot win.
+pub fn crossover_table(outcomes: &[PointOutcome]) -> Vec<CrossoverCell> {
+    let mut by_point: BTreeMap<(usize, usize), (Option<&PointOutcome>, Vec<&PointOutcome>)> =
+        BTreeMap::new();
+    for o in outcomes {
+        let key = (o.point.nodes, o.point.bytes);
+        let slot = by_point.entry(key).or_default();
+        if o.point.algorithm.as_deref() == Some("innet") {
+            slot.0 = Some(o);
+        } else {
+            slot.1.push(o);
+        }
+    }
+    let mut cells = Vec::new();
+    for ((nodes, bytes), (switch, hosts)) in by_point {
+        let Some(sw) = switch else { continue };
+        let Some(host) = hosts.iter().min_by(|a, b| a.median_s.total_cmp(&b.median_s)) else {
+            continue;
+        };
+        cells.push(CrossoverCell {
+            nodes,
+            bytes,
+            switch_algo: sw.effective_algorithm.clone(),
+            switch_s: sw.median_s,
+            host_algo: host.effective_algorithm.clone(),
+            host_s: host.median_s,
+            fell_back: sw.fallback.is_some(),
+        });
+    }
+    cells
+}
+
+/// The per-point winner table (`pico sweep` host-vs-innet runs): one
+/// greppable `winner=switch` / `winner=host` line per (nodes, bytes).
+pub fn render_crossover(cells: &[CrossoverCell]) -> String {
+    let mut out = String::from(
+        "host vs in-network crossover (winner=switch: aggregation offload is strictly faster)\n",
+    );
+    for c in cells {
+        out.push_str(&format!(
+            "  nodes={:<4} size={:<8} switch={:<20} ({}) host={:<20} ({})  winner={}{}\n",
+            c.nodes,
+            fmt_size(c.bytes),
+            c.switch_algo,
+            fmt_time(c.switch_s),
+            c.host_algo,
+            fmt_time(c.host_s),
+            c.winner(),
+            if c.fell_back { "  [fellback]" } else { "" },
+        ));
+    }
+    out
+}
+
 /// One-line component attribution, absolute + percentage shares — shared
 /// by the probe and import reports so the two stay format-identical.
 pub fn render_components(c: &crate::sim::Components) -> String {
@@ -371,6 +457,7 @@ mod tests {
             },
             effective_algorithm: eff.to_string(),
             effective_proto: Proto::Simple,
+            fallback: None,
             measurement: Measurement {
                 times: vec![vec![s]],
                 components: Components::default(),
@@ -492,6 +579,43 @@ mod tests {
         // a name that is a prefix of another must not capture its spans
         let tricky = job_attribution(&spans, &[("neigh".to_string(), 1.0)]);
         assert_eq!((tricky[0].start, tricky[0].finish), (0.0, 0.0));
+    }
+
+    #[test]
+    fn crossover_pairs_and_picks_winners() {
+        let outs = vec![
+            // small bytes: switch strictly faster
+            outcome(4, 1024, Some("innet"), "innet", 2.0),
+            outcome(4, 1024, Some("ring"), "ring", 5.0),
+            outcome(4, 1024, Some("tree"), "tree", 4.0),
+            // large bytes: best host wins
+            outcome(4, 1 << 20, Some("innet"), "innet", 9.0),
+            outcome(4, 1 << 20, Some("ring"), "ring", 6.0),
+        ];
+        let cells = crossover_table(&outs);
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].winner(), "switch");
+        assert_eq!(cells[0].host_algo, "tree", "best host, not first host");
+        assert_eq!(cells[1].winner(), "host");
+        let txt = render_crossover(&cells);
+        assert!(txt.contains("winner=switch"));
+        assert!(txt.contains("winner=host"));
+    }
+
+    #[test]
+    fn crossover_ties_go_to_host() {
+        // the fallback case: innet degraded to ring, both sides identical
+        let mut sw = outcome(4, 1 << 22, Some("innet"), "ring", 6.0);
+        sw.fallback = Some(crate::collectives::innet::Fallback {
+            requested: "innet".into(),
+            effective: "ring".into(),
+            reason: crate::collectives::innet::FallbackReason::PayloadTooLarge,
+        });
+        let outs = vec![sw, outcome(4, 1 << 22, Some("ring"), "ring", 6.0)];
+        let cells = crossover_table(&outs);
+        assert_eq!(cells[0].winner(), "host");
+        assert!(cells[0].fell_back);
+        assert!(render_crossover(&cells).contains("[fellback]"));
     }
 
     #[test]

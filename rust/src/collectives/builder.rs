@@ -84,6 +84,7 @@ impl GoalBuilder {
                 see(dst);
                 see(src);
             }
+            OpKind::SwitchAgg { seg, .. } => see(seg),
             OpKind::Calc { .. } => {}
         }
     }
@@ -172,6 +173,21 @@ impl GoalBuilder {
 
     pub fn calc(&mut self, rank: usize, seconds: f64) -> OpId {
         self.push(rank, OpKind::Calc { seconds })
+    }
+
+    /// One rank's leg of an in-network switch-aggregation wave (all legs
+    /// sharing `tag` form the wave; see [`OpKind::SwitchAgg`]).  A
+    /// contributor pushes `seg` up to the switch; every leg — contributing
+    /// or not — receives the reduced result back into its `seg`.
+    pub fn switch_agg(
+        &mut self,
+        rank: usize,
+        seg: Seg,
+        op: ReduceOp,
+        tag: u32,
+        contribute: bool,
+    ) -> OpId {
+        self.push(rank, OpKind::SwitchAgg { seg, op, tag, contribute })
     }
 
     /// A back-to-back chain of `steps` equal `Calc` ops — the workload

@@ -1,0 +1,250 @@
+//! In-network (switch-offload) reference algorithms — SHARP/SwitchML-style
+//! aggregation where the fabric switch, not the hosts, performs the
+//! reduction and fan-out (ROADMAP item 2; DESIGN.md §In-Network).
+//!
+//! Each rank emits a single [`OpKind::SwitchAgg`] *wave leg*: contributors
+//! push their buffer one hop up to the switch, the switch reduces the
+//! flows port-by-port, and every leg — contributing or not — receives the
+//! result back.  Host-side cost is therefore O(1) in `p`: one up + one
+//! down transfer regardless of rank count, which is why in-network wins at
+//! small payloads / large p while host algorithms (ring, rabenseifner) win
+//! once the payload is large enough that the switch's aggregation
+//! bandwidth ([`crate::netmodel::NetParams::switch_agg_bw`]) becomes the
+//! bottleneck.  `pico sweep` renders that crossover frontier.
+//!
+//! Switches without aggregation support, or payloads past the aggregation
+//! engine's buffer ([`SwitchCaps::max_reduction_bytes`]), degrade to a host
+//! algorithm via a typed [`Fallback`] record — never silently (see
+//! [`switch_fallback`]).
+//!
+//! [`OpKind::SwitchAgg`]: crate::goal::OpKind::SwitchAgg
+
+use crate::goal::Seg;
+use crate::topology::SwitchCaps;
+
+use super::builder::GoalBuilder;
+use super::{Coll, GenParams, GenResult};
+
+/// Tag of the single aggregation wave each generator emits.  Schedules
+/// composed from several collectives get disjoint waves via the composer's
+/// tag remap (`compose.rs`), so a fixed tag here is safe.
+const WAVE_TAG: u32 = 0;
+
+/// Allreduce: every rank stages its contribution in Output, then joins one
+/// aggregation wave as a contributor.  The switch reduces all p flows and
+/// multicasts the result back into every rank's Output.
+pub fn allreduce(params: &GenParams) -> GenResult {
+    let (p, n) = (params.p, params.count);
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(params.instrument);
+    for rank in 0..p {
+        if params.instrument {
+            b.tag_begin(rank, "init:mem-move");
+        }
+        b.copy(rank, Seg::output(0, n), Seg::input(0, n));
+        if params.instrument {
+            b.tag_end(rank, "init:mem-move");
+        }
+        if params.instrument {
+            b.tag_begin(rank, "phase:switch-agg");
+        }
+        b.switch_agg(rank, Seg::output(0, n), params.op, WAVE_TAG, true);
+        if params.instrument {
+            b.tag_end(rank, "phase:switch-agg");
+        }
+    }
+    Ok(b.finish()?)
+}
+
+/// Reduce: same wave as allreduce, but only the root stages into Output —
+/// the other ranks push from (and receive the result into) scratch, so
+/// their Output stays untouched per the reduce buffer contract.
+pub fn reduce(params: &GenParams) -> GenResult {
+    let (p, n, root) = (params.p, params.count, params.root);
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(params.instrument);
+    for rank in 0..p {
+        let seg = if rank == root { Seg::output(0, n) } else { Seg::tmp(0, n) };
+        if params.instrument {
+            b.tag_begin(rank, "init:mem-move");
+        }
+        b.copy(rank, seg, Seg::input(0, n));
+        if params.instrument {
+            b.tag_end(rank, "init:mem-move");
+        }
+        if params.instrument {
+            b.tag_begin(rank, "phase:switch-agg");
+        }
+        b.switch_agg(rank, seg, params.op, WAVE_TAG, true);
+        if params.instrument {
+            b.tag_end(rank, "phase:switch-agg");
+        }
+    }
+    Ok(b.finish()?)
+}
+
+/// Bcast: a single-contributor wave is a switch multicast — the root
+/// pushes once and the switch fans the payload out to every leg's Output.
+pub fn bcast(params: &GenParams) -> GenResult {
+    let (p, n, root) = (params.p, params.count, params.root);
+    let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(params.instrument);
+    for rank in 0..p {
+        if params.instrument {
+            b.tag_begin(rank, "phase:switch-agg");
+        }
+        if rank == root {
+            b.copy(rank, Seg::output(0, n), Seg::input(0, n));
+            b.switch_agg(rank, Seg::output(0, n), params.op, WAVE_TAG, true);
+        } else {
+            b.switch_agg(rank, Seg::output(0, n), params.op, WAVE_TAG, false);
+        }
+        if params.instrument {
+            b.tag_end(rank, "phase:switch-agg");
+        }
+    }
+    Ok(b.finish()?)
+}
+
+/// Why an in-network request degraded to a host algorithm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FallbackReason {
+    /// The profile's switch has no aggregation engine at all.
+    NoAggregation,
+    /// The payload exceeds the aggregation engine's buffer
+    /// ([`SwitchCaps::max_reduction_bytes`]).
+    PayloadTooLarge,
+}
+
+impl FallbackReason {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FallbackReason::NoAggregation => "no_aggregation",
+            FallbackReason::PayloadTooLarge => "payload_too_large",
+        }
+    }
+}
+
+/// A recorded algorithm substitution: the run asked for `requested` but the
+/// switch couldn't serve it, so `effective` ran instead.  Carried on the
+/// campaign outcome so degradation is observable, not silent.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Fallback {
+    pub requested: String,
+    pub effective: String,
+    pub reason: FallbackReason,
+}
+
+/// Host algorithm an in-network request degrades to (count-scalable and
+/// any-p, so the substitution never narrows the reachable test points).
+pub fn host_equivalent(coll: Coll) -> Option<&'static str> {
+    match coll {
+        Coll::Allreduce => Some("ring"),
+        Coll::Reduce => Some("binomial"),
+        Coll::Bcast => Some("binomial_halving"),
+        _ => None,
+    }
+}
+
+/// Decide whether an `innet` request at `bytes` payload must degrade on a
+/// switch with `caps`.  Returns `None` when the switch can serve it (or
+/// the algorithm isn't in-network at all); otherwise the typed record the
+/// orchestrator stores on the point outcome.  Pure so it is unit-testable
+/// without running a campaign.
+pub fn switch_fallback(
+    caps: &SwitchCaps,
+    coll: Coll,
+    algo: &str,
+    bytes: usize,
+) -> Option<Fallback> {
+    if algo != "innet" {
+        return None;
+    }
+    let effective = host_equivalent(coll)?;
+    let reason = if !caps.aggregate {
+        FallbackReason::NoAggregation
+    } else if bytes > caps.max_reduction_bytes {
+        FallbackReason::PayloadTooLarge
+    } else {
+        return None;
+    };
+    Some(Fallback {
+        requested: algo.to_string(),
+        effective: effective.to_string(),
+        reason,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::goal::OpKind;
+
+    #[test]
+    fn allreduce_shape_and_wire_bytes() {
+        for p in [1, 2, 3, 8, 17] {
+            let g = allreduce(&GenParams::new(p, 16)).unwrap();
+            assert!(g.validate().is_ok(), "p={p}");
+            // one copy + one wave leg per rank
+            assert_eq!(g.total_ops(), 2 * p);
+            // every rank contributes its full buffer once
+            assert_eq!(g.total_wire_bytes(), p * 16 * 4);
+        }
+    }
+
+    #[test]
+    fn reduce_uses_scratch_off_root() {
+        let g = reduce(&GenParams::new(4, 8).with_root(2)).unwrap();
+        assert!(g.validate().is_ok());
+        assert_eq!(g.total_wire_bytes(), 4 * 8 * 4);
+        assert_eq!(g.tmp_count, 8);
+        for (rank, want_tmp) in [(0, true), (2, false)] {
+            let pushes_tmp = g.ops(rank).iter().any(|k| {
+                matches!(k, OpKind::SwitchAgg { seg, .. } if (seg.buf == crate::goal::Buf::Tmp) == want_tmp)
+            });
+            assert!(pushes_tmp, "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn bcast_is_single_contributor_multicast() {
+        let g = bcast(&GenParams::new(8, 32)).unwrap();
+        assert!(g.validate().is_ok());
+        // only the root's push is wire volume
+        assert_eq!(g.total_wire_bytes(), 32 * 4);
+        let contribs = (0..8)
+            .flat_map(|r| g.ops(r))
+            .filter(|k| matches!(k, OpKind::SwitchAgg { contribute: true, .. }))
+            .count();
+        assert_eq!(contribs, 1);
+    }
+
+    #[test]
+    fn fallback_decisions_are_typed() {
+        let sharp = SwitchCaps::sharp(1 << 20, 64);
+        let dumb = SwitchCaps::none();
+        // served: no record
+        assert_eq!(switch_fallback(&sharp, Coll::Allreduce, "innet", 4096), None);
+        // host algorithms never produce a record
+        assert_eq!(switch_fallback(&sharp, Coll::Allreduce, "ring", 1 << 30), None);
+        // payload past the engine buffer
+        let fb = switch_fallback(&sharp, Coll::Allreduce, "innet", (1 << 20) + 1).unwrap();
+        assert_eq!(fb.reason, FallbackReason::PayloadTooLarge);
+        assert_eq!(fb.effective, "ring");
+        assert_eq!(fb.requested, "innet");
+        // switch without an aggregation engine
+        let fb = switch_fallback(&dumb, Coll::Bcast, "innet", 8).unwrap();
+        assert_eq!(fb.reason, FallbackReason::NoAggregation);
+        assert_eq!(fb.effective, "binomial_halving");
+        assert_eq!(fb.reason.label(), "no_aggregation");
+    }
+
+    #[test]
+    fn host_equivalents_are_registered_and_scalable() {
+        for coll in [Coll::Allreduce, Coll::Reduce, Coll::Bcast] {
+            let host = host_equivalent(coll).unwrap();
+            let info = super::super::find(coll, host).unwrap();
+            assert!(info.any_p, "{coll:?} fallback must cover any p");
+            for p in [2, 3, 17] {
+                assert!(super::super::count_scalable(coll, host, p));
+            }
+        }
+    }
+}

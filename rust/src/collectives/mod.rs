@@ -32,6 +32,7 @@ pub mod alltoall;
 pub mod barrier;
 pub mod bcast;
 pub mod builder;
+pub mod innet;
 pub mod reduce;
 pub mod reduce_scatter;
 
@@ -170,6 +171,7 @@ pub fn registry() -> &'static [AlgoInfo] {
         AlgoInfo { coll: Coll::Allreduce, name: "tree", any_p: true, origin: "binomial reduce+bcast", gen: allreduce::tree },
         AlgoInfo { coll: Coll::Allreduce, name: "tree_pipelined", any_p: true, origin: "NCCL-style segmented tree", gen: allreduce::tree_pipelined },
         AlgoInfo { coll: Coll::Allreduce, name: "segmented_ring", any_p: true, origin: "Open MPI tuned (pipelined)", gen: allreduce::segmented_ring },
+        AlgoInfo { coll: Coll::Allreduce, name: "innet", any_p: true, origin: "SHARP/SwitchML-style switch aggregation", gen: innet::allreduce },
         // ---- Bcast ----
         AlgoInfo { coll: Coll::Bcast, name: "linear", any_p: true, origin: "Open MPI basic", gen: bcast::linear },
         AlgoInfo { coll: Coll::Bcast, name: "binomial_doubling", any_p: true, origin: "Open MPI coll_base_bcast", gen: bcast::binomial_doubling },
@@ -177,10 +179,12 @@ pub fn registry() -> &'static [AlgoInfo] {
         AlgoInfo { coll: Coll::Bcast, name: "scatter_allgather", any_p: true, origin: "van de Geijn / MPICH", gen: bcast::scatter_allgather },
         AlgoInfo { coll: Coll::Bcast, name: "pipeline", any_p: true, origin: "Open MPI chain", gen: bcast::pipeline },
         AlgoInfo { coll: Coll::Bcast, name: "knomial", any_p: true, origin: "radix-k binomial", gen: bcast::knomial },
+        AlgoInfo { coll: Coll::Bcast, name: "innet", any_p: true, origin: "SHARP/SwitchML-style switch multicast", gen: innet::bcast },
         // ---- Reduce ----
         AlgoInfo { coll: Coll::Reduce, name: "linear", any_p: true, origin: "Open MPI basic", gen: reduce::linear },
         AlgoInfo { coll: Coll::Reduce, name: "binomial", any_p: true, origin: "MPICH", gen: reduce::binomial },
         AlgoInfo { coll: Coll::Reduce, name: "rabenseifner", any_p: false, origin: "MPICH reduce_scatter_gather", gen: reduce::rabenseifner },
+        AlgoInfo { coll: Coll::Reduce, name: "innet", any_p: true, origin: "SHARP/SwitchML-style switch aggregation", gen: innet::reduce },
         // ---- Allgather ----
         AlgoInfo { coll: Coll::Allgather, name: "linear", any_p: true, origin: "gather+bcast", gen: allgather::linear },
         AlgoInfo { coll: Coll::Allgather, name: "ring", any_p: true, origin: "Open MPI tuned", gen: allgather::ring },
@@ -242,14 +246,14 @@ pub fn find(coll: Coll, name: &str) -> Option<&'static AlgoInfo> {
 /// `allreduce.rs`.
 pub fn count_scalable(coll: Coll, algo: &str, p: usize) -> bool {
     match (coll, algo) {
-        (Coll::Allreduce, "linear" | "recursive_doubling" | "ring" | "tree") => true,
+        (Coll::Allreduce, "linear" | "recursive_doubling" | "ring" | "tree" | "innet") => true,
         (Coll::Allreduce, "rabenseifner") => p.is_power_of_two(),
         (
             Coll::Bcast,
             "linear" | "binomial_doubling" | "binomial_halving" | "binomial_doubling_staged"
-            | "scatter_allgather" | "knomial",
+            | "scatter_allgather" | "knomial" | "innet",
         ) => true,
-        (Coll::Reduce, "linear" | "binomial" | "rabenseifner") => true,
+        (Coll::Reduce, "linear" | "binomial" | "rabenseifner" | "innet") => true,
         (
             Coll::Allgather,
             "linear" | "ring" | "recursive_doubling" | "bruck" | "pat" | "neighbor_exchange",

@@ -317,7 +317,10 @@ fn tag_stride(parts: &[(String, &GoalGraph)]) -> u64 {
     let mut max_tag = 0u32;
     for (_, g) in parts {
         for kind in &g.kinds {
-            if let OpKind::Send { tag, .. } | OpKind::Recv { tag, .. } = kind {
+            if let OpKind::Send { tag, .. }
+            | OpKind::Recv { tag, .. }
+            | OpKind::SwitchAgg { tag, .. } = kind
+            {
                 max_tag = max_tag.max(*tag);
             }
         }
@@ -437,6 +440,11 @@ fn compose_impl(
                     }
                     OpKind::Recv { peer, seg, tag } => {
                         OpKind::Recv { peer, seg, tag: remap_tag(k, tag)? }
+                    }
+                    // switch waves match on tag too: remap keeps a phase's
+                    // waves intact while phases can never co-aggregate
+                    OpKind::SwitchAgg { seg, op, tag, contribute } => {
+                        OpKind::SwitchAgg { seg, op, tag: remap_tag(k, tag)?, contribute }
                     }
                     other => other,
                 };
@@ -622,6 +630,11 @@ fn compose_disjoint_impl(
                         seg,
                         tag: remap_tag(k, tag)?,
                     },
+                    // no peer to shift: wave membership is tag-scoped, and
+                    // the remapped tag keeps each job's waves to itself
+                    OpKind::SwitchAgg { seg, op, tag, contribute } => {
+                        OpKind::SwitchAgg { seg, op, tag: remap_tag(k, tag)?, contribute }
+                    }
                     other => other,
                 };
                 kinds.push(kind);

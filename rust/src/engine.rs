@@ -1172,13 +1172,27 @@ pub struct SweepReport {
 }
 
 impl SweepReport {
+    /// Host-vs-in-network pairs over this sweep's outcomes — non-empty
+    /// only when the sweep ran both an `innet` request and at least one
+    /// host algorithm at some point.
+    pub fn crossover_cells(&self) -> Vec<analysis::CrossoverCell> {
+        analysis::crossover_table(&self.outcomes)
+    }
+
     /// The Fig. 6 heatmap plus per-cell winner lines (what `pico sweep`
     /// prints, byte-for-byte — including the blank separator line the
-    /// pre-facade CLI emitted between the two blocks).
+    /// pre-facade CLI emitted between the two blocks).  Sweeps covering
+    /// both the host and in-network families additionally get the
+    /// per-point crossover winner table.
     pub fn render(&self) -> String {
         let mut out = analysis::render_ratio_heatmap(&self.title, &self.cells);
         out.push('\n');
         out.push_str(&analysis::render_cell_lines(&self.cells));
+        let cross = self.crossover_cells();
+        if !cross.is_empty() {
+            out.push('\n');
+            out.push_str(&analysis::render_crossover(&cross));
+        }
         out
     }
 }
@@ -1373,6 +1387,7 @@ impl OverlapReport {
             ppn: self.ppn,
             requested_algorithm: Some(self.algo.clone()),
             effective_algorithm: self.algo.clone(),
+            fallback: None,
             knobs_effective: vec![("chain".to_string(), self.chain.to_string())],
             knobs_degraded: vec![],
             measurement: Measurement::single_shot(

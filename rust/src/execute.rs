@@ -96,6 +96,16 @@ pub fn execute(goal: &Goal, inputs: Vec<Vec<f32>>, reducer: &dyn Reducer) -> Vec
     let mut mail: HashMap<(usize, usize, u32), VecDeque<Vec<f32>>> = HashMap::new();
     // receives blocked on an empty channel, FIFO per channel
     let mut parked: HashMap<(usize, usize, u32), VecDeque<usize>> = HashMap::new();
+    // switch-aggregation waves: per-tag expected membership and the legs
+    // that have become dependency-ready so far (a wave completes as a unit
+    // when its last leg arrives)
+    let mut wave_expect: HashMap<u32, usize> = HashMap::new();
+    for kind in &goal.kinds {
+        if let OpKind::SwitchAgg { tag, .. } = kind {
+            *wave_expect.entry(*tag).or_insert(0) += 1;
+        }
+    }
+    let mut wave_ready: HashMap<u32, Vec<usize>> = HashMap::new();
     let mut completed = 0usize;
 
     while let Some(Reverse(g)) = ready.pop() {
@@ -128,6 +138,48 @@ pub fn execute(goal: &Goal, inputs: Vec<Vec<f32>>, reducer: &dyn Reducer) -> Vec
                 bufs[r].seg_mut(dst).copy_from_slice(&s);
             }
             OpKind::Calc { .. } => {}
+            OpKind::SwitchAgg { op, tag, .. } => {
+                let members = wave_ready.entry(*tag).or_default();
+                members.push(g);
+                if members.len() < wave_expect[tag] {
+                    continue; // wave incomplete; dependents stay blocked
+                }
+                let mut members = wave_ready.remove(tag).unwrap();
+                members.sort_unstable();
+                // the switch reduces contributions in ascending op order
+                // (the determinism contract shared with execute_threaded)
+                let mut acc: Option<Vec<f32>> = None;
+                for &m in &members {
+                    if let OpKind::SwitchAgg { seg: ms, contribute: true, .. } = &goal.kinds[m] {
+                        let s = bufs[goal.rank_of(m)].seg(ms).to_vec();
+                        match &mut acc {
+                            None => acc = Some(s),
+                            Some(a) => reducer.reduce(*op, a, &s),
+                        }
+                    }
+                }
+                let acc = acc.expect("validated wave has a contributor");
+                for &m in &members {
+                    if let OpKind::SwitchAgg { seg: ms, .. } = &goal.kinds[m] {
+                        assert_eq!(acc.len(), ms.len, "wave length mismatch");
+                        bufs[goal.rank_of(m)].seg_mut(ms).copy_from_slice(&acc);
+                    }
+                }
+                // complete every other leg here; the loop tail handles g
+                for &m in &members {
+                    if m == g {
+                        continue;
+                    }
+                    completed += 1;
+                    for &d in goal.dependents(m) {
+                        let d = d as usize;
+                        remaining[d] -= 1;
+                        if remaining[d] == 0 {
+                            ready.push(Reverse(d));
+                        }
+                    }
+                }
+            }
         }
         completed += 1;
         for &d in goal.dependents(g) {
@@ -162,6 +214,13 @@ pub fn execute_scan(goal: &Goal, inputs: Vec<Vec<f32>>, reducer: &dyn Reducer) -
     let total: usize = goal.total_ops();
     let mut done: Vec<bool> = vec![false; total];
     let mut mail: HashMap<(usize, usize, u32), VecDeque<Vec<f32>>> = HashMap::new();
+    // per-tag wave membership, global ids ascending (arena scan order)
+    let mut wave_ops: HashMap<u32, Vec<usize>> = HashMap::new();
+    for (g, kind) in goal.kinds.iter().enumerate() {
+        if let OpKind::SwitchAgg { tag, .. } = kind {
+            wave_ops.entry(*tag).or_default().push(g);
+        }
+    }
     let mut completed = 0usize;
 
     // Dataflow scan: repeatedly execute every op whose deps are met and —
@@ -198,6 +257,41 @@ pub fn execute_scan(goal: &Goal, inputs: Vec<Vec<f32>>, reducer: &dyn Reducer) -
                         bufs[r].seg_mut(dst).copy_from_slice(&s);
                     }
                     OpKind::Calc { .. } => {}
+                    OpKind::SwitchAgg { op, tag, .. } => {
+                        // the wave fires only once every leg's deps are met
+                        let members = &wave_ops[tag];
+                        let all_ready = members
+                            .iter()
+                            .all(|&m| goal.deps(m).iter().all(|&d| done[d as usize]));
+                        if !all_ready {
+                            continue; // some leg still blocked
+                        }
+                        let mut acc: Option<Vec<f32>> = None;
+                        for &m in members {
+                            if let OpKind::SwitchAgg { seg: ms, contribute: true, .. } =
+                                &goal.kinds[m]
+                            {
+                                let s = bufs[goal.rank_of(m)].seg(ms).to_vec();
+                                match &mut acc {
+                                    None => acc = Some(s),
+                                    Some(a) => reducer.reduce(*op, a, &s),
+                                }
+                            }
+                        }
+                        let acc = acc.expect("validated wave has a contributor");
+                        for &m in members {
+                            if let OpKind::SwitchAgg { seg: ms, .. } = &goal.kinds[m] {
+                                bufs[goal.rank_of(m)].seg_mut(ms).copy_from_slice(&acc);
+                            }
+                        }
+                        // mark the other legs done here; the tail marks g
+                        for &m in members {
+                            if m != g {
+                                done[m] = true;
+                                completed += 1;
+                            }
+                        }
+                    }
                 }
                 done[g] = true;
                 completed += 1;
@@ -393,7 +487,26 @@ pub fn execute_threaded(
 
     let p = goal.p();
     assert_eq!(inputs.len(), p);
-    type Msg = (u32, Vec<f32>); // (tag, payload)
+    // tags travel widened: plain sends as `tag`, switch-wave contributions
+    // as `WAVE_TAG_BASE + tag` — disjoint spaces, so a wave can never
+    // consume a same-tag point-to-point message off the shared channel
+    const WAVE_TAG_BASE: u64 = 1 << 32;
+    type Msg = (u64, Vec<f32>); // (widened tag, payload)
+
+    // per-wave contributor ranks and member ranks, ascending global op id
+    // — the same reduction order as `execute`, hence bit-equal results
+    let mut wave_contrib: HashMap<u32, Vec<usize>> = HashMap::new();
+    let mut wave_members: HashMap<u32, Vec<usize>> = HashMap::new();
+    for (g, kind) in goal.kinds.iter().enumerate() {
+        if let OpKind::SwitchAgg { tag, contribute, .. } = kind {
+            wave_members.entry(*tag).or_default().push(goal.rank_of(g));
+            if *contribute {
+                wave_contrib.entry(*tag).or_default().push(goal.rank_of(g));
+            }
+        }
+    }
+    let wave_contrib = &wave_contrib;
+    let wave_members = &wave_members;
     let mut senders: Vec<Vec<Sender<Msg>>> = Vec::with_capacity(p);
     let mut receivers: Vec<Vec<Option<Receiver<Msg>>>> = Vec::with_capacity(p);
     // full mesh of channels: channel[src][dst]
@@ -432,12 +545,13 @@ pub fn execute_threaded(
                     match kind {
                         OpKind::Send { peer, seg, tag } => {
                             let data = bufs.seg(seg).to_vec();
-                            my_tx[*peer].send((*tag, data)).expect("peer hung up");
+                            my_tx[*peer].send((*tag as u64, data)).expect("peer hung up");
                         }
                         OpKind::Recv { peer, seg, tag } => {
+                            let want = *tag as u64;
                             // first matching stashed message, else block
                             let data = if let Some(pos) =
-                                stash[*peer].iter().position(|(t, _)| t == tag)
+                                stash[*peer].iter().position(|(t, _)| *t == want)
                             {
                                 stash[*peer].remove(pos).1
                             } else {
@@ -447,7 +561,7 @@ pub fn execute_threaded(
                                         .unwrap()
                                         .recv()
                                         .expect("peer hung up");
-                                    if msg.0 == *tag {
+                                    if msg.0 == want {
                                         break msg.1;
                                     }
                                     stash[*peer].push(msg);
@@ -465,6 +579,51 @@ pub fn execute_threaded(
                             bufs.seg_mut(dst).copy_from_slice(&s);
                         }
                         OpKind::Calc { .. } => {}
+                        OpKind::SwitchAgg { seg, op, tag, contribute } => {
+                            // contributor: push the segment "up" — i.e.
+                            // broadcast it to every wave member over the
+                            // existing mesh (each member plays its slice
+                            // of the switch)
+                            if *contribute {
+                                let data = bufs.seg(seg).to_vec();
+                                for &m in &wave_members[tag] {
+                                    my_tx[m]
+                                        .send((WAVE_TAG_BASE + *tag as u64, data.clone()))
+                                        .expect("peer hung up");
+                                }
+                            }
+                            // every member reduces the contributions in
+                            // ascending-contributor order — the switch's
+                            // deterministic reduction, replicated locally
+                            let want = WAVE_TAG_BASE + *tag as u64;
+                            let mut acc: Option<Vec<f32>> = None;
+                            for &c in &wave_contrib[tag] {
+                                let data = if let Some(pos) =
+                                    stash[c].iter().position(|(t, _)| *t == want)
+                                {
+                                    stash[c].remove(pos).1
+                                } else {
+                                    loop {
+                                        let msg = rx_row[c]
+                                            .as_ref()
+                                            .unwrap()
+                                            .recv()
+                                            .expect("peer hung up");
+                                        if msg.0 == want {
+                                            break msg.1;
+                                        }
+                                        stash[c].push(msg);
+                                    }
+                                };
+                                match &mut acc {
+                                    None => acc = Some(data),
+                                    Some(a) => reducer.reduce(*op, a, &data),
+                                }
+                            }
+                            let acc = acc.expect("validated wave has a contributor");
+                            assert_eq!(acc.len(), seg.len, "wave length mismatch");
+                            bufs.seg_mut(seg).copy_from_slice(&acc);
+                        }
                     }
                 }
                 (rank, bufs)

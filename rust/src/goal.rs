@@ -148,6 +148,16 @@ pub enum OpKind {
     Copy { dst: Seg, src: Seg },
     /// Fixed-duration local computation (trace replay compute gaps).
     Calc { seconds: f64 },
+    /// One rank's leg of an in-network switch aggregation **wave**: every
+    /// `SwitchAgg` op sharing `tag` forms one wave.  Contributors
+    /// (`contribute = true`) push `seg` up to the switch; the switch
+    /// reduces the contributions elementwise with `op` and multicasts the
+    /// result back into *every* wave member's `seg` (contributing or not).
+    /// The wave barrier is imposed by tag matching in the simulator and
+    /// the executors — like send/recv channel matching, no cross-rank
+    /// graph dependencies are needed.  A single-contributor wave is switch
+    /// multicast (bcast): the "reduction" of one input is that input.
+    SwitchAgg { seg: Seg, op: ReduceOp, tag: u32, contribute: bool },
 }
 
 impl OpKind {
@@ -158,6 +168,10 @@ impl OpKind {
     pub fn wire_bytes(&self, elem_bytes: usize) -> usize {
         match self {
             OpKind::Send { seg, .. } => seg.bytes(elem_bytes),
+            // injection side only, like Send: a contributor pushes its
+            // segment up to the switch; the multicast down is the
+            // switch's copy of the same bytes, not a second injection
+            OpKind::SwitchAgg { seg, contribute: true, .. } => seg.bytes(elem_bytes),
             _ => 0,
         }
     }
@@ -171,6 +185,9 @@ impl OpKind {
             }
             OpKind::Copy { dst, src } => OpKind::Copy { dst: dst.scaled(m), src: src.scaled(m) },
             OpKind::Calc { seconds } => OpKind::Calc { seconds },
+            OpKind::SwitchAgg { seg, op, tag, contribute } => {
+                OpKind::SwitchAgg { seg: seg.scaled(m), op, tag, contribute }
+            }
         }
     }
 }
@@ -260,6 +277,13 @@ pub enum GoalError {
     PhaseOrderDep { rank: usize, op: usize, dep: usize, op_phase: usize, dep_phase: usize },
     /// Per-phase tag-space remapping overflowed the u32 tag domain.
     TagRemapOverflow { phase: usize, tag: u32 },
+    /// A switch-aggregation wave's members disagree on segment length.
+    WaveLenMismatch { tag: u32 },
+    /// A switch-aggregation wave's members disagree on the reduce op.
+    WaveOpMismatch { tag: u32 },
+    /// A switch-aggregation wave has no contributor: the switch would
+    /// multicast an undefined value.
+    WaveNoContributor { tag: u32 },
 }
 
 impl std::fmt::Display for GoalError {
@@ -348,6 +372,15 @@ impl std::fmt::Display for GoalError {
                     f,
                     "rank {rank} op {op} (phase {op_phase}): dep {dep} points into later phase {dep_phase}"
                 )
+            }
+            GoalError::WaveLenMismatch { tag } => {
+                write!(f, "switch wave tag {tag}: members disagree on segment length")
+            }
+            GoalError::WaveOpMismatch { tag } => {
+                write!(f, "switch wave tag {tag}: members disagree on reduce op")
+            }
+            GoalError::WaveNoContributor { tag } => {
+                write!(f, "switch wave tag {tag} has no contributor")
             }
         }
     }
@@ -800,6 +833,7 @@ impl GoalGraph {
                         check_seg(src)?;
                     }
                     OpKind::Calc { .. } => {}
+                    OpKind::SwitchAgg { seg, .. } => check_seg(seg)?,
                 }
             }
             for t in self.rank_tags(r) {
@@ -818,11 +852,16 @@ impl GoalGraph {
     }
 
     /// Channel matching: every (src, dst, tag) channel's ordered send
-    /// lengths must equal its ordered recv lengths.
+    /// lengths must equal its ordered recv lengths.  Switch-aggregation
+    /// waves are checked by the same pass: all members of a wave (same
+    /// tag) must agree on segment length and reduce op, and at least one
+    /// must contribute.
     pub fn validate_channels(&self) -> Result<(), GoalError> {
         use std::collections::HashMap;
         let mut sends: HashMap<(usize, usize, u32), Vec<usize>> = HashMap::new();
         let mut recvs: HashMap<(usize, usize, u32), Vec<usize>> = HashMap::new();
+        // wave tag → (seg len, reduce op, contributor count)
+        let mut waves: HashMap<u32, (usize, ReduceOp, usize)> = HashMap::new();
         for r in 0..self.p() {
             for kind in self.ops(r) {
                 match kind {
@@ -832,8 +871,25 @@ impl GoalGraph {
                     OpKind::Recv { peer, seg, tag } => {
                         recvs.entry((*peer, r, *tag)).or_default().push(seg.len);
                     }
+                    OpKind::SwitchAgg { seg, op, tag, contribute } => {
+                        let e = waves.entry(*tag).or_insert((seg.len, *op, 0));
+                        if e.0 != seg.len {
+                            return Err(GoalError::WaveLenMismatch { tag: *tag });
+                        }
+                        if e.1 != *op {
+                            return Err(GoalError::WaveOpMismatch { tag: *tag });
+                        }
+                        if *contribute {
+                            e.2 += 1;
+                        }
+                    }
                     _ => {}
                 }
+            }
+        }
+        for (&tag, &(_, _, contributors)) in &waves {
+            if contributors == 0 {
+                return Err(GoalError::WaveNoContributor { tag });
             }
         }
         if sends.len() != recvs.len() {

@@ -104,6 +104,16 @@ pub fn to_text(goal: &Goal) -> String {
                 OpKind::Calc { seconds } => {
                     let _ = write!(out, "calc {seconds:e}");
                 }
+                OpKind::SwitchAgg { seg, op, tag, contribute } => {
+                    let _ = write!(
+                        out,
+                        "switch {} {} {}b tag {tag} {}",
+                        op.name(),
+                        if *contribute { "push" } else { "pull" },
+                        seg.bytes(goal.elem_bytes),
+                        seg_text(seg)
+                    );
+                }
             }
             let deps = goal.deps(goal.gid(r, i));
             if !deps.is_empty() {
@@ -304,6 +314,16 @@ fn parse_buf(s: &str) -> Result<Buf, String> {
     }
 }
 
+fn parse_reduce_op(s: &str) -> Result<ReduceOp, String> {
+    match s {
+        "sum" => Ok(ReduceOp::Sum),
+        "prod" => Ok(ReduceOp::Prod),
+        "max" => Ok(ReduceOp::Max),
+        "min" => Ok(ReduceOp::Min),
+        other => Err(format!("bad reduce op {other:?}")),
+    }
+}
+
 fn parse_dep(tok: &str) -> Result<DepTok, String> {
     if let Some(j) = tok.strip_prefix('l') {
         return Ok(DepTok::Local(j.parse().map_err(|e| format!("bad dep {tok:?}: {e}"))?));
@@ -348,13 +368,7 @@ fn parse_op(line: &str) -> Result<(OpKind, Vec<DepTok>), String> {
             if body.len() < 10 {
                 return Err(format!("short reduce: {line:?}"));
             }
-            let op = match body[1] {
-                "sum" => ReduceOp::Sum,
-                "prod" => ReduceOp::Prod,
-                "max" => ReduceOp::Max,
-                "min" => ReduceOp::Min,
-                other => return Err(format!("bad reduce op {other:?}")),
-            };
+            let op = parse_reduce_op(body[1])?;
             OpKind::Reduce {
                 op,
                 dst: Seg::new(parse_buf(body[3])?, num(body[4])?, num(body[5])?),
@@ -377,6 +391,22 @@ fn parse_op(line: &str) -> Result<(OpKind, Vec<DepTok>), String> {
                 .parse()
                 .map_err(|e| format!("calc: {e}"))?,
         },
+        Some("switch") => {
+            // switch <op> <push|pull> <N>b tag <t> buf <b> off <o> len <l>
+            if body.len() < 12 {
+                return Err(format!("short switch: {line:?}"));
+            }
+            // layout: [switch, op, push|pull, <N>b, tag, t, buf, b, off, o, len, l]
+            let op = parse_reduce_op(body[1])?;
+            let contribute = match body[2] {
+                "push" => true,
+                "pull" => false,
+                other => return Err(format!("bad switch role {other:?} in {line:?}")),
+            };
+            let tag = num(body[5])? as u32;
+            let seg = Seg::new(parse_buf(body[7])?, num(body[9])?, num(body[11])?);
+            OpKind::SwitchAgg { seg, op, tag, contribute }
+        }
         other => return Err(format!("unknown op {other:?} in {line:?}")),
     };
     Ok((kind, deps))

@@ -90,7 +90,7 @@ pub mod workload;
 pub use compose::{compose, compose_named, compose_placed, ChainPolicy, PhaseLink, ReadyDep};
 pub use engine::{Engine, EngineConfig};
 pub use goal::{Goal, GoalError, GoalGraph, OpKind, PhaseTable, Seg};
-pub use topology::{Allocation, Placement, SystemProfile, Tier};
+pub use topology::{Allocation, Placement, SwitchCaps, SystemProfile, Tier};
 
 /// Compile the README's Rust snippets (the library-usage quickstart) as
 /// doctests, so the documented example can never drift from the API.

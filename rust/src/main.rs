@@ -186,6 +186,9 @@ usage: pico <command> [--key value ...]
          [--sizes 32B,2KiB,...] [--nodes 2,8,32] [--ppn 1] [--iters 3]
          [--jobs N]
          tuning sweep over all exposed algorithms; prints the ratio heatmap
+         (with --backend libpico the allreduce/bcast/reduce sweeps include
+         the in-network \"innet\" family and append the host-vs-switch
+         crossover winner table)
   probe  [--system leonardo] [--backend openmpi] [--coll allreduce]
          [--algo ring] [--bytes 1MiB] [--nodes 8] [--ppn 1] [--rails N]
          [--proto Simple|LL] [--instrument]

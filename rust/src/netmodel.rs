@@ -17,7 +17,7 @@
 //!   overhead (γ terms of Fig. 11's Data-Movement / Reduction components).
 
 
-use crate::topology::Tier;
+use crate::topology::{SwitchCaps, Tier};
 
 /// Low-level transfer protocol (NCCL naming: Simple favors bandwidth, LL
 /// reduces small-message latency via flag-based synchronization).
@@ -74,6 +74,14 @@ pub struct NetParams {
     /// term.  Charged on every transfer; this is what makes (p−1)-step
     /// algorithms pay at scale relative to log-step ones.
     pub msg_overhead: f64,
+    /// In-network aggregation: per-port reduction-pipeline bandwidth of an
+    /// aggregation-capable switch, bytes/second.  Deliberately well below
+    /// the striped NIC bandwidth — SHARP-class ALUs stream far slower than
+    /// the line rate, which is what makes host algorithms win back the
+    /// large-message regime (the crossover the sweep renders).
+    pub switch_agg_bw: f64,
+    /// Fixed per-wave latency of one switch aggregation round, seconds.
+    pub switch_alpha: f64,
 }
 
 /// Per-message network configuration: the knobs a backend exposes
@@ -167,6 +175,23 @@ impl NetParams {
             + bytes as f64 / self.flow_bw(cfg, tier, bytes, system_rails)
     }
 
+    /// Time the switch spends reducing one aggregation wave of `flows`
+    /// contributions of `bytes` each: the reduction pipeline ingests up to
+    /// `caps.ports` contributions per round (port-serialization — extra
+    /// rounds for wider waves), each round streaming `bytes` through the
+    /// ALUs at `switch_agg_bw`, plus the fixed per-wave `switch_alpha`.
+    /// Monotone non-increasing in `ports` (property-tested).  A
+    /// non-aggregating switch degrades to one port — imported schedules
+    /// still simulate anywhere, just without the parallel ingest.
+    pub fn switch_agg_time(&self, caps: &SwitchCaps, flows: usize, bytes: usize) -> f64 {
+        if flows == 0 || bytes == 0 {
+            return self.switch_alpha;
+        }
+        let ports = if caps.aggregate { caps.ports.max(1) } else { 1 };
+        let rounds = flows.div_ceil(ports);
+        self.switch_alpha + rounds as f64 * bytes as f64 / self.switch_agg_bw
+    }
+
     // ---- built-in machine calibrations (shape-level, see DESIGN.md) ----
 
     /// Leonardo-like: Dragonfly+, 4×100 Gb/s HDR rails, NVLink3 intra-node.
@@ -185,6 +210,8 @@ impl NetParams {
             ll_alpha_factor: 0.55,
             ll_bw_factor: 0.5,
             msg_overhead: 0.4e-6,
+            switch_agg_bw: 6e9,
+            switch_alpha: 1.0e-6,
         }
     }
 
@@ -204,6 +231,8 @@ impl NetParams {
             ll_alpha_factor: 0.55,
             ll_bw_factor: 0.5,
             msg_overhead: 0.5e-6,
+            switch_agg_bw: 8e9,
+            switch_alpha: 1.2e-6,
         }
     }
 
@@ -223,6 +252,8 @@ impl NetParams {
             ll_alpha_factor: 0.55,
             ll_bw_factor: 0.5,
             msg_overhead: 0.4e-6,
+            switch_agg_bw: 6e9,
+            switch_alpha: 1.0e-6,
         }
     }
 }
@@ -394,6 +425,24 @@ mod tests {
                     < p.ptp_time(&cfg, Tier::InterGroup, bytes, 4)
             );
         }
+    }
+
+    #[test]
+    fn switch_agg_ports_monotone_and_capped() {
+        let p = lp();
+        let caps =
+            |ports| SwitchCaps { aggregate: true, max_reduction_bytes: 1 << 20, ports };
+        let mut prev = f64::INFINITY;
+        for ports in [1usize, 2, 4, 8, 64] {
+            let t = p.switch_agg_time(&caps(ports), 16, 64 << 10);
+            assert!(t <= prev, "ports {ports}: {t} > {prev}");
+            prev = t;
+        }
+        // a non-aggregating switch degrades to single-port ingest
+        let off = SwitchCaps { aggregate: false, max_reduction_bytes: 0, ports: 64 };
+        assert_eq!(p.switch_agg_time(&off, 16, 4096), p.switch_agg_time(&caps(1), 16, 4096));
+        // empty wave: just the fixed round latency
+        assert_eq!(p.switch_agg_time(&caps(8), 0, 4096), p.switch_alpha);
     }
 
     #[test]

@@ -54,6 +54,7 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
 use crate::backends::{self, Backend};
+use crate::collectives::innet::{switch_fallback, Fallback};
 use crate::collectives::{Coll, GenParams};
 use crate::config::{resolve, EnvSpec, TestPoint, TestSpec};
 use crate::goal::{Goal, GoalError, ReduceOp};
@@ -70,6 +71,9 @@ pub struct PointOutcome {
     pub point: TestPoint,
     pub effective_algorithm: String,
     pub effective_proto: Proto,
+    /// Present when an in-network request degraded to a host algorithm
+    /// (switch without aggregation, or payload past the engine buffer).
+    pub fallback: Option<Fallback>,
     pub measurement: Measurement,
     /// Median across iterations of the per-iteration maximum (the headline
     /// latency every figure plots).
@@ -326,13 +330,21 @@ pub fn run_point_cached(
         instrument: spec.instrument,
         ..GenParams::new(p, count)
     };
-    let effective_algorithm = backends::resolve_algorithm(
+    let resolved_algorithm = backends::resolve_algorithm(
         backend,
         point.collective,
         point.algorithm.as_deref(),
         &params,
         point.ppn,
     );
+    // In-network requests the switch cannot serve degrade to a host
+    // algorithm — recorded, never silent (DESIGN.md §In-Network).
+    let fallback =
+        switch_fallback(&profile.switch, point.collective, &resolved_algorithm, params.bytes());
+    let effective_algorithm = match &fallback {
+        Some(fb) => fb.effective.clone(),
+        None => resolved_algorithm,
+    };
     let goal = cache.schedule(backend, point.collective, &effective_algorithm, &params)?;
 
     // protocol: explicit knob wins; otherwise the backend's own default
@@ -384,6 +396,7 @@ pub fn run_point_cached(
         point: point.clone(),
         effective_algorithm,
         effective_proto: cfg.proto,
+        fallback,
         measurement,
         median_s,
     })
@@ -402,6 +415,7 @@ fn make_record(i: usize, spec: &TestSpec, backend_name: &str, outcome: &PointOut
         ppn: point.ppn,
         requested_algorithm: point.algorithm.clone(),
         effective_algorithm: outcome.effective_algorithm.clone(),
+        fallback: outcome.fallback.clone(),
         knobs_effective: spec
             .knobs
             .iter()

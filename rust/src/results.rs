@@ -17,6 +17,7 @@
 use std::fs;
 use std::path::{Path, PathBuf};
 
+use crate::collectives::innet::Fallback;
 use crate::json::Json;
 use crate::sim::Components;
 use crate::util::Stats;
@@ -137,6 +138,10 @@ pub struct Record {
     pub ppn: usize,
     pub requested_algorithm: Option<String>,
     pub effective_algorithm: String,
+    /// Present when an in-network request degraded to a host algorithm;
+    /// serialized only when set, so records without one keep their exact
+    /// historical bytes.
+    pub fallback: Option<Fallback>,
     pub knobs_effective: Vec<(String, String)>,
     pub knobs_degraded: Vec<(String, String)>,
     pub measurement: Measurement,
@@ -146,7 +151,7 @@ pub struct Record {
 impl Record {
     pub fn to_json(&self) -> Json {
         let m = &self.measurement;
-        Json::obj()
+        let j = Json::obj()
             .set("id", self.id.as_str())
             .set("collective", self.collective.as_str())
             .set("backend", self.backend.as_str())
@@ -193,7 +198,17 @@ impl Record {
                 "tags",
                 Json::Obj(m.tag_times.iter().map(|(k, v)| (k.clone(), (*v).into())).collect()),
             )
-            .set("data", m.encode(self.granularity))
+            .set("data", m.encode(self.granularity));
+        match &self.fallback {
+            Some(fb) => j.set(
+                "fallback",
+                Json::obj()
+                    .set("requested", fb.requested.as_str())
+                    .set("effective", fb.effective.as_str())
+                    .set("reason", fb.reason.label()),
+            ),
+            None => j,
+        }
     }
 }
 
@@ -412,6 +427,7 @@ mod tests {
             ppn: 1,
             requested_algorithm: None,
             effective_algorithm: "ring".into(),
+            fallback: None,
             knobs_effective: vec![],
             knobs_degraded: vec![],
             measurement: meas(),
@@ -443,6 +459,7 @@ mod tests {
             ppn: 1,
             requested_algorithm: None,
             effective_algorithm: "ring".into(),
+            fallback: None,
             knobs_effective: vec![],
             knobs_degraded: vec![],
             measurement: meas(),
@@ -478,6 +495,7 @@ mod tests {
             ppn: 1,
             requested_algorithm: None,
             effective_algorithm: "ring".into(),
+            fallback: None,
             knobs_effective: vec![],
             knobs_degraded: vec![],
             measurement: meas(),
@@ -505,6 +523,7 @@ mod tests {
             ppn: 1,
             requested_algorithm: None,
             effective_algorithm: "ring".into(),
+            fallback: None,
             knobs_effective: vec![],
             knobs_degraded: vec![],
             measurement: meas(),

@@ -154,7 +154,7 @@ enum Category {
 
 fn category(kind: &OpKind) -> Category {
     match kind {
-        OpKind::Send { .. } | OpKind::Recv { .. } => Category::Comm,
+        OpKind::Send { .. } | OpKind::Recv { .. } | OpKind::SwitchAgg { .. } => Category::Comm,
         OpKind::Reduce { .. } => Category::Reduction,
         OpKind::Copy { .. } => Category::Datamove,
         OpKind::Calc { .. } => Category::Other,
@@ -256,6 +256,22 @@ pub fn simulate(goal: &Goal, ctx: &SimContext) -> SimReport {
         HashMap::with_capacity_and_hasher(64, Default::default());
     let mut events = 0usize;
 
+    // In-network aggregation state: per-tag wave membership (precomputed
+    // from the arena, mirroring channel matching) and the legs that have
+    // become dependency-ready so far.  A wave is priced as a unit once
+    // its last leg arrives.
+    let mut wave_expect: HashMap<u32, usize, crate::util::FastBuild> = Default::default();
+    for kind in &goal.kinds {
+        if let OpKind::SwitchAgg { tag, .. } = kind {
+            *wave_expect.entry(*tag).or_insert(0) += 1;
+        }
+    }
+    let mut waves: HashMap<u32, Vec<(usize, f64)>, crate::util::FastBuild> = Default::default();
+    // The aggregating switch sits at the job's lowest common fabric level:
+    // leaf switch if the allocation fits one group, spine otherwise.
+    let wave_tier =
+        if group_idx.len() <= 1 { Tier::IntraGroup } else { Tier::InterGroup };
+
     // Completion helper: mark op finished, release dependents (straight
     // walk of the precompiled dependents CSR).
     macro_rules! complete {
@@ -326,6 +342,47 @@ pub fn simulate(goal: &Goal, ctx: &SimContext) -> SimReport {
                     complete!(heap, g, r_start, r_fin);
                 } else {
                     ch.recvs.push_back((g, t));
+                }
+            }
+            OpKind::SwitchAgg { seg, tag, .. } => {
+                // One leg of an in-network aggregation wave: park until
+                // every member is ready (tag matching, like channels),
+                // then price the wave as a unit — contributor pushes
+                // serialize on their node tx NICs, the switch pipeline
+                // reduces, and the multicast result drains through every
+                // member's rx NIC.
+                let members = waves.entry(tag).or_default();
+                members.push((g, t));
+                if members.len() == wave_expect[&tag] {
+                    let mut members = waves.remove(&tag).unwrap();
+                    members.sort_unstable_by_key(|&(m, _)| m);
+                    let bytes = seg.bytes(goal.elem_bytes);
+                    let fbytes = bytes as f64;
+                    let alpha = net.flow_alpha(&ctx.cfg, wave_tier, bytes);
+                    let flow_bw = net.flow_bw(&ctx.cfg, wave_tier, bytes, rails);
+                    let mut up_max = 0.0f64;
+                    let mut n_contrib = 0usize;
+                    for &(m, mt) in &members {
+                        if let OpKind::SwitchAgg { contribute: true, .. } = goal.kinds[m] {
+                            n_contrib += 1;
+                            let sn = node_idx[&ctx.placement.rank_node[goal.rank_of(m)]];
+                            let up = nic_tx[sn]
+                                .reserve(mt, fbytes)
+                                .max(mt + fbytes / flow_bw)
+                                + alpha;
+                            up_max = up_max.max(up);
+                        }
+                    }
+                    let agg_done =
+                        up_max + net.switch_agg_time(&ctx.profile.switch, n_contrib, bytes);
+                    for (m, mt) in members {
+                        let dn = node_idx[&ctx.placement.rank_node[goal.rank_of(m)]];
+                        let down = nic_rx[dn]
+                            .reserve(agg_done, fbytes)
+                            .max(agg_done + fbytes / flow_bw)
+                            + alpha;
+                        complete!(heap, m, mt, down);
+                    }
                 }
             }
         }

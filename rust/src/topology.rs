@@ -52,6 +52,67 @@ pub enum TopologyKind {
     FatTree,
 }
 
+/// In-network aggregation capabilities of the system's switches
+/// (SHARP / SwitchML class).  The `innet` algorithm family offloads
+/// reductions to the switch; the simulator prices each aggregation wave
+/// from these caps plus [`NetParams::switch_agg_time`], and the
+/// orchestrator falls back to host algorithms (typed
+/// [`Fallback`](crate::collectives::innet::Fallback)) when a request
+/// exceeds them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SwitchCaps {
+    /// Whether the fabric can reduce in the switch at all.
+    pub aggregate: bool,
+    /// Largest payload one aggregation wave may carry, bytes; bigger
+    /// requests degrade to the backend's host algorithm.
+    pub max_reduction_bytes: usize,
+    /// Parallel ingest ports of the switch's reduction pipeline (wave
+    /// cost is port-serialized across contributions).
+    pub ports: usize,
+}
+
+impl SwitchCaps {
+    /// A SHARP-class aggregating switch.
+    pub fn sharp(max_reduction_bytes: usize, ports: usize) -> Self {
+        Self { aggregate: true, max_reduction_bytes, ports }
+    }
+
+    /// A plain switch: no in-network reduction.
+    pub fn none() -> Self {
+        Self { aggregate: false, max_reduction_bytes: 0, ports: 0 }
+    }
+}
+
+/// Typed construction errors of the topology layer.  Load-bearing for the
+/// in-network paths: a zero-node or over-machine allocation used to slip
+/// through as a silently wrong node list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyError {
+    /// An allocation of zero nodes was requested.
+    ZeroNodes,
+    /// More nodes requested than the machine has.
+    TooManyNodes { requested: usize, available: usize },
+    /// The policy could not supply the requested node count (e.g. a
+    /// `BlockScattered` block size whose blocks don't tile the machine).
+    PolicyShortfall { requested: usize, selected: usize },
+}
+
+impl std::fmt::Display for TopologyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TopologyError::ZeroNodes => write!(f, "allocation of 0 nodes"),
+            TopologyError::TooManyNodes { requested, available } => {
+                write!(f, "allocation of {requested} nodes exceeds machine size {available}")
+            }
+            TopologyError::PolicyShortfall { requested, selected } => {
+                write!(f, "allocation policy selected {selected} of {requested} nodes")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TopologyError {}
+
 /// A machine description: the env.json analogue of a supercomputer.
 #[derive(Debug, Clone)]
 pub struct SystemProfile {
@@ -65,6 +126,8 @@ pub struct SystemProfile {
     pub ppn_max: usize,
     /// NIC rails per node (Leonardo: 4 links usable by rendezvous striping).
     pub rails: usize,
+    /// In-network aggregation capabilities of the fabric's switches.
+    pub switch: SwitchCaps,
     pub net: NetParams,
     pub mem: MemParams,
 }
@@ -102,12 +165,32 @@ pub struct Allocation {
 }
 
 impl Allocation {
+    /// [`Allocation::try_new`] that panics on an invalid request — the
+    /// ergonomic path for generators and tests, where an invalid
+    /// allocation is a caller bug.
     pub fn new(profile: &SystemProfile, n_nodes: usize, policy: AllocPolicy, seed: u64) -> Self {
-        assert!(
-            n_nodes <= profile.nodes_total,
-            "allocation of {n_nodes} exceeds machine size {}",
-            profile.nodes_total
-        );
+        Self::try_new(profile, n_nodes, policy, seed).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Draw `n_nodes` nodes from `profile` under `policy`, validating the
+    /// request at construction: zero nodes, more nodes than the machine
+    /// has, or a policy that cannot supply the requested count are typed
+    /// [`TopologyError`]s instead of silently wrong node lists.
+    pub fn try_new(
+        profile: &SystemProfile,
+        n_nodes: usize,
+        policy: AllocPolicy,
+        seed: u64,
+    ) -> Result<Self, TopologyError> {
+        if n_nodes == 0 {
+            return Err(TopologyError::ZeroNodes);
+        }
+        if n_nodes > profile.nodes_total {
+            return Err(TopologyError::TooManyNodes {
+                requested: n_nodes,
+                available: profile.nodes_total,
+            });
+        }
         let mut rng = Rng::new(seed);
         let nodes = match policy {
             AllocPolicy::Contiguous => {
@@ -137,7 +220,13 @@ impl Allocation {
                 nodes
             }
         };
-        Self { system: profile.name.clone(), nodes, policy, seed }
+        if nodes.len() != n_nodes {
+            return Err(TopologyError::PolicyShortfall {
+                requested: n_nodes,
+                selected: nodes.len(),
+            });
+        }
+        Ok(Self { system: profile.name.clone(), nodes, policy, seed })
     }
 
     pub fn n_nodes(&self) -> usize {
@@ -222,6 +311,7 @@ pub fn leonardo() -> SystemProfile {
         nodes_per_group: 180,
         ppn_max: 4,
         rails: 4,
+        switch: SwitchCaps::sharp(1 << 20, 64),
         net: NetParams::leonardo_like(),
         mem: MemParams::hbm_node(),
     }
@@ -236,6 +326,7 @@ pub fn lumi() -> SystemProfile {
         nodes_per_group: 124,
         ppn_max: 8,
         rails: 4,
+        switch: SwitchCaps::sharp(1 << 20, 64),
         net: NetParams::lumi_like(),
         mem: MemParams::hbm_node(),
     }
@@ -250,6 +341,7 @@ pub fn mn5() -> SystemProfile {
         nodes_per_group: 60,
         ppn_max: 4,
         rails: 2,
+        switch: SwitchCaps::none(),
         net: NetParams::mn5_like(),
         mem: MemParams::hbm_node(),
     }
@@ -320,6 +412,51 @@ mod tests {
         for p in builtin_profiles() {
             assert!(p.nodes_per_group > 1 && p.nodes_per_group < p.nodes_total);
             assert!(p.ppn_max >= 1 && p.rails >= 1);
+            if p.switch.aggregate {
+                assert!(p.switch.max_reduction_bytes > 0 && p.switch.ports > 0, "{}", p.name);
+            }
         }
+        // the crossover scenario needs at least one machine of each kind
+        assert!(leonardo().switch.aggregate);
+        assert!(!mn5().switch.aggregate);
+    }
+
+    #[test]
+    fn invalid_allocations_are_typed_errors() {
+        let prof = leonardo();
+        assert_eq!(
+            Allocation::try_new(&prof, 0, AllocPolicy::Contiguous, 1),
+            Err(TopologyError::ZeroNodes)
+        );
+        assert_eq!(
+            Allocation::try_new(&prof, prof.nodes_total + 1, AllocPolicy::Scattered, 1),
+            Err(TopologyError::TooManyNodes {
+                requested: prof.nodes_total + 1,
+                available: prof.nodes_total
+            })
+        );
+        // a block size whose blocks cannot tile the request: only one
+        // 2000-node block fits in 3456 nodes, so 2500 nodes can't be had
+        assert_eq!(
+            Allocation::try_new(&prof, 2500, AllocPolicy::BlockScattered { block: 2000 }, 1),
+            Err(TopologyError::PolicyShortfall { requested: 2500, selected: 2000 })
+        );
+        // error text is stable enough to grep in CI logs
+        assert!(TopologyError::ZeroNodes.to_string().contains("0 nodes"));
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds machine size")]
+    fn allocation_new_panics_on_oversize() {
+        let prof = mn5();
+        Allocation::new(&prof, prof.nodes_total + 1, AllocPolicy::Contiguous, 1);
+    }
+
+    #[test]
+    fn try_new_matches_new_on_valid_requests() {
+        let prof = lumi();
+        let a = Allocation::try_new(&prof, 64, AllocPolicy::Scattered, 9).unwrap();
+        let b = Allocation::new(&prof, 64, AllocPolicy::Scattered, 9);
+        assert_eq!(a.nodes, b.nodes);
     }
 }

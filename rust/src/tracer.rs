@@ -66,18 +66,47 @@ impl TraceReport {
 /// Classify every transfer of `goal` by the locality tier of its endpoints.
 pub fn trace(goal: &Goal, placement: &Placement) -> TraceReport {
     let mut rep = TraceReport::default();
+    // An aggregation wave's switch sits at the job's lowest common fabric
+    // level: the leaf switch if the placement fits one group, the spine
+    // otherwise (mirrors the simulator's wave-tier rule).
+    let one_group = placement.rank_group.windows(2).all(|w| w[0] == w[1]);
+    let wave_tier = if one_group { Tier::IntraGroup } else { Tier::InterGroup };
     for src in 0..goal.p() {
         for kind in goal.ops(src) {
-            if let OpKind::Send { peer, seg, .. } = kind {
-                let bytes = seg.bytes(goal.elem_bytes);
-                let tier = placement.tier(src, *peer);
-                let idx = Tier::ALL.iter().position(|t| *t == tier).unwrap();
-                rep.bytes_by_tier[idx] += bytes;
-                rep.msgs_by_tier[idx] += 1;
-                if tier == Tier::InterGroup {
-                    *rep.group_out_bytes.entry(placement.rank_group[src]).or_insert(0) += bytes;
-                    *rep.group_in_bytes.entry(placement.rank_group[*peer]).or_insert(0) += bytes;
+            match kind {
+                OpKind::Send { peer, seg, .. } => {
+                    let bytes = seg.bytes(goal.elem_bytes);
+                    let tier = placement.tier(src, *peer);
+                    let idx = Tier::ALL.iter().position(|t| *t == tier).unwrap();
+                    rep.bytes_by_tier[idx] += bytes;
+                    rep.msgs_by_tier[idx] += 1;
+                    if tier == Tier::InterGroup {
+                        *rep.group_out_bytes.entry(placement.rank_group[src]).or_insert(0) +=
+                            bytes;
+                        *rep.group_in_bytes.entry(placement.rank_group[*peer]).or_insert(0) +=
+                            bytes;
+                    }
                 }
+                // only the contributor's push is wire volume — the
+                // multicast down is the switch's copy of the same bytes
+                // (matches OpKind::wire_bytes, so trace totals stay equal
+                // to Goal::total_wire_bytes)
+                OpKind::SwitchAgg { seg, contribute: true, .. } => {
+                    let bytes = seg.bytes(goal.elem_bytes);
+                    let idx = Tier::ALL.iter().position(|t| *t == wave_tier).unwrap();
+                    rep.bytes_by_tier[idx] += bytes;
+                    rep.msgs_by_tier[idx] += 1;
+                    if wave_tier == Tier::InterGroup {
+                        // the push terminates at the spine: debit and
+                        // credit the source group so both ledgers keep
+                        // summing to the external volume
+                        *rep.group_out_bytes.entry(placement.rank_group[src]).or_insert(0) +=
+                            bytes;
+                        *rep.group_in_bytes.entry(placement.rank_group[src]).or_insert(0) +=
+                            bytes;
+                    }
+                }
+                _ => {}
             }
         }
     }

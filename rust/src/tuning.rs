@@ -200,6 +200,7 @@ mod tests {
             },
             effective_algorithm: algo.to_string(),
             effective_proto: Proto::Simple,
+            fallback: None,
             measurement: Measurement {
                 times: vec![vec![s]],
                 components: Components::default(),

@@ -191,7 +191,11 @@ pub struct DnnStepSpec {
     pub buckets: usize,
     /// Total backprop compute time, evenly split across buckets.
     pub compute_s: f64,
-    /// All-reduce algorithm for the buckets (libpico registry name).
+    /// All-reduce algorithm for the buckets (libpico registry name,
+    /// `"innet"` included).  Workload lowering uses the name as-is — the
+    /// orchestrator's switch fallback does not apply here; on a profile
+    /// without aggregation the simulator instead serializes every
+    /// in-network wave through one switch port (DESIGN.md §In-Network).
     pub algo: String,
 }
 

@@ -1,0 +1,252 @@
+//! Registry-wide differential coverage for the in-network family.
+//!
+//! The innet generators register through the same table as every host
+//! algorithm, so these tests sweep the *whole* registry — every
+//! (collective, algorithm) pair × p ∈ {2, 3, 4, 8, 17} × bytes ∈
+//! {8, 4 KiB, 1 MiB} — and assert the invariants the switch extension
+//! must not bend:
+//!
+//! - structural validity (wave membership included, `Goal::validate`);
+//! - byte conservation: the placement-aware tracer's per-tier bytes sum
+//!   to the schedule's wire bytes (switch waves count each contributor's
+//!   uplink exactly once, multicast down is fabric-internal);
+//! - cache transparency: the schedule served from the orchestrator's
+//!   byte-agnostic skeleton-rescale path is bit-identical to a fresh
+//!   generation, and simulating both yields identical reports;
+//! - numerical correctness: every innet collective reproduces the
+//!   oracle under all three executors (worklist, scan, threaded).
+
+use pico::backends::{Backend, LibPico};
+use pico::collectives::innet::FallbackReason;
+use pico::collectives::{self, Coll, GenParams};
+use pico::config::TestSpec;
+use pico::engine::{CampaignSpec, Engine, EngineConfig, SweepSpec};
+use pico::execute::{execute, execute_scan, execute_threaded, make_inputs, oracle, ScalarReducer};
+use pico::orchestrator::{effective_count, ScheduleCache};
+use pico::results::VecSink;
+use pico::sim::{simulate, SimContext};
+use pico::topology::{leonardo, AllocPolicy, Allocation, Placement, RankOrder, SwitchCaps};
+use pico::tracer::trace;
+
+const PS: [usize; 5] = [2, 3, 4, 8, 17];
+const SIZES: [usize; 3] = [8, 4 << 10, 1 << 20];
+
+/// Every registered algorithm (innet included), across the full p × bytes
+/// grid: validate, conserve bytes, and match cached-vs-direct exactly —
+/// both the schedule itself and the simulation report it produces.
+#[test]
+fn registry_differential_cached_vs_uncached() {
+    let backend = LibPico;
+    let cache = ScheduleCache::new();
+    let prof = leonardo();
+    for info in collectives::registry() {
+        for p in PS {
+            if !info.any_p && !p.is_power_of_two() {
+                continue;
+            }
+            let alloc = Allocation::new(&prof, p, AllocPolicy::Contiguous, 11);
+            let pl = Placement::new(&prof, &alloc, 1, RankOrder::Block);
+            let ctx = SimContext::new(&prof, &pl);
+            for bytes in SIZES {
+                let count = if info.coll == Coll::Barrier {
+                    0
+                } else {
+                    effective_count(info.coll, bytes, p)
+                };
+                let params = GenParams::new(p, count);
+                let tag = format!("{:?}:{} p={p} bytes={bytes}", info.coll, info.name);
+                let direct = backend
+                    .schedule(info.coll, info.name, &params)
+                    .unwrap_or_else(|e| panic!("{tag}: {e}"));
+                direct.validate().unwrap_or_else(|e| panic!("{tag}: {e}"));
+                let cached = cache
+                    .schedule(&backend, info.coll, info.name, &params)
+                    .unwrap_or_else(|e| panic!("{tag}: {e}"));
+                assert_eq!(*cached, direct, "{tag}: cache must be bit-transparent");
+                // byte conservation through the placement-aware tracer
+                let rep = trace(&direct, &pl);
+                assert_eq!(
+                    rep.bytes_by_tier.iter().sum::<usize>(),
+                    direct.total_wire_bytes(),
+                    "{tag}: tier bytes must sum to wire bytes"
+                );
+                // identical simulation either way
+                let a = simulate(&direct, &ctx);
+                let b = simulate(&cached, &ctx);
+                assert_eq!(a.total_time, b.total_time, "{tag}: totals diverged");
+                assert_eq!(a.per_rank_time, b.per_rank_time, "{tag}");
+                assert_eq!(a.components, b.components, "{tag}");
+                assert_eq!(a.events_processed, b.events_processed, "{tag}");
+            }
+        }
+    }
+}
+
+/// The innet collectives are numerically correct under every executor:
+/// allreduce and reduce reproduce the sum oracle, bcast reproduces the
+/// root's buffer — including non-power-of-two rank counts.
+#[test]
+fn innet_executes_to_oracle_under_all_executors() {
+    let close = |a: f32, b: f32| (a - b).abs() < 1e-3 * (1.0 + b.abs());
+    for p in PS {
+        let count = 24;
+        let want_sum = oracle::allreduce(&make_inputs(p, count, 5), Default::default());
+        let want_root = oracle::bcast(&make_inputs(p, count, 5), 0);
+
+        let ar = collectives::generate(Coll::Allreduce, "innet", &GenParams::new(p, count))
+            .unwrap_or_else(|e| panic!("allreduce p={p}: {e}"));
+        let rd = collectives::generate(Coll::Reduce, "innet", &GenParams::new(p, count))
+            .unwrap_or_else(|e| panic!("reduce p={p}: {e}"));
+        let bc = collectives::generate(Coll::Bcast, "innet", &GenParams::new(p, count))
+            .unwrap_or_else(|e| panic!("bcast p={p}: {e}"));
+
+        type Exec = fn(&pico::goal::Goal, Vec<Vec<f32>>, usize) -> Vec<pico::execute::RankBuffers>;
+        let execs: [(&str, Exec); 3] = [
+            ("worklist", |g, i, _| execute(g, i, &ScalarReducer)),
+            ("scan", |g, i, _| execute_scan(g, i, &ScalarReducer)),
+            ("threaded", |g, i, _| execute_threaded(g, i, &ScalarReducer)),
+        ];
+        for (name, run) in execs {
+            // allreduce: every rank holds the full reduction
+            let bufs = run(&ar, make_inputs(p, count, 5), p);
+            for (r, buf) in bufs.iter().enumerate() {
+                for (a, b) in buf.output.iter().zip(&want_sum) {
+                    assert!(close(*a, *b), "{name} allreduce p={p} rank {r}: {a} vs {b}");
+                }
+            }
+            // reduce: the root's output holds the full reduction
+            let bufs = run(&rd, make_inputs(p, count, 5), p);
+            for (a, b) in bufs[0].output.iter().zip(&want_sum) {
+                assert!(close(*a, *b), "{name} reduce p={p} root: {a} vs {b}");
+            }
+            // bcast: every rank's output equals the root's input
+            let bufs = run(&bc, make_inputs(p, count, 5), p);
+            for (r, buf) in bufs.iter().enumerate() {
+                for (a, b) in buf.output.iter().zip(&want_root) {
+                    assert!(close(*a, *b), "{name} bcast p={p} rank {r}: {a} vs {b}");
+                }
+            }
+        }
+    }
+}
+
+const GOLDEN_ALLREDUCE: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/data/innet_allreduce8.goal");
+const GOLDEN_BCAST: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/data/innet_bcast8.goal");
+
+/// The golden innet GOAL files are the canonical wire form: parse → seal →
+/// re-export reproduces the file bytes exactly, and a fresh generation at
+/// the same shape serializes to the same bytes (mirrors the `ring4.goal`
+/// import test, tightened to byte identity — the goldens carry no
+/// comments, so nothing is lossy).
+#[test]
+fn golden_innet_goal_files_are_canonical() {
+    for (path, coll) in [(GOLDEN_ALLREDUCE, Coll::Allreduce), (GOLDEN_BCAST, Coll::Bcast)] {
+        let file = std::fs::read_to_string(path).unwrap();
+        let parsed = pico::goal_text::from_text(&file).unwrap_or_else(|e| panic!("{path}: {e}"));
+        assert_eq!(pico::goal_text::to_text(&parsed), file, "{path}: re-export must be identical");
+        let generated = collectives::generate(coll, "innet", &GenParams::new(8, 16))
+            .unwrap_or_else(|e| panic!("{path}: {e}"));
+        assert_eq!(parsed, generated, "{path}: parsed arena must equal a fresh generation");
+        assert_eq!(pico::goal_text::to_text(&generated), file, "{path}");
+    }
+}
+
+/// More switch ports never slow an aggregation down: the full simulated
+/// makespan of an innet allreduce is monotone non-increasing in
+/// `SwitchCaps.ports` (the netmodel-level counterpart lives in
+/// `netmodel.rs`; this covers the whole pipeline through the DES).
+#[test]
+fn innet_makespan_monotone_in_switch_ports() {
+    let p = 17;
+    let goal = collectives::generate(Coll::Allreduce, "innet", &GenParams::new(p, p * 256)).unwrap();
+    let mut prev = f64::INFINITY;
+    for ports in [1usize, 2, 4, 8, 64] {
+        let mut prof = leonardo();
+        prof.switch = SwitchCaps::sharp(1 << 20, ports);
+        let alloc = Allocation::new(&prof, p, AllocPolicy::Contiguous, 3);
+        let pl = Placement::new(&prof, &alloc, 1, RankOrder::Block);
+        let rep = simulate(&goal, &SimContext::new(&prof, &pl));
+        assert!(rep.total_time.is_finite() && rep.total_time > 0.0);
+        assert!(
+            rep.total_time <= prev + 1e-15,
+            "ports {ports}: {} > previous {prev}",
+            rep.total_time
+        );
+        prev = rep.total_time;
+    }
+}
+
+fn innet_spec(sizes: Vec<usize>) -> TestSpec {
+    let mut spec = TestSpec::new("innet-fallback", "libpico", Coll::Allreduce);
+    spec.sizes = sizes;
+    spec.nodes = vec![4];
+    spec.algorithms = vec!["innet".into()];
+    spec.iterations = 1;
+    spec.warmup = 0;
+    spec
+}
+
+/// Campaign-level degradation is typed and observable, never silent: a
+/// switch without aggregation falls back with `NoAggregation`, a payload
+/// past the engine buffer with `PayloadTooLarge`, and a served request
+/// carries no record at all.  The record JSON gains a `fallback` object
+/// exactly when the outcome has one (old records stay byte-stable).
+#[test]
+fn campaign_fallback_is_typed_and_recorded() {
+    // mn5's switch has no aggregation engine
+    let engine = Engine::new(EngineConfig::for_system("mn5"));
+    let outs = engine.run_spec(&innet_spec(vec![4096])).unwrap();
+    assert_eq!(outs.len(), 1);
+    let fb = outs[0].fallback.as_ref().expect("mn5 must degrade innet");
+    assert_eq!(fb.reason, FallbackReason::NoAggregation);
+    assert_eq!(fb.requested, "innet");
+    assert_eq!(outs[0].effective_algorithm, "ring");
+
+    // leonardo serves small payloads, degrades past max_reduction_bytes
+    let engine = Engine::new(EngineConfig::for_system("leonardo"));
+    let mut sink = VecSink::new();
+    let spec = CampaignSpec::new(innet_spec(vec![4096, 4 << 20]));
+    let outs = engine.campaign_into(&spec, &mut sink).unwrap();
+    assert_eq!(outs.len(), 2);
+    assert!(outs[0].fallback.is_none(), "4 KiB fits the aggregation buffer");
+    assert_eq!(outs[0].effective_algorithm, "innet");
+    let fb = outs[1].fallback.as_ref().expect("4 MiB exceeds the buffer");
+    assert_eq!(fb.reason, FallbackReason::PayloadTooLarge);
+    assert_eq!(outs[1].effective_algorithm, "ring");
+    // record serialization: the fallback object appears only when set
+    let served = sink.records[0].to_json().to_string_compact();
+    let degraded = sink.records[1].to_json().to_string_compact();
+    assert!(!served.contains("fallback"), "{served}");
+    assert!(degraded.contains("\"fallback\""), "{degraded}");
+    assert!(degraded.contains("payload_too_large"), "{degraded}");
+}
+
+/// The sweep's crossover table is non-trivial on an aggregation-capable
+/// system: in-network wins somewhere (small payloads, where host cost is
+/// O(p) but switch cost is O(1)) and host algorithms win somewhere (large
+/// payloads, where switch aggregation bandwidth is the bottleneck — past
+/// the engine buffer the innet request itself degrades and ties go to
+/// host).
+#[test]
+fn sweep_crossover_has_both_winners() {
+    let engine = Engine::new(EngineConfig::for_system("leonardo"));
+    let spec = SweepSpec::new("libpico", Coll::Allreduce)
+        .with_sizes(vec![1 << 10, 64 << 10, 64 << 20])
+        .with_nodes(vec![4, 64])
+        .with_iterations(1);
+    let report = engine.sweep(&spec).unwrap();
+    let cells = report.crossover_cells();
+    assert!(!cells.is_empty(), "libpico sweep must include the innet family");
+    let winners: Vec<&str> = cells.iter().map(|c| c.winner()).collect();
+    assert!(winners.contains(&"switch"), "no switch win in {cells:?}");
+    assert!(winners.contains(&"host"), "no host win in {cells:?}");
+    // every degraded cell is marked, and degradation happens past 1 MiB
+    for c in &cells {
+        assert_eq!(c.fell_back, c.bytes > 1 << 20, "{c:?}");
+    }
+    let text = report.render();
+    assert!(text.contains("winner=switch"), "{text}");
+    assert!(text.contains("winner=host"), "{text}");
+    assert!(text.contains("[fellback]"), "{text}");
+}
