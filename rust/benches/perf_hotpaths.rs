@@ -338,4 +338,153 @@ fn main() {
         ov.set("cache_hits", stats.hits);
     }
     ov.write_if_env("PICO_BENCH_OVERLAP_OUT");
+
+    // ---- simulator event core (BENCH_sim.json) ----------------------------
+    // The fast path (SimPlan match table + calendar queue + inline local
+    // batching) vs the reference heap loop `simulate_scan`, on the composed
+    // multi-phase schedules the overlap engine actually runs.  Set
+    // PICO_BENCH_SIM_OUT=<path> (scripts/bench.sh does) to persist the
+    // section as its own bench-trajectory entry.
+    section("L3: simulator event core — match table + calendar queue vs heap scan");
+    let mut sj = BenchJson::new("sim");
+    {
+        use pico::backends::LibPico;
+        use pico::benchkit::bench_pair;
+        use pico::compose::{compose, compose_placed, ChainPolicy};
+        use pico::sim::{simulate_scan, simulate_with_plan, SimPlan};
+        use pico::workload::{DnnStepSpec, InterferenceJob, MoeStepSpec, WorkloadSpec};
+
+        let cache = ScheduleCache::new();
+        let place = |nodes: usize| {
+            let alloc = Allocation::new(&prof, nodes, AllocPolicy::Contiguous, 11);
+            Placement::new(&prof, &alloc, 4, RankOrder::Block)
+        };
+        let lower_composed = |spec: &WorkloadSpec, p: usize| {
+            let low = spec.lower(p, &cache, spec.default_chain()).unwrap();
+            let parts: Vec<(&str, &pico::Goal)> =
+                low.parts.iter().map(|(n, g)| (n.as_str(), g.as_ref())).collect();
+            compose_placed(&parts, &low.policy, &low.placement).unwrap()
+        };
+        let pair = |sj: &mut BenchJson, key: &str, name: &str, reps: usize,
+                    goal: &pico::Goal, pl: &Placement| {
+            let ctx = SimContext::new(&prof, pl);
+            let plan = SimPlan::new(goal);
+            let (t_scan, t_fast, speedup) = bench_pair(
+                name,
+                1,
+                reps,
+                || simulate_scan(goal, &ctx).total_time,
+                || simulate_with_plan(goal, &ctx, &plan).total_time,
+            );
+            sj.set_seconds(&format!("{key}_scan_s"), t_scan);
+            sj.set_seconds(&format!("{key}_fast_s"), t_fast);
+            sj.set(&format!("{key}_speedup"), speedup);
+            t_fast
+        };
+
+        // p=256 (64 nodes x 4): two-job interference — a 128-rank bucketed
+        // ring dnn_step co-scheduled with a 128-rank MoE alltoall pair.
+        {
+            let p = 256;
+            let spec = WorkloadSpec::interference(
+                "mix",
+                vec![
+                    InterferenceJob {
+                        ranks: 128,
+                        chain: None,
+                        workload: WorkloadSpec::dnn_step(
+                            "dnn",
+                            DnnStepSpec::new(32 << 20, 2, 4e-3),
+                        ),
+                    },
+                    InterferenceJob {
+                        ranks: 128,
+                        chain: None,
+                        workload: WorkloadSpec::moe_step("moe", MoeStepSpec::new(8 << 20)),
+                    },
+                ],
+            );
+            let goal = lower_composed(&spec, p);
+            let pl = place(p / 4);
+            pair(&mut sj, "p256_interference", "sim: p=256 interference (dnn ‖ moe)", 3, &goal, &pl);
+        }
+
+        // p=1024 (256 nodes x 4): the required composed benchmark — a
+        // 4-bucket dnn_step on the segsize-pipelined tree, every bucket's
+        // schedule served by one canonical skeleton.
+        {
+            let p = 1024;
+            let spec = WorkloadSpec::dnn_step(
+                "dnn1k",
+                DnnStepSpec::new(64 << 20, 4, 4e-3).with_algo("tree_pipelined"),
+            );
+            let goal = lower_composed(&spec, p);
+            let pl = place(p / 4);
+            let t_plan = bench("sim: plan build, p=1024 composed dnn", 1, 10, || {
+                SimPlan::new(&goal).n_channels()
+            });
+            sj.set_seconds("plan_build_p1024_s", t_plan);
+            let t_fast = pair(
+                &mut sj,
+                "p1024_dnn_tree_pipelined",
+                "sim: p=1024 dnn_step tree_pipelined x4",
+                3,
+                &goal,
+                &pl,
+            );
+            let ctx = SimContext::new(&prof, &pl);
+            let events = simulate(&goal, &ctx).events_processed;
+            report_rate("sim: p=1024 composed event throughput", events, t_fast);
+            sj.set_rate("p1024_events", events, t_fast);
+            sj.set("p1024_total_ops", goal.total_ops());
+
+            // 4 innet buckets chained serially — SwitchAgg wave pricing.
+            let backend = LibPico;
+            let buckets: Vec<_> = (0..4)
+                .map(|_| {
+                    cache
+                        .schedule(
+                            &backend,
+                            Coll::Allreduce,
+                            "innet",
+                            &GenParams::new(p, (16 << 20) / 4),
+                        )
+                        .unwrap()
+                })
+                .collect();
+            let refs: Vec<&pico::Goal> = buckets.iter().map(|g| g.as_ref()).collect();
+            let innet = compose(&refs, &ChainPolicy::Serial).unwrap();
+            pair(&mut sj, "p1024_innet_buckets", "sim: p=1024 innet bucket chain x4", 10, &innet, &pl);
+        }
+
+        // p=4096 (1024 nodes x 4): scale point — pipelined tree, 2 buckets.
+        {
+            let p = 4096;
+            let spec = WorkloadSpec::dnn_step(
+                "dnn4k",
+                DnnStepSpec::new(16 << 20, 2, 2e-3).with_algo("tree_pipelined"),
+            );
+            let goal = lower_composed(&spec, p);
+            let pl = place(p / 4);
+            pair(
+                &mut sj,
+                "p4096_dnn_tree_pipelined",
+                "sim: p=4096 dnn_step tree_pipelined x2",
+                3,
+                &goal,
+                &pl,
+            );
+            sj.set("p4096_total_ops", goal.total_ops());
+        }
+
+        let stats = cache.stats();
+        println!(
+            "  -> pipelined-skeleton cache: {} skeletons, {} rescales, {} hits",
+            stats.skeletons, stats.rescales, stats.hits
+        );
+        sj.set("cache_skeletons", stats.skeletons);
+        sj.set("cache_rescales", stats.rescales);
+        sj.set("cache_hits", stats.hits);
+    }
+    sj.write_if_env("PICO_BENCH_SIM_OUT");
 }

@@ -102,6 +102,25 @@ pub trait Backend: Send + Sync {
     fn count_scalable(&self, _coll: Coll, _algo: &str, _p: usize) -> bool {
         false
     }
+
+    /// The `(count, segsize)`-canonical skeleton layout when
+    /// `schedule(coll, algo, ·)` lands on a segsize-pipelined generator and
+    /// the point rescales exactly (see
+    /// [`crate::collectives::pipeline_layout`]).
+    ///
+    /// The orchestrator's schedule cache consults this after
+    /// [`Backend::count_scalable`] declines, so the pipelined family shares
+    /// skeletons across a sweep too.  The conservative default is `None` —
+    /// an adapter that remaps algorithm names must resolve them to the
+    /// underlying generator before answering.
+    fn pipeline_layout(
+        &self,
+        _coll: Coll,
+        _algo: &str,
+        _params: &GenParams,
+    ) -> Option<collectives::PipelineLayout> {
+        None
+    }
 }
 
 /// Resolve the algorithm name a backend will actually run for a request:
@@ -258,6 +277,17 @@ impl Backend for LibPico {
         // itself scalable, so the registry answer holds either way
         collectives::count_scalable(coll, algo, p)
     }
+
+    fn pipeline_layout(
+        &self,
+        coll: Coll,
+        algo: &str,
+        params: &GenParams,
+    ) -> Option<collectives::PipelineLayout> {
+        // the degradations above only touch allgather/reduce_scatter, which
+        // are not pipelined, so the registry answer holds as-is
+        collectives::pipeline_layout(coll, algo, params)
+    }
 }
 
 fn libpico(coll: Coll, name: &str, params: &GenParams) -> GenResult {
@@ -403,6 +433,18 @@ impl Backend for OpenMpiSim {
             _ => collectives::count_scalable(coll, algo, p),
         }
     }
+
+    fn pipeline_layout(
+        &self,
+        coll: Coll,
+        algo: &str,
+        params: &GenParams,
+    ) -> Option<collectives::PipelineLayout> {
+        // the one remap, (bcast, "binomial") -> binomial_doubling_staged,
+        // is not pipelined, and "binomial" is not a pipelined name either,
+        // so the registry lookup is exact for every exposed algorithm
+        collectives::pipeline_layout(coll, algo, params)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -531,6 +573,17 @@ impl Backend for CrayMpichSim {
         // every degradation path above (ring, binomial) is itself
         // scalable, so the registry answer is safe for all branches
         collectives::count_scalable(coll, algo, p)
+    }
+
+    fn pipeline_layout(
+        &self,
+        coll: Coll,
+        algo: &str,
+        params: &GenParams,
+    ) -> Option<collectives::PipelineLayout> {
+        // the degradation paths (ring, binomial) never land on a pipelined
+        // generator, so the registry lookup is exact here too
+        collectives::pipeline_layout(coll, algo, params)
     }
 }
 
@@ -692,6 +745,22 @@ impl Backend for SimCcl {
             _ => None,
         };
         underlying.is_some_and(|(c, a)| collectives::count_scalable(c, a, p))
+    }
+
+    fn pipeline_layout(
+        &self,
+        coll: Coll,
+        algo: &str,
+        params: &GenParams,
+    ) -> Option<collectives::PipelineLayout> {
+        // resolve the NCCL-facing names that land on pipelined generators
+        match (coll, algo) {
+            (Coll::Allreduce, "tree") => {
+                collectives::pipeline_layout(coll, "tree_pipelined", params)
+            }
+            (Coll::Bcast, "ring") => collectives::pipeline_layout(coll, "pipeline", params),
+            _ => None,
+        }
     }
 }
 

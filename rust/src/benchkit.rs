@@ -62,6 +62,26 @@ pub fn bench_parallel<A, B>(
     speedup
 }
 
+/// Measure a baseline and an optimized variant of the same workload,
+/// report both plus the speedup, and return `(baseline_median,
+/// optimized_median, speedup)`.  Used by the sim-core section of
+/// `perf_hotpaths.rs` to track `simulate_scan` vs the planned fast path.
+pub fn bench_pair<A, B>(
+    name: &str,
+    warmup: usize,
+    reps: usize,
+    baseline: impl FnMut() -> A,
+    optimized: impl FnMut() -> B,
+) -> (f64, f64, f64) {
+    let b = measure(warmup, reps, baseline);
+    let o = measure(warmup, reps, optimized);
+    report(&format!("{name} (scan)"), &b);
+    report(&format!("{name} (fast)"), &o);
+    let speedup = b.median / o.median.max(1e-30);
+    println!("  -> fast-path speedup: {speedup:.2}x");
+    (b.median, o.median, speedup)
+}
+
 /// Throughput report helper (events/sec style).
 pub fn report_rate(name: &str, items: usize, seconds: f64) {
     println!(
@@ -99,6 +119,11 @@ impl BenchJson {
     /// Record a timing in seconds.
     pub fn set_seconds(&mut self, key: &str, seconds: f64) {
         self.set(key, seconds);
+    }
+
+    /// Record a throughput (`<key>_per_s`) from an item count and a timing.
+    pub fn set_rate(&mut self, key: &str, items: usize, seconds: f64) {
+        self.set(&format!("{key}_per_s"), items as f64 / seconds.max(1e-30));
     }
 
     pub fn to_json(&self) -> &Json {

@@ -321,8 +321,15 @@ pub fn tree(params: &GenParams) -> GenResult {
 /// up and down the binomial tree in a pipeline, recovering bandwidth at
 /// large sizes while keeping the log-depth latency at small ones.
 pub fn tree_pipelined(params: &GenParams) -> GenResult {
-    let seg = params.segsize.unwrap_or_else(|| (params.count / 8).clamp(1024, 262_144));
-    tree_segmented(params, seg.max(1))
+    tree_segmented(params, tree_pipelined_segsize(params))
+}
+
+/// The effective segment size (elements) [`tree_pipelined`] uses at
+/// `params` — the single source of truth for the heuristic, shared with
+/// [`crate::collectives::pipeline_layout`] so the schedule cache derives
+/// the exact segment grid the generator will emit.
+pub fn tree_pipelined_segsize(params: &GenParams) -> usize {
+    params.segsize.unwrap_or_else(|| (params.count / 8).clamp(1024, 262_144)).max(1)
 }
 
 fn tree_segmented(params: &GenParams, segsize: usize) -> GenResult {
@@ -491,6 +498,15 @@ mod tests {
     }
 }
 
+/// The effective segment size (elements) [`segmented_ring`] uses at
+/// `params` — shared with [`crate::collectives::pipeline_layout`] so the
+/// schedule cache can derive the generator's exact segment grid.  Only
+/// meaningful for `p > 1` (at `p == 1` the generator delegates to `ring`).
+pub fn segmented_ring_segsize(params: &GenParams) -> usize {
+    let (p, n) = (params.p.max(1), params.count);
+    params.segsize.unwrap_or_else(|| (n / p / 4).clamp(256, 65_536))
+}
+
 /// Segmented ring allreduce (Open MPI `coll_tuned` large-message default):
 /// each ring chunk is split into segments so the per-segment reduction of
 /// segment g overlaps the transfer of segment g+1.  Expressed with
@@ -503,7 +519,7 @@ pub fn segmented_ring(params: &GenParams) -> GenResult {
     if p == 1 {
         return ring(params);
     }
-    let seg_elems = params.segsize.unwrap_or_else(|| (n / p / 4).clamp(256, 65_536));
+    let seg_elems = segmented_ring_segsize(params);
     let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(false);
     let next = |r: usize| (r + 1) % p;
     let prev = |r: usize| (r + p - 1) % p;

@@ -218,12 +218,20 @@ pub fn scatter_allgather(params: &GenParams) -> GenResult {
     Ok(b.finish()?)
 }
 
+/// The effective segment size (elements) [`pipeline`] uses at `params` —
+/// shared with [`crate::collectives::pipeline_layout`] so the schedule
+/// cache can derive the generator's exact segment grid.
+pub fn pipeline_segsize(params: &GenParams) -> usize {
+    let (p, n) = (params.p, params.count);
+    params.segsize.unwrap_or_else(|| (n / (4 * p.max(2))).clamp(1024, 262_144))
+}
+
 /// Chained/pipelined broadcast: the payload flows down a rank chain in
 /// segments, so all links are busy once the pipeline fills.
 pub fn pipeline(params: &GenParams) -> GenResult {
     let (p, n, root) = (params.p, params.count, params.root);
     let inst = params.instrument;
-    let segsize = params.segsize.unwrap_or_else(|| (n / (4 * p.max(2))).clamp(1024, 262_144));
+    let segsize = pipeline_segsize(params);
     let mut b = GoalBuilder::new(p, n, params.elem_bytes).with_instrumentation(inst);
     emit_root_init(&mut b, params);
     if p == 1 {

@@ -244,6 +244,11 @@ pub fn find(coll: Coll, name: &str) -> Option<&'static AlgoInfo> {
 /// `count = p` skeleton's boundaries cannot be rescaled exactly — pinned
 /// by `rabenseifner_non_pow2_rescale_is_inexact_and_stays_excluded` in
 /// `allreduce.rs`.
+///
+/// The segsize-pipelined exclusion is no longer a blanket cache miss,
+/// though: [`pipeline_layout`] gives `tree_pipelined`, `segmented_ring` and
+/// bcast `pipeline` a `(count, segsize)`-canonical skeleton path of their
+/// own, keyed by segment count instead of `count = p`.
 pub fn count_scalable(coll: Coll, algo: &str, p: usize) -> bool {
     match (coll, algo) {
         (Coll::Allreduce, "linear" | "recursive_doubling" | "ring" | "tree" | "innet") => true,
@@ -263,6 +268,83 @@ pub fn count_scalable(coll: Coll, algo: &str, p: usize) -> bool {
         (Coll::Gather | Coll::Scatter, "linear" | "binomial") => true,
         _ => false,
     }
+}
+
+/// Canonical-skeleton layout of a segsize-pipelined schedule: the point's
+/// schedule equals the schedule generated at `count = canon_count` with
+/// `segsize = Some(1)`, rescaled by `m` (see
+/// [`crate::goal::GoalGraph::rescaled`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PipelineLayout {
+    /// Element count of the canonical skeleton (one element per segment
+    /// slot: `nseg` for the tree/chain pipelines, `p × nseg` for the
+    /// segmented ring).
+    pub canon_count: usize,
+    /// Exact rescale factor: `params.count == canon_count × m`.
+    pub m: usize,
+}
+
+/// The `(count, segsize)`-canonical skeleton layout for the segsize-pipelined
+/// family (`tree_pipelined`, `segmented_ring`, bcast `pipeline`), or `None`
+/// when the algorithm is not pipelined or the point does not rescale
+/// exactly.
+///
+/// These generators fail [`count_scalable`] because their segment *count*
+/// depends on the element count.  But for a fixed point their structure is a
+/// pure function of `(p, nseg)`: op kinds, peers, tags and dependencies only
+/// depend on how many segments exist, while every `Seg` offset/length is the
+/// segment grid itself.  So the schedule at `(count, segsize)` equals the
+/// schedule at `count = nseg_slots, segsize = Some(1)` (each slot one
+/// element) rescaled by `m = count / nseg_slots` — **iff** the target grid
+/// is uniform, i.e. every segment has the same length.  That divisibility is
+/// exactly what this function checks; non-uniform grids (`chunk` hands the
+/// remainder to the leading segments) return `None` and fall back to direct
+/// generation.
+///
+/// The segsize heuristics are delegated to the generators' own exported
+/// helpers (`allreduce::tree_pipelined_segsize`, …) so cache and generator
+/// can never disagree about the segment grid.  Transparency is pinned by
+/// `rust/tests/sim_fastpath.rs::pipelined_cache_is_transparent`.
+pub fn pipeline_layout(coll: Coll, algo: &str, params: &GenParams) -> Option<PipelineLayout> {
+    let (p, n) = (params.p, params.count);
+    if p == 0 || n == 0 {
+        return None;
+    }
+    match (coll, algo) {
+        (Coll::Allreduce, "tree_pipelined") => {
+            let seg = allreduce::tree_pipelined_segsize(params);
+            // p == 1 emits init only (a single full-buffer copy) — still
+            // linear, canonical at one element.
+            let nseg = if p == 1 { 1 } else { n.div_ceil(seg).max(1) };
+            (n % nseg == 0).then_some(PipelineLayout { canon_count: nseg, m: n / nseg })
+        }
+        (Coll::Allreduce, "segmented_ring") => {
+            // p == 1 delegates to plain `ring`, which is count-scalable and
+            // owns its own cache path.
+            if p == 1 || n % p != 0 {
+                return None;
+            }
+            let seg = allreduce::segmented_ring_segsize(params);
+            if seg == 0 {
+                return None; // explicit Some(0): let direct generation panic/handle it
+            }
+            let per_chunk = n / p;
+            let nseg = per_chunk.div_ceil(seg).max(1);
+            (per_chunk % nseg == 0)
+                .then_some(PipelineLayout { canon_count: p * nseg, m: per_chunk / nseg })
+        }
+        (Coll::Bcast, "pipeline") => {
+            let seg = pipeline_segsize_guard(params)?;
+            let nseg = if p == 1 { 1 } else { n.div_ceil(seg).max(1) };
+            (n % nseg == 0).then_some(PipelineLayout { canon_count: nseg, m: n / nseg })
+        }
+        _ => None,
+    }
+}
+
+fn pipeline_segsize_guard(params: &GenParams) -> Option<usize> {
+    let seg = bcast::pipeline_segsize(params);
+    (seg > 0).then_some(seg)
 }
 
 /// Generate the schedule for (collective, algorithm) at a test point.

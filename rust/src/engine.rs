@@ -62,7 +62,7 @@ use crate::orchestrator::{
 };
 use crate::replay::{self, ReplayResult};
 use crate::results::{Granularity, Measurement, Record, RecordSink, RunDir};
-use crate::sim::{simulate, SimContext, SimReport};
+use crate::sim::{simulate, simulate_scan, simulate_with_plan, SimContext, SimPlan, SimReport};
 use crate::topology::{Allocation, Placement};
 use crate::tracer::{self, TraceReport};
 use crate::tuning::{self, Profile};
@@ -443,7 +443,20 @@ impl Engine {
             compose_placed(&refs, &lowered.policy, &lowered.placement).map_err(String::from)?,
         );
         let ctx = SimContext::new(&profile, &placement);
-        let sim = simulate(&schedule, &ctx);
+        let plan = SimPlan::new(&schedule);
+        let sim = simulate_with_plan(&schedule, &ctx, &plan);
+        // Fast-path differential smoke (scripts/verify.sh): re-run the
+        // composed schedule through the reference heap loop and demand a
+        // bit-identical report.  Off by default — the env gate keeps the
+        // O(2×) cost out of normal runs.
+        if std::env::var_os("PICO_SIM_DIFFERENTIAL").is_some() {
+            let scan = simulate_scan(&schedule, &ctx);
+            if scan != sim {
+                return Err(
+                    "sim fast path diverged from simulate_scan on the composed schedule".into()
+                );
+            }
+        }
         let shared = matches!(lowered.placement, PhasePlacement::Shared);
 
         // Σ standalone per-phase makespans: the serial-replay number for

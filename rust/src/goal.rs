@@ -689,6 +689,17 @@ impl GoalGraph {
         (self.csr.dep_off[g + 1] - self.csr.dep_off[g]) as u32
     }
 
+    /// Ops with no dependencies — the simulator's event-queue seed set
+    /// (sealed schedule stat; sizes the queue instead of an op-count guess).
+    pub fn root_count(&self) -> usize {
+        (0..self.total_ops()).filter(|&g| self.dep_count(g) == 0).count()
+    }
+
+    /// Largest per-rank op count (sealed schedule stat for sim sizing).
+    pub fn max_rank_ops(&self) -> usize {
+        (0..self.p()).map(|r| self.ops(r).len()).max().unwrap_or(0)
+    }
+
     /// Ops waiting on global op `g` (precompiled at seal time).
     #[inline]
     pub fn dependents(&self, g: usize) -> &[u32] {

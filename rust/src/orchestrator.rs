@@ -61,7 +61,7 @@ use crate::goal::{Goal, GoalError, ReduceOp};
 use crate::metadata;
 use crate::netmodel::Proto;
 use crate::results::{Granularity, Measurement, OrderedRecordSink, Record, RecordSink, RunDir};
-use crate::sim::{simulate, SimContext};
+use crate::sim::{simulate_with_plan, SimContext, SimPlan};
 use crate::sync::skew_profile;
 use crate::topology::{Allocation, Placement, SystemProfile};
 
@@ -189,9 +189,12 @@ impl ScheduleCache {
     /// Resolution order: exact key hit → rescale from a byte-agnostic
     /// skeleton (count-scalable algorithms with `count % p == 0` and no
     /// explicit segsize; the skeleton is generated once at `count = p`) →
-    /// direct generation.  The rescale path is bit-transparent: the
-    /// returned graph equals a direct generation at the requested count
-    /// (property-tested in `rust/tests/prop_invariants.rs`).
+    /// rescale from a `(count, segsize)`-canonical pipelined skeleton
+    /// ([`Backend::pipeline_layout`]; generated once per segment count at
+    /// one element per segment) → direct generation.  Both rescale paths
+    /// are bit-transparent: the returned graph equals a direct generation
+    /// at the requested count (property-tested in
+    /// `rust/tests/prop_invariants.rs` and `rust/tests/sim_fastpath.rs`).
     pub fn schedule(
         &self,
         backend: &dyn Backend,
@@ -215,61 +218,99 @@ impl ScheduleCache {
             && backend.count_scalable(coll, algo, params.p);
         let goal = if scalable {
             let skel_key = CacheKey { skeleton: true, count: 0, ..key.clone() };
-            let skel = {
-                let inner = self.inner.lock().unwrap();
-                inner.goals.get(&skel_key).cloned()
-            };
-            let skel = match skel {
-                Some(s) => s,
-                None => {
-                    let sk_params = GenParams { count: params.p, ..params.clone() };
-                    let g = Arc::new(backend.schedule(coll, algo, &sk_params)?);
-                    let mut inner = self.inner.lock().unwrap();
-                    inner.stats.skeletons += 1;
-                    inner.goals.insert(skel_key, g.clone());
-                    g
-                }
-            };
+            let sk_params = GenParams { count: params.p, ..params.clone() };
+            let skel = self.skeleton(backend, coll, algo, skel_key, &sk_params)?;
             let m = params.count / params.p;
             if m == 1 {
                 skel
             } else {
-                // Rescale arithmetic guard: `rescaled` multiplies count /
-                // tmp_count / every segment offset+length by `m` without
-                // checks, and nothing re-validates the result — a hostile
-                // byte size must surface as the same typed ByteOverflow a
-                // seal would produce, not wrap (segments are bounded by
-                // the two capacities, so these two products cover them).
-                let fits = |elems: usize| {
-                    elems
-                        .checked_mul(m)
-                        .and_then(|c| c.checked_mul(skel.elem_bytes))
-                        .is_some()
-                };
-                if !fits(skel.count) {
-                    return Err(GoalError::ByteOverflow {
-                        what: "count",
-                        elems: params.count,
-                        elem_bytes: skel.elem_bytes,
-                    }
-                    .into());
-                }
-                if !fits(skel.tmp_count) {
-                    return Err(GoalError::ByteOverflow {
-                        what: "tmp_count",
-                        elems: skel.tmp_count.saturating_mul(m),
-                        elem_bytes: skel.elem_bytes,
-                    }
-                    .into());
-                }
-                self.inner.lock().unwrap().stats.rescales += 1;
-                Arc::new(skel.rescaled(m))
+                self.rescale_checked(&skel, m, params.count)?
+            }
+        } else if let Some(lay) = backend.pipeline_layout(coll, algo, params) {
+            // Segsize-pipelined family: the skeleton is canonical in the
+            // *segment count* — generated once with one element per segment
+            // slot — and rescaled by the uniform segment length.  Requests
+            // with different (count, segsize) but the same segment grid
+            // share one skeleton.
+            let skel_key = CacheKey {
+                skeleton: true,
+                count: lay.canon_count,
+                segsize: Some(1),
+                ..key.clone()
+            };
+            let sk_params =
+                GenParams { count: lay.canon_count, segsize: Some(1), ..params.clone() };
+            let skel = self.skeleton(backend, coll, algo, skel_key, &sk_params)?;
+            if lay.m == 1 {
+                skel
+            } else {
+                self.rescale_checked(&skel, lay.m, params.count)?
             }
         } else {
             Arc::new(backend.schedule(coll, algo, params)?)
         };
         self.inner.lock().unwrap().goals.insert(key, goal.clone());
         Ok(goal)
+    }
+
+    /// Fetch-or-build a skeleton entry.  Generation runs outside the lock
+    /// (two workers may race to build the same skeleton; last insert wins,
+    /// both results are identical by determinism of the generators).
+    fn skeleton(
+        &self,
+        backend: &dyn Backend,
+        coll: Coll,
+        algo: &str,
+        skel_key: CacheKey,
+        sk_params: &GenParams,
+    ) -> Result<Arc<Goal>, String> {
+        {
+            let inner = self.inner.lock().unwrap();
+            if let Some(s) = inner.goals.get(&skel_key) {
+                return Ok(s.clone());
+            }
+        }
+        let g = Arc::new(backend.schedule(coll, algo, sk_params)?);
+        let mut inner = self.inner.lock().unwrap();
+        inner.stats.skeletons += 1;
+        inner.goals.insert(skel_key, g.clone());
+        Ok(g)
+    }
+
+    /// `skel.rescaled(m)` behind the overflow guard.
+    ///
+    /// Rescale arithmetic guard: `rescaled` multiplies count / tmp_count /
+    /// every segment offset+length by `m` without checks, and nothing
+    /// re-validates the result — a hostile byte size must surface as the
+    /// same typed ByteOverflow a seal would produce, not wrap (segments are
+    /// bounded by the two capacities, so these two products cover them).
+    fn rescale_checked(
+        &self,
+        skel: &Arc<Goal>,
+        m: usize,
+        requested_count: usize,
+    ) -> Result<Arc<Goal>, String> {
+        let fits = |elems: usize| {
+            elems.checked_mul(m).and_then(|c| c.checked_mul(skel.elem_bytes)).is_some()
+        };
+        if !fits(skel.count) {
+            return Err(GoalError::ByteOverflow {
+                what: "count",
+                elems: requested_count,
+                elem_bytes: skel.elem_bytes,
+            }
+            .into());
+        }
+        if !fits(skel.tmp_count) {
+            return Err(GoalError::ByteOverflow {
+                what: "tmp_count",
+                elems: skel.tmp_count.saturating_mul(m),
+                elem_bytes: skel.elem_bytes,
+            }
+            .into());
+        }
+        self.inner.lock().unwrap().stats.rescales += 1;
+        Ok(Arc::new(skel.rescaled(m)))
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -364,6 +405,9 @@ pub fn run_point_cached(
     let mut times: Vec<Vec<f64>> = Vec::with_capacity(spec.iterations);
     let mut components = Default::default();
     let mut tag_times: Vec<(String, f64)> = Vec::new();
+    // The sealed graph is iteration-invariant, so the simulator's match
+    // table is compiled once and shared across warmup + measured runs.
+    let plan = SimPlan::new(&goal);
     for it in 0..spec.warmup + spec.iterations {
         let skew = skew_profile(spec.sync, profile, &placement, spec.seed + it as u64);
         let mut ctx = SimContext::new(profile, &placement).with_cfg(cfg);
@@ -371,7 +415,7 @@ pub fn run_point_cached(
         if let Some(m) = mem_override.as_ref() {
             ctx.mem = Some(m);
         }
-        let rep = simulate(&goal, &ctx);
+        let rep = simulate_with_plan(&goal, &ctx, &plan);
         if it < spec.warmup {
             continue;
         }
@@ -385,9 +429,8 @@ pub fn run_point_cached(
         times.push(per_rank);
         components = rep.components;
         if spec.instrument {
-            let mut tt: Vec<(String, f64)> = rep.tag_times.into_iter().collect();
-            tt.sort_by(|a, b| a.0.cmp(&b.0));
-            tag_times = tt;
+            // already name-sorted and deterministic (sim.rs interns tags)
+            tag_times = rep.tag_times;
         }
     }
     let measurement = Measurement { times, components, tag_times };

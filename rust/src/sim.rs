@@ -18,10 +18,27 @@
 //! The engine is fully deterministic: identical inputs produce identical
 //! virtual timelines (asserted by tests), satisfying reproducibility (R5).
 //!
+//! # Event core (DESIGN.md §Perf)
+//!
+//! The inner loop is compiled against a [`SimPlan`] built once per sealed
+//! [`Goal`]: every Send/Recv/SwitchAgg op carries a **dense match id**
+//! (channel slot or wave slot) resolved at plan time, so the hot loop
+//! indexes flat `Vec`s instead of probing `HashMap`s per event.  The global
+//! `BinaryHeap` is replaced by a bucketed **calendar queue** sized from the
+//! sealed schedule's stats, and dependency-only local ops (Calc / Copy /
+//! Reduce) are executed inline the moment their last dependency completes —
+//! they never enter the event queue at all.  This is result-transparent:
+//! local ops touch no shared resource, their finish time is a pure function
+//! of their ready time, and every key pushed for a non-local op is
+//! identical to what the heap-based loop would push, so the non-local pop
+//! order (and therefore every reservation on every shared resource) is
+//! unchanged.  The pre-plan heap loop survives as [`simulate_scan`] and the
+//! equivalence is pinned bit-for-bit by `rust/tests/sim_fastpath.rs`.
+//!
 //! The dependency graph arrives **precompiled**: the [`Goal`] arena carries
 //! the dependents CSR built once at sealing time (`goal.rs` §Arena
 //! layout), so each `simulate` call allocates only its own per-run state
-//! (pending counters, start/finish times, the event heap and channel
+//! (pending counters, start/finish times, the event queue and channel
 //! queues) — the per-invocation CSR rebuild that used to dominate sweep
 //! hot paths is gone (DESIGN.md §IR).
 //!
@@ -101,15 +118,16 @@ impl PhaseSpan {
 }
 
 /// Result of simulating one Goal.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SimReport {
     /// Collective completion: max finish time across ranks.
     pub total_time: f64,
     pub per_rank_time: Vec<f64>,
     /// Component breakdown averaged across ranks.
     pub components: Components,
-    /// Mean time per tag region name (averaged over ranks that have it).
-    pub tag_times: HashMap<String, f64>,
+    /// Mean time per tag region name (averaged over ranks that have it),
+    /// sorted by name — deterministic bytes across runs and hashers.
+    pub tag_times: Vec<(String, f64)>,
     pub events_processed: usize,
     /// Per-phase spans, in phase order (empty unless the goal carries a
     /// [`PhaseTable`](crate::goal::PhaseTable) — i.e. composed schedules).
@@ -161,7 +179,14 @@ fn category(kind: &OpKind) -> Category {
     }
 }
 
-/// Totally ordered f64 key for the event heap.
+/// Local ops complete purely as a function of their ready time (no shared
+/// resource, no matching) — the fast path executes them inline instead of
+/// queueing them.
+fn is_local(kind: &OpKind) -> bool {
+    matches!(kind, OpKind::Calc { .. } | OpKind::Copy { .. } | OpKind::Reduce { .. })
+}
+
+/// Totally ordered f64 key for the reference event heap.
 #[derive(Debug, Clone, Copy, PartialEq)]
 struct TimeKey(f64);
 
@@ -181,14 +206,582 @@ impl Ord for TimeKey {
 
 type ChannelKey = (u32, u32, u32); // (src, dst, tag)
 
-#[derive(Default)]
+#[derive(Default, Clone)]
 struct Channel {
     sends: VecDeque<(usize, f64)>, // (global op id, ready time)
     recvs: VecDeque<(usize, f64)>,
 }
 
-/// Run `goal` on the modelled cluster.
+// ---------------------------------------------------------------------------
+// Sealed-time precompilation
+// ---------------------------------------------------------------------------
+
+const NO_MATCH: u32 = u32::MAX;
+
+/// Per-[`Goal`] match table, compiled once and reused across every
+/// simulation of that graph (the orchestrator builds it once per point and
+/// shares it over warmup + measured iterations).
+///
+/// For every op it resolves the `(src, dst, tag)` channel — or the
+/// SwitchAgg wave tag — to a **dense integer id**, so the simulator's inner
+/// loop never hashes: channels live in a flat `Vec<Channel>` and wave
+/// membership in a flat `Vec<Vec<_>>`, both indexed by `match_id`.  It also
+/// carries the sealed schedule's queue-sizing stats (root-op count), which
+/// replaces the old `total_ops / 4 + 16` capacity guess.
+#[derive(Debug, Clone)]
+pub struct SimPlan {
+    total_ops: usize,
+    /// Dense channel slot (Send/Recv) or wave slot (SwitchAgg) per op;
+    /// `NO_MATCH` for local ops, which never consult it.
+    match_id: Vec<u32>,
+    n_channels: usize,
+    /// Expected member count per wave slot.
+    wave_expect: Vec<u32>,
+    /// Ops with no dependencies — the event queue's seed population.
+    roots: usize,
+}
+
+impl SimPlan {
+    /// Compile the match table for `goal` (one pass over the arena).
+    pub fn new(goal: &Goal) -> Self {
+        let total_ops = goal.total_ops();
+        let mut match_id = vec![NO_MATCH; total_ops];
+        let mut channel_ids: HashMap<ChannelKey, u32, crate::util::FastBuild> = Default::default();
+        let mut wave_ids: HashMap<u32, u32, crate::util::FastBuild> = Default::default();
+        let mut wave_expect: Vec<u32> = Vec::new();
+        for r in 0..goal.p() {
+            for i in 0..goal.ops(r).len() {
+                let g = goal.gid(r, i);
+                let key = match goal.kinds[g] {
+                    OpKind::Send { peer, tag, .. } => (r as u32, peer as u32, tag),
+                    OpKind::Recv { peer, tag, .. } => (peer as u32, r as u32, tag),
+                    OpKind::SwitchAgg { tag, .. } => {
+                        let next = wave_ids.len() as u32;
+                        let wid = *wave_ids.entry(tag).or_insert(next);
+                        if wid == next {
+                            wave_expect.push(0);
+                        }
+                        wave_expect[wid as usize] += 1;
+                        match_id[g] = wid;
+                        continue;
+                    }
+                    _ => continue,
+                };
+                let next = channel_ids.len() as u32;
+                match_id[g] = *channel_ids.entry(key).or_insert(next);
+            }
+        }
+        SimPlan {
+            total_ops,
+            match_id,
+            n_channels: channel_ids.len(),
+            wave_expect,
+            roots: goal.root_count(),
+        }
+    }
+
+    /// Number of distinct `(src, dst, tag)` channels in the schedule.
+    pub fn n_channels(&self) -> usize {
+        self.n_channels
+    }
+
+    /// Number of ops with no dependencies.
+    pub fn roots(&self) -> usize {
+        self.roots
+    }
+}
+
+/// Event-queue capacity derived from sealed schedule stats: the queue's
+/// live population is bounded by the ready frontier, which starts at the
+/// root count and grows at most by the rank count per completion wave —
+/// not by `total_ops` (most ops wait on dependencies, and local ops bypass
+/// the queue entirely on the fast path).
+fn queue_capacity(roots: usize, p: usize) -> usize {
+    (roots + p).next_power_of_two().clamp(16, 1 << 16)
+}
+
+// ---------------------------------------------------------------------------
+// Calendar queue
+// ---------------------------------------------------------------------------
+
+/// Bucketed calendar queue over `(time, gid)` keys: an exact min-priority
+/// queue (same pop order as a binary heap over `Reverse<(TimeKey, usize)>`)
+/// with O(1) amortized push and a pop that scans one virtual bucket.
+///
+/// Keys map to virtual buckets by `⌊t / width⌋` (monotone in `t`, so the
+/// global minimum always lives in the lowest non-empty virtual bucket);
+/// virtual buckets alias onto `n` physical buckets by `vb & (n-1)`.  Pop
+/// scans upward from the cursor, filtering aliased entries by exact virtual
+/// bucket; a push below the cursor pulls it back (the DES is near-monotone
+/// but matched transfers can complete parked partners in the past), and a
+/// full empty lap falls back to a global scan so far-future outliers cost
+/// one pass instead of a spin.
+struct CalendarQueue {
+    buckets: Vec<Vec<(f64, usize)>>,
+    mask: u64,
+    inv_width: f64,
+    cur_vb: u64,
+    len: usize,
+}
+
+impl CalendarQueue {
+    /// `width` is the expected inter-event spacing (we use the intra-group
+    /// flow latency α); `capacity` is rounded to a power of two.
+    fn new(width: f64, capacity: usize) -> Self {
+        let n = capacity.next_power_of_two().clamp(16, 1 << 16);
+        CalendarQueue {
+            buckets: vec![Vec::new(); n],
+            mask: (n - 1) as u64,
+            inv_width: 1.0 / width.max(1e-12),
+            cur_vb: 0,
+            len: 0,
+        }
+    }
+
+    #[inline]
+    fn vbucket(&self, t: f64) -> u64 {
+        let v = t * self.inv_width;
+        // negative / zero times land in bucket 0; the `as` cast saturates
+        // deterministically for out-of-range values
+        if v <= 0.0 {
+            0
+        } else {
+            v as u64
+        }
+    }
+
+    #[inline]
+    fn push(&mut self, t: f64, g: usize) {
+        let vb = self.vbucket(t);
+        if self.len == 0 || vb < self.cur_vb {
+            self.cur_vb = vb;
+        }
+        self.buckets[(vb & self.mask) as usize].push((t, g));
+        self.len += 1;
+    }
+
+    fn pop(&mut self) -> Option<(f64, usize)> {
+        if self.len == 0 {
+            return None;
+        }
+        let mut scanned: u64 = 0;
+        loop {
+            let idx = (self.cur_vb & self.mask) as usize;
+            // min (t, g) among the entries that belong to this virtual
+            // bucket (the physical bucket may hold aliased future entries)
+            let mut best: Option<(usize, f64, usize)> = None;
+            for (i, &(t, g)) in self.buckets[idx].iter().enumerate() {
+                if self.vbucket(t) != self.cur_vb {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some((_, bt, bg)) => match t.total_cmp(&bt) {
+                        std::cmp::Ordering::Less => true,
+                        std::cmp::Ordering::Equal => g < bg,
+                        std::cmp::Ordering::Greater => false,
+                    },
+                };
+                if better {
+                    best = Some((i, t, g));
+                }
+            }
+            if let Some((i, t, g)) = best {
+                self.buckets[idx].swap_remove(i);
+                self.len -= 1;
+                return Some((t, g));
+            }
+            self.cur_vb = self.cur_vb.wrapping_add(1);
+            scanned += 1;
+            if scanned > self.mask {
+                // a full lap found nothing: everything live is far in the
+                // future — locate the global min directly
+                return Some(self.pop_global());
+            }
+        }
+    }
+
+    fn pop_global(&mut self) -> (f64, usize) {
+        debug_assert!(self.len > 0);
+        let mut best: Option<(usize, usize, f64, usize)> = None; // (bucket, pos, t, g)
+        for (bi, b) in self.buckets.iter().enumerate() {
+            for (i, &(t, g)) in b.iter().enumerate() {
+                let better = match best {
+                    None => true,
+                    Some((_, _, bt, bg)) => match t.total_cmp(&bt) {
+                        std::cmp::Ordering::Less => true,
+                        std::cmp::Ordering::Equal => g < bg,
+                        std::cmp::Ordering::Greater => false,
+                    },
+                };
+                if better {
+                    best = Some((bi, i, t, g));
+                }
+            }
+        }
+        let (bi, i, t, g) = best.expect("pop_global on empty queue");
+        self.buckets[bi].swap_remove(i);
+        self.len -= 1;
+        self.cur_vb = self.vbucket(t);
+        (t, g)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared run state: resource pools + dense rank→node/group maps
+// ---------------------------------------------------------------------------
+
+/// Per-run network resource state, with the allocation's node/group ids
+/// resolved to dense indices **per rank** at construction — the transfer
+/// hot path indexes flat arrays instead of hashing node ids per event.
+struct NetRes {
+    nic_tx: Vec<Resource>,
+    nic_rx: Vec<Resource>,
+    fabric: Vec<Resource>,
+    uplink_tx: Vec<Resource>,
+    uplink_rx: Vec<Resource>,
+    /// rank → dense node index (first-seen order over ranks).
+    node_of: Vec<u32>,
+    /// rank → dense group index (first-seen order over nodes).
+    group_of: Vec<u32>,
+    n_groups: usize,
+}
+
+impl NetRes {
+    fn new(ctx: &SimContext, p: usize) -> Self {
+        let net = &ctx.profile.net;
+        let rails = ctx.profile.rails;
+        let mut node_idx: HashMap<usize, usize, crate::util::FastBuild> = Default::default();
+        let mut group_idx: HashMap<usize, usize, crate::util::FastBuild> = Default::default();
+        let mut group_nodes: Vec<usize> = Vec::new(); // allocated nodes per group
+        for r in 0..p {
+            let nd = ctx.placement.rank_node[r];
+            let next = node_idx.len();
+            if node_idx.try_insert_or(nd, next) {
+                let g = ctx.profile.group_of(nd);
+                let gi = *group_idx.entry(g).or_insert_with(|| {
+                    group_nodes.push(0);
+                    group_nodes.len() - 1
+                });
+                group_nodes[gi] += 1;
+            }
+        }
+        let node_of =
+            (0..p).map(|r| node_idx[&ctx.placement.rank_node[r]] as u32).collect();
+        let group_of = (0..p)
+            .map(|r| {
+                group_idx.get(&ctx.placement.rank_group[r]).map_or(u32::MAX, |&gi| gi as u32)
+            })
+            .collect();
+        let nic_bw = rails as f64 * net.rail_bw;
+        // Per-group uplink pool: the job's share of global links scales with
+        // its footprint in the group (taper models oversubscription), plus
+        // one NIC's worth of headroom — adaptive routing gives small
+        // footprints near-full global bandwidth, and only dense per-group
+        // traffic tapers.
+        let uplink_tx: Vec<Resource> = group_nodes
+            .iter()
+            .map(|&n| Resource::new(nic_bw * (net.taper * n as f64 + 1.0)))
+            .collect();
+        NetRes {
+            nic_tx: (0..node_idx.len()).map(|_| Resource::new(nic_bw)).collect(),
+            nic_rx: (0..node_idx.len()).map(|_| Resource::new(nic_bw)).collect(),
+            fabric: (0..node_idx.len()).map(|_| Resource::new(net.intra_node.bw)).collect(),
+            uplink_rx: uplink_tx.clone(),
+            uplink_tx,
+            node_of,
+            group_of,
+            n_groups: group_idx.len(),
+        }
+    }
+
+    /// Schedule one matched transfer; returns (send_finish, recv_finish,
+    /// send_start, recv_start).
+    #[allow(clippy::too_many_arguments)]
+    fn transfer(
+        &mut self,
+        net: &NetParams,
+        cfg: &NetConfig,
+        placement: &Placement,
+        profile: &SystemProfile,
+        rails: usize,
+        src: usize,
+        dst: usize,
+        bytes: usize,
+        send_ready: f64,
+        recv_ready: f64,
+    ) -> (f64, f64, f64, f64) {
+        let tier = placement.tier(src, dst);
+        if tier == Tier::SelfRank {
+            // local: a staging copy at memory bandwidth
+            let dur = profile.mem.copy_time(bytes);
+            let s = send_ready;
+            let rstart = recv_ready.max(send_ready);
+            return (s + dur, rstart.max(s + dur), s, rstart);
+        }
+        let alpha = net.flow_alpha(cfg, tier, bytes);
+        let flow_bw = net.flow_bw(cfg, tier, bytes, rails);
+        let fbytes = bytes as f64;
+        let sn = self.node_of[src] as usize;
+        let dn = self.node_of[dst] as usize;
+
+        if tier == Tier::IntraNode {
+            // scale-up fabric pool on the node; no NIC involvement.
+            let t0 = send_ready.max(recv_ready);
+            let end = self.fabric[sn].reserve(t0, fbytes).max(t0 + fbytes / flow_bw) + alpha;
+            return (end, end, send_ready, recv_ready);
+        }
+
+        let eager = bytes <= net.eager_max(cfg);
+        if eager {
+            // Sender injects as soon as it is ready and completes locally.
+            let inj_end =
+                self.nic_tx[sn].reserve(send_ready, fbytes).max(send_ready + fbytes / flow_bw);
+            let mut arrival = inj_end + alpha;
+            if tier == Tier::InterGroup {
+                let sg = self.group_of[src] as usize;
+                let dg = self.group_of[dst] as usize;
+                arrival = arrival
+                    .max(self.uplink_tx[sg].reserve(send_ready, fbytes))
+                    .max(self.uplink_rx[dg].reserve(send_ready, fbytes));
+            }
+            let drain = self.nic_rx[dn].reserve(arrival - fbytes / flow_bw, fbytes).max(arrival);
+            let recv_fin = recv_ready.max(drain);
+            (inj_end, recv_fin, send_ready, recv_ready)
+        } else {
+            // Rendezvous: both sides synchronize, then a striped zero-copy
+            // transfer occupies the full path.
+            let t0 = send_ready.max(recv_ready);
+            let mut end = (t0 + fbytes / flow_bw)
+                .max(self.nic_tx[sn].reserve(t0, fbytes))
+                .max(self.nic_rx[dn].reserve(t0, fbytes));
+            if tier == Tier::InterGroup {
+                let sg = self.group_of[src] as usize;
+                let dg = self.group_of[dst] as usize;
+                end = end
+                    .max(self.uplink_tx[sg].reserve(t0, fbytes))
+                    .max(self.uplink_rx[dg].reserve(t0, fbytes));
+            }
+            let end = end + alpha;
+            (end, end, send_ready, recv_ready)
+        }
+    }
+
+    /// Price one in-network aggregation wave as a unit — contributor pushes
+    /// serialize on their node tx NICs, the switch pipeline reduces, and
+    /// the multicast result drains through every member's rx NIC.  Members
+    /// are sorted by gid first so reservation order is arrival-independent.
+    /// Returns `(gid, start, finish)` per member.
+    #[allow(clippy::too_many_arguments)]
+    fn price_wave(
+        &mut self,
+        goal: &Goal,
+        net: &NetParams,
+        cfg: &NetConfig,
+        profile: &SystemProfile,
+        rails: usize,
+        tier: Tier,
+        members: &mut Vec<(usize, f64)>,
+        bytes: usize,
+    ) -> Vec<(usize, f64, f64)> {
+        members.sort_unstable_by_key(|&(m, _)| m);
+        let fbytes = bytes as f64;
+        let alpha = net.flow_alpha(cfg, tier, bytes);
+        let flow_bw = net.flow_bw(cfg, tier, bytes, rails);
+        let mut up_max = 0.0f64;
+        let mut n_contrib = 0usize;
+        for &(m, mt) in members.iter() {
+            if let OpKind::SwitchAgg { contribute: true, .. } = goal.kinds[m] {
+                n_contrib += 1;
+                let sn = self.node_of[goal.rank_of(m)] as usize;
+                let up = self.nic_tx[sn].reserve(mt, fbytes).max(mt + fbytes / flow_bw) + alpha;
+                up_max = up_max.max(up);
+            }
+        }
+        let agg_done = up_max + net.switch_agg_time(&profile.switch, n_contrib, bytes);
+        let mut out = Vec::with_capacity(members.len());
+        for &(m, mt) in members.iter() {
+            let dn = self.node_of[goal.rank_of(m)] as usize;
+            let down =
+                self.nic_rx[dn].reserve(agg_done, fbytes).max(agg_done + fbytes / flow_bw) + alpha;
+            out.push((m, mt, down));
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Simulation entry points
+// ---------------------------------------------------------------------------
+
+/// Run `goal` on the modelled cluster (compiles a throwaway [`SimPlan`];
+/// callers simulating the same graph repeatedly should build the plan once
+/// and use [`simulate_with_plan`]).
 pub fn simulate(goal: &Goal, ctx: &SimContext) -> SimReport {
+    simulate_with_plan(goal, ctx, &SimPlan::new(goal))
+}
+
+/// Run `goal` on the modelled cluster with a precompiled match table.
+///
+/// `plan` must have been compiled from this `goal` (asserted by op count;
+/// the orchestrator guarantees it by construction).  Produces bit-identical
+/// reports to [`simulate_scan`] — see the module docs for the argument and
+/// `rust/tests/sim_fastpath.rs` for the differential.
+pub fn simulate_with_plan(goal: &Goal, ctx: &SimContext, plan: &SimPlan) -> SimReport {
+    let p = goal.p();
+    assert_eq!(
+        p,
+        ctx.placement.n_ranks(),
+        "goal has {p} ranks but placement has {}",
+        ctx.placement.n_ranks()
+    );
+    assert_eq!(plan.total_ops, goal.total_ops(), "SimPlan compiled for a different goal");
+    let net = &ctx.profile.net;
+    let mem = ctx.mem.unwrap_or(&ctx.profile.mem);
+    let rails = ctx.profile.rails;
+    let mut res = NetRes::new(ctx, p);
+
+    let total_ops = goal.total_ops();
+    let mut pending: Vec<u32> = (0..total_ops).map(|g| goal.dep_count(g)).collect();
+    let mut finish = vec![f64::NAN; total_ops];
+    let mut start = vec![f64::NAN; total_ops];
+
+    // α is the natural inter-event spacing of the DES; the bucket count
+    // tracks the live frontier (roots + one release per rank per wave).
+    let mut queue = CalendarQueue::new(
+        net.intra_group.alpha,
+        queue_capacity(plan.roots, p),
+    );
+    // Same-rank local chains (Calc/Copy/Reduce) bypass the queue: released
+    // locals land here and are drained inline before the next pop.
+    let mut local_stack: Vec<(usize, f64)> = Vec::new();
+
+    let mut channels: Vec<Channel> = vec![Channel::default(); plan.n_channels];
+    let mut waves: Vec<Vec<(usize, f64)>> = vec![Vec::new(); plan.wave_expect.len()];
+    let mut events = 0usize;
+    // The aggregating switch sits at the job's lowest common fabric level:
+    // leaf switch if the allocation fits one group, spine otherwise.
+    let wave_tier = if res.n_groups <= 1 { Tier::IntraGroup } else { Tier::InterGroup };
+
+    // Completion helper: mark op finished, release dependents (straight
+    // walk of the precompiled dependents CSR).  Released locals go to the
+    // inline stack, everything else to the event queue.
+    macro_rules! complete {
+        ($g:expr, $t_start:expr, $t_end:expr) => {{
+            let g: usize = $g;
+            start[g] = $t_start;
+            finish[g] = $t_end;
+            for &dg in goal.dependents(g) {
+                let dg = dg as usize;
+                pending[dg] -= 1;
+                if pending[dg] == 0 {
+                    let ready = goal
+                        .deps(dg)
+                        .iter()
+                        .map(|&d| finish[d as usize])
+                        .fold(0.0f64, f64::max);
+                    if is_local(&goal.kinds[dg]) {
+                        local_stack.push((dg, ready));
+                    } else {
+                        queue.push(ready, dg);
+                    }
+                }
+            }
+        }};
+    }
+
+    // Seed: every zero-dependency op at its rank's start offset.
+    for r in 0..p {
+        let t0 = ctx.start_times.map_or(0.0, |s| s[r]);
+        for i in 0..goal.ops(r).len() {
+            let g = goal.gid(r, i);
+            if pending[g] == 0 {
+                if is_local(&goal.kinds[g]) {
+                    local_stack.push((g, t0));
+                } else {
+                    queue.push(t0, g);
+                }
+            }
+        }
+    }
+
+    loop {
+        // Drain local chains first: their finish times are pure functions
+        // of their ready times, so executing them eagerly (in any order)
+        // cannot perturb the non-local event order.
+        while let Some((g, t)) = local_stack.pop() {
+            events += 1;
+            let t_end = match goal.kinds[g] {
+                OpKind::Calc { seconds } => t + seconds,
+                OpKind::Copy { src, .. } => t + mem.copy_time(src.bytes(goal.elem_bytes)),
+                OpKind::Reduce { src, .. } => t + mem.reduce_time(src.bytes(goal.elem_bytes)),
+                ref other => unreachable!("non-local op {other:?} on the local stack"),
+            };
+            complete!(g, t, t_end);
+        }
+        let Some((t, g)) = queue.pop() else { break };
+        events += 1;
+        let r = goal.rank_of(g);
+        match goal.kinds[g] {
+            OpKind::Send { peer: _, seg, .. } => {
+                let ch = &mut channels[plan.match_id[g] as usize];
+                if let Some((rg, rt)) = ch.recvs.pop_front() {
+                    let rr = goal.rank_of(rg);
+                    let bytes = seg.bytes(goal.elem_bytes);
+                    let (s_fin, r_fin, s_start, r_start) = res.transfer(
+                        net, &ctx.cfg, ctx.placement, ctx.profile, rails, r, rr, bytes, t, rt,
+                    );
+                    complete!(g, s_start, s_fin);
+                    complete!(rg, r_start, r_fin);
+                } else {
+                    ch.sends.push_back((g, t));
+                }
+            }
+            OpKind::Recv { peer: _, seg, .. } => {
+                let ch = &mut channels[plan.match_id[g] as usize];
+                if let Some((sg, st)) = ch.sends.pop_front() {
+                    let sr = goal.rank_of(sg);
+                    let bytes = seg.bytes(goal.elem_bytes);
+                    let (s_fin, r_fin, s_start, r_start) = res.transfer(
+                        net, &ctx.cfg, ctx.placement, ctx.profile, rails, sr, r, bytes, st, t,
+                    );
+                    complete!(sg, s_start, s_fin);
+                    complete!(g, r_start, r_fin);
+                } else {
+                    ch.recvs.push_back((g, t));
+                }
+            }
+            OpKind::SwitchAgg { seg, .. } => {
+                // One leg of an in-network aggregation wave: park until
+                // every member is ready (wave slot resolved at plan time),
+                // then price the wave as a unit.
+                let wid = plan.match_id[g] as usize;
+                waves[wid].push((g, t));
+                if waves[wid].len() == plan.wave_expect[wid] as usize {
+                    let mut members = std::mem::take(&mut waves[wid]);
+                    let bytes = seg.bytes(goal.elem_bytes);
+                    let done = res.price_wave(
+                        goal, net, &ctx.cfg, ctx.profile, rails, wave_tier, &mut members, bytes,
+                    );
+                    for (m, mt, down) in done {
+                        complete!(m, mt, down);
+                    }
+                }
+            }
+            ref other => unreachable!("local op {other:?} reached the event queue"),
+        }
+    }
+
+    assert_all_complete(goal, &finish);
+    build_report(goal, &start, &finish, events)
+}
+
+/// The pre-plan reference loop: one global binary heap, `HashMap`-matched
+/// channels and waves, every op (local or not) through the queue.  Kept
+/// verbatim as the differential oracle for [`simulate_with_plan`]
+/// (`rust/tests/sim_fastpath.rs` pins bit-identical reports) and for
+/// speedup measurement in `benches/perf_hotpaths.rs`.
+pub fn simulate_scan(goal: &Goal, ctx: &SimContext) -> SimReport {
     let p = goal.p();
     assert_eq!(
         p,
@@ -199,49 +792,15 @@ pub fn simulate(goal: &Goal, ctx: &SimContext) -> SimReport {
     let net = &ctx.profile.net;
     let mem = ctx.mem.unwrap_or(&ctx.profile.mem);
     let rails = ctx.profile.rails;
+    let mut res = NetRes::new(ctx, p);
 
-    // ---- resources -------------------------------------------------------
-    // Map allocated nodes/groups to dense indices.
-    let mut node_idx: HashMap<usize, usize, crate::util::FastBuild> = Default::default();
-    let mut group_idx: HashMap<usize, usize, crate::util::FastBuild> = Default::default();
-    let mut group_nodes: Vec<usize> = Vec::new(); // allocated nodes per group
-    for r in 0..p {
-        let nd = ctx.placement.rank_node[r];
-        let next = node_idx.len();
-        if node_idx.try_insert_or(nd, next) {
-            let g = ctx.profile.group_of(nd);
-            let gi = *group_idx.entry(g).or_insert_with(|| {
-                group_nodes.push(0);
-                group_nodes.len() - 1
-            });
-            group_nodes[gi] += 1;
-        }
-    }
-    let nic_bw = rails as f64 * net.rail_bw;
-    let mut nic_tx: Vec<Resource> = (0..node_idx.len()).map(|_| Resource::new(nic_bw)).collect();
-    let mut nic_rx: Vec<Resource> = (0..node_idx.len()).map(|_| Resource::new(nic_bw)).collect();
-    let mut fabric: Vec<Resource> =
-        (0..node_idx.len()).map(|_| Resource::new(net.intra_node.bw)).collect();
-    // Per-group uplink pool: the job's share of global links scales with
-    // its footprint in the group (taper models oversubscription), plus one
-    // NIC's worth of headroom — adaptive routing gives small footprints
-    // near-full global bandwidth, and only dense per-group traffic tapers.
-    let mut uplink_tx: Vec<Resource> = group_nodes
-        .iter()
-        .map(|&n| Resource::new(nic_bw * (net.taper * n as f64 + 1.0)))
-        .collect();
-    let mut uplink_rx: Vec<Resource> = uplink_tx.clone();
-
-    // ---- per-run state ----------------------------------------------------
-    // The dependents CSR is precompiled in the Goal arena (built once at
-    // sealing); here we only allocate this run's mutable progress arrays.
     let total_ops = goal.total_ops();
     let mut pending: Vec<u32> = (0..total_ops).map(|g| goal.dep_count(g)).collect();
     let mut finish = vec![f64::NAN; total_ops];
     let mut start = vec![f64::NAN; total_ops];
 
     let mut heap: BinaryHeap<Reverse<(TimeKey, usize)>> =
-        BinaryHeap::with_capacity(total_ops / 4 + 16);
+        BinaryHeap::with_capacity(queue_capacity(goal.root_count(), p));
     for r in 0..p {
         let t0 = ctx.start_times.map_or(0.0, |s| s[r]);
         for i in 0..goal.ops(r).len() {
@@ -256,10 +815,8 @@ pub fn simulate(goal: &Goal, ctx: &SimContext) -> SimReport {
         HashMap::with_capacity_and_hasher(64, Default::default());
     let mut events = 0usize;
 
-    // In-network aggregation state: per-tag wave membership (precomputed
-    // from the arena, mirroring channel matching) and the legs that have
-    // become dependency-ready so far.  A wave is priced as a unit once
-    // its last leg arrives.
+    // In-network aggregation state: per-tag wave membership and the legs
+    // that have become dependency-ready so far.
     let mut wave_expect: HashMap<u32, usize, crate::util::FastBuild> = Default::default();
     for kind in &goal.kinds {
         if let OpKind::SwitchAgg { tag, .. } = kind {
@@ -267,15 +824,10 @@ pub fn simulate(goal: &Goal, ctx: &SimContext) -> SimReport {
         }
     }
     let mut waves: HashMap<u32, Vec<(usize, f64)>, crate::util::FastBuild> = Default::default();
-    // The aggregating switch sits at the job's lowest common fabric level:
-    // leaf switch if the allocation fits one group, spine otherwise.
-    let wave_tier =
-        if group_idx.len() <= 1 { Tier::IntraGroup } else { Tier::InterGroup };
+    let wave_tier = if res.n_groups <= 1 { Tier::IntraGroup } else { Tier::InterGroup };
 
-    // Completion helper: mark op finished, release dependents (straight
-    // walk of the precompiled dependents CSR).
     macro_rules! complete {
-        ($heap:ident, $g:expr, $t_start:expr, $t_end:expr) => {{
+        ($g:expr, $t_start:expr, $t_end:expr) => {{
             let g: usize = $g;
             start[g] = $t_start;
             finish[g] = $t_end;
@@ -288,7 +840,7 @@ pub fn simulate(goal: &Goal, ctx: &SimContext) -> SimReport {
                         .iter()
                         .map(|&d| finish[d as usize])
                         .fold(0.0f64, f64::max);
-                    $heap.push(Reverse((TimeKey(ready), dg)));
+                    heap.push(Reverse((TimeKey(ready), dg)));
                 }
             }
         }};
@@ -297,18 +849,17 @@ pub fn simulate(goal: &Goal, ctx: &SimContext) -> SimReport {
     while let Some(Reverse((TimeKey(t), g))) = heap.pop() {
         events += 1;
         let r = goal.rank_of(g);
-        let kind = goal.kinds[g];
-        match kind {
+        match goal.kinds[g] {
             OpKind::Calc { seconds } => {
-                complete!(heap, g, t, t + seconds);
+                complete!(g, t, t + seconds);
             }
             OpKind::Copy { src, .. } => {
                 let dur = mem.copy_time(src.bytes(goal.elem_bytes));
-                complete!(heap, g, t, t + dur);
+                complete!(g, t, t + dur);
             }
             OpKind::Reduce { src, .. } => {
                 let dur = mem.reduce_time(src.bytes(goal.elem_bytes));
-                complete!(heap, g, t, t + dur);
+                complete!(g, t, t + dur);
             }
             OpKind::Send { peer, seg, tag } => {
                 let key = (r as u32, peer as u32, tag);
@@ -316,13 +867,11 @@ pub fn simulate(goal: &Goal, ctx: &SimContext) -> SimReport {
                 if let Some((rg, rt)) = ch.recvs.pop_front() {
                     let rr = goal.rank_of(rg);
                     let bytes = seg.bytes(goal.elem_bytes);
-                    let (s_fin, r_fin, s_start, r_start) = transfer(
+                    let (s_fin, r_fin, s_start, r_start) = res.transfer(
                         net, &ctx.cfg, ctx.placement, ctx.profile, rails, r, rr, bytes, t, rt,
-                        &node_idx, &group_idx, &mut nic_tx, &mut nic_rx, &mut fabric,
-                        &mut uplink_tx, &mut uplink_rx,
                     );
-                    complete!(heap, g, s_start, s_fin);
-                    complete!(heap, rg, r_start, r_fin);
+                    complete!(g, s_start, s_fin);
+                    complete!(rg, r_start, r_fin);
                 } else {
                     ch.sends.push_back((g, t));
                 }
@@ -333,63 +882,39 @@ pub fn simulate(goal: &Goal, ctx: &SimContext) -> SimReport {
                 if let Some((sg, st)) = ch.sends.pop_front() {
                     let sr = goal.rank_of(sg);
                     let bytes = seg.bytes(goal.elem_bytes);
-                    let (s_fin, r_fin, s_start, r_start) = transfer(
+                    let (s_fin, r_fin, s_start, r_start) = res.transfer(
                         net, &ctx.cfg, ctx.placement, ctx.profile, rails, sr, r, bytes, st, t,
-                        &node_idx, &group_idx, &mut nic_tx, &mut nic_rx, &mut fabric,
-                        &mut uplink_tx, &mut uplink_rx,
                     );
-                    complete!(heap, sg, s_start, s_fin);
-                    complete!(heap, g, r_start, r_fin);
+                    complete!(sg, s_start, s_fin);
+                    complete!(g, r_start, r_fin);
                 } else {
                     ch.recvs.push_back((g, t));
                 }
             }
             OpKind::SwitchAgg { seg, tag, .. } => {
-                // One leg of an in-network aggregation wave: park until
-                // every member is ready (tag matching, like channels),
-                // then price the wave as a unit — contributor pushes
-                // serialize on their node tx NICs, the switch pipeline
-                // reduces, and the multicast result drains through every
-                // member's rx NIC.
                 let members = waves.entry(tag).or_default();
                 members.push((g, t));
                 if members.len() == wave_expect[&tag] {
                     let mut members = waves.remove(&tag).unwrap();
-                    members.sort_unstable_by_key(|&(m, _)| m);
                     let bytes = seg.bytes(goal.elem_bytes);
-                    let fbytes = bytes as f64;
-                    let alpha = net.flow_alpha(&ctx.cfg, wave_tier, bytes);
-                    let flow_bw = net.flow_bw(&ctx.cfg, wave_tier, bytes, rails);
-                    let mut up_max = 0.0f64;
-                    let mut n_contrib = 0usize;
-                    for &(m, mt) in &members {
-                        if let OpKind::SwitchAgg { contribute: true, .. } = goal.kinds[m] {
-                            n_contrib += 1;
-                            let sn = node_idx[&ctx.placement.rank_node[goal.rank_of(m)]];
-                            let up = nic_tx[sn]
-                                .reserve(mt, fbytes)
-                                .max(mt + fbytes / flow_bw)
-                                + alpha;
-                            up_max = up_max.max(up);
-                        }
-                    }
-                    let agg_done =
-                        up_max + net.switch_agg_time(&ctx.profile.switch, n_contrib, bytes);
-                    for (m, mt) in members {
-                        let dn = node_idx[&ctx.placement.rank_node[goal.rank_of(m)]];
-                        let down = nic_rx[dn]
-                            .reserve(agg_done, fbytes)
-                            .max(agg_done + fbytes / flow_bw)
-                            + alpha;
-                        complete!(heap, m, mt, down);
+                    let done = res.price_wave(
+                        goal, net, &ctx.cfg, ctx.profile, rails, wave_tier, &mut members, bytes,
+                    );
+                    for (m, mt, down) in done {
+                        complete!(m, mt, down);
                     }
                 }
             }
         }
     }
 
-    // All ops must have completed (deadlock = bug in a schedule generator).
-    for g in 0..total_ops {
+    assert_all_complete(goal, &finish);
+    build_report(goal, &start, &finish, events)
+}
+
+/// All ops must have completed (deadlock = bug in a schedule generator).
+fn assert_all_complete(goal: &Goal, finish: &[f64]) {
+    for g in 0..goal.total_ops() {
         assert!(
             finish[g].is_finite(),
             "deadlock: rank {} op {} ({:?}) never completed",
@@ -398,8 +923,13 @@ pub fn simulate(goal: &Goal, ctx: &SimContext) -> SimReport {
             goal.kinds[g]
         );
     }
+}
 
-    // ---- reporting --------------------------------------------------------
+/// Assemble the report from the completed timeline (shared by both loops —
+/// identical inputs produce identical bytes).
+fn build_report(goal: &Goal, start: &[f64], finish: &[f64], events: usize) -> SimReport {
+    let p = goal.p();
+    let total_ops = goal.total_ops();
     let per_rank_time: Vec<f64> = (0..p)
         .map(|r| {
             let base = goal.gid(r, 0);
@@ -437,8 +967,19 @@ pub fn simulate(goal: &Goal, ctx: &SimContext) -> SimReport {
     comps.other /= pf;
 
     // Tag regions: entry = max finish of outside-region deps; exit = max
-    // finish inside region.
-    let mut tag_sums: HashMap<String, (f64, usize)> = HashMap::new();
+    // finish inside region.  Names are interned into a sorted table first
+    // and accumulated in rank-major order, so both the accumulation order
+    // (f64 sums) and the output order are deterministic — no hasher in the
+    // path.
+    let mut names: Vec<&str> = Vec::new();
+    for r in 0..p {
+        for span in goal.rank_tags(r) {
+            names.push(span.name.as_str());
+        }
+    }
+    names.sort_unstable();
+    names.dedup();
+    let mut sums: Vec<(f64, usize)> = vec![(0.0, 0); names.len()];
     for r in 0..p {
         let base = goal.gid(r, 0);
         let ops = goal.ops(r).len();
@@ -453,13 +994,18 @@ pub fn simulate(goal: &Goal, ctx: &SimContext) -> SimReport {
                 }
                 exit = exit.max(finish[base + i]);
             }
-            let e = tag_sums.entry(span.name.clone()).or_insert((0.0, 0));
-            e.0 += (exit - entry).max(0.0);
-            e.1 += 1;
+            let id = names
+                .binary_search(&span.name.as_str())
+                .expect("interned tag name");
+            sums[id].0 += (exit - entry).max(0.0);
+            sums[id].1 += 1;
         }
     }
-    let tag_times =
-        tag_sums.into_iter().map(|(k, (sum, n))| (k, sum / n as f64)).collect();
+    let tag_times: Vec<(String, f64)> = names
+        .iter()
+        .zip(&sums)
+        .map(|(name, &(sum, n))| (name.to_string(), sum / n as f64))
+        .collect();
 
     // Phase attribution (composed schedules): earliest start / latest
     // finish per phase over the whole arena, plus per-phase busy time
@@ -507,83 +1053,6 @@ pub fn simulate(goal: &Goal, ctx: &SimContext) -> SimReport {
         tag_times,
         events_processed: events,
         phase_spans,
-    }
-}
-
-/// Schedule one matched transfer; returns (send_finish, recv_finish,
-/// send_start, recv_start).
-#[allow(clippy::too_many_arguments)]
-fn transfer(
-    net: &NetParams,
-    cfg: &NetConfig,
-    placement: &Placement,
-    profile: &SystemProfile,
-    rails: usize,
-    src: usize,
-    dst: usize,
-    bytes: usize,
-    send_ready: f64,
-    recv_ready: f64,
-    node_idx: &HashMap<usize, usize, crate::util::FastBuild>,
-    group_idx: &HashMap<usize, usize, crate::util::FastBuild>,
-    nic_tx: &mut [Resource],
-    nic_rx: &mut [Resource],
-    fabric: &mut [Resource],
-    uplink_tx: &mut [Resource],
-    uplink_rx: &mut [Resource],
-) -> (f64, f64, f64, f64) {
-    let tier = placement.tier(src, dst);
-    if tier == Tier::SelfRank {
-        // local: a staging copy at memory bandwidth
-        let dur = profile.mem.copy_time(bytes);
-        let s = send_ready;
-        let rstart = recv_ready.max(send_ready);
-        return (s + dur, rstart.max(s + dur), s, rstart);
-    }
-    let alpha = net.flow_alpha(cfg, tier, bytes);
-    let flow_bw = net.flow_bw(cfg, tier, bytes, rails);
-    let fbytes = bytes as f64;
-    let sn = node_idx[&placement.rank_node[src]];
-    let dn = node_idx[&placement.rank_node[dst]];
-
-    if tier == Tier::IntraNode {
-        // scale-up fabric pool on the node; no NIC involvement.
-        let t0 = send_ready.max(recv_ready);
-        let end = fabric[sn].reserve(t0, fbytes).max(t0 + fbytes / flow_bw) + alpha;
-        return (end, end, send_ready, recv_ready);
-    }
-
-    let eager = bytes <= net.eager_max(cfg);
-    if eager {
-        // Sender injects as soon as it is ready and completes locally.
-        let inj_end = nic_tx[sn].reserve(send_ready, fbytes).max(send_ready + fbytes / flow_bw);
-        let mut arrival = inj_end + alpha;
-        if tier == Tier::InterGroup {
-            let sg = group_idx[&placement.rank_group[src]];
-            let dg = group_idx[&placement.rank_group[dst]];
-            arrival = arrival
-                .max(uplink_tx[sg].reserve(send_ready, fbytes))
-                .max(uplink_rx[dg].reserve(send_ready, fbytes));
-        }
-        let drain = nic_rx[dn].reserve(arrival - fbytes / flow_bw, fbytes).max(arrival);
-        let recv_fin = recv_ready.max(drain);
-        (inj_end, recv_fin, send_ready, recv_ready)
-    } else {
-        // Rendezvous: both sides synchronize, then a striped zero-copy
-        // transfer occupies the full path.
-        let t0 = send_ready.max(recv_ready);
-        let mut end = (t0 + fbytes / flow_bw)
-            .max(nic_tx[sn].reserve(t0, fbytes))
-            .max(nic_rx[dn].reserve(t0, fbytes));
-        if tier == Tier::InterGroup {
-            let sg = group_idx[&placement.rank_group[src]];
-            let dg = group_idx[&placement.rank_group[dst]];
-            end = end
-                .max(uplink_tx[sg].reserve(t0, fbytes))
-                .max(uplink_rx[dg].reserve(t0, fbytes));
-        }
-        let end = end + alpha;
-        (end, end, send_ready, recv_ready)
     }
 }
 
@@ -679,6 +1148,73 @@ mod tests {
     }
 
     #[test]
+    fn fast_path_matches_scan() {
+        let (prof, pl) = ctx_fixture(2, 1);
+        for bytes in [8usize, 1 << 10, 1 << 20] {
+            let g = pingpong(bytes);
+            let ctx = SimContext::new(&prof, &pl);
+            let plan = SimPlan::new(&g);
+            let fast = simulate_with_plan(&g, &ctx, &plan);
+            let scan = simulate_scan(&g, &ctx);
+            assert_eq!(fast, scan, "bytes={bytes}");
+            assert_eq!(fast.events_processed, g.total_ops());
+        }
+    }
+
+    #[test]
+    fn local_chains_bypass_queue_but_still_count() {
+        // a pure compute/copy chain never enters the calendar queue, yet
+        // events_processed must equal total_ops on both paths
+        let elems = 1 << 10;
+        let mut b = GoalBuilder::new(2, elems, 4);
+        for r in 0..2 {
+            b.calc(r, 1e-6);
+            b.copy(r, Seg::tmp(0, elems), Seg::input(0, elems));
+            b.reduce_local(r, Seg::output(0, elems), Seg::tmp(0, elems), Default::default());
+        }
+        let g = b.finish().unwrap();
+        let (prof, pl) = ctx_fixture(2, 1);
+        let ctx = SimContext::new(&prof, &pl);
+        let fast = simulate(&g, &ctx);
+        let scan = simulate_scan(&g, &ctx);
+        assert_eq!(fast, scan);
+        assert_eq!(fast.events_processed, g.total_ops());
+    }
+
+    #[test]
+    fn calendar_queue_pops_in_key_order() {
+        let mut q = CalendarQueue::new(1e-6, 16);
+        // out of order, duplicate times (tie-break by gid), zero, and a
+        // far-future outlier that forces the global-scan fallback
+        let keys = [(5e-6, 7), (1e-6, 3), (1e-6, 1), (0.0, 9), (3.0, 2), (2e-6, 4)];
+        for &(t, g) in &keys {
+            q.push(t, g);
+        }
+        let mut popped = Vec::new();
+        while let Some(e) = q.pop() {
+            popped.push(e);
+        }
+        assert_eq!(
+            popped,
+            vec![(0.0, 9), (1e-6, 1), (1e-6, 3), (2e-6, 4), (5e-6, 7), (3.0, 2)]
+        );
+    }
+
+    #[test]
+    fn calendar_queue_handles_past_push() {
+        // matched transfers can complete parked partners "in the past":
+        // a push below the cursor must pull the cursor back
+        let mut q = CalendarQueue::new(1e-6, 16);
+        q.push(10e-6, 1);
+        assert_eq!(q.pop(), Some((10e-6, 1)));
+        q.push(1e-6, 2);
+        q.push(20e-6, 3);
+        assert_eq!(q.pop(), Some((1e-6, 2)));
+        assert_eq!(q.pop(), Some((20e-6, 3)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
     fn bigger_messages_take_longer() {
         let (prof, pl) = ctx_fixture(2, 1);
         let small = simulate(&pingpong(1 << 10), &SimContext::new(&prof, &pl));
@@ -751,6 +1287,8 @@ mod tests {
         assert_sync::<Placement>();
         assert_send::<SimContext<'static>>();
         assert_send::<SimReport>();
+        assert_send::<SimPlan>();
+        assert_sync::<SimPlan>();
     }
 
     #[test]

@@ -1,0 +1,281 @@
+//! Differential pins for the simulator fast path (DESIGN.md §Perf "event
+//! core") and the segsize-pipelined skeleton cache.
+//!
+//! The planned simulator (`SimPlan` + calendar queue + inline local
+//! batching) must produce **bit-identical** `SimReport`s to the reference
+//! heap loop `simulate_scan` — not "close", identical: same floats, same
+//! event counts, same tag regions, same phase spans.  Likewise the
+//! `(count, segsize)`-canonical pipelined skeletons served by
+//! `ScheduleCache` must be indistinguishable from direct generation, both
+//! at the graph level and after simulation.
+
+use pico::backends::{Backend, LibPico};
+use pico::collectives::{self, Coll, GenParams};
+use pico::orchestrator::{effective_count, ScheduleCache};
+use pico::sim::{simulate_scan, simulate_with_plan, SimContext, SimPlan, SimReport};
+use pico::topology::{leonardo, AllocPolicy, Allocation, Placement, RankOrder};
+use pico::workload::{
+    ChainKind, DnnStepSpec, InterferenceJob, MoeStepSpec, PipelineStepSpec, WorkloadSpec,
+};
+use pico::Goal;
+
+/// Bit-level SimReport comparison: every float compared via `to_bits`, so a
+/// `-0.0` vs `0.0` or NaN drift would fail where `==` might not.
+fn assert_bit_identical(a: &SimReport, b: &SimReport, what: &str) {
+    assert_eq!(a.total_time.to_bits(), b.total_time.to_bits(), "{what}: total_time");
+    assert_eq!(a.per_rank_time.len(), b.per_rank_time.len(), "{what}: per_rank_time len");
+    for (r, (x, y)) in a.per_rank_time.iter().zip(&b.per_rank_time).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: per_rank_time[{r}]");
+    }
+    let (ca, cb) = (a.components, b.components);
+    for (name, x, y) in [
+        ("comm", ca.comm, cb.comm),
+        ("reduction", ca.reduction, cb.reduction),
+        ("datamove", ca.datamove, cb.datamove),
+        ("other", ca.other, cb.other),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: components.{name}");
+    }
+    assert_eq!(a.events_processed, b.events_processed, "{what}: events_processed");
+    assert_eq!(a.tag_times.len(), b.tag_times.len(), "{what}: tag_times len");
+    for ((na, ta), (nb, tb)) in a.tag_times.iter().zip(&b.tag_times) {
+        assert_eq!(na, nb, "{what}: tag name");
+        assert_eq!(ta.to_bits(), tb.to_bits(), "{what}: tag_times[{na}]");
+    }
+    assert_eq!(a.phase_spans.len(), b.phase_spans.len(), "{what}: phase_spans len");
+    for (sa, sb) in a.phase_spans.iter().zip(&b.phase_spans) {
+        assert_eq!(sa.name, sb.name, "{what}: phase name");
+        assert_eq!(sa.start.to_bits(), sb.start.to_bits(), "{what}: phase[{}].start", sa.name);
+        assert_eq!(sa.finish.to_bits(), sb.finish.to_bits(), "{what}: phase[{}].finish", sa.name);
+        assert_eq!(sa.busy.to_bits(), sb.busy.to_bits(), "{what}: phase[{}].busy", sa.name);
+    }
+}
+
+fn contiguous_placement(
+    prof: &pico::topology::SystemProfile,
+    nodes: usize,
+) -> Placement {
+    let alloc = Allocation::new(prof, nodes, AllocPolicy::Contiguous, 9);
+    Placement::new(prof, &alloc, 1, RankOrder::Block)
+}
+
+/// Run both simulator paths on `goal` and demand bit-identity.
+fn differential(goal: &Goal, ctx: &SimContext, what: &str) -> SimReport {
+    let plan = SimPlan::new(goal);
+    let fast = simulate_with_plan(goal, ctx, &plan);
+    let scan = simulate_scan(goal, ctx);
+    assert_bit_identical(&fast, &scan, what);
+    fast
+}
+
+/// Fast path vs reference heap loop over the full algorithm registry ×
+/// p ∈ {2, 3, 8, 17, 64} × bytes ∈ {8, 4 KiB, 1 MiB} — every collective,
+/// every matching structure (FIFO channels, SwitchAgg waves, local chains),
+/// eager and rendezvous transfers, instrumented at p = 8 so tag regions
+/// flow through both report builders.
+#[test]
+fn fast_path_matches_scan_over_registry() {
+    let prof = leonardo();
+    for info in collectives::registry() {
+        for p in [2usize, 3, 8, 17, 64] {
+            if !info.any_p && !p.is_power_of_two() {
+                continue;
+            }
+            let pl = contiguous_placement(&prof, p);
+            for bytes in [8usize, 4 << 10, 1 << 20] {
+                let count =
+                    if info.coll == Coll::Barrier { 0 } else { effective_count(info.coll, bytes, p) };
+                let mut params = GenParams::new(p, count);
+                if p == 8 {
+                    params = params.instrumented();
+                }
+                let goal = collectives::generate(info.coll, info.name, &params)
+                    .unwrap_or_else(|e| panic!("{:?}:{} p={p}: {e}", info.coll, info.name));
+                let ctx = SimContext::new(&prof, &pl);
+                let rep = differential(
+                    &goal,
+                    &ctx,
+                    &format!("{:?}:{} p={p} bytes={bytes}", info.coll, info.name),
+                );
+                assert_eq!(rep.events_processed, goal.total_ops());
+                assert!(rep.total_time.is_finite() && rep.total_time > 0.0);
+            }
+        }
+    }
+}
+
+/// SwitchAgg waves across a multi-group placement: a scattered allocation
+/// puts ranks in different dragonfly groups, so the wave pricing exercises
+/// per-group uplink pools, not just one switch.
+#[test]
+fn fast_path_matches_scan_innet_multigroup() {
+    let prof = leonardo();
+    for (coll, p) in [(Coll::Allreduce, 16usize), (Coll::Bcast, 16), (Coll::Reduce, 16)] {
+        let alloc = Allocation::new(&prof, p, AllocPolicy::Scattered, 7);
+        let pl = Placement::new(&prof, &alloc, 1, RankOrder::Block);
+        for bytes in [64usize, 64 << 10] {
+            let count = effective_count(coll, bytes, p);
+            let goal = collectives::generate(coll, "innet", &GenParams::new(p, count)).unwrap();
+            let ctx = SimContext::new(&prof, &pl);
+            differential(&goal, &ctx, &format!("{coll:?}:innet scattered p={p} bytes={bytes}"));
+        }
+    }
+}
+
+/// Imported GOAL text (the external-schedule ingestion path) through both
+/// simulator paths — the plan is compiled from a parsed graph, not a
+/// generated one.
+#[test]
+fn fast_path_matches_scan_imported_goal() {
+    let prof = leonardo();
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/data");
+    for name in ["ring4.goal", "innet_allreduce8.goal", "innet_bcast8.goal"] {
+        let text = std::fs::read_to_string(dir.join(name)).unwrap();
+        let goal = pico::goal_text::from_text(&text)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let pl = contiguous_placement(&prof, goal.p());
+        let ctx = SimContext::new(&prof, &pl);
+        differential(&goal, &ctx, &format!("imported {name}"));
+    }
+}
+
+/// All four composed workload scenarios (dnn_step, pipeline_step, moe_step,
+/// interference), lowered through the schedule cache and composed with
+/// their native chain policy and placement — multi-phase graphs with
+/// Ready-triggered overlap, rank remapping, and phase tables, the shape
+/// the overlap engine actually simulates.
+#[test]
+fn fast_path_matches_scan_composed_scenarios() {
+    let prof = leonardo();
+    let cache = ScheduleCache::new();
+    let p = 8usize;
+    let pl = contiguous_placement(&prof, p);
+    let specs = [
+        WorkloadSpec::dnn_step("dnn", DnnStepSpec::new(16 << 20, 4, 4e-3)),
+        WorkloadSpec::pipeline_step("pp", PipelineStepSpec::new(4 << 20, 4)),
+        WorkloadSpec::moe_step("moe", MoeStepSpec::new(8 << 20)),
+        WorkloadSpec::interference(
+            "mix",
+            vec![
+                InterferenceJob {
+                    ranks: 4,
+                    chain: None,
+                    workload: WorkloadSpec::dnn_step("job_a", DnnStepSpec::new(8 << 20, 2, 2e-3)),
+                },
+                InterferenceJob {
+                    ranks: 4,
+                    chain: None,
+                    workload: WorkloadSpec::moe_step("job_b", MoeStepSpec::new(4 << 20)),
+                },
+            ],
+        ),
+    ];
+    for spec in specs {
+        let chain = spec.default_chain();
+        let low = spec
+            .lower(p, &cache, chain)
+            .unwrap_or_else(|e| panic!("{}: lower failed: {e}", spec.name));
+        let parts: Vec<(&str, &Goal)> =
+            low.parts.iter().map(|(n, g)| (n.as_str(), g.as_ref())).collect();
+        let composed = pico::compose_placed(&parts, &low.policy, &low.placement)
+            .unwrap_or_else(|e| panic!("{}: compose failed: {e}", spec.name));
+        let ctx = SimContext::new(&prof, &pl);
+        let rep = differential(&composed, &ctx, &format!("composed {}", spec.name));
+        assert!(!rep.phase_spans.is_empty(), "{}: composed goal must carry phases", spec.name);
+    }
+    // The serial chain hits a different composition structure (barrier
+    // links) — pin one of those too.
+    let spec = WorkloadSpec::dnn_step("dnn_serial", DnnStepSpec::new(8 << 20, 2, 2e-3));
+    let low = spec.lower(p, &cache, ChainKind::Serial).unwrap();
+    let parts: Vec<(&str, &Goal)> =
+        low.parts.iter().map(|(n, g)| (n.as_str(), g.as_ref())).collect();
+    let composed = pico::compose_placed(&parts, &low.policy, &low.placement).unwrap();
+    differential(&composed, &SimContext::new(&prof, &pl), "composed dnn_serial");
+}
+
+/// Pipelined-family cache transparency: a `(count, segsize)`-canonical
+/// skeleton rescaled to the requested count must be bit-identical to a
+/// direct generation — graph equality AND simulated-report equality — and
+/// one skeleton must serve every count on the same segment grid.
+#[test]
+fn pipelined_cache_is_transparent() {
+    let backend = LibPico;
+    let prof = leonardo();
+    let p = 8usize;
+    let pl = contiguous_placement(&prof, p);
+
+    // tree_pipelined heuristic at p=8: counts 8192 / 65536 / 1048576 all
+    // land on an 8-segment grid, so they share ONE canonical skeleton.
+    let cache = ScheduleCache::new();
+    for (i, count) in [8192usize, 65536, 1 << 20].into_iter().enumerate() {
+        let params = GenParams::new(p, count);
+        let direct = backend.schedule(Coll::Allreduce, "tree_pipelined", &params).unwrap();
+        let cached = cache.schedule(&backend, Coll::Allreduce, "tree_pipelined", &params).unwrap();
+        assert_eq!(*cached, direct, "tree_pipelined count={count}: graph must be bit-identical");
+        let ctx = SimContext::new(&prof, &pl);
+        let plan = SimPlan::new(&cached);
+        let a = simulate_with_plan(&cached, &ctx, &plan);
+        let b = simulate_scan(&direct, &ctx);
+        assert_bit_identical(&a, &b, &format!("tree_pipelined count={count} rescaled-vs-direct"));
+        let s = cache.stats();
+        assert_eq!(s.skeletons, 1, "count={count}: one shared canonical skeleton");
+        assert_eq!(s.rescales, i + 1, "count={count}: every miss served by rescale");
+        assert_eq!(s.misses, i + 1);
+    }
+    // Same key again: pure hit, no new skeleton or rescale.
+    cache.schedule(&backend, Coll::Allreduce, "tree_pipelined", &GenParams::new(p, 8192)).unwrap();
+    let s = cache.stats();
+    assert_eq!((s.hits, s.skeletons, s.rescales), (1, 1, 3));
+
+    // Non-uniform segment grid (4097 elems → 5 segments, 4097 % 5 != 0):
+    // no canonicalization; the cache must fall back to direct generation
+    // and still be transparent.
+    let params = GenParams::new(p, 4097);
+    let direct = backend.schedule(Coll::Allreduce, "tree_pipelined", &params).unwrap();
+    let cached = cache.schedule(&backend, Coll::Allreduce, "tree_pipelined", &params).unwrap();
+    assert_eq!(*cached, direct, "non-divisible count must fall back, transparently");
+    let s2 = cache.stats();
+    assert_eq!(s2.skeletons, s.skeletons, "fallback must not build a skeleton");
+    assert_eq!(s2.rescales, s.rescales, "fallback must not rescale");
+
+    // segmented_ring and bcast pipeline ride the same canonical path.
+    for (coll, algo, counts) in [
+        (Coll::Allreduce, "segmented_ring", [32768usize, 1 << 20]),
+        (Coll::Bcast, "pipeline", [262144usize, 1 << 20]),
+    ] {
+        let cache = ScheduleCache::new();
+        for count in counts {
+            let params = GenParams::new(p, count);
+            let direct = backend.schedule(coll, algo, &params).unwrap();
+            let cached = cache.schedule(&backend, coll, algo, &params).unwrap();
+            assert_eq!(*cached, direct, "{coll:?}:{algo} count={count}");
+            let ctx = SimContext::new(&prof, &pl);
+            let plan = SimPlan::new(&cached);
+            let a = simulate_with_plan(&cached, &ctx, &plan);
+            let b = simulate_scan(&direct, &ctx);
+            assert_bit_identical(&a, &b, &format!("{coll:?}:{algo} count={count}"));
+        }
+        let s = cache.stats();
+        assert_eq!(s.skeletons, 1, "{coll:?}:{algo}: counts share one skeleton");
+        assert_eq!(s.rescales, counts.len(), "{coll:?}:{algo}");
+    }
+
+    // Explicit segsize requests canonicalize too (same grid → same
+    // skeleton as the heuristic when they agree), and an explicit segsize
+    // that breaks divisibility falls back.
+    let cache = ScheduleCache::new();
+    let params = GenParams { segsize: Some(1024), ..GenParams::new(p, 8192) };
+    let direct = backend.schedule(Coll::Allreduce, "tree_pipelined", &params).unwrap();
+    let cached = cache.schedule(&backend, Coll::Allreduce, "tree_pipelined", &params).unwrap();
+    assert_eq!(*cached, direct, "explicit segsize=1024 count=8192");
+    assert_eq!(cache.stats().rescales, 1);
+
+    // Instrumented pipelined schedules carry tag spans through the rescale.
+    let cache = ScheduleCache::new();
+    let params = GenParams::new(p, 1 << 20).instrumented();
+    let direct = backend.schedule(Coll::Allreduce, "tree_pipelined", &params).unwrap();
+    let cached = cache.schedule(&backend, Coll::Allreduce, "tree_pipelined", &params).unwrap();
+    assert_eq!(*cached, direct, "instrumented tree_pipelined");
+    assert!(!cached.tags.is_empty());
+    assert_eq!(cache.stats().rescales, 1);
+}

@@ -14,6 +14,11 @@
 #   7. in-network smoke: the libpico allreduce sweep's host-vs-switch
 #      crossover table must be non-trivial (at least one winner=switch and
 #      one winner=host point, with the past-buffer degradation marked).
+#   8. simulator fast-path smoke: PICO_SIM_DIFFERENTIAL=1 re-runs a real
+#      composed workload through both simulator paths (planned event core
+#      vs the reference heap scan) and fails on any divergence; a
+#      tree_pipelined overlap must be served by the (count, segsize)-
+#      canonical skeleton cache (1 skeleton, 1 rescale).
 #
 # Every stage runs under `set -euo pipefail`, so the first non-zero exit
 # aborts the script with that stage's status.
@@ -141,5 +146,18 @@ grep -q "fellback" "$TMP/crossover.txt"
     > "$TMP/innet_ov.txt"
 grep -q "skeletons built" "$TMP/innet_ov.txt"
 echo "OK: crossover table has both host and switch winners"
+
+echo "== smoke: simulator fast path (differential + pipelined skeleton cache)"
+# the engine re-simulates the composed schedule with the reference heap
+# loop when PICO_SIM_DIFFERENTIAL is set and errors out on any mismatch
+PICO_SIM_DIFFERENTIAL=1 "$BIN" overlap --spec examples/dnn_step.json \
+    > "$TMP/fastpath.txt"
+grep -q "faster-than-serial: yes" "$TMP/fastpath.txt"
+# a pipelined-family request must be served by one canonical skeleton +
+# one rescale (4 MiB -> 1 Mi elements, 8 segments: divisible grid)
+"$BIN" overlap --coll allreduce --algo tree_pipelined --bytes 4MiB \
+    --nodes 8 --repeat 2 --cache-stats > "$TMP/fastpath_cache.txt"
+grep -q "1 skeletons built, 1 rescales" "$TMP/fastpath_cache.txt"
+echo "OK: fast path matches simulate_scan; pipelined skeletons rescale"
 
 echo "verify: all checks passed"
