@@ -435,6 +435,57 @@ pub fn render_breakdown(
     out
 }
 
+/// Service-level counters for `pico serve` (DESIGN.md §Service): what the
+/// daemon did across every tenant since it came up.  Complements the
+/// engine's [`CacheStats`](crate::orchestrator::CacheStats) — cache counters
+/// say how much work the shared cache saved, these say how much work
+/// arrived and how it ended.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    /// Client sessions opened (stdio counts as one).
+    pub sessions: usize,
+    /// Submits that passed validation and capability routing.
+    pub accepted: usize,
+    /// Requests refused with a typed error frame (malformed, invalid
+    /// spec, capability unavailable, duplicate id, shutting down, ...).
+    pub rejected: usize,
+    /// Accepted jobs cancelled by their client before completing.
+    pub cancelled: usize,
+    /// Accepted jobs that ran to completion.
+    pub completed: usize,
+    /// Accepted jobs that failed in the engine.
+    pub failed: usize,
+    /// Records streamed to clients across all completed jobs.
+    pub records_streamed: usize,
+}
+
+impl ServiceStats {
+    pub fn to_json(&self) -> crate::json::Json {
+        crate::json::Json::obj()
+            .set("sessions", self.sessions)
+            .set("accepted", self.accepted)
+            .set("rejected", self.rejected)
+            .set("cancelled", self.cancelled)
+            .set("completed", self.completed)
+            .set("failed", self.failed)
+            .set("records_streamed", self.records_streamed)
+    }
+
+    /// One-line summary for the daemon's exit log.
+    pub fn render(&self) -> String {
+        format!(
+            "service: {} sessions, {} accepted ({} completed, {} cancelled, {} failed), {} rejected, {} records streamed",
+            self.sessions,
+            self.accepted,
+            self.completed,
+            self.cancelled,
+            self.failed,
+            self.rejected,
+            self.records_streamed
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -622,5 +673,16 @@ mod tests {
     fn csv_shape() {
         let csv = to_csv(&["a", "b"], &[vec!["1".into(), "2".into()]]);
         assert_eq!(csv, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn service_stats_serialize_and_render() {
+        let s = ServiceStats { sessions: 2, accepted: 3, records_streamed: 7, ..Default::default() };
+        let j = s.to_json();
+        assert_eq!(j.get("sessions").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("accepted").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("records_streamed").unwrap().as_usize(), Some(7));
+        assert!(s.render().contains("2 sessions"));
+        assert!(s.render().contains("7 records streamed"));
     }
 }

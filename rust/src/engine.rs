@@ -665,7 +665,10 @@ impl SweepSpec {
         self
     }
 
-    fn to_test_spec(&self) -> TestSpec {
+    /// The campaign document this sweep expands to (`pub(crate)` so the
+    /// serve layer routes a submitted sweep through the same campaign
+    /// path the CLI uses).
+    pub(crate) fn to_test_spec(&self) -> TestSpec {
         let mut t = TestSpec::new("sweep", &self.backend, self.coll);
         t.sizes = self.sizes.clone();
         t.nodes = self.nodes.clone();
@@ -770,7 +773,9 @@ impl ProbeSpec {
         self
     }
 
-    fn to_test_spec(&self) -> TestSpec {
+    /// The one-point campaign this probe pins down (`pub(crate)` — see
+    /// [`SweepSpec::to_test_spec`]).
+    pub(crate) fn to_test_spec(&self) -> TestSpec {
         let mut t = TestSpec::new("probe", &self.backend, self.coll);
         t.sizes = vec![self.bytes];
         t.nodes = vec![self.nodes];

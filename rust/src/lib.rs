@@ -79,6 +79,7 @@ pub mod orchestrator;
 pub mod replay;
 pub mod results;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod sync;
 pub mod topology;

@@ -10,6 +10,7 @@
 //!   replay ...                   LLM trace replay (Fig. 12 style)
 //!   import --goal F ...          simulate an external GOAL schedule
 //!   overlap --spec F ...         compose + simulate a multi-collective workload
+//!   serve  [--socket PATH]       long-lived multi-tenant campaign daemon
 //!   help                         this text
 //!
 //! Every subcommand is argv→spec translation plus one call into the typed
@@ -27,7 +28,7 @@
 
 use std::collections::HashMap;
 use std::fmt;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use pico::analysis;
@@ -39,6 +40,7 @@ use pico::engine::{
     ReplaySpec, SweepSpec, TraceSpec,
 };
 use pico::json::Json;
+use pico::serve::{ServeOptions, Service};
 use pico::topology::builtin_profiles;
 use pico::util::{fmt_size, fmt_time, parse_size};
 use pico::workload::ChainKind;
@@ -158,11 +160,15 @@ fn main() -> ExitCode {
         "replay" => cmd_replay(&args),
         "import" => cmd_import(&args),
         "overlap" => cmd_overlap(&args),
+        "serve" => cmd_serve(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
         }
-        other => Err(format!("unknown subcommand {other:?}")),
+        other => Err(match nearest_subcommand(other) {
+            Some(s) => format!("unknown subcommand {other:?} (did you mean \"{s}\"?)"),
+            None => format!("unknown subcommand {other:?} (see `pico help`)"),
+        }),
     };
     match result {
         Ok(()) => ExitCode::SUCCESS,
@@ -212,7 +218,51 @@ usage: pico <command> [--key value ...]
          combine), interference (jobs on disjoint rank subsets; reports
          per-job slowdown) — see examples/*.json; alternative source:
          --coll allreduce --algo ring --bytes 1MiB --repeat 2 composes N
-         copies of one collective (serial/per_rank)";
+         copies of one collective (serial/per_rank)
+  serve  [--socket PATH] [--system leonardo] [--jobs N]
+         [--max-inflight-points 256] [--chunk-points 16]
+         long-lived multi-tenant daemon: newline-delimited JSON requests
+         ({\"op\":\"submit\",\"id\":ID,\"kind\":\"campaign|sweep|probe|overlap|import\",
+         \"spec\":{...}} plus status/wait/cancel/cache_stats/capabilities/
+         shutdown) on a Unix socket (--socket) or stdin/stdout; streams one
+         record frame per point, shares one schedule cache + worker pool
+         across all tenants (DESIGN.md \u{a7}Service)
+  help                              this text";
+
+/// The dispatch table, for `help` and the did-you-mean suggestion on an
+/// unknown subcommand.
+const SUBCOMMANDS: &[&str] = &[
+    "list", "spec", "run", "sweep", "probe", "trace", "replay", "import", "overlap", "serve",
+    "help",
+];
+
+/// Levenshtein distance (two-row rolling table).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// The closest known subcommand within edit distance 2 (ties break
+/// alphabetically via the tuple min, so the suggestion is deterministic).
+fn nearest_subcommand(cmd: &str) -> Option<&'static str> {
+    SUBCOMMANDS
+        .iter()
+        .map(|s| (edit_distance(cmd, s), *s))
+        .min()
+        .filter(|(d, _)| *d <= 2)
+        .map(|(_, s)| s)
+}
 
 /// Build the process's one [`Engine`] from the shared `--system` flag.
 fn engine_for(args: &Args) -> Engine {
@@ -454,6 +504,31 @@ fn cmd_overlap(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let mut cfg = EngineConfig::for_system(&args.get_or("system", "leonardo"));
+    if let Some(jobs) = args.get("jobs") {
+        cfg = cfg.with_jobs(jobs.parse().map_err(|_| format!("--jobs: bad integer {jobs:?}"))?);
+    }
+    let opts = ServeOptions {
+        max_inflight_points: args.usize_or("max-inflight-points", 256)?.max(1),
+        chunk_points: args.usize_or("chunk-points", 16)?.max(1),
+    };
+    let service = Service::new(Engine::new(cfg), opts);
+    // diagnostics go to stderr: stdout is the wire in stdio mode
+    match args.get("socket") {
+        Some(path) => {
+            eprintln!("pico serve: listening on {path}");
+            service.serve_unix(Path::new(path))?;
+        }
+        None => {
+            eprintln!("pico serve: newline-delimited JSON on stdin/stdout");
+            service.serve_stream(Box::new(std::io::stdin()), Box::new(std::io::stdout()));
+        }
+    }
+    eprintln!("pico serve: {}", service.stats().render());
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -505,5 +580,31 @@ mod tests {
         assert!(e.to_string().contains("--bytes requires a value"));
         let e = ArgError::NotAFlag { arg: "x".into() };
         assert!(e.to_string().contains("expected --key value"));
+    }
+
+    #[test]
+    fn edit_distance_is_levenshtein() {
+        assert_eq!(edit_distance("serve", "serve"), 0);
+        assert_eq!(edit_distance("serv", "serve"), 1);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+        assert_eq!(edit_distance("", "run"), 3);
+    }
+
+    #[test]
+    fn unknown_subcommands_get_a_nearest_suggestion() {
+        assert_eq!(nearest_subcommand("serv"), Some("serve"));
+        assert_eq!(nearest_subcommand("swep"), Some("sweep"));
+        assert_eq!(nearest_subcommand("overlp"), Some("overlap"));
+        assert_eq!(nearest_subcommand("improt"), Some("import"));
+        // beyond distance 2: no guess is better than a wrong guess
+        assert_eq!(nearest_subcommand("frobnicate"), None);
+        // every real subcommand trivially suggests itself
+        for s in SUBCOMMANDS {
+            assert_eq!(nearest_subcommand(s), Some(*s));
+        }
+        // the help text advertises every dispatch-table row
+        for s in SUBCOMMANDS {
+            assert!(USAGE.contains(s), "USAGE must mention {s}");
+        }
     }
 }

@@ -646,20 +646,52 @@ pub fn run_campaign_jobs_cached(
     // descriptor expansion — no generation or simulation — so the repeat
     // costs microseconds against a campaign that simulates every point.
     let (points, _backend) = resolve(spec, env)?;
-    let profile = env.profile()?;
     let mut run_dir = match out_dir {
-        Some(d) => {
-            let rd = RunDir::create(d.join(&spec.name)).map_err(|e| e.to_string())?;
-            rd.write_descriptor("test.json", &spec.to_json()).map_err(|e| e.to_string())?;
-            rd.write_descriptor("env.json", &env.to_json()).map_err(|e| e.to_string())?;
-            Some(rd)
-        }
+        Some(d) => Some(create_run_dir(spec, env, d, points.first())?),
         None => None,
     };
-    // Metadata snapshots the first point's allocation/placement (exactly
-    // what the serial loop recorded); captured up front so it does not
-    // depend on worker scheduling.
-    if let (Some(rd), Some(point)) = (run_dir.as_ref(), points.first()) {
+    let outcomes = match run_dir.as_mut() {
+        Some(rd) => {
+            let mut sink = OrderedRecordSink::new(rd);
+            run_campaign_sink(spec, env, jobs, cache, Some(&mut sink))
+        }
+        None => run_campaign_sink(spec, env, jobs, cache, None),
+    };
+    match outcomes {
+        Ok(outcomes) => {
+            if let Some(rd) = run_dir.as_ref() {
+                rd.finalize().map_err(|e| e.to_string())?;
+            }
+            Ok(outcomes)
+        }
+        Err(e) => {
+            // a half-written run directory must never look finished
+            if let Some(rd) = run_dir.as_ref() {
+                let _ = rd.mark_failed(&e);
+            }
+            Err(e)
+        }
+    }
+}
+
+/// Create the standardized run directory for a campaign: `<out>/<name>`
+/// with the `test.json` / `env.json` descriptors and — when the grid is
+/// non-empty — the `metadata.json` snapshot of the first point's
+/// allocation/placement (captured up front so it does not depend on
+/// worker scheduling).  Shared by the CLI path above and the `pico serve`
+/// daemon, which is what makes a daemon-written run directory
+/// byte-identical to the CLI one.
+pub fn create_run_dir(
+    spec: &TestSpec,
+    env: &EnvSpec,
+    out_dir: &Path,
+    first_point: Option<&TestPoint>,
+) -> Result<RunDir, String> {
+    let profile = env.profile()?;
+    let rd = RunDir::create(out_dir.join(&spec.name)).map_err(|e| e.to_string())?;
+    rd.write_descriptor("test.json", &spec.to_json()).map_err(|e| e.to_string())?;
+    rd.write_descriptor("env.json", &env.to_json()).map_err(|e| e.to_string())?;
+    if let Some(point) = first_point {
         let alloc_seed = spec.seed ^ (point.nodes as u64).wrapping_mul(0x9E37_79B9);
         let alloc = Allocation::new(&profile, point.nodes, env.alloc_policy, alloc_seed);
         let placement = Placement::new(&profile, &alloc, point.ppn, env.rank_order);
@@ -672,18 +704,7 @@ pub fn run_campaign_jobs_cached(
         );
         rd.write_descriptor("metadata.json", &meta).map_err(|e| e.to_string())?;
     }
-
-    let outcomes = match run_dir.as_mut() {
-        Some(rd) => {
-            let mut sink = OrderedRecordSink::new(rd);
-            run_campaign_sink(spec, env, jobs, cache, Some(&mut sink))?
-        }
-        None => run_campaign_sink(spec, env, jobs, cache, None)?,
-    };
-    if let Some(rd) = run_dir.as_ref() {
-        rd.finalize().map_err(|e| e.to_string())?;
-    }
-    Ok(outcomes)
+    Ok(rd)
 }
 
 /// The sink-generic campaign core: expand `(spec, env)` into the point
@@ -701,19 +722,41 @@ pub fn run_campaign_sink(
     env: &EnvSpec,
     jobs: usize,
     cache: &ScheduleCache,
-    mut sink: Option<&mut dyn RecordSink>,
+    sink: Option<&mut dyn RecordSink>,
 ) -> Result<Vec<PointOutcome>, String> {
     let (points, backend) = resolve(spec, env)?;
     let profile = env.profile()?;
-    let backend_ref: &dyn Backend = backend.as_ref();
+    run_points_sink(spec, env, backend.as_ref(), &profile, &points, 0, jobs, cache, sink)
+}
+
+/// Run an arbitrary slice of a campaign's point grid — the chunk-level
+/// core under [`run_campaign_sink`] (which passes the whole grid with
+/// `seq_base = 0`) and the `pico serve` admission scheduler (which shards
+/// a grid into chunks and acquires budget per chunk).
+///
+/// `seq_base` is the campaign-global index of `points[0]`: record ids
+/// (`p{seq:05}`) and sink sequence numbers stay campaign-global, so a
+/// chunked run streams and persists byte-identically to an unchunked one.
+#[allow(clippy::too_many_arguments)]
+pub fn run_points_sink(
+    spec: &TestSpec,
+    env: &EnvSpec,
+    backend: &dyn Backend,
+    profile: &SystemProfile,
+    points: &[TestPoint],
+    seq_base: usize,
+    jobs: usize,
+    cache: &ScheduleCache,
+    mut sink: Option<&mut dyn RecordSink>,
+) -> Result<Vec<PointOutcome>, String> {
     parallel_ordered(
-        &points,
+        points,
         jobs,
-        |_, point| run_point_cached(backend_ref, &profile, env, spec, point, cache),
+        |_, point| run_point_cached(backend, profile, env, spec, point, cache),
         |i, outcome| {
             if let Some(sink) = sink.as_deref_mut() {
-                let rec = make_record(i, spec, backend_ref.name(), outcome);
-                sink.push(i, rec)?;
+                let rec = make_record(seq_base + i, spec, backend.name(), outcome);
+                sink.push(seq_base + i, rec)?;
             }
             Ok(())
         },

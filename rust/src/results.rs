@@ -12,7 +12,12 @@
 //!   metadata.json    # run context capture (see metadata.rs)
 //!   index.json       # one line per record: file + test-point summary
 //!   records/<id>.json
+//!   DONE | FAILED    # terminal marker, fsynced last (see `finalize`)
 //! ```
+//!
+//! A directory without a terminal marker was interrupted mid-campaign:
+//! completion is a durable on-disk fact, not an inference from process
+//! exit (a long-lived `pico serve` daemon has no such exit).
 
 use std::fs;
 use std::path::{Path, PathBuf};
@@ -248,12 +253,43 @@ impl RunDir {
         Ok(())
     }
 
-    /// Write the index (call once at campaign end).
+    /// Write the index and the terminal `DONE` marker (call once at
+    /// campaign end), durably: every record file named by the index is
+    /// fsynced, then the index, then the marker, then the directory
+    /// entries themselves.  Ordering matters — the marker is the *last*
+    /// thing to hit the disk, so a run directory with a `DONE` file is
+    /// complete by construction and a killed daemon can never leave one
+    /// that merely looks finished.  Completion used to be implied by
+    /// process exit; a long-lived `pico serve` daemon has no such exit.
     pub fn finalize(&self) -> std::io::Result<()> {
-        fs::write(
-            self.root.join("index.json"),
-            Json::Arr(self.index.clone()).to_string_pretty(),
-        )
+        for entry in &self.index {
+            if let Some(file) = entry.get("file").and_then(Json::as_str) {
+                sync_file(&self.root.join(file))?;
+            }
+        }
+        write_durable(
+            &self.root.join("index.json"),
+            &Json::Arr(self.index.clone()).to_string_pretty(),
+        )?;
+        write_durable(
+            &self.root.join("DONE"),
+            &Json::obj()
+                .set("status", "done")
+                .set("records", self.index.len())
+                .to_string_pretty(),
+        )?;
+        sync_dir(&self.root)
+    }
+
+    /// Write the terminal `FAILED` marker for a campaign that errored or
+    /// was cancelled after the directory was created — the counterpart of
+    /// [`RunDir::finalize`], so no run directory ends without a verdict.
+    pub fn mark_failed(&self, error: &str) -> std::io::Result<()> {
+        write_durable(
+            &self.root.join("FAILED"),
+            &Json::obj().set("status", "failed").set("error", error).to_string_pretty(),
+        )?;
+        sync_dir(&self.root)
     }
 
     /// Load an index back for post-processing.
@@ -265,6 +301,29 @@ impl RunDir {
             _ => Err("index.json is not an array".into()),
         }
     }
+}
+
+/// Write + fsync in one step (durability building block of
+/// [`RunDir::finalize`] / [`RunDir::mark_failed`]).
+fn write_durable(path: &Path, contents: &str) -> std::io::Result<()> {
+    let mut f = fs::File::create(path)?;
+    std::io::Write::write_all(&mut f, contents.as_bytes())?;
+    f.sync_all()
+}
+
+fn sync_file(path: &Path) -> std::io::Result<()> {
+    fs::File::open(path)?.sync_all()
+}
+
+/// Flush the directory entries themselves, so the files just synced are
+/// reachable after a crash.  Directories open for read on unix; elsewhere
+/// this is a no-op (the data fsyncs above still hold).
+fn sync_dir(path: &Path) -> std::io::Result<()> {
+    #[cfg(unix)]
+    fs::File::open(path)?.sync_all()?;
+    #[cfg(not(unix))]
+    let _ = path;
+    Ok(())
 }
 
 /// Destination for campaign records — the pluggable half of the
@@ -531,6 +590,48 @@ mod tests {
         };
         rd.add_record(&rec).unwrap();
         assert!(!dir.join("records/t0.json").exists());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn finalize_writes_durable_done_marker() {
+        let dir = std::env::temp_dir().join(format!("pico_done_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let mut rd = RunDir::create(&dir).unwrap();
+        let rec = Record {
+            id: "p00000".into(),
+            collective: "allreduce".into(),
+            backend: "openmpi-sim".into(),
+            bytes: 1024,
+            nodes: 2,
+            ppn: 1,
+            requested_algorithm: None,
+            effective_algorithm: "ring".into(),
+            fallback: None,
+            knobs_effective: vec![],
+            knobs_degraded: vec![],
+            measurement: meas(),
+            granularity: Granularity::Summary,
+        };
+        rd.add_record(&rec).unwrap();
+        assert!(!dir.join("DONE").exists(), "no verdict before finalize");
+        rd.finalize().unwrap();
+        let done = Json::parse(&fs::read_to_string(dir.join("DONE")).unwrap()).unwrap();
+        assert_eq!(done.get("status").unwrap().as_str(), Some("done"));
+        assert_eq!(done.get("records").unwrap().as_usize(), Some(1));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn mark_failed_writes_failed_marker() {
+        let dir = std::env::temp_dir().join(format!("pico_failed_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let rd = RunDir::create(&dir).unwrap();
+        rd.mark_failed("cancelled mid-campaign").unwrap();
+        let failed = Json::parse(&fs::read_to_string(dir.join("FAILED")).unwrap()).unwrap();
+        assert_eq!(failed.get("status").unwrap().as_str(), Some("failed"));
+        assert!(failed.get("error").unwrap().as_str().unwrap().contains("cancelled"));
+        assert!(!dir.join("DONE").exists());
         fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -1,0 +1,216 @@
+//! `pico serve` — the long-lived multi-tenant campaign service
+//! (DESIGN.md §Service).
+//!
+//! One daemon process owns one [`Engine`], so the process-wide
+//! [`ScheduleCache`](crate::orchestrator::ScheduleCache) and worker pool are
+//! shared across every client: the second tenant submitting the sweep the
+//! first tenant just ran gets pure cache hits — no skeleton rebuilds —
+//! which is the whole economic argument for running a service instead of
+//! one-shot CLI invocations.
+//!
+//! The subsystem splits adapter-style:
+//!
+//! * [`protocol`] — the newline-delimited JSON wire format: request
+//!   parsing and reply-frame constructors, every failure a typed
+//!   [`Reject`](protocol::Reject);
+//! * [`scheduler`] — admission control ([`scheduler::Admission`]: FIFO
+//!   tickets over a `max_inflight_points` budget, so a giant sweep cannot
+//!   starve a small probe) plus capability routing
+//!   ([`scheduler::capability_check`]);
+//! * [`session`] — one request loop per connection, per-session record
+//!   streaming, job threads.
+//!
+//! Two front ends share everything: [`Service::serve_stream`] (one session
+//! on stdin/stdout — scriptable, what verify.sh drives) and
+//! [`Service::serve_unix`] (a Unix socket accepting many concurrent
+//! sessions — what the multi-tenant integration tests drive).
+
+pub mod protocol;
+pub mod scheduler;
+pub mod session;
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::analysis::ServiceStats;
+use crate::engine::Engine;
+use scheduler::Admission;
+
+// The whole service hinges on driving one Engine from many session and
+// job threads; fail compilation loudly if the facade ever loses that.
+const _: fn() = || {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Engine>();
+};
+
+/// Service tuning knobs (all have serviceable defaults).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Admission budget: total points allowed in flight across all
+    /// tenants.  Jobs queue FIFO for budget beyond this.
+    pub max_inflight_points: usize,
+    /// Shard size for point grids: each campaign acquires admission and
+    /// runs `chunk_points` points at a time, yielding the pool between
+    /// chunks so concurrent jobs interleave.
+    pub chunk_points: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { max_inflight_points: 256, chunk_points: 16 }
+    }
+}
+
+/// State shared by every session and job thread of one daemon.
+pub(crate) struct Shared {
+    pub(crate) engine: Engine,
+    pub(crate) admission: Admission,
+    pub(crate) stats: Mutex<ServiceStats>,
+    /// Set by the first `shutdown` request: gates new submits everywhere
+    /// while admitted jobs drain.
+    pub(crate) shutdown: AtomicBool,
+    pub(crate) chunk_points: usize,
+}
+
+impl Shared {
+    pub(crate) fn new(engine: Engine, opts: &ServeOptions) -> Arc<Shared> {
+        Arc::new(Shared {
+            engine,
+            admission: Admission::new(opts.max_inflight_points),
+            stats: Mutex::new(ServiceStats::default()),
+            shutdown: AtomicBool::new(false),
+            chunk_points: opts.chunk_points.max(1),
+        })
+    }
+}
+
+/// The daemon: owns the shared state and runs a front end to completion.
+pub struct Service {
+    shared: Arc<Shared>,
+}
+
+impl Service {
+    pub fn new(engine: Engine, opts: ServeOptions) -> Service {
+        Service { shared: Shared::new(engine, &opts) }
+    }
+
+    /// Counters snapshot (exposed for tests and the final daemon log line).
+    pub fn stats(&self) -> ServiceStats {
+        *self.shared.stats.lock().unwrap()
+    }
+
+    /// One session over arbitrary streams; returns when the client sends
+    /// `shutdown` or closes its end.  This is the stdin/stdout front end:
+    /// `pico serve` without `--socket` calls it on the process streams.
+    pub fn serve_stream(
+        &self,
+        reader: Box<dyn Read + Send>,
+        writer: Box<dyn Write + Send>,
+    ) -> bool {
+        session::run_session(self.shared.clone(), reader, writer)
+    }
+
+    /// Accept sessions on a Unix socket until some session requests
+    /// shutdown.  Each connection gets its own session thread; shutdown
+    /// drains admitted jobs, acks the requester, then stops accepting and
+    /// removes the socket file.
+    pub fn serve_unix(&self, path: &Path) -> Result<(), String> {
+        use std::os::unix::net::{UnixListener, UnixStream};
+
+        // a stale socket from a killed daemon would make bind fail forever
+        if path.exists() {
+            std::fs::remove_file(path)
+                .map_err(|e| format!("serve: cannot remove stale socket {path:?}: {e}"))?;
+        }
+        let listener = UnixListener::bind(path)
+            .map_err(|e| format!("serve: cannot bind {path:?}: {e}"))?;
+        let mut sessions: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        let stop = Arc::new(AtomicBool::new(false));
+        for conn in listener.incoming() {
+            if stop.load(Ordering::SeqCst) || self.shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let shared = self.shared.clone();
+            let stop = stop.clone();
+            let sock = PathBuf::from(path);
+            sessions.push(std::thread::spawn(move || {
+                let reader = match stream.try_clone() {
+                    Ok(r) => r,
+                    Err(_) => return,
+                };
+                let shutdown =
+                    session::run_session(shared, Box::new(reader), Box::new(stream));
+                if shutdown {
+                    stop.store(true, Ordering::SeqCst);
+                    // the accept loop blocks in `incoming()`; a throwaway
+                    // connection wakes it so it can observe `stop`
+                    let _ = UnixStream::connect(&sock);
+                }
+            }));
+        }
+        for s in sessions {
+            let _ = s.join();
+        }
+        let _ = std::fs::remove_file(path);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineConfig;
+    use crate::json::Json;
+    use std::io::{BufRead, BufReader, Write};
+    use std::os::unix::net::UnixStream;
+
+    #[test]
+    fn unix_front_end_serves_and_shuts_down() {
+        let dir = std::env::temp_dir().join(format!("pico-serve-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let sock = dir.join("mod-test.sock");
+        let service =
+            Service::new(Engine::new(EngineConfig::for_system("leonardo")), ServeOptions::default());
+        std::thread::scope(|scope| {
+            let svc = &service;
+            let path = sock.clone();
+            let daemon = scope.spawn(move || svc.serve_unix(&path).unwrap());
+            // the daemon needs a moment to bind; retry the connect
+            let mut client = None;
+            for _ in 0..200 {
+                match UnixStream::connect(&sock) {
+                    Ok(c) => {
+                        client = Some(c);
+                        break;
+                    }
+                    Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+                }
+            }
+            let client = client.expect("daemon came up");
+            let mut rd = BufReader::new(client.try_clone().unwrap());
+            let mut wr = client;
+            writeln!(wr, r#"{{"op":"cache_stats"}}"#).unwrap();
+            let mut line = String::new();
+            rd.read_line(&mut line).unwrap();
+            let frame = Json::parse(&line).unwrap();
+            assert_eq!(frame.get("frame").unwrap().as_str(), Some("cache_stats"));
+            writeln!(wr, r#"{{"op":"shutdown"}}"#).unwrap();
+            line.clear();
+            rd.read_line(&mut line).unwrap();
+            assert_eq!(
+                Json::parse(&line).unwrap().get("frame").unwrap().as_str(),
+                Some("shutdown_ack")
+            );
+            daemon.join().unwrap();
+        });
+        assert!(!sock.exists(), "socket removed on shutdown");
+        assert_eq!(service.stats().sessions, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,320 @@
+//! Wire protocol of `pico serve` (DESIGN.md §Service).
+//!
+//! Newline-delimited JSON in both directions: each request is one JSON
+//! object on one line, each reply is one *frame* — a JSON object whose
+//! `"frame"` field names its shape — on one line.  The grammar:
+//!
+//! ```text
+//! request  := { "op": OP, ... }
+//! OP       := "submit" | "status" | "wait" | "cancel"
+//!           | "cache_stats" | "capabilities" | "shutdown"
+//! submit   := { "op": "submit", "id": ID, "kind": KIND, "spec": {...},
+//!               "out"?: DIR }
+//! KIND     := "campaign" | "sweep" | "probe" | "overlap" | "import"
+//!
+//! frame    := accepted | record | report | done | error | status
+//!           | cache_stats | capabilities | shutdown_ack
+//! accepted := { "frame": "accepted", "id": ID, "kind": KIND,
+//!               "points": N }
+//! record   := { "frame": "record", "id": ID, "seq": K, "record": {...} }
+//! report   := { "frame": "report", "id": ID, "report": {...} }
+//! done     := { "frame": "done", "id": ID, "points": N, "streamed": M }
+//! error    := { "frame": "error", "id"?: ID, "code": CODE, "message": S }
+//! ```
+//!
+//! The `"record"` payload is the standardized [`Record`] JSON — the same
+//! document `pico run` writes to `records/<id>.json`, so a client that
+//! pretty-prints a streamed record reproduces the run-dir file byte for
+//! byte (the in-tree JSON writer is deterministic; asserted end-to-end in
+//! `rust/tests/serve_protocol.rs`).
+//!
+//! Every malformed or unserviceable request yields a typed [`Reject`]
+//! rendered as an `error` frame — the daemon never panics on client
+//! input, and the session stays usable after an error.
+//!
+//! # Adding a request type
+//!
+//! 1. add the op name to [`Request`] and [`Request::parse`];
+//! 2. handle it in `session::Session::dispatch`;
+//! 3. give its reply a `"frame"` name here (one constructor per shape);
+//! 4. extend `rust/tests/serve_protocol.rs` and the DESIGN.md grammar.
+
+use std::path::PathBuf;
+
+use crate::json::Json;
+use crate::results::Record;
+
+/// What a `submit` carries — one variant per existing typed spec route.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitKind {
+    /// A full `test.json` campaign document ([`crate::config::TestSpec`]).
+    Campaign,
+    /// A tuning sweep ([`crate::engine::SweepSpec`]), expanded to a
+    /// campaign over every exposed algorithm.
+    Sweep,
+    /// One pinned point ([`crate::engine::ProbeSpec`]).
+    Probe,
+    /// A workload overlap composition ([`crate::engine::OverlapSpec`]).
+    Overlap,
+    /// Inline GOAL interchange text ([`crate::engine::GoalSource`]).
+    Import,
+}
+
+impl SubmitKind {
+    pub const ALL: [SubmitKind; 5] = [
+        SubmitKind::Campaign,
+        SubmitKind::Sweep,
+        SubmitKind::Probe,
+        SubmitKind::Overlap,
+        SubmitKind::Import,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SubmitKind::Campaign => "campaign",
+            SubmitKind::Sweep => "sweep",
+            SubmitKind::Probe => "probe",
+            SubmitKind::Overlap => "overlap",
+            SubmitKind::Import => "import",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SubmitKind> {
+        SubmitKind::ALL.into_iter().find(|k| k.label() == s)
+    }
+}
+
+/// One parsed client request.
+#[derive(Debug, Clone)]
+pub enum Request {
+    Submit { id: String, kind: SubmitKind, spec: Json, out: Option<PathBuf> },
+    /// Progress of one job (`id` set) or every job of this session.
+    Status { id: Option<String> },
+    /// Block until job `id` reaches a terminal state.
+    Wait { id: String },
+    Cancel { id: String },
+    CacheStats,
+    Capabilities,
+    Shutdown,
+}
+
+/// Typed rejection codes — the service-boundary counterpart of the typed
+/// errors every spec constructor already returns.  Stable strings: clients
+/// switch on `code`, not on message text.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrCode {
+    /// The line was not a JSON object (or not JSON at all).
+    MalformedFrame,
+    /// A JSON object with a missing or unknown `"op"`.
+    UnknownOp,
+    /// A `submit` with a missing or unknown `"kind"`.
+    UnknownKind,
+    /// The spec document failed its typed validation (`TryFrom<&Json>`).
+    InvalidSpec,
+    /// The spec is well-formed but demands a capability this engine's
+    /// platform does not expose (backend/collective/switch routing).
+    CapabilityUnavailable,
+    /// `status`/`wait`/`cancel` named a job this session never submitted.
+    UnknownJob,
+    /// A `submit` reused a live job id.
+    DuplicateJob,
+    /// The job was cancelled by the client before completing.
+    Cancelled,
+    /// The daemon is shutting down; no new work is admitted.
+    ShuttingDown,
+    /// The engine failed while running an admitted job.
+    EngineError,
+}
+
+impl ErrCode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ErrCode::MalformedFrame => "malformed_frame",
+            ErrCode::UnknownOp => "unknown_op",
+            ErrCode::UnknownKind => "unknown_kind",
+            ErrCode::InvalidSpec => "invalid_spec",
+            ErrCode::CapabilityUnavailable => "capability_unavailable",
+            ErrCode::UnknownJob => "unknown_job",
+            ErrCode::DuplicateJob => "duplicate_job",
+            ErrCode::Cancelled => "cancelled",
+            ErrCode::ShuttingDown => "shutting_down",
+            ErrCode::EngineError => "engine_error",
+        }
+    }
+}
+
+/// A typed rejection: code + human message, rendered as an `error` frame.
+#[derive(Debug, Clone)]
+pub struct Reject {
+    pub code: ErrCode,
+    pub message: String,
+}
+
+impl Reject {
+    pub fn new(code: ErrCode, message: impl Into<String>) -> Reject {
+        Reject { code, message: message.into() }
+    }
+
+    pub fn invalid_spec(message: impl Into<String>) -> Reject {
+        Reject::new(ErrCode::InvalidSpec, message)
+    }
+}
+
+impl Request {
+    /// Parse one request line.  Every failure is a typed [`Reject`] — the
+    /// caller turns it into an `error` frame and keeps the session open.
+    pub fn parse(line: &str) -> Result<Request, Reject> {
+        let doc = Json::parse(line)
+            .map_err(|e| Reject::new(ErrCode::MalformedFrame, format!("not JSON: {e}")))?;
+        if doc.as_obj().is_none() {
+            return Err(Reject::new(ErrCode::MalformedFrame, "frame must be a JSON object"));
+        }
+        let op = doc
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Reject::new(ErrCode::UnknownOp, "missing \"op\" field"))?;
+        match op {
+            "submit" => {
+                let id = doc
+                    .get("id")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Reject::invalid_spec("submit: missing \"id\""))?
+                    .to_string();
+                let kind_s = doc
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Reject::new(ErrCode::UnknownKind, "submit: missing \"kind\""))?;
+                let kind = SubmitKind::parse(kind_s).ok_or_else(|| {
+                    Reject::new(ErrCode::UnknownKind, format!("unknown submit kind {kind_s:?}"))
+                })?;
+                let spec = doc
+                    .get("spec")
+                    .cloned()
+                    .ok_or_else(|| Reject::invalid_spec("submit: missing \"spec\""))?;
+                let out = doc.get("out").and_then(Json::as_str).map(PathBuf::from);
+                Ok(Request::Submit { id, kind, spec, out })
+            }
+            "status" => Ok(Request::Status {
+                id: doc.get("id").and_then(Json::as_str).map(str::to_string),
+            }),
+            "wait" => Ok(Request::Wait {
+                id: doc
+                    .get("id")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Reject::invalid_spec("wait: missing \"id\""))?
+                    .to_string(),
+            }),
+            "cancel" => Ok(Request::Cancel {
+                id: doc
+                    .get("id")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Reject::invalid_spec("cancel: missing \"id\""))?
+                    .to_string(),
+            }),
+            "cache_stats" => Ok(Request::CacheStats),
+            "capabilities" => Ok(Request::Capabilities),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(Reject::new(ErrCode::UnknownOp, format!("unknown op {other:?}"))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frame constructors — one per reply shape
+// ---------------------------------------------------------------------------
+
+pub fn accepted_frame(id: &str, kind: SubmitKind, points: usize) -> Json {
+    Json::obj()
+        .set("frame", "accepted")
+        .set("id", id)
+        .set("kind", kind.label())
+        .set("points", points)
+}
+
+pub fn record_frame(id: &str, seq: usize, rec: &Record) -> Json {
+    Json::obj()
+        .set("frame", "record")
+        .set("id", id)
+        .set("seq", seq)
+        .set("record", rec.to_json())
+}
+
+/// A one-shot result document for routes that produce a report rather
+/// than per-point records (today: `import`).
+pub fn report_frame(id: &str, report: Json) -> Json {
+    Json::obj().set("frame", "report").set("id", id).set("report", report)
+}
+
+pub fn done_frame(id: &str, points: usize, streamed: usize) -> Json {
+    Json::obj()
+        .set("frame", "done")
+        .set("id", id)
+        .set("points", points)
+        .set("streamed", streamed)
+}
+
+/// An `error` frame; `id` is present when the error belongs to a job.
+pub fn error_frame(id: Option<&str>, rej: &Reject) -> Json {
+    let j = Json::obj().set("frame", "error");
+    let j = match id {
+        Some(id) => j.set("id", id),
+        None => j,
+    };
+    j.set("code", rej.code.label()).set("message", rej.message.as_str())
+}
+
+pub fn shutdown_ack_frame() -> Json {
+    Json::obj().set("frame", "shutdown_ack")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_submit_round_trip() {
+        let line = r#"{"op":"submit","id":"j1","kind":"campaign","spec":{"name":"t"},"out":"/tmp/x"}"#;
+        match Request::parse(line).unwrap() {
+            Request::Submit { id, kind, spec, out } => {
+                assert_eq!(id, "j1");
+                assert_eq!(kind, SubmitKind::Campaign);
+                assert_eq!(spec.get("name").unwrap().as_str(), Some("t"));
+                assert_eq!(out, Some(PathBuf::from("/tmp/x")));
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_rejects_are_typed() {
+        let code = |line: &str| Request::parse(line).unwrap_err().code;
+        assert_eq!(code("not json at all"), ErrCode::MalformedFrame);
+        assert_eq!(code("[1,2,3]"), ErrCode::MalformedFrame); // JSON, but not an object
+        assert_eq!(code(r#"{"noop":1}"#), ErrCode::UnknownOp);
+        assert_eq!(code(r#"{"op":"frobnicate"}"#), ErrCode::UnknownOp);
+        assert_eq!(code(r#"{"op":"submit","id":"x","kind":"bogus","spec":{}}"#), ErrCode::UnknownKind);
+        assert_eq!(code(r#"{"op":"submit","kind":"campaign","spec":{}}"#), ErrCode::InvalidSpec);
+        assert_eq!(code(r#"{"op":"cancel"}"#), ErrCode::InvalidSpec);
+    }
+
+    #[test]
+    fn submit_kinds_round_trip() {
+        for k in SubmitKind::ALL {
+            assert_eq!(SubmitKind::parse(k.label()), Some(k));
+        }
+        assert_eq!(SubmitKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn frames_have_stable_shape() {
+        let f = accepted_frame("j", SubmitKind::Sweep, 12);
+        assert_eq!(f.get("frame").unwrap().as_str(), Some("accepted"));
+        assert_eq!(f.get("points").unwrap().as_usize(), Some(12));
+        let e = error_frame(Some("j"), &Reject::new(ErrCode::Cancelled, "stop"));
+        assert_eq!(e.get("code").unwrap().as_str(), Some("cancelled"));
+        assert_eq!(e.get("id").unwrap().as_str(), Some("j"));
+        let e = error_frame(None, &Reject::invalid_spec("bad"));
+        assert!(e.get("id").is_none());
+        assert_eq!(shutdown_ack_frame().get("frame").unwrap().as_str(), Some("shutdown_ack"));
+    }
+}

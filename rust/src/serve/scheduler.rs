@@ -1,0 +1,416 @@
+//! Admission control + capability routing for the `pico serve` daemon.
+//!
+//! # Admission
+//!
+//! All sessions share one [`Admission`] controller with a global
+//! `max_inflight_points` budget.  A job does not claim its whole point
+//! grid at once: the session layer shards the grid into chunks of at most
+//! `chunk_points` and acquires the budget **per chunk**, FIFO.  Each
+//! acquire takes a ticket; tickets are served strictly in order, and a
+//! ticket is only served when the *whole* chunk fits the remaining budget.
+//! The effect is the interleaving the tentpole asks for: a 500-point sweep
+//! holds the budget for one chunk at a time, and a 1-point probe submitted
+//! meanwhile takes the very next ticket — it runs after the in-flight
+//! chunk, not after the whole sweep (non-starvation; asserted in the
+//! module tests below by construction of the ticket queue).
+//!
+//! Chunks compose directly with
+//! [`parallel_ordered`](crate::orchestrator::parallel_ordered): each
+//! admitted chunk runs on the engine's worker pool via
+//! [`run_points_sink`](crate::orchestrator::run_points_sink) with a
+//! `seq_base` offset, so record ids and sink sequence numbers stay
+//! campaign-global — the chunked run directory is byte-identical to the
+//! unchunked one.
+//!
+//! A waiting acquire watches the job's cancel token: cancelling a queued
+//! job removes its ticket deterministically (no work ran, nothing to
+//! drain).  Budget release is RAII ([`Grant`]) so a panicking chunk can
+//! never leak budget.
+//!
+//! # Capability routing
+//!
+//! [`capability_check`] is the service boundary's typed gate, built on the
+//! capabilities the engine already expresses
+//! ([`Backend::algorithms`](crate::backends::Backend::algorithms),
+//! [`Backend::count_scalable`](crate::backends::Backend::count_scalable),
+//! [`SwitchCaps::aggregate`](crate::topology::SwitchCaps)):
+//! a spec demanding an unavailable capability is rejected with a
+//! structured `capability_unavailable` error frame before any point runs —
+//! never a panic, and never a silently degraded run billed as the real
+//! thing.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::backends;
+use crate::collectives::Coll;
+use crate::config::TestSpec;
+use crate::engine::Engine;
+use crate::json::Json;
+use crate::serve::protocol::{ErrCode, Reject};
+
+/// Why a waiting [`Admission::acquire`] gave up.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stop {
+    /// The job's cancel token was set while its ticket was queued.
+    Cancelled,
+}
+
+struct AdmissionState {
+    /// Points currently granted across all jobs.
+    inflight: usize,
+    /// FIFO ticket queue of waiting chunk acquires.
+    queue: VecDeque<u64>,
+    next_ticket: u64,
+    /// Jobs accepted and not yet terminal (drained by [`Admission::quiesce`]).
+    active_jobs: usize,
+}
+
+/// The process-wide FIFO point-budget scheduler (see the module docs).
+pub struct Admission {
+    max_inflight: usize,
+    state: Mutex<AdmissionState>,
+    cv: Condvar,
+}
+
+impl Admission {
+    pub fn new(max_inflight_points: usize) -> Admission {
+        Admission {
+            max_inflight: max_inflight_points.max(1),
+            state: Mutex::new(AdmissionState {
+                inflight: 0,
+                queue: VecDeque::new(),
+                next_ticket: 0,
+                active_jobs: 0,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn max_inflight_points(&self) -> usize {
+        self.max_inflight
+    }
+
+    /// Block until `n` points of budget are granted to this caller, FIFO.
+    /// Returns [`Stop::Cancelled`] (without having run anything) when
+    /// `cancel` is set while waiting.  `n` is clamped to the budget so an
+    /// oversized chunk degrades to exclusive use instead of deadlocking.
+    pub fn acquire(&self, n: usize, cancel: &AtomicBool) -> Result<Grant<'_>, Stop> {
+        let n = n.clamp(1, self.max_inflight);
+        let mut st = self.state.lock().unwrap();
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        st.queue.push_back(ticket);
+        loop {
+            if cancel.load(Ordering::SeqCst) {
+                st.queue.retain(|&t| t != ticket);
+                drop(st);
+                // the head may have changed — let the next ticket re-check
+                self.cv.notify_all();
+                return Err(Stop::Cancelled);
+            }
+            if st.queue.front() == Some(&ticket) && st.inflight + n <= self.max_inflight {
+                st.queue.pop_front();
+                st.inflight += n;
+                drop(st);
+                self.cv.notify_all();
+                return Ok(Grant { adm: self, n });
+            }
+            // the timeout is a belt-and-braces wakeup only: every state
+            // change (release, cancel, job end) already notifies
+            st = self.cv.wait_timeout(st, Duration::from_millis(50)).unwrap().0;
+        }
+    }
+
+    /// Register a job as active (call before its thread spawns, so
+    /// [`Admission::quiesce`] can never miss it).
+    pub fn job_begin(&self) {
+        self.state.lock().unwrap().active_jobs += 1;
+    }
+
+    /// A job reached a terminal state (pair of [`Admission::job_begin`]).
+    pub fn job_end(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.active_jobs = st.active_jobs.saturating_sub(1);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Wake every waiter so cancel/shutdown flags get re-checked.
+    pub fn kick(&self) {
+        self.cv.notify_all();
+    }
+
+    /// Block until every active job is terminal (graceful shutdown drains
+    /// admitted work; new submits are rejected by the session layer).
+    pub fn quiesce(&self) {
+        let mut st = self.state.lock().unwrap();
+        while st.active_jobs > 0 {
+            st = self.cv.wait_timeout(st, Duration::from_millis(50)).unwrap().0;
+        }
+    }
+
+    #[cfg(test)]
+    fn snapshot(&self) -> (usize, usize) {
+        let st = self.state.lock().unwrap();
+        (st.inflight, st.queue.len())
+    }
+}
+
+/// RAII budget grant: dropping it releases the points and wakes the queue.
+pub struct Grant<'a> {
+    adm: &'a Admission,
+    n: usize,
+}
+
+impl Grant<'_> {
+    pub fn points(&self) -> usize {
+        self.n
+    }
+}
+
+impl Drop for Grant<'_> {
+    fn drop(&mut self) {
+        let mut st = self.adm.state.lock().unwrap();
+        st.inflight = st.inflight.saturating_sub(self.n);
+        drop(st);
+        self.adm.cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Capability routing
+// ---------------------------------------------------------------------------
+
+/// Typed capability gate for a campaign-shaped spec (see the module docs).
+///
+/// Rules, in order:
+/// - the backend must exist ([`backends::by_name`]) and be listed in the
+///   engine's `backends_available`;
+/// - the backend must expose at least one algorithm for the collective;
+/// - every explicitly requested algorithm (not `"*"`) must be exposed;
+/// - a spec whose *only* requested algorithms are the in-network family
+///   is rejected on a system whose switches cannot aggregate
+///   ([`SwitchCaps::aggregate`](crate::topology::SwitchCaps) is false) —
+///   every point would silently degrade to a host algorithm, and a
+///   service tenant asking for in-network everywhere gets a typed refusal
+///   instead of a mislabelled run.  Mixed and wildcard requests pass: the
+///   per-point fallback stays recorded in each record, exactly as under
+///   `pico run`.
+pub fn capability_check(engine: &Engine, test: &TestSpec) -> Result<(), Reject> {
+    let env = engine.env();
+    let backend = backends::by_name(&test.backend).ok_or_else(|| {
+        Reject::new(
+            ErrCode::CapabilityUnavailable,
+            format!("unknown backend {:?}", test.backend),
+        )
+    })?;
+    if !env.backends_available.iter().any(|b| {
+        b == &test.backend || backends::by_name(b).is_some_and(|x| x.name() == backend.name())
+    }) {
+        return Err(Reject::new(
+            ErrCode::CapabilityUnavailable,
+            format!("backend {:?} is not available on this engine", test.backend),
+        ));
+    }
+    let exposed = backend.algorithms(test.collective);
+    if exposed.is_empty() {
+        return Err(Reject::new(
+            ErrCode::CapabilityUnavailable,
+            format!(
+                "backend {} does not implement {}",
+                backend.name(),
+                test.collective.label()
+            ),
+        ));
+    }
+    for a in &test.algorithms {
+        if a != "*" && !exposed.iter().any(|e| e == a) {
+            return Err(Reject::new(
+                ErrCode::CapabilityUnavailable,
+                format!(
+                    "backend {} exposes no {} algorithm {:?}",
+                    backend.name(),
+                    test.collective.label(),
+                    a
+                ),
+            ));
+        }
+    }
+    let innet_only =
+        !test.algorithms.is_empty() && test.algorithms.iter().all(|a| a == "innet");
+    if innet_only {
+        let profile = env.profile().map_err(Reject::invalid_spec)?;
+        if !profile.switch.aggregate {
+            return Err(Reject::new(
+                ErrCode::CapabilityUnavailable,
+                format!(
+                    "spec requests only in-network aggregation but system {:?} has no \
+                     aggregating switches",
+                    profile.name
+                ),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// The `capabilities` frame: what this daemon's engine can route —
+/// system + switch capabilities and, per backend, the exposed algorithms
+/// with their count-scalability (probed at a representative p = 4).
+pub fn capabilities_frame(engine: &Engine) -> Result<Json, Reject> {
+    let profile = engine.env().profile().map_err(Reject::invalid_spec)?;
+    let mut backends_json: Vec<Json> = Vec::new();
+    for b in backends::all_backends() {
+        let mut colls = Json::obj();
+        for coll in Coll::ALL {
+            let algos = b.algorithms(coll);
+            if algos.is_empty() {
+                continue;
+            }
+            let entries: Vec<Json> = algos
+                .iter()
+                .map(|a| {
+                    Json::obj()
+                        .set("name", *a)
+                        .set("count_scalable", b.count_scalable(coll, a, 4))
+                })
+                .collect();
+            colls = colls.set(coll.label(), Json::Arr(entries));
+        }
+        backends_json.push(
+            Json::obj()
+                .set("name", b.name())
+                .set("version", b.version())
+                .set("collectives", colls),
+        );
+    }
+    Ok(Json::obj()
+        .set("frame", "capabilities")
+        .set("system", profile.name.as_str())
+        .set(
+            "switch",
+            Json::obj()
+                .set("aggregate", profile.switch.aggregate)
+                .set("max_reduction_bytes", profile.switch.max_reduction_bytes)
+                .set("ports", profile.switch.ports),
+        )
+        .set("backends", Json::Arr(backends_json)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineConfig;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    #[test]
+    fn grants_are_fifo_and_budgeted() {
+        let adm = Admission::new(8);
+        let cancel = AtomicBool::new(false);
+        let g1 = adm.acquire(6, &cancel).unwrap();
+        assert_eq!(g1.points(), 6);
+        assert_eq!(adm.snapshot(), (6, 0));
+        // a second chunk that fits goes straight through
+        let g2 = adm.acquire(2, &cancel).unwrap();
+        assert_eq!(adm.snapshot(), (8, 0));
+        drop(g1);
+        drop(g2);
+        assert_eq!(adm.snapshot(), (0, 0));
+    }
+
+    #[test]
+    fn oversized_chunk_clamps_instead_of_deadlocking() {
+        let adm = Admission::new(4);
+        let cancel = AtomicBool::new(false);
+        let g = adm.acquire(100, &cancel).unwrap();
+        assert_eq!(g.points(), 4);
+    }
+
+    #[test]
+    fn queued_acquire_unblocks_on_release() {
+        let adm = Arc::new(Admission::new(4));
+        let cancel = Arc::new(AtomicBool::new(false));
+        let g = adm.acquire(4, &cancel).unwrap();
+        let (adm2, cancel2) = (adm.clone(), cancel.clone());
+        let waiter = std::thread::spawn(move || adm2.acquire(2, &cancel2).map(|g| g.points()));
+        // the waiter must be queued, not served, while the budget is full
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(adm.snapshot().0, 4);
+        drop(g);
+        assert_eq!(waiter.join().unwrap(), Ok(2));
+    }
+
+    #[test]
+    fn cancelled_waiter_leaves_the_queue() {
+        let adm = Arc::new(Admission::new(2));
+        let cancel = Arc::new(AtomicBool::new(false));
+        let g = adm.acquire(2, &cancel).unwrap();
+        let (adm2, cancel2) = (adm.clone(), cancel.clone());
+        let waiter = std::thread::spawn(move || adm2.acquire(1, &cancel2));
+        std::thread::sleep(Duration::from_millis(20));
+        cancel.store(true, Ordering::SeqCst);
+        adm.kick();
+        assert_eq!(waiter.join().unwrap(), Err(Stop::Cancelled));
+        assert_eq!(adm.snapshot(), (2, 0), "cancelled ticket must leave the queue");
+        drop(g);
+    }
+
+    #[test]
+    fn quiesce_waits_for_active_jobs() {
+        let adm = Arc::new(Admission::new(2));
+        adm.job_begin();
+        let adm2 = adm.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            adm2.job_end();
+        });
+        adm.quiesce(); // must not return before job_end
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn capability_gate_routes_typed_rejections() {
+        let leonardo = Engine::new(EngineConfig::for_system("leonardo"));
+        let mn5 = Engine::new(EngineConfig::for_system("mn5"));
+
+        let ok = TestSpec::new("t", "openmpi", Coll::Allreduce);
+        assert!(capability_check(&leonardo, &ok).is_ok());
+
+        let mut bad_backend = TestSpec::new("t", "nope", Coll::Allreduce);
+        bad_backend.algorithms = vec![];
+        let rej = capability_check(&leonardo, &bad_backend).unwrap_err();
+        assert_eq!(rej.code, ErrCode::CapabilityUnavailable);
+
+        let mut bad_algo = TestSpec::new("t", "openmpi", Coll::Allreduce);
+        bad_algo.algorithms = vec!["warp_drive".into()];
+        let rej = capability_check(&leonardo, &bad_algo).unwrap_err();
+        assert_eq!(rej.code, ErrCode::CapabilityUnavailable);
+
+        // innet-only on a SHARP-capable system: fine
+        let mut innet = TestSpec::new("t", "libpico", Coll::Allreduce);
+        innet.algorithms = vec!["innet".into()];
+        assert!(capability_check(&leonardo, &innet).is_ok());
+        // innet-only on mn5 (no aggregating switches): typed refusal
+        let rej = capability_check(&mn5, &innet).unwrap_err();
+        assert_eq!(rej.code, ErrCode::CapabilityUnavailable);
+        assert!(rej.message.contains("aggregat"), "{}", rej.message);
+        // mixed request passes (per-point fallback stays recorded)
+        let mut mixed = TestSpec::new("t", "libpico", Coll::Allreduce);
+        mixed.algorithms = vec!["innet".into(), "ring".into()];
+        assert!(capability_check(&mn5, &mixed).is_ok());
+    }
+
+    #[test]
+    fn capabilities_frame_lists_switch_and_backends() {
+        let e = Engine::new(EngineConfig::for_system("leonardo"));
+        let f = capabilities_frame(&e).unwrap();
+        assert_eq!(f.get("frame").unwrap().as_str(), Some("capabilities"));
+        assert_eq!(f.get("switch").unwrap().get("aggregate").unwrap().as_bool(), Some(true));
+        let backends = f.get("backends").unwrap().as_arr().unwrap();
+        assert!(backends.iter().any(|b| b.get("name").unwrap().as_str() == Some("libpico")));
+    }
+}

@@ -1,0 +1,401 @@
+//! `pico serve` end-to-end over its Unix socket: two concurrent tenant
+//! sessions whose streamed records are byte-identical to a `pico run` run
+//! directory, cross-session schedule-cache sharing visible in
+//! `cache_stats`, cancel-mid-campaign with a durable `FAILED` verdict,
+//! and the typed error frames for malformed or unserviceable requests.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use pico::collectives::Coll;
+use pico::config::TestSpec;
+use pico::json::Json;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("pico_serve_{name}_{}", std::process::id()))
+}
+
+/// Relative path → file bytes for every file under `root`.
+fn dir_snapshot(root: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(root: &Path, dir: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        for entry in fs::read_dir(dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.is_dir() {
+                walk(root, &path, out);
+            } else {
+                let rel = path.strip_prefix(root).unwrap().to_string_lossy().into_owned();
+                out.insert(rel, fs::read(&path).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(root, root, &mut out);
+    out
+}
+
+/// A `pico serve --socket` daemon child, killed on drop if a test panics
+/// before the clean `shutdown` path reaps it.
+struct Daemon {
+    child: Option<Child>,
+    sock: PathBuf,
+}
+
+impl Daemon {
+    fn spawn(name: &str, extra: &[&str]) -> Daemon {
+        let sock = std::env::temp_dir().join(format!("pico_{name}_{}.sock", std::process::id()));
+        let _ = fs::remove_file(&sock);
+        let child = Command::new(env!("CARGO_BIN_EXE_pico"))
+            .args(["serve", "--socket", sock.to_str().unwrap()])
+            .args(extra)
+            .env("PICO_TIMESTAMP", "1700000000")
+            .stdin(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .unwrap();
+        // wait for the daemon to bind
+        for _ in 0..500 {
+            if UnixStream::connect(&sock).is_ok() {
+                return Daemon { child: Some(child), sock };
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        panic!("daemon did not bind {sock:?}");
+    }
+
+    fn connect(&self) -> Client {
+        let stream = UnixStream::connect(&self.sock).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        Client { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    /// Reap after a clean `shutdown`: the daemon must exit successfully.
+    fn wait_success(mut self) {
+        let status = self.child.take().unwrap().wait().unwrap();
+        assert!(status.success(), "daemon exited with {status:?}");
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        if let Some(mut c) = self.child.take() {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+        let _ = fs::remove_file(&self.sock);
+    }
+}
+
+/// One tenant session: line-oriented request/frame transport.
+struct Client {
+    reader: BufReader<UnixStream>,
+    writer: UnixStream,
+}
+
+impl Client {
+    fn send(&mut self, req: &Json) {
+        let mut line = req.to_string_compact();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.flush().unwrap();
+    }
+
+    fn send_raw(&mut self, line: &str) {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+    }
+
+    fn read_frame(&mut self) -> Json {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        assert!(!line.is_empty(), "daemon closed the stream unexpectedly");
+        Json::parse(&line).unwrap()
+    }
+
+    /// Read frames until this job's terminal frame (`done` or `error`),
+    /// collecting streamed records as record-id → pretty-printed bytes.
+    fn drain_job(&mut self, id: &str) -> (Json, BTreeMap<String, Vec<u8>>) {
+        let mut records = BTreeMap::new();
+        loop {
+            let f = self.read_frame();
+            assert_eq!(f.get("id").and_then(Json::as_str), Some(id), "frame for wrong job: {f:?}");
+            match f.get("frame").and_then(Json::as_str).unwrap() {
+                "record" => {
+                    let rec = f.get("record").unwrap();
+                    let rid = rec.get("id").and_then(Json::as_str).unwrap().to_string();
+                    records.insert(rid, rec.to_string_pretty().into_bytes());
+                }
+                "done" | "error" => return (f, records),
+                other => panic!("unexpected frame {other:?} while draining {id}: {f:?}"),
+            }
+        }
+    }
+
+    fn cache_stats(&mut self) -> Json {
+        self.send(&Json::obj().set("op", "cache_stats"));
+        let f = self.read_frame();
+        assert_eq!(f.get("frame").and_then(Json::as_str), Some("cache_stats"));
+        f
+    }
+}
+
+/// The reference campaign: same shape as the engine-facade parity test —
+/// 8 points over 2 sizes × 2 node counts × 2 algorithms.
+fn parity_spec() -> TestSpec {
+    let mut test = TestSpec::new("parity", "openmpi", Coll::Allreduce);
+    test.sizes = vec![2048, 64 * 1024];
+    test.nodes = vec![2, 4];
+    test.algorithms = vec!["ring".into(), "rabenseifner".into()];
+    test.iterations = 2;
+    test.warmup = 1;
+    test.seed = 7;
+    test
+}
+
+fn submit(id: &str, kind: &str, spec: Json, out: Option<&Path>) -> Json {
+    let j = Json::obj()
+        .set("op", "submit")
+        .set("id", id)
+        .set("kind", kind)
+        .set("spec", spec);
+    match out {
+        Some(d) => j.set("out", d.to_str().unwrap()),
+        None => j,
+    }
+}
+
+fn counter(frame: &Json, section: &str, key: &str) -> usize {
+    frame.get(section).unwrap().get(key).unwrap().as_usize().unwrap()
+}
+
+#[test]
+fn two_tenants_stream_byte_identical_records_and_share_the_cache() {
+    let base = tmp("tenants");
+    let _ = fs::remove_dir_all(&base);
+    fs::create_dir_all(&base).unwrap();
+    let test = parity_spec();
+
+    // CLI reference run of the same spec
+    let env = pico::config::EnvSpec::for_system("leonardo");
+    let test_path = base.join("test.json");
+    let env_path = base.join("env.json");
+    fs::write(&test_path, test.to_json().to_string_pretty()).unwrap();
+    fs::write(&env_path, env.to_json().to_string_pretty()).unwrap();
+    let cli_out = base.join("cli");
+    let out = Command::new(env!("CARGO_BIN_EXE_pico"))
+        .args([
+            "run",
+            "--test",
+            test_path.to_str().unwrap(),
+            "--env",
+            env_path.to_str().unwrap(),
+            "--out",
+            cli_out.to_str().unwrap(),
+        ])
+        .env("PICO_TIMESTAMP", "1700000000")
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "CLI run failed: {}", String::from_utf8_lossy(&out.stderr));
+    let cli_dir = cli_out.join("parity");
+    let cli_snapshot = dir_snapshot(&cli_dir);
+    assert!(cli_snapshot.contains_key("DONE"), "CLI run dir carries the terminal marker");
+
+    let daemon = Daemon::spawn("tenants", &["--system", "leonardo", "--chunk-points", "3"]);
+    let mut a = daemon.connect();
+    let mut b = daemon.connect();
+
+    // both tenants submit before either drains: the campaigns interleave
+    // on the shared admission scheduler while each session streams
+    let serve_out = base.join("served");
+    a.send(&submit("a", "campaign", test.to_json(), Some(&serve_out)));
+    b.send(&submit("b", "campaign", test.to_json(), None));
+    let fa = a.read_frame();
+    assert_eq!(fa.get("frame").and_then(Json::as_str), Some("accepted"));
+    assert_eq!(fa.get("points").unwrap().as_usize(), Some(8));
+    let fb = b.read_frame();
+    assert_eq!(fb.get("frame").and_then(Json::as_str), Some("accepted"));
+
+    let (done_a, recs_a) = a.drain_job("a");
+    let (done_b, recs_b) = b.drain_job("b");
+    assert_eq!(done_a.get("frame").and_then(Json::as_str), Some("done"));
+    assert_eq!(done_b.get("frame").and_then(Json::as_str), Some("done"));
+    assert_eq!(done_a.get("streamed").unwrap().as_usize(), Some(8));
+    assert_eq!(done_b.get("streamed").unwrap().as_usize(), Some(8));
+
+    // every streamed record is byte-identical to the CLI run-dir file,
+    // for both concurrent tenants
+    for (recs, who) in [(&recs_a, "a"), (&recs_b, "b")] {
+        assert_eq!(recs.len(), 8, "tenant {who} streamed all records");
+        for (rid, bytes) in recs.iter() {
+            let file = cli_dir.join(format!("records/{rid}.json"));
+            let want = fs::read(&file).unwrap();
+            assert_eq!(bytes, &want, "tenant {who} record {rid} differs from CLI bytes");
+        }
+    }
+    // and the daemon-written run directory is the CLI one, bit for bit
+    assert_eq!(dir_snapshot(&serve_out.join("parity")), cli_snapshot);
+
+    // cross-session cache sharing: an identical sweep from tenant B after
+    // the warm-up must be pure hits — zero new skeletons, zero new misses
+    let s1 = b.cache_stats();
+    let sweep = Json::obj()
+        .set("backend", "openmpi")
+        .set("collective", "allreduce")
+        .set("sizes", vec![Json::from(2048usize), Json::from(65536usize)])
+        .set("nodes", vec![Json::from(2usize), Json::from(4usize)])
+        .set("iterations", 2usize);
+    b.send(&submit("b2", "sweep", sweep.clone(), None));
+    let acc = b.read_frame();
+    assert_eq!(acc.get("frame").and_then(Json::as_str), Some("accepted"));
+    let (done, _) = b.drain_job("b2");
+    assert_eq!(done.get("frame").and_then(Json::as_str), Some("done"));
+    let s2 = b.cache_stats();
+    // warm-up for the sweep itself (first submit of kind sweep)
+    let warm_hits = counter(&s2, "cache", "hits");
+    let warm_skel = counter(&s2, "cache", "skeletons");
+    let warm_miss = counter(&s2, "cache", "misses");
+    assert!(warm_hits >= counter(&s1, "cache", "hits"));
+    // the second tenant's *identical* sweep: hits move, nothing is rebuilt
+    b.send(&submit("b3", "sweep", sweep, None));
+    let acc = b.read_frame();
+    assert_eq!(acc.get("frame").and_then(Json::as_str), Some("accepted"));
+    let (done, _) = b.drain_job("b3");
+    assert_eq!(done.get("frame").and_then(Json::as_str), Some("done"));
+    let s3 = b.cache_stats();
+    assert!(
+        counter(&s3, "cache", "hits") > warm_hits,
+        "identical sweep must be served from the shared cache"
+    );
+    assert_eq!(counter(&s3, "cache", "skeletons"), warm_skel, "no skeleton rebuilds");
+    assert_eq!(counter(&s3, "cache", "misses"), warm_miss, "no cache misses");
+    // service counters saw both tenants
+    assert_eq!(counter(&s3, "service", "sessions"), 2);
+    assert!(counter(&s3, "service", "completed") >= 4);
+
+    a.send(&Json::obj().set("op", "shutdown"));
+    let ack = a.read_frame();
+    assert_eq!(ack.get("frame").and_then(Json::as_str), Some("shutdown_ack"));
+    daemon.wait_success();
+    fs::remove_dir_all(&base).unwrap();
+}
+
+#[test]
+fn cancel_mid_campaign_leaves_a_failed_run_dir() {
+    let base = tmp("cancel");
+    let _ = fs::remove_dir_all(&base);
+    fs::create_dir_all(&base).unwrap();
+
+    // small budget + small chunks so a big campaign takes many admission
+    // round-trips — the cancel lands long before the grid finishes
+    let daemon = Daemon::spawn(
+        "cancel",
+        &["--system", "leonardo", "--max-inflight-points", "2", "--chunk-points", "2", "--jobs", "1"],
+    );
+    let mut c = daemon.connect();
+    let mut big = parity_spec();
+    big.name = "big".into();
+    big.sizes = vec![2048, 8192, 65536, 1 << 20];
+    big.nodes = vec![2, 4, 8, 16];
+    big.algorithms = vec!["*".into()];
+    big.iterations = 3;
+    let out_dir = base.join("served");
+    c.send(&submit("big", "campaign", big.to_json(), Some(&out_dir)));
+    let acc = c.read_frame();
+    assert_eq!(acc.get("frame").and_then(Json::as_str), Some("accepted"));
+    let points = acc.get("points").unwrap().as_usize().unwrap();
+    assert!(points >= 64, "grid is big enough to outlive the cancel");
+
+    c.send(&Json::obj().set("op", "cancel").set("id", "big"));
+    let (terminal, records) = c.drain_job("big");
+    assert_eq!(terminal.get("frame").and_then(Json::as_str), Some("error"));
+    assert_eq!(terminal.get("code").and_then(Json::as_str), Some("cancelled"));
+    assert!(records.len() < points, "cancel stopped the stream early");
+
+    // status reports the terminal state
+    c.send(&Json::obj().set("op", "status").set("id", "big"));
+    let st = c.read_frame();
+    let jobs = st.get("jobs").unwrap().as_arr().unwrap();
+    assert_eq!(jobs[0].get("state").and_then(Json::as_str), Some("cancelled"));
+
+    // durability: the partial run dir carries FAILED, never DONE
+    let rd = out_dir.join("big");
+    assert!(rd.join("FAILED").exists(), "cancelled campaign is marked FAILED");
+    assert!(!rd.join("DONE").exists());
+    let verdict = Json::parse(&fs::read_to_string(rd.join("FAILED")).unwrap()).unwrap();
+    assert_eq!(verdict.get("status").and_then(Json::as_str), Some("failed"));
+
+    c.send(&Json::obj().set("op", "shutdown"));
+    let ack = c.read_frame();
+    assert_eq!(ack.get("frame").and_then(Json::as_str), Some("shutdown_ack"));
+    daemon.wait_success();
+    fs::remove_dir_all(&base).unwrap();
+}
+
+#[test]
+fn malformed_and_unserviceable_requests_get_typed_errors() {
+    // mn5 has no aggregating switches — the capability gate must refuse
+    // an innet-only spec with a structured frame, never a panic
+    let daemon = Daemon::spawn("typed", &["--system", "mn5"]);
+    let mut c = daemon.connect();
+
+    let expect_code = |c: &mut Client, code: &str| {
+        let f = c.read_frame();
+        assert_eq!(f.get("frame").and_then(Json::as_str), Some("error"), "{f:?}");
+        assert_eq!(f.get("code").and_then(Json::as_str), Some(code), "{f:?}");
+    };
+
+    c.send_raw("this is not json");
+    expect_code(&mut c, "malformed_frame");
+    c.send_raw("[1,2,3]");
+    expect_code(&mut c, "malformed_frame");
+    c.send_raw(r#"{"op":"frobnicate"}"#);
+    expect_code(&mut c, "unknown_op");
+    c.send_raw(r#"{"op":"submit","id":"x","kind":"bogus","spec":{}}"#);
+    expect_code(&mut c, "unknown_kind");
+    c.send_raw(r#"{"op":"submit","id":"x","kind":"campaign","spec":{"collective":"nope"}}"#);
+    expect_code(&mut c, "invalid_spec");
+    c.send_raw(r#"{"op":"cancel","id":"ghost"}"#);
+    expect_code(&mut c, "unknown_job");
+
+    let mut innet = TestSpec::new("innet-only", "libpico", Coll::Allreduce);
+    innet.algorithms = vec!["innet".into()];
+    c.send(&submit("n", "campaign", innet.to_json(), None));
+    expect_code(&mut c, "capability_unavailable");
+
+    // duplicate id: first submit is accepted, the reuse is refused
+    let mut tiny = TestSpec::new("tiny", "openmpi", Coll::Allreduce);
+    tiny.sizes = vec![2048];
+    tiny.nodes = vec![2];
+    tiny.algorithms = vec!["ring".into()];
+    tiny.iterations = 1;
+    tiny.warmup = 0;
+    c.send(&submit("t", "campaign", tiny.to_json(), None));
+    let acc = c.read_frame();
+    assert_eq!(acc.get("frame").and_then(Json::as_str), Some("accepted"));
+    c.send(&Json::obj().set("op", "wait").set("id", "t"));
+    let (done, recs) = c.drain_job("t");
+    assert_eq!(done.get("frame").and_then(Json::as_str), Some("done"));
+    assert_eq!(recs.len(), 1);
+    let st = c.read_frame(); // the wait reply
+    assert_eq!(st.get("frame").and_then(Json::as_str), Some("status"));
+    c.send(&submit("t", "campaign", tiny.to_json(), None));
+    expect_code(&mut c, "duplicate_job");
+
+    // after seven rejections the session still serves real requests
+    let caps = {
+        c.send(&Json::obj().set("op", "capabilities"));
+        c.read_frame()
+    };
+    assert_eq!(caps.get("frame").and_then(Json::as_str), Some("capabilities"));
+    assert_eq!(caps.get("switch").unwrap().get("aggregate").unwrap().as_bool(), Some(false));
+
+    c.send(&Json::obj().set("op", "shutdown"));
+    let ack = c.read_frame();
+    assert_eq!(ack.get("frame").and_then(Json::as_str), Some("shutdown_ack"));
+    daemon.wait_success();
+}

@@ -19,6 +19,11 @@
 #      vs the reference heap scan) and fails on any divergence; a
 #      tree_pipelined overlap must be served by the (count, segsize)-
 #      canonical skeleton cache (1 skeleton, 1 rescale).
+#   9. serve smoke: pipe the scripted examples/serve_session.jsonl
+#      transcript through `pico serve` in stdio mode — the daemon must
+#      stream all 48 records, write a run directory byte-identical to the
+#      stage-4 `pico run` one (terminal DONE marker included), answer
+#      cache_stats, and exit cleanly on the shutdown frame.
 #
 # Every stage runs under `set -euo pipefail`, so the first non-zero exit
 # aborts the script with that stage's status.
@@ -159,5 +164,28 @@ grep -q "faster-than-serial: yes" "$TMP/fastpath.txt"
     --nodes 8 --repeat 2 --cache-stats > "$TMP/fastpath_cache.txt"
 grep -q "1 skeletons built, 1 rescales" "$TMP/fastpath_cache.txt"
 echo "OK: fast path matches simulate_scan; pipelined skeletons rescale"
+
+echo "== smoke: pico serve (scripted session, run-dir parity, clean shutdown)"
+# the transcript submits the same paritycheck campaign stage 4 ran via
+# `pico run`, waits for it, asks for cache_stats, and shuts the daemon
+# down; the daemon-written run dir must match the CLI one bit for bit
+ROOT=$PWD
+mkdir -p "$TMP/daemon"
+(cd "$TMP/daemon" && \
+    "$ROOT/$BIN" serve < "$ROOT/examples/serve_session.jsonl" \
+    > "$TMP/serve_frames.jsonl" 2> "$TMP/serve_log.txt")
+grep -q '"frame":"accepted"' "$TMP/serve_frames.jsonl"
+grep -q '"points":48'        "$TMP/serve_frames.jsonl"
+grep -q '"frame":"done"'     "$TMP/serve_frames.jsonl"
+grep -q '"frame":"cache_stats"'   "$TMP/serve_frames.jsonl"
+grep -q '"frame":"shutdown_ack"' "$TMP/serve_frames.jsonl"
+n_streamed=$(grep -c '"frame":"record"' "$TMP/serve_frames.jsonl")
+if [ "$n_streamed" -ne "$n_records" ]; then
+    echo "FAIL: daemon streamed $n_streamed records, CLI wrote $n_records" >&2
+    exit 1
+fi
+diff -r "$TMP/serial/paritycheck" "$TMP/daemon/serve_out/paritycheck"
+test -f "$TMP/daemon/serve_out/paritycheck/DONE"
+echo "OK: served campaign streamed $n_streamed records, run dir identical"
 
 echo "verify: all checks passed"
