@@ -487,4 +487,73 @@ fn main() {
         sj.set("cache_hits", stats.hits);
     }
     sj.write_if_env("PICO_BENCH_SIM_OUT");
+
+    // ---- point fast path (BENCH_point.json) -------------------------------
+    // Cross-point amortization: the schedule cache hands out ONE compiled
+    // `SimPlan` per schedule structure (rescales reuse the skeleton's plan
+    // verbatim) and every campaign worker carries one `SimScratch`, so a
+    // warm sweep point costs "rescale segs + run the event core".  Set
+    // PICO_BENCH_POINT_OUT=<path> (scripts/bench.sh does) to persist the
+    // section as its own bench-trajectory entry.
+    section("L3: point fast path — cached plans + per-worker scratch");
+    let mut pt = BenchJson::new("point");
+    {
+        use pico::benchkit::bench_pair;
+        use pico::sim::{simulate_in, simulate_with_plan, SimPlan, SimScratch};
+
+        // warm-sweep point throughput: every schedule + plan already
+        // cache-resident, workers reusing their scratch
+        let mut spec = TestSpec::new("perf-point", "openmpi", Coll::Allreduce);
+        spec.sizes = vec![64 * 1024, 1 << 20, 8 << 20, 32 << 20];
+        spec.nodes = vec![16, 32];
+        spec.algorithms = vec!["*".into()];
+        spec.iterations = 2;
+        spec.warmup = 0;
+        spec.granularity = pico::results::Granularity::None;
+        let env = EnvSpec::for_system("leonardo");
+        let cache = ScheduleCache::new();
+        let points = run_campaign_jobs_cached(&spec, &env, None, 1, &cache).unwrap().len();
+        let t_sweep = bench("point: warm 48-point sweep (serial)", 1, 3, || {
+            run_campaign_jobs_cached(&spec, &env, None, 1, &cache).unwrap().len()
+        });
+        report_rate("point: warm sweep throughput", points, t_sweep);
+        pt.set_rate("warm_sweep_points", points, t_sweep);
+        pt.set_seconds("warm_sweep_s", t_sweep);
+        let stats = cache.stats();
+        println!(
+            "  -> plan amortization: {} plans built, {} plan hits",
+            stats.plans_built, stats.plan_hits
+        );
+        pt.set("plans_built", stats.plans_built);
+        pt.set("plan_hits", stats.plan_hits);
+
+        // plan-build amortization curve: one `SimPlan::new` on the p=512
+        // ring vs its per-point share at sweep sizes K — the setup cost a
+        // cached campaign pays once instead of K times
+        let t_plan = bench("point: SimPlan::new, p=512 ring", 1, 10, || {
+            SimPlan::new(&goal).n_channels()
+        });
+        pt.set_seconds("plan_build_p512_s", t_plan);
+        for k in [1usize, 8, 48, 480] {
+            println!("  -> plan share at K={k}: {:.3} us/point", t_plan / k as f64 * 1e6);
+            pt.set(&format!("plan_share_k{k}_s"), t_plan / k as f64);
+        }
+
+        // fresh-scratch vs reused-scratch on the same cached plan: the
+        // allocation cost a worker saves on every point after its first
+        let plan = SimPlan::new(&goal);
+        let ctx = SimContext::new(&prof, &pl);
+        let mut scratch = SimScratch::new();
+        let (t_fresh, t_reused, speedup) = bench_pair(
+            "point: p=512 ring, fresh vs reused scratch",
+            1,
+            10,
+            || simulate_with_plan(&goal, &ctx, &plan).total_time,
+            || simulate_in(&goal, &ctx, &plan, &mut scratch).total_time,
+        );
+        pt.set_seconds("sim_fresh_scratch_s", t_fresh);
+        pt.set_seconds("sim_reused_scratch_s", t_reused);
+        pt.set("scratch_reuse_speedup", speedup);
+    }
+    pt.write_if_env("PICO_BENCH_POINT_OUT");
 }

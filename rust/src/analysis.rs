@@ -438,7 +438,8 @@ pub fn render_breakdown(
 /// Service-level counters for `pico serve` (DESIGN.md §Service): what the
 /// daemon did across every tenant since it came up.  Complements the
 /// engine's [`CacheStats`](crate::orchestrator::CacheStats) — cache counters
-/// say how much work the shared cache saved, these say how much work
+/// say how much work the shared cache saved (schedules *and* compiled
+/// `SimPlan`s: `plans_built` / `plan_hits`), these say how much work
 /// arrived and how it ended.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ServiceStats {

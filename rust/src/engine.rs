@@ -145,11 +145,17 @@ impl Engine {
     }
 
     /// The process-wide schedule cache (shared across every subcommand
-    /// served by this engine).
+    /// served by this engine).  Entries carry their compiled `SimPlan`,
+    /// so every simulating path through this engine — campaigns, sweeps,
+    /// autotune, replay, the serve daemon — amortizes plan compilation
+    /// across points (orchestrator module docs, §Schedule cache).
     pub fn cache(&self) -> &ScheduleCache {
         &self.cache
     }
 
+    /// Cache counters, including `plans_built` / `plan_hits` (`pico run`,
+    /// `pico sweep` and `pico overlap` render these under `--cache-stats`;
+    /// `pico serve` streams them in the `cache_stats` frame).
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.stats()
     }

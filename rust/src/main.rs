@@ -185,12 +185,12 @@ usage: pico <command> [--key value ...]
 
   list                              systems, backends, exposed algorithms
   spec   [--out DIR]                write skeleton test.json + env.json
-  run    --test F --env F [--out D] [--jobs N]
+  run    --test F --env F [--out D] [--jobs N] [--cache-stats]
          run a campaign from descriptors; --jobs N spreads the point grid
          over N worker threads (0 = one per CPU, default = env parallelism)
   sweep  [--backend openmpi] [--system leonardo] [--coll allreduce]
          [--sizes 32B,2KiB,...] [--nodes 2,8,32] [--ppn 1] [--iters 3]
-         [--jobs N]
+         [--jobs N] [--cache-stats]
          tuning sweep over all exposed algorithms; prints the ratio heatmap
          (with --backend libpico the allreduce/bcast/reduce sweeps include
          the in-network \"innet\" family and append the host-vs-switch
@@ -360,6 +360,9 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     }
     if let Some(root) = &handle.run_root {
         println!("results under {}", root.display());
+    }
+    if args.bool_or("cache-stats", false)? {
+        println!("{}", engine.cache_stats().render());
     }
     Ok(())
 }

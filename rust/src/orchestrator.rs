@@ -41,10 +41,19 @@
 //! instrumentation), and for count-scalable algorithms a **byte-agnostic
 //! skeleton** built once at `count = p` is rescaled per message size — a
 //! sweep over sizes compiles each schedule's dependency CSR once instead
-//! of once per point.  Multi-campaign drivers (tuning, replay, benches)
-//! can share one cache across campaigns via
+//! of once per point.  Every entry additionally carries its compiled
+//! `Arc<SimPlan>`: the plan reads only schedule structure (match channels,
+//! waves, CSR shape), never seg bytes, so rescaled graphs share their
+//! skeleton's plan verbatim and a count-scalable sweep compiles exactly
+//! one plan (`plans_built` / `plan_hits` in [`CacheStats`] make this
+//! observable).  Workers pair the cached plan with a per-worker
+//! [`SimScratch`] (threaded by [`run_points_sink`] through
+//! [`parallel_ordered_with`]), so per-point setup is rescale + reset
+//! rather than compile + allocate.  Multi-campaign drivers (tuning,
+//! replay, benches) can share one cache across campaigns via
 //! [`run_campaign_jobs_cached`]; entries never go stale because the key
-//! covers every generator input and schedules are topology-independent
+//! covers every generator input, schedules are topology-independent, and
+//! both the goal and plan behind an entry are immutable `Arc`s
 //! (invalidation rules in DESIGN.md §IR).
 
 use std::collections::HashMap;
@@ -61,7 +70,7 @@ use crate::goal::{Goal, GoalError, ReduceOp};
 use crate::metadata;
 use crate::netmodel::Proto;
 use crate::results::{Granularity, Measurement, OrderedRecordSink, Record, RecordSink, RunDir};
-use crate::sim::{simulate_with_plan, SimContext, SimPlan};
+use crate::sim::{simulate_in, SimContext, SimPlan, SimScratch};
 use crate::sync::skew_profile;
 use crate::topology::{Allocation, Placement, SystemProfile};
 
@@ -142,6 +151,14 @@ pub struct CacheStats {
     /// (backend, collective, algorithm, p); every sweep size and every
     /// workload bucket after the first reuses one of these).
     pub skeletons: usize,
+    /// [`SimPlan`] compilations: one per skeleton build and one per
+    /// direct (uncached-shape) generation — never one per point.
+    pub plans_built: usize,
+    /// Requests whose plan was served without compiling: exact hits plus
+    /// every rescale from an already-built skeleton.  For a
+    /// count-scalable sweep over N byte sizes this is N−1 against
+    /// `plans_built == 1`.
+    pub plan_hits: usize,
 }
 
 impl CacheStats {
@@ -152,20 +169,36 @@ impl CacheStats {
             .set("misses", self.misses)
             .set("rescales", self.rescales)
             .set("skeletons", self.skeletons)
+            .set("plans_built", self.plans_built)
+            .set("plan_hits", self.plan_hits)
     }
 
-    /// One-line human rendering (the `--cache-stats` flag).
+    /// One-line human rendering (the `--cache-stats` flag).  New counters
+    /// are appended at the end: `scripts/verify.sh` pins substrings of
+    /// this line.
     pub fn render(&self) -> String {
         format!(
-            "schedule cache: {} hits, {} misses, {} skeletons built, {} rescales",
-            self.hits, self.misses, self.skeletons, self.rescales
+            "schedule cache: {} hits, {} misses, {} skeletons built, {} rescales, \
+             {} plans built, {} plan hits",
+            self.hits, self.misses, self.skeletons, self.rescales, self.plans_built,
+            self.plan_hits
         )
     }
 }
 
+/// One cached schedule and the [`SimPlan`] compiled for its structure.
+/// Rescaled entries clone the skeleton's plan `Arc` — the plan never reads
+/// seg bytes, and `rescaled` Arc-shares the CSR, so `total_ops`, match ids
+/// and wave membership are identical by construction.
+#[derive(Clone)]
+struct CacheEntry {
+    goal: Arc<Goal>,
+    plan: Arc<SimPlan>,
+}
+
 #[derive(Default)]
 struct CacheInner {
-    goals: HashMap<CacheKey, Arc<Goal>>,
+    goals: HashMap<CacheKey, CacheEntry>,
     stats: CacheStats,
 }
 
@@ -184,7 +217,22 @@ impl ScheduleCache {
     }
 
     /// Produce the sealed schedule for `(coll, algo)` at `params` through
-    /// the cache.
+    /// the cache (goal-only wrapper over [`Self::schedule_with_plan`] for
+    /// callers that never simulate — tracing, workload lowering, GOAL
+    /// export).
+    pub fn schedule(
+        &self,
+        backend: &dyn Backend,
+        coll: Coll,
+        algo: &str,
+        params: &GenParams,
+    ) -> Result<Arc<Goal>, String> {
+        self.schedule_with_plan(backend, coll, algo, params).map(|(goal, _)| goal)
+    }
+
+    /// Produce the sealed schedule *and its compiled [`SimPlan`]* for
+    /// `(coll, algo)` at `params` through the cache — the simulation hot
+    /// path ([`run_point_cached`], replay, serve).
     ///
     /// Resolution order: exact key hit → rescale from a byte-agnostic
     /// skeleton (count-scalable algorithms with `count % p == 0` and no
@@ -195,19 +243,26 @@ impl ScheduleCache {
     /// are bit-transparent: the returned graph equals a direct generation
     /// at the requested count (property-tested in
     /// `rust/tests/prop_invariants.rs` and `rust/tests/sim_fastpath.rs`).
-    pub fn schedule(
+    ///
+    /// Plans follow the same resolution: the plan is compiled when (and
+    /// only when) a skeleton is generated or a direct generation runs
+    /// (`plans_built`); exact hits and rescales from a pre-existing
+    /// skeleton return the stored `Arc` untouched (`plan_hits`).
+    pub fn schedule_with_plan(
         &self,
         backend: &dyn Backend,
         coll: Coll,
         algo: &str,
         params: &GenParams,
-    ) -> Result<Arc<Goal>, String> {
+    ) -> Result<(Arc<Goal>, Arc<SimPlan>), String> {
         let key = CacheKey::new(backend.name(), coll, algo, params);
         {
             let mut inner = self.inner.lock().unwrap();
-            if let Some(g) = inner.goals.get(&key) {
+            if let Some(e) = inner.goals.get(&key) {
+                let e = e.clone();
                 inner.stats.hits += 1;
-                return Ok(g.clone());
+                inner.stats.plan_hits += 1;
+                return Ok((e.goal, e.plan));
             }
             inner.stats.misses += 1;
         }
@@ -216,16 +271,12 @@ impl ScheduleCache {
             && params.count > 0
             && params.count % params.p == 0
             && backend.count_scalable(coll, algo, params.p);
-        let goal = if scalable {
+        let entry = if scalable {
             let skel_key = CacheKey { skeleton: true, count: 0, ..key.clone() };
             let sk_params = GenParams { count: params.p, ..params.clone() };
-            let skel = self.skeleton(backend, coll, algo, skel_key, &sk_params)?;
+            let (skel, built) = self.skeleton(backend, coll, algo, skel_key, &sk_params)?;
             let m = params.count / params.p;
-            if m == 1 {
-                skel
-            } else {
-                self.rescale_checked(&skel, m, params.count)?
-            }
+            self.rescaled_entry(skel, built, m, params.count)?
         } else if let Some(lay) = backend.pipeline_layout(coll, algo, params) {
             // Segsize-pipelined family: the skeleton is canonical in the
             // *segment count* — generated once with one element per segment
@@ -240,20 +291,49 @@ impl ScheduleCache {
             };
             let sk_params =
                 GenParams { count: lay.canon_count, segsize: Some(1), ..params.clone() };
-            let skel = self.skeleton(backend, coll, algo, skel_key, &sk_params)?;
-            if lay.m == 1 {
-                skel
-            } else {
-                self.rescale_checked(&skel, lay.m, params.count)?
-            }
+            let (skel, built) = self.skeleton(backend, coll, algo, skel_key, &sk_params)?;
+            self.rescaled_entry(skel, built, lay.m, params.count)?
         } else {
-            Arc::new(backend.schedule(coll, algo, params)?)
+            let goal = Arc::new(backend.schedule(coll, algo, params)?);
+            let plan = Arc::new(SimPlan::new(&goal));
+            self.inner.lock().unwrap().stats.plans_built += 1;
+            CacheEntry { goal, plan }
         };
-        self.inner.lock().unwrap().goals.insert(key, goal.clone());
-        Ok(goal)
+        self.inner.lock().unwrap().goals.insert(key, entry.clone());
+        Ok((entry.goal, entry.plan))
     }
 
-    /// Fetch-or-build a skeleton entry.  Generation runs outside the lock
+    /// Resolve a skeleton lookup into the requested-count entry: rescale
+    /// the goal when `m > 1` and reuse the skeleton's plan verbatim.  A
+    /// skeleton found already cached (`built == false`) counts its plan
+    /// reuse as a `plan_hit`; a skeleton built by this very call does not
+    /// — its compile was already counted as `plans_built`.
+    fn rescaled_entry(
+        &self,
+        skel: CacheEntry,
+        built: bool,
+        m: usize,
+        requested_count: usize,
+    ) -> Result<CacheEntry, String> {
+        let goal = if m == 1 {
+            skel.goal
+        } else {
+            self.rescale_checked(&skel.goal, m, requested_count)?
+        };
+        debug_assert_eq!(
+            skel.plan.roots(),
+            goal.root_count(),
+            "rescale changed schedule structure"
+        );
+        if !built {
+            self.inner.lock().unwrap().stats.plan_hits += 1;
+        }
+        Ok(CacheEntry { goal, plan: skel.plan })
+    }
+
+    /// Fetch-or-build a skeleton entry; returns whether this call built it
+    /// (plan-hit accounting in [`Self::rescaled_entry`]).  Generation —
+    /// and the plan compile that rides with it — runs outside the lock
     /// (two workers may race to build the same skeleton; last insert wins,
     /// both results are identical by determinism of the generators).
     fn skeleton(
@@ -263,18 +343,20 @@ impl ScheduleCache {
         algo: &str,
         skel_key: CacheKey,
         sk_params: &GenParams,
-    ) -> Result<Arc<Goal>, String> {
+    ) -> Result<(CacheEntry, bool), String> {
         {
             let inner = self.inner.lock().unwrap();
             if let Some(s) = inner.goals.get(&skel_key) {
-                return Ok(s.clone());
+                return Ok((s.clone(), false));
             }
         }
-        let g = Arc::new(backend.schedule(coll, algo, sk_params)?);
+        let goal = Arc::new(backend.schedule(coll, algo, sk_params)?);
+        let entry = CacheEntry { plan: Arc::new(SimPlan::new(&goal)), goal };
         let mut inner = self.inner.lock().unwrap();
         inner.stats.skeletons += 1;
-        inner.goals.insert(skel_key, g.clone());
-        Ok(g)
+        inner.stats.plans_built += 1;
+        inner.goals.insert(skel_key, entry.clone());
+        Ok((entry, true))
     }
 
     /// `skel.rescaled(m)` behind the overflow guard.
@@ -347,12 +429,8 @@ pub fn run_point(
     run_point_cached(backend, profile, env, spec, point, &ScheduleCache::new())
 }
 
-/// Run one resolved test point, sourcing its schedule from `cache`.
-///
-/// Re-entrant by construction: every invocation builds its own allocation,
-/// placement, skew profile and `SimContext`, so the parallel engine calls
-/// this concurrently from N workers without synchronization (the shared
-/// cache synchronizes internally).
+/// [`run_point_in`] on a fresh throwaway scratch — for callers outside a
+/// worker loop (probes, tests, one-shot queries).
 pub fn run_point_cached(
     backend: &dyn Backend,
     profile: &SystemProfile,
@@ -360,6 +438,26 @@ pub fn run_point_cached(
     spec: &TestSpec,
     point: &TestPoint,
     cache: &ScheduleCache,
+) -> Result<PointOutcome, String> {
+    run_point_in(backend, profile, env, spec, point, cache, &mut SimScratch::new())
+}
+
+/// Run one resolved test point, sourcing its schedule *and plan* from
+/// `cache` and simulating on the caller's `scratch`.
+///
+/// Re-entrant by construction: every invocation builds its own allocation,
+/// placement, skew profile and `SimContext`, so the parallel engine calls
+/// this concurrently from N workers without synchronization (the shared
+/// cache synchronizes internally, and each worker owns its scratch).
+#[allow(clippy::too_many_arguments)]
+pub fn run_point_in(
+    backend: &dyn Backend,
+    profile: &SystemProfile,
+    env: &EnvSpec,
+    spec: &TestSpec,
+    point: &TestPoint,
+    cache: &ScheduleCache,
+    scratch: &mut SimScratch,
 ) -> Result<PointOutcome, String> {
     let alloc_seed = spec.seed ^ (point.nodes as u64).wrapping_mul(0x9E37_79B9);
     let alloc = Allocation::new(profile, point.nodes, env.alloc_policy, alloc_seed);
@@ -386,7 +484,8 @@ pub fn run_point_cached(
         Some(fb) => fb.effective.clone(),
         None => resolved_algorithm,
     };
-    let goal = cache.schedule(backend, point.collective, &effective_algorithm, &params)?;
+    let (goal, plan) =
+        cache.schedule_with_plan(backend, point.collective, &effective_algorithm, &params)?;
 
     // protocol: explicit knob wins; otherwise the backend's own default
     let mut cfg = point.net_cfg;
@@ -405,9 +504,9 @@ pub fn run_point_cached(
     let mut times: Vec<Vec<f64>> = Vec::with_capacity(spec.iterations);
     let mut components = Default::default();
     let mut tag_times: Vec<(String, f64)> = Vec::new();
-    // The sealed graph is iteration-invariant, so the simulator's match
-    // table is compiled once and shared across warmup + measured runs.
-    let plan = SimPlan::new(&goal);
+    // The match table arrived with the schedule (cache-resident, compiled
+    // at most once per structure) and is shared across warmup + measured
+    // runs; the scratch is reset — not reallocated — per run.
     for it in 0..spec.warmup + spec.iterations {
         let skew = skew_profile(spec.sync, profile, &placement, spec.seed + it as u64);
         let mut ctx = SimContext::new(profile, &placement).with_cfg(cfg);
@@ -415,7 +514,7 @@ pub fn run_point_cached(
         if let Some(m) = mem_override.as_ref() {
             ctx.mem = Some(m);
         }
-        let rep = simulate_with_plan(&goal, &ctx, &plan);
+        let rep = simulate_in(&goal, &ctx, &plan, scratch);
         if it < spec.warmup {
             continue;
         }
@@ -513,7 +612,7 @@ pub fn parallel_ordered<T, R, F, G>(
     items: &[T],
     jobs: usize,
     f: F,
-    mut on_ready: G,
+    on_ready: G,
 ) -> Result<Vec<R>, String>
 where
     T: Sync,
@@ -521,11 +620,38 @@ where
     F: Fn(usize, &T) -> Result<R, String> + Sync,
     G: FnMut(usize, &R) -> Result<(), String>,
 {
+    parallel_ordered_with(items, jobs, || (), |_, i, item| f(i, item), on_ready)
+}
+
+/// [`parallel_ordered`] with **per-worker state**: `init` runs once per
+/// worker (and once for the serial path) and the resulting value is
+/// threaded mutably through every `f` call that worker makes — the
+/// campaign engine uses it to give each worker one [`SimScratch`] reused
+/// across all the points it claims, so a sweep's setup allocations scale
+/// with the worker count, not the point count.  State is worker-private
+/// (never shared, never returned), so it cannot affect ordering or
+/// results; a panicking item poisons nothing because every `f` call fully
+/// re-initializes whatever state it reads.
+pub fn parallel_ordered_with<T, R, S, I, F, G>(
+    items: &[T],
+    jobs: usize,
+    init: I,
+    f: F,
+    mut on_ready: G,
+) -> Result<Vec<R>, String>
+where
+    T: Sync,
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &T) -> Result<R, String> + Sync,
+    G: FnMut(usize, &R) -> Result<(), String>,
+{
     let jobs = effective_jobs(jobs, items.len());
     if jobs <= 1 {
+        let mut state = init();
         let mut results = Vec::with_capacity(items.len());
         for (i, item) in items.iter().enumerate() {
-            let r = f(i, item)?;
+            let r = f(&mut state, i, item)?;
             on_ready(i, &r)?;
             results.push(r);
         }
@@ -539,24 +665,30 @@ where
     std::thread::scope(|scope| {
         for _ in 0..jobs {
             let tx = tx.clone();
-            let (cursor, abort, f) = (&cursor, &abort, &f);
-            scope.spawn(move || loop {
-                if abort.load(Ordering::Relaxed) {
-                    break;
-                }
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= items.len() {
-                    break;
-                }
-                let out = match catch_unwind(AssertUnwindSafe(|| f(i, &items[i]))) {
-                    Ok(r) => r,
-                    Err(p) => Err(format!("item {i} panicked: {}", panic_message(p.as_ref()))),
-                };
-                if out.is_err() {
-                    abort.store(true, Ordering::Relaxed);
-                }
-                if tx.send((i, out)).is_err() {
-                    break;
+            let (cursor, abort, init, f) = (&cursor, &abort, &init, &f);
+            scope.spawn(move || {
+                let mut state = init();
+                loop {
+                    if abort.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    let out = match catch_unwind(AssertUnwindSafe(|| f(&mut state, i, &items[i])))
+                    {
+                        Ok(r) => r,
+                        Err(p) => {
+                            Err(format!("item {i} panicked: {}", panic_message(p.as_ref())))
+                        }
+                    };
+                    if out.is_err() {
+                        abort.store(true, Ordering::Relaxed);
+                    }
+                    if tx.send((i, out)).is_err() {
+                        break;
+                    }
                 }
             });
         }
@@ -749,10 +881,13 @@ pub fn run_points_sink(
     cache: &ScheduleCache,
     mut sink: Option<&mut dyn RecordSink>,
 ) -> Result<Vec<PointOutcome>, String> {
-    parallel_ordered(
+    // one SimScratch per worker, reused across every point that worker
+    // claims — a 48-point sweep performs O(workers) simulator allocations
+    parallel_ordered_with(
         points,
         jobs,
-        |_, point| run_point_cached(backend, profile, env, spec, point, cache),
+        SimScratch::new,
+        |scratch, _, point| run_point_in(backend, profile, env, spec, point, cache, scratch),
         |i, outcome| {
             if let Some(sink) = sink.as_deref_mut() {
                 let rec = make_record(seq_base + i, spec, backend.name(), outcome);
@@ -895,6 +1030,41 @@ mod tests {
     }
 
     #[test]
+    fn parallel_ordered_with_inits_once_per_worker() {
+        use std::sync::atomic::AtomicUsize;
+        let items: Vec<usize> = (0..64).collect();
+        let inits = AtomicUsize::new(0);
+        let out = parallel_ordered_with(
+            &items,
+            4,
+            || {
+                inits.fetch_add(1, Ordering::Relaxed);
+                Vec::<usize>::new() // a per-worker "scratch"
+            },
+            |state, _, &x| {
+                state.push(x); // grows monotonically: state persists across claims
+                Ok(x * 2 + state.is_empty() as usize)
+            },
+            |_, _| Ok(()),
+        )
+        .unwrap();
+        assert_eq!(out, (0..64).map(|x| x * 2).collect::<Vec<_>>());
+        let n = inits.load(Ordering::Relaxed);
+        assert!(n <= 4, "init ran {n} times for 4 workers");
+        // serial path: exactly one init
+        let inits1 = AtomicUsize::new(0);
+        parallel_ordered_with(
+            &items,
+            1,
+            || inits1.fetch_add(1, Ordering::Relaxed),
+            |_, _, &x| Ok(x),
+            |_, _| Ok(()),
+        )
+        .unwrap();
+        assert_eq!(inits1.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
     fn parallel_ordered_reports_lowest_failing_index() {
         let items: Vec<usize> = (0..64).collect();
         let f = |_i: usize, &x: &usize| {
@@ -916,23 +1086,60 @@ mod tests {
         let cache = ScheduleCache::new();
         let b = LibPico;
         let p = 4;
-        // first request: builds the skeleton (count = p) and rescales
+        // first request: builds the skeleton (count = p), its plan, and
+        // rescales — the one plan compile of this whole test
         let small = cache.schedule(&b, Coll::Allreduce, "ring", &GenParams::new(p, 8 * p)).unwrap();
         assert_eq!(
             cache.stats(),
-            CacheStats { hits: 0, misses: 1, rescales: 1, skeletons: 1 }
+            CacheStats {
+                hits: 0,
+                misses: 1,
+                rescales: 1,
+                skeletons: 1,
+                plans_built: 1,
+                plan_hits: 0
+            }
         );
-        // same size again: exact hit, same shared instance
+        // same size again: exact hit, same shared instance, plan served
         let again = cache.schedule(&b, Coll::Allreduce, "ring", &GenParams::new(p, 8 * p)).unwrap();
         assert!(Arc::ptr_eq(&small, &again));
         assert_eq!(cache.stats().hits, 1);
-        // a different size reuses the skeleton: CSR shared, segments scaled
+        assert_eq!(cache.stats().plan_hits, 1);
+        // a different size reuses the skeleton: CSR shared, segments
+        // scaled, plan reused verbatim
         let big = cache.schedule(&b, Coll::Allreduce, "ring", &GenParams::new(p, 32 * p)).unwrap();
         assert!(Arc::ptr_eq(&small.csr, &big.csr), "skeleton CSR must be shared");
         assert_eq!(cache.stats().rescales, 2);
+        assert_eq!(cache.stats(), CacheStats {
+            hits: 1,
+            misses: 2,
+            rescales: 2,
+            skeletons: 1,
+            plans_built: 1,
+            plan_hits: 2
+        });
         // rescale transparency: equals a direct generation
         let direct = b.schedule(Coll::Allreduce, "ring", &GenParams::new(p, 32 * p)).unwrap();
         assert_eq!(*big, direct);
+    }
+
+    #[test]
+    fn schedule_cache_shares_one_plan_across_rescales() {
+        use crate::backends::LibPico;
+        let cache = ScheduleCache::new();
+        let p = 4;
+        let (_, first_plan) = cache
+            .schedule_with_plan(&LibPico, Coll::Allreduce, "ring", &GenParams::new(p, 8 * p))
+            .unwrap();
+        for m in [16usize, 64, 256] {
+            let (goal, plan) = cache
+                .schedule_with_plan(&LibPico, Coll::Allreduce, "ring", &GenParams::new(p, m * p))
+                .unwrap();
+            assert!(Arc::ptr_eq(&first_plan, &plan), "m={m}: plan must be the skeleton's");
+            assert_eq!(plan.roots(), goal.root_count());
+        }
+        let s = cache.stats();
+        assert_eq!((s.plans_built, s.plan_hits), (1, 3));
     }
 
     #[test]

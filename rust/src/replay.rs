@@ -25,7 +25,7 @@ use crate::backends::{Backend, SimCcl};
 use crate::collectives::{Coll, GenParams};
 use crate::netmodel::{NetConfig, Proto};
 use crate::orchestrator::{effective_count, ScheduleCache};
-use crate::sim::{simulate, SimContext};
+use crate::sim::{simulate_in, SimContext, SimScratch};
 use crate::topology::{Allocation, AllocPolicy, Placement, RankOrder, SystemProfile};
 use crate::tuning::Profile;
 use crate::util::Rng;
@@ -277,6 +277,10 @@ pub fn replay_cached(
     let mut hits = 0usize;
     let (mut comm_s, mut compute_s) = (0.0f64, 0.0f64);
     let mut invocations = 0usize;
+    // one simulator scratch for the whole trace: every uncached invocation
+    // resets it instead of reallocating (the plan rides in from the
+    // schedule cache, so per-invocation setup is rescale + reset)
+    let mut scratch = SimScratch::new();
 
     for op in &trace.ops {
         match op {
@@ -295,8 +299,8 @@ pub fn replay_cached(
                 }
                 let count = effective_count(*coll, *bytes, p);
                 let params = GenParams::new(p, count);
-                let goal = sched_cache
-                    .schedule(&backend, *coll, &algo, &params)
+                let (goal, plan) = sched_cache
+                    .schedule_with_plan(&backend, *coll, &algo, &params)
                     .unwrap_or_else(|e| panic!("replay: {} {algo}: {e}", coll.label()));
                 let cfg = NetConfig {
                     proto,
@@ -313,7 +317,7 @@ pub fn replay_cached(
                 let gpu_mem = backend.mem_params().expect("simccl has a GPU data plane");
                 let ctx =
                     SimContext::new(system, &sub_placement).with_cfg(cfg).with_mem(&gpu_mem);
-                let t = simulate(&goal, &ctx).total_time;
+                let t = simulate_in(&goal, &ctx, &plan, &mut scratch).total_time;
                 cache.insert(key, t);
                 comm_s += t;
             }

@@ -254,6 +254,9 @@ impl Session {
             Request::Wait { id } => self.handle_wait(&id),
             Request::Cancel { id } => self.handle_cancel(&id),
             Request::CacheStats => {
+                // cross-tenant amortization is observable here: the shared
+                // engine cache's plans_built/plan_hits counters show later
+                // tenants re-simulating without recompiling SimPlans
                 let frame = Json::obj()
                     .set("frame", "cache_stats")
                     .set("service", self.shared.stats.lock().unwrap().to_json())

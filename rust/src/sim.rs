@@ -20,10 +20,15 @@
 //!
 //! # Event core (DESIGN.md §Perf)
 //!
-//! The inner loop is compiled against a [`SimPlan`] built once per sealed
-//! [`Goal`]: every Send/Recv/SwitchAgg op carries a **dense match id**
-//! (channel slot or wave slot) resolved at plan time, so the hot loop
-//! indexes flat `Vec`s instead of probing `HashMap`s per event.  The global
+//! The inner loop is compiled against a [`SimPlan`]: every Send/Recv/
+//! SwitchAgg op carries a **dense match id** (channel slot or wave slot)
+//! resolved at plan time, so the hot loop indexes flat `Vec`s instead of
+//! probing `HashMap`s per event.  A plan depends only on schedule
+//! *structure* (tag/src/dst channel pairs, SwitchAgg waves, the dep CSR
+//! shape) — never on seg bytes — so the orchestrator's `ScheduleCache`
+//! compiles one plan per cached schedule and every `rescaled` graph reuses
+//! its skeleton's plan verbatim; a count-scalable sweep compiles exactly
+//! one plan no matter how many byte sizes it visits.  The global
 //! `BinaryHeap` is replaced by a bucketed **calendar queue** sized from the
 //! sealed schedule's stats, and dependency-only local ops (Calc / Copy /
 //! Reduce) are executed inline the moment their last dependency completes —
@@ -37,17 +42,22 @@
 //!
 //! The dependency graph arrives **precompiled**: the [`Goal`] arena carries
 //! the dependents CSR built once at sealing time (`goal.rs` §Arena
-//! layout), so each `simulate` call allocates only its own per-run state
-//! (pending counters, start/finish times, the event queue and channel
-//! queues) — the per-invocation CSR rebuild that used to dominate sweep
-//! hot paths is gone (DESIGN.md §IR).
+//! layout), and the per-run mutable state (pending counters, start/finish
+//! times, the calendar queue's buckets, channel queues and wave buffers)
+//! lives in a [`SimScratch`] that [`simulate_in`] resets on entry —
+//! clearing, never freeing.  A campaign worker allocates one scratch and
+//! reuses it across every point it simulates, so a sweep performs
+//! O(workers) setup allocations instead of O(points); [`simulate`] and
+//! [`simulate_with_plan`] remain as thin one-shot wrappers that run on a
+//! fresh scratch (DESIGN.md §Perf "Point fast path").
 //!
-//! It is also re-entrant: [`simulate`] keeps all mutable state on its own
-//! stack, and a [`SimContext`] only borrows shared immutable inputs — so
-//! the parallel campaign engine (`orchestrator`) constructs one context per
-//! worker per point and simulates concurrently with no synchronization.
-//! `SimContext` is `Send` and the borrowed `SystemProfile`/`Placement` are
-//! `Sync` (compile-time asserted in the tests below).
+//! It is also re-entrant: [`simulate_in`] keeps all mutable state in the
+//! caller's scratch, and a [`SimContext`] only borrows shared immutable
+//! inputs — so the parallel campaign engine (`orchestrator`) constructs one
+//! context per worker per point and simulates concurrently with no
+//! synchronization.  `SimContext` and `SimScratch` are `Send` and the
+//! borrowed `SystemProfile`/`Placement` are `Sync` (compile-time asserted
+//! in the tests below).
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
@@ -219,8 +229,12 @@ struct Channel {
 const NO_MATCH: u32 = u32::MAX;
 
 /// Per-[`Goal`] match table, compiled once and reused across every
-/// simulation of that graph (the orchestrator builds it once per point and
-/// shares it over warmup + measured iterations).
+/// simulation of that graph *structure*.  The orchestrator's
+/// `ScheduleCache` stores an `Arc<SimPlan>` next to every cached schedule
+/// and hands the skeleton's plan to every rescaled variant (rescaling only
+/// retags seg offsets/lengths; match ids, waves and the dep CSR are
+/// byte-agnostic), so a whole count-scalable sweep — warmup, measured
+/// iterations and all byte sizes — runs against a single compile.
 ///
 /// For every op it resolves the `(src, dst, tag)` channel — or the
 /// SwitchAgg wave tag — to a **dense integer id**, so the simulator's inner
@@ -338,6 +352,32 @@ impl CalendarQueue {
         }
     }
 
+    /// Clear for reuse without freeing: every bucket keeps its allocation
+    /// and the bucket array itself only grows — a scratch reused across a
+    /// sweep settles at the largest schedule's capacity and never touches
+    /// the allocator again.  Retaining an array *larger* than `capacity`
+    /// asks for is sound: pop order is exact regardless of the physical
+    /// bucket count (aliasing only shifts when the global-scan fallback
+    /// fires, and that too returns the exact minimum).
+    fn reset(&mut self, width: f64, capacity: usize) {
+        let n = capacity.next_power_of_two().clamp(16, 1 << 16);
+        if n > self.buckets.len() {
+            self.buckets.resize_with(n, Vec::new);
+        }
+        let ptr = self.buckets.as_ptr();
+        for b in &mut self.buckets {
+            b.clear();
+        }
+        debug_assert!(
+            std::ptr::eq(ptr, self.buckets.as_ptr()),
+            "calendar-queue bucket array reallocated by reset"
+        );
+        self.mask = (self.buckets.len() - 1) as u64;
+        self.inv_width = 1.0 / width.max(1e-12);
+        self.cur_vb = 0;
+        self.len = 0;
+    }
+
     #[inline]
     fn vbucket(&self, t: f64) -> u64 {
         let v = t * self.inv_width;
@@ -424,6 +464,89 @@ impl CalendarQueue {
         self.len -= 1;
         self.cur_vb = self.vbucket(t);
         (t, g)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reusable per-run state
+// ---------------------------------------------------------------------------
+
+/// Per-rank category interval buffers reused across [`build_report_in`]
+/// calls (the per-rank/tag accumulators of the component breakdown).
+#[derive(Default)]
+struct ReportScratch {
+    cat_ivs: [Vec<(f64, f64)>; 3],
+}
+
+/// Every allocation [`simulate_in`] needs for one run, owned by the caller
+/// so it can be reused across points: op-state vectors (pending counters,
+/// start/finish times), the inline local-op stack, channel and wave
+/// buffers, the calendar queue's bucket array, and the report builder's
+/// per-rank accumulators.
+///
+/// `simulate_in` resets the scratch on entry by clearing — capacities are
+/// retained, vectors only ever grow to the largest schedule seen, and the
+/// calendar queue's bucket array is never reallocated once it has settled
+/// (debug-asserted in [`CalendarQueue::reset`]).  A scratch is plain
+/// owned data (`Send`), so the parallel campaign engine threads exactly
+/// one per worker.
+pub struct SimScratch {
+    pending: Vec<u32>,
+    start: Vec<f64>,
+    finish: Vec<f64>,
+    local_stack: Vec<(usize, f64)>,
+    channels: Vec<Channel>,
+    waves: Vec<Vec<(usize, f64)>>,
+    queue: CalendarQueue,
+    report: ReportScratch,
+}
+
+impl SimScratch {
+    /// An empty scratch; the first [`simulate_in`] call sizes it.
+    pub fn new() -> Self {
+        SimScratch {
+            pending: Vec::new(),
+            start: Vec::new(),
+            finish: Vec::new(),
+            local_stack: Vec::new(),
+            channels: Vec::new(),
+            waves: Vec::new(),
+            queue: CalendarQueue::new(1.0, 0),
+            report: ReportScratch::default(),
+        }
+    }
+
+    /// Clear-without-freeing reset sized for `plan` (op counts, channel
+    /// and wave tables) on a `p`-rank placement with event spacing
+    /// `width`.  The queue capacity is derived from the plan's root count
+    /// here, once per reset — never re-reserved mid-run.
+    fn reset(&mut self, plan: &SimPlan, p: usize, width: f64) {
+        self.pending.clear();
+        self.start.clear();
+        self.start.resize(plan.total_ops, f64::NAN);
+        self.finish.clear();
+        self.finish.resize(plan.total_ops, f64::NAN);
+        self.local_stack.clear();
+        for ch in &mut self.channels {
+            ch.sends.clear();
+            ch.recvs.clear();
+        }
+        if self.channels.len() < plan.n_channels {
+            self.channels.resize_with(plan.n_channels, Channel::default);
+        }
+        for w in &mut self.waves {
+            w.clear();
+        }
+        if self.waves.len() < plan.wave_expect.len() {
+            self.waves.resize_with(plan.wave_expect.len(), Vec::new);
+        }
+        self.queue.reset(width, queue_capacity(plan.roots, p));
+    }
+}
+
+impl Default for SimScratch {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -614,20 +737,38 @@ impl NetRes {
 // Simulation entry points
 // ---------------------------------------------------------------------------
 
-/// Run `goal` on the modelled cluster (compiles a throwaway [`SimPlan`];
-/// callers simulating the same graph repeatedly should build the plan once
-/// and use [`simulate_with_plan`]).
+/// Run `goal` on the modelled cluster.  One-shot convenience: compiles a
+/// plan for this graph and runs it on a fresh scratch.  Sweep-style
+/// callers should not pay either cost per point — every `ScheduleCache`
+/// entry already carries its `Arc<SimPlan>`, and [`simulate_in`] accepts a
+/// reused [`SimScratch`].
 pub fn simulate(goal: &Goal, ctx: &SimContext) -> SimReport {
     simulate_with_plan(goal, ctx, &SimPlan::new(goal))
 }
 
-/// Run `goal` on the modelled cluster with a precompiled match table.
-///
-/// `plan` must have been compiled from this `goal` (asserted by op count;
-/// the orchestrator guarantees it by construction).  Produces bit-identical
-/// reports to [`simulate_scan`] — see the module docs for the argument and
-/// `rust/tests/sim_fastpath.rs` for the differential.
+/// Run `goal` with a precompiled match table on a fresh scratch (thin
+/// wrapper over [`simulate_in`] for callers that simulate one graph a few
+/// times — warmup plus iterations — without a worker-resident scratch).
 pub fn simulate_with_plan(goal: &Goal, ctx: &SimContext, plan: &SimPlan) -> SimReport {
+    simulate_in(goal, ctx, plan, &mut SimScratch::new())
+}
+
+/// Run `goal` on the modelled cluster with a precompiled match table and
+/// caller-owned scratch state — the campaign hot path.
+///
+/// `plan` must have been compiled from this `goal`'s structure (asserted
+/// by op count; the `ScheduleCache` guarantees it by construction, and
+/// rescaled goals share their skeleton's structure).  `scratch` is reset
+/// on entry, so any scratch — fresh or dirty — yields the same result:
+/// produces bit-identical reports to [`simulate_scan`] regardless of plan
+/// provenance or scratch history — see the module docs for the argument
+/// and `rust/tests/sim_fastpath.rs` for the differential.
+pub fn simulate_in(
+    goal: &Goal,
+    ctx: &SimContext,
+    plan: &SimPlan,
+    scratch: &mut SimScratch,
+) -> SimReport {
     let p = goal.p();
     assert_eq!(
         p,
@@ -641,23 +782,14 @@ pub fn simulate_with_plan(goal: &Goal, ctx: &SimContext, plan: &SimPlan) -> SimR
     let rails = ctx.profile.rails;
     let mut res = NetRes::new(ctx, p);
 
-    let total_ops = goal.total_ops();
-    let mut pending: Vec<u32> = (0..total_ops).map(|g| goal.dep_count(g)).collect();
-    let mut finish = vec![f64::NAN; total_ops];
-    let mut start = vec![f64::NAN; total_ops];
-
     // α is the natural inter-event spacing of the DES; the bucket count
     // tracks the live frontier (roots + one release per rank per wave).
-    let mut queue = CalendarQueue::new(
-        net.intra_group.alpha,
-        queue_capacity(plan.roots, p),
-    );
-    // Same-rank local chains (Calc/Copy/Reduce) bypass the queue: released
-    // locals land here and are drained inline before the next pop.
-    let mut local_stack: Vec<(usize, f64)> = Vec::new();
+    scratch.reset(plan, p, net.intra_group.alpha);
+    let SimScratch { pending, start, finish, local_stack, channels, waves, queue, report } =
+        scratch;
 
-    let mut channels: Vec<Channel> = vec![Channel::default(); plan.n_channels];
-    let mut waves: Vec<Vec<(usize, f64)>> = vec![Vec::new(); plan.wave_expect.len()];
+    let total_ops = goal.total_ops();
+    pending.extend((0..total_ops).map(|g| goal.dep_count(g)));
     let mut events = 0usize;
     // The aggregating switch sits at the job's lowest common fabric level:
     // leaf switch if the allocation fits one group, spine otherwise.
@@ -754,15 +886,18 @@ pub fn simulate_with_plan(goal: &Goal, ctx: &SimContext, plan: &SimPlan) -> SimR
             OpKind::SwitchAgg { seg, .. } => {
                 // One leg of an in-network aggregation wave: park until
                 // every member is ready (wave slot resolved at plan time),
-                // then price the wave as a unit.
+                // then price the wave as a unit.  The member buffer is
+                // cleared, not taken — its allocation belongs to the
+                // scratch and survives into the next point.
                 let wid = plan.match_id[g] as usize;
                 waves[wid].push((g, t));
                 if waves[wid].len() == plan.wave_expect[wid] as usize {
-                    let mut members = std::mem::take(&mut waves[wid]);
                     let bytes = seg.bytes(goal.elem_bytes);
                     let done = res.price_wave(
-                        goal, net, &ctx.cfg, ctx.profile, rails, wave_tier, &mut members, bytes,
+                        goal, net, &ctx.cfg, ctx.profile, rails, wave_tier, &mut waves[wid],
+                        bytes,
                     );
+                    waves[wid].clear();
                     for (m, mt, down) in done {
                         complete!(m, mt, down);
                     }
@@ -772,8 +907,8 @@ pub fn simulate_with_plan(goal: &Goal, ctx: &SimContext, plan: &SimPlan) -> SimR
         }
     }
 
-    assert_all_complete(goal, &finish);
-    build_report(goal, &start, &finish, events)
+    assert_all_complete(goal, finish);
+    build_report_in(goal, start, finish, events, report)
 }
 
 /// The pre-plan reference loop: one global binary heap, `HashMap`-matched
@@ -925,9 +1060,22 @@ fn assert_all_complete(goal: &Goal, finish: &[f64]) {
     }
 }
 
-/// Assemble the report from the completed timeline (shared by both loops —
-/// identical inputs produce identical bytes).
+/// Assemble the report from the completed timeline on throwaway
+/// accumulators (the [`simulate_scan`] oracle and other one-shot paths).
 fn build_report(goal: &Goal, start: &[f64], finish: &[f64], events: usize) -> SimReport {
+    build_report_in(goal, start, finish, events, &mut ReportScratch::default())
+}
+
+/// Assemble the report from the completed timeline (shared by both loops —
+/// identical inputs produce identical bytes; `rs` only recycles buffer
+/// capacity and never leaks state across calls).
+fn build_report_in(
+    goal: &Goal,
+    start: &[f64],
+    finish: &[f64],
+    events: usize,
+    rs: &mut ReportScratch,
+) -> SimReport {
     let p = goal.p();
     let total_ops = goal.total_ops();
     let per_rank_time: Vec<f64> = (0..p)
@@ -940,9 +1088,12 @@ fn build_report(goal: &Goal, start: &[f64], finish: &[f64], events: usize) -> Si
 
     // Component breakdown: per-rank interval union per category.
     let mut comps = Components::default();
+    let cat_ivs = &mut rs.cat_ivs;
     for r in 0..p {
         let base = goal.gid(r, 0);
-        let mut cat_ivs: [Vec<(f64, f64)>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for ivs in cat_ivs.iter_mut() {
+            ivs.clear();
+        }
         for (i, kind) in goal.ops(r).iter().enumerate() {
             let idx = match category(kind) {
                 Category::Comm => 0,
@@ -1289,6 +1440,39 @@ mod tests {
         assert_send::<SimReport>();
         assert_send::<SimPlan>();
         assert_sync::<SimPlan>();
+        // one scratch migrates into each parallel worker thread
+        assert_send::<SimScratch>();
+    }
+
+    #[test]
+    fn scratch_reuse_is_transparent_and_keeps_bucket_array() {
+        let (prof, pl) = ctx_fixture(2, 1);
+        let ctx = SimContext::new(&prof, &pl);
+        // one scratch across differently-shaped and differently-sized
+        // graphs must reproduce the fresh-scratch reports exactly
+        let mut scratch = SimScratch::new();
+        for bytes in [8usize, 1 << 10, 1 << 20] {
+            let g = pingpong(bytes);
+            let plan = SimPlan::new(&g);
+            let fresh = simulate_with_plan(&g, &ctx, &plan);
+            let reused = simulate_in(&g, &ctx, &plan, &mut scratch);
+            assert_eq!(fresh, reused, "bytes={bytes}");
+        }
+        // once settled, repeat points must not reallocate the calendar
+        // queue's bucket array (the whole point of hoisting the capacity)
+        let g = pingpong(1 << 20);
+        let plan = SimPlan::new(&g);
+        simulate_in(&g, &ctx, &plan, &mut scratch);
+        let ptr = scratch.queue.buckets.as_ptr();
+        let n = scratch.queue.buckets.len();
+        for _ in 0..3 {
+            simulate_in(&g, &ctx, &plan, &mut scratch);
+        }
+        assert!(
+            std::ptr::eq(ptr, scratch.queue.buckets.as_ptr()),
+            "bucket array reallocated across points"
+        );
+        assert_eq!(n, scratch.queue.buckets.len());
     }
 
     #[test]

@@ -126,9 +126,11 @@ pub fn fit_rules(coll: Coll, choices: &[BestChoice]) -> Profile {
 /// This is the multi-campaign cache plumbing: an autotuner that sweeps
 /// several collectives (or refines a grid iteratively) calls this against
 /// the same engine, so the byte-agnostic skeletons compiled for the first
-/// sweep serve all later ones.  The cache never needs invalidating between
-/// campaigns — its key covers every generator input, and schedules are
-/// placement-independent (only the simulation consumes topology).
+/// sweep — and the `SimPlan`s attached to them — serve all later ones;
+/// a refinement pass re-simulates without compiling a single plan.  The
+/// cache never needs invalidating between campaigns — its key covers
+/// every generator input, and schedules are placement-independent (only
+/// the simulation consumes topology).
 pub fn autotune(engine: &Engine, spec: &TestSpec) -> Result<(Vec<PointOutcome>, Profile), String> {
     let outcomes = engine.run_spec(spec)?;
     let choices = best_choices(&outcomes);
@@ -267,9 +269,13 @@ mod tests {
         assert!(profile.name.starts_with("autotuned-"));
         assert!(profile.select(Coll::Allreduce, 512).is_some());
         // a second sweep over the same grid is served from the engine cache
-        let before = engine.cache_stats().hits;
+        // without recompiling a single SimPlan
+        let before = engine.cache_stats();
         autotune(&engine, &spec).unwrap();
-        assert!(engine.cache_stats().hits > before);
+        let after = engine.cache_stats();
+        assert!(after.hits > before.hits);
+        assert_eq!(after.plans_built, before.plans_built, "refinement must not rebuild plans");
+        assert!(after.plan_hits > before.plan_hits);
     }
 
     #[test]

@@ -259,6 +259,8 @@ fn two_tenants_stream_byte_identical_records_and_share_the_cache() {
     let warm_hits = counter(&s2, "cache", "hits");
     let warm_skel = counter(&s2, "cache", "skeletons");
     let warm_miss = counter(&s2, "cache", "misses");
+    let warm_plans = counter(&s2, "cache", "plans_built");
+    let warm_plan_hits = counter(&s2, "cache", "plan_hits");
     assert!(warm_hits >= counter(&s1, "cache", "hits"));
     // the second tenant's *identical* sweep: hits move, nothing is rebuilt
     b.send(&submit("b3", "sweep", sweep, None));
@@ -273,6 +275,11 @@ fn two_tenants_stream_byte_identical_records_and_share_the_cache() {
     );
     assert_eq!(counter(&s3, "cache", "skeletons"), warm_skel, "no skeleton rebuilds");
     assert_eq!(counter(&s3, "cache", "misses"), warm_miss, "no cache misses");
+    assert_eq!(counter(&s3, "cache", "plans_built"), warm_plans, "no plan rebuilds");
+    assert!(
+        counter(&s3, "cache", "plan_hits") > warm_plan_hits,
+        "repeated sweep points must be served from cached plans"
+    );
     // service counters saw both tenants
     assert_eq!(counter(&s3, "service", "sessions"), 2);
     assert!(counter(&s3, "service", "completed") >= 4);

@@ -12,7 +12,7 @@
 use pico::backends::{Backend, LibPico};
 use pico::collectives::{self, Coll, GenParams};
 use pico::orchestrator::{effective_count, ScheduleCache};
-use pico::sim::{simulate_scan, simulate_with_plan, SimContext, SimPlan, SimReport};
+use pico::sim::{simulate_in, simulate_scan, simulate_with_plan, SimContext, SimPlan, SimReport, SimScratch};
 use pico::topology::{leonardo, AllocPolicy, Allocation, Placement, RankOrder};
 use pico::workload::{
     ChainKind, DnnStepSpec, InterferenceJob, MoeStepSpec, PipelineStepSpec, WorkloadSpec,
@@ -59,12 +59,18 @@ fn contiguous_placement(
     Placement::new(prof, &alloc, 1, RankOrder::Block)
 }
 
-/// Run both simulator paths on `goal` and demand bit-identity.
-fn differential(goal: &Goal, ctx: &SimContext, what: &str) -> SimReport {
+/// Run the fast path three ways — fresh scratch, then the caller's
+/// *reused* scratch (carrying whatever a previous, differently-shaped goal
+/// left behind) — against the reference heap loop, demanding bit-identity
+/// for all of them.  Threading one scratch through a whole test upgrades
+/// every differential below into a scratch-reuse transparency pin.
+fn differential(goal: &Goal, ctx: &SimContext, scratch: &mut SimScratch, what: &str) -> SimReport {
     let plan = SimPlan::new(goal);
     let fast = simulate_with_plan(goal, ctx, &plan);
+    let reused = simulate_in(goal, ctx, &plan, scratch);
     let scan = simulate_scan(goal, ctx);
     assert_bit_identical(&fast, &scan, what);
+    assert_bit_identical(&reused, &scan, &format!("{what} [reused scratch]"));
     fast
 }
 
@@ -76,6 +82,7 @@ fn differential(goal: &Goal, ctx: &SimContext, what: &str) -> SimReport {
 #[test]
 fn fast_path_matches_scan_over_registry() {
     let prof = leonardo();
+    let mut scratch = SimScratch::new();
     for info in collectives::registry() {
         for p in [2usize, 3, 8, 17, 64] {
             if !info.any_p && !p.is_power_of_two() {
@@ -95,6 +102,7 @@ fn fast_path_matches_scan_over_registry() {
                 let rep = differential(
                     &goal,
                     &ctx,
+                    &mut scratch,
                     &format!("{:?}:{} p={p} bytes={bytes}", info.coll, info.name),
                 );
                 assert_eq!(rep.events_processed, goal.total_ops());
@@ -110,6 +118,7 @@ fn fast_path_matches_scan_over_registry() {
 #[test]
 fn fast_path_matches_scan_innet_multigroup() {
     let prof = leonardo();
+    let mut scratch = SimScratch::new();
     for (coll, p) in [(Coll::Allreduce, 16usize), (Coll::Bcast, 16), (Coll::Reduce, 16)] {
         let alloc = Allocation::new(&prof, p, AllocPolicy::Scattered, 7);
         let pl = Placement::new(&prof, &alloc, 1, RankOrder::Block);
@@ -117,7 +126,12 @@ fn fast_path_matches_scan_innet_multigroup() {
             let count = effective_count(coll, bytes, p);
             let goal = collectives::generate(coll, "innet", &GenParams::new(p, count)).unwrap();
             let ctx = SimContext::new(&prof, &pl);
-            differential(&goal, &ctx, &format!("{coll:?}:innet scattered p={p} bytes={bytes}"));
+            differential(
+                &goal,
+                &ctx,
+                &mut scratch,
+                &format!("{coll:?}:innet scattered p={p} bytes={bytes}"),
+            );
         }
     }
 }
@@ -128,6 +142,7 @@ fn fast_path_matches_scan_innet_multigroup() {
 #[test]
 fn fast_path_matches_scan_imported_goal() {
     let prof = leonardo();
+    let mut scratch = SimScratch::new();
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/data");
     for name in ["ring4.goal", "innet_allreduce8.goal", "innet_bcast8.goal"] {
         let text = std::fs::read_to_string(dir.join(name)).unwrap();
@@ -135,7 +150,7 @@ fn fast_path_matches_scan_imported_goal() {
             .unwrap_or_else(|e| panic!("{name}: {e}"));
         let pl = contiguous_placement(&prof, goal.p());
         let ctx = SimContext::new(&prof, &pl);
-        differential(&goal, &ctx, &format!("imported {name}"));
+        differential(&goal, &ctx, &mut scratch, &format!("imported {name}"));
     }
 }
 
@@ -150,6 +165,7 @@ fn fast_path_matches_scan_composed_scenarios() {
     let cache = ScheduleCache::new();
     let p = 8usize;
     let pl = contiguous_placement(&prof, p);
+    let mut scratch = SimScratch::new();
     let specs = [
         WorkloadSpec::dnn_step("dnn", DnnStepSpec::new(16 << 20, 4, 4e-3)),
         WorkloadSpec::pipeline_step("pp", PipelineStepSpec::new(4 << 20, 4)),
@@ -180,7 +196,7 @@ fn fast_path_matches_scan_composed_scenarios() {
         let composed = pico::compose_placed(&parts, &low.policy, &low.placement)
             .unwrap_or_else(|e| panic!("{}: compose failed: {e}", spec.name));
         let ctx = SimContext::new(&prof, &pl);
-        let rep = differential(&composed, &ctx, &format!("composed {}", spec.name));
+        let rep = differential(&composed, &ctx, &mut scratch, &format!("composed {}", spec.name));
         assert!(!rep.phase_spans.is_empty(), "{}: composed goal must carry phases", spec.name);
     }
     // The serial chain hits a different composition structure (barrier
@@ -190,7 +206,7 @@ fn fast_path_matches_scan_composed_scenarios() {
     let parts: Vec<(&str, &Goal)> =
         low.parts.iter().map(|(n, g)| (n.as_str(), g.as_ref())).collect();
     let composed = pico::compose_placed(&parts, &low.policy, &low.placement).unwrap();
-    differential(&composed, &SimContext::new(&prof, &pl), "composed dnn_serial");
+    differential(&composed, &SimContext::new(&prof, &pl), &mut scratch, "composed dnn_serial");
 }
 
 /// Pipelined-family cache transparency: a `(count, segsize)`-canonical
@@ -278,4 +294,44 @@ fn pipelined_cache_is_transparent() {
     assert_eq!(*cached, direct, "instrumented tree_pipelined");
     assert!(!cached.tags.is_empty());
     assert_eq!(cache.stats().rescales, 1);
+}
+
+/// Count-scalable sweep through the cache — one algorithm, one p, many byte
+/// sizes: exactly ONE plan compile with every other point served as a plan
+/// hit, one skeleton plan Arc shared across the whole sweep, and the
+/// plan-cached + scratch-reused path bit-identical to the reference heap
+/// loop at every point.
+#[test]
+fn cached_plan_sweep_compiles_once_and_stays_bit_identical() {
+    let backend = LibPico;
+    let prof = leonardo();
+    let p = 8usize;
+    let pl = contiguous_placement(&prof, p);
+    let cache = ScheduleCache::new();
+    let mut scratch = SimScratch::new();
+    let counts = [8 * p, 16 * p, 64 * p, 256 * p, 1024 * p, 4096 * p];
+    let mut shared_plan = None;
+    for count in counts {
+        let (goal, plan) = cache
+            .schedule_with_plan(&backend, Coll::Allreduce, "ring", &GenParams::new(p, count))
+            .unwrap();
+        let prev = shared_plan.get_or_insert_with(|| plan.clone());
+        assert!(
+            std::sync::Arc::ptr_eq(prev, &plan),
+            "count={count}: every point must reuse the skeleton's plan"
+        );
+        let ctx = SimContext::new(&prof, &pl);
+        let cached = simulate_in(&goal, &ctx, &plan, &mut scratch);
+        let scan = simulate_scan(&goal, &ctx);
+        assert_bit_identical(&cached, &scan, &format!("cached sweep count={count}"));
+    }
+    let s = cache.stats();
+    assert_eq!(s.plans_built, 1, "count-scalable sweep must compile exactly one plan");
+    assert_eq!(s.plan_hits, counts.len() - 1, "every non-skeleton point is a plan hit");
+    assert_eq!(s.skeletons, 1, "one canonical skeleton serves the whole sweep");
+    let rendered = s.render();
+    assert!(
+        rendered.contains("1 plans built") && rendered.contains("plan hits"),
+        "render must surface the plan counters: {rendered}"
+    );
 }

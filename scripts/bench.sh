@@ -1,14 +1,15 @@
 #!/usr/bin/env bash
 # Bench trajectory runner: executes the hot-path bench suite and collects
 # its machine-readable output (BENCH_ir.json + BENCH_overlap.json +
-# BENCH_sim.json) at the repository root.
+# BENCH_sim.json + BENCH_point.json) at the repository root.
 #
 #   scripts/bench.sh            # run perf_hotpaths, emit BENCH_*.json
 #
 # The bench binary prints the human-readable report as usual; the JSON
 # side-channels are enabled by exporting PICO_BENCH_OUT (IR section),
-# PICO_BENCH_OVERLAP_OUT (overlap composer section) and PICO_BENCH_SIM_OUT
-# (simulator event-core section), all consumed by
+# PICO_BENCH_OVERLAP_OUT (overlap composer section), PICO_BENCH_SIM_OUT
+# (simulator event-core section) and PICO_BENCH_POINT_OUT (point fast
+# path: cached plans + per-worker scratch), all consumed by
 # benchkit::BenchJson::write_if_env.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -23,12 +24,14 @@ fi
 ir_out="$PWD/BENCH_ir.json"
 overlap_out="$PWD/BENCH_overlap.json"
 sim_out="$PWD/BENCH_sim.json"
-echo "== bench: perf_hotpaths (IR -> $ir_out, overlap -> $overlap_out, sim -> $sim_out)"
+point_out="$PWD/BENCH_point.json"
+echo "== bench: perf_hotpaths (IR -> $ir_out, overlap -> $overlap_out," \
+     "sim -> $sim_out, point -> $point_out)"
 PICO_BENCH_OUT="$ir_out" PICO_BENCH_OVERLAP_OUT="$overlap_out" \
-    PICO_BENCH_SIM_OUT="$sim_out" \
+    PICO_BENCH_SIM_OUT="$sim_out" PICO_BENCH_POINT_OUT="$point_out" \
     cargo bench --bench perf_hotpaths
 
-for out in "$ir_out" "$overlap_out" "$sim_out"; do
+for out in "$ir_out" "$overlap_out" "$sim_out" "$point_out"; do
     if [ ! -s "$out" ]; then
         echo "FAIL: $out was not produced" >&2
         exit 1

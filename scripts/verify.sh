@@ -4,7 +4,9 @@
 #   2. clippy with warnings denied
 #   3. rustdoc with warnings denied
 #   4. parallel-equivalence smoke: a 48-point sweep run with --jobs 1 and
-#      --jobs 4 must produce byte-identical run directories.
+#      --jobs 4 must produce byte-identical run directories; the serial
+#      run's --cache-stats line must show compiled SimPlans being reused
+#      across points (non-zero plan hits).
 #   5. GOAL-import smoke: import the checked-in golden schedule, simulate
 #      it, re-export + re-import, and diff the two reports.
 #   6. overlap smoke: two ring all-reduces Serial-composed must conserve
@@ -18,7 +20,8 @@
 #      composed workload through both simulator paths (planned event core
 #      vs the reference heap scan) and fails on any divergence; a
 #      tree_pipelined overlap must be served by the (count, segsize)-
-#      canonical skeleton cache (1 skeleton, 1 rescale).
+#      canonical skeleton cache (1 skeleton, 1 rescale) compiling exactly
+#      one SimPlan shared by the skeleton and its rescaled entry.
 #   9. serve smoke: pipe the scripted examples/serve_session.jsonl
 #      transcript through `pico serve` in stdio mode — the daemon must
 #      stream all 48 records, write a run directory byte-identical to the
@@ -74,7 +77,7 @@ EOF
 # pin the one wall-clock metadata field so both dirs are byte-comparable
 export PICO_TIMESTAMP=1700000000
 "$BIN" run --test "$TMP/test.json" --env "$TMP/env.json" \
-    --out "$TMP/serial" --jobs 1 >/dev/null
+    --out "$TMP/serial" --jobs 1 --cache-stats > "$TMP/run_cache.txt"
 "$BIN" run --test "$TMP/test.json" --env "$TMP/env.json" \
     --out "$TMP/par" --jobs 4 >/dev/null
 
@@ -84,6 +87,10 @@ if [ "$n_records" -lt 32 ]; then
     exit 1
 fi
 diff -r "$TMP/serial/paritycheck" "$TMP/par/paritycheck"
+# cross-point plan amortization: the 48-point sweep must compile each
+# schedule's SimPlan once and serve every repeat point from the cache
+grep -q "plans built" "$TMP/run_cache.txt"
+grep -Eq "[1-9][0-9]* plan hits" "$TMP/run_cache.txt"
 echo "OK: $n_records records byte-identical at jobs=1 and jobs=4"
 
 echo "== smoke: GOAL import (golden file -> simulate -> re-export round trip)"
@@ -163,6 +170,10 @@ grep -q "faster-than-serial: yes" "$TMP/fastpath.txt"
 "$BIN" overlap --coll allreduce --algo tree_pipelined --bytes 4MiB \
     --nodes 8 --repeat 2 --cache-stats > "$TMP/fastpath_cache.txt"
 grep -q "1 skeletons built, 1 rescales" "$TMP/fastpath_cache.txt"
+# the skeleton's plan is compiled once and shared verbatim with the
+# rescaled 4 MiB entry — no second compile, and no double-counted hit
+# (the reuse rides the compile that built the skeleton in the same call)
+grep -q "1 plans built, 0 plan hits" "$TMP/fastpath_cache.txt"
 echo "OK: fast path matches simulate_scan; pipelined skeletons rescale"
 
 echo "== smoke: pico serve (scripted session, run-dir parity, clean shutdown)"
