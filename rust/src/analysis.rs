@@ -194,6 +194,55 @@ pub fn render_crossover(cells: &[CrossoverCell]) -> String {
     out
 }
 
+/// Winner agreement between two crossover tables at shared
+/// (nodes, bytes) cells — `pico calibrate`'s "do the simulated and
+/// measured winner tables rank the same way" check.  Returns
+/// `(agreeing, total)` over the cells present in both tables.
+pub fn crossover_agreement(a: &[CrossoverCell], b: &[CrossoverCell]) -> (usize, usize) {
+    let mut agree = 0;
+    let mut total = 0;
+    for ca in a {
+        if let Some(cb) = b.iter().find(|c| c.nodes == ca.nodes && c.bytes == ca.bytes) {
+            total += 1;
+            if ca.winner() == cb.winner() {
+                agree += 1;
+            }
+        }
+    }
+    (agree, total)
+}
+
+/// The measured-vs-predicted validation table (`pico calibrate`):
+/// one row per `(label, measured_s, predicted_s)` with the signed
+/// relative error, worst row marked, and a greppable `max rel err`
+/// summary line.
+pub fn render_validation(rows: &[(String, f64, f64)]) -> String {
+    let mut out = String::from("validation (predicted vs measured at the fitted constants)\n");
+    let worst = rows
+        .iter()
+        .enumerate()
+        .max_by(|(_, a), (_, b)| {
+            (a.2 / a.1 - 1.0).abs().total_cmp(&(b.2 / b.1 - 1.0).abs())
+        })
+        .map(|(i, _)| i);
+    for (i, (label, meas, pred)) in rows.iter().enumerate() {
+        let rel = pred / meas - 1.0;
+        out.push_str(&format!(
+            "  {:<44} measured={:<12} predicted={:<12} rel_err={:+8.4}%{}\n",
+            label,
+            fmt_time(*meas),
+            fmt_time(*pred),
+            rel * 100.0,
+            if Some(i) == worst { "  <- worst" } else { "" },
+        ));
+    }
+    let max = worst
+        .map(|i| (rows[i].2 / rows[i].1 - 1.0).abs())
+        .unwrap_or(0.0);
+    out.push_str(&format!("  max rel err: {:.4}%\n", max * 100.0));
+    out
+}
+
 /// One-line component attribution, absolute + percentage shares — shared
 /// by the probe and import reports so the two stay format-identical.
 pub fn render_components(c: &crate::sim::Components) -> String {
@@ -568,6 +617,40 @@ mod tests {
         assert!(lines.contains("nodes=8"));
         assert!(lines.contains("best=tree"));
         assert!(lines.contains("r=0.90"));
+    }
+
+    #[test]
+    fn crossover_agreement_counts_shared_cells() {
+        let cell = |nodes, bytes, sw: f64, host: f64| CrossoverCell {
+            nodes,
+            bytes,
+            switch_algo: "innet".into(),
+            switch_s: sw,
+            host_algo: "ring".into(),
+            host_s: host,
+            fell_back: false,
+        };
+        let a = vec![cell(2, 1024, 1.0, 2.0), cell(4, 1024, 3.0, 2.0)];
+        // same winners
+        assert_eq!(crossover_agreement(&a, &a), (2, 2));
+        // flip one winner, drop the other cell
+        let b = vec![cell(2, 1024, 5.0, 2.0)];
+        assert_eq!(crossover_agreement(&a, &b), (0, 1));
+        assert_eq!(crossover_agreement(&a, &[]), (0, 0));
+    }
+
+    #[test]
+    fn validation_table_marks_the_worst_row() {
+        let rows = vec![
+            ("allreduce/ring 1KiB n2 ppn1".to_string(), 1.0e-5, 1.0e-5),
+            ("allreduce/ring 1MiB n2 ppn1".to_string(), 2.0e-4, 2.1e-4),
+        ];
+        let txt = render_validation(&rows);
+        assert!(txt.contains("1MiB n2 ppn1"), "{txt}");
+        assert!(txt.contains("<- worst"), "{txt}");
+        assert!(txt.contains("max rel err: 5.0000%"), "{txt}");
+        assert!(txt.lines().filter(|l| l.contains("<- worst")).count() == 1, "{txt}");
+        assert!(render_validation(&[]).contains("max rel err: 0.0000%"));
     }
 
     #[test]

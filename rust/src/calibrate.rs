@@ -1,0 +1,1131 @@
+//! `pico calibrate` — fit the netmodel constants to measured timings and
+//! report how well the simulator reproduces them (ROADMAP item 5).
+//!
+//! Every built-in [`NetParams`] constant is a shape-level guess; this
+//! module is what makes the sweeps' verdicts falsifiable.  It ingests
+//! measured timing records from three formats —
+//!
+//! - **CSV** (`collective,algorithm,bytes,nodes,ppn,time_s` — or
+//!   `time_us`; PICO/ATLAHS-style result tables),
+//! - a **run directory** written by `pico run` (the stored `test.json` /
+//!   `env.json` re-resolve to the exact campaign grid, so a fit on a
+//!   simulator-generated dir starts at zero residual),
+//! - **GOAL traces** annotated with a `# measured_s <seconds>` line
+//!   (imported ATLAHS/LogGOPSim schedules with a wall-clock measurement)
+//!
+//! — then fits the [`CALIBRATABLE`] parameters (per-tier α/β, the shared
+//! rail bandwidth, and the switch-aggregation pair on `SwitchCaps`
+//! systems) by damped Gauss–Newton least squares on *relative* residuals
+//! `pred/meas − 1`.  Bandwidths are fitted in inverse coordinates
+//! (seconds/byte), so within one protocol regime the predicted time is
+//! locally linear in the fit vector and the solver converges in a
+//! handful of iterations.
+//!
+//! Parameters the data cannot constrain (a finite-difference Jacobian
+//! column with ~zero norm — e.g. an inter-node tier β that the rail-built
+//! bandwidth always undercuts, or switch constants without any `innet`
+//! measurement) are frozen at their built-in values and reported
+//! `unconstrained`, never silently "fitted" to noise.
+//!
+//! The result is (a) a [`CalibrationProfile`] that
+//! [`SystemProfile`](crate::topology::SystemProfile) overlays on the
+//! built-ins (also via the `PICO_CALIBRATION` env hook in
+//! [`EnvSpec::profile`]) and (b) a [`ValidationReport`]: per-point
+//! relative error, worst point, and winner-table agreement between
+//! simulated and measured crossover cells
+//! (via [`analysis::crossover_table`]).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::analysis;
+use crate::backends::{self, Backend};
+use crate::collectives::Coll;
+use crate::config::{resolve, EnvSpec, TestPoint, TestSpec};
+use crate::goal::Goal;
+use crate::goal_text;
+use crate::json::Json;
+use crate::netmodel::{CalibrationProfile, NetConfig, NetParams, CALIBRATABLE};
+use crate::orchestrator::{run_points_sink, PointOutcome, ScheduleCache};
+use crate::results::{Measurement, RunDir};
+use crate::sim::{simulate, SimContext};
+use crate::topology::{Allocation, Placement, SystemProfile};
+use crate::util::fmt_size;
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
+
+/// Typed ingestion / fit errors.  Malformed measured data is a user input
+/// problem and must surface as one of these — never a panic.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CalibrateError {
+    /// A file could not be read.
+    Io { path: String, msg: String },
+    /// A malformed row / document (`line` is 1-based; 0 = whole document).
+    Parse { line: usize, msg: String },
+    /// A required CSV column (or GOAL annotation) is absent.
+    MissingColumn { column: String },
+    /// Ambiguous or contradictory time units (e.g. both `time_s` and
+    /// `time_us` columns present).
+    UnitMismatch { detail: String },
+    /// A collective label no registry entry matches.
+    UnknownCollective { line: usize, name: String },
+    /// No measured points survived ingestion.
+    EmptyData,
+    /// The evaluation side failed (unknown backend/system, oversized
+    /// point, simulator error).
+    Eval(String),
+}
+
+impl std::fmt::Display for CalibrateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CalibrateError::Io { path, msg } => write!(f, "{path}: {msg}"),
+            CalibrateError::Parse { line: 0, msg } => write!(f, "parse error: {msg}"),
+            CalibrateError::Parse { line, msg } => write!(f, "line {line}: {msg}"),
+            CalibrateError::MissingColumn { column } => {
+                write!(f, "missing required column {column:?}")
+            }
+            CalibrateError::UnitMismatch { detail } => write!(f, "unit mismatch: {detail}"),
+            CalibrateError::UnknownCollective { line, name } => {
+                write!(f, "line {line}: unknown collective {name:?}")
+            }
+            CalibrateError::EmptyData => write!(f, "no measured points to calibrate on"),
+            CalibrateError::Eval(msg) => write!(f, "evaluation failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CalibrateError {}
+
+fn io_err(path: &Path, e: impl std::fmt::Display) -> CalibrateError {
+    CalibrateError::Io { path: path.display().to_string(), msg: e.to_string() }
+}
+
+// ---------------------------------------------------------------------------
+// Measured data + ingestion
+// ---------------------------------------------------------------------------
+
+/// One measured timing: a concrete collective invocation and how long it
+/// took on the real (or reference) system.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MeasuredPoint {
+    pub collective: Coll,
+    /// `None` = the backend's default selection (CSV label `default`).
+    pub algorithm: Option<String>,
+    pub bytes: usize,
+    pub nodes: usize,
+    pub ppn: usize,
+    pub time_s: f64,
+}
+
+/// A GOAL schedule annotated with its measured makespan
+/// (`# measured_s <seconds>` comment line anywhere in the file).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MeasuredGoal {
+    /// Display label (file name for file ingestion).
+    pub label: String,
+    /// GOAL interchange text with comment lines stripped.
+    pub text: String,
+    pub time_s: f64,
+}
+
+/// Parse a PICO/ATLAHS-style measured CSV.  Required columns:
+/// `collective`, `bytes`, `nodes`, and exactly one of `time_s` /
+/// `time_us`; optional: `algorithm` (default/empty = backend default),
+/// `ppn` (default 1).  Unknown columns are ignored (forward compat);
+/// `#`-prefixed and blank lines are skipped.  Sizes accept both plain
+/// byte counts and `64KiB`-style suffixes.
+pub fn ingest_csv_text(text: &str) -> Result<Vec<MeasuredPoint>, CalibrateError> {
+    let mut header: Option<(usize, Vec<String>)> = None;
+    let mut points = Vec::new();
+    let mut cols = CsvColumns::default();
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        match &header {
+            None => {
+                cols = CsvColumns::from_header(&fields)?;
+                header = Some((fields.len(), fields.iter().map(|s| s.to_string()).collect()));
+            }
+            Some((width, _)) => {
+                if fields.len() != *width {
+                    return Err(CalibrateError::Parse {
+                        line: line_no,
+                        msg: format!("{} fields, header has {width}", fields.len()),
+                    });
+                }
+                points.push(cols.parse_row(line_no, &fields)?);
+            }
+        }
+    }
+    if header.is_none() || points.is_empty() {
+        return Err(CalibrateError::EmptyData);
+    }
+    Ok(points)
+}
+
+/// [`ingest_csv_text`] from a file on disk.
+pub fn ingest_csv_file(path: &Path) -> Result<Vec<MeasuredPoint>, CalibrateError> {
+    let text = std::fs::read_to_string(path).map_err(|e| io_err(path, e))?;
+    ingest_csv_text(&text)
+}
+
+/// Serialize measured points back to the canonical CSV (the inverse of
+/// [`ingest_csv_text`]; tests and examples use it to synthesize inputs).
+pub fn measured_to_csv(points: &[MeasuredPoint]) -> String {
+    let mut out = String::from("collective,algorithm,bytes,nodes,ppn,time_s\n");
+    for p in points {
+        out.push_str(&format!(
+            "{},{},{},{},{},{:.9e}\n",
+            p.collective.label(),
+            p.algorithm.as_deref().unwrap_or("default"),
+            p.bytes,
+            p.nodes,
+            p.ppn,
+            p.time_s
+        ));
+    }
+    out
+}
+
+/// Resolved CSV column layout.
+#[derive(Debug, Clone, Copy, Default)]
+struct CsvColumns {
+    collective: usize,
+    bytes: usize,
+    nodes: usize,
+    time: usize,
+    /// 1.0 for `time_s`, 1e-6 for `time_us`.
+    time_scale: f64,
+    algorithm: Option<usize>,
+    ppn: Option<usize>,
+}
+
+impl CsvColumns {
+    fn from_header(fields: &[&str]) -> Result<Self, CalibrateError> {
+        let find = |name: &str| fields.iter().position(|f| *f == name);
+        let require = |name: &'static str| {
+            find(name).ok_or(CalibrateError::MissingColumn { column: name.to_string() })
+        };
+        let (time, time_scale) = match (find("time_s"), find("time_us")) {
+            (Some(_), Some(_)) => {
+                return Err(CalibrateError::UnitMismatch {
+                    detail: "header has both time_s and time_us — pick one unit".into(),
+                })
+            }
+            (Some(i), None) => (i, 1.0),
+            (None, Some(i)) => (i, 1e-6),
+            (None, None) => {
+                return Err(CalibrateError::MissingColumn { column: "time_s (or time_us)".into() })
+            }
+        };
+        Ok(Self {
+            collective: require("collective")?,
+            bytes: require("bytes")?,
+            nodes: require("nodes")?,
+            time,
+            time_scale,
+            algorithm: find("algorithm"),
+            ppn: find("ppn"),
+        })
+    }
+
+    fn parse_row(&self, line: usize, fields: &[&str]) -> Result<MeasuredPoint, CalibrateError> {
+        let collective = Coll::parse(fields[self.collective]).ok_or_else(|| {
+            CalibrateError::UnknownCollective { line, name: fields[self.collective].to_string() }
+        })?;
+        let bytes = crate::util::parse_size(fields[self.bytes]).ok_or_else(|| {
+            CalibrateError::Parse { line, msg: format!("bad bytes {:?}", fields[self.bytes]) }
+        })?;
+        let parse_count = |what: &str, s: &str| -> Result<usize, CalibrateError> {
+            match s.parse::<usize>() {
+                Ok(n) if n >= 1 => Ok(n),
+                _ => Err(CalibrateError::Parse { line, msg: format!("bad {what} {s:?}") }),
+            }
+        };
+        let nodes = parse_count("nodes", fields[self.nodes])?;
+        let ppn = match self.ppn {
+            Some(i) => parse_count("ppn", fields[i])?,
+            None => 1,
+        };
+        let algorithm = self.algorithm.and_then(|i| match fields[i] {
+            "" | "default" => None,
+            a => Some(a.to_string()),
+        });
+        let time: f64 = fields[self.time].parse().map_err(|_| CalibrateError::Parse {
+            line,
+            msg: format!("bad time {:?}", fields[self.time]),
+        })?;
+        if !time.is_finite() || time <= 0.0 {
+            return Err(CalibrateError::Parse {
+                line,
+                msg: format!("measured time must be positive, got {time}"),
+            });
+        }
+        Ok(MeasuredPoint {
+            collective,
+            algorithm,
+            bytes,
+            nodes,
+            ppn,
+            time_s: time * self.time_scale,
+        })
+    }
+}
+
+/// Parse GOAL interchange text carrying a `# measured_s <seconds>`
+/// annotation.  Exactly one annotation is required; every `#` comment
+/// line is stripped from the schedule text handed to the GOAL parser.
+pub fn parse_measured_goal(text: &str, label: &str) -> Result<MeasuredGoal, CalibrateError> {
+    let mut measured = None;
+    let mut sched = String::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if let Some(rest) = line.strip_prefix("# measured_s") {
+            let v: f64 = rest.trim().parse().map_err(|_| CalibrateError::Parse {
+                line: idx + 1,
+                msg: format!("bad measured_s value {:?}", rest.trim()),
+            })?;
+            if !v.is_finite() || v <= 0.0 {
+                return Err(CalibrateError::Parse {
+                    line: idx + 1,
+                    msg: format!("measured_s must be positive, got {v}"),
+                });
+            }
+            if measured.replace(v).is_some() {
+                return Err(CalibrateError::UnitMismatch {
+                    detail: "more than one measured_s annotation".into(),
+                });
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        sched.push_str(raw);
+        sched.push('\n');
+    }
+    let time_s = measured
+        .ok_or(CalibrateError::MissingColumn { column: "# measured_s <seconds>".into() })?;
+    Ok(MeasuredGoal { label: label.to_string(), text: sched, time_s })
+}
+
+/// [`parse_measured_goal`] from a file on disk.
+pub fn ingest_goal_file(path: &Path) -> Result<MeasuredGoal, CalibrateError> {
+    let text = std::fs::read_to_string(path).map_err(|e| io_err(path, e))?;
+    parse_measured_goal(&text, &path.display().to_string())
+}
+
+// ---------------------------------------------------------------------------
+// The calibrator: evaluation blocks + the fit
+// ---------------------------------------------------------------------------
+
+/// How CSV-ingested points are evaluated: the backend that maps algorithm
+/// names to schedules plus the measurement loop shape.  Run-dir blocks
+/// ignore this — their stored `test.json` carries the real settings.
+#[derive(Debug, Clone)]
+pub struct EvalConfig {
+    pub backend: String,
+    pub iterations: usize,
+    pub warmup: usize,
+    pub seed: u64,
+}
+
+impl EvalConfig {
+    pub fn new(backend: &str) -> Self {
+        Self { backend: backend.to_string(), iterations: 1, warmup: 0, seed: 11 }
+    }
+}
+
+/// Fit controls.
+#[derive(Debug, Clone)]
+pub struct FitOptions {
+    /// Gauss–Newton iteration cap (the model is piecewise linear in the
+    /// fit coordinates, so convergence is typically 2–4 iterations).
+    pub max_iters: usize,
+    /// Convergence threshold on the largest normalized step.
+    pub tol: f64,
+}
+
+impl Default for FitOptions {
+    fn default() -> Self {
+        Self { max_iters: 10, tol: 1e-8 }
+    }
+}
+
+/// One netmodel parameter's fit result.
+#[derive(Debug, Clone)]
+pub struct FittedParam {
+    pub name: &'static str,
+    pub builtin: f64,
+    /// Equals `builtin` when the parameter is unconstrained.
+    pub fitted: f64,
+    /// `false` = the measured data carries no information about this
+    /// parameter (zero-norm Jacobian column); it was frozen, not fitted.
+    pub constrained: bool,
+}
+
+/// One validation row: a measured point and its simulated prediction at
+/// the fitted constants.
+#[derive(Debug, Clone)]
+pub struct PointError {
+    pub label: String,
+    pub measured_s: f64,
+    pub predicted_s: f64,
+    /// Signed relative error `predicted/measured − 1`.
+    pub rel_err: f64,
+}
+
+/// Simulated-vs-measured validation at the fitted constants.
+#[derive(Debug, Clone)]
+pub struct ValidationReport {
+    pub points: Vec<PointError>,
+    pub max_abs_rel_err: f64,
+    pub mean_abs_rel_err: f64,
+    /// Index of the worst point in `points`.
+    pub worst: Option<usize>,
+    /// `(agreeing cells, total cells)` between the simulated and measured
+    /// winner tables ([`analysis::crossover_table`]); `None` when the
+    /// data has no host-vs-innet pairs to rank.
+    pub crossover: Option<(usize, usize)>,
+}
+
+impl ValidationReport {
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .points
+            .iter()
+            .map(|p| {
+                Json::obj()
+                    .set("point", p.label.as_str())
+                    .set("measured_s", p.measured_s)
+                    .set("predicted_s", p.predicted_s)
+                    .set("rel_err", p.rel_err)
+            })
+            .collect();
+        let mut j = Json::obj()
+            .set("points", Json::Arr(rows))
+            .set("max_abs_rel_err", self.max_abs_rel_err)
+            .set("mean_abs_rel_err", self.mean_abs_rel_err);
+        if let Some(w) = self.worst {
+            j = j.set("worst_point", self.points[w].label.as_str());
+        }
+        if let Some((agree, total)) = self.crossover {
+            j = j.set(
+                "crossover",
+                Json::obj().set("agree", agree).set("total", total),
+            );
+        }
+        j
+    }
+
+    /// The validation table + summary lines (`max rel err` is the line
+    /// scripts/verify.sh greps).
+    pub fn render(&self) -> String {
+        let rows: Vec<(String, f64, f64)> = self
+            .points
+            .iter()
+            .map(|p| (p.label.clone(), p.measured_s, p.predicted_s))
+            .collect();
+        let mut out = analysis::render_validation(&rows);
+        if let Some((agree, total)) = self.crossover {
+            out.push_str(&format!("  crossover agreement: {agree}/{total}\n"));
+        }
+        out
+    }
+}
+
+/// The full calibration result: fitted parameters, the loadable profile,
+/// and the validation report.
+#[derive(Debug, Clone)]
+pub struct CalibrationOutcome {
+    pub system: String,
+    pub n_points: usize,
+    pub params: Vec<FittedParam>,
+    /// Constrained parameters only — what `calibration.json` holds and
+    /// [`SystemProfile::apply_calibration`] loads.
+    pub profile: CalibrationProfile,
+    pub validation: ValidationReport,
+    pub iterations: usize,
+    pub converged: bool,
+}
+
+impl CalibrationOutcome {
+    pub fn unconstrained(&self) -> Vec<&'static str> {
+        self.params.iter().filter(|p| !p.constrained).map(|p| p.name).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let params: Vec<Json> = self
+            .params
+            .iter()
+            .map(|p| {
+                Json::obj()
+                    .set("name", p.name)
+                    .set("builtin", p.builtin)
+                    .set("fitted", p.fitted)
+                    .set("constrained", p.constrained)
+            })
+            .collect();
+        Json::obj()
+            .set("system", self.system.as_str())
+            .set("points", self.n_points)
+            .set("iterations", self.iterations)
+            .set("converged", self.converged)
+            .set("params", Json::Arr(params))
+            .set("profile", self.profile.to_json())
+            .set("validation", self.validation.to_json())
+    }
+}
+
+/// One homogeneous evaluation block: a spec + env + resolved points whose
+/// predictions come from the campaign pipeline
+/// ([`run_points_sink`]) under a candidate profile.
+struct Block {
+    spec: TestSpec,
+    env: EnvSpec,
+    backend: Box<dyn Backend>,
+    points: Vec<TestPoint>,
+    measured: Vec<f64>,
+    labels: Vec<String>,
+}
+
+/// A sealed GOAL schedule with its measurement; simulated directly
+/// (mirroring `pico import`'s placement defaults: ppn 1, seed 11).
+struct GoalBlock {
+    label: String,
+    goal: Arc<Goal>,
+    measured: f64,
+    env: EnvSpec,
+}
+
+const GOAL_IMPORT_SEED: u64 = 11;
+
+/// Accumulates measured data from any mix of sources, then fits.
+pub struct Calibrator {
+    env: EnvSpec,
+    base: SystemProfile,
+    blocks: Vec<Block>,
+    goals: Vec<GoalBlock>,
+    cache: ScheduleCache,
+}
+
+impl Calibrator {
+    /// A calibrator for `env`'s system.  The baseline constants come from
+    /// [`EnvSpec::profile`] (so a `PICO_CALIBRATION` overlay becomes the
+    /// starting point of a refit).
+    pub fn new(env: &EnvSpec) -> Result<Self, CalibrateError> {
+        let base = env.profile().map_err(CalibrateError::Eval)?;
+        Ok(Self {
+            env: env.clone(),
+            base,
+            blocks: Vec::new(),
+            goals: Vec::new(),
+            cache: ScheduleCache::new(),
+        })
+    }
+
+    pub fn n_points(&self) -> usize {
+        self.blocks.iter().map(|b| b.points.len()).sum::<usize>() + self.goals.len()
+    }
+
+    /// The baseline (built-in) netmodel constants the fit starts from.
+    pub fn baseline(&self) -> &NetParams {
+        &self.base.net
+    }
+
+    /// Add measured points evaluated under `cfg` (the CSV route).
+    pub fn add_measured(
+        &mut self,
+        cfg: &EvalConfig,
+        points: &[MeasuredPoint],
+    ) -> Result<(), CalibrateError> {
+        if points.is_empty() {
+            return Ok(());
+        }
+        let backend = backends::by_name(&cfg.backend)
+            .ok_or_else(|| CalibrateError::Eval(format!("unknown backend {:?}", cfg.backend)))?;
+        for mp in points {
+            if backend.algorithms(mp.collective).is_empty() {
+                return Err(CalibrateError::Eval(format!(
+                    "backend {} does not implement {}",
+                    cfg.backend,
+                    mp.collective.label()
+                )));
+            }
+            if mp.ppn == 0 || mp.ppn > self.base.ppn_max {
+                return Err(CalibrateError::Eval(format!(
+                    "ppn {} out of range for {} (max {})",
+                    mp.ppn, self.base.name, self.base.ppn_max
+                )));
+            }
+            if mp.nodes == 0 || mp.nodes > self.base.nodes_total {
+                return Err(CalibrateError::Eval(format!(
+                    "nodes {} out of range for {} (max {})",
+                    mp.nodes, self.base.name, self.base.nodes_total
+                )));
+            }
+            if !mp.time_s.is_finite() || mp.time_s <= 0.0 {
+                return Err(CalibrateError::Eval(format!(
+                    "measured time must be positive, got {}",
+                    mp.time_s
+                )));
+            }
+        }
+        let mut spec = TestSpec::new("calibrate", &cfg.backend, points[0].collective);
+        spec.iterations = cfg.iterations.max(1);
+        spec.warmup = cfg.warmup;
+        spec.seed = cfg.seed;
+        let tps: Vec<TestPoint> = points
+            .iter()
+            .map(|mp| TestPoint {
+                collective: mp.collective,
+                bytes: mp.bytes,
+                nodes: mp.nodes,
+                ppn: mp.ppn,
+                algorithm: mp.algorithm.clone(),
+                net_cfg: NetConfig::default(),
+                degraded_knobs: vec![],
+            })
+            .collect();
+        let labels = tps.iter().map(point_label).collect();
+        self.blocks.push(Block {
+            spec,
+            env: self.env.clone(),
+            backend,
+            points: tps,
+            measured: points.iter().map(|mp| mp.time_s).collect(),
+            labels,
+        });
+        Ok(())
+    }
+
+    /// Add a prior `pico run` directory: the stored `test.json` /
+    /// `env.json` re-resolve to the exact campaign grid and measurement
+    /// loop, so the predictions replay the campaign bit-for-bit at the
+    /// built-in constants.  Returns the number of points added.
+    pub fn add_run_dir(&mut self, root: &Path) -> Result<usize, CalibrateError> {
+        let test_path = root.join("test.json");
+        let text = std::fs::read_to_string(&test_path).map_err(|e| io_err(&test_path, e))?;
+        let test = Json::parse(&text)
+            .and_then(|j| TestSpec::from_json(&j))
+            .map_err(|msg| CalibrateError::Parse { line: 0, msg })?;
+        let env = match std::fs::read_to_string(root.join("env.json")) {
+            Ok(t) => Json::parse(&t)
+                .and_then(|j| EnvSpec::from_json(&j))
+                .map_err(|msg| CalibrateError::Parse { line: 0, msg })?,
+            Err(_) => self.env.clone(),
+        };
+        if env.system != self.base.name {
+            return Err(CalibrateError::Eval(format!(
+                "run dir was recorded on {:?}, calibrating {:?}",
+                env.system, self.base.name
+            )));
+        }
+        let (points, backend) = resolve(&test, &env).map_err(CalibrateError::Eval)?;
+        let index = RunDir::load_index(root)
+            .map_err(|msg| CalibrateError::Io { path: root.display().to_string(), msg })?;
+        if index.len() != points.len() {
+            return Err(CalibrateError::Parse {
+                line: 0,
+                msg: format!(
+                    "run dir stores {} records but the spec resolves to {} points \
+                     (a granularity that persists every record is required)",
+                    index.len(),
+                    points.len()
+                ),
+            });
+        }
+        let mut measured = Vec::with_capacity(points.len());
+        for (tp, entry) in points.iter().zip(&index) {
+            let file = entry.get("file").and_then(Json::as_str).ok_or_else(|| {
+                CalibrateError::Parse { line: 0, msg: "index entry has no file".into() }
+            })?;
+            let rec_path = root.join(file);
+            let rec_text =
+                std::fs::read_to_string(&rec_path).map_err(|e| io_err(&rec_path, e))?;
+            let rec = Json::parse(&rec_text)
+                .map_err(|msg| CalibrateError::Parse { line: 0, msg })?;
+            let same = rec.get("bytes").and_then(Json::as_usize) == Some(tp.bytes)
+                && rec.get("nodes").and_then(Json::as_usize) == Some(tp.nodes)
+                && rec.get("ppn").and_then(Json::as_usize) == Some(tp.ppn);
+            if !same {
+                return Err(CalibrateError::Parse {
+                    line: 0,
+                    msg: format!("record {file} does not match the resolved point grid"),
+                });
+            }
+            let median = rec.get("median_s").and_then(Json::as_f64).ok_or_else(|| {
+                CalibrateError::Parse { line: 0, msg: format!("record {file} has no median_s") }
+            })?;
+            if !median.is_finite() || median <= 0.0 {
+                return Err(CalibrateError::Parse {
+                    line: 0,
+                    msg: format!("record {file} has non-positive median_s {median}"),
+                });
+            }
+            measured.push(median);
+        }
+        let n = points.len();
+        let labels = points.iter().map(point_label).collect();
+        self.blocks.push(Block { spec: test, env, backend, points, measured, labels });
+        Ok(n)
+    }
+
+    /// Add an annotated GOAL schedule (parsed, sealed, simulated with
+    /// `pico import`'s placement defaults).
+    pub fn add_goal(&mut self, g: &MeasuredGoal) -> Result<(), CalibrateError> {
+        let goal = goal_text::from_text(&g.text)
+            .map_err(|msg| CalibrateError::Parse { line: 0, msg })?;
+        if goal.p() == 0 {
+            return Err(CalibrateError::Parse {
+                line: 0,
+                msg: format!("{}: schedule has no ranks", g.label),
+            });
+        }
+        if goal.p() > self.base.nodes_total {
+            return Err(CalibrateError::Eval(format!(
+                "{}: {} ranks exceed {}'s machine size",
+                g.label,
+                goal.p(),
+                self.base.name
+            )));
+        }
+        self.goals.push(GoalBlock {
+            label: g.label.clone(),
+            goal: Arc::new(goal),
+            measured: g.time_s,
+            env: self.env.clone(),
+        });
+        Ok(())
+    }
+
+    /// Predict every block + goal point under candidate constants `net`,
+    /// in ingestion order.  Public so tests can synthesize "measured"
+    /// data through the exact pipeline the fit evaluates.
+    pub fn predict(&self, net: &NetParams) -> Result<Vec<f64>, CalibrateError> {
+        Ok(self.outcomes(net)?.0)
+    }
+
+    /// All measured times, in the same order [`Calibrator::predict`]
+    /// returns predictions.
+    pub fn measured(&self) -> Vec<f64> {
+        let mut m: Vec<f64> = self.blocks.iter().flat_map(|b| b.measured.clone()).collect();
+        m.extend(self.goals.iter().map(|g| g.measured));
+        m
+    }
+
+    fn profile_with(&self, net: &NetParams) -> SystemProfile {
+        let mut profile = self.base.clone();
+        profile.net = net.clone();
+        profile
+    }
+
+    /// Predictions plus the per-point outcomes (blocks only — goals
+    /// contribute a time but no [`PointOutcome`]).
+    fn outcomes(&self, net: &NetParams) -> Result<(Vec<f64>, Vec<PointOutcome>), CalibrateError> {
+        let profile = self.profile_with(net);
+        let mut pred = Vec::with_capacity(self.n_points());
+        let mut outs = Vec::new();
+        for b in &self.blocks {
+            let block_outs = run_points_sink(
+                &b.spec,
+                &b.env,
+                b.backend.as_ref(),
+                &profile,
+                &b.points,
+                0,
+                1,
+                &self.cache,
+                None,
+            )
+            .map_err(CalibrateError::Eval)?;
+            pred.extend(block_outs.iter().map(|o| o.median_s));
+            outs.extend(block_outs);
+        }
+        for g in &self.goals {
+            let alloc =
+                Allocation::try_new(&profile, g.goal.p(), g.env.alloc_policy, GOAL_IMPORT_SEED)
+                    .map_err(|e| CalibrateError::Eval(format!("{}: {e}", g.label)))?;
+            let placement = Placement::new(&profile, &alloc, 1, g.env.rank_order);
+            let rep = simulate(&g.goal, &SimContext::new(&profile, &placement));
+            pred.push(rep.total_time);
+        }
+        Ok((pred, outs))
+    }
+
+    /// Fit the calibratable constants and validate at the optimum.
+    pub fn fit(&self, opts: &FitOptions) -> Result<CalibrationOutcome, CalibrateError> {
+        if self.n_points() == 0 {
+            return Err(CalibrateError::EmptyData);
+        }
+        let names: Vec<&'static str> = CALIBRATABLE
+            .iter()
+            .copied()
+            .filter(|n| self.base.switch.aggregate || !n.starts_with("switch"))
+            .collect();
+        let builtin: Vec<f64> =
+            names.iter().map(|n| self.base.net.get_param(n).expect("calibratable")).collect();
+        let inverse: Vec<bool> = names.iter().map(|n| is_bandwidth(n)).collect();
+        // Fit coordinates: α in seconds, β as inverse bandwidth (s/byte) —
+        // the simulated time is piecewise linear in these, which is what
+        // lets Gauss–Newton land on the optimum of each piece in one step.
+        let x0: Vec<f64> = builtin
+            .iter()
+            .zip(&inverse)
+            .map(|(v, inv)| if *inv { 1.0 / v } else { *v })
+            .collect();
+        let mut x = x0.clone();
+        let meas = self.measured();
+        let n = meas.len();
+        let k = names.len();
+        let mut frozen = vec![false; k];
+        let mut frozen_known = false;
+        let mut converged = false;
+        let mut iterations = 0;
+
+        for _ in 0..opts.max_iters.max(1) {
+            iterations += 1;
+            let pred = self.predict(&self.net_with(&names, &x, &inverse))?;
+            let resid: Vec<f64> =
+                pred.iter().zip(&meas).map(|(p, m)| p / m - 1.0).collect();
+            // Finite-difference Jacobian in normalized coordinates
+            // z_j = x_j / x0_j (entry [i][j] = ∂r_i/∂z_j): the model is
+            // piecewise linear, so a small relative step is exact within
+            // the current linear piece.
+            let mut jac = vec![vec![0.0; k]; n];
+            for j in 0..k {
+                if frozen[j] {
+                    continue;
+                }
+                let h = x[j].abs().max(x0[j].abs()) * 1e-4;
+                let mut xp = x.clone();
+                xp[j] += h;
+                let pred_p = self.predict(&self.net_with(&names, &xp, &inverse))?;
+                for ((row, pp), (p, m)) in
+                    jac.iter_mut().zip(&pred_p).zip(pred.iter().zip(&meas))
+                {
+                    row[j] = (pp - p) / m / h * x0[j];
+                }
+            }
+            if !frozen_known {
+                // A zero-norm column means a 100% parameter change moves
+                // no residual: the data carries no information — freeze at
+                // the built-in value and report unconstrained.
+                for j in 0..k {
+                    let norm: f64 = jac.iter().map(|row| row[j] * row[j]).sum::<f64>().sqrt();
+                    if norm < 1e-6 {
+                        frozen[j] = true;
+                    }
+                }
+                frozen_known = true;
+            }
+            let max_resid = resid.iter().fold(0.0f64, |a, r| a.max(r.abs()));
+            if max_resid < 1e-10 {
+                converged = true;
+                break;
+            }
+            let free: Vec<usize> = (0..k).filter(|&j| !frozen[j]).collect();
+            if free.is_empty() {
+                converged = true;
+                break;
+            }
+            // Damped normal equations (JᵀJ + λ diag)δ = −Jᵀr over the
+            // free columns, solved by pivoted Gaussian elimination.
+            let m = free.len();
+            let mut a = vec![vec![0.0; m]; m];
+            let mut b = vec![0.0; m];
+            for (ai, &ji) in free.iter().enumerate() {
+                for (ak, &jk) in free.iter().enumerate() {
+                    a[ai][ak] = jac.iter().map(|row| row[ji] * row[jk]).sum();
+                }
+                b[ai] = -jac.iter().zip(&resid).map(|(row, r)| row[ji] * r).sum::<f64>();
+                a[ai][ai] *= 1.0 + 1e-9;
+                a[ai][ai] += 1e-30;
+            }
+            let Some(dz) = solve_linear(a, b) else {
+                break; // singular beyond damping: keep the best point so far
+            };
+            let mut max_step = 0.0f64;
+            for (ai, &j) in free.iter().enumerate() {
+                let step = dz[ai].clamp(-10.0, 10.0);
+                let proposed = x[j] + step * x0[j];
+                // positivity + sanity clamps (a coordinate can shrink to
+                // 2% or grow to 50× of its current value per iteration)
+                let new = proposed.clamp(0.02 * x[j], 50.0 * x[j]);
+                max_step = max_step.max(((new - x[j]) / x0[j]).abs());
+                x[j] = new;
+            }
+            if max_step < opts.tol {
+                converged = true;
+                break;
+            }
+        }
+
+        let net = self.net_with(&names, &x, &inverse);
+        let (pred, outs) = self.outcomes(&net)?;
+        let validation = self.validate(&pred, &meas, &outs);
+        let params: Vec<FittedParam> = names
+            .iter()
+            .enumerate()
+            .map(|(j, name)| {
+                let fitted =
+                    if frozen[j] { builtin[j] } else if inverse[j] { 1.0 / x[j] } else { x[j] };
+                FittedParam { name, builtin: builtin[j], fitted, constrained: !frozen[j] }
+            })
+            .collect();
+        let profile = CalibrationProfile {
+            system: self.base.name.clone(),
+            overrides: params
+                .iter()
+                .filter(|p| p.constrained)
+                .map(|p| (p.name.to_string(), p.fitted))
+                .collect(),
+        };
+        Ok(CalibrationOutcome {
+            system: self.base.name.clone(),
+            n_points: n,
+            params,
+            profile,
+            validation,
+            iterations,
+            converged,
+        })
+    }
+
+    fn net_with(&self, names: &[&'static str], x: &[f64], inverse: &[bool]) -> NetParams {
+        let mut net = self.base.net.clone();
+        for ((name, xv), inv) in names.iter().zip(x).zip(inverse) {
+            let v = if *inv { 1.0 / xv } else { *xv };
+            net.set_param(name, v);
+        }
+        net
+    }
+
+    fn validate(
+        &self,
+        pred: &[f64],
+        meas: &[f64],
+        outs: &[PointOutcome],
+    ) -> ValidationReport {
+        let labels: Vec<String> = self
+            .blocks
+            .iter()
+            .flat_map(|b| b.labels.clone())
+            .chain(self.goals.iter().map(|g| format!("goal {}", g.label)))
+            .collect();
+        let points: Vec<PointError> = labels
+            .into_iter()
+            .zip(pred.iter().zip(meas))
+            .map(|(label, (p, m))| PointError {
+                label,
+                measured_s: *m,
+                predicted_s: *p,
+                rel_err: p / m - 1.0,
+            })
+            .collect();
+        let worst = points
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| a.rel_err.abs().total_cmp(&b.rel_err.abs()))
+            .map(|(i, _)| i);
+        let max_abs_rel_err = worst.map(|i| points[i].rel_err.abs()).unwrap_or(0.0);
+        let mean_abs_rel_err = if points.is_empty() {
+            0.0
+        } else {
+            points.iter().map(|p| p.rel_err.abs()).sum::<f64>() / points.len() as f64
+        };
+        // winner-table agreement: replace each simulated outcome's time
+        // with its measurement and compare the two crossover tables
+        let measured_outs: Vec<PointOutcome> = outs
+            .iter()
+            .zip(meas)
+            .map(|(o, m)| outcome_with_time(o, *m))
+            .collect();
+        let sim_cells = analysis::crossover_table(outs);
+        let meas_cells = analysis::crossover_table(&measured_outs);
+        let crossover = if sim_cells.is_empty() {
+            None
+        } else {
+            Some(analysis::crossover_agreement(&sim_cells, &meas_cells))
+        };
+        ValidationReport { points, max_abs_rel_err, mean_abs_rel_err, worst, crossover }
+    }
+}
+
+fn is_bandwidth(name: &str) -> bool {
+    name.ends_with(".bw") || name == "rail_bw" || name == "switch_agg_bw"
+}
+
+fn point_label(tp: &TestPoint) -> String {
+    format!(
+        "{}/{} {} n{} ppn{}",
+        tp.collective.label(),
+        tp.algorithm.as_deref().unwrap_or("default"),
+        fmt_size(tp.bytes),
+        tp.nodes,
+        tp.ppn
+    )
+}
+
+fn outcome_with_time(o: &PointOutcome, s: f64) -> PointOutcome {
+    let mut m = o.clone();
+    m.measurement = Measurement {
+        times: vec![vec![s]],
+        components: m.measurement.components,
+        tag_times: vec![],
+    };
+    m.median_s = s;
+    m
+}
+
+/// Pivoted Gaussian elimination for the (tiny, ≤9×9) normal equations.
+fn solve_linear(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Option<Vec<f64>> {
+    let n = b.len();
+    for col in 0..n {
+        let mut piv = col;
+        for r in col + 1..n {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        if a[piv][col].abs() < 1e-300 {
+            return None;
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let pivot_row = a[col].clone();
+        let pivot_b = b[col];
+        for (row, brow) in a.iter_mut().zip(b.iter_mut()).skip(col + 1) {
+            let f = row[col] / pivot_row[col];
+            if f != 0.0 {
+                for (rk, pk) in row.iter_mut().zip(&pivot_row).skip(col) {
+                    *rk -= f * pk;
+                }
+                *brow -= f * pivot_b;
+            }
+        }
+    }
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let tail: f64 = a[row][row + 1..].iter().zip(&x[row + 1..]).map(|(c, v)| c * v).sum();
+        x[row] = (b[row] - tail) / a[row][row];
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_round_trips_through_the_canonical_writer() {
+        let points = vec![
+            MeasuredPoint {
+                collective: Coll::Allreduce,
+                algorithm: Some("ring".into()),
+                bytes: 4096,
+                nodes: 4,
+                ppn: 2,
+                time_s: 1.25e-5,
+            },
+            MeasuredPoint {
+                collective: Coll::Bcast,
+                algorithm: None,
+                bytes: 1 << 20,
+                nodes: 2,
+                ppn: 1,
+                time_s: 3.0e-4,
+            },
+        ];
+        let back = ingest_csv_text(&measured_to_csv(&points)).unwrap();
+        assert_eq!(back, points);
+    }
+
+    #[test]
+    fn csv_accepts_size_suffixes_units_and_comments() {
+        let text = "# a comment\n\
+                    collective,algorithm,bytes,nodes,ppn,time_us\n\
+                    allreduce,ring,64KiB,4,2,12.5\n\
+                    \n\
+                    # another\n\
+                    allreduce,default,128,2,1,3.0\n";
+        let pts = ingest_csv_text(text).unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].bytes, 64 * 1024);
+        assert!((pts[0].time_s - 12.5e-6).abs() < 1e-15);
+        assert_eq!(pts[1].algorithm, None);
+        assert_eq!(pts[1].ppn, 1);
+    }
+
+    #[test]
+    fn csv_errors_are_typed() {
+        // missing time column
+        let e = ingest_csv_text("collective,bytes,nodes\nallreduce,8,2\n").unwrap_err();
+        assert!(matches!(e, CalibrateError::MissingColumn { .. }), "{e}");
+        // both units at once
+        let e = ingest_csv_text("collective,bytes,nodes,time_s,time_us\n").unwrap_err();
+        assert!(matches!(e, CalibrateError::UnitMismatch { .. }), "{e}");
+        // unknown collective names the line
+        let e = ingest_csv_text("collective,bytes,nodes,time_s\nnope,8,2,1.0\n").unwrap_err();
+        assert_eq!(e, CalibrateError::UnknownCollective { line: 2, name: "nope".into() });
+        // ragged row
+        let e = ingest_csv_text("collective,bytes,nodes,time_s\nallreduce,8,2\n").unwrap_err();
+        assert!(matches!(e, CalibrateError::Parse { line: 2, .. }), "{e}");
+        // non-positive time
+        let e =
+            ingest_csv_text("collective,bytes,nodes,time_s\nallreduce,8,2,-1.0\n").unwrap_err();
+        assert!(matches!(e, CalibrateError::Parse { line: 2, .. }), "{e}");
+        // header alone is empty data
+        let e = ingest_csv_text("collective,bytes,nodes,time_s\n").unwrap_err();
+        assert_eq!(e, CalibrateError::EmptyData);
+        assert_eq!(ingest_csv_text("").unwrap_err(), CalibrateError::EmptyData);
+    }
+
+    #[test]
+    fn goal_annotation_parses_and_strips_comments() {
+        let text = "# measured_s 0.0025\n# provenance: testbed\nnum_ranks 2\n";
+        let g = parse_measured_goal(text, "t.goal").unwrap();
+        assert_eq!(g.time_s, 0.0025);
+        assert_eq!(g.text, "num_ranks 2\n");
+        let e = parse_measured_goal("num_ranks 2\n", "t").unwrap_err();
+        assert!(matches!(e, CalibrateError::MissingColumn { .. }), "{e}");
+        let e = parse_measured_goal("# measured_s 1\n# measured_s 2\n", "t").unwrap_err();
+        assert!(matches!(e, CalibrateError::UnitMismatch { .. }), "{e}");
+        let e = parse_measured_goal("# measured_s zero\n", "t").unwrap_err();
+        assert!(matches!(e, CalibrateError::Parse { line: 1, .. }), "{e}");
+    }
+
+    #[test]
+    fn solver_inverts_a_known_system() {
+        // [[2,1],[1,3]] x = [5,10] -> x = [1,3]
+        let x = solve_linear(vec![vec![2.0, 1.0], vec![1.0, 3.0]], vec![5.0, 10.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12 && (x[1] - 3.0).abs() < 1e-12, "{x:?}");
+        assert!(solve_linear(vec![vec![0.0, 0.0], vec![0.0, 0.0]], vec![1.0, 1.0]).is_none());
+    }
+
+    #[test]
+    fn calibrator_rejects_out_of_range_points() {
+        let env = EnvSpec::for_system("leonardo");
+        let mut c = Calibrator::new(&env).unwrap();
+        let bad_ppn = MeasuredPoint {
+            collective: Coll::Allreduce,
+            algorithm: None,
+            bytes: 8,
+            nodes: 2,
+            ppn: 99,
+            time_s: 1e-5,
+        };
+        let e = c.add_measured(&EvalConfig::new("libpico"), &[bad_ppn]).unwrap_err();
+        assert!(matches!(e, CalibrateError::Eval(_)), "{e}");
+        let e = c.add_measured(&EvalConfig::new("bogus"), &[]).err();
+        assert!(e.is_none(), "empty point set short-circuits before backend lookup");
+        assert_eq!(c.fit(&FitOptions::default()).unwrap_err(), CalibrateError::EmptyData);
+    }
+}

@@ -211,8 +211,20 @@ impl EnvSpec {
         }
     }
 
+    /// Resolve the built-in [`SystemProfile`] for this env's system.  When
+    /// `PICO_CALIBRATION` names a `pico calibrate` output file, its fitted
+    /// constants are overlaid on the built-ins (built-in < calibration
+    /// precedence, DESIGN.md §Calibration) — every route that simulates
+    /// (run / sweep / probe / overlap / serve) picks the overlay up here.
     pub fn profile(&self) -> Result<SystemProfile, String> {
-        profile_by_name(&self.system).ok_or_else(|| format!("unknown system {:?}", self.system))
+        let mut profile = profile_by_name(&self.system)
+            .ok_or_else(|| format!("unknown system {:?}", self.system))?;
+        if let Ok(path) = std::env::var("PICO_CALIBRATION") {
+            if !path.is_empty() {
+                profile.apply_calibration_file(std::path::Path::new(&path))?;
+            }
+        }
+        Ok(profile)
     }
 
     pub fn to_json(&self) -> Json {

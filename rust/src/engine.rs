@@ -1,6 +1,6 @@
 //! Typed `Engine` facade — the one programmatic API over everything the
-//! CLI exposes (run / sweep / probe / trace / replay / autotune) plus GOAL
-//! trace import.
+//! CLI exposes (run / sweep / probe / trace / replay / autotune /
+//! calibrate) plus GOAL trace import.
 //!
 //! PICO's pitch is a *lightweight, extensible* benchmarking framework; the
 //! facade is what makes it embeddable as a library instead of only
@@ -50,6 +50,7 @@ use std::sync::Arc;
 
 use crate::analysis::{self, JobSpan, OverlapMetrics, RatioCell};
 use crate::backends::LibPico;
+use crate::calibrate::{self, CalibrationOutcome, Calibrator, FitOptions};
 use crate::collectives::{Coll, GenParams};
 use crate::compose::{compose_placed, ChainPolicy, Placement as PhasePlacement};
 use crate::config::{EnvSpec, TestSpec};
@@ -319,6 +320,49 @@ impl Engine {
             sim,
             trace,
         })
+    }
+
+    /// Fit the netmodel constants to measured timing records and validate
+    /// the fit (the `pico calibrate` subcommand, ROADMAP item 5).  Sources
+    /// — a measured CSV, a prior `pico run` directory, annotated GOAL
+    /// traces — may be mixed; at least one point is required.  When `out`
+    /// is set, `calibration.json` (the loadable
+    /// [`CalibrationProfile`](crate::netmodel::CalibrationProfile)) and
+    /// `validation.json` land there.
+    pub fn calibrate(&self, spec: &CalibrateSpec) -> Result<CalibrationReport, String> {
+        let mut cal = Calibrator::new(&self.env).map_err(|e| e.to_string())?;
+        let cfg = spec.eval_config();
+        if let Some(text) = &spec.csv_text {
+            let pts = calibrate::ingest_csv_text(text).map_err(|e| e.to_string())?;
+            cal.add_measured(&cfg, &pts).map_err(|e| e.to_string())?;
+        }
+        if let Some(path) = &spec.csv {
+            let pts = calibrate::ingest_csv_file(path)
+                .map_err(|e| format!("{}: {e}", path.display()))?;
+            cal.add_measured(&cfg, &pts).map_err(|e| e.to_string())?;
+        }
+        if let Some(root) = &spec.run_dir {
+            cal.add_run_dir(root).map_err(|e| e.to_string())?;
+        }
+        for path in &spec.goals {
+            let g = calibrate::ingest_goal_file(path)
+                .map_err(|e| format!("{}: {e}", path.display()))?;
+            cal.add_goal(&g).map_err(|e| format!("{}: {e}", path.display()))?;
+        }
+        let opts = FitOptions { max_iters: spec.max_iters, ..FitOptions::default() };
+        let outcome = cal.fit(&opts).map_err(|e| e.to_string())?;
+        let mut written = None;
+        if let Some(out) = &spec.out {
+            std::fs::create_dir_all(out).map_err(|e| format!("{}: {e}", out.display()))?;
+            let cal_path = out.join("calibration.json");
+            std::fs::write(&cal_path, outcome.profile.to_json().to_string_pretty())
+                .map_err(|e| format!("{}: {e}", cal_path.display()))?;
+            let val_path = out.join("validation.json");
+            std::fs::write(&val_path, outcome.validation.to_json().to_string_pretty())
+                .map_err(|e| format!("{}: {e}", val_path.display()))?;
+            written = Some(out.clone());
+        }
+        Ok(CalibrationReport { outcome, out: written })
     }
 
     /// Run a multi-collective overlap composition (the `pico overlap`
@@ -1012,6 +1056,129 @@ impl TryFrom<&Json> for ImportRunSpec {
     }
 }
 
+/// A calibration request (the `pico calibrate` subcommand): which
+/// measured sources to ingest and how to evaluate CSV points.
+#[derive(Debug, Clone)]
+pub struct CalibrateSpec {
+    /// Backend that maps CSV algorithm names to schedules (run-dir
+    /// sources carry their own backend in the stored `test.json`).
+    backend: String,
+    csv: Option<PathBuf>,
+    /// Inline CSV text (the serve route and library callers).
+    csv_text: Option<String>,
+    run_dir: Option<PathBuf>,
+    goals: Vec<PathBuf>,
+    max_iters: usize,
+    seed: u64,
+    out: Option<PathBuf>,
+}
+
+impl CalibrateSpec {
+    pub fn new() -> Self {
+        Self {
+            backend: "libpico".into(),
+            csv: None,
+            csv_text: None,
+            run_dir: None,
+            goals: Vec::new(),
+            max_iters: 10,
+            seed: 11,
+            out: None,
+        }
+    }
+
+    pub fn with_backend(mut self, backend: &str) -> Self {
+        self.backend = backend.to_string();
+        self
+    }
+
+    pub fn with_csv(mut self, path: impl Into<PathBuf>) -> Self {
+        self.csv = Some(path.into());
+        self
+    }
+
+    pub fn with_csv_text(mut self, text: impl Into<String>) -> Self {
+        self.csv_text = Some(text.into());
+        self
+    }
+
+    pub fn with_run_dir(mut self, root: impl Into<PathBuf>) -> Self {
+        self.run_dir = Some(root.into());
+        self
+    }
+
+    pub fn with_goal(mut self, path: impl Into<PathBuf>) -> Self {
+        self.goals.push(path.into());
+        self
+    }
+
+    pub fn with_max_iters(mut self, n: usize) -> Self {
+        self.max_iters = n.max(1);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_out(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.out = Some(dir.into());
+        self
+    }
+
+    fn eval_config(&self) -> calibrate::EvalConfig {
+        let mut cfg = calibrate::EvalConfig::new(&self.backend);
+        cfg.seed = self.seed;
+        cfg
+    }
+}
+
+impl Default for CalibrateSpec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TryFrom<&Json> for CalibrateSpec {
+    type Error = String;
+
+    fn try_from(j: &Json) -> Result<Self, String> {
+        let mut s = CalibrateSpec::new();
+        if let Some(b) = j.get("backend").and_then(Json::as_str) {
+            s.backend = b.to_string();
+        }
+        if let Some(p) = j.get("csv").and_then(Json::as_str) {
+            s.csv = Some(PathBuf::from(p));
+        }
+        if let Some(t) = j.get("csv_text").and_then(Json::as_str) {
+            s.csv_text = Some(t.to_string());
+        }
+        if let Some(p) = j.get("run_dir").and_then(Json::as_str) {
+            s.run_dir = Some(PathBuf::from(p));
+        }
+        if let Some(arr) = j.get("goals").and_then(Json::as_arr) {
+            for g in arr {
+                let p = g.as_str().ok_or("calibrate: goals entries must be paths")?;
+                s.goals.push(PathBuf::from(p));
+            }
+        }
+        if let Some(n) = j.get("max_iters").and_then(Json::as_usize) {
+            s.max_iters = n.max(1);
+        }
+        if let Some(x) = j.get("seed").and_then(Json::as_u64) {
+            s.seed = x;
+        }
+        if let Some(o) = j.get("out").and_then(Json::as_str) {
+            s.out = Some(PathBuf::from(o));
+        }
+        if s.csv.is_none() && s.csv_text.is_none() && s.run_dir.is_none() && s.goals.is_empty() {
+            return Err("calibrate: needs at least one of csv, csv_text, run_dir, goals".into());
+        }
+        Ok(s)
+    }
+}
+
 /// What a [`OverlapSpec`] composes: a declarative workload, or N repeats
 /// of one collective (the minimal conservation-check shape).
 #[derive(Debug, Clone)]
@@ -1351,6 +1518,68 @@ impl ImportReport {
     }
 }
 
+/// One calibration run: the fit outcome plus where the profile landed
+/// (when an output directory was set).
+#[derive(Debug, Clone)]
+pub struct CalibrationReport {
+    pub outcome: CalibrationOutcome,
+    /// Directory holding `calibration.json` + `validation.json`.
+    pub out: Option<PathBuf>,
+}
+
+impl CalibrationReport {
+    /// The `pico calibrate` text block: fitted-parameter table (builtin →
+    /// fitted, unconstrained parameters flagged), the validation table
+    /// with the worst point marked, and the output paths.
+    pub fn render(&self) -> String {
+        let o = &self.outcome;
+        let mut out = format!(
+            "calibration: {}  points={}  iterations={}  converged={}\n",
+            o.system,
+            o.n_points,
+            o.iterations,
+            if o.converged { "yes" } else { "no" },
+        );
+        out.push_str(&format!("  {:<18} {:>14} {:>14} {:>9}\n", "parameter", "builtin", "fitted", "change"));
+        for p in &o.params {
+            // every bandwidth name ends in "bw"; everything else is a latency
+            let fmt = |v: f64| {
+                if p.name.ends_with("bw") {
+                    format!("{:.2}GB/s", v / 1e9)
+                } else {
+                    fmt_time(v)
+                }
+            };
+            if p.constrained {
+                out.push_str(&format!(
+                    "  {:<18} {:>14} {:>14} {:>+8.2}%\n",
+                    p.name,
+                    fmt(p.builtin),
+                    fmt(p.fitted),
+                    (p.fitted / p.builtin - 1.0) * 100.0,
+                ));
+            } else {
+                out.push_str(&format!(
+                    "  {:<18} {:>14} {:>14} {:>9}\n",
+                    p.name,
+                    fmt(p.builtin),
+                    "(frozen)",
+                    "unconstr",
+                ));
+            }
+        }
+        out.push_str(&o.validation.render());
+        if let Some(dir) = &self.out {
+            out.push_str(&format!(
+                "  wrote {}\n  wrote {}\n",
+                dir.join("calibration.json").display(),
+                dir.join("validation.json").display(),
+            ));
+        }
+        out
+    }
+}
+
 /// One overlap-composition run: identity, the simulated report with its
 /// per-phase spans, overlap metrics against the serial baseline, and the
 /// composed schedule itself (exportable as GOAL text).
@@ -1617,6 +1846,52 @@ mod tests {
         let (sum, ok) = rep.conservation.expect("serial chain must report conservation");
         assert!(ok, "composed {} vs sum {sum}", rep.sim.total_time);
         assert!(rep.render().contains("conservation: ok"));
+    }
+
+    #[test]
+    fn calibrate_is_a_fixed_point_on_its_own_predictions() {
+        // measured = the simulator's own predictions at the built-in
+        // constants → zero residual, converged fit, profile ≈ builtin
+        let e = engine();
+        let mut cal = Calibrator::new(&EnvSpec::for_system("leonardo")).unwrap();
+        let pts = vec![
+            calibrate::MeasuredPoint {
+                collective: Coll::Allreduce,
+                algorithm: Some("ring".into()),
+                bytes: 1 << 20,
+                nodes: 4,
+                ppn: 2,
+                time_s: 1.0, // placeholder, replaced below
+            },
+            calibrate::MeasuredPoint {
+                collective: Coll::Allreduce,
+                algorithm: Some("recursive_doubling".into()),
+                bytes: 2048,
+                nodes: 2,
+                ppn: 2,
+                time_s: 1.0,
+            },
+        ];
+        cal.add_measured(&calibrate::EvalConfig::new("libpico"), &pts).unwrap();
+        let truth = cal.predict(cal.baseline()).unwrap();
+        let measured: Vec<_> = pts
+            .iter()
+            .zip(&truth)
+            .map(|(p, t)| calibrate::MeasuredPoint { time_s: *t, ..p.clone() })
+            .collect();
+        let spec = CalibrateSpec::new().with_csv_text(calibrate::measured_to_csv(&measured));
+        let rep = e.calibrate(&spec).unwrap();
+        assert!(rep.outcome.converged);
+        assert!(rep.outcome.validation.max_abs_rel_err < 1e-9, "{rep:?}");
+        let txt = rep.render();
+        assert!(txt.contains("max rel err"), "{txt}");
+        assert!(txt.contains("calibration: leonardo"), "{txt}");
+        // a spec with no source at all is a typed JSON error
+        assert!(CalibrateSpec::try_from(&Json::parse("{}").unwrap()).is_err());
+        let j = Json::parse(r#"{"run_dir":"/tmp/x","max_iters":3,"backend":"openmpi"}"#).unwrap();
+        let s = CalibrateSpec::try_from(&j).unwrap();
+        assert_eq!(s.max_iters, 3);
+        assert_eq!(s.backend, "openmpi");
     }
 
     #[test]

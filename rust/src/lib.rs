@@ -22,7 +22,8 @@
 //!
 //! The crate is **a library with a thin CLI**: the [`engine::Engine`]
 //! facade is the one programmatic API over every subcommand (run / sweep /
-//! probe / trace / replay / autotune / GOAL import / overlap); `pico`'s
+//! probe / trace / replay / autotune / GOAL import / overlap / calibrate);
+//! `pico`'s
 //! `main` is argv→spec translation plus `Engine` calls.  The [`compose`]
 //! and [`workload`] layers turn per-invocation schedules into
 //! workload-level benchmarks: N sealed graphs concatenate into one
@@ -64,6 +65,7 @@
 pub mod analysis;
 pub mod backends;
 pub mod benchkit;
+pub mod calibrate;
 pub mod collectives;
 pub mod compose;
 pub mod config;

@@ -10,6 +10,7 @@
 //!   replay ...                   LLM trace replay (Fig. 12 style)
 //!   import --goal F ...          simulate an external GOAL schedule
 //!   overlap --spec F ...         compose + simulate a multi-collective workload
+//!   calibrate --csv F ...        fit netmodel constants to measured timings
 //!   serve  [--socket PATH]       long-lived multi-tenant campaign daemon
 //!   help                         this text
 //!
@@ -36,8 +37,8 @@ use pico::backends;
 use pico::collectives::{self, Coll};
 use pico::config::{EnvSpec, TestSpec};
 use pico::engine::{
-    CampaignSpec, Engine, EngineConfig, GoalSource, ImportRunSpec, OverlapSpec, ProbeSpec,
-    ReplaySpec, SweepSpec, TraceSpec,
+    CalibrateSpec, CampaignSpec, Engine, EngineConfig, GoalSource, ImportRunSpec, OverlapSpec,
+    ProbeSpec, ReplaySpec, SweepSpec, TraceSpec,
 };
 use pico::json::Json;
 use pico::serve::{ServeOptions, Service};
@@ -160,6 +161,7 @@ fn main() -> ExitCode {
         "replay" => cmd_replay(&args),
         "import" => cmd_import(&args),
         "overlap" => cmd_overlap(&args),
+        "calibrate" => cmd_calibrate(&args),
         "serve" => cmd_serve(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -219,6 +221,13 @@ usage: pico <command> [--key value ...]
          per-job slowdown) — see examples/*.json; alternative source:
          --coll allreduce --algo ring --bytes 1MiB --repeat 2 composes N
          copies of one collective (serial/per_rank)
+  calibrate [--csv F] [--run-dir D] [--goal F1,F2] [--system leonardo]
+         [--backend libpico] [--iters 10] [--seed 11] [--out DIR]
+         fit the netmodel constants to measured timings (CSV results, a
+         prior `pico run` directory, GOAL traces annotated with
+         `# measured_s`), print the fitted-parameter + validation tables,
+         and emit a calibration.json loadable via the PICO_CALIBRATION
+         env var (built-ins < calibration precedence)
   serve  [--socket PATH] [--system leonardo] [--jobs N]
          [--max-inflight-points 256] [--chunk-points 16]
          long-lived multi-tenant daemon: newline-delimited JSON requests
@@ -232,8 +241,8 @@ usage: pico <command> [--key value ...]
 /// The dispatch table, for `help` and the did-you-mean suggestion on an
 /// unknown subcommand.
 const SUBCOMMANDS: &[&str] = &[
-    "list", "spec", "run", "sweep", "probe", "trace", "replay", "import", "overlap", "serve",
-    "help",
+    "list", "spec", "run", "sweep", "probe", "trace", "replay", "import", "overlap", "calibrate",
+    "serve", "help",
 ];
 
 /// Levenshtein distance (two-row rolling table).
@@ -504,6 +513,30 @@ fn cmd_overlap(args: &Args) -> Result<(), String> {
     if args.bool_or("cache-stats", false)? {
         println!("{}", engine.cache_stats().render());
     }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<(), String> {
+    let mut spec = CalibrateSpec::new()
+        .with_backend(&args.get_or("backend", "libpico"))
+        .with_max_iters(args.usize_or("iters", 10)?)
+        .with_seed(args.usize_or("seed", 11)? as u64);
+    if let Some(p) = args.get("csv") {
+        spec = spec.with_csv(p);
+    }
+    if let Some(d) = args.get("run-dir") {
+        spec = spec.with_run_dir(d);
+    }
+    if let Some(gs) = args.get("goal") {
+        for g in gs.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            spec = spec.with_goal(g);
+        }
+    }
+    if let Some(out) = args.get("out") {
+        spec = spec.with_out(out);
+    }
+    let engine = engine_for(args);
+    print!("{}", engine.calibrate(&spec)?.render());
     Ok(())
 }
 

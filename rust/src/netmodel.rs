@@ -17,7 +17,24 @@
 //!   overhead (γ terms of Fig. 11's Data-Movement / Reduction components).
 
 
+use crate::json::Json;
 use crate::topology::{SwitchCaps, Tier};
+
+/// Netmodel parameters `pico calibrate` can fit and a
+/// [`CalibrationProfile`] can override, in fit-vector order: per-tier
+/// α/β, the shared per-rail bandwidth, and the switch-aggregation pair
+/// (the constants every sweep verdict ultimately rests on).
+pub const CALIBRATABLE: [&str; 9] = [
+    "intra_node.alpha",
+    "intra_node.bw",
+    "intra_group.alpha",
+    "intra_group.bw",
+    "inter_group.alpha",
+    "inter_group.bw",
+    "rail_bw",
+    "switch_alpha",
+    "switch_agg_bw",
+];
 
 /// Low-level transfer protocol (NCCL naming: Simple favors bandwidth, LL
 /// reduces small-message latency via flag-based synchronization).
@@ -100,6 +117,40 @@ pub struct NetConfig {
 }
 
 impl NetParams {
+    /// Read a calibratable parameter by name (see [`CALIBRATABLE`]).
+    pub fn get_param(&self, name: &str) -> Option<f64> {
+        Some(match name {
+            "intra_node.alpha" => self.intra_node.alpha,
+            "intra_node.bw" => self.intra_node.bw,
+            "intra_group.alpha" => self.intra_group.alpha,
+            "intra_group.bw" => self.intra_group.bw,
+            "inter_group.alpha" => self.inter_group.alpha,
+            "inter_group.bw" => self.inter_group.bw,
+            "rail_bw" => self.rail_bw,
+            "switch_alpha" => self.switch_alpha,
+            "switch_agg_bw" => self.switch_agg_bw,
+            _ => return None,
+        })
+    }
+
+    /// Write a calibratable parameter by name; `false` when the name is
+    /// not in [`CALIBRATABLE`] (callers turn that into a typed error).
+    pub fn set_param(&mut self, name: &str, value: f64) -> bool {
+        match name {
+            "intra_node.alpha" => self.intra_node.alpha = value,
+            "intra_node.bw" => self.intra_node.bw = value,
+            "intra_group.alpha" => self.intra_group.alpha = value,
+            "intra_group.bw" => self.intra_group.bw = value,
+            "inter_group.alpha" => self.inter_group.alpha = value,
+            "inter_group.bw" => self.inter_group.bw = value,
+            "rail_bw" => self.rail_bw = value,
+            "switch_alpha" => self.switch_alpha = value,
+            "switch_agg_bw" => self.switch_agg_bw = value,
+            _ => return false,
+        }
+        true
+    }
+
     #[inline]
     pub fn tier(&self, tier: Tier) -> TierParams {
         match tier {
@@ -255,6 +306,82 @@ impl NetParams {
             switch_agg_bw: 6e9,
             switch_alpha: 1.0e-6,
         }
+    }
+}
+
+/// A fitted set of netmodel overrides — what `pico calibrate` emits and
+/// [`SystemProfile`](crate::topology::SystemProfile) loads to replace the
+/// built-in shape-level constants with machine-measured ones.
+///
+/// Precedence is strict: built-in profile < calibration file (every
+/// override named here wins; everything else keeps its built-in value).
+/// The JSON schema is versioned (`"schema": "pico-calibration-v1"`) so a
+/// stale file fails loudly instead of silently misparsing.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CalibrationProfile {
+    /// System the fit was performed on; applying to a different system's
+    /// profile is a typed error (constants are not portable across
+    /// fabrics).
+    pub system: String,
+    /// `(parameter name, fitted value)` pairs in [`CALIBRATABLE`] order.
+    /// Parameters the fit left unconstrained are simply absent.
+    pub overrides: Vec<(String, f64)>,
+}
+
+impl CalibrationProfile {
+    const SCHEMA: &'static str = "pico-calibration-v1";
+
+    /// Apply every override to `net`.  Unknown parameter names are typed
+    /// errors (a misspelled key must not silently calibrate nothing).
+    pub fn apply(&self, net: &mut NetParams) -> Result<(), String> {
+        for (name, value) in &self.overrides {
+            if !value.is_finite() || *value <= 0.0 {
+                return Err(format!("calibration override {name} = {value} is not positive"));
+            }
+            if !net.set_param(name, *value) {
+                return Err(format!("unknown calibration parameter {name:?}"));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let overrides = self
+            .overrides
+            .iter()
+            .fold(Json::obj(), |o, (name, value)| o.set(name.as_str(), *value));
+        Json::obj()
+            .set("schema", Self::SCHEMA)
+            .set("system", self.system.as_str())
+            .set("overrides", overrides)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let schema = j.get("schema").and_then(Json::as_str).unwrap_or("");
+        if schema != Self::SCHEMA {
+            return Err(format!(
+                "calibration schema {schema:?} is not {:?}",
+                Self::SCHEMA
+            ));
+        }
+        let system = j
+            .get("system")
+            .and_then(Json::as_str)
+            .ok_or("calibration profile missing \"system\"")?
+            .to_string();
+        let mut overrides = Vec::new();
+        for (name, value) in
+            j.get("overrides").and_then(Json::as_obj).ok_or("calibration profile missing \"overrides\"")?
+        {
+            let v = value
+                .as_f64()
+                .ok_or_else(|| format!("calibration override {name} is not a number"))?;
+            if !CALIBRATABLE.contains(&name.as_str()) {
+                return Err(format!("unknown calibration parameter {name:?}"));
+            }
+            overrides.push((name.clone(), v));
+        }
+        Ok(Self { system, overrides })
     }
 }
 
@@ -449,6 +576,48 @@ mod tests {
     fn self_messages_free() {
         let p = lp();
         assert_eq!(p.ptp_time(&NetConfig::default(), Tier::SelfRank, 1 << 20, 4), 0.0);
+    }
+
+    #[test]
+    fn param_accessors_cover_the_calibratable_set() {
+        let mut p = lp();
+        for name in CALIBRATABLE {
+            let v = p.get_param(name).unwrap_or_else(|| panic!("get {name}"));
+            assert!(p.set_param(name, v * 2.0), "set {name}");
+            assert_eq!(p.get_param(name), Some(v * 2.0), "{name}");
+        }
+        assert_eq!(p.get_param("taper"), None);
+        assert!(!p.set_param("taper", 1.0));
+    }
+
+    #[test]
+    fn calibration_profile_round_trips_and_applies() {
+        let cp = CalibrationProfile {
+            system: "leonardo".into(),
+            overrides: vec![("intra_node.alpha".into(), 2.0e-6), ("rail_bw".into(), 20e9)],
+        };
+        let back = CalibrationProfile::from_json(&cp.to_json()).unwrap();
+        assert_eq!(back, cp);
+        let mut net = lp();
+        cp.apply(&mut net).unwrap();
+        assert_eq!(net.intra_node.alpha, 2.0e-6);
+        assert_eq!(net.rail_bw, 20e9);
+        // untouched params keep their built-in values
+        assert_eq!(net.inter_group.alpha, lp().inter_group.alpha);
+        // typed failures: unknown key, non-positive value, wrong schema
+        let bad = CalibrationProfile {
+            system: "leonardo".into(),
+            overrides: vec![("taper".into(), 0.5)],
+        };
+        assert!(bad.apply(&mut net).unwrap_err().contains("unknown"));
+        let neg = CalibrationProfile {
+            system: "leonardo".into(),
+            overrides: vec![("rail_bw".into(), -1.0)],
+        };
+        assert!(neg.apply(&mut net).unwrap_err().contains("not positive"));
+        assert!(CalibrationProfile::from_json(&Json::obj().set("schema", "v0"))
+            .unwrap_err()
+            .contains("schema"));
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! submit   := { "op": "submit", "id": ID, "kind": KIND, "spec": {...},
 //!               "out"?: DIR }
 //! KIND     := "campaign" | "sweep" | "probe" | "overlap" | "import"
+//!           | "calibrate"
 //!
 //! frame    := accepted | record | report | done | error | status
 //!           | cache_stats | capabilities | shutdown_ack
@@ -58,15 +59,19 @@ pub enum SubmitKind {
     Overlap,
     /// Inline GOAL interchange text ([`crate::engine::GoalSource`]).
     Import,
+    /// A netmodel calibration request ([`crate::engine::CalibrateSpec`]) —
+    /// lets the daemon refresh a system's calibration profile in place.
+    Calibrate,
 }
 
 impl SubmitKind {
-    pub const ALL: [SubmitKind; 5] = [
+    pub const ALL: [SubmitKind; 6] = [
         SubmitKind::Campaign,
         SubmitKind::Sweep,
         SubmitKind::Probe,
         SubmitKind::Overlap,
         SubmitKind::Import,
+        SubmitKind::Calibrate,
     ];
 
     pub fn label(&self) -> &'static str {
@@ -76,6 +81,7 @@ impl SubmitKind {
             SubmitKind::Probe => "probe",
             SubmitKind::Overlap => "overlap",
             SubmitKind::Import => "import",
+            SubmitKind::Calibrate => "calibrate",
         }
     }
 
@@ -240,7 +246,7 @@ pub fn record_frame(id: &str, seq: usize, rec: &Record) -> Json {
 }
 
 /// A one-shot result document for routes that produce a report rather
-/// than per-point records (today: `import`).
+/// than per-point records (today: `import`, `calibrate`).
 pub fn report_frame(id: &str, report: Json) -> Json {
     Json::obj().set("frame", "report").set("id", id).set("report", report)
 }

@@ -38,7 +38,8 @@ use std::thread::JoinHandle;
 
 use crate::config::{resolve, TestSpec};
 use crate::engine::{
-    GoalSource, ImportReport, ImportRunSpec, OverlapSpec, ProbeSpec, SealedSchedule, SweepSpec,
+    CalibrateSpec, GoalSource, ImportReport, ImportRunSpec, OverlapSpec, ProbeSpec,
+    SealedSchedule, SweepSpec,
 };
 use crate::json::Json;
 use crate::orchestrator;
@@ -170,6 +171,7 @@ enum JobWork {
     Points { test: TestSpec, out: Option<PathBuf> },
     Overlap { spec: OverlapSpec, out: Option<PathBuf> },
     Import { sched: SealedSchedule, run: ImportRunSpec },
+    Calibrate { spec: CalibrateSpec },
 }
 
 enum Flow {
@@ -360,6 +362,13 @@ impl Session {
                 let run = ImportRunSpec::try_from(spec).map_err(Reject::invalid_spec)?;
                 Ok((JobWork::Import { sched, run }, 1))
             }
+            SubmitKind::Calibrate => {
+                let mut c = CalibrateSpec::try_from(spec).map_err(Reject::invalid_spec)?;
+                if let Some(d) = out {
+                    c = c.with_out(d);
+                }
+                Ok((JobWork::Calibrate { spec: c }, 1))
+            }
         }
     }
 
@@ -458,6 +467,7 @@ fn execute_job(
         }
         JobWork::Overlap { spec, out } => run_overlap_job(&shared, &writer, &id, spec, out, &cancel),
         JobWork::Import { sched, run } => run_import_job(&shared, &writer, &id, &sched, &run, &cancel),
+        JobWork::Calibrate { spec } => run_calibrate_job(&shared, &writer, &id, &spec, &cancel),
     };
     {
         let mut st = shared.stats.lock().unwrap();
@@ -626,6 +636,32 @@ fn run_import_job(
     Ok((1, 0))
 }
 
+/// The calibrate route: one admission slot, one `report` frame carrying
+/// the full calibration outcome (fitted params + profile + validation) —
+/// the same JSON document `pico calibrate` can persist, so a daemon
+/// client can refresh a system's calibration profile without the CLI.
+fn run_calibrate_job(
+    shared: &Shared,
+    writer: &SharedWriter,
+    id: &str,
+    spec: &CalibrateSpec,
+    cancel: &Arc<AtomicBool>,
+) -> Result<(usize, usize), Reject> {
+    let _grant = shared
+        .admission
+        .acquire(1, cancel)
+        .map_err(|_| Reject::new(ErrCode::Cancelled, "cancelled while queued"))?;
+    if cancel.load(Ordering::SeqCst) {
+        return Err(Reject::new(ErrCode::Cancelled, "cancelled before start"));
+    }
+    let report =
+        shared.engine.calibrate(spec).map_err(|e| Reject::new(ErrCode::EngineError, e))?;
+    writer
+        .send(&report_frame(id, report.outcome.to_json()))
+        .map_err(|e| Reject::new(ErrCode::EngineError, e))?;
+    Ok((1, 0))
+}
+
 fn import_report_json(r: &ImportReport) -> Json {
     Json::obj()
         .set("system", r.system.as_str())
@@ -774,6 +810,36 @@ mod tests {
         let report = frames.iter().find(|f| field(f, "frame") == "report").expect("report frame");
         assert_eq!(report.get("report").unwrap().get("p").unwrap().as_usize(), Some(2));
         assert!(frames.iter().any(|f| field(f, "frame") == "done"));
+    }
+
+    #[test]
+    fn calibrate_route_reports_a_fit() {
+        let csv = "collective,algorithm,bytes,nodes,ppn,time_s\n\
+                   allreduce,ring,4096,2,1,1.1e-5\n\
+                   allreduce,ring,1048576,2,1,3.0e-4\n";
+        let spec = Json::obj().set("csv_text", csv).set("max_iters", 2usize);
+        let submit = Json::obj()
+            .set("op", "submit")
+            .set("id", "c")
+            .set("kind", "calibrate")
+            .set("spec", spec);
+        let script = format!("{}\n{}\n", submit.to_string_compact(), r#"{"op":"wait","id":"c"}"#);
+        let (frames, _) = drive(&script);
+        assert_eq!(field(&frames[0], "frame"), "accepted");
+        assert_eq!(field(&frames[0], "kind"), "calibrate");
+        let report = frames.iter().find(|f| field(f, "frame") == "report").expect("report frame");
+        let doc = report.get("report").unwrap();
+        assert_eq!(field(doc, "system"), "leonardo");
+        assert!(doc.get("validation").unwrap().get("max_abs_rel_err").unwrap().as_f64().is_some());
+        assert!(!doc.get("params").unwrap().as_arr().unwrap().is_empty());
+        // a sourceless calibrate spec is a typed invalid_spec at submit
+        let bad = Json::obj()
+            .set("op", "submit")
+            .set("id", "d")
+            .set("kind", "calibrate")
+            .set("spec", Json::obj());
+        let (frames, _) = drive(&format!("{}\n", bad.to_string_compact()));
+        assert_eq!(field(&frames[0], "code"), "invalid_spec");
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! placement sensitivity of Sec. IV-B.
 
 
-use crate::netmodel::{MemParams, NetParams};
+use crate::netmodel::{CalibrationProfile, MemParams, NetParams};
 use crate::util::Rng;
 
 /// Global node identifier within a [`SystemProfile`].
@@ -139,6 +139,31 @@ impl SystemProfile {
 
     pub fn groups_total(&self) -> usize {
         self.nodes_total.div_ceil(self.nodes_per_group)
+    }
+
+    /// Overlay a fitted [`CalibrationProfile`] onto this profile's
+    /// netmodel constants (built-in < calibration precedence; DESIGN.md
+    /// §Calibration).  Applying a profile fitted on a *different* system
+    /// is a typed error — calibrated constants are not portable across
+    /// fabrics.
+    pub fn apply_calibration(&mut self, cp: &CalibrationProfile) -> Result<(), String> {
+        if cp.system != self.name {
+            return Err(format!(
+                "calibration profile is for system {:?}, not {:?}",
+                cp.system, self.name
+            ));
+        }
+        cp.apply(&mut self.net)
+    }
+
+    /// [`SystemProfile::apply_calibration`] from a JSON file on disk (the
+    /// `PICO_CALIBRATION` environment hook and `--calibration` flags both
+    /// land here).
+    pub fn apply_calibration_file(&mut self, path: &std::path::Path) -> Result<(), String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let json = crate::json::Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        let cp = CalibrationProfile::from_json(&json).map_err(|e| format!("{}: {e}", path.display()))?;
+        self.apply_calibration(&cp)
     }
 }
 
@@ -419,6 +444,29 @@ mod tests {
         // the crossover scenario needs at least one machine of each kind
         assert!(leonardo().switch.aggregate);
         assert!(!mn5().switch.aggregate);
+    }
+
+    #[test]
+    fn calibration_overlays_net_constants() {
+        let mut prof = leonardo();
+        let cp = CalibrationProfile {
+            system: "leonardo".into(),
+            overrides: vec![("rail_bw".into(), 20e9), ("switch_alpha".into(), 2.0e-6)],
+        };
+        prof.apply_calibration(&cp).unwrap();
+        assert_eq!(prof.net.rail_bw, 20e9);
+        assert_eq!(prof.net.switch_alpha, 2.0e-6);
+        // only overridden constants move
+        assert_eq!(prof.net.intra_node.alpha, leonardo().net.intra_node.alpha);
+        // cross-system application is a typed error
+        let mut other = mn5();
+        let err = other.apply_calibration(&cp).unwrap_err();
+        assert!(err.contains("leonardo") && err.contains("mn5"), "{err}");
+        // a missing file is an error naming the path
+        let err = prof
+            .apply_calibration_file(std::path::Path::new("/nonexistent/cal.json"))
+            .unwrap_err();
+        assert!(err.contains("/nonexistent/cal.json"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,286 @@
+//! Tier-1 calibration suite (DESIGN.md §Calibration).
+//!
+//! The acceptance contract: calibrating on simulator-generated "measured"
+//! records recovers doctored netmodel constants within 1%, validates with
+//! ~zero per-point error and 100% winner-table agreement, reports the
+//! parameters the data cannot constrain as unconstrained, and every
+//! ingestion route (golden CSV fixture, run directory, annotated GOAL)
+//! either round-trips or fails with a typed [`CalibrateError`] — never a
+//! panic.
+
+use std::path::PathBuf;
+
+use pico::calibrate::{
+    ingest_csv_file, ingest_csv_text, parse_measured_goal, CalibrateError, Calibrator, EvalConfig,
+    FitOptions, MeasuredPoint,
+};
+use pico::collectives::Coll;
+use pico::config::{EnvSpec, TestSpec};
+use pico::netmodel::NetParams;
+use pico::orchestrator::run_campaign;
+use pico::results::Granularity;
+use pico::topology::{leonardo, AllocPolicy};
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("pico_calib_{name}_{}", std::process::id()))
+}
+
+fn data(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data").join(name)
+}
+
+/// A leonardo env whose allocation crosses group boundaries at 4 nodes
+/// (BlockScattered block=2), so the grid exercises every locality tier.
+fn calib_env() -> EnvSpec {
+    let mut env = EnvSpec::for_system("leonardo");
+    env.alloc_policy = AllocPolicy::BlockScattered { block: 2 };
+    env
+}
+
+/// The seven constants the round-trip grid can identify, with the factor
+/// the "truth" machine perturbs each by.
+const DOCTORED: [(&str, f64); 7] = [
+    ("intra_node.alpha", 1.30),
+    ("intra_node.bw", 0.80),
+    ("intra_group.alpha", 1.20),
+    ("inter_group.alpha", 1.15),
+    ("rail_bw", 0.90),
+    ("switch_alpha", 1.25),
+    ("switch_agg_bw", 0.85),
+];
+
+/// host-vs-innet allreduce grid: 2 algorithms × 2 node counts × 3 sizes
+/// (eager, rendezvous, and the 1 MiB switch-capable ceiling), ppn 2 so
+/// intra-node constants are exercised too.
+fn grid_points() -> Vec<MeasuredPoint> {
+    let mut pts = Vec::new();
+    for algo in ["recursive_doubling", "innet"] {
+        for nodes in [2usize, 4] {
+            for bytes in [2usize << 10, 64 << 10, 1 << 20] {
+                pts.push(MeasuredPoint {
+                    collective: Coll::Allreduce,
+                    algorithm: Some(algo.to_string()),
+                    bytes,
+                    nodes,
+                    ppn: 2,
+                    time_s: 1.0, // placeholder until synthesized
+                });
+            }
+        }
+    }
+    pts
+}
+
+/// "Measured" times for the grid: the calibrator's own predictions at the
+/// truth constants, flowing through the exact pipeline the fit evaluates.
+fn synthesize(env: &EnvSpec, truth: &NetParams) -> Vec<MeasuredPoint> {
+    let mut cal = Calibrator::new(env).unwrap();
+    cal.add_measured(&EvalConfig::new("libpico"), &grid_points()).unwrap();
+    let times = cal.predict(truth).unwrap();
+    let mut pts = grid_points();
+    for (p, t) in pts.iter_mut().zip(times) {
+        p.time_s = t;
+    }
+    pts
+}
+
+/// The acceptance round trip: doctor the constants, synthesize measured
+/// data on the doctored machine, fit from the built-ins, and require the
+/// doctored values back within 1% — with ~zero validation error, full
+/// crossover agreement, honest unconstrained reporting, and an emitted
+/// profile that [`pico::topology::SystemProfile`] loads from disk.
+#[test]
+fn round_trip_recovers_doctored_constants() {
+    let env = calib_env();
+    let mut truth = Calibrator::new(&env).unwrap().baseline().clone();
+    for (name, factor) in DOCTORED {
+        let v = truth.get_param(name).unwrap();
+        assert!(truth.set_param(name, v * factor));
+    }
+    let measured = synthesize(&env, &truth);
+
+    let mut cal = Calibrator::new(&env).unwrap();
+    cal.add_measured(&EvalConfig::new("libpico"), &measured).unwrap();
+    let outcome = cal.fit(&FitOptions::default()).unwrap();
+
+    assert!(outcome.converged, "no convergence in {} iterations", outcome.iterations);
+    assert_eq!(outcome.n_points, 12);
+    for (name, factor) in DOCTORED {
+        let p = outcome.params.iter().find(|p| p.name == name).unwrap();
+        assert!(p.constrained, "{name}: the grid must constrain this parameter");
+        let want = p.builtin * factor;
+        assert!(
+            (p.fitted / want - 1.0).abs() < 0.01,
+            "{name}: fitted {} vs truth {want} is >1% off",
+            p.fitted
+        );
+    }
+    // tier bandwidths never bind on leonardo (rail-built flow bandwidth is
+    // always lower), so the fit must report them unconstrained — at the
+    // built-in value and absent from the emitted profile — not misfit them.
+    let unc = outcome.unconstrained();
+    assert!(
+        unc.contains(&"intra_group.bw") && unc.contains(&"inter_group.bw"),
+        "expected the tier bandwidths to be unconstrained, got {unc:?}"
+    );
+    for p in outcome.params.iter().filter(|p| !p.constrained) {
+        assert_eq!(p.fitted, p.builtin, "{}: frozen params keep the builtin", p.name);
+        assert!(
+            !outcome.profile.overrides.iter().any(|(n, _)| n == p.name),
+            "{}: unconstrained params must not be emitted as overrides",
+            p.name
+        );
+    }
+    // validation at the optimum: ~zero per-point error, unanimous winners
+    assert!(
+        outcome.validation.max_abs_rel_err <= 0.01,
+        "max per-point error {} above 1%",
+        outcome.validation.max_abs_rel_err
+    );
+    let (agree, total) = outcome.validation.crossover.expect("host-vs-innet grid has cells");
+    assert_eq!((agree, total), (6, 6), "winner tables must agree at every (nodes, bytes) cell");
+
+    // the emitted profile loads back over the built-in system profile
+    let path = tmp("profile.json");
+    std::fs::write(&path, outcome.profile.to_json().to_string_pretty()).unwrap();
+    let mut prof = leonardo();
+    prof.apply_calibration_file(&path).unwrap();
+    for p in outcome.params.iter().filter(|p| p.constrained) {
+        assert_eq!(prof.net.get_param(p.name), Some(p.fitted), "{} override lost", p.name);
+    }
+    // a profile fitted on another system must refuse to apply
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, text.replace("\"leonardo\"", "\"lumi\"")).unwrap();
+    assert!(leonardo().apply_calibration_file(&path).is_err());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn golden_fixture_parses_units_defaults_and_ignored_columns() {
+    let pts = ingest_csv_file(&data("measured_ring8.csv")).unwrap();
+    assert_eq!(pts.len(), 5);
+    assert!(pts.iter().all(|p| p.collective == Coll::Allreduce));
+    assert_eq!(pts[0].algorithm.as_deref(), Some("ring"));
+    assert_eq!((pts[0].bytes, pts[0].nodes, pts[0].ppn), (8, 8, 1));
+    assert!((pts[0].time_s - 14.2e-6).abs() < 1e-15, "time_us must scale to seconds");
+    assert_eq!(pts[1].bytes, 64 << 10, "size suffixes accepted");
+    assert_eq!(pts[2].bytes, 1 << 20);
+    assert_eq!(pts[3].algorithm, None, "\"default\" means backend default");
+    assert_eq!(pts[4].algorithm, None, "empty cell means backend default");
+
+    // and the fixture calibrates end-to-end without error
+    let mut cal = Calibrator::new(&EnvSpec::for_system("leonardo")).unwrap();
+    cal.add_measured(&EvalConfig::new("libpico"), &pts).unwrap();
+    let outcome = cal.fit(&FitOptions { max_iters: 2, ..FitOptions::default() }).unwrap();
+    assert_eq!(outcome.n_points, 5);
+    assert_eq!(outcome.validation.points.len(), 5);
+}
+
+#[test]
+fn malformed_fixtures_yield_typed_errors_not_panics() {
+    let good = std::fs::read_to_string(data("measured_ring8.csv")).unwrap();
+
+    let no_time = good.replace("time_us", "walltime");
+    assert!(matches!(ingest_csv_text(&no_time), Err(CalibrateError::MissingColumn { .. })));
+
+    let both_units = good.replace(",host", ",time_s");
+    assert!(matches!(ingest_csv_text(&both_units), Err(CalibrateError::UnitMismatch { .. })));
+
+    let no_coll = good.replace("collective,", "coll,");
+    assert!(matches!(
+        ingest_csv_text(&no_coll),
+        Err(CalibrateError::MissingColumn { column }) if column == "collective"
+    ));
+
+    let bad_coll = good.replace("allreduce,ring,8,8", "sumreduce,ring,8,8");
+    assert!(matches!(
+        ingest_csv_text(&bad_coll),
+        Err(CalibrateError::UnknownCollective { line: 5, name }) if name == "sumreduce"
+    ));
+
+    let ragged = format!("{good}allreduce,ring\n");
+    assert!(matches!(ingest_csv_text(&ragged), Err(CalibrateError::Parse { line: 10, .. })));
+
+    let negative = good.replace(",14.2,", ",-14.2,");
+    assert!(matches!(ingest_csv_text(&negative), Err(CalibrateError::Parse { line: 5, .. })));
+
+    let bad_size = good.replace("64KiB", "64QiB");
+    assert!(matches!(ingest_csv_text(&bad_size), Err(CalibrateError::Parse { .. })));
+
+    assert!(matches!(ingest_csv_text(""), Err(CalibrateError::EmptyData)));
+    assert!(matches!(
+        ingest_csv_text("collective,bytes,nodes,time_s\n"),
+        Err(CalibrateError::EmptyData)
+    ));
+}
+
+/// A prior `pico run` directory re-resolves to the exact campaign and the
+/// stored medians replay bit-for-bit at the built-in constants, so a fit
+/// on self-recorded data is a fixed point.
+#[test]
+fn run_dir_ingestion_replays_the_campaign_bit_exact() {
+    let out = tmp("rundir");
+    let _ = std::fs::remove_dir_all(&out);
+    let mut spec = TestSpec::new("paritycal", "libpico", Coll::Allreduce);
+    spec.sizes = vec![4 << 10, 256 << 10];
+    spec.nodes = vec![2, 4];
+    spec.algorithms = vec!["ring".into()];
+    spec.iterations = 3;
+    spec.warmup = 1;
+    spec.granularity = Granularity::Statistics;
+    spec.seed = 7;
+    let env = EnvSpec::for_system("leonardo");
+    let outcomes = run_campaign(&spec, &env, Some(&out)).unwrap();
+
+    let mut cal = Calibrator::new(&env).unwrap();
+    let n = cal.add_run_dir(&out.join("paritycal")).unwrap();
+    assert_eq!(n, outcomes.len());
+    let pred = cal.predict(cal.baseline()).unwrap();
+    let meas = cal.measured();
+    assert_eq!(pred.len(), meas.len());
+    for (p, m) in pred.iter().zip(&meas) {
+        assert_eq!(p, m, "replay must be bit-exact");
+    }
+
+    let outcome = cal.fit(&FitOptions::default()).unwrap();
+    assert!(outcome.converged);
+    assert!(outcome.validation.max_abs_rel_err < 1e-9);
+    for p in &outcome.params {
+        assert_eq!(p.fitted, p.builtin, "{}: zero residual must not move params", p.name);
+    }
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+#[test]
+fn run_dir_without_records_is_a_typed_granularity_error() {
+    let out = tmp("nonegran");
+    let _ = std::fs::remove_dir_all(&out);
+    let mut spec = TestSpec::new("nogran", "libpico", Coll::Allreduce);
+    spec.sizes = vec![1024];
+    spec.nodes = vec![2];
+    spec.granularity = Granularity::None; // stdout only: nothing persisted
+    let env = EnvSpec::for_system("leonardo");
+    run_campaign(&spec, &env, Some(&out)).unwrap();
+
+    let mut cal = Calibrator::new(&env).unwrap();
+    let err = cal.add_run_dir(&out.join("nogran")).unwrap_err();
+    assert!(matches!(err, CalibrateError::Parse { line: 0, .. }));
+    assert!(err.to_string().contains("granularity"), "unhelpful error: {err}");
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+/// An annotated GOAL schedule contributes a point through the same
+/// simulate path `pico import` uses.
+#[test]
+fn annotated_goal_joins_the_fit() {
+    let text = std::fs::read_to_string(data("ring4.goal")).unwrap();
+    let g = parse_measured_goal(&format!("# measured_s 3.4e-5\n{text}"), "ring4").unwrap();
+    assert!((g.time_s - 3.4e-5).abs() < 1e-18);
+
+    let mut cal = Calibrator::new(&EnvSpec::for_system("leonardo")).unwrap();
+    cal.add_goal(&g).unwrap();
+    assert_eq!(cal.n_points(), 1);
+    let pred = cal.predict(cal.baseline()).unwrap();
+    assert_eq!(pred.len(), 1);
+    assert!(pred[0].is_finite() && pred[0] > 0.0);
+}

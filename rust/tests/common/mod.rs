@@ -1,0 +1,66 @@
+//! Shared registry-wide differential grid — the single source of truth
+//! for "sweep every registered algorithm over a p × bytes grid" test
+//! loops (previously copy-pasted across `sim_fastpath.rs`,
+//! `innet_family.rs` and `prop_invariants.rs`).
+//!
+//! The grid rules live here exactly once:
+//! - power-of-two-only algorithms (`!any_p`) skip non-power-of-two `p`;
+//! - `Barrier` cells carry a zero count (no payload), every other
+//!   collective derives its element count from the byte size via
+//!   [`effective_count`].
+//!
+//! Each test file still picks its own `p` set (the fast-path pins go to
+//! 64 ranks, the innet family cares about 4 and 17, the cache property
+//! about 13) — the *shape* of the loop and the skip/count rules are what
+//! must not fork.
+#![allow(dead_code)]
+
+use pico::collectives::{self, AlgoInfo, Coll, GenParams};
+use pico::orchestrator::effective_count;
+
+/// Default byte sizes for registry grids: one eager cell (8 B), one
+/// mid-size (4 KiB) and one rendezvous cell (1 MiB).
+pub const SIZES: [usize; 3] = [8, 4 << 10, 1 << 20];
+
+/// Element count for one grid cell: `Barrier` moves no payload;
+/// everything else derives its count from the byte size.
+pub fn grid_count(coll: Coll, bytes: usize, p: usize) -> usize {
+    if coll == Coll::Barrier {
+        0
+    } else {
+        effective_count(coll, bytes, p)
+    }
+}
+
+/// Visit every applicable (registered algorithm, p) pair: the registry
+/// crossed with `ps`, skipping non-power-of-two `p` for algorithms that
+/// require power-of-two rank counts.  Callers that key cells on
+/// something other than byte size (e.g. element multiples) build their
+/// own inner loop on top of this.
+pub fn for_registry(ps: &[usize], mut f: impl FnMut(&'static AlgoInfo, usize)) {
+    for info in collectives::registry() {
+        for &p in ps {
+            if !info.any_p && !p.is_power_of_two() {
+                continue;
+            }
+            f(info, p);
+        }
+    }
+}
+
+/// Visit the full registry × `ps` × `sizes` differential grid.  The
+/// callback gets the registry entry, the rank count, the byte size, and
+/// ready-made [`GenParams`] with the cell's count already resolved via
+/// [`grid_count`].
+pub fn registry_grid(
+    ps: &[usize],
+    sizes: &[usize],
+    mut f: impl FnMut(&'static AlgoInfo, usize, usize, GenParams),
+) {
+    for_registry(ps, |info, p| {
+        for &bytes in sizes {
+            let count = grid_count(info.coll, bytes, p);
+            f(info, p, bytes, GenParams::new(p, count));
+        }
+    });
+}

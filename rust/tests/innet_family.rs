@@ -16,20 +16,21 @@
 //! - numerical correctness: every innet collective reproduces the
 //!   oracle under all three executors (worklist, scan, threaded).
 
+mod common;
+
 use pico::backends::{Backend, LibPico};
 use pico::collectives::innet::FallbackReason;
 use pico::collectives::{self, Coll, GenParams};
 use pico::config::TestSpec;
 use pico::engine::{CampaignSpec, Engine, EngineConfig, SweepSpec};
 use pico::execute::{execute, execute_scan, execute_threaded, make_inputs, oracle, ScalarReducer};
-use pico::orchestrator::{effective_count, ScheduleCache};
+use pico::orchestrator::ScheduleCache;
 use pico::results::VecSink;
 use pico::sim::{simulate, SimContext};
 use pico::topology::{leonardo, AllocPolicy, Allocation, Placement, RankOrder, SwitchCaps};
 use pico::tracer::trace;
 
 const PS: [usize; 5] = [2, 3, 4, 8, 17];
-const SIZES: [usize; 3] = [8, 4 << 10, 1 << 20];
 
 /// Every registered algorithm (innet included), across the full p × bytes
 /// grid: validate, conserve bytes, and match cached-vs-direct exactly —
@@ -39,47 +40,34 @@ fn registry_differential_cached_vs_uncached() {
     let backend = LibPico;
     let cache = ScheduleCache::new();
     let prof = leonardo();
-    for info in collectives::registry() {
-        for p in PS {
-            if !info.any_p && !p.is_power_of_two() {
-                continue;
-            }
-            let alloc = Allocation::new(&prof, p, AllocPolicy::Contiguous, 11);
-            let pl = Placement::new(&prof, &alloc, 1, RankOrder::Block);
-            let ctx = SimContext::new(&prof, &pl);
-            for bytes in SIZES {
-                let count = if info.coll == Coll::Barrier {
-                    0
-                } else {
-                    effective_count(info.coll, bytes, p)
-                };
-                let params = GenParams::new(p, count);
-                let tag = format!("{:?}:{} p={p} bytes={bytes}", info.coll, info.name);
-                let direct = backend
-                    .schedule(info.coll, info.name, &params)
-                    .unwrap_or_else(|e| panic!("{tag}: {e}"));
-                direct.validate().unwrap_or_else(|e| panic!("{tag}: {e}"));
-                let cached = cache
-                    .schedule(&backend, info.coll, info.name, &params)
-                    .unwrap_or_else(|e| panic!("{tag}: {e}"));
-                assert_eq!(*cached, direct, "{tag}: cache must be bit-transparent");
-                // byte conservation through the placement-aware tracer
-                let rep = trace(&direct, &pl);
-                assert_eq!(
-                    rep.bytes_by_tier.iter().sum::<usize>(),
-                    direct.total_wire_bytes(),
-                    "{tag}: tier bytes must sum to wire bytes"
-                );
-                // identical simulation either way
-                let a = simulate(&direct, &ctx);
-                let b = simulate(&cached, &ctx);
-                assert_eq!(a.total_time, b.total_time, "{tag}: totals diverged");
-                assert_eq!(a.per_rank_time, b.per_rank_time, "{tag}");
-                assert_eq!(a.components, b.components, "{tag}");
-                assert_eq!(a.events_processed, b.events_processed, "{tag}");
-            }
-        }
-    }
+    common::registry_grid(&PS, &common::SIZES, |info, p, bytes, params| {
+        let alloc = Allocation::new(&prof, p, AllocPolicy::Contiguous, 11);
+        let pl = Placement::new(&prof, &alloc, 1, RankOrder::Block);
+        let ctx = SimContext::new(&prof, &pl);
+        let tag = format!("{:?}:{} p={p} bytes={bytes}", info.coll, info.name);
+        let direct = backend
+            .schedule(info.coll, info.name, &params)
+            .unwrap_or_else(|e| panic!("{tag}: {e}"));
+        direct.validate().unwrap_or_else(|e| panic!("{tag}: {e}"));
+        let cached = cache
+            .schedule(&backend, info.coll, info.name, &params)
+            .unwrap_or_else(|e| panic!("{tag}: {e}"));
+        assert_eq!(*cached, direct, "{tag}: cache must be bit-transparent");
+        // byte conservation through the placement-aware tracer
+        let rep = trace(&direct, &pl);
+        assert_eq!(
+            rep.bytes_by_tier.iter().sum::<usize>(),
+            direct.total_wire_bytes(),
+            "{tag}: tier bytes must sum to wire bytes"
+        );
+        // identical simulation either way
+        let a = simulate(&direct, &ctx);
+        let b = simulate(&cached, &ctx);
+        assert_eq!(a.total_time, b.total_time, "{tag}: totals diverged");
+        assert_eq!(a.per_rank_time, b.per_rank_time, "{tag}");
+        assert_eq!(a.components, b.components, "{tag}");
+        assert_eq!(a.events_processed, b.events_processed, "{tag}");
+    });
 }
 
 /// The innet collectives are numerically correct under every executor:

@@ -9,6 +9,8 @@
 //! `ScheduleCache` must be indistinguishable from direct generation, both
 //! at the graph level and after simulation.
 
+mod common;
+
 use pico::backends::{Backend, LibPico};
 use pico::collectives::{self, Coll, GenParams};
 use pico::orchestrator::{effective_count, ScheduleCache};
@@ -83,33 +85,21 @@ fn differential(goal: &Goal, ctx: &SimContext, scratch: &mut SimScratch, what: &
 fn fast_path_matches_scan_over_registry() {
     let prof = leonardo();
     let mut scratch = SimScratch::new();
-    for info in collectives::registry() {
-        for p in [2usize, 3, 8, 17, 64] {
-            if !info.any_p && !p.is_power_of_two() {
-                continue;
-            }
-            let pl = contiguous_placement(&prof, p);
-            for bytes in [8usize, 4 << 10, 1 << 20] {
-                let count =
-                    if info.coll == Coll::Barrier { 0 } else { effective_count(info.coll, bytes, p) };
-                let mut params = GenParams::new(p, count);
-                if p == 8 {
-                    params = params.instrumented();
-                }
-                let goal = collectives::generate(info.coll, info.name, &params)
-                    .unwrap_or_else(|e| panic!("{:?}:{} p={p}: {e}", info.coll, info.name));
-                let ctx = SimContext::new(&prof, &pl);
-                let rep = differential(
-                    &goal,
-                    &ctx,
-                    &mut scratch,
-                    &format!("{:?}:{} p={p} bytes={bytes}", info.coll, info.name),
-                );
-                assert_eq!(rep.events_processed, goal.total_ops());
-                assert!(rep.total_time.is_finite() && rep.total_time > 0.0);
-            }
-        }
-    }
+    common::registry_grid(&[2, 3, 8, 17, 64], &common::SIZES, |info, p, bytes, params| {
+        let pl = contiguous_placement(&prof, p);
+        let params = if p == 8 { params.instrumented() } else { params };
+        let goal = collectives::generate(info.coll, info.name, &params)
+            .unwrap_or_else(|e| panic!("{:?}:{} p={p}: {e}", info.coll, info.name));
+        let ctx = SimContext::new(&prof, &pl);
+        let rep = differential(
+            &goal,
+            &ctx,
+            &mut scratch,
+            &format!("{:?}:{} p={p} bytes={bytes}", info.coll, info.name),
+        );
+        assert_eq!(rep.events_processed, goal.total_ops());
+        assert!(rep.total_time.is_finite() && rep.total_time > 0.0);
+    });
 }
 
 /// SwitchAgg waves across a multi-group placement: a scattered allocation

@@ -13,20 +13,29 @@
 #      makespan; the examples/dnn_step.json workload with Ready chaining
 #      must beat its serial replay; the composed schedule must survive a
 #      GOAL-text export/import round trip.
-#   7. in-network smoke: the libpico allreduce sweep's host-vs-switch
+#   7. workload scenario library: every examples/*.json descriptor runs
+#      end-to-end (interference reports per-job slowdown, pipeline_step
+#      reports its bubble fraction and beats the serial replay).
+#   8. in-network smoke: the libpico allreduce sweep's host-vs-switch
 #      crossover table must be non-trivial (at least one winner=switch and
 #      one winner=host point, with the past-buffer degradation marked).
-#   8. simulator fast-path smoke: PICO_SIM_DIFFERENTIAL=1 re-runs a real
+#   9. simulator fast-path smoke: PICO_SIM_DIFFERENTIAL=1 re-runs a real
 #      composed workload through both simulator paths (planned event core
 #      vs the reference heap scan) and fails on any divergence; a
 #      tree_pipelined overlap must be served by the (count, segsize)-
 #      canonical skeleton cache (1 skeleton, 1 rescale) compiling exactly
 #      one SimPlan shared by the skeleton and its rescaled entry.
-#   9. serve smoke: pipe the scripted examples/serve_session.jsonl
+#  10. serve smoke: pipe the scripted examples/serve_session.jsonl
 #      transcript through `pico serve` in stdio mode — the daemon must
 #      stream all 48 records, write a run directory byte-identical to the
 #      stage-4 `pico run` one (terminal DONE marker included), answer
 #      cache_stats, and exit cleanly on the shutdown frame.
+#  11. calibrate smoke: refit the netmodel constants against the stage-4
+#      run directory (a self-consistency fit: zero residual, so the
+#      validation table's "max rel err" must render and both calibration
+#      artifacts must be written), ingest the examples/measured_sweep.csv
+#      golden CSV, and round-trip the emitted profile through the
+#      PICO_CALIBRATION env hook (a corrupted profile must be rejected).
 #
 # Every stage runs under `set -euo pipefail`, so the first non-zero exit
 # aborts the script with that stage's status.
@@ -198,5 +207,32 @@ fi
 diff -r "$TMP/serial/paritycheck" "$TMP/daemon/serve_out/paritycheck"
 test -f "$TMP/daemon/serve_out/paritycheck/DONE"
 echo "OK: served campaign streamed $n_streamed records, run dir identical"
+
+echo "== smoke: pico calibrate (run-dir refit, CSV ingest, profile round trip)"
+# refitting against the stage-4 run directory is a self-consistency check:
+# the recorded medians came from the same constants, so the fit must
+# converge with ~zero residual and still emit both artifacts
+"$BIN" calibrate --run-dir "$TMP/serial/paritycheck" --backend openmpi \
+    --out "$TMP/calib" > "$TMP/calibrate.txt"
+grep -q "max rel err" "$TMP/calibrate.txt"
+grep -q "converged=yes" "$TMP/calibrate.txt"
+test -f "$TMP/calib/calibration.json"
+test -f "$TMP/calib/validation.json"
+# the golden CSV example ingests and fits end-to-end
+"$BIN" calibrate --csv examples/measured_sweep.csv --iters 2 \
+    > "$TMP/calibrate_csv.txt"
+grep -q "max rel err" "$TMP/calibrate_csv.txt"
+# precedence round trip: every simulating route loads the emitted profile
+# through the PICO_CALIBRATION hook (built-in < calibration), and a
+# corrupted profile must fail loudly instead of silently calibrating
+PICO_CALIBRATION="$TMP/calib/calibration.json" "$BIN" calibrate \
+    --csv examples/measured_sweep.csv --iters 1 >/dev/null
+echo '{"schema":"bogus"}' > "$TMP/calib/broken.json"
+if PICO_CALIBRATION="$TMP/calib/broken.json" "$BIN" calibrate \
+    --csv examples/measured_sweep.csv --iters 1 >/dev/null 2>&1; then
+    echo "FAIL: corrupted calibration profile was silently accepted" >&2
+    exit 1
+fi
+echo "OK: calibrate refits, ingests CSV, and the profile hook round-trips"
 
 echo "verify: all checks passed"
